@@ -1,0 +1,74 @@
+//! VMC-style serving scenario: concurrent walker processes stream batches
+//! of electron configurations to the coordinator, which needs Ψ(x) and the
+//! Laplacian (the kinetic-energy term) for each — the workload of the
+//! paper's variational-Monte-Carlo motivation (§1).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example vmc_laplacian
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use anyhow::Result;
+use ctaylor::coordinator::{RouteKey, Service, ServiceConfig};
+use ctaylor::runtime::Registry;
+use ctaylor::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let registry = Registry::load_default()?;
+    let dim = registry
+        .select("laplacian", "collapsed", "exact")
+        .first()
+        .map(|a| a.dim)
+        .expect("laplacian artifacts missing");
+    let svc = Arc::new(Service::start(registry, ServiceConfig::default())?);
+    println!("coordinator up; {} routes", svc.router().routes().count());
+
+    // 4 walker chains × 20 Metropolis sweeps; each sweep asks for the local
+    // kinetic energy of its current configuration batch.
+    let walkers = 4usize;
+    let sweeps = 20usize;
+    let batch = 8usize;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..walkers {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || -> Result<f64> {
+            let mut rng = Rng::new(1000 + w as u64);
+            let route = RouteKey::new("laplacian", "collapsed", "exact");
+            let mut config = vec![0.0f32; batch * dim];
+            rng.fill_normal_f32(&mut config);
+            let mut kinetic_acc = 0.0f64;
+            for _ in 0..sweeps {
+                // Metropolis proposal: jitter the configuration.
+                for c in config.iter_mut() {
+                    *c += 0.1 * rng.normal() as f32;
+                }
+                let resp = svc.eval_blocking(route.clone(), config.clone(), dim)?;
+                // local kinetic energy ~ -1/2 Δψ/ψ summed over the batch
+                for i in 0..batch {
+                    let psi = resp.f0[i].max(1e-3);
+                    kinetic_acc += (-0.5 * resp.op[i] / psi) as f64;
+                }
+            }
+            Ok(kinetic_acc / (sweeps * batch) as f64)
+        }));
+    }
+    let mut energies = Vec::new();
+    for h in handles {
+        energies.push(h.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total_pts = walkers * sweeps * batch;
+
+    println!("walker mean kinetic energies: {energies:?}");
+    println!(
+        "{total_pts} Laplacian evaluations in {wall:.2}s -> {:.0} points/s",
+        total_pts as f64 / wall
+    );
+    println!("metrics: {}", svc.metrics().summary());
+    let reqs = svc.metrics().requests.load(Ordering::Relaxed);
+    anyhow::ensure!(reqs as usize == walkers * sweeps, "all requests must be served");
+    Ok(())
+}

@@ -1,0 +1,312 @@
+"""AOT compiler: lower the full benchmark matrix to HLO text + manifest.
+
+``python -m compile.aot --out-dir ../artifacts`` emits one shape-specialized
+``*.hlo.txt`` per (operator, method, mode, batch-or-samples) cell plus
+``manifest.json`` describing every artifact's I/O signature.  The Rust
+runtime (rust/src/runtime/registry.rs) consumes the manifest; Python never
+runs again after this step.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import operators, pinn
+from .interpolation import BiharmonicPlan
+from .kernels import jet_tanh
+from .model import (PAPER_WIDTHS, SMALL_WIDTHS, layer_dims, num_params,
+                    unflatten_params)
+
+# ---------------------------------------------------------------------------
+# Presets (DESIGN.md section 4)
+# ---------------------------------------------------------------------------
+
+PRESETS = {
+    # Single-core-CPU-sized sweep; ratios, not absolute ms, are the target.
+    "small": dict(
+        lap_dim=16, bih_dim=5, widths=SMALL_WIDTHS,
+        batches=[1, 2, 4, 8, 16], stoch_batch=4, samples=[4, 8, 16],
+    ),
+    # The paper's shapes (section 4 / SSG): D=50 Laplacians, D=5 biharmonic,
+    # 768/512 MLP.  Slow to sweep on one CPU core; emitted on demand.
+    "paper": dict(
+        lap_dim=50, bih_dim=5, widths=PAPER_WIDTHS,
+        batches=[1, 2, 4, 8, 16], stoch_batch=4, samples=[8, 16, 32],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+class Emitter:
+    def __init__(self, out_dir: str, only: Optional[str]):
+        self.out_dir = out_dir
+        self.only = only
+        self.entries: List[dict] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn: Callable, args: Sequence, meta: dict,
+             inputs: List[dict], outputs: List[dict]):
+        if self.only and self.only not in name:
+            return
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        entry = dict(name=name, file=fname, inputs=inputs, outputs=outputs,
+                     **meta)
+        self.entries.append(entry)
+        print(f"  [{time.time() - t0:6.2f}s] {name} "
+              f"({len(text) / 1024:.0f} KiB)", flush=True)
+
+    def write_manifest(self, preset: str):
+        path = os.path.join(self.out_dir, "manifest.json")
+        entries = self.entries
+        if self.only and os.path.exists(path):
+            # Partial rebuild: merge with the existing manifest so a
+            # filtered run never drops the other artifacts.
+            with open(path) as f:
+                old = json.load(f)
+            rebuilt = {e["name"] for e in entries}
+            entries = [e for e in old.get("artifacts", [])
+                       if e["name"] not in rebuilt] + entries
+            preset = old.get("preset", preset)
+        with open(path, "w") as f:
+            json.dump({"preset": preset, "artifacts": entries}, f, indent=1)
+        print(f"wrote {path} ({len(entries)} artifacts)")
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def emit_operator_matrix(em: Emitter, cfg: dict):
+    widths = list(cfg["widths"])
+
+    def meta(op, method, mode, dim, batch, samples=0, suffix=""):
+        return dict(op=op, method=method, mode=mode, dim=dim,
+                    widths=widths, batch=batch, samples=samples,
+                    theta_len=num_params(dim, widths),
+                    layer_dims=layer_dims(dim, widths), variant=suffix or "plain")
+
+    for op, dim in (("laplacian", cfg["lap_dim"]),
+                    ("weighted_laplacian", cfg["lap_dim"]),
+                    ("biharmonic", cfg["bih_dim"])):
+        P = num_params(dim, widths)
+        for method in ("nested", "standard", "collapsed"):
+            # ---- exact: sweep batch (paper fig. 5 top rows) ----
+            for B in cfg["batches"]:
+                f = operators.make_operator(op, method, "exact")
+                theta_s, x_s = f32([P]), f32([B, dim])
+
+                def wrap_exact(theta, x, _f=f, _dim=dim):
+                    params = unflatten_params(theta, _dim, widths)
+                    return _f(params, x)
+
+                def wrap_weighted(theta, x, sigma, _f=f, _dim=dim):
+                    params = unflatten_params(theta, _dim, widths)
+                    return _f(params, x, sigma)
+
+                name = f"{op}_{method}_exact_b{B}"
+                if op == "weighted_laplacian":
+                    em.emit(name, wrap_weighted,
+                            (theta_s, x_s, f32([dim, dim])),
+                            meta(op, method, "exact", dim, B),
+                            [dict(name="theta", **spec([P])),
+                             dict(name="x", **spec([B, dim])),
+                             dict(name="sigma", **spec([dim, dim]))],
+                            [dict(name="f0", **spec([B, 1])),
+                             dict(name="op", **spec([B, 1]))])
+                else:
+                    em.emit(name, wrap_exact, (theta_s, x_s),
+                            meta(op, method, "exact", dim, B),
+                            [dict(name="theta", **spec([P])),
+                             dict(name="x", **spec([B, dim]))],
+                            [dict(name="f0", **spec([B, 1])),
+                             dict(name="op", **spec([B, 1]))])
+
+            # ---- stochastic: fixed batch, sweep samples (fig. 5 bottom) ----
+            B = cfg["stoch_batch"]
+            for S in cfg["samples"]:
+                f = operators.make_operator(op, method, "stochastic")
+
+                def wrap_stoch(theta, x, dirs, _f=f, _dim=dim):
+                    params = unflatten_params(theta, _dim, widths)
+                    return _f(params, x, dirs)
+
+                name = f"{op}_{method}_stochastic_s{S}_b{B}"
+                em.emit(name, wrap_stoch,
+                        (f32([P]), f32([B, dim]), f32([S, dim])),
+                        meta(op, method, "stochastic", dim, B, samples=S),
+                        [dict(name="theta", **spec([P])),
+                         dict(name="x", **spec([B, dim])),
+                         dict(name="dirs", **spec([S, dim]))],
+                        [dict(name="f0", **spec([B, 1])),
+                         dict(name="op", **spec([B, 1]))])
+
+
+def emit_nested_laplacian_biharmonic(em: Emitter, cfg: dict):
+    """Paper SSG (fig. G9 / table G3): biharmonic computed as Delta(Delta f).
+
+    nested    : VHVP Laplacian of VHVP Laplacian (the JAX baseline).
+    standard  : jax.experimental.jet outer Laplacian over our standard-Taylor
+                inner Laplacian (vanilla Taylor mode; jit does not collapse it).
+    collapsed : fwdlap.biharmonic_nested — the forward-Laplacian jaxpr
+                transform applied at both levels (collapsing as a compiler
+                pass, the paper's 'Collapsed (ours)' G3 configuration).
+    """
+    from jax.experimental import jet as jax_jet
+
+    from . import fwdlap
+
+    widths = list(cfg["widths"])
+    dim = cfg["bih_dim"]
+    P = num_params(dim, widths)
+
+    def inner_lap(theta, xi):
+        params = unflatten_params(theta, dim, widths)
+        _, lap = operators.laplacian_taylor(params, xi[None, :],
+                                            collapsed=False)
+        return lap[0, 0]
+
+    def standard_nested(theta, x):
+        eye = jnp.eye(dim, dtype=x.dtype)
+
+        def per_point(xi):
+            def coeff(v):
+                _, (_, f2) = jax_jet.jet(lambda y: inner_lap(theta, y),
+                                         (xi,), ((v, jnp.zeros_like(v)),))
+                return f2
+            return jnp.sum(jax.vmap(coeff)(eye))
+
+        params = unflatten_params(theta, dim, widths)
+        from .model import mlp_apply
+        return mlp_apply(params, x), jax.vmap(per_point)(x)[:, None]
+
+    def nested_nested(theta, x):
+        params = unflatten_params(theta, dim, widths)
+        return operators.biharmonic_nested(params, x)
+
+    def collapsed_nested(theta, x):
+        params = unflatten_params(theta, dim, widths)
+        from .model import mlp_apply
+
+        def point(xi):
+            f = lambda y: mlp_apply(params, y[None, :])[0, 0]
+            _, bih = fwdlap.biharmonic_nested(f)(xi)
+            return bih
+
+        return mlp_apply(params, x), jax.vmap(point)(x)[:, None]
+
+    for method, fn in (("nested", nested_nested),
+                       ("standard", standard_nested),
+                       ("collapsed", collapsed_nested)):
+        for B in cfg["batches"]:
+            name = f"biharl_{method}_exact_b{B}"
+            em.emit(name, fn, (f32([P]), f32([B, dim])),
+                    dict(op="biharl", method=method, mode="exact", dim=dim,
+                         widths=widths, batch=B, samples=0, theta_len=P,
+                         layer_dims=layer_dims(dim, widths), variant="plain"),
+                    [dict(name="theta", **spec([P])),
+                     dict(name="x", **spec([B, dim]))],
+                    [dict(name="f0", **spec([B, 1])),
+                     dict(name="op", **spec([B, 1]))])
+
+
+def emit_kernel_variants(em: Emitter, cfg: dict):
+    """Collapsed Laplacian with the fused Pallas activation kernel (L1)."""
+    widths = list(cfg["widths"])
+    dim = cfg["lap_dim"]
+    P = num_params(dim, widths)
+    B = 8
+
+    def f(theta, x):
+        params = unflatten_params(theta, dim, widths)
+        return operators.laplacian_taylor(params, x, collapsed=True,
+                                          act_fn=jet_tanh.col_act_fn)
+
+    em.emit(f"laplacian_collapsed_exact_kernel_b{B}", f,
+            (f32([P]), f32([B, dim])),
+            dict(op="laplacian", method="collapsed", mode="exact", dim=dim,
+                 widths=widths, batch=B, samples=0, theta_len=P,
+                 layer_dims=layer_dims(dim, widths), variant="kernel"),
+            [dict(name="theta", **spec([P])),
+             dict(name="x", **spec([B, dim]))],
+            [dict(name="f0", **spec([B, 1])),
+             dict(name="op", **spec([B, 1]))])
+
+
+def emit_pinn(em: Emitter):
+    """The end-to-end Poisson PINN training step and evaluation grid."""
+    in_dim, widths = 2, [64, 64, 1]
+    P = num_params(in_dim, widths)
+    n_int, n_bnd, n_grid = 256, 64, 1024
+    step = pinn.make_train_step(in_dim, widths, lr=1e-3)
+    em.emit("pinn_step", step,
+            (f32([P]), f32([n_int, 2]), f32([n_bnd, 2])),
+            dict(op="pinn_step", method="collapsed", mode="train", dim=in_dim,
+                 widths=widths, batch=n_int, samples=n_bnd, theta_len=P,
+                 layer_dims=layer_dims(in_dim, widths), variant="plain"),
+            [dict(name="theta", **spec([P])),
+             dict(name="x_int", **spec([n_int, 2])),
+             dict(name="x_bnd", **spec([n_bnd, 2]))],
+            [dict(name="theta_out", **spec([P])),
+             dict(name="loss", **spec([]))])
+    ev = pinn.make_eval(in_dim, widths)
+    em.emit("pinn_eval", ev, (f32([P]), f32([n_grid, 2])),
+            dict(op="pinn_eval", method="collapsed", mode="eval", dim=in_dim,
+                 widths=widths, batch=n_grid, samples=0, theta_len=P,
+                 layer_dims=layer_dims(in_dim, widths), variant="plain"),
+            [dict(name="theta", **spec([P])),
+             dict(name="x", **spec([n_grid, 2]))],
+            [dict(name="u", **spec([n_grid, 1])),
+             dict(name="err", **spec([]))])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="small")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args(argv)
+
+    cfg = PRESETS[args.preset]
+    em = Emitter(args.out_dir, args.only)
+    t0 = time.time()
+    emit_operator_matrix(em, cfg)
+    emit_nested_laplacian_biharmonic(em, cfg)
+    emit_kernel_variants(em, cfg)
+    emit_pinn(em)
+    em.write_manifest(args.preset)
+    print(f"total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

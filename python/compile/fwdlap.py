@@ -1,0 +1,474 @@
+"""Collapsed Taylor mode as a *program transform*: a jaxpr interpreter
+that turns any (supported) JAX function into its forward Laplacian.
+
+This is the paper's central software claim made concrete at L2: collapsing
+is a mechanical graph rewrite a compiler could perform.  Instead of asking
+users to compose per-layer jet rules (taylor.py), `fwdlap.laplacian(f)`
+traces `f` to a jaxpr and re-interprets every primitive with the collapsed
+2-jet triple
+
+    (x0 [.,],  J [R, ...] = pushforward of R directions,  lap [...] = summed
+     2nd coefficient)
+
+per paper eq. (D16).  Because the transform works on *any* traceable
+function, it nests: `fwdlap.laplacian(fwdlap.laplacian(f))` computes the
+biharmonic as Δ(Δf) — the configuration of paper table G3 — with collapsing
+applied at both levels.
+
+Primitive coverage is the closure of what our models and the inner
+transform itself emit (matmul/dot_general, elementwise, reductions,
+shaping); unsupported primitives raise with a clear message, mirroring the
+paper's own "small number of primitives" scope.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import core as jcore
+
+try:  # jax >= 0.6 moved the core module
+    from jax.extend import core as jexcore
+    Literal = jexcore.Literal
+except Exception:  # pragma: no cover
+    Literal = jcore.Literal  # type: ignore[attr-defined]
+
+
+class Jet2:
+    """Collapsed 2-jet triple: primal x0, direction Jacobian channels
+    j [R, *x0.shape], summed second coefficient lap [*x0.shape]."""
+
+    __slots__ = ("x0", "j", "lap")
+
+    def __init__(self, x0, j, lap):
+        self.x0 = x0
+        self.j = j
+        self.lap = lap
+
+    @staticmethod
+    def constant(x0, num_dirs: int):
+        """Constants carry *symbolic zero* channels (j = lap = None): rules
+        shortcut them, so weights never drag dense zero jets through every
+        layer (EXPERIMENTS.md SS-Perf L2, change 2)."""
+        del num_dirs
+        return Jet2(x0, None, None)
+
+    @property
+    def is_const(self):
+        return self.j is None
+
+    def materialize(self, num_dirs: int):
+        if self.j is not None:
+            return self
+        z = jnp.zeros((num_dirs,) + jnp.shape(self.x0), dtype=jnp.result_type(self.x0))
+        return Jet2(self.x0, z, jnp.zeros_like(self.x0))
+
+
+# registry: primitive -> rule(invals, params, num_dirs) -> outval(s)
+_RULES: Dict = {}
+
+
+def _rule(prim):
+    def register(fn):
+        _RULES[prim] = fn
+        return fn
+
+    return register
+
+
+def _elementwise(phi, d1, d2):
+    """Build the collapsed rule for a unary elementwise primitive from its
+    first two derivatives (paper eq. D16's tanh row, generalized)."""
+
+    def rule(x: Jet2, **params):
+        y0 = phi(x.x0)
+        if x.is_const:
+            return Jet2(y0, None, None)
+        g1 = d1(x.x0)
+        g2 = d2(x.x0)
+        j = g1 * x.j
+        lap = g1 * x.lap + g2 * jnp.sum(x.j * x.j, axis=0)
+        return Jet2(y0, j, lap)
+
+    return rule
+
+
+import jax._src.lax.lax as lax_internal  # noqa: E402
+from jax import lax  # noqa: E402
+
+_RULES[lax.tanh_p] = _elementwise(
+    jnp.tanh,
+    lambda x: 1.0 - jnp.tanh(x) ** 2,
+    lambda x: -2.0 * jnp.tanh(x) * (1.0 - jnp.tanh(x) ** 2),
+)
+_RULES[lax.sin_p] = _elementwise(jnp.sin, jnp.cos, lambda x: -jnp.sin(x))
+_RULES[lax.cos_p] = _elementwise(jnp.cos, lambda x: -jnp.sin(x), lambda x: -jnp.cos(x))
+_RULES[lax.exp_p] = _elementwise(jnp.exp, jnp.exp, jnp.exp)
+_RULES[lax.log_p] = _elementwise(jnp.log, lambda x: 1.0 / x, lambda x: -1.0 / (x * x))
+_RULES[lax.logistic_p] = _elementwise(
+    jax.nn.sigmoid,
+    lambda x: jax.nn.sigmoid(x) * (1 - jax.nn.sigmoid(x)),
+    lambda x: jax.nn.sigmoid(x) * (1 - jax.nn.sigmoid(x)) * (1 - 2 * jax.nn.sigmoid(x)),
+)
+_RULES[lax.neg_p] = _elementwise(lambda x: -x, lambda x: -jnp.ones_like(x), jnp.zeros_like)
+_RULES[lax.sqrt_p] = _elementwise(
+    jnp.sqrt,
+    lambda x: 0.5 / jnp.sqrt(x),
+    lambda x: -0.25 * x ** (-1.5),
+)
+
+
+def _bcast(prim):
+    """Linear structural primitives: apply to all three components, with
+    the direction axis prepended for j."""
+
+    def rule(x: Jet2, **params):
+        out0 = prim.bind(x.x0, **params)
+        if x.is_const:
+            return Jet2(out0, None, None)
+        outl = prim.bind(x.lap, **params)
+        outj = jax.vmap(lambda a: prim.bind(a, **params))(x.j)
+        return Jet2(out0, outj, outl)
+
+    return rule
+
+
+def _shift_dims(params, key):
+    """Shift dimension-indexed parameters by 1 for the leading R axis."""
+    if key in params and params[key] is not None:
+        return tuple(d + 1 for d in params[key])
+    return params.get(key)
+
+
+def _broadcast_jets(a: Jet2, b: Jet2):
+    """Equalize jet shapes for binary ops.  jaxprs only mix shapes when one
+    operand is scalar-rank; the j channel's leading R axis breaks numpy's
+    trailing-dim alignment, so broadcast all components explicitly."""
+    shape = jnp.broadcast_shapes(jnp.shape(a.x0), jnp.shape(b.x0))
+
+    def up(x: Jet2) -> Jet2:
+        if jnp.shape(x.x0) == shape:
+            return x
+        if x.is_const:
+            return Jet2(jnp.broadcast_to(x.x0, shape), None, None)
+        r = x.j.shape[0]
+        pad = len(shape) - (x.j.ndim - 1)
+        j = x.j.reshape((r,) + (1,) * pad + x.j.shape[1:])
+        return Jet2(
+            jnp.broadcast_to(x.x0, shape),
+            jnp.broadcast_to(j, (r,) + shape),
+            jnp.broadcast_to(x.lap, shape),
+        )
+
+    return up(a), up(b)
+
+
+@_rule(lax.add_p)
+def _add(a: Jet2, b: Jet2, **_):
+    a, b = _broadcast_jets(a, b)
+    if a.is_const and b.is_const:
+        return Jet2(a.x0 + b.x0, None, None)
+    if a.is_const:
+        return Jet2(a.x0 + b.x0, b.j, b.lap)
+    if b.is_const:
+        return Jet2(a.x0 + b.x0, a.j, a.lap)
+    return Jet2(a.x0 + b.x0, a.j + b.j, a.lap + b.lap)
+
+
+@_rule(lax.sub_p)
+def _sub(a: Jet2, b: Jet2, **_):
+    a, b = _broadcast_jets(a, b)
+    if a.is_const and b.is_const:
+        return Jet2(a.x0 - b.x0, None, None)
+    if a.is_const:
+        return Jet2(a.x0 - b.x0, -b.j, -b.lap)
+    if b.is_const:
+        return Jet2(a.x0 - b.x0, a.j, a.lap)
+    return Jet2(a.x0 - b.x0, a.j - b.j, a.lap - b.lap)
+
+
+@_rule(lax.mul_p)
+def _mul(a: Jet2, b: Jet2, **_):
+    a, b = _broadcast_jets(a, b)
+    y0 = a.x0 * b.x0
+    if a.is_const and b.is_const:
+        return Jet2(y0, None, None)
+    if a.is_const:
+        return Jet2(y0, a.x0 * b.j, a.x0 * b.lap)
+    if b.is_const:
+        return Jet2(y0, a.j * b.x0, a.lap * b.x0)
+    # Leibniz with the collapsed cross term: (ab)'' summed over dirs
+    j = a.j * b.x0 + a.x0 * b.j
+    cross = 2.0 * jnp.sum(a.j * b.j, axis=0)
+    lap = a.lap * b.x0 + a.x0 * b.lap + cross
+    return Jet2(y0, j, lap)
+
+
+@_rule(lax.div_p)
+def _div(a: Jet2, b: Jet2, **_):
+    a, b = _broadcast_jets(a, b)
+    if b.is_const:
+        inv = Jet2(1.0 / b.x0, None, None)
+        return _mul(a, inv)
+    # a/b = a * b^{-1}; inline the reciprocal's jet rule
+    inv0 = 1.0 / b.x0
+    inv_j = -inv0 * inv0 * b.j
+    inv_lap = -inv0 * inv0 * b.lap + 2.0 * inv0 ** 3 * jnp.sum(b.j * b.j, axis=0)
+    inv = Jet2(inv0, inv_j, inv_lap)
+    return _mul(a, inv)
+
+
+@_rule(lax.integer_pow_p)
+def _integer_pow(x: Jet2, *, y, **_):
+    y0 = x.x0 ** y
+    if x.is_const:
+        return Jet2(y0, None, None)
+    d1 = y * x.x0 ** (y - 1)
+    d2 = y * (y - 1) * x.x0 ** (y - 2) if y != 1 else jnp.zeros_like(x.x0)
+    return Jet2(y0, d1 * x.j, d1 * x.lap + d2 * jnp.sum(x.j * x.j, axis=0))
+
+
+@_rule(lax.dot_general_p)
+def _dot_general(a: Jet2, b: Jet2, *, dimension_numbers, **params):
+    bind = partial(lax.dot_general_p.bind, dimension_numbers=dimension_numbers, **params)
+    y0 = bind(a.x0, b.x0)
+    if a.is_const and b.is_const:
+        return Jet2(y0, None, None)
+    va = jax.vmap(lambda aj: bind(aj, b.x0))
+    vb = jax.vmap(lambda bj: bind(a.x0, bj))
+    if b.is_const:  # the x @ W fast path: W contributes no channels
+        return Jet2(y0, va(a.j), bind(a.lap, b.x0))
+    if a.is_const:
+        return Jet2(y0, vb(b.j), bind(a.x0, b.lap))
+    # Bilinear: second derivative only through the cross term.
+    j = va(a.j) + vb(b.j)
+    cross = 2.0 * jnp.sum(jax.vmap(bind)(a.j, b.j), axis=0)
+    lap = bind(a.lap, b.x0) + bind(a.x0, b.lap) + cross
+    return Jet2(y0, j, lap)
+
+
+@_rule(lax.reduce_sum_p)
+def _reduce_sum(x: Jet2, *, axes, **params):
+    out0 = lax.reduce_sum_p.bind(x.x0, axes=axes, **params)
+    if x.is_const:
+        return Jet2(out0, None, None)
+    outl = lax.reduce_sum_p.bind(x.lap, axes=axes, **params)
+    jaxes = tuple(a + 1 for a in axes)
+    outj = lax.reduce_sum_p.bind(x.j, axes=jaxes, **params)
+    return Jet2(out0, outj, outl)
+
+
+@_rule(lax.broadcast_in_dim_p)
+def _broadcast_in_dim(x: Jet2, *, shape, broadcast_dimensions, **params):
+    bind = lax.broadcast_in_dim_p.bind
+    out0 = bind(x.x0, shape=shape, broadcast_dimensions=broadcast_dimensions, **params)
+    if x.is_const:
+        return Jet2(out0, None, None)
+    outl = bind(x.lap, shape=shape, broadcast_dimensions=broadcast_dimensions, **params)
+    r = x.j.shape[0]
+    outj = bind(
+        x.j,
+        shape=(r,) + tuple(shape),
+        broadcast_dimensions=(0,) + tuple(d + 1 for d in broadcast_dimensions),
+        **params,
+    )
+    return Jet2(out0, outj, outl)
+
+
+@_rule(lax.reshape_p)
+def _reshape(x: Jet2, *, new_sizes, dimensions, **params):
+    out0 = lax.reshape(x.x0, new_sizes)
+    if x.is_const:
+        return Jet2(out0, None, None)
+    outl = lax.reshape(x.lap, new_sizes)
+    assert dimensions is None, "reshape with dimensions not supported"
+    r = x.j.shape[0]
+    outj = lax.reshape(x.j, (r,) + tuple(new_sizes))
+    return Jet2(out0, outj, outl)
+
+
+@_rule(lax.transpose_p)
+def _transpose(x: Jet2, *, permutation, **_):
+    out0 = lax.transpose(x.x0, permutation)
+    if x.is_const:
+        return Jet2(out0, None, None)
+    outl = lax.transpose(x.lap, permutation)
+    outj = lax.transpose(x.j, (0,) + tuple(p + 1 for p in permutation))
+    return Jet2(out0, outj, outl)
+
+
+@_rule(lax.slice_p)
+def _slice(x: Jet2, *, start_indices, limit_indices, strides, **_):
+    if x.is_const:
+        return Jet2(lax.slice(x.x0, start_indices, limit_indices, strides), None, None)
+    s = lambda a, off: lax.slice(
+        a,
+        (0,) * off + tuple(start_indices),
+        a.shape[:off] + tuple(limit_indices),
+        None if strides is None else (1,) * off + tuple(strides),
+    )
+    return Jet2(s(x.x0, 0), s(x.j, 1), s(x.lap, 0))
+
+
+@_rule(lax.squeeze_p)
+def _squeeze(x: Jet2, *, dimensions, **_):
+    out0 = lax.squeeze(x.x0, dimensions)
+    if x.is_const:
+        return Jet2(out0, None, None)
+    outl = lax.squeeze(x.lap, dimensions)
+    outj = lax.squeeze(x.j, tuple(d + 1 for d in dimensions))
+    return Jet2(out0, outj, outl)
+
+
+@_rule(lax.concatenate_p)
+def _concatenate(*xs: Jet2, dimension, **_):
+    r = next((x.j.shape[0] for x in xs if x.j is not None), None)
+    if r is None:
+        return Jet2(lax.concatenate([x.x0 for x in xs], dimension), None, None)
+    xs = [x.materialize(r) for x in xs]
+    return Jet2(
+        lax.concatenate([x.x0 for x in xs], dimension),
+        lax.concatenate([x.j for x in xs], dimension + 1),
+        lax.concatenate([x.lap for x in xs], dimension),
+    )
+
+
+@_rule(lax.convert_element_type_p)
+def _convert(x: Jet2, *, new_dtype, **params):
+    c = lambda a: lax.convert_element_type(a, new_dtype)
+    if x.is_const:
+        return Jet2(c(x.x0), None, None)
+    return Jet2(c(x.x0), c(x.j), c(x.lap))
+
+
+def _constant_rule(prim):
+    """Input-independent primitives (iota, eq on constants, ...): evaluate
+    on primals and wrap as constants with zero jet channels."""
+
+    def rule(*xs: Jet2, **params):
+        out = prim.bind(*[x.x0 for x in xs], **params)
+        outs = out if isinstance(out, (list, tuple)) else [out]
+        wrapped = [Jet2.constant(o, 0) for o in outs]
+        return wrapped if len(wrapped) > 1 else wrapped[0]
+
+    return rule
+
+
+# Comparison / constant-generating primitives carry no derivatives.
+_CURRENT_NUM_DIRS = [1]
+for _p in (lax.iota_p, lax.eq_p, lax.ne_p, lax.lt_p, lax.le_p, lax.gt_p,
+           lax.ge_p, lax.sign_p, lax.stop_gradient_p):
+    _RULES[_p] = _constant_rule(_p)
+
+
+@_rule(lax.select_n_p)
+def _select_n(pred: Jet2, *cases: Jet2, **_):
+    r = next((c.j.shape[0] for c in cases if c.j is not None), None)
+    if r is None:
+        return Jet2(lax.select_n(pred.x0, *[c.x0 for c in cases]), None, None)
+    cases = [c.materialize(r) for c in cases]
+    return Jet2(
+        lax.select_n(pred.x0, *[c.x0 for c in cases]),
+        jax.vmap(lambda *js: lax.select_n(pred.x0, *js))(*[c.j for c in cases]),
+        lax.select_n(pred.x0, *[c.lap for c in cases]),
+    )
+
+
+@_rule(lax.max_p)
+def _max(a: Jet2, b: Jet2, **_):
+    a, b = _broadcast_jets(a, b)
+    r = a.j.shape[0] if a.j is not None else (b.j.shape[0] if b.j is not None else None)
+    if r is None:
+        return Jet2(jnp.maximum(a.x0, b.x0), None, None)
+    a, b = a.materialize(r), b.materialize(r)
+    pick_a = a.x0 >= b.x0
+    return Jet2(
+        jnp.where(pick_a, a.x0, b.x0),
+        jnp.where(pick_a, a.j, b.j),
+        jnp.where(pick_a, a.lap, b.lap),
+    )
+
+
+def _eval_jaxpr(jaxpr, consts, args: Sequence[Jet2], num_dirs: int):
+    _CURRENT_NUM_DIRS[0] = num_dirs
+    env: Dict = {}
+
+    def read(v):
+        if isinstance(v, Literal):
+            return Jet2.constant(v.val, num_dirs)
+        return env[v]
+
+    def write(v, val):
+        env[v] = val
+
+    for v, c in zip(jaxpr.constvars, consts):
+        write(v, Jet2.constant(c, num_dirs))
+    for v, a in zip(jaxpr.invars, args):
+        write(v, a)
+
+    for eqn in jaxpr.eqns:
+        invals = [read(v) for v in eqn.invars]
+        if eqn.primitive in _RULES:
+            out = _RULES[eqn.primitive](*invals, **eqn.params)
+            outs = out if isinstance(out, (list, tuple)) else [out]
+        elif eqn.primitive.name in ("pjit", "closed_call", "custom_jvp_call",
+                                    "custom_vjp_call"):
+            inner = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            closed = inner if hasattr(inner, "jaxpr") else None
+            if closed is not None:
+                outs = _eval_jaxpr(closed.jaxpr, closed.consts, invals, num_dirs)
+            else:
+                outs = _eval_jaxpr(inner, [], invals, num_dirs)
+        else:
+            raise NotImplementedError(
+                f"fwdlap: no collapsed-jet rule for primitive {eqn.primitive}"
+            )
+        for v, o in zip(eqn.outvars, outs):
+            write(v, o)
+    return [read(v) for v in jaxpr.outvars]
+
+
+def jet2(fn: Callable, x0: jnp.ndarray, dirs: jnp.ndarray):
+    """Push a collapsed 2-jet bundle through `fn`.
+
+    x0: the input point (any shape); dirs: [R, *x0.shape] direction
+    channels.  Returns (f(x0), Jacobian channels [R, ...], summed second
+    directional derivatives Σ_r v_rᵀ H v_r per output element).
+    """
+    closed = jax.make_jaxpr(fn)(x0)
+    seed = Jet2(x0, dirs, jnp.zeros_like(x0))
+    outs = _eval_jaxpr(closed.jaxpr, closed.consts, [seed], dirs.shape[0])
+    out = outs[0].materialize(dirs.shape[0])
+    return out.x0, out.j, out.lap
+
+
+def laplacian(fn: Callable) -> Callable:
+    """The forward-Laplacian transform: `laplacian(f)(x)` returns
+    (f(x), Δf(x)) for f: R^D -> scalar or R^D -> R^C, any traceable f."""
+
+    def wrapped(x):
+        d = x.shape[-1]
+        dirs = jnp.eye(d, dtype=x.dtype)
+        if x.ndim == 1:
+            f0, _, lap = jet2(fn, x, dirs)
+            return f0, lap
+        raise ValueError("laplacian() expects a single point; vmap for batches")
+
+    return wrapped
+
+
+def biharmonic_nested(fn: Callable) -> Callable:
+    """Δ(Δ f) with collapsing applied at *both* levels (paper table G3's
+    'Collapsed (ours)' configuration for the biharmonic)."""
+
+    inner = lambda x: laplacian(fn)(x)[1]
+    outer = laplacian(inner)
+
+    def wrapped(x):
+        lap, bih = outer(x)
+        return lap, bih
+
+    return wrapped

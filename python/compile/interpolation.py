@@ -1,0 +1,143 @@
+"""Griewank-Utke-Walther interpolation coefficients (paper eq. E17).
+
+Mixed K-th order partial derivatives <d^K f, v1^(i1) x ... x vI^(iI)> cannot
+be read off a single K-jet when the directions differ.  Griewank et al.
+(1999) reconstruct them as a linear combination of K-jets along the blended
+directions sum_i [j]_i * v_i, over all j in N^I with |j|_1 = K, weighted by
+gamma_{i,j} / K!.  The gammas depend only on (K, I, i), never on f or the
+directions, which is why the direction sums can be pulled inside and
+*collapsed* (paper eq. 12).
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from fractions import Fraction
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+
+def compositions(total: int, parts: int) -> Iterator[Tuple[int, ...]]:
+    """All j in N^parts (entries >= 0) with sum(j) == total."""
+    if parts == 1:
+        yield (total,)
+        return
+    for head in range(total + 1):
+        for tail in compositions(total - head, parts - 1):
+            yield (head,) + tail
+
+
+def gen_binomial(a: Fraction, b: int) -> Fraction:
+    """Generalized binomial coefficient prod_{l=0}^{b-1} (a-l)/(b-l)
+    (paper eq. E18); equals 1 when b == 0."""
+    out = Fraction(1)
+    for l in range(b):
+        out *= Fraction(a - l, b - l)
+    return out
+
+
+def vec_binomial(a: Sequence[Fraction], b: Sequence[int]) -> Fraction:
+    """Componentwise product of generalized binomials."""
+    out = Fraction(1)
+    for ai, bi in zip(a, b):
+        out *= gen_binomial(Fraction(ai), bi)
+    return out
+
+
+def gamma(i: Sequence[int], j: Sequence[int]) -> Fraction:
+    """gamma_{i,j} of paper eq. E17 as an exact rational.
+
+    gamma_{i,j} = sum_{0 < m <= i} (-1)^{|i-m|_1} C(i, m)
+                  C(|i|_1 * m / |m|_1, j) (|m|_1 / |i|_1)^{|i|_1}
+    """
+    I = len(i)
+    K = sum(i)
+    assert sum(j) == K, "j must sum to K = |i|_1"
+    total = Fraction(0)
+    ranges = [range(0, ii + 1) for ii in i]
+    for m in itertools.product(*ranges):
+        m1 = sum(m)
+        if m1 == 0:
+            continue
+        sign = -1 if (K - m1) % 2 else 1
+        c_im = vec_binomial([Fraction(x) for x in i], list(m))
+        blended = [Fraction(K * mi, m1) for mi in m]
+        c_bj = vec_binomial(blended, list(j))
+        scale = Fraction(m1, K) ** K
+        total += sign * c_im * c_bj * scale
+    return total
+
+
+def gamma_family(i: Sequence[int]) -> Dict[Tuple[int, ...], Fraction]:
+    """All gamma_{i,j} for j in N^I, |j|_1 = K (paper fig. 4 for i=(2,2))."""
+    K, I = sum(i), len(i)
+    return {j: gamma(i, j) for j in compositions(K, I)}
+
+
+# ---------------------------------------------------------------------------
+# Biharmonic-specific family construction (paper eq. E22)
+# ---------------------------------------------------------------------------
+
+
+class BiharmonicPlan:
+    """The collapsed interpolation plan for the exact biharmonic operator.
+
+    Three direction families after exploiting gamma symmetries
+    (gamma_{(2,2),(4,0)} = gamma_{(2,2),(0,4)},
+     gamma_{(2,2),(3,1)} = gamma_{(2,2),(1,3)}) and extracting the diagonal
+    d1 == d2 (paper eq. E19 -> E22):
+
+      A: directions 4*e_d,            d = 1..D            weight w_A
+      B: directions 3*e_d1 + e_d2,    d1 != d2            weight w_B
+      C: directions 2*e_d1 + 2*e_d2,  d1 < d2             weight w_C
+
+    Delta^2 f = w_A * S_A + w_B * S_B + w_C * S_C where S_X is the *sum* of
+    4th-degree jet coefficients over the family's directions — each family
+    is one collapsed Taylor-mode evaluation.
+    """
+
+    def __init__(self, dim: int):
+        self.dim = dim
+        g = gamma_family((2, 2))
+        g40, g31, g22 = g[(4, 0)], g[(3, 1)], g[(2, 2)]
+        assert g[(0, 4)] == g40 and g[(1, 3)] == g31
+        self.w_A = float((2 * dim * g40 + 2 * g31 + g22) / 24)
+        self.w_B = float(2 * g31 / 24)
+        self.w_C = float(2 * g22 / 24)
+
+    def directions_A(self):
+        """[D, D]: rows 4*e_d."""
+        import jax.numpy as jnp
+        return 4.0 * jnp.eye(self.dim, dtype=jnp.float32)
+
+    def directions_B(self):
+        """[D*(D-1), D]: rows 3*e_d1 + e_d2, d1 != d2."""
+        import jax.numpy as jnp
+        D = self.dim
+        eye = jnp.eye(D, dtype=jnp.float32)
+        rows = [3.0 * eye[d1] + eye[d2]
+                for d1 in range(D) for d2 in range(D) if d1 != d2]
+        return jnp.stack(rows)
+
+    def directions_C(self):
+        """[D*(D-1)/2, D]: rows 2*e_d1 + 2*e_d2, d1 < d2."""
+        import jax.numpy as jnp
+        D = self.dim
+        eye = jnp.eye(D, dtype=jnp.float32)
+        rows = [2.0 * eye[d1] + 2.0 * eye[d2]
+                for d1 in range(D) for d2 in range(d1 + 1, D)]
+        return jnp.stack(rows)
+
+    def num_jets(self) -> Tuple[int, int, int]:
+        D = self.dim
+        return (D, D * (D - 1), D * (D - 1) // 2)
+
+    def vectors_standard(self) -> int:
+        """Channel vectors for standard Taylor mode: 6D^2 - 2D + 1 (paper 3.3)."""
+        D = self.dim
+        return 6 * D * D - 2 * D + 1
+
+    def vectors_collapsed(self) -> int:
+        """Channel vectors after collapsing: 9/2 D^2 - 3/2 D + 4 (paper 3.3)."""
+        D = self.dim
+        return (9 * D * D - 3 * D) // 2 + 4

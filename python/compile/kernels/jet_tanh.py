@@ -1,0 +1,209 @@
+"""L1 Pallas kernels: fused (collapsed) jet propagation through tanh.
+
+The activation is the only non-linear node of the paper's MLP workloads, so
+its jet rule is the kernel-level hot spot: for every VMEM block we must
+evaluate tanh once, derive up to four closed-form derivatives from it, and
+combine them with up to 1 + K*R coefficient channels (Faa di Bruno).  Doing
+this as one fused kernel means each channel block is loaded exactly once
+and every derivative is computed once per block instead of once per term.
+
+Hardware adaptation (DESIGN.md section 7): the GPU paper would stage these
+channels through shared memory; on TPU the BlockSpec below stages
+(channels, batch-tile, feature-tile) blocks through VMEM, and the reduction
+over the direction axis for the collapsed channel happens in-register.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness (and AOT-embed)
+path; real-TPU cost is estimated analytically in DESIGN.md / EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _tile(n: int, target: int) -> int:
+    """Largest divisor of n not exceeding target (keeps grids exact)."""
+    t = min(n, target)
+    while n % t:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Collapsed 2-jet (forward-Laplacian activation)
+# ---------------------------------------------------------------------------
+
+
+def _jet2_col_kernel(x0_ref, x1_ref, x2s_ref, f0_ref, f1_ref, f2s_ref):
+    """One (R, bB, bH) block: f0 = tanh, f1_r = u*x1_r,
+    f2s = u*x2s - 2 t u * sum_r x1_r^2."""
+    t = jnp.tanh(x0_ref[...])
+    u = 1.0 - t * t
+    x1 = x1_ref[...]
+    f0_ref[...] = t
+    f1_ref[...] = u * x1
+    f2s_ref[...] = u * x2s_ref[...] - 2.0 * t * u * jnp.sum(x1 * x1, axis=0)
+
+
+def tanh_jet2_col(x0: jnp.ndarray, x1: jnp.ndarray, x2s: jnp.ndarray,
+                  *, block_b: int = 8, block_h: int = 128,
+                  interpret: bool = True) -> Tuple[jnp.ndarray, ...]:
+    """Fused collapsed 2-jet tanh.  x0: [B,H]; x1: [R,B,H]; x2s: [B,H]."""
+    R, B, H = x1.shape
+    bB, bH = _tile(B, block_b), _tile(H, block_h)
+    grid = (_ceil_div(B, bB), _ceil_div(H, bH))
+    bcast = pl.BlockSpec((bB, bH), lambda i, j: (i, j))
+    chans = pl.BlockSpec((R, bB, bH), lambda i, j: (0, i, j))
+    return pl.pallas_call(
+        _jet2_col_kernel,
+        grid=grid,
+        in_specs=[bcast, chans, bcast],
+        out_specs=[bcast, chans, bcast],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H), x0.dtype),
+            jax.ShapeDtypeStruct((R, B, H), x1.dtype),
+            jax.ShapeDtypeStruct((B, H), x2s.dtype),
+        ],
+        interpret=interpret,
+    )(x0, x1, x2s)
+
+
+# ---------------------------------------------------------------------------
+# Standard 2-jet
+# ---------------------------------------------------------------------------
+
+
+def _jet2_std_kernel(x0_ref, x1_ref, x2_ref, f0_ref, f1_ref, f2_ref):
+    t = jnp.tanh(x0_ref[...])
+    u = 1.0 - t * t
+    x1 = x1_ref[...]
+    f0_ref[...] = t
+    f1_ref[...] = u * x1
+    f2_ref[...] = u * x2_ref[...] - 2.0 * t * u * x1 * x1
+
+
+def tanh_jet2_std(x0: jnp.ndarray, x1: jnp.ndarray, x2: jnp.ndarray,
+                  *, block_b: int = 8, block_h: int = 128,
+                  interpret: bool = True) -> Tuple[jnp.ndarray, ...]:
+    """Fused standard 2-jet tanh: every direction keeps its 2nd coefficient
+    (1 + 2R channels through the block instead of 1 + R + 1)."""
+    R, B, H = x1.shape
+    bB, bH = _tile(B, block_b), _tile(H, block_h)
+    grid = (_ceil_div(B, bB), _ceil_div(H, bH))
+    bcast = pl.BlockSpec((bB, bH), lambda i, j: (i, j))
+    chans = pl.BlockSpec((R, bB, bH), lambda i, j: (0, i, j))
+    return pl.pallas_call(
+        _jet2_std_kernel,
+        grid=grid,
+        in_specs=[bcast, chans, chans],
+        out_specs=[bcast, chans, chans],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H), x0.dtype),
+            jax.ShapeDtypeStruct((R, B, H), x1.dtype),
+            jax.ShapeDtypeStruct((R, B, H), x2.dtype),
+        ],
+        interpret=interpret,
+    )(x0, x1, x2)
+
+
+# ---------------------------------------------------------------------------
+# Collapsed 4-jet (biharmonic activation)
+# ---------------------------------------------------------------------------
+
+
+def _jet4_col_kernel(x0_ref, x1_ref, x2_ref, x3_ref, x4s_ref,
+                     f0_ref, f1_ref, f2_ref, f3_ref, f4s_ref):
+    """All tanh derivatives from one tanh evaluation; Faa di Bruno terms for
+    k <= 4 from one load of each channel block (paper SSA)."""
+    t = jnp.tanh(x0_ref[...])
+    u = 1.0 - t * t
+    d2 = -2.0 * t * u
+    d3 = u * (6.0 * t * t - 2.0)
+    d4 = t * u * (16.0 - 24.0 * t * t)
+    x1, x2, x3 = x1_ref[...], x2_ref[...], x3_ref[...]
+    x1sq = x1 * x1
+    f0_ref[...] = t
+    f1_ref[...] = u * x1
+    f2_ref[...] = d2 * x1sq + u * x2
+    f3_ref[...] = d3 * x1sq * x1 + 3.0 * d2 * x1 * x2 + u * x3
+    nl4 = (d4 * x1sq * x1sq + 6.0 * d3 * x1sq * x2
+           + 4.0 * d2 * x1 * x3 + 3.0 * d2 * x2 * x2)
+    f4s_ref[...] = u * x4s_ref[...] + jnp.sum(nl4, axis=0)
+
+
+def tanh_jet4_col(x0, x1, x2, x3, x4s, *, block_b: int = 8,
+                  block_h: int = 64, interpret: bool = True):
+    """Fused collapsed 4-jet tanh.  x1..x3: [R,B,H]; x0, x4s: [B,H]."""
+    R, B, H = x1.shape
+    bB, bH = _tile(B, block_b), _tile(H, block_h)
+    grid = (_ceil_div(B, bB), _ceil_div(H, bH))
+    bcast = pl.BlockSpec((bB, bH), lambda i, j: (i, j))
+    chans = pl.BlockSpec((R, bB, bH), lambda i, j: (0, i, j))
+    return pl.pallas_call(
+        _jet4_col_kernel,
+        grid=grid,
+        in_specs=[bcast, chans, chans, chans, bcast],
+        out_specs=[bcast, chans, chans, chans, bcast],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H), x0.dtype),
+            jax.ShapeDtypeStruct((R, B, H), x1.dtype),
+            jax.ShapeDtypeStruct((R, B, H), x2.dtype),
+            jax.ShapeDtypeStruct((R, B, H), x3.dtype),
+            jax.ShapeDtypeStruct((B, H), x4s.dtype),
+        ],
+        interpret=interpret,
+    )(x0, x1, x2, x3, x4s)
+
+
+# ---------------------------------------------------------------------------
+# Jet-bundle adapters (plug into taylor.mlp_jet via act_fn=...)
+# ---------------------------------------------------------------------------
+
+
+def col_act_fn(jet, *, interpret: bool = True):
+    """taylor.JetCol -> taylor.JetCol through the fused kernels."""
+    from .. import taylor  # local import: kernels must not depend at import time
+
+    if jet.order == 2:
+        f0, f1, f2s = tanh_jet2_col(jet.x0, jet.xs[0], jet.xK_sum,
+                                    interpret=interpret)
+        return taylor.JetCol(x0=f0, xs=(f1,), xK_sum=f2s)
+    if jet.order == 4:
+        f0, f1, f2, f3, f4s = tanh_jet4_col(jet.x0, *jet.xs, jet.xK_sum,
+                                            interpret=interpret)
+        return taylor.JetCol(x0=f0, xs=(f1, f2, f3), xK_sum=f4s)
+    raise NotImplementedError(f"no fused kernel for order {jet.order}")
+
+
+def std_act_fn(jet, *, interpret: bool = True):
+    """taylor.JetStd -> taylor.JetStd through the fused standard kernel."""
+    from .. import taylor
+
+    if jet.order == 2:
+        f0, f1, f2 = tanh_jet2_std(jet.x0, jet.xs[0], jet.xs[1],
+                                   interpret=interpret)
+        return taylor.JetStd(x0=f0, xs=(f1, f2))
+    raise NotImplementedError(f"no fused standard kernel for order {jet.order}")
+
+
+def vmem_bytes(order: int, num_dirs: int, block_b: int, block_h: int,
+               dtype_bytes: int = 4, collapsed: bool = True) -> int:
+    """Analytical VMEM footprint of one block (DESIGN.md section 7): inputs +
+    outputs resident simultaneously.  Collapsing replaces the R-wide highest
+    channel with a single summed channel on both sides of the kernel."""
+    tile = block_b * block_h * dtype_bytes
+    if collapsed:
+        chans = 1 + (order - 1) * num_dirs + 1
+    else:
+        chans = 1 + order * num_dirs
+    return 2 * chans * tile

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas jet-activation kernels.
+
+These spell out the Faa di Bruno propagation of (collapsed) jets through an
+elementwise tanh exactly as in paper SSA / eq. D14, with no Pallas involved;
+pytest asserts the kernels match these to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tanh_jet2_col_ref(x0, x1, x2s):
+    """Collapsed 2-jet through tanh (the forward-Laplacian activation rule).
+
+    x0: [B, H]; x1: [R, B, H]; x2s: [B, H] (summed 2nd coefficient).
+    Returns (f0, f1, f2s) of identical shapes.
+    """
+    t = jnp.tanh(x0)
+    u = 1.0 - t * t
+    f1 = u * x1
+    f2s = u * x2s - 2.0 * t * u * jnp.sum(x1 * x1, axis=0)
+    return t, f1, f2s
+
+
+def tanh_jet2_std_ref(x0, x1, x2):
+    """Standard 2-jet through tanh: every direction keeps its own 2nd
+    coefficient.  x2: [R, B, H]."""
+    t = jnp.tanh(x0)
+    u = 1.0 - t * t
+    f1 = u * x1
+    f2 = u * x2 - 2.0 * t * u * x1 * x1
+    return t, f1, f2
+
+
+def tanh_jet4_col_ref(x0, x1, x2, x3, x4s):
+    """Collapsed 4-jet through tanh (biharmonic building block).
+
+    x1, x2, x3: [R, B, H]; x4s: [B, H].  Derivatives of tanh in closed form:
+    t' = u, t'' = -2tu, t''' = u(6t^2-2), t'''' = tu(16-24t^2) with u = 1-t^2.
+    """
+    t = jnp.tanh(x0)
+    u = 1.0 - t * t
+    d1 = u
+    d2 = -2.0 * t * u
+    d3 = u * (6.0 * t * t - 2.0)
+    d4 = t * u * (16.0 - 24.0 * t * t)
+    f1 = d1 * x1
+    f2 = d2 * x1 * x1 + d1 * x2
+    f3 = d3 * x1 * x1 * x1 + 3.0 * d2 * x1 * x2 + d1 * x3
+    nl4 = (d4 * x1 * x1 * x1 * x1 + 6.0 * d3 * x1 * x1 * x2
+           + 4.0 * d2 * x1 * x3 + 3.0 * d2 * x2 * x2)
+    f4s = d1 * x4s + jnp.sum(nl4, axis=0)
+    return t, f1, f2, f3, f4s
+
+
+def tanh_jet4_std_ref(x0, x1, x2, x3, x4):
+    """Standard 4-jet through tanh; x4: [R, B, H]."""
+    t = jnp.tanh(x0)
+    u = 1.0 - t * t
+    d1 = u
+    d2 = -2.0 * t * u
+    d3 = u * (6.0 * t * t - 2.0)
+    d4 = t * u * (16.0 - 24.0 * t * t)
+    f1 = d1 * x1
+    f2 = d2 * x1 * x1 + d1 * x2
+    f3 = d3 * x1 * x1 * x1 + 3.0 * d2 * x1 * x2 + d1 * x3
+    f4 = (d4 * x1 * x1 * x1 * x1 + 6.0 * d3 * x1 * x1 * x2
+          + 4.0 * d2 * x1 * x3 + 3.0 * d2 * x2 * x2 + d1 * x4)
+    return t, f1, f2, f3, f4

@@ -1,0 +1,82 @@
+"""L2 model: the paper's benchmark tanh MLP and parameter plumbing.
+
+The paper benchmarks a 5-layer tanh MLP f_theta : D -> 768 -> 768 -> 512
+-> 512 -> 1 (PINN-typical).  Parameters are passed to the AOT-compiled
+executables as a single flat f32 vector so the Rust runtime can treat every
+model variant uniformly (one buffer in, one or two buffers out).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# The paper's architecture (section 4): D -> 768 -> 768 -> 512 -> 512 -> 1.
+PAPER_WIDTHS = (768, 768, 512, 512, 1)
+# Downsized preset for single-core CPU sweeps (DESIGN.md section 4).
+SMALL_WIDTHS = (128, 128, 96, 96, 1)
+
+Params = List[Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def layer_dims(in_dim: int, widths: Sequence[int]) -> List[Tuple[int, int]]:
+    dims = []
+    prev = in_dim
+    for w in widths:
+        dims.append((prev, w))
+        prev = w
+    return dims
+
+
+def num_params(in_dim: int, widths: Sequence[int]) -> int:
+    return sum(i * o + o for i, o in layer_dims(in_dim, widths))
+
+
+def init_mlp(key, in_dim: int, widths: Sequence[int], dtype=jnp.float32) -> Params:
+    """Glorot-uniform init, matching common PINN setups."""
+    params = []
+    for (i, o) in layer_dims(in_dim, widths):
+        key, k1 = jax.random.split(key)
+        lim = math.sqrt(6.0 / (i + o))
+        W = jax.random.uniform(k1, (i, o), dtype, -lim, lim)
+        b = jnp.zeros((o,), dtype)
+        params.append((W, b))
+    return params
+
+
+def flatten_params(params: Params) -> jnp.ndarray:
+    """Pack [(W, b), ...] into one flat f32 vector (Rust-facing layout:
+    W0 row-major, b0, W1, b1, ...)."""
+    return jnp.concatenate([jnp.concatenate([W.reshape(-1), b]) for W, b in params])
+
+
+def unflatten_params(theta: jnp.ndarray, in_dim: int,
+                     widths: Sequence[int]) -> Params:
+    """Inverse of :func:`flatten_params`, shape-driven."""
+    params = []
+    off = 0
+    for (i, o) in layer_dims(in_dim, widths):
+        W = theta[off:off + i * o].reshape(i, o)
+        off += i * o
+        b = theta[off:off + o]
+        off += o
+        params.append((W, b))
+    return params
+
+
+def mlp_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Plain forward pass, x: [B, D] -> [B, C].  Final layer linear."""
+    h = x
+    for i, (W, b) in enumerate(params):
+        h = h @ W + b
+        if i < len(params) - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def mlp_apply_flat(theta: jnp.ndarray, x: jnp.ndarray, in_dim: int,
+                   widths: Sequence[int]) -> jnp.ndarray:
+    return mlp_apply(unflatten_params(theta, in_dim, widths), x)

@@ -1,0 +1,70 @@
+"""End-to-end workload: a Poisson PINN trained with the collapsed-Taylor
+Laplacian inside the loss (DESIGN.md experiment "E2E").
+
+Problem: -Delta u = f on [0,1]^2, u = 0 on the boundary, with the
+manufactured solution u*(x,y) = sin(pi x) sin(pi y), i.e.
+f = 2 pi^2 sin(pi x) sin(pi y).
+
+The whole SGD step — forward Laplacian (collapsed Taylor mode), residual
+loss, boundary penalty, gradient w.r.t. the flat parameter vector, update —
+is lowered to a single HLO module.  The Rust driver owns the training loop,
+samples collocation points with its own PRNG, and feeds/receives the flat
+parameter vector, so Python never appears on the training path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import operators
+from .model import mlp_apply, unflatten_params
+
+PI = math.pi
+
+
+def source_term(x: jnp.ndarray) -> jnp.ndarray:
+    """f = 2 pi^2 prod_i sin(pi x_i) for -Delta u = f; x: [B, 2] -> [B, 1]."""
+    return (2.0 * PI * PI) * jnp.prod(jnp.sin(PI * x), axis=-1, keepdims=True)
+
+
+def exact_solution(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.prod(jnp.sin(PI * x), axis=-1, keepdims=True)
+
+
+def pinn_loss(theta: jnp.ndarray, x_int: jnp.ndarray, x_bnd: jnp.ndarray,
+              in_dim: int, widths: Sequence[int],
+              bnd_weight: float = 100.0) -> jnp.ndarray:
+    """Residual + boundary loss with the collapsed-Taylor Laplacian."""
+    params = unflatten_params(theta, in_dim, widths)
+    _, lap = operators.laplacian_taylor(params, x_int, collapsed=True)
+    residual = -lap - source_term(x_int)
+    u_bnd = mlp_apply(params, x_bnd)
+    return jnp.mean(residual ** 2) + bnd_weight * jnp.mean(u_bnd ** 2)
+
+
+def make_train_step(in_dim: int, widths: Sequence[int], lr: float = 1e-3,
+                    bnd_weight: float = 100.0):
+    """(theta, x_int, x_bnd) -> (theta', loss): one SGD step, jit-lowerable."""
+
+    def step(theta, x_int, x_bnd):
+        loss, g = jax.value_and_grad(pinn_loss)(theta, x_int, x_bnd,
+                                                in_dim, widths, bnd_weight)
+        return theta - lr * g, loss
+
+    return step
+
+
+def make_eval(in_dim: int, widths: Sequence[int]):
+    """(theta, x) -> (u_theta(x), |u_theta - u*| L2 error on the grid)."""
+
+    def evaluate(theta, x):
+        params = unflatten_params(theta, in_dim, widths)
+        u = mlp_apply(params, x)
+        err = jnp.sqrt(jnp.mean((u - exact_solution(x)) ** 2))
+        return u, err
+
+    return evaluate

@@ -1,0 +1,291 @@
+"""Taylor-mode AD in JAX: standard and collapsed jet propagation.
+
+This is the L2 heart of the reproduction.  A *K-jet bundle* carries the
+Taylor coefficients of R univariate Taylor polynomials (directions) pushed
+through the network simultaneously:
+
+* **Standard mode** (paper eq. D13): channels ``x0 [B,D]`` plus
+  ``xs[k][r]`` for k = 1..K, r = 1..R  ->  ``1 + K*R`` vectors per node.
+* **Collapsed mode** (paper eq. D14): channels ``x0``, ``xs[k][r]`` for
+  k = 1..K-1, plus a single *summed* highest coefficient ``xK_sum``
+  ->  ``1 + (K-1)*R + 1`` vectors per node.  The highest coefficient's
+  propagation rule is linear in the highest input coefficient (trivial
+  partition {K} of Faa di Bruno), so the sum over directions can be
+  propagated directly.  For K = 2 and unit directions this *is* the
+  forward Laplacian of Li et al.
+
+Shapes: ``x0`` is ``[B, D]``; every directional channel is ``[R, B, D]``;
+the collapsed channel is ``[B, D]``.
+
+Only the primitives needed by the paper's workloads (tanh MLPs, PDE
+operators) are implemented, mirroring the paper's own "small number of
+primitives" scope; the rules come straight from the Faa di Bruno cheat
+sheet in paper SSA.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class JetStd(NamedTuple):
+    """Standard-mode jet bundle of degree K = len(xs).
+
+    x0:  primal point,        shape [B, D]
+    xs:  Taylor coefficients, xs[k-1] has shape [R, B, D] (k = 1..K)
+    """
+
+    x0: jnp.ndarray
+    xs: tuple
+
+    @property
+    def order(self) -> int:
+        return len(self.xs)
+
+    @property
+    def num_dirs(self) -> int:
+        return self.xs[0].shape[0]
+
+
+class JetCol(NamedTuple):
+    """Collapsed-mode jet bundle of degree K = len(xs) + 1.
+
+    x0:      primal point,                     shape [B, D]
+    xs:      coefficients of degree 1..K-1,    xs[k-1] is [R, B, D]
+    xK_sum:  sum over directions of the K-th coefficient, [B, D]
+    """
+
+    x0: jnp.ndarray
+    xs: tuple
+    xK_sum: jnp.ndarray
+
+    @property
+    def order(self) -> int:
+        return len(self.xs) + 1
+
+    @property
+    def num_dirs(self) -> int:
+        return self.xs[0].shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Seeding
+# ---------------------------------------------------------------------------
+
+
+def seed_std(x0: jnp.ndarray, dirs: jnp.ndarray, order: int) -> JetStd:
+    """Seed a standard bundle: x1 = dirs, x2 = ... = xK = 0 (paper eq. 7b).
+
+    x0: [B, D]; dirs: [R, B, D] (or [R, D], broadcast over batch).
+    """
+    if dirs.ndim == 2:
+        dirs = jnp.broadcast_to(dirs[:, None, :], (dirs.shape[0],) + x0.shape)
+    zeros = jnp.zeros_like(dirs)
+    return JetStd(x0=x0, xs=(dirs,) + (zeros,) * (order - 1))
+
+
+def seed_col(x0: jnp.ndarray, dirs: jnp.ndarray, order: int) -> JetCol:
+    """Seed a collapsed bundle: the summed K-th coefficient starts at 0."""
+    if dirs.ndim == 2:
+        dirs = jnp.broadcast_to(dirs[:, None, :], (dirs.shape[0],) + x0.shape)
+    zeros = jnp.zeros_like(dirs)
+    return JetCol(
+        x0=x0,
+        xs=(dirs,) + (zeros,) * (order - 2),
+        xK_sum=jnp.zeros_like(x0),
+    )
+
+
+def basis_directions(dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Unit directions e_1..e_D for the exact Laplacian: [D, D]."""
+    return jnp.eye(dim, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear layer: y = x @ W + b.  All coefficient channels map linearly.
+# ---------------------------------------------------------------------------
+
+
+def linear_std(jet: JetStd, W: jnp.ndarray, b: Optional[jnp.ndarray]) -> JetStd:
+    """Affine rule, standard mode: f0 = x0 W + b, fk = xk W."""
+    y0 = jet.x0 @ W
+    if b is not None:
+        y0 = y0 + b
+    ys = tuple(x @ W for x in jet.xs)
+    return JetStd(x0=y0, xs=ys)
+
+
+def linear_col(jet: JetCol, W: jnp.ndarray, b: Optional[jnp.ndarray]) -> JetCol:
+    """Affine rule, collapsed mode: the summed channel also maps through W."""
+    y0 = jet.x0 @ W
+    if b is not None:
+        y0 = y0 + b
+    ys = tuple(x @ W for x in jet.xs)
+    return JetCol(x0=y0, xs=ys, xK_sum=jet.xK_sum @ W)
+
+
+# ---------------------------------------------------------------------------
+# Elementwise maps via Faa di Bruno (paper SSA cheat sheet, K <= 4)
+# ---------------------------------------------------------------------------
+
+
+def tanh_derivatives(x0: jnp.ndarray, order: int) -> list:
+    """[tanh(x0), tanh'(x0), ..., tanh^(order)(x0)] in closed form."""
+    t = jnp.tanh(x0)
+    u = 1.0 - t * t  # tanh'
+    ds = [t, u]
+    if order >= 2:
+        ds.append(-2.0 * t * u)  # tanh''
+    if order >= 3:
+        ds.append(u * (6.0 * t * t - 2.0))  # tanh'''
+    if order >= 4:
+        ds.append(t * u * (16.0 - 24.0 * t * t))  # tanh''''
+    return ds
+
+
+def sin_derivatives(x0: jnp.ndarray, order: int) -> list:
+    s, c = jnp.sin(x0), jnp.cos(x0)
+    cyc = [s, c, -s, -c]
+    return [cyc[k % 4] for k in range(order + 1)]
+
+
+def exp_derivatives(x0: jnp.ndarray, order: int) -> list:
+    e = jnp.exp(x0)
+    return [e] * (order + 1)
+
+
+def _faa_di_bruno_terms(ds: Sequence[jnp.ndarray], xs: Sequence[jnp.ndarray], k: int):
+    """Degree-k output coefficient of an elementwise map, *excluding* the
+    trivial-partition term d1 * xs[k] (which is split off so collapsed mode
+    can reuse the same code).  ``ds[m]`` = m-th derivative at x0 (broadcasts
+    against channels), ``xs[j-1]`` = degree-j input coefficient channels.
+
+    Formulas are the elementwise specialization of paper SSA for k <= 4.
+    """
+    x1 = xs[0]
+    if k == 1:
+        return None  # f1 = d1*x1 only: trivial partition only
+    if k == 2:
+        return ds[2] * x1 * x1
+    x2 = xs[1]
+    if k == 3:
+        return ds[3] * x1 * x1 * x1 + 3.0 * ds[2] * x1 * x2
+    x3 = xs[2]
+    if k == 4:
+        return (
+            ds[4] * x1 * x1 * x1 * x1
+            + 6.0 * ds[3] * x1 * x1 * x2
+            + 4.0 * ds[2] * x1 * x3
+            + 3.0 * ds[2] * x2 * x2
+        )
+    raise NotImplementedError(f"Faa di Bruno terms only implemented for k<=4, got {k}")
+
+
+def elementwise_std(jet: JetStd, deriv_fn: Callable) -> JetStd:
+    """Elementwise rule in standard mode (propagates all K*R channels)."""
+    K = jet.order
+    ds = deriv_fn(jet.x0, K)
+    ys = []
+    for k in range(1, K + 1):
+        yk = ds[1] * jet.xs[k - 1]
+        extra = _faa_di_bruno_terms(ds, jet.xs, k)
+        if extra is not None:
+            yk = yk + extra
+        ys.append(yk)
+    return JetStd(x0=ds[0], xs=tuple(ys))
+
+
+def elementwise_col(jet: JetCol, deriv_fn: Callable) -> JetCol:
+    """Elementwise rule in collapsed mode.
+
+    Degrees 1..K-1 propagate per direction as in standard mode.  The summed
+    degree-K channel picks up (i) the *linear* term d1 * xK_sum (eq. 6's
+    pulled-in sum) and (ii) the nonlinear partition terms summed over
+    directions — computed per direction then reduced, which is where the
+    R -> 1 saving happens for every subsequent node.
+    """
+    K = jet.order
+    ds = deriv_fn(jet.x0, K)
+    ys = []
+    for k in range(1, K):
+        yk = ds[1] * jet.xs[k - 1]
+        extra = _faa_di_bruno_terms(ds, jet.xs, k)
+        if extra is not None:
+            yk = yk + extra
+        ys.append(yk)
+    yK_sum = ds[1] * jet.xK_sum + _collapsed_nonlinear_terms(ds, jet.xs, K)
+    return JetCol(x0=ds[0], xs=tuple(ys), xK_sum=yK_sum)
+
+
+def _collapsed_nonlinear_terms(ds, xs, k):
+    """Direction-summed nonlinear Faa di Bruno terms for the collapsed
+    channel.  Perf (EXPERIMENTS.md SS-Perf L2): every derivative factor
+    d_m is direction-free, so each channel monomial is reduced over the
+    direction axis *before* the broadcast multiply — one [B, H] multiply
+    per term instead of R."""
+    x1 = xs[0]
+    s = lambda t: jnp.sum(t, axis=0)
+    if k == 2:
+        return ds[2] * s(x1 * x1)
+    x2 = xs[1]
+    if k == 3:
+        return ds[3] * s(x1 * x1 * x1) + 3.0 * ds[2] * s(x1 * x2)
+    x3 = xs[2]
+    if k == 4:
+        x1sq = x1 * x1
+        return (ds[4] * s(x1sq * x1sq) + 6.0 * ds[3] * s(x1sq * x2)
+                + ds[2] * (4.0 * s(x1 * x3) + 3.0 * s(x2 * x2)))
+    raise NotImplementedError(f"collapsed terms only implemented for k<=4, got {k}")
+
+
+def tanh_std(jet: JetStd) -> JetStd:
+    return elementwise_std(jet, tanh_derivatives)
+
+
+def tanh_col(jet: JetCol) -> JetCol:
+    return elementwise_col(jet, tanh_derivatives)
+
+
+# ---------------------------------------------------------------------------
+# Extraction
+# ---------------------------------------------------------------------------
+
+
+def highest_sum_std(jet: JetStd) -> jnp.ndarray:
+    """Standard mode: *propagate then sum* (paper fig. 2 left)."""
+    return jnp.sum(jet.xs[-1], axis=0)
+
+
+def highest_sum_col(jet: JetCol) -> jnp.ndarray:
+    """Collapsed mode: the sum was propagated directly (paper fig. 2 right)."""
+    return jet.xK_sum
+
+
+# ---------------------------------------------------------------------------
+# Whole-MLP propagation (the paper's benchmark network shape)
+# ---------------------------------------------------------------------------
+
+
+def mlp_jet(params: Sequence, jet, *, collapsed: bool, activation: str = "tanh",
+            act_fn: Optional[Callable] = None):
+    """Push a jet bundle through a tanh MLP ``[(W, b), ...]``.
+
+    The final layer is linear (no activation), matching the paper's
+    D -> 768 -> 768 -> 512 -> 512 -> 1 benchmark architecture.
+
+    ``act_fn(jet) -> jet`` overrides the activation jet rule — used to swap
+    in the fused Pallas kernel (L1) for the collapsed path.
+    """
+    deriv = {"tanh": tanh_derivatives, "sin": sin_derivatives,
+             "exp": exp_derivatives}[activation]
+    lin = linear_col if collapsed else linear_std
+    elw = elementwise_col if collapsed else elementwise_std
+    n = len(params)
+    for i, (W, b) in enumerate(params):
+        jet = lin(jet, W, b)
+        if i < n - 1:
+            jet = act_fn(jet) if act_fn is not None else elw(jet, deriv)
+    return jet

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests import the build-path package `compile` directly.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+# Float64 for oracle comparisons; kernels themselves run f32 in production.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,118 @@
+"""AOT path: model plumbing, PINN step semantics, HLO-text lowering."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, pinn
+from compile.model import (flatten_params, init_mlp, layer_dims, mlp_apply,
+                           mlp_apply_flat, num_params, unflatten_params)
+
+
+def test_flatten_roundtrip():
+    params = init_mlp(jax.random.PRNGKey(0), 5, (8, 3, 1))
+    theta = flatten_params(params)
+    assert theta.shape == (num_params(5, (8, 3, 1)),)
+    back = unflatten_params(theta, 5, (8, 3, 1))
+    for (W0, b0), (W1, b1) in zip(params, back):
+        np.testing.assert_array_equal(W0, W1)
+        np.testing.assert_array_equal(b0, b1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 5))
+    np.testing.assert_allclose(mlp_apply(params, x),
+                               mlp_apply_flat(theta, x, 5, (8, 3, 1)))
+
+
+def test_layer_dims_layout_matches_rust():
+    # rust glorot_theta walks [(fi, fo)] exactly in this order
+    assert layer_dims(4, (8, 3)) == [(4, 8), (8, 3)]
+    assert num_params(4, (8, 3)) == 4 * 8 + 8 + 8 * 3 + 3
+
+
+def test_pinn_source_term_is_laplacian_of_solution():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.uniform(key, (6, 2), jnp.float64)
+
+    def u(xi):
+        return pinn.exact_solution(xi[None, :])[0, 0]
+
+    lap = jnp.array([jnp.trace(jax.hessian(u)(xi)) for xi in x])
+    np.testing.assert_allclose(-lap, pinn.source_term(x)[:, 0], rtol=1e-9)
+
+
+def test_pinn_step_reduces_loss():
+    in_dim, widths = 2, [16, 16, 1]
+    step = jax.jit(pinn.make_train_step(in_dim, widths, lr=2e-4))
+    theta = flatten_params(init_mlp(jax.random.PRNGKey(3), in_dim, widths))
+    theta = theta.astype(jnp.float64)
+    key = jax.random.PRNGKey(4)
+    losses = []
+    for i in range(120):
+        key, k1, k2 = jax.random.split(key, 3)
+        x_int = jax.random.uniform(k1, (64, 2), jnp.float64)
+        x_bnd = jax.random.uniform(k2, (16, 2), jnp.float64).at[:, 1].set(0.0)
+        theta, loss = step(theta, x_int, x_bnd)
+        losses.append(float(loss))
+    first = sum(losses[:10]) / 10
+    last = sum(losses[-10:]) / 10
+    assert last < first, f"mean loss did not drop: {first} -> {last}"
+
+
+def test_hlo_text_lowering_roundtrips():
+    """to_hlo_text output is valid HLO text with the expected entry shapes."""
+    def f(a, b):
+        return (jnp.tanh(a) @ b,)
+
+    spec = jax.ShapeDtypeStruct((2, 3), jnp.float32)
+    spec2 = jax.ShapeDtypeStruct((3, 4), jnp.float32)
+    lowered = jax.jit(f).lower(spec, spec2)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "f32[2,3]" in text and "f32[3,4]" in text
+    assert "tanh" in text and "dot" in text
+
+
+def test_manifest_written(tmp_path):
+    """The emitter writes a parseable manifest with correct specs."""
+    em = aot.Emitter(str(tmp_path), only=None)
+    cfg = dict(lap_dim=3, bih_dim=2, widths=[4, 1], batches=[1, 2],
+               stoch_batch=1, samples=[2])
+    aot.emit_operator_matrix(em, cfg)
+    em.write_manifest("unit-test")
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["preset"] == "unit-test"
+    arts = manifest["artifacts"]
+    # 3 ops x 3 methods x (2 exact + 1 stochastic) = 27
+    assert len(arts) == 27
+    by_name = {a["name"]: a for a in arts}
+    lap = by_name["laplacian_collapsed_exact_b2"]
+    assert lap["theta_len"] == 3 * 4 + 4 + 4 * 1 + 1
+    assert lap["inputs"][1]["shape"] == [2, 3]
+    assert os.path.exists(tmp_path / lap["file"])
+    wl = by_name["weighted_laplacian_nested_exact_b1"]
+    assert wl["inputs"][2]["name"] == "sigma"
+
+
+def test_filtered_rebuild_merges_manifest(tmp_path):
+    """`--only` rebuilds must not drop the other artifacts (regression)."""
+    cfg = dict(lap_dim=3, bih_dim=2, widths=[4, 1], batches=[1],
+               stoch_batch=1, samples=[2])
+    em = aot.Emitter(str(tmp_path), only=None)
+    aot.emit_operator_matrix(em, cfg)
+    em.write_manifest("unit-test")
+    full = json.loads((tmp_path / "manifest.json").read_text())
+    n_full = len(full["artifacts"])
+
+    # Filtered rebuild of just the laplacian cells.
+    em2 = aot.Emitter(str(tmp_path), only="laplacian_collapsed")
+    aot.emit_operator_matrix(em2, cfg)
+    em2.write_manifest("ignored")
+    merged = json.loads((tmp_path / "manifest.json").read_text())
+    assert len(merged["artifacts"]) == n_full
+    assert merged["preset"] == "unit-test"
+    names = [a["name"] for a in merged["artifacts"]]
+    assert len(names) == len(set(names)), "no duplicate entries"

@@ -1,0 +1,121 @@
+"""Griewank interpolation: γ coefficients and the biharmonic plan."""
+
+import math
+from fractions import Fraction
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.interpolation import (BiharmonicPlan, compositions, gamma,
+                                   gamma_family, gen_binomial)
+
+settings.register_profile("interp", deadline=None, max_examples=20)
+settings.load_profile("interp")
+
+
+def test_gamma_fig4_values():
+    fam = gamma_family((2, 2))
+    assert fam[(4, 0)] == fam[(0, 4)]
+    assert fam[(3, 1)] == fam[(1, 3)]
+    # pinned values (cross-checked against the Rust implementation)
+    assert fam[(4, 0)] == Fraction(13, 192)
+    assert fam[(3, 1)] == Fraction(-1, 3)
+    assert fam[(2, 2)] == Fraction(5, 8)
+
+
+@given(st.integers(1, 5))
+def test_gamma_single_direction_identity(K):
+    # I = 1: gamma_{(K),(K)} = K!/K^K so that eq. 11 is the identity.
+    assert gamma((K,), (K,)) == Fraction(math.factorial(K), K**K)
+
+
+def test_gen_binomial():
+    assert gen_binomial(Fraction(5), 2) == Fraction(10)
+    assert gen_binomial(Fraction(7, 2), 2) == Fraction(35, 8)
+    assert gen_binomial(Fraction(3), 0) == 1
+
+
+@given(st.integers(1, 6), st.integers(1, 3))
+def test_compositions_complete(total, parts):
+    comps = list(compositions(total, parts))
+    assert all(sum(j) == total for j in comps)
+    assert len(set(comps)) == len(comps)
+    assert len(comps) == math.comb(total + parts - 1, parts - 1)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 3))
+def test_interpolation_identity_quartic(seed, D):
+    """eq. 11 for K=4, i=(2,2): mixed partials from blended 4-jets, checked
+    on a random polynomial with analytically known 4th derivatives."""
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (D, D), jnp.float64)
+
+    def f(x):
+        q = x @ A @ x
+        return q * q  # quartic: d4 along (u,u,v,v) is nonzero
+
+    def d4(x, u, v):
+        g = lambda a, b, c, d: jax.jvp(
+            lambda y: jax.jvp(
+                lambda z: jax.jvp(
+                    lambda w: jax.jvp(f, (w,), (d,))[1], (z,), (c,))[1],
+                (y,), (b,))[1],
+            (x,), (a,))[1]
+        return g(u, u, v, v)
+
+    x0 = jax.random.normal(jax.random.split(key)[0], (D,), jnp.float64)
+    e = jnp.eye(D, dtype=jnp.float64)
+    d1, d2 = 0, D - 1
+    truth = d4(x0, e[d1], e[d2])
+
+    # RHS of eq. 11: sum over j of gamma/24 * <d4 f, (j1*e1+j2*e2)^4>
+    acc = 0.0
+    for j in compositions(4, 2):
+        g = float(gamma((2, 2), j))
+        w = j[0] * e[d1] + j[1] * e[d2]
+        acc += g / 24.0 * d4(x0, w, w)
+    np.testing.assert_allclose(acc, truth, rtol=1e-8)
+
+
+@given(st.integers(2, 6))
+def test_biharmonic_plan_counts(D):
+    plan = BiharmonicPlan(D)
+    a, b, c = plan.num_jets()
+    assert (a, b, c) == (D, D * (D - 1), D * (D - 1) // 2)
+    assert plan.directions_A().shape == (D, D)
+    assert plan.directions_B().shape == (D * (D - 1), D)
+    assert plan.directions_C().shape == (D * (D - 1) // 2, D)
+    # paper §3.3 vector counts
+    assert plan.vectors_standard() == 6 * D * D - 2 * D + 1
+    assert plan.vectors_collapsed() == (9 * D * D - 3 * D) // 2 + 4
+
+
+def test_plan_weights_finite_and_reproduce_d2():
+    """Plan applied to a known quartic gives Δ²."""
+    D = 2
+    plan = BiharmonicPlan(D)
+
+    # f(x, y) = x^4 + y^4 + x^2 y^2: Δ²f = 24 + 24 + 8 = 56 everywhere.
+    def f(x):
+        return x[0] ** 4 + x[1] ** 4 + x[0] ** 2 * x[1] ** 2
+
+    def d4_dir(x, w):
+        g = lambda y: jax.jvp(
+            lambda z: jax.jvp(
+                lambda q: jax.jvp(
+                    lambda r: jax.jvp(f, (r,), (w,))[1], (q,), (w,))[1],
+                (z,), (w,))[1],
+            (y,), (w,))[1]
+        return g(x)
+
+    x0 = jnp.array([0.3, -0.7], dtype=jnp.float64)
+    total = 0.0
+    for dirs, wgt in ((plan.directions_A(), plan.w_A),
+                      (plan.directions_B(), plan.w_B),
+                      (plan.directions_C(), plan.w_C)):
+        for row in np.asarray(dirs, dtype=np.float64):
+            total += wgt * d4_dir(x0, jnp.asarray(row))
+    np.testing.assert_allclose(total, 56.0, rtol=1e-9)

@@ -1,0 +1,121 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (the core kernel-correctness
+signal), with hypothesis sweeping shapes, dtypes and block sizes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import jet_tanh, ref
+
+settings.register_profile("kernels", deadline=None, max_examples=20)
+settings.load_profile("kernels")
+
+shapes = st.tuples(
+    st.integers(min_value=1, max_value=6),   # R
+    st.integers(min_value=1, max_value=9),   # B
+    st.integers(min_value=1, max_value=160), # H
+)
+blocks = st.tuples(
+    st.integers(min_value=1, max_value=8),
+    st.integers(min_value=8, max_value=128),
+)
+dtypes = st.sampled_from([jnp.float32, jnp.float64])
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+def tol(dtype):
+    return 1e-5 if dtype == jnp.float32 else 1e-12
+
+
+@given(st.integers(0, 2**31 - 1), shapes, blocks, dtypes)
+def test_jet2_col_matches_ref(seed, shape, block, dtype):
+    R, B, H = shape
+    bB, bH = block
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x0 = rand(keys[0], (B, H), dtype)
+    x1 = rand(keys[1], (R, B, H), dtype)
+    x2s = rand(keys[2], (B, H), dtype)
+    out = jet_tanh.tanh_jet2_col(x0, x1, x2s, block_b=bB, block_h=bH)
+    expect = ref.tanh_jet2_col_ref(x0, x1, x2s)
+    for o, e in zip(out, expect):
+        np.testing.assert_allclose(o, e, atol=tol(dtype), rtol=tol(dtype))
+
+
+@given(st.integers(0, 2**31 - 1), shapes, dtypes)
+def test_jet2_std_matches_ref(seed, shape, dtype):
+    R, B, H = shape
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x0 = rand(keys[0], (B, H), dtype)
+    x1 = rand(keys[1], (R, B, H), dtype)
+    x2 = rand(keys[2], (R, B, H), dtype)
+    out = jet_tanh.tanh_jet2_std(x0, x1, x2)
+    expect = ref.tanh_jet2_std_ref(x0, x1, x2)
+    for o, e in zip(out, expect):
+        np.testing.assert_allclose(o, e, atol=tol(dtype), rtol=tol(dtype))
+
+
+@given(st.integers(0, 2**31 - 1), shapes, dtypes)
+def test_jet4_col_matches_ref(seed, shape, dtype):
+    R, B, H = shape
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x0 = rand(keys[0], (B, H), dtype)
+    x1, x2, x3 = (rand(k, (R, B, H), dtype) for k in keys[1:4])
+    x4s = rand(keys[4], (B, H), dtype)
+    out = jet_tanh.tanh_jet4_col(x0, x1, x2, x3, x4s)
+    expect = ref.tanh_jet4_col_ref(x0, x1, x2, x3, x4s)
+    for o, e in zip(out, expect):
+        np.testing.assert_allclose(o, e, atol=10 * tol(dtype), rtol=10 * tol(dtype))
+
+
+def test_kernel_composes_with_jit():
+    """The kernel must lower inside jit (the AOT path depends on it)."""
+    R, B, H = 3, 4, 32
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    x0 = rand(keys[0], (B, H), jnp.float32)
+    x1 = rand(keys[1], (R, B, H), jnp.float32)
+    x2s = rand(keys[2], (B, H), jnp.float32)
+    jitted = jax.jit(lambda a, b, c: jet_tanh.tanh_jet2_col(a, b, c))
+    out = jitted(x0, x1, x2s)
+    expect = ref.tanh_jet2_col_ref(x0, x1, x2s)
+    for o, e in zip(out, expect):
+        np.testing.assert_allclose(o, e, atol=1e-5, rtol=1e-5)
+
+
+def test_collapsed_channel_is_sum_of_standard():
+    """Collapsed kernel output == sum over directions of standard output."""
+    R, B, H = 5, 3, 16
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    x0 = rand(keys[0], (B, H), jnp.float64)
+    x1 = rand(keys[1], (R, B, H), jnp.float64)
+    x2 = rand(keys[2], (R, B, H), jnp.float64)
+    _, _, f2 = jet_tanh.tanh_jet2_std(x0, x1, x2)
+    _, _, f2s = jet_tanh.tanh_jet2_col(x0, x1, jnp.sum(x2, axis=0))
+    np.testing.assert_allclose(jnp.sum(f2, axis=0), f2s, atol=1e-10)
+
+
+def test_vmem_model_counts_channels():
+    """Analytical VMEM footprint: collapsing removes (R-1) channel tiles."""
+    std = jet_tanh.vmem_bytes(2, 8, 8, 128, collapsed=False)
+    col = jet_tanh.vmem_bytes(2, 8, 8, 128, collapsed=True)
+    tile = 8 * 128 * 4
+    assert std - col == 2 * 7 * tile  # (1+2R) - (1+R+1) = R-1 per side
+    assert col == 2 * (1 + 8 + 1) * tile
+
+
+@pytest.mark.parametrize("B,H", [(1, 1), (7, 33), (8, 128)])
+def test_awkward_shapes(B, H):
+    """Non-divisible shapes must still tile correctly."""
+    R = 2
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    x0 = rand(keys[0], (B, H), jnp.float32)
+    x1 = rand(keys[1], (R, B, H), jnp.float32)
+    x2s = rand(keys[2], (B, H), jnp.float32)
+    out = jet_tanh.tanh_jet2_col(x0, x1, x2s)
+    expect = ref.tanh_jet2_col_ref(x0, x1, x2s)
+    for o, e in zip(out, expect):
+        np.testing.assert_allclose(o, e, atol=1e-5, rtol=1e-5)

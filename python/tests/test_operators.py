@@ -1,0 +1,120 @@
+"""Operator builders vs autodiff ground truth (jax.hessian oracles)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import operators, taylor
+from compile.model import init_mlp, mlp_apply
+
+settings.register_profile("ops", deadline=None, max_examples=10)
+settings.load_profile("ops")
+
+
+def make_net(seed, D, widths=(8, 7, 1)):
+    params = init_mlp(jax.random.PRNGKey(seed), D, widths)
+    return [(W.astype(jnp.float64), b.astype(jnp.float64)) for W, b in params]
+
+
+def scalar_fn(params):
+    def f(xi):
+        return mlp_apply(params, xi[None, :])[0, 0]
+    return f
+
+
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(1, 3))
+def test_laplacian_all_methods_match_hessian_trace(seed, D, B):
+    params = make_net(seed, D)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, D), jnp.float64)
+    truth = jnp.array([jnp.trace(jax.hessian(scalar_fn(params))(xi)) for xi in x])
+    for method in ("nested", "standard", "collapsed"):
+        f = operators.make_operator("laplacian", method, "exact")
+        f0, lap = f(params, x)
+        np.testing.assert_allclose(lap[:, 0], truth, rtol=1e-8, atol=1e-9,
+                                   err_msg=method)
+        np.testing.assert_allclose(f0, mlp_apply(params, x), atol=1e-12)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 4))
+def test_weighted_laplacian_matches_weighted_trace(seed, D):
+    params = make_net(seed, D)
+    key = jax.random.PRNGKey(seed + 2)
+    x = jax.random.normal(key, (2, D), jnp.float64)
+    sigma = jax.random.normal(jax.random.split(key)[0], (D, D), jnp.float64)
+    Dmat = sigma @ sigma.T
+    truth = jnp.array([
+        jnp.trace(Dmat @ jax.hessian(scalar_fn(params))(xi)) for xi in x
+    ])
+    for method in ("nested", "standard", "collapsed"):
+        f = operators.make_operator("weighted_laplacian", method, "exact")
+        _, wl = f(params, x, sigma)
+        np.testing.assert_allclose(wl[:, 0], truth, rtol=1e-7, atol=1e-8,
+                                   err_msg=method)
+
+
+@pytest.mark.parametrize("method", ["nested", "standard", "collapsed"])
+def test_biharmonic_matches_hessian_of_laplacian(method):
+    D, B = 3, 2
+    params = make_net(3, D)
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, D), jnp.float64)
+
+    def lap(xi):
+        return jnp.trace(jax.hessian(scalar_fn(params))(xi))
+
+    truth = jnp.array([jnp.trace(jax.hessian(lap)(xi)) for xi in x])
+    f = operators.make_operator("biharmonic", method, "exact")
+    _, bih = f(params, x)
+    np.testing.assert_allclose(bih[:, 0], truth, rtol=1e-6, atol=1e-8)
+
+
+@pytest.mark.parametrize("op,order", [("laplacian", 2), ("biharmonic", 4)])
+def test_stochastic_estimators_are_unbiased(op, order):
+    """Mean over many Rademacher draws converges to the exact operator."""
+    D = 3
+    params = make_net(5, D, widths=(6, 1))
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, D), jnp.float64)
+    exact = operators.make_operator(op, "collapsed", "exact")
+    _, target = exact(params, x)
+    est_fn = operators.make_operator(op, "collapsed", "stochastic")
+
+    S, trials = 8, 600
+    key = jax.random.PRNGKey(7)
+    acc = 0.0
+    for t in range(trials):
+        key, k = jax.random.split(key)
+        if order == 4:  # 4th-order estimator needs Gaussian moments
+            dirs = jax.random.normal(k, (S, D), jnp.float64)
+        else:
+            dirs = jax.random.rademacher(k, (S, D)).astype(jnp.float64)
+        _, est = est_fn(params, x, dirs)
+        acc += est[0, 0] / trials
+    assert abs(acc - target[0, 0]) < 0.15 * (1.0 + abs(target[0, 0])), \
+        f"stochastic mean {acc} vs exact {target[0, 0]}"
+
+
+def test_stochastic_collapsed_equals_standard_per_draw():
+    """For identical directions the two Taylor modes agree exactly."""
+    D = 4
+    params = make_net(8, D)
+    x = jax.random.normal(jax.random.PRNGKey(9), (3, D), jnp.float64)
+    dirs = jax.random.normal(jax.random.PRNGKey(10), (6, D), jnp.float64)
+    for op in ("laplacian", "biharmonic"):
+        f_std = operators.make_operator(op, "standard", "stochastic")
+        f_col = operators.make_operator(op, "collapsed", "stochastic")
+        _, a = f_std(params, x, dirs)
+        _, b = f_col(params, x, dirs)
+        np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-10, err_msg=op)
+
+
+def test_kernel_act_fn_through_operators():
+    from compile.kernels import jet_tanh
+
+    D = 4
+    params = init_mlp(jax.random.PRNGKey(11), D, (16, 8, 1))
+    x = jax.random.normal(jax.random.PRNGKey(12), (4, D), jnp.float32)
+    _, plain = operators.laplacian_taylor(params, x, collapsed=True)
+    _, kern = operators.laplacian_taylor(params, x, collapsed=True,
+                                         act_fn=jet_tanh.col_act_fn)
+    np.testing.assert_allclose(plain, kern, atol=1e-4, rtol=1e-4)

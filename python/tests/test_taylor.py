@@ -1,0 +1,127 @@
+"""L2 Taylor-mode library: propagation rules vs jax oracles.
+
+The central invariant (paper eq. 6/D14): collapsed propagation of the
+summed highest coefficient equals standard propagation followed by
+summation — at every order, for every primitive, with arbitrary (not just
+zero) higher-order seeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import taylor
+from compile.model import init_mlp
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def rand(key, shape):
+    return jax.random.normal(key, shape, dtype=jnp.float64)
+
+
+dims = st.integers(min_value=1, max_value=5)
+batches = st.integers(min_value=1, max_value=4)
+n_dirs = st.integers(min_value=1, max_value=6)
+orders = st.sampled_from([2, 3, 4])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@given(seeds, batches, dims, n_dirs, orders)
+def test_collapse_identity_elementwise(seed, B, D, R, K):
+    """Summed K-th coefficient: collapsed == standard, nonzero seeds."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), K + 1)
+    x0 = rand(keys[0], (B, D))
+    xs = tuple(rand(k, (R, B, D)) for k in keys[1:])
+    std = taylor.JetStd(x0=x0, xs=xs)
+    col = taylor.JetCol(x0=x0, xs=xs[:-1], xK_sum=jnp.sum(xs[-1], axis=0))
+    out_s = taylor.elementwise_std(std, taylor.tanh_derivatives)
+    out_c = taylor.elementwise_col(col, taylor.tanh_derivatives)
+    assert jnp.allclose(taylor.highest_sum_std(out_s),
+                        taylor.highest_sum_col(out_c), atol=1e-10)
+    for k in range(K - 1):
+        assert jnp.allclose(out_s.xs[k], out_c.xs[k], atol=1e-12)
+
+
+@given(seeds, orders)
+def test_collapse_identity_through_mlp(seed, K):
+    """Whole-MLP collapse identity along random directions."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = [(W.astype(jnp.float64), b.astype(jnp.float64))
+              for W, b in init_mlp(k1, 3, (8, 6, 1))]
+    x0 = rand(k2, (2, 3))
+    dirs = rand(k3, (4, 2, 3))
+    s = taylor.mlp_jet(params, taylor.seed_std(x0, dirs, K), collapsed=False)
+    c = taylor.mlp_jet(params, taylor.seed_col(x0, dirs, K), collapsed=True)
+    assert jnp.allclose(taylor.highest_sum_std(s),
+                        taylor.highest_sum_col(c), rtol=1e-9, atol=1e-9)
+    assert jnp.allclose(s.x0, c.x0)
+
+
+@pytest.mark.parametrize("K", [2, 3, 4])
+def test_jet_matches_jax_experimental_jet(K):
+    """Our standard mode agrees with jax.experimental.jet coefficient-wise."""
+    from jax.experimental import jet as jax_jet
+
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = [(W.astype(jnp.float64), b.astype(jnp.float64))
+              for W, b in init_mlp(k1, 3, (7, 5, 1))]
+    x0 = rand(k2, (1, 3))[0]
+    v = rand(k3, (3,))
+
+    def f(x):
+        h = x[None, :]
+        for i, (W, b) in enumerate(params):
+            h = h @ W + b
+            if i < len(params) - 1:
+                h = jnp.tanh(h)
+        return h[0, 0]
+
+    series = [v] + [jnp.zeros_like(v) for _ in range(K - 1)]
+    _, coeffs = jax_jet.jet(f, (x0,), (series,))
+
+    jet_in = taylor.seed_std(x0[None, :], v[None, None, :], K)
+    out = taylor.mlp_jet(params, jet_in, collapsed=False)
+    for k in range(K):
+        assert jnp.allclose(out.xs[k][0, 0, 0], coeffs[k], rtol=1e-8, atol=1e-10), k
+
+
+def test_tanh_derivatives_vs_autodiff():
+    x = jnp.linspace(-2, 2, 7, dtype=jnp.float64)
+    ds = taylor.tanh_derivatives(x, 4)
+    # nested grads of scalar tanh as the oracle
+    g1 = jax.vmap(jax.grad(jnp.tanh))(x)
+    g2 = jax.vmap(jax.grad(jax.grad(jnp.tanh)))(x)
+    g3 = jax.vmap(jax.grad(jax.grad(jax.grad(jnp.tanh))))(x)
+    g4 = jax.vmap(jax.grad(jax.grad(jax.grad(jax.grad(jnp.tanh)))))(x)
+    assert jnp.allclose(ds[1], g1, atol=1e-12)
+    assert jnp.allclose(ds[2], g2, atol=1e-12)
+    assert jnp.allclose(ds[3], g3, atol=1e-11)
+    assert jnp.allclose(ds[4], g4, atol=1e-11)
+
+
+def test_seed_shapes_and_vector_counts():
+    x0 = jnp.zeros((3, 4))
+    dirs = jnp.eye(4)
+    std = taylor.seed_std(x0, dirs, 2)
+    col = taylor.seed_col(x0, dirs, 2)
+    # standard: 1 + K*R channels; collapsed: 1 + (K-1)*R + 1
+    assert len(std.xs) == 2 and std.xs[0].shape == (4, 3, 4)
+    assert len(col.xs) == 1 and col.xK_sum.shape == (3, 4)
+    assert std.num_dirs == 4 and col.order == 2
+
+
+@given(seeds)
+def test_sin_exp_families_consistent(seed):
+    key = jax.random.PRNGKey(seed)
+    x = rand(key, (5,))
+    ds = taylor.sin_derivatives(x, 4)
+    assert jnp.allclose(ds[0], jnp.sin(x))
+    assert jnp.allclose(ds[2], -jnp.sin(x))
+    de = taylor.exp_derivatives(x, 3)
+    for d in de:
+        assert jnp.allclose(d, jnp.exp(x))

@@ -1,0 +1,8 @@
+//! Coordinator throughput/latency under concurrent load.
+//! `cargo bench --bench coordinator_throughput`.
+fn main() -> anyhow::Result<()> {
+    let reg = ctaylor::runtime::Registry::load_default()?;
+    let n = std::env::var("CTAYLOR_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
+    println!("{}", ctaylor::bench::run_coordinator_bench(reg, n)?);
+    Ok(())
+}

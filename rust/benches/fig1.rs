@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 1: exact-Laplacian runtime vs batch, three
+//! implementations.  `cargo bench --bench fig1`.
+fn main() -> anyhow::Result<()> {
+    let reg = ctaylor::runtime::Registry::load_default()?;
+    let reps = std::env::var("CTAYLOR_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
+    println!("{}", ctaylor::bench::run_fig1(&reg, reps)?);
+    Ok(())
+}

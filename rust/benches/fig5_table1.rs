@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 5 + Table 1: the full operator × method grid of
+//! per-datum / per-sample slopes.  `cargo bench --bench fig5_table1`.
+fn main() -> anyhow::Result<()> {
+    let reg = ctaylor::runtime::Registry::load_default()?;
+    let reps = std::env::var("CTAYLOR_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    println!("{}", ctaylor::bench::run_fig5_table1(&reg, reps)?);
+    Ok(())
+}

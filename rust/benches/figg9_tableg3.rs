@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. G9 + Table G3: Laplacian and
+//! biharmonic-as-nested-Laplacians.  `cargo bench --bench figg9_tableg3`.
+fn main() -> anyhow::Result<()> {
+    let reg = ctaylor::runtime::Registry::load_default()?;
+    let reps = std::env::var("CTAYLOR_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    println!("{}", ctaylor::bench::run_figg9_tableg3(&reg, reps)?);
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Native-engine ablation: nested vs standard vs collapsed on the in-Rust
+//! engines plus the §C graph-rewrite effect.  `cargo bench --bench native_ablation`.
+fn main() -> anyhow::Result<()> {
+    let reps = std::env::var("CTAYLOR_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
+    println!("{}", ctaylor::bench::run_native_ablation(reps)?);
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Table F2: theoretical Δ-vector ratios vs measured
+//! slope ratios.  `cargo bench --bench table_f2`.
+fn main() -> anyhow::Result<()> {
+    let reg = ctaylor::runtime::Registry::load_default()?;
+    let reps = std::env::var("CTAYLOR_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    println!("{}", ctaylor::bench::run_table_f2(&reg, reps)?);
+    Ok(())
+}

@@ -1,0 +1,379 @@
+//! Benchmark harness: regenerate every table and figure of the paper's
+//! evaluation on this substrate (DESIGN.md §4 experiment index).
+//!
+//! Each `run_*` function measures, renders a paper-style table to stdout
+//! and persists raw numbers under `bench_results/` so EXPERIMENTS.md can
+//! cite them.  Absolute numbers differ from the paper's RTX 6000; the
+//! claims under test are the *ratios* (who wins, by what factor).
+
+pub mod report;
+pub mod sweep;
+pub mod workload;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{RouteKey, Service, ServiceConfig};
+use crate::runtime::{Registry, RuntimeClient};
+use crate::taylor::count;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use report::{jobj, save_json, save_text, table, with_ratio};
+use sweep::{run_sweep, Sweep};
+
+pub const METHODS: [&str; 3] = ["nested", "standard", "collapsed"];
+pub const OPS: [&str; 3] = ["laplacian", "weighted_laplacian", "biharmonic"];
+
+fn results_dir() -> PathBuf {
+    std::env::var("CTAYLOR_RESULTS").map(PathBuf::from).unwrap_or_else(|_| "bench_results".into())
+}
+
+/// Fig. 1: Laplacian runtime vs batch size for the three implementations.
+pub fn run_fig1(registry: &Registry, reps: usize) -> Result<String> {
+    let client = RuntimeClient::cpu()?;
+    let mut rows = Vec::new();
+    let mut sweeps = Vec::new();
+    for method in METHODS {
+        let s = run_sweep(&client, registry, "laplacian", method, "exact", reps, 1)?;
+        for p in &s.points {
+            rows.push(vec![
+                method.to_string(),
+                format!("{}", p.x as usize),
+                format!("{:.3}", p.time_s * 1e3),
+            ]);
+        }
+        sweeps.push(s);
+    }
+    let mut out = String::from("# Fig. 1 — exact Laplacian runtime vs batch (ms)\n\n");
+    out.push_str(&table(&["method", "batch", "time [ms]"], &rows));
+    out.push_str("\nper-datum slope [ms]:\n");
+    let base = sweeps[0].ms_per_x();
+    for s in &sweeps {
+        out.push_str(&format!("  {:<10} {}\n", s.method, with_ratio(s.ms_per_x(), base)));
+    }
+    let j = Json::arr(sweeps.iter().map(sweep_json));
+    save_json(&results_dir(), "fig1", &j)?;
+    save_text(&results_dir(), "fig1", &out)?;
+    Ok(out)
+}
+
+fn sweep_json(s: &Sweep) -> Json {
+    Json::obj(vec![
+        ("op", Json::str(&s.op)),
+        ("method", Json::str(&s.method)),
+        ("mode", Json::str(&s.mode)),
+        ("ms_per_x", Json::num(s.ms_per_x())),
+        ("mib_diff_per_x", Json::num(s.mib_diff_per_x())),
+        ("mib_nondiff_per_x", Json::num(s.mib_nondiff_per_x())),
+        (
+            "points",
+            Json::arr(s.points.iter().map(|p| {
+                jobj(&[
+                    ("x", p.x),
+                    ("time_s", p.time_s),
+                    ("mem_diff", p.mem_diff),
+                    ("mem_nondiff", p.mem_nondiff),
+                    ("flops", p.flops),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// Fig. 5 + Table 1: the full grid — per-datum (exact) and per-sample
+/// (stochastic) slopes of runtime and both memory proxies, for all three
+/// operators × three implementations.
+pub fn run_fig5_table1(registry: &Registry, reps: usize) -> Result<String> {
+    let client = RuntimeClient::cpu()?;
+    let mut all: Vec<Sweep> = Vec::new();
+    for mode in ["exact", "stochastic"] {
+        for op in OPS {
+            for method in METHODS {
+                all.push(run_sweep(&client, registry, op, method, mode, reps, 2)?);
+            }
+        }
+    }
+    let get = |op: &str, method: &str, mode: &str| -> &Sweep {
+        all.iter()
+            .find(|s| s.op == op && s.method == method && s.mode == mode)
+            .unwrap()
+    };
+
+    let mut out = String::from(
+        "# Table 1 — per-datum (exact) / per-sample (stochastic) slopes\n\n",
+    );
+    for mode in ["exact", "stochastic"] {
+        for (metric, f) in [
+            ("Time [ms]", &(|s: &Sweep| s.ms_per_x()) as &dyn Fn(&Sweep) -> f64),
+            ("Mem diff [MiB]", &|s: &Sweep| s.mib_diff_per_x()),
+            ("Mem non-diff [MiB]", &|s: &Sweep| s.mib_nondiff_per_x()),
+        ] {
+            let mut rows = Vec::new();
+            for method in METHODS {
+                let mut row = vec![mode.to_string(), metric.to_string(), method.to_string()];
+                for op in OPS {
+                    let s = get(op, method, mode);
+                    let base = f(get(op, "nested", mode));
+                    row.push(with_ratio(f(s), base));
+                }
+                rows.push(row);
+            }
+            out.push_str(&table(
+                &["mode", "metric", "implementation", "Laplacian", "Weighted Laplacian", "Biharmonic"],
+                &rows,
+            ));
+            out.push('\n');
+        }
+    }
+    let j = Json::arr(all.iter().map(sweep_json));
+    save_json(&results_dir(), "fig5_table1", &j)?;
+    save_text(&results_dir(), "table1", &out)?;
+    Ok(out)
+}
+
+/// Table F2: theoretical Δ-vector ratios vs the measured slope ratios.
+pub fn run_table_f2(registry: &Registry, reps: usize) -> Result<String> {
+    let client = RuntimeClient::cpu()?;
+    // Dims come from the manifest (preset-dependent).
+    let lap_dim = registry
+        .select("laplacian", "collapsed", "exact")
+        .first()
+        .map(|a| a.dim)
+        .unwrap_or(16);
+    let bih_dim = registry
+        .select("biharmonic", "collapsed", "exact")
+        .first()
+        .map(|a| a.dim)
+        .unwrap_or(5);
+
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for (mode, ops) in [
+        ("exact", vec![("laplacian", lap_dim), ("weighted_laplacian", lap_dim), ("biharmonic", bih_dim)]),
+        ("stochastic", vec![("laplacian", lap_dim), ("weighted_laplacian", lap_dim), ("biharmonic", bih_dim)]),
+    ] {
+        for (op, dim) in ops {
+            let theory = match (mode, op) {
+                ("exact", "biharmonic") => count::exact_ratio_biharmonic(dim),
+                ("exact", _) => count::exact_ratio_laplacian(dim),
+                (_, "biharmonic") => count::stochastic_ratio(4),
+                _ => count::stochastic_ratio(2),
+            };
+            let s_std = run_sweep(&client, registry, op, "standard", mode, reps, 3)?;
+            let s_col = run_sweep(&client, registry, op, "collapsed", mode, reps, 3)?;
+            let time_ratio = s_col.ms_per_x() / s_std.ms_per_x();
+            let mem_ratio = s_col.mib_diff_per_x() / s_std.mib_diff_per_x();
+            rows.push(vec![
+                mode.to_string(),
+                format!("{op} (D={dim})"),
+                format!("{theory:.2}"),
+                format!("{time_ratio:.2}"),
+                format!("{mem_ratio:.2}"),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("mode", Json::str(mode)),
+                ("op", Json::str(op)),
+                ("dim", Json::num(dim as f64)),
+                ("theory", Json::num(theory)),
+                ("time_ratio", Json::num(time_ratio)),
+                ("mem_ratio", Json::num(mem_ratio)),
+            ]));
+        }
+    }
+    let mut out =
+        String::from("# Table F2 — theoretical vs empirical collapsed/standard ratios\n\n");
+    out.push_str(&table(
+        &["mode", "operator", "theory Δvec ratio", "empirical time", "empirical mem"],
+        &rows,
+    ));
+    save_json(&results_dir(), "table_f2", &Json::Arr(json_rows))?;
+    save_text(&results_dir(), "table_f2", &out)?;
+    Ok(out)
+}
+
+/// Fig. G9 + Table G3: the Laplacian column plus the biharmonic computed
+/// as nested Laplacians, per available method.
+pub fn run_figg9_tableg3(registry: &Registry, reps: usize) -> Result<String> {
+    let client = RuntimeClient::cpu()?;
+    let mut out = String::from("# Table G3 — Laplacian & biharmonic-as-nested-Laplacians\n\n");
+    let mut all = Vec::new();
+    for op in ["laplacian", "biharl"] {
+        let mut rows = Vec::new();
+        let mut base_t = None;
+        let mut base_m = None;
+        for method in METHODS {
+            if registry.select(op, method, "exact").len() < 2 {
+                continue; // method not compiled for this op
+            }
+            let s = run_sweep(&client, registry, op, method, "exact", reps, 4)?;
+            let bt = *base_t.get_or_insert(s.ms_per_x());
+            let bm = *base_m.get_or_insert(s.mib_diff_per_x());
+            rows.push(vec![
+                method.to_string(),
+                with_ratio(s.ms_per_x(), bt),
+                with_ratio(s.mib_diff_per_x(), bm),
+                format!("{:.4}", s.mib_nondiff_per_x()),
+            ]);
+            all.push(s);
+        }
+        out.push_str(&format!("## {op}\n"));
+        out.push_str(&table(
+            &["implementation", "time [ms/datum]", "mem diff [MiB/datum]", "mem non-diff [MiB/datum]"],
+            &rows,
+        ));
+        out.push('\n');
+    }
+    let j = Json::arr(all.iter().map(sweep_json));
+    save_json(&results_dir(), "figg9_tableg3", &j)?;
+    save_text(&results_dir(), "table_g3", &out)?;
+    Ok(out)
+}
+
+/// Native-engine ablation: wallclock of the three methods on the in-Rust
+/// engines, plus the §C graph-rewrite effect (propagation cost + FLOPs).
+pub fn run_native_ablation(reps: usize) -> Result<String> {
+    use crate::mlp::Mlp;
+    use crate::taylor::interp;
+    use crate::taylor::rewrite::collapse;
+    use crate::taylor::trace::{basis_dirs, build_mlp_jet_std, TAGGED_SLOTS};
+    use crate::util::stats::time_fn;
+
+    let mut rng = Rng::new(9);
+    let dim = 8;
+    let batch = 8;
+    let mlp = Mlp::init(&mut rng, dim, &[64, 64, 48, 48, 1], batch);
+    let x = mlp.random_input(&mut rng);
+
+    let t_nested = time_fn(
+        || {
+            std::hint::black_box(crate::nested::laplacian(&mlp, &x, None, 1.0));
+        },
+        reps,
+    );
+    let t_std = time_fn(
+        || {
+            std::hint::black_box(crate::operators::laplacian_native(&mlp, &x, false));
+        },
+        reps,
+    );
+    let t_col = time_fn(
+        || {
+            std::hint::black_box(crate::operators::laplacian_native(&mlp, &x, true));
+        },
+        reps,
+    );
+
+    // Graph rewrite ablation
+    let g = build_mlp_jet_std(&mlp, 2, dim);
+    let c = collapse(&g, TAGGED_SLOTS, dim);
+    let shapes = vec![vec![batch, dim], vec![dim, batch, dim]];
+    let flops_std = interp::flops(&g, &shapes)?;
+    let flops_col = interp::flops(&c, &shapes)?;
+    let cost_std = g.propagation_cost(TAGGED_SLOTS, dim);
+    let cost_col = c.propagation_cost(TAGGED_SLOTS, dim);
+
+    let dirs = basis_dirs(dim, batch);
+    let t_graph_std = time_fn(
+        || {
+            std::hint::black_box(interp::eval(&g, &[x.clone(), dirs.clone()]).unwrap());
+        },
+        reps,
+    );
+    let t_graph_col = time_fn(
+        || {
+            std::hint::black_box(interp::eval(&c, &[x.clone(), dirs.clone()]).unwrap());
+        },
+        reps,
+    );
+
+    let mut out = String::from("# Native-engine ablation (Laplacian, D=8, B=8)\n\n");
+    let rows = vec![
+        vec!["nested 1st-order (engine)".into(), format!("{:.3}", t_nested.min * 1e3), "-".into(), "-".into()],
+        vec!["standard Taylor (engine)".into(), format!("{:.3}", t_std.min * 1e3), "-".into(), "-".into()],
+        vec!["collapsed Taylor (engine)".into(), format!("{:.3}", t_col.min * 1e3), "-".into(), "-".into()],
+        vec![
+            "standard Taylor (graph)".into(),
+            format!("{:.3}", t_graph_std.min * 1e3),
+            format!("{flops_std}"),
+            format!("{cost_std}"),
+        ],
+        vec![
+            "collapsed via §C rewrites".into(),
+            format!("{:.3}", t_graph_col.min * 1e3),
+            format!("{flops_col}"),
+            format!("{cost_col}"),
+        ],
+    ];
+    out.push_str(&table(&["implementation", "time [ms]", "flops", "propagation cost"], &rows));
+    out.push_str(&format!(
+        "\nrewrite effect: flops x{:.2}, propagation cost x{:.2}\n",
+        flops_col as f64 / flops_std as f64,
+        cost_col as f64 / cost_std as f64
+    ));
+    save_text(&results_dir(), "native_ablation", &out)?;
+    save_json(
+        &results_dir(),
+        "native_ablation",
+        &jobj(&[
+            ("nested_ms", t_nested.min * 1e3),
+            ("standard_ms", t_std.min * 1e3),
+            ("collapsed_ms", t_col.min * 1e3),
+            ("graph_std_ms", t_graph_std.min * 1e3),
+            ("graph_col_ms", t_graph_col.min * 1e3),
+            ("flops_std", flops_std as f64),
+            ("flops_col", flops_col as f64),
+            ("cost_std", cost_std as f64),
+            ("cost_col", cost_col as f64),
+        ]),
+    )?;
+    Ok(out)
+}
+
+/// Coordinator throughput/latency under concurrent load.
+pub fn run_coordinator_bench(registry: Registry, n_requests: usize) -> Result<String> {
+    let dim = registry
+        .select("laplacian", "collapsed", "exact")
+        .first()
+        .map(|a| a.dim)
+        .unwrap_or(16);
+    let mut cfg = ServiceConfig::default();
+    if let Ok(e) = std::env::var("CTAYLOR_EAGER") {
+        cfg.eager_points = e.parse().unwrap_or(cfg.eager_points);
+    }
+    if let Ok(f) = std::env::var("CTAYLOR_FLUSH_US") {
+        cfg.flush_interval = std::time::Duration::from_micros(f.parse().unwrap_or(2000));
+    }
+    let svc = Service::start(registry, cfg)?;
+    let route = RouteKey::new("laplacian", "collapsed", "exact");
+    let mut rng = Rng::new(11);
+
+    // Warmup: a 31-point request exercises every block size (16+8+4+2+1),
+    // pulling all compiles out of the timed region (§Perf L3).
+    svc.eval_blocking(route.clone(), vec![0.0f32; 31 * dim], dim)?;
+
+    let t0 = Instant::now();
+    let mut receivers = Vec::new();
+    let mut total_points = 0usize;
+    for _ in 0..n_requests {
+        let n = 1 + rng.below(16);
+        total_points += n;
+        let mut pts = vec![0.0f32; n * dim];
+        rng.fill_normal_f32(&mut pts);
+        receivers.push(svc.submit(route.clone(), pts, dim)?);
+    }
+    for rx in receivers {
+        rx.recv()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let summary = svc.metrics().summary();
+    let out = format!(
+        "# Coordinator throughput\n\nrequests={n_requests} points={total_points} wall={wall:.3}s \
+         -> {:.0} points/s\n{summary}\n",
+        total_points as f64 / wall,
+    );
+    save_text(&results_dir(), "coordinator", &out)?;
+    svc.shutdown();
+    Ok(out)
+}

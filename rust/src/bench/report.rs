@@ -1,0 +1,98 @@
+//! Report rendering: aligned text tables (paper-style) + JSON dumps.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Render an aligned text table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+        }
+        line.trim_end().to_string() + "\n"
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push_str(&fmt_row(
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+        &widths,
+    ));
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+/// `0.33 (0.54x)` formatting used throughout the paper's tables.
+pub fn with_ratio(value: f64, baseline: f64) -> String {
+    if baseline == 0.0 {
+        return format!("{value:.2}");
+    }
+    format!("{:.3} ({:.2}x)", value, value / baseline)
+}
+
+/// Persist a report section as JSON under `bench_results/`.
+pub fn save_json(dir: &Path, name: &str, value: &Json) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, json::to_string(value))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Persist a rendered text section alongside the JSON.
+pub fn save_text(dir: &Path, name: &str, text: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.txt")), text)?;
+    Ok(())
+}
+
+/// Build a Json object from (key, f64) pairs.
+pub fn jobj(pairs: &[(&str, f64)]) -> Json {
+    Json::Obj(
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), Json::Num(*v)))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(
+            &["metric", "value"],
+            &[
+                vec!["time".into(), "0.33".into()],
+                vec!["memory (MiB)".into(), "1.5".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("metric"));
+        assert!(lines[2].len() == lines[3].len());
+    }
+
+    #[test]
+    fn ratio_format_matches_paper_style() {
+        assert_eq!(with_ratio(0.33, 0.61), "0.330 (0.54x)");
+    }
+}

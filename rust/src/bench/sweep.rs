@@ -1,0 +1,107 @@
+//! Sweeps: measure one (op, method, mode) family across its compiled
+//! batch/sample ladder and fit per-datum / per-sample slopes — the paper's
+//! benchmarking protocol (min of N reps, linear fits; §4 and table 1).
+
+use anyhow::{bail, Result};
+
+use crate::hlo;
+use crate::runtime::{Registry, RuntimeClient};
+use crate::util::stats::{linear_fit, time_fn, LinearFit};
+
+use super::workload;
+
+/// One measured point of a sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    /// Batch size (exact) or sample count (stochastic).
+    pub x: f64,
+    /// Min runtime over reps (seconds).
+    pub time_s: f64,
+    /// Differentiable-memory proxy (bytes, from HLO analysis).
+    pub mem_diff: f64,
+    /// Non-differentiable-memory proxy (bytes).
+    pub mem_nondiff: f64,
+    /// Estimated FLOPs.
+    pub flops: f64,
+}
+
+/// A measured family with its fitted slopes.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    pub op: String,
+    pub method: String,
+    pub mode: String,
+    pub points: Vec<SweepPoint>,
+    pub time_fit: LinearFit,
+    pub mem_diff_fit: LinearFit,
+    pub mem_nondiff_fit: LinearFit,
+}
+
+impl Sweep {
+    /// ms added per datum/sample (the paper's headline quantity).
+    pub fn ms_per_x(&self) -> f64 {
+        self.time_fit.slope * 1e3
+    }
+
+    /// MiB added per datum/sample.
+    pub fn mib_diff_per_x(&self) -> f64 {
+        self.mem_diff_fit.slope / (1024.0 * 1024.0)
+    }
+
+    pub fn mib_nondiff_per_x(&self) -> f64 {
+        self.mem_nondiff_fit.slope / (1024.0 * 1024.0)
+    }
+}
+
+/// Measure one family.  `reps` timed repetitions per artifact (min kept).
+pub fn run_sweep(
+    client: &RuntimeClient,
+    registry: &Registry,
+    op: &str,
+    method: &str,
+    mode: &str,
+    reps: usize,
+    seed: u64,
+) -> Result<Sweep> {
+    let artifacts = registry.select(op, method, mode);
+    if artifacts.len() < 2 {
+        bail!("need >= 2 artifacts for a sweep of {op}/{method}/{mode}");
+    }
+    let mut points = Vec::new();
+    for meta in &artifacts {
+        let model = client.load(registry, &meta.name)?;
+        let inputs = workload::inputs_for(meta, seed);
+        // Stage everything device-side once; time pure execution.
+        let bufs: Vec<xla::PjRtBuffer> =
+            inputs.iter().map(|t| model.stage(t)).collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let timing = time_fn(
+            || {
+                model.run_buffers(&refs).expect("bench execution failed");
+            },
+            reps,
+        );
+        let an = hlo::analyze_file(&meta.hlo_path(&registry.dir))?;
+        let x = if mode == "stochastic" { meta.samples } else { meta.batch };
+        points.push(SweepPoint {
+            x: x as f64,
+            time_s: timing.min,
+            mem_diff: an.total_intermediate_bytes as f64,
+            mem_nondiff: an.peak_live_bytes as f64,
+            flops: an.flops as f64,
+        });
+    }
+    let xs: Vec<f64> = points.iter().map(|p| p.x).collect();
+    let t: Vec<f64> = points.iter().map(|p| p.time_s).collect();
+    let md: Vec<f64> = points.iter().map(|p| p.mem_diff).collect();
+    let mn: Vec<f64> = points.iter().map(|p| p.mem_nondiff).collect();
+    Ok(Sweep {
+        op: op.into(),
+        method: method.into(),
+        mode: mode.into(),
+        time_fit: linear_fit(&xs, &t),
+        mem_diff_fit: linear_fit(&xs, &md),
+        mem_nondiff_fit: linear_fit(&xs, &mn),
+        points,
+    })
+}

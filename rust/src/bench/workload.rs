@@ -1,0 +1,114 @@
+//! Workload generation for benchmark runs: deterministic parameters,
+//! inputs, σ matrices and stochastic directions per artifact.
+
+use crate::runtime::{ArtifactMeta, HostTensor};
+use crate::util::prng::Rng;
+
+/// Deterministic Glorot parameters for an artifact's network shape.
+pub fn theta_for(meta: &ArtifactMeta, seed: u64) -> HostTensor {
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0.0f32; meta.theta_len];
+    let mut off = 0;
+    for &(fi, fo) in &meta.layer_dims {
+        rng.glorot_f32(fi, fo, &mut theta[off..off + fi * fo]);
+        off += fi * fo + fo;
+    }
+    HostTensor::new(vec![meta.theta_len], theta)
+}
+
+/// Standard-normal input batch `[B, D]`.
+pub fn input_for(meta: &ArtifactMeta, seed: u64) -> HostTensor {
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let mut x = vec![0.0f32; meta.batch * meta.dim];
+    rng.fill_normal_f32(&mut x);
+    HostTensor::new(vec![meta.batch, meta.dim], x)
+}
+
+/// The paper's weighted-Laplacian coefficient: full-rank diagonal σ.
+pub fn sigma_for(meta: &ArtifactMeta, seed: u64) -> HostTensor {
+    let mut rng = Rng::new(seed ^ 0x51617);
+    let d = meta.dim;
+    let mut s = vec![0.0f32; d * d];
+    for i in 0..d {
+        s[i * d + i] = rng.uniform_in(0.5, 1.5) as f32;
+    }
+    HostTensor::new(vec![d, d], s)
+}
+
+/// Directions `[S, D]` for stochastic estimators: Rademacher for traces,
+/// Gaussian for the 4th-order biharmonic (Isserlis unbiasedness).
+pub fn dirs_for(meta: &ArtifactMeta, seed: u64) -> HostTensor {
+    let mut rng = Rng::new(seed ^ 0xd15);
+    let mut d = vec![0.0f32; meta.samples * meta.dim];
+    if meta.op == "biharmonic" {
+        rng.fill_normal_f32(&mut d);
+    } else {
+        rng.fill_rademacher_f32(&mut d);
+    }
+    HostTensor::new(vec![meta.samples, meta.dim], d)
+}
+
+/// All inputs for one artifact in manifest order.
+pub fn inputs_for(meta: &ArtifactMeta, seed: u64) -> Vec<HostTensor> {
+    let mut v = vec![theta_for(meta, seed), input_for(meta, seed)];
+    if meta.op == "weighted_laplacian" && meta.mode == "exact" {
+        v.push(sigma_for(meta, seed));
+    } else if meta.mode == "stochastic" {
+        v.push(dirs_for(meta, seed));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TensorSpec;
+
+    fn fake_meta() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            op: "laplacian".into(),
+            method: "collapsed".into(),
+            mode: "exact".into(),
+            dim: 3,
+            widths: vec![4, 1],
+            batch: 2,
+            samples: 0,
+            theta_len: 3 * 4 + 4 + 4 + 1,
+            layer_dims: vec![(3, 4), (4, 1)],
+            variant: "plain".into(),
+            inputs: vec![],
+            outputs: vec![TensorSpec { name: "f0".into(), shape: vec![2, 1], dtype: "f32".into() }],
+        }
+    }
+
+    #[test]
+    fn deterministic_and_correctly_shaped() {
+        let m = fake_meta();
+        let t1 = theta_for(&m, 7);
+        let t2 = theta_for(&m, 7);
+        assert_eq!(t1, t2);
+        assert_eq!(t1.len(), m.theta_len);
+        let x = input_for(&m, 7);
+        assert_eq!(x.shape, vec![2, 3]);
+        // biases zero
+        assert_eq!(t1.data[12..16], [0.0; 4]);
+    }
+
+    #[test]
+    fn sigma_is_diagonal_full_rank() {
+        let m = fake_meta();
+        let s = sigma_for(&m, 1);
+        for i in 0..3 {
+            for j in 0..3 {
+                let v = s.data[i * 3 + j];
+                if i == j {
+                    assert!(v >= 0.5 && v <= 1.5);
+                } else {
+                    assert_eq!(v, 0.0);
+                }
+            }
+        }
+    }
+}

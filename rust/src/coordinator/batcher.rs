@@ -1,0 +1,93 @@
+//! Dynamic batching: pack queued requests into compiled batch shapes.
+//!
+//! Executables are shape-specialized (one per batch size), so the batcher
+//! solves a small packing problem per flush: cover `pending` points using
+//! the available sizes, preferring full blocks and padding only the tail.
+
+/// A planned block: `size` = compiled batch, `used` = real points in it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Block {
+    pub size: usize,
+    pub used: usize,
+}
+
+/// Plan blocks to serve `pending` points given the available compiled
+/// batch sizes (sorted ascending).  Greedy largest-fit, then one padded
+/// block for the tail (smallest size that fits it).
+pub fn plan_blocks(pending: usize, sizes: &[usize]) -> Vec<Block> {
+    assert!(!sizes.is_empty(), "no compiled batch sizes");
+    let mut out = Vec::new();
+    let mut left = pending;
+    let largest = *sizes.last().unwrap();
+    while left >= largest {
+        out.push(Block { size: largest, used: largest });
+        left -= largest;
+    }
+    while left > 0 {
+        // largest size fully covered, else smallest size that fits the tail
+        let full = sizes.iter().rev().find(|&&s| s <= left);
+        match full {
+            Some(&s) if s == left || s > sizes[0] => {
+                out.push(Block { size: s, used: s.min(left) });
+                left -= s.min(left);
+            }
+            _ => {
+                let pad = *sizes.iter().find(|&&s| s >= left).unwrap_or(&largest);
+                out.push(Block { size: pad, used: left });
+                left = 0;
+            }
+        }
+    }
+    out
+}
+
+/// Total padding a plan introduces.
+pub fn padding(blocks: &[Block]) -> usize {
+    blocks.iter().map(|b| b.size - b.used).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIZES: &[usize] = &[1, 2, 4, 8, 16];
+
+    #[test]
+    fn exact_fit_has_no_padding() {
+        for n in [1, 2, 4, 8, 16, 24, 31, 32] {
+            let plan = plan_blocks(n, SIZES);
+            let used: usize = plan.iter().map(|b| b.used).sum();
+            assert_eq!(used, n);
+            if n.count_ones() <= 2 || n % 16 == 0 {
+                // powers of two compose exactly from the size set
+                assert_eq!(padding(&plan), 0, "n={n} plan={plan:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn covers_all_points() {
+        for n in 1..200 {
+            let plan = plan_blocks(n, SIZES);
+            let used: usize = plan.iter().map(|b| b.used).sum();
+            assert_eq!(used, n, "n={n}");
+            assert!(padding(&plan) < 16, "padding bounded by largest block");
+        }
+    }
+
+    #[test]
+    fn single_size_always_pads_tail() {
+        let plan = plan_blocks(5, &[4]);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(padding(&plan), 3);
+    }
+
+    #[test]
+    fn prefers_large_blocks() {
+        let plan = plan_blocks(33, SIZES);
+        assert_eq!(plan[0], Block { size: 16, used: 16 });
+        assert_eq!(plan[1], Block { size: 16, used: 16 });
+        let used: usize = plan.iter().map(|b| b.used).sum();
+        assert_eq!(used, 33);
+    }
+}

@@ -1,0 +1,128 @@
+//! Service metrics: counters + latency histogram, all atomics (the hot
+//! path never takes a lock to record).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency histogram from 1µs to ~1000s (30 buckets, ×2 each).
+const BUCKETS: usize = 30;
+const BASE_US: f64 = 1.0;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub points: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_points: AtomicU64,
+    pub errors: AtomicU64,
+    pub rejected: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, n_points: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.points.fetch_add(n_points as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, padded: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_points.fetch_add(padded as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, seconds: f64) {
+        let us = seconds * 1e6;
+        let bucket = if us <= BASE_US {
+            0
+        } else {
+            ((us / BASE_US).log2() as usize).min(BUCKETS - 1)
+        };
+        self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        let n = self.count_latencies();
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+    }
+
+    fn count_latencies(&self) -> u64 {
+        self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate latency quantile from the histogram (upper bucket edge).
+    pub fn latency_quantile_s(&self, q: f64) -> f64 {
+        let total = self.count_latencies();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return BASE_US * 2f64.powi(i as i32 + 1) / 1e6;
+            }
+        }
+        BASE_US * 2f64.powi(BUCKETS as i32) / 1e6
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} points={} batches={} padded={} errors={} rejected={} \
+             mean_latency={:.3}ms p99<={:.3}ms",
+            self.requests.load(Ordering::Relaxed),
+            self.points.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.padded_points.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.mean_latency_s() * 1e3,
+            self.latency_quantile_s(0.99) * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(4);
+        m.record_request(2);
+        m.record_batch(1);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.points.load(Ordering::Relaxed), 6);
+        assert_eq!(m.padded_points.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn latency_quantiles_monotone() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_latency(i as f64 * 1e-4);
+        }
+        let p50 = m.latency_quantile_s(0.5);
+        let p99 = m.latency_quantile_s(0.99);
+        assert!(p50 <= p99);
+        assert!(m.mean_latency_s() > 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 serving layer: the PDE-operator evaluation service.
+//!
+//! VMC and PINN workloads need operator values (Δf, Δ_D f, Δ²f) at batches
+//! of points, continuously, against a fixed set of compiled model
+//! variants.  This module provides the router (manifest → batch-size
+//! ladder), the dynamic batcher (pack requests into compiled shapes), the
+//! worker (PJRT execution with device-resident parameters) and service
+//! metrics — the vLLM-router-shaped skeleton adapted to PDE operators.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use request::{EvalRequest, EvalResponse, RouteKey};
+pub use router::Router;
+pub use server::{Client, Server};
+pub use service::{Service, ServiceConfig};

@@ -1,0 +1,54 @@
+//! Request/response types for the PDE-operator evaluation service.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Which compiled operator family a request targets.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RouteKey {
+    /// laplacian | weighted_laplacian | biharmonic | biharl
+    pub op: String,
+    /// nested | standard | collapsed
+    pub method: String,
+    /// exact | stochastic
+    pub mode: String,
+}
+
+impl RouteKey {
+    pub fn new(op: &str, method: &str, mode: &str) -> RouteKey {
+        RouteKey { op: op.into(), method: method.into(), mode: mode.into() }
+    }
+}
+
+impl std::fmt::Display for RouteKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}/{}", self.op, self.method, self.mode)
+    }
+}
+
+/// One evaluation request: a set of points for one operator route.
+#[derive(Debug)]
+pub struct EvalRequest {
+    pub id: u64,
+    pub route: RouteKey,
+    /// Row-major `[n_points, dim]`.
+    pub points: Vec<f32>,
+    pub n_points: usize,
+    pub submitted: Instant,
+    /// Completion channel.
+    pub reply: Sender<EvalResponse>,
+}
+
+/// The result for one request.
+#[derive(Debug, Clone)]
+pub struct EvalResponse {
+    pub id: u64,
+    /// Network values f(x), one per point.
+    pub f0: Vec<f32>,
+    /// Operator values (Δf, Δ_D f, Δ²f ...), one per point.
+    pub op: Vec<f32>,
+    /// Queue + batch + execute time.
+    pub latency_s: f64,
+    /// Batch the request was served in (for fill-ratio diagnostics).
+    pub served_batch: usize,
+}

@@ -1,0 +1,79 @@
+//! Routing: map (op, method, mode) to the compiled batch-size ladder.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::request::RouteKey;
+use crate::runtime::Registry;
+
+/// Immutable routing table computed from the manifest at startup.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// route -> sorted batch sizes -> artifact name
+    table: BTreeMap<RouteKey, BTreeMap<usize, String>>,
+}
+
+impl Router {
+    pub fn from_registry(registry: &Registry) -> Router {
+        let mut table: BTreeMap<RouteKey, BTreeMap<usize, String>> = BTreeMap::new();
+        for a in &registry.artifacts {
+            if a.variant != "plain" || a.batch == 0 {
+                continue;
+            }
+            if !matches!(a.mode.as_str(), "exact" | "stochastic") {
+                continue;
+            }
+            let key = RouteKey::new(&a.op, &a.method, &a.mode);
+            table.entry(key).or_default().insert(a.batch, a.name.clone());
+        }
+        Router { table }
+    }
+
+    pub fn routes(&self) -> impl Iterator<Item = &RouteKey> {
+        self.table.keys()
+    }
+
+    pub fn has_route(&self, key: &RouteKey) -> bool {
+        self.table.contains_key(key)
+    }
+
+    /// Available compiled batch sizes for a route (ascending).
+    pub fn batch_sizes(&self, key: &RouteKey) -> Result<Vec<usize>> {
+        match self.table.get(key) {
+            Some(m) => Ok(m.keys().copied().collect()),
+            None => bail!("no artifacts for route {key}"),
+        }
+    }
+
+    /// Artifact name serving (route, batch size).
+    pub fn artifact(&self, key: &RouteKey, batch: usize) -> Result<&str> {
+        self.table
+            .get(key)
+            .and_then(|m| m.get(&batch))
+            .map(String::as_str)
+            .ok_or_else(|| anyhow::anyhow!("no artifact for {key} at batch {batch}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_real_manifest() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let reg = Registry::load(dir).unwrap();
+        let router = Router::from_registry(&reg);
+        let key = RouteKey::new("laplacian", "collapsed", "exact");
+        assert!(router.has_route(&key));
+        let sizes = router.batch_sizes(&key).unwrap();
+        assert!(sizes.contains(&1) && sizes.contains(&16));
+        let name = router.artifact(&key, 4).unwrap();
+        assert_eq!(name, "laplacian_collapsed_exact_b4");
+        assert!(router.routes().count() >= 9, "3 ops x 3 methods x modes");
+    }
+}

@@ -1,0 +1,182 @@
+//! Line-delimited JSON over TCP: the network face of the evaluation
+//! service (what a VMC driver or PINN trainer on another host would call).
+//!
+//! Protocol (one JSON object per line, both directions):
+//!
+//! ```text
+//! -> {"op":"laplacian","method":"collapsed","mode":"exact",
+//!     "dim":16,"points":[...flat row-major...]}
+//! <- {"ok":true,"f0":[...],"op":[...],"latency_ms":1.2,"served_batch":8}
+//! <- {"ok":false,"error":"..."}                  (on bad requests)
+//! ```
+//!
+//! Hand-rolled on std::net (no tokio offline, DESIGN.md §2); one thread
+//! per connection, all connections share the single batching worker — so
+//! concurrent clients *improve* batch fill.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::request::RouteKey;
+use super::service::Service;
+use crate::util::json::{self, Json};
+
+/// A running TCP front-end.
+pub struct Server {
+    local_addr: std::net::SocketAddr,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl Server {
+    /// Bind and start accepting.  `addr` like "127.0.0.1:0" (0 = ephemeral).
+    pub fn start(service: Arc<Service>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let flag = shutdown.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("ctaylor-accept".into())
+            .spawn(move || {
+                while !flag.load(std::sync::atomic::Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let svc = service.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_connection(stream, svc);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { local_addr, accept_thread: Some(accept_thread), shutdown })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, service: Arc<Service>) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) if !l.trim().is_empty() => l,
+            Ok(_) => continue,
+            Err(_) => break, // client went away
+        };
+        let reply = match handle_request(&line, &service) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(&format!("{e:#}"))),
+            ]),
+        };
+        writer.write_all(json::to_string(&reply).as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn handle_request(line: &str, service: &Service) -> Result<Json> {
+    let req = json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let op = req.get_str("op").context("missing op")?;
+    let method = req.get_str("method").unwrap_or("collapsed");
+    let mode = req.get_str("mode").unwrap_or("exact");
+    let dim = req.get_usize("dim").context("missing dim")?;
+    let points: Vec<f32> = req
+        .get("points")
+        .and_then(Json::as_arr)
+        .context("missing points")?
+        .iter()
+        .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+        .collect();
+    anyhow::ensure!(
+        points.iter().all(|v| v.is_finite()),
+        "points must be finite numbers"
+    );
+    let resp = service.eval_blocking(RouteKey::new(op, method, mode), points, dim)?;
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("f0", Json::arr(resp.f0.iter().map(|&v| Json::num(v as f64)))),
+        ("op", Json::arr(resp.op.iter().map(|&v| Json::num(v as f64)))),
+        ("latency_ms", Json::num(resp.latency_s * 1e3)),
+        ("served_batch", Json::num(resp.served_batch as f64)),
+    ]))
+}
+
+/// Minimal blocking client for tests / examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Evaluate points (row-major `[n, dim]`) against a route.
+    pub fn eval(
+        &mut self,
+        op: &str,
+        method: &str,
+        mode: &str,
+        dim: usize,
+        points: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let req = Json::obj(vec![
+            ("op", Json::str(op)),
+            ("method", Json::str(method)),
+            ("mode", Json::str(mode)),
+            ("dim", Json::num(dim as f64)),
+            ("points", Json::arr(points.iter().map(|&v| Json::num(v as f64)))),
+        ]);
+        self.writer.write_all(json::to_string(&req).as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = json::parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))?;
+        anyhow::ensure!(
+            resp.get("ok").and_then(Json::as_bool) == Some(true),
+            "server error: {}",
+            resp.get_str("error").unwrap_or("unknown")
+        );
+        let take = |key: &str| -> Vec<f32> {
+            resp.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).map(|v| v as f32).collect())
+                .unwrap_or_default()
+        };
+        Ok((take("f0"), take("op")))
+    }
+}

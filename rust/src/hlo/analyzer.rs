@@ -1,0 +1,206 @@
+//! Memory and FLOP analysis over parsed HLO modules.
+//!
+//! This supplies the paper's two memory metrics on our substrate
+//! (DESIGN.md §2):
+//!
+//! * **Differentiable memory proxy** = total bytes of all intermediate
+//!   instruction outputs.  Backpropagation-ready execution must keep every
+//!   intermediate alive, so the sum is the high-water mark.
+//! * **Non-differentiable memory proxy** = peak *live* bytes under program
+//!   order with last-use freeing — what a `no_grad` executor needs.
+//!
+//! jax's `as_hlo_text` is pre-optimization HLO: its instructions are in
+//! 1:1 correspondence with the propagated Taylor channels, which is
+//! precisely the quantity the paper's theory counts.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::parser::{Computation, HloModule};
+
+/// Analysis summary for one module's entry computation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Analysis {
+    /// Instructions in the entry computation.
+    pub instructions: usize,
+    /// Bytes of all non-parameter instruction outputs (differentiable proxy).
+    pub total_intermediate_bytes: u64,
+    /// Peak live bytes with last-use freeing (non-differentiable proxy).
+    pub peak_live_bytes: u64,
+    /// Bytes of parameters (weights + inputs), live throughout.
+    pub parameter_bytes: u64,
+    /// Estimated floating-point operations.
+    pub flops: u64,
+}
+
+/// FLOP estimate for one instruction.
+fn instr_flops(comp: &Computation, idx: usize) -> u64 {
+    let instr = &comp.instructions[idx];
+    let out_elems = instr.ty.element_count() as u64;
+    match instr.opcode.as_str() {
+        "parameter" | "constant" | "tuple" | "get-tuple-element" | "reshape"
+        | "broadcast" | "transpose" | "slice" | "concatenate" | "copy"
+        | "bitcast" | "iota" => 0,
+        "dot" => {
+            // flops = 2 * out_elems * contracted extent; the contracted
+            // extent is the operand-0 dim named in lhs_contracting_dims.
+            let k = contracted_extent(comp, instr).unwrap_or(1) as u64;
+            2 * out_elems * k
+        }
+        "reduce" | "reduce-window" => {
+            // one op per reduced input element
+            instr
+                .operands
+                .first()
+                .and_then(|o| comp.find(o))
+                .map(|i| i.ty.element_count() as u64)
+                .unwrap_or(out_elems)
+        }
+        "tanh" | "exp" | "log" | "sin" | "cos" | "rsqrt" | "sqrt" | "power" => {
+            // transcendental: count a few flops each
+            8 * out_elems
+        }
+        "while" | "call" | "fusion" | "custom-call" | "conditional" => out_elems,
+        _ => out_elems, // elementwise default
+    }
+}
+
+fn contracted_extent(comp: &Computation, instr: &super::parser::Instruction) -> Option<usize> {
+    // lhs_contracting_dims={1}
+    let attrs = &instr.attrs;
+    let key = "lhs_contracting_dims={";
+    let start = attrs.find(key)? + key.len();
+    let end = attrs[start..].find('}')? + start;
+    let dim: usize = attrs[start..end].split(',').next()?.trim().parse().ok()?;
+    let lhs = comp.find(instr.operands.first()?)?;
+    lhs.ty.as_array().and_then(|s| s.dims.get(dim)).copied()
+}
+
+/// Analyze the entry computation of a module.
+pub fn analyze(module: &HloModule) -> Result<Analysis> {
+    let entry = module.entry()?;
+    let n = entry.instructions.len();
+
+    // name -> index, last-use index
+    let mut index: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, instr) in entry.instructions.iter().enumerate() {
+        index.insert(instr.name.as_str(), i);
+    }
+    let mut last_use = vec![0usize; n];
+    for (i, instr) in entry.instructions.iter().enumerate() {
+        last_use[i] = i; // at least self
+        for op in &instr.operands {
+            if let Some(&j) = index.get(op.as_str()) {
+                last_use[j] = last_use[j].max(i);
+            }
+        }
+    }
+    // Roots stay live to the end.
+    for (i, instr) in entry.instructions.iter().enumerate() {
+        if instr.is_root {
+            last_use[i] = n - 1;
+        }
+    }
+
+    let mut parameter_bytes = 0u64;
+    let mut total_intermediate = 0u64;
+    let mut flops = 0u64;
+    let sizes: Vec<u64> = entry
+        .instructions
+        .iter()
+        .map(|i| i.ty.byte_size() as u64)
+        .collect();
+    for (i, instr) in entry.instructions.iter().enumerate() {
+        if instr.opcode == "parameter" {
+            parameter_bytes += sizes[i];
+        } else if instr.opcode != "constant" {
+            total_intermediate += sizes[i];
+        }
+        flops += instr_flops(entry, i);
+    }
+
+    // Liveness sweep: buffers born at i, freed after last_use.
+    let mut free_at: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, &lu) in last_use.iter().enumerate() {
+        if entry.instructions[i].opcode != "parameter" {
+            free_at[lu].push(i);
+        }
+    }
+    let mut live = parameter_bytes;
+    let mut peak = live;
+    for i in 0..n {
+        if entry.instructions[i].opcode != "parameter" {
+            live += sizes[i];
+        }
+        peak = peak.max(live);
+        for &b in &free_at[i] {
+            live -= sizes[b];
+        }
+    }
+
+    Ok(Analysis {
+        instructions: n,
+        total_intermediate_bytes: total_intermediate,
+        peak_live_bytes: peak,
+        parameter_bytes,
+        flops,
+    })
+}
+
+/// Analyze an HLO text file.
+pub fn analyze_file(path: &std::path::Path) -> Result<Analysis> {
+    analyze(&super::parser::parse_file(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parser::parse_module;
+
+    const SAMPLE: &str = r#"HloModule m
+
+ENTRY e.1 {
+  p0 = f32[4]{0} parameter(0)
+  a = f32[4]{0} tanh(p0)
+  b = f32[4]{0} add(a, p0)
+  c = f32[4]{0} multiply(b, b)
+  ROOT t = (f32[4]{0}) tuple(c)
+}
+"#;
+
+    #[test]
+    fn liveness_and_totals() {
+        let m = parse_module(SAMPLE).unwrap();
+        let an = analyze(&m).unwrap();
+        assert_eq!(an.instructions, 5);
+        assert_eq!(an.parameter_bytes, 16);
+        // intermediates: a, b, c, t = 16 each -> 64
+        assert_eq!(an.total_intermediate_bytes, 64);
+        // peak: params(16) + a(16) + b(16) at instruction b (a freed after b)
+        // then + c while b live, ... peak = 16 + 16*2 + tuple...
+        assert!(an.peak_live_bytes >= 48);
+        assert!(an.peak_live_bytes <= an.parameter_bytes + an.total_intermediate_bytes);
+        // flops: tanh 8*4 + add 4 + mul 4 (+ tuple 0)
+        assert_eq!(an.flops, 32 + 4 + 4);
+    }
+
+    #[test]
+    fn collapsed_has_less_memory_than_standard_on_real_artifacts() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let std_p = dir.join("laplacian_standard_exact_b8.hlo.txt");
+        let col_p = dir.join("laplacian_collapsed_exact_b8.hlo.txt");
+        if !std_p.exists() || !col_p.exists() {
+            return;
+        }
+        let a_std = analyze_file(&std_p).unwrap();
+        let a_col = analyze_file(&col_p).unwrap();
+        assert!(
+            a_col.total_intermediate_bytes < a_std.total_intermediate_bytes,
+            "collapsed {} !< standard {}",
+            a_col.total_intermediate_bytes,
+            a_std.total_intermediate_bytes
+        );
+        assert!(a_col.flops < a_std.flops);
+    }
+}

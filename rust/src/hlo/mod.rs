@@ -1,0 +1,15 @@
+//! HLO text tooling: parser + memory/FLOP analyzer.
+//!
+//! The paper reports GPU peak memory; our substrate has no CUDA counters,
+//! so the bench harness derives both memory columns analytically from the
+//! artifact HLO (see analyzer.rs for the two proxies) — and the proxies
+//! are exact in the quantity the paper's theory predicts: bytes of
+//! propagated Taylor channels.
+
+pub mod analyzer;
+pub mod parser;
+pub mod shape;
+
+pub use analyzer::{analyze, analyze_file, Analysis};
+pub use parser::{parse_file, parse_module, HloModule};
+pub use shape::{HloShape, HloType};

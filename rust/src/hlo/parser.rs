@@ -1,0 +1,234 @@
+//! Parser for HLO text modules (the AOT interchange format).
+//!
+//! Parses the subset jax's `as_hlo_text` emits: named computations, one
+//! instruction per line of the form
+//! `[ROOT] name = <type> opcode(operand, ...), attr=..., ...`.
+
+use anyhow::{anyhow, bail, Context, Result};
+use regex::Regex;
+
+use super::shape::{parse_type, HloType};
+
+/// One HLO instruction.
+#[derive(Debug, Clone)]
+pub struct Instruction {
+    pub name: String,
+    pub ty: HloType,
+    pub opcode: String,
+    pub operands: Vec<String>,
+    pub is_root: bool,
+    /// Raw attribute text after the operand list (dims, slices, ...).
+    pub attrs: String,
+}
+
+/// A named computation (region or ENTRY).
+#[derive(Debug, Clone)]
+pub struct Computation {
+    pub name: String,
+    pub is_entry: bool,
+    pub instructions: Vec<Instruction>,
+}
+
+impl Computation {
+    pub fn root(&self) -> Option<&Instruction> {
+        self.instructions
+            .iter()
+            .rev()
+            .find(|i| i.is_root)
+            .or(self.instructions.last())
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Instruction> {
+        self.instructions.iter().find(|i| i.name == name)
+    }
+}
+
+/// A parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: Vec<Computation>,
+}
+
+impl HloModule {
+    pub fn entry(&self) -> Result<&Computation> {
+        self.computations
+            .iter()
+            .find(|c| c.is_entry)
+            .ok_or_else(|| anyhow!("module {} has no ENTRY computation", self.name))
+    }
+}
+
+/// Split an operand/attr tail at top-level commas.
+fn split_top_level(text: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0;
+    for (i, c) in text.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            ',' if depth == 0 => {
+                parts.push(text[start..i].trim().to_string());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let last = text[start..].trim();
+    if !last.is_empty() {
+        parts.push(last.to_string());
+    }
+    parts
+}
+
+/// Parse a full HLO text module.
+pub fn parse_module(text: &str) -> Result<HloModule> {
+    let header = Regex::new(r"^HloModule\s+([\w\.\-]+)").unwrap();
+    // `name {` or `ENTRY name {` or `name (params) -> type {`
+    let comp_open = Regex::new(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(\([^{]*)?\{\s*$").unwrap();
+    let instr_re = Regex::new(
+        r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^=]*?\)|[\w\[\]\{\},\s]+?))\s+([\w\-]+)\((.*)$",
+    )
+    .unwrap();
+
+    let mut name = String::new();
+    let mut computations: Vec<Computation> = Vec::new();
+    let mut current: Option<Computation> = None;
+
+    for raw in text.lines() {
+        let line = raw.trim_end();
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(c) = header.captures(line.trim()) {
+            name = c[1].to_string();
+            continue;
+        }
+        if current.is_none() {
+            if let Some(c) = comp_open.captures(line.trim()) {
+                current = Some(Computation {
+                    name: c[2].to_string(),
+                    is_entry: c.get(1).is_some(),
+                    instructions: Vec::new(),
+                });
+                continue;
+            }
+            continue;
+        }
+        if line.trim() == "}" {
+            computations.push(current.take().unwrap());
+            continue;
+        }
+        let cur = current.as_mut().unwrap();
+        let trimmed = line.trim();
+        if let Some(c) = instr_re.captures(trimmed) {
+            let ty_text = c[3].trim();
+            let ty = parse_type(ty_text)
+                .with_context(|| format!("shape in line {trimmed:?}"))?;
+            let opcode = c[4].to_string();
+            // The tail holds `operands), attr=..., ...` — find the matching
+            // close paren of the operand list.
+            let tail = &c[5];
+            let mut depth = 1i32;
+            let mut close = tail.len();
+            for (i, ch) in tail.char_indices() {
+                match ch {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            close = i;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if depth != 0 {
+                bail!("unbalanced parens in {trimmed:?}");
+            }
+            let operand_text = &tail[..close];
+            let attrs = tail[close + 1..].trim_start_matches(',').trim().to_string();
+            let operands = split_top_level(operand_text)
+                .into_iter()
+                .map(|o| {
+                    // operands may be `name`, `f32[2]{0} name`, or literals
+                    o.rsplit(' ').next().unwrap_or(&o).trim_start_matches('%').to_string()
+                })
+                .filter(|o| !o.is_empty())
+                .collect();
+            cur.instructions.push(Instruction {
+                name: c[2].to_string(),
+                ty,
+                opcode,
+                operands,
+                is_root: c.get(1).is_some(),
+                attrs,
+            });
+        }
+    }
+    if computations.is_empty() {
+        bail!("no computations parsed");
+    }
+    Ok(HloModule { name, computations })
+}
+
+/// Parse an HLO text file.
+pub fn parse_file(path: &std::path::Path) -> Result<HloModule> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_module(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_f, entry_computation_layout={(f32[3]{0})->(f32[3]{0})}
+
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.2 = f32[] parameter(1)
+  ROOT add.2 = f32[] add(Arg_0.2, Arg_1.2)
+}
+
+ENTRY main.5 {
+  Arg_0.9 = f32[3]{0} parameter(0)
+  tanh.1 = f32[3]{0} tanh(Arg_0.9)
+  dot.14 = f32[3]{0} dot(tanh.1, Arg_0.9), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT tuple.2 = (f32[3]{0}) tuple(dot.14)
+}
+"#;
+
+    #[test]
+    fn parses_module_structure() {
+        let m = parse_module(SAMPLE).unwrap();
+        assert_eq!(m.name, "jit_f");
+        assert_eq!(m.computations.len(), 2);
+        let entry = m.entry().unwrap();
+        assert_eq!(entry.name, "main.5");
+        assert_eq!(entry.instructions.len(), 4);
+        let dot = entry.find("dot.14").unwrap();
+        assert_eq!(dot.opcode, "dot");
+        assert_eq!(dot.operands, vec!["tanh.1", "Arg_0.9"]);
+        assert!(dot.attrs.contains("lhs_contracting_dims"));
+        let root = entry.root().unwrap();
+        assert!(root.is_root);
+        assert_eq!(root.opcode, "tuple");
+    }
+
+    #[test]
+    fn parses_real_artifact_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/laplacian_collapsed_exact_b4.hlo.txt");
+        if !p.exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = parse_file(&p).unwrap();
+        let entry = m.entry().unwrap();
+        assert!(entry.instructions.len() > 10);
+        assert!(entry.instructions.iter().any(|i| i.opcode == "dot"));
+        assert!(entry.instructions.iter().any(|i| i.opcode == "tanh"));
+    }
+}

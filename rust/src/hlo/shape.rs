@@ -1,0 +1,154 @@
+//! HLO shape strings: `f32[4,16]{1,0}`, `pred[]`, tuples.
+
+use anyhow::{bail, Result};
+
+/// Array shape: dtype + dims (layout is ignored — row-major assumed).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HloShape {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl HloShape {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn element_bytes(&self) -> usize {
+        match self.dtype.as_str() {
+            "pred" | "s8" | "u8" => 1,
+            "s16" | "u16" | "f16" | "bf16" => 2,
+            "s32" | "u32" | "f32" => 4,
+            "s64" | "u64" | "f64" | "c64" => 8,
+            "c128" => 16,
+            _ => 4, // unknown types: assume a word
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.element_count() * self.element_bytes()
+    }
+}
+
+/// One instruction's output: an array or a tuple of arrays.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HloType {
+    Array(HloShape),
+    Tuple(Vec<HloShape>),
+}
+
+impl HloType {
+    pub fn byte_size(&self) -> usize {
+        match self {
+            HloType::Array(s) => s.byte_size(),
+            HloType::Tuple(ss) => ss.iter().map(HloShape::byte_size).sum(),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            HloType::Array(s) => s.element_count(),
+            HloType::Tuple(ss) => ss.iter().map(HloShape::element_count).sum(),
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&HloShape> {
+        match self {
+            HloType::Array(s) => Some(s),
+            HloType::Tuple(_) => None,
+        }
+    }
+}
+
+/// Parse one array shape like `f32[4,16]{1,0}` or `f32[]`.
+pub fn parse_array_shape(text: &str) -> Result<HloShape> {
+    let text = text.trim();
+    let open = match text.find('[') {
+        Some(i) => i,
+        None => bail!("no `[` in shape {text:?}"),
+    };
+    let close = match text.find(']') {
+        Some(i) => i,
+        None => bail!("no `]` in shape {text:?}"),
+    };
+    let dtype = text[..open].to_string();
+    let inner = &text[open + 1..close];
+    let dims = if inner.trim().is_empty() {
+        vec![]
+    } else {
+        inner
+            .split(',')
+            .map(|d| d.trim().parse::<usize>().map_err(Into::into))
+            .collect::<Result<Vec<_>>>()?
+    };
+    Ok(HloShape { dtype, dims })
+}
+
+/// Parse an instruction type: array or tuple `(f32[..], f32[..])`.
+pub fn parse_type(text: &str) -> Result<HloType> {
+    let text = text.trim();
+    if let Some(stripped) = text.strip_prefix('(') {
+        let inner = stripped.strip_suffix(')').unwrap_or(stripped);
+        let mut parts = Vec::new();
+        // split at top level commas (shapes contain commas inside brackets)
+        let mut depth = 0;
+        let mut start = 0;
+        for (i, c) in inner.char_indices() {
+            match c {
+                '[' | '{' => depth += 1,
+                ']' | '}' => depth -= 1,
+                ',' if depth == 0 => {
+                    parts.push(&inner[start..i]);
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        if start < inner.len() {
+            parts.push(&inner[start..]);
+        }
+        Ok(HloType::Tuple(
+            parts
+                .iter()
+                .filter(|p| !p.trim().is_empty())
+                .map(|p| parse_array_shape(p))
+                .collect::<Result<_>>()?,
+        ))
+    } else {
+        Ok(HloType::Array(parse_array_shape(text)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plain_shapes() {
+        let s = parse_array_shape("f32[4,16]{1,0}").unwrap();
+        assert_eq!(s.dtype, "f32");
+        assert_eq!(s.dims, vec![4, 16]);
+        assert_eq!(s.byte_size(), 4 * 16 * 4);
+        let scalar = parse_array_shape("f32[]").unwrap();
+        assert_eq!(scalar.element_count(), 1);
+    }
+
+    #[test]
+    fn parses_tuples() {
+        let t = parse_type("(f32[4,1]{1,0}, f32[4,1]{1,0})").unwrap();
+        match t {
+            HloType::Tuple(ss) => {
+                assert_eq!(ss.len(), 2);
+                assert_eq!(ss[0].dims, vec![4, 1]);
+            }
+            _ => panic!("expected tuple"),
+        }
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(parse_array_shape("bf16[8]").unwrap().byte_size(), 16);
+        assert_eq!(parse_array_shape("pred[3]").unwrap().byte_size(), 3);
+        assert_eq!(parse_array_shape("f64[2,2]").unwrap().byte_size(), 32);
+    }
+}

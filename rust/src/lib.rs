@@ -1,0 +1,38 @@
+//! # collapsed-taylor
+//!
+//! A Rust + JAX + Pallas reproduction of *Collapsing Taylor Mode Automatic
+//! Differentiation* (Dangel, Siebert, Zeinhofer, Walther; NeurIPS 2025).
+//!
+//! The paper optimizes Taylor-mode AD for linear PDE operators (Laplacian,
+//! weighted Laplacian, biharmonic, and their stochastic estimators) by
+//! *collapsing* the highest Taylor coefficients: because the highest
+//! coefficient's propagation rule is linear in the highest input coefficient
+//! (the trivial partition of Faà di Bruno's formula), the sum over
+//! directions can be propagated directly — `1 + (K-1)R + 1` vectors per
+//! node instead of `1 + KR`.
+//!
+//! Layout (see DESIGN.md):
+//! * [`taylor`] — native Taylor-mode engine: jets, Faà di Bruno, a graph IR
+//!   and the paper's §C collapse rewrites (replicate-push-down,
+//!   sum-push-up).
+//! * [`nested`] — the nested first-order AD baseline (reverse tape +
+//!   forward duals, forward-over-reverse HVPs).
+//! * [`operators`] — Laplacian / weighted Laplacian / biharmonic built on
+//!   both engines, incl. Griewank interpolation for mixed partials.
+//! * [`hlo`] — HLO text parser + memory/FLOP analyzer (the memory columns
+//!   of the paper's tables).
+//! * [`runtime`] — PJRT loader/executor for the AOT artifacts produced by
+//!   `python/compile/aot.py`.
+//! * [`coordinator`] — the serving layer: router, dynamic batcher, workers.
+//! * [`bench`] — sweeps, slope fits and table/figure regeneration.
+//! * [`util`] — JSON / CLI / PRNG / stats substrates.
+
+pub mod bench;
+pub mod coordinator;
+pub mod hlo;
+pub mod mlp;
+pub mod nested;
+pub mod operators;
+pub mod runtime;
+pub mod taylor;
+pub mod util;

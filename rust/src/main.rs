@@ -1,0 +1,172 @@
+//! `ctaylor` — CLI for the collapsed-Taylor reproduction.
+//!
+//! Subcommands map 1:1 to the experiment index in DESIGN.md §4:
+//!
+//! ```text
+//! ctaylor info                         # manifest + platform overview
+//! ctaylor gamma                        # fig. 4: interpolation coefficients
+//! ctaylor analyze <name|path>...       # HLO memory/FLOP analysis
+//! ctaylor eval --op laplacian --method collapsed [--n 8]
+//! ctaylor bench [--which fig1|table1|f2|g3|native|coordinator|all] [--reps N]
+//! ctaylor serve-demo [--requests N]    # coordinator under load
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use ctaylor::bench;
+use ctaylor::coordinator::{RouteKey, Service, ServiceConfig};
+use ctaylor::hlo;
+use ctaylor::operators::interpolation::{compositions, gamma};
+use ctaylor::runtime::Registry;
+use ctaylor::util::cli::Args;
+use ctaylor::util::prng::Rng;
+use ctaylor::util::stats::fmt_bytes;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["verbose"]);
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("gamma") => cmd_gamma(),
+        Some("analyze") => cmd_analyze(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("serve-demo") => cmd_serve_demo(&args),
+        Some(other) => bail!("unknown subcommand {other:?}; see `ctaylor help` in README"),
+        None => {
+            println!(
+                "ctaylor — Collapsing Taylor Mode AD (NeurIPS 2025) reproduction\n\
+                 subcommands: info | gamma | analyze | eval | bench | serve-demo"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn registry(args: &Args) -> Result<Registry> {
+    Registry::load(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let reg = registry(args)?;
+    println!("preset: {}  artifacts: {}", reg.preset, reg.artifacts.len());
+    let mut by_op = std::collections::BTreeMap::new();
+    for a in &reg.artifacts {
+        *by_op.entry(format!("{}/{}/{}", a.op, a.method, a.mode)).or_insert(0) += 1;
+    }
+    for (k, v) in by_op {
+        println!("  {k:<42} {v} artifacts");
+    }
+    Ok(())
+}
+
+fn cmd_gamma() -> Result<()> {
+    println!("Interpolation coefficients γ_(2,2),j for the biharmonic (paper fig. 4):");
+    for j in compositions(4, 2) {
+        let g = gamma(&[2, 2], &j);
+        println!("  j = ({}, {}):  γ = {}/{}", j[0], j[1], g.num, g.den);
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let reg = registry(args).ok();
+    if args.positional.is_empty() {
+        bail!("usage: ctaylor analyze <artifact-name|path> ...");
+    }
+    for target in &args.positional {
+        let path = if std::path::Path::new(target).exists() {
+            std::path::PathBuf::from(target)
+        } else if let Some(reg) = &reg {
+            let meta = reg
+                .get(target)
+                .with_context(|| format!("{target:?} is neither a file nor an artifact"))?;
+            meta.hlo_path(&reg.dir)
+        } else {
+            bail!("{target:?} not found");
+        };
+        let an = hlo::analyze_file(&path)?;
+        println!(
+            "{target}: instrs={} params={} intermediates(diff)={} peak(non-diff)={} flops={}",
+            an.instructions,
+            fmt_bytes(an.parameter_bytes as f64),
+            fmt_bytes(an.total_intermediate_bytes as f64),
+            fmt_bytes(an.peak_live_bytes as f64),
+            an.flops
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let reg = registry(args)?;
+    let op = args.get_or("op", "laplacian").to_string();
+    let method = args.get_or("method", "collapsed").to_string();
+    let mode = args.get_or("mode", "exact").to_string();
+    let dim = reg
+        .select(&op, &method, &mode)
+        .first()
+        .map(|a| a.dim)
+        .context("no artifacts for that route")?;
+    let n = args.get_usize("n", 8);
+    let seed = args.get_u64("seed", 42);
+
+    let svc = Service::start(reg, ServiceConfig::default())?;
+    let mut rng = Rng::new(seed);
+    let mut pts = vec![0.0f32; n * dim];
+    rng.fill_normal_f32(&mut pts);
+    let resp = svc.eval_blocking(RouteKey::new(&op, &method, &mode), pts, dim)?;
+    println!("{op}/{method}/{mode}  D={dim}  n={n}  latency={:.3}ms", resp.latency_s * 1e3);
+    for i in 0..n.min(8) {
+        println!("  f(x_{i}) = {:+.6}   op(x_{i}) = {:+.6}", resp.f0[i], resp.op[i]);
+    }
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.get_or("which", "all").to_string();
+    let reps = args.get_usize("reps", 10);
+    let reg = registry(args)?;
+    let run = |name: &str| which == "all" || which == name;
+    if run("fig1") {
+        println!("{}", bench::run_fig1(&reg, reps)?);
+    }
+    if run("table1") || which == "fig5" {
+        println!("{}", bench::run_fig5_table1(&reg, reps)?);
+    }
+    if run("f2") {
+        println!("{}", bench::run_table_f2(&reg, reps)?);
+    }
+    if run("g3") || which == "g9" {
+        println!("{}", bench::run_figg9_tableg3(&reg, reps)?);
+    }
+    if run("native") {
+        println!("{}", bench::run_native_ablation(reps.max(5))?);
+    }
+    if run("coordinator") {
+        let reg2 = registry(args)?;
+        println!("{}", bench::run_coordinator_bench(reg2, args.get_usize("requests", 200))?);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::sync::Arc;
+    let reg = registry(args)?;
+    let svc = Arc::new(Service::start(reg, ServiceConfig::default())?);
+    let addr = args.get_or("addr", "127.0.0.1:8042");
+    let server = ctaylor::coordinator::Server::start(svc.clone(), addr)?;
+    println!("serving PDE operators on {} (JSON lines; ctrl-c to stop)", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        println!("{}", svc.metrics().summary());
+    }
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    let reg = registry(args)?;
+    let n = args.get_usize("requests", 100);
+    println!("{}", bench::run_coordinator_bench(reg, n)?);
+    Ok(())
+}

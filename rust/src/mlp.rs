@@ -1,0 +1,94 @@
+//! Native MLP: the benchmark network for the in-Rust engines.
+//!
+//! Mirrors python/compile/model.py (tanh MLP, Glorot init, final layer
+//! linear) so native and AOT results are directly comparable.
+
+use crate::taylor::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// A tanh MLP with explicit (W, b) tensors.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub in_dim: usize,
+    pub widths: Vec<usize>,
+    pub layers: Vec<(Tensor, Tensor)>,
+    /// Batch size used when building static graphs (constant zero seeds
+    /// need a concrete shape).
+    pub batch_hint: usize,
+}
+
+impl Mlp {
+    /// Glorot-uniform init, zero biases (matches model.py).
+    pub fn init(rng: &mut Rng, in_dim: usize, widths: &[usize], batch_hint: usize) -> Mlp {
+        let mut layers = Vec::new();
+        let mut prev = in_dim;
+        for &w in widths {
+            let mut wdata = vec![0.0f32; prev * w];
+            rng.glorot_f32(prev, w, &mut wdata);
+            let wt = Tensor::new(vec![prev, w], wdata.iter().map(|&v| v as f64).collect());
+            let bt = Tensor::zeros(&[w]);
+            layers.push((wt, bt));
+            prev = w;
+        }
+        Mlp { in_dim, widths: widths.to_vec(), layers, batch_hint }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        *self.widths.last().unwrap()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|(w, b)| w.len() + b.len()).sum()
+    }
+
+    /// Plain forward pass `[B, D] -> [B, C]`.
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        let n = self.layers.len();
+        let mut h = x.clone();
+        for (i, (w, b)) in self.layers.iter().enumerate() {
+            h = h.matmul(w).add_bias(b);
+            if i + 1 < n {
+                h = h.map(f64::tanh);
+            }
+        }
+        h
+    }
+
+    /// A batch_hint-sized standard-normal input.
+    pub fn random_input(&self, rng: &mut Rng) -> Tensor {
+        let n = self.batch_hint * self.in_dim;
+        Tensor::new(
+            vec![self.batch_hint, self.in_dim],
+            (0..n).map(|_| rng.normal()).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let mut rng = Rng::new(0);
+        let mlp = Mlp::init(&mut rng, 4, &[8, 3], 5);
+        assert_eq!(mlp.num_params(), 4 * 8 + 8 + 8 * 3 + 3);
+        let x = mlp.random_input(&mut rng);
+        let y = mlp.apply(&x);
+        assert_eq!(y.shape, vec![5, 3]);
+
+        let mut rng2 = Rng::new(0);
+        let mlp2 = Mlp::init(&mut rng2, 4, &[8, 3], 5);
+        let x2 = mlp2.random_input(&mut rng2);
+        assert!(mlp2.apply(&x2).max_abs_diff(&y) == 0.0);
+    }
+
+    #[test]
+    fn output_is_finite() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::init(&mut rng, 2, &[4, 1], 1);
+        let x = Tensor::new(vec![1, 2], vec![0.0, 0.0]);
+        let y = mlp.apply(&x);
+        assert!(y.data[0].is_finite());
+    }
+}

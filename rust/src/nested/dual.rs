@@ -1,0 +1,127 @@
+//! Forward-mode dual numbers, generic over the inner scalar so they nest.
+//!
+//! `Dual<f64>` gives JVPs; `Dual<Dual<f64>>` second directional
+//! derivatives; four levels give the ⟨∂⁴f, v⊗⁴⟩ tensor-vector products of
+//! the paper's stochastic-biharmonic baseline (eq. 9, nested TVPs).
+
+use super::scalar::Scalar;
+
+/// v + ε·t with ε² = 0.
+#[derive(Debug, Clone, Copy)]
+pub struct Dual<S: Scalar> {
+    pub v: S,
+    pub t: S,
+}
+
+impl<S: Scalar> Dual<S> {
+    pub fn constant(v: S) -> Self {
+        Dual { v, t: S::zero() }
+    }
+
+    pub fn seeded(v: S, t: S) -> Self {
+        Dual { v, t }
+    }
+}
+
+impl<S: Scalar> Scalar for Dual<S> {
+    fn zero() -> Self {
+        Dual { v: S::zero(), t: S::zero() }
+    }
+
+    fn one() -> Self {
+        Dual { v: S::one(), t: S::zero() }
+    }
+
+    fn from_f64(x: f64) -> Self {
+        Dual { v: S::from_f64(x), t: S::zero() }
+    }
+
+    fn add(self, o: Self) -> Self {
+        Dual { v: self.v.add(o.v), t: self.t.add(o.t) }
+    }
+
+    fn sub(self, o: Self) -> Self {
+        Dual { v: self.v.sub(o.v), t: self.t.sub(o.t) }
+    }
+
+    fn mul(self, o: Self) -> Self {
+        Dual { v: self.v.mul(o.v), t: self.v.mul(o.t).add(self.t.mul(o.v)) }
+    }
+
+    fn neg(self) -> Self {
+        Dual { v: self.v.neg(), t: self.t.neg() }
+    }
+
+    fn tanh(self) -> Self {
+        let tv = self.v.tanh();
+        // d tanh = (1 - tanh²) dx
+        let u = S::one().sub(tv.mul(tv));
+        Dual { v: tv, t: u.mul(self.t) }
+    }
+
+    fn value(self) -> f64 {
+        self.v.value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_derivative_of_tanh() {
+        let x = Dual::seeded(0.3f64, 1.0);
+        let y = x.tanh();
+        let t = 0.3f64.tanh();
+        assert!((y.v - t).abs() < 1e-15);
+        assert!((y.t - (1.0 - t * t)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn product_rule() {
+        // d/dx [x * tanh(x)] = tanh(x) + x (1 - tanh²)
+        let x = Dual::seeded(0.7f64, 1.0);
+        let y = x.mul(x.tanh());
+        let t = 0.7f64.tanh();
+        assert!((y.t - (t + 0.7 * (1.0 - t * t))).abs() < 1e-14);
+    }
+
+    #[test]
+    fn nested_duals_give_second_derivative() {
+        // f(x) = tanh(x); f''(x) = -2 tanh (1 - tanh²)
+        type D2 = Dual<Dual<f64>>;
+        let x: D2 = Dual {
+            v: Dual { v: 0.4, t: 1.0 },
+            t: Dual { v: 1.0, t: 0.0 },
+        };
+        let y = x.tanh();
+        let t = 0.4f64.tanh();
+        let u = 1.0 - t * t;
+        assert!((y.t.t - (-2.0 * t * u)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn four_level_tower_gives_fourth_derivative() {
+        // tanh'''' = t·u·(16 − 24 t²)
+        type D1 = Dual<f64>;
+        type D2 = Dual<D1>;
+        type D3 = Dual<D2>;
+        type D4 = Dual<D3>;
+        // Seed every level's tangent with 1 at the innermost value.
+        fn seed(x: f64) -> D4 {
+            let mut v: D4 = Scalar::from_f64(x);
+            // set each level's tangent to 1 (direction = 1 in 1-D)
+            v.t = Scalar::one();
+            v.v.t = Scalar::one();
+            v.v.v.t = Scalar::one();
+            v.v.v.v.t = 1.0;
+            v
+        }
+        let y = seed(0.2).tanh();
+        let d4 = y.t.t.t.t;
+        let t = 0.2f64.tanh();
+        let u = 1.0 - t * t;
+        let expect = t * u * (16.0 - 24.0 * t * t);
+        assert!((d4 - expect).abs() < 1e-12, "{d4} vs {expect}");
+    }
+}

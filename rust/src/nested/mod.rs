@@ -1,0 +1,234 @@
+//! Nested first-order AD — the paper's baseline, implemented natively.
+//!
+//! Second-order operators use vector-Hessian-vector products in the
+//! recommended *forward-over-reverse* order (paper §4, citing Dagréou et
+//! al.): a hand-rolled reverse pass through the MLP runs on [`Dual`]
+//! scalars, so its output gradient carries the tangent H·v.  Fourth-order
+//! terms (the stochastic biharmonic baseline) use four nested forward
+//! modes — exactly the TVP fallback the paper describes as necessary for
+//! general operators.
+
+pub mod dual;
+pub mod scalar;
+
+use crate::mlp::Mlp;
+use crate::taylor::tensor::Tensor;
+use dual::Dual;
+use scalar::Scalar;
+
+/// Generic single-point forward pass; returns pre-activations per layer
+/// and the scalar output (sum of outputs if C > 1).
+fn forward_acts<S: Scalar>(mlp: &Mlp, x: &[S]) -> (Vec<Vec<S>>, S) {
+    let n = mlp.layers.len();
+    let mut acts: Vec<Vec<S>> = vec![x.to_vec()];
+    for (i, (w, b)) in mlp.layers.iter().enumerate() {
+        let (fi, fo) = (w.shape[0], w.shape[1]);
+        let prev = acts.last().unwrap();
+        let mut h: Vec<S> = (0..fo).map(|o| S::from_f64(b.data[o])).collect();
+        for (k, &xv) in prev.iter().enumerate().take(fi) {
+            for (o, hv) in h.iter_mut().enumerate() {
+                *hv = hv.add(xv.mul(S::from_f64(w.data[k * fo + o])));
+            }
+        }
+        if i + 1 < n {
+            for hv in h.iter_mut() {
+                *hv = hv.tanh();
+            }
+        }
+        acts.push(h);
+    }
+    let out = acts
+        .last()
+        .unwrap()
+        .iter()
+        .fold(S::zero(), |acc, &v| acc.add(v));
+    (acts, out)
+}
+
+/// Reverse pass: gradient of the scalar output w.r.t. the input, generic
+/// over the scalar type (running it on `Dual` = forward-over-reverse).
+fn grad_input<S: Scalar>(mlp: &Mlp, x: &[S]) -> Vec<S> {
+    let n = mlp.layers.len();
+    let (acts, _) = forward_acts(mlp, x);
+    // Seed: d(sum outputs)/d(output_j) = 1.
+    let mut bar: Vec<S> = vec![S::one(); mlp.out_dim()];
+    for i in (0..n).rev() {
+        let (w, _) = &mlp.layers[i];
+        let (fi, fo) = (w.shape[0], w.shape[1]);
+        // Through the activation (post-act values are acts[i+1] for
+        // non-final layers: tanh' = 1 - t²).
+        if i + 1 < n {
+            for (j, b) in bar.iter_mut().enumerate() {
+                let t = acts[i + 1][j];
+                let u = S::one().sub(t.mul(t));
+                *b = b.mul(u);
+            }
+        }
+        // Through the linear map: bar_in = W · bar_out.
+        let mut prev_bar: Vec<S> = vec![S::zero(); fi];
+        for (k, pb) in prev_bar.iter_mut().enumerate() {
+            for (o, &bv) in bar.iter().enumerate().take(fo) {
+                *pb = pb.add(bv.mul(S::from_f64(w.data[k * fo + o])));
+            }
+        }
+        bar = prev_bar;
+    }
+    bar
+}
+
+/// v^T H v at one point via forward-over-reverse (paper §4's VHVP).
+pub fn vhvp(mlp: &Mlp, x: &[f64], v: &[f64]) -> f64 {
+    let xd: Vec<Dual<f64>> = x
+        .iter()
+        .zip(v)
+        .map(|(&xv, &tv)| Dual::seeded(xv, tv))
+        .collect();
+    let g = grad_input(mlp, &xd);
+    g.iter().zip(v).map(|(gv, &vv)| gv.t * vv).sum()
+}
+
+/// (Weighted/stochastic) Laplacian: Σ_r v_r^T H v_r · scale per batch row.
+/// dirs: `[R, D]` rows (None ⇒ identity basis).
+pub fn laplacian(mlp: &Mlp, x0: &Tensor, dirs: Option<&Tensor>, scale: f64) -> Tensor {
+    let (b, d) = (x0.shape[0], x0.shape[1]);
+    let eye = crate::operators::basis(d);
+    let dirs = dirs.unwrap_or(&eye);
+    let r = dirs.shape[0];
+    let mut out = Tensor::zeros(&[b, 1]);
+    for bi in 0..b {
+        let x = &x0.data[bi * d..(bi + 1) * d];
+        let mut acc = 0.0;
+        for ri in 0..r {
+            let v = &dirs.data[ri * d..(ri + 1) * d];
+            acc += vhvp(mlp, x, v);
+        }
+        out.data[bi] = acc * scale;
+    }
+    out
+}
+
+type D1 = Dual<f64>;
+type D2 = Dual<D1>;
+type D3 = Dual<D2>;
+type D4 = Dual<D3>;
+
+/// ⟨∂⁴f(x), v1⊗v2⊗v3⊗v4⟩ via a four-level dual tower (nested TVPs).
+pub fn tvp4(mlp: &Mlp, x: &[f64], v1: &[f64], v2: &[f64], v3: &[f64], v4: &[f64]) -> f64 {
+    let xd: Vec<D4> = x
+        .iter()
+        .enumerate()
+        .map(|(i, &xv)| {
+            let mut s: D4 = Scalar::from_f64(xv);
+            s.t = Scalar::from_f64(v4[i]);
+            s.v.t = Scalar::from_f64(v3[i]);
+            s.v.v.t = Scalar::from_f64(v2[i]);
+            s.v.v.v.t = v1[i];
+            s
+        })
+        .collect();
+    let (_, y) = forward_acts(mlp, &xd);
+    y.t.t.t.t
+}
+
+/// Exact biharmonic by naive nested TVPs: Σ_{d1,d2} ⟨∂⁴f, e_{d1}²⊗e_{d2}²⟩.
+/// This is the "general operator" fallback the paper's footnote 2
+/// describes (the Δ(Δ·) trick is benchmarked at the AOT layer instead).
+pub fn biharmonic_tvp(mlp: &Mlp, x0: &Tensor) -> Tensor {
+    let (b, d) = (x0.shape[0], x0.shape[1]);
+    let eye = crate::operators::basis(d);
+    let mut out = Tensor::zeros(&[b, 1]);
+    for bi in 0..b {
+        let x = &x0.data[bi * d..(bi + 1) * d];
+        let mut acc = 0.0;
+        for d1 in 0..d {
+            let e1 = &eye.data[d1 * d..(d1 + 1) * d];
+            for d2 in 0..d {
+                let e2 = &eye.data[d2 * d..(d2 + 1) * d];
+                acc += tvp4(mlp, x, e1, e1, e2, e2);
+            }
+        }
+        out.data[bi] = acc;
+    }
+    out
+}
+
+/// Stochastic biharmonic baseline (eq. 9) with Gaussian directions:
+/// unbiased scale 1/(3S) (see operators::stochastic_biharmonic_native).
+pub fn stochastic_biharmonic_tvp(mlp: &Mlp, x0: &Tensor, dirs: &Tensor) -> Tensor {
+    let (b, d) = (x0.shape[0], x0.shape[1]);
+    let s = dirs.shape[0];
+    let mut out = Tensor::zeros(&[b, 1]);
+    for bi in 0..b {
+        let x = &x0.data[bi * d..(bi + 1) * d];
+        let mut acc = 0.0;
+        for si in 0..s {
+            let v = &dirs.data[si * d..(si + 1) * d];
+            acc += tvp4(mlp, x, v, v, v, v);
+        }
+        out.data[bi] = acc / (3.0 * s as f64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn nested_laplacian_matches_taylor_engines() {
+        let mut rng = Rng::new(4);
+        let mlp = Mlp::init(&mut rng, 4, &[9, 7, 1], 3);
+        let x = mlp.random_input(&mut rng);
+        let lap_nested = laplacian(&mlp, &x, None, 1.0);
+        let (_, lap_col) = operators::laplacian_native(&mlp, &x, true);
+        assert!(
+            lap_nested.max_abs_diff(&lap_col) < 1e-10,
+            "nested vs collapsed Taylor"
+        );
+    }
+
+    #[test]
+    fn tvp4_matches_taylor_4jet() {
+        let mut rng = Rng::new(5);
+        let mlp = Mlp::init(&mut rng, 3, &[6, 1], 1);
+        let x = mlp.random_input(&mut rng);
+        let mut v = vec![0.0; 3];
+        v[1] = 1.0;
+        let d4_nested = tvp4(&mlp, &x.data, &v, &v, &v, &v);
+        // 4-jet along v: highest coefficient = <∂⁴f, v⊗⁴>
+        let dirs = Tensor::new(vec![1, 3], v.clone());
+        let (_, d4_jet) = operators::taylor_sum_highest(&mlp, &x, &dirs, 4, true, 1.0);
+        assert!(
+            (d4_nested - d4_jet.data[0]).abs() < 1e-9,
+            "{d4_nested} vs {}",
+            d4_jet.data[0]
+        );
+    }
+
+    #[test]
+    fn biharmonic_tvp_matches_interpolation() {
+        let mut rng = Rng::new(6);
+        let mlp = Mlp::init(&mut rng, 3, &[8, 1], 2);
+        let x = mlp.random_input(&mut rng);
+        let bih_nested = biharmonic_tvp(&mlp, &x);
+        let (_, bih_taylor) = operators::biharmonic_native(&mlp, &x, true);
+        assert!(
+            bih_nested.max_abs_diff(&bih_taylor) < 1e-8,
+            "TVP biharmonic vs Griewank interpolation"
+        );
+    }
+
+    #[test]
+    fn vhvp_symmetry_in_direction_sign() {
+        let mut rng = Rng::new(7);
+        let mlp = Mlp::init(&mut rng, 4, &[5, 1], 1);
+        let x = mlp.random_input(&mut rng);
+        let v = vec![0.3, -0.2, 0.9, 0.1];
+        let vn: Vec<f64> = v.iter().map(|&a| -a).collect();
+        let a = vhvp(&mlp, &x.data, &v);
+        let b = vhvp(&mlp, &x.data, &vn);
+        assert!((a - b).abs() < 1e-12, "v^T H v is sign-invariant");
+    }
+}

@@ -1,0 +1,56 @@
+//! Generic scalar trait so AD composes by *nesting* (the paper's baseline):
+//! reverse-mode runs over any scalar type, and forward-mode duals stack to
+//! arbitrary depth (`Dual<Dual<f64>>` = second order, four levels = the
+//! TVPs the stochastic biharmonic baseline needs).
+
+/// Field-like operations every AD-able scalar supports.
+pub trait Scalar: Clone + Copy + std::fmt::Debug {
+    fn zero() -> Self;
+    fn one() -> Self;
+    fn from_f64(v: f64) -> Self;
+    fn add(self, o: Self) -> Self;
+    fn sub(self, o: Self) -> Self;
+    fn mul(self, o: Self) -> Self;
+    fn neg(self) -> Self;
+    fn tanh(self) -> Self;
+    /// The value component (recursively discarding tangents).
+    fn value(self) -> f64;
+}
+
+impl Scalar for f64 {
+    fn zero() -> Self {
+        0.0
+    }
+
+    fn one() -> Self {
+        1.0
+    }
+
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+
+    fn mul(self, o: Self) -> Self {
+        self * o
+    }
+
+    fn neg(self) -> Self {
+        -self
+    }
+
+    fn tanh(self) -> Self {
+        f64::tanh(self)
+    }
+
+    fn value(self) -> f64 {
+        self
+    }
+}

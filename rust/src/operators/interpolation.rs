@@ -1,0 +1,264 @@
+//! Griewank–Utke–Walther interpolation coefficients γ_{i,j} (paper eq. E17)
+//! in exact rational arithmetic, plus the biharmonic family plan (eq. E22).
+//!
+//! Mirrors python/compile/interpolation.py; the unit tests pin the γ values
+//! of paper fig. 4 so both languages provably agree.
+
+use crate::taylor::tensor::Tensor;
+
+/// Exact rational over i128 (the γ sums involve small factorials only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rational {
+    pub num: i128,
+    pub den: i128, // > 0
+}
+
+fn gcd(a: i128, b: i128) -> i128 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a.max(1)
+}
+
+impl Rational {
+    pub fn new(num: i128, den: i128) -> Rational {
+        assert!(den != 0, "zero denominator");
+        let sign = if den < 0 { -1 } else { 1 };
+        let g = gcd(num, den);
+        Rational { num: sign * num / g, den: sign * den / g }
+    }
+
+    pub fn zero() -> Rational {
+        Rational { num: 0, den: 1 }
+    }
+
+    pub fn one() -> Rational {
+        Rational { num: 1, den: 1 }
+    }
+
+    pub fn from_int(n: i128) -> Rational {
+        Rational { num: n, den: 1 }
+    }
+
+    pub fn add(self, o: Rational) -> Rational {
+        Rational::new(self.num * o.den + o.num * self.den, self.den * o.den)
+    }
+
+    pub fn mul(self, o: Rational) -> Rational {
+        Rational::new(self.num * o.num, self.den * o.den)
+    }
+
+    pub fn neg(self) -> Rational {
+        Rational { num: -self.num, den: self.den }
+    }
+
+    pub fn pow(self, e: u32) -> Rational {
+        let mut out = Rational::one();
+        for _ in 0..e {
+            out = out.mul(self);
+        }
+        out
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+}
+
+/// Generalized binomial coefficient ∏_{l=0}^{b-1} (a - l)/(b - l) with
+/// rational a (paper eq. E18); equals 1 for b = 0.
+pub fn gen_binomial(a: Rational, b: usize) -> Rational {
+    let mut out = Rational::one();
+    for l in 0..b {
+        let num = a.add(Rational::from_int(-(l as i128)));
+        let den = Rational::from_int((b - l) as i128);
+        out = out.mul(num).mul(Rational::new(den.den, den.num));
+    }
+    out
+}
+
+/// All j ∈ N^parts with Σ j = total, lexicographic.
+pub fn compositions(total: usize, parts: usize) -> Vec<Vec<usize>> {
+    if parts == 1 {
+        return vec![vec![total]];
+    }
+    let mut out = Vec::new();
+    for head in 0..=total {
+        for tail in compositions(total - head, parts - 1) {
+            let mut j = Vec::with_capacity(parts);
+            j.push(head);
+            j.extend(tail);
+            out.push(j);
+        }
+    }
+    out
+}
+
+/// γ_{i,j} of paper eq. E17:
+/// γ = Σ_{0<m≤i} (-1)^{|i-m|₁} C(i,m) C(|i|₁·m/|m|₁, j) (|m|₁/|i|₁)^{|i|₁}
+pub fn gamma(i: &[usize], j: &[usize]) -> Rational {
+    let k: usize = i.iter().sum();
+    assert_eq!(j.iter().sum::<usize>(), k, "j must sum to |i|_1");
+    let mut total = Rational::zero();
+    // iterate m over the box 0..=i componentwise
+    let mut m = vec![0usize; i.len()];
+    loop {
+        // advance odometer
+        let mut idx = 0;
+        loop {
+            if idx == i.len() {
+                return total;
+            }
+            m[idx] += 1;
+            if m[idx] <= i[idx] {
+                break;
+            }
+            m[idx] = 0;
+            idx += 1;
+        }
+        let m1: usize = m.iter().sum();
+        if m1 == 0 {
+            continue;
+        }
+        let sign = if (k - m1) % 2 == 1 { -1 } else { 1 };
+        // C(i, m) componentwise (ordinary binomials)
+        let mut c_im = Rational::one();
+        for (&ii, &mi) in i.iter().zip(&m) {
+            c_im = c_im.mul(gen_binomial(Rational::from_int(ii as i128), mi));
+        }
+        // C(K·m/|m|₁, j) componentwise with rational upper entries
+        let mut c_bj = Rational::one();
+        for (&mi, &ji) in m.iter().zip(j) {
+            let upper = Rational::new((k * mi) as i128, m1 as i128);
+            c_bj = c_bj.mul(gen_binomial(upper, ji));
+        }
+        let scale = Rational::new(m1 as i128, k as i128).pow(k as u32);
+        let mut term = c_im.mul(c_bj).mul(scale);
+        if sign < 0 {
+            term = term.neg();
+        }
+        total = total.add(term);
+    }
+}
+
+/// The collapsed biharmonic plan (paper eq. E22): three direction families
+/// with γ-derived weights.  `Δ²f = w_A·S_A + w_B·S_B + w_C·S_C` where each
+/// S is the collapsed sum of 4th jet coefficients over the family.
+#[derive(Debug, Clone)]
+pub struct BiharmonicPlan {
+    pub dim: usize,
+    pub w_a: f64,
+    pub w_b: f64,
+    pub w_c: f64,
+}
+
+impl BiharmonicPlan {
+    pub fn new(dim: usize) -> BiharmonicPlan {
+        let g40 = gamma(&[2, 2], &[4, 0]);
+        let g04 = gamma(&[2, 2], &[0, 4]);
+        let g31 = gamma(&[2, 2], &[3, 1]);
+        let g13 = gamma(&[2, 2], &[1, 3]);
+        let g22 = gamma(&[2, 2], &[2, 2]);
+        assert_eq!(g40, g04, "γ symmetry (4,0)≡(0,4)");
+        assert_eq!(g31, g13, "γ symmetry (3,1)≡(1,3)");
+        let inv24 = 1.0 / 24.0;
+        BiharmonicPlan {
+            dim,
+            w_a: (2.0 * dim as f64 * g40.to_f64() + 2.0 * g31.to_f64() + g22.to_f64()) * inv24,
+            w_b: 2.0 * g31.to_f64() * inv24,
+            w_c: 2.0 * g22.to_f64() * inv24,
+        }
+    }
+
+    /// Family A: 4·e_d, `[D, D]`.
+    pub fn directions_a(&self) -> Tensor {
+        let d = self.dim;
+        let mut t = Tensor::zeros(&[d, d]);
+        for i in 0..d {
+            t.data[i * d + i] = 4.0;
+        }
+        t
+    }
+
+    /// Family B: 3·e_{d1} + e_{d2}, d1 ≠ d2, `[D(D-1), D]`.
+    pub fn directions_b(&self) -> Tensor {
+        let d = self.dim;
+        let mut rows = Vec::new();
+        for d1 in 0..d {
+            for d2 in 0..d {
+                if d1 == d2 {
+                    continue;
+                }
+                let mut r = vec![0.0; d];
+                r[d1] += 3.0;
+                r[d2] += 1.0;
+                rows.push(r);
+            }
+        }
+        Tensor::new(vec![rows.len(), d], rows.concat())
+    }
+
+    /// Family C: 2·e_{d1} + 2·e_{d2}, d1 < d2, `[D(D-1)/2, D]`.
+    pub fn directions_c(&self) -> Tensor {
+        let d = self.dim;
+        let mut rows = Vec::new();
+        for d1 in 0..d {
+            for d2 in d1 + 1..d {
+                let mut r = vec![0.0; d];
+                r[d1] = 2.0;
+                r[d2] = 2.0;
+                rows.push(r);
+            }
+        }
+        Tensor::new(vec![rows.len(), d], rows.concat())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_values_match_paper_fig4() {
+        // From python/compile/interpolation.py (validated vs brute force):
+        // γ_{(2,2),(4,0)} = 13/192, γ_{(2,2),(3,1)} = -1/3,
+        // γ_{(2,2),(2,2)} = 5/8, symmetric partners equal.
+        assert_eq!(gamma(&[2, 2], &[4, 0]), Rational::new(13, 192));
+        assert_eq!(gamma(&[2, 2], &[0, 4]), Rational::new(13, 192));
+        assert_eq!(gamma(&[2, 2], &[3, 1]), Rational::new(-1, 3));
+        assert_eq!(gamma(&[2, 2], &[1, 3]), Rational::new(-1, 3));
+        assert_eq!(gamma(&[2, 2], &[2, 2]), Rational::new(5, 8));
+    }
+
+    #[test]
+    fn pure_direction_gamma_reduces_identity() {
+        // i = (K), I = 1: eq. 11 reads ⟨∂^K f, v^⊗K⟩ =
+        // γ_{(K),(K)}/K! · ⟨∂^K f, (K·v)^⊗K⟩, so γ_{(K),(K)} = K!/K^K.
+        for k in 1..=5usize {
+            let g = gamma(&[k], &[k]);
+            let kfact: i128 = (1..=k as i128).product();
+            let kpow: i128 = (k as i128).pow(k as u32);
+            assert_eq!(g, Rational::new(kfact, kpow), "K = {k}");
+        }
+    }
+
+    #[test]
+    fn family_shapes() {
+        let plan = BiharmonicPlan::new(4);
+        assert_eq!(plan.directions_a().shape, vec![4, 4]);
+        assert_eq!(plan.directions_b().shape, vec![12, 4]);
+        assert_eq!(plan.directions_c().shape, vec![6, 4]);
+    }
+
+    #[test]
+    fn rational_arithmetic() {
+        let a = Rational::new(1, 3).add(Rational::new(1, 6));
+        assert_eq!(a, Rational::new(1, 2));
+        assert_eq!(Rational::new(2, 4), Rational::new(1, 2));
+        assert_eq!(Rational::new(1, -2), Rational::new(-1, 2));
+        assert_eq!(gen_binomial(Rational::new(7, 2), 2), Rational::new(35, 8));
+    }
+}

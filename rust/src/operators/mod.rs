@@ -1,0 +1,262 @@
+//! PDE operators on the native engines: Laplacian, weighted Laplacian and
+//! biharmonic, each in nested-AD, standard-Taylor and collapsed-Taylor
+//! variants, exact and stochastic (paper §3.2–3.3).
+
+pub mod interpolation;
+pub mod stochastic;
+
+use crate::mlp::Mlp;
+use crate::nested;
+use crate::taylor::jet::{
+    elementwise_col, elementwise_std, linear_col, linear_std, JetCol, JetStd,
+};
+use crate::taylor::rules::Tanh;
+use crate::taylor::tensor::Tensor;
+
+pub use interpolation::BiharmonicPlan;
+
+/// Push a standard jet bundle through the MLP (final layer linear).
+pub fn mlp_jet_std(mlp: &Mlp, mut jet: JetStd) -> JetStd {
+    let n = mlp.layers.len();
+    for (i, (w, b)) in mlp.layers.iter().enumerate() {
+        jet = linear_std(&jet, w, Some(b));
+        if i + 1 < n {
+            jet = elementwise_std(&jet, &Tanh);
+        }
+    }
+    jet
+}
+
+/// Push a collapsed jet bundle through the MLP.
+pub fn mlp_jet_col(mlp: &Mlp, mut jet: JetCol) -> JetCol {
+    let n = mlp.layers.len();
+    for (i, (w, b)) in mlp.layers.iter().enumerate() {
+        jet = linear_col(&jet, w, Some(b));
+        if i + 1 < n {
+            jet = elementwise_col(&jet, &Tanh);
+        }
+    }
+    jet
+}
+
+/// Identity directions `[D, D]`.
+pub fn basis(dim: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[dim, dim]);
+    for i in 0..dim {
+        t.data[i * dim + i] = 1.0;
+    }
+    t
+}
+
+/// Σ_r of the K-th jet coefficient along `dirs` (`[R, D]` or `[R, B, D]`),
+/// scaled — the common building block of paper eq. (5).
+pub fn taylor_sum_highest(
+    mlp: &Mlp,
+    x0: &Tensor,
+    dirs: &Tensor,
+    order: usize,
+    collapsed: bool,
+    scale: f64,
+) -> (Tensor, Tensor) {
+    if collapsed {
+        let jet = JetCol::seed(x0, dirs, order);
+        let out = mlp_jet_col(mlp, jet);
+        (out.x0.clone(), out.highest_sum().scale(scale))
+    } else {
+        let jet = JetStd::seed(x0, dirs, order);
+        let out = mlp_jet_std(mlp, jet);
+        (out.x0.clone(), out.highest_sum().scale(scale))
+    }
+}
+
+/// Exact Laplacian via 2-jets (collapsed = the forward Laplacian).
+pub fn laplacian_native(mlp: &Mlp, x0: &Tensor, collapsed: bool) -> (Tensor, Tensor) {
+    let dirs = basis(x0.shape[1]);
+    taylor_sum_highest(mlp, x0, &dirs, 2, collapsed, 1.0)
+}
+
+/// Weighted Laplacian: directions = columns of σ (`[D, R]`), paper eq. 8b.
+pub fn weighted_laplacian_native(
+    mlp: &Mlp,
+    x0: &Tensor,
+    sigma: &Tensor,
+    collapsed: bool,
+) -> (Tensor, Tensor) {
+    let (d, r) = (sigma.shape[0], sigma.shape[1]);
+    // transpose to [R, D] rows
+    let mut dirs = Tensor::zeros(&[r, d]);
+    for i in 0..d {
+        for j in 0..r {
+            dirs.data[j * d + i] = sigma.data[i * r + j];
+        }
+    }
+    taylor_sum_highest(mlp, x0, &dirs, 2, collapsed, 1.0)
+}
+
+/// Stochastic Laplacian: 1/S Σ v_s^T H v_s along sampled dirs `[S, D]`.
+pub fn stochastic_laplacian_native(
+    mlp: &Mlp,
+    x0: &Tensor,
+    dirs: &Tensor,
+    collapsed: bool,
+) -> (Tensor, Tensor) {
+    let s = dirs.shape[0] as f64;
+    taylor_sum_highest(mlp, x0, dirs, 2, collapsed, 1.0 / s)
+}
+
+/// Exact biharmonic via the Griewank interpolation families (eq. E22).
+pub fn biharmonic_native(mlp: &Mlp, x0: &Tensor, collapsed: bool) -> (Tensor, Tensor) {
+    let plan = BiharmonicPlan::new(x0.shape[1]);
+    let fams = [
+        (plan.directions_a(), plan.w_a),
+        (plan.directions_b(), plan.w_b),
+        (plan.directions_c(), plan.w_c),
+    ];
+    let mut f0 = None;
+    let mut total: Option<Tensor> = None;
+    for (dirs, w) in fams {
+        let (v0, s) = taylor_sum_highest(mlp, x0, &dirs, 4, collapsed, w);
+        f0 = Some(v0);
+        total = Some(match total {
+            Some(t) => t.add(&s),
+            None => s,
+        });
+    }
+    (f0.unwrap(), total.unwrap())
+}
+
+/// Stochastic biharmonic (eq. 9) via 4-jets along *Gaussian* directions.
+/// Isserlis: E⟨∂⁴f, v⊗⁴⟩ = 3 Δ²f, so the unbiased scale is 1/(3S) (the
+/// paper's D/S prefactor belongs to a different direction distribution).
+pub fn stochastic_biharmonic_native(
+    mlp: &Mlp,
+    x0: &Tensor,
+    dirs: &Tensor,
+    collapsed: bool,
+) -> (Tensor, Tensor) {
+    let s = dirs.shape[0] as f64;
+    taylor_sum_highest(mlp, x0, dirs, 4, collapsed, 1.0 / (3.0 * s))
+}
+
+/// Nested-AD exact Laplacian baseline (re-export for symmetry).
+pub fn laplacian_nested_native(mlp: &Mlp, x0: &Tensor) -> (Tensor, Tensor) {
+    (mlp.apply(x0), nested::laplacian(mlp, x0, None, 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn setup(dim: usize, batch: usize) -> (Mlp, Tensor, Rng) {
+        let mut rng = Rng::new(12);
+        let mlp = Mlp::init(&mut rng, dim, &[10, 8, 1], batch);
+        let x = mlp.random_input(&mut rng);
+        (mlp, x, rng)
+    }
+
+    /// Finite-difference Laplacian oracle.
+    fn fd_laplacian(mlp: &Mlp, x0: &Tensor) -> Tensor {
+        let (b, d) = (x0.shape[0], x0.shape[1]);
+        let h = 1e-5;
+        let f = |x: &Tensor| mlp.apply(x);
+        let base = f(x0);
+        let mut out = Tensor::zeros(&[b, 1]);
+        for di in 0..d {
+            let mut xp = x0.clone();
+            let mut xm = x0.clone();
+            for bi in 0..b {
+                xp.data[bi * d + di] += h;
+                xm.data[bi * d + di] -= h;
+            }
+            let fp = f(&xp);
+            let fm = f(&xm);
+            for bi in 0..b {
+                out.data[bi] += (fp.data[bi] - 2.0 * base.data[bi] + fm.data[bi]) / (h * h);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn laplacian_std_col_and_fd_agree() {
+        let (mlp, x, _) = setup(4, 3);
+        let (_, lap_s) = laplacian_native(&mlp, &x, false);
+        let (_, lap_c) = laplacian_native(&mlp, &x, true);
+        let lap_fd = fd_laplacian(&mlp, &x);
+        assert!(lap_s.max_abs_diff(&lap_c) < 1e-12, "std vs collapsed");
+        for i in 0..3 {
+            assert!(
+                (lap_s.data[i] - lap_fd.data[i]).abs() < 1e-4,
+                "vs finite differences: {} vs {}",
+                lap_s.data[i],
+                lap_fd.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_laplacian_identity_sigma_is_laplacian() {
+        let (mlp, x, _) = setup(4, 2);
+        let sigma = basis(4);
+        let (_, wlap) = weighted_laplacian_native(&mlp, &x, &sigma, true);
+        let (_, lap) = laplacian_native(&mlp, &x, true);
+        assert!(wlap.max_abs_diff(&lap) < 1e-12);
+    }
+
+    #[test]
+    fn stochastic_laplacian_is_unbiased() {
+        let (mlp, x, mut rng) = setup(3, 1);
+        let (_, lap) = laplacian_native(&mlp, &x, true);
+        let trials = 3000;
+        let s = 4;
+        let mut mean = 0.0;
+        for _ in 0..trials {
+            let mut dirs = Tensor::zeros(&[s, 3]);
+            for v in dirs.data.iter_mut() {
+                *v = rng.rademacher();
+            }
+            let (_, est) = stochastic_laplacian_native(&mlp, &x, &dirs, true);
+            mean += est.data[0] / trials as f64;
+        }
+        assert!(
+            (mean - lap.data[0]).abs() < 0.05 * (1.0 + lap.data[0].abs()),
+            "stochastic mean {mean} vs exact {}",
+            lap.data[0]
+        );
+    }
+
+    #[test]
+    fn biharmonic_matches_fd_of_laplacian() {
+        let (mlp, x, _) = setup(3, 2);
+        let (_, bih_c) = biharmonic_native(&mlp, &x, true);
+        let (_, bih_s) = biharmonic_native(&mlp, &x, false);
+        assert!(bih_c.max_abs_diff(&bih_s) < 1e-9, "std vs collapsed");
+        // FD of the (exact jet) Laplacian in each coordinate.
+        let (b, d) = (x.shape[0], x.shape[1]);
+        let h = 1e-4;
+        let mut fd = Tensor::zeros(&[b, 1]);
+        let lap = |xq: &Tensor| laplacian_native(&mlp, xq, true).1;
+        let base = lap(&x);
+        for di in 0..d {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            for bi in 0..b {
+                xp.data[bi * d + di] += h;
+                xm.data[bi * d + di] -= h;
+            }
+            let (fp, fm) = (lap(&xp), lap(&xm));
+            for bi in 0..b {
+                fd.data[bi] += (fp.data[bi] - 2.0 * base.data[bi] + fm.data[bi]) / (h * h);
+            }
+        }
+        for i in 0..b {
+            assert!(
+                (bih_c.data[i] - fd.data[i]).abs() < 2e-3 * (1.0 + fd.data[i].abs()),
+                "biharmonic {} vs fd {}",
+                bih_c.data[i],
+                fd.data[i]
+            );
+        }
+    }
+}

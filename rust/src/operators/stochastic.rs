@@ -1,0 +1,88 @@
+//! Direction sampling for the stochastic estimators (paper eq. 7a/8a/9).
+//!
+//! Any unit-variance i.i.d. distribution gives an unbiased Hutchinson-style
+//! trace estimate; the paper uses Rademacher or standard Gaussian.
+
+use crate::taylor::tensor::Tensor;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DirectionDist {
+    Rademacher,
+    Gaussian,
+}
+
+/// Sample `[S, D]` directions.
+pub fn sample_dirs(rng: &mut Rng, dist: DirectionDist, s: usize, d: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[s, d]);
+    match dist {
+        DirectionDist::Rademacher => {
+            for v in t.data.iter_mut() {
+                *v = rng.rademacher();
+            }
+        }
+        DirectionDist::Gaussian => {
+            for v in t.data.iter_mut() {
+                *v = rng.normal();
+            }
+        }
+    }
+    t
+}
+
+/// Premultiply sampled directions by σ (`[D, R]`) for the weighted
+/// stochastic Laplacian: rows become σ·v_s (paper eq. 8a).
+pub fn premultiply_sigma(dirs: &Tensor, sigma: &Tensor) -> Tensor {
+    // dirs [S, R] @ sigma^T [R, D] -> [S, D]
+    let (d, r) = (sigma.shape[0], sigma.shape[1]);
+    let s = dirs.shape[0];
+    assert_eq!(dirs.shape[1], r, "dirs width must match rank(σ)");
+    let mut out = Tensor::zeros(&[s, d]);
+    for si in 0..s {
+        for di in 0..d {
+            let mut acc = 0.0;
+            for ri in 0..r {
+                acc += sigma.data[di * r + ri] * dirs.data[si * r + ri];
+            }
+            out.data[si * d + di] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rademacher_entries_are_pm1() {
+        let mut rng = Rng::new(1);
+        let t = sample_dirs(&mut rng, DirectionDist::Rademacher, 8, 5);
+        assert!(t.data.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn gaussian_unit_variance() {
+        let mut rng = Rng::new(2);
+        let t = sample_dirs(&mut rng, DirectionDist::Gaussian, 2000, 4);
+        let var: f64 = t.data.iter().map(|v| v * v).sum::<f64>() / t.data.len() as f64;
+        assert!((var - 1.0).abs() < 0.05, "variance {var}");
+    }
+
+    #[test]
+    fn sigma_premultiply_identity() {
+        let mut rng = Rng::new(3);
+        let dirs = sample_dirs(&mut rng, DirectionDist::Rademacher, 4, 3);
+        let eye = crate::operators::basis(3);
+        let out = premultiply_sigma(&dirs, &eye);
+        assert!(out.max_abs_diff(&dirs) == 0.0);
+    }
+
+    #[test]
+    fn sigma_premultiply_scales() {
+        let dirs = Tensor::new(vec![1, 2], vec![1.0, -1.0]);
+        let sigma = Tensor::new(vec![2, 2], vec![2.0, 0.0, 0.0, 3.0]);
+        let out = premultiply_sigma(&dirs, &sigma);
+        assert_eq!(out.data, vec![2.0, -3.0]);
+    }
+}

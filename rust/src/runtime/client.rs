@@ -1,0 +1,62 @@
+//! The PJRT CPU client and executable compilation/caching.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::executable::LoadedModel;
+use super::registry::{ArtifactMeta, Registry};
+
+/// Wraps a `xla::PjRtClient` plus a name-keyed executable cache so each
+/// artifact is parsed + compiled at most once per process.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    cache: Mutex<BTreeMap<String, Arc<LoadedModel>>>,
+}
+
+impl RuntimeClient {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient { client, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO text file (uncached).
+    pub fn compile_file(&self, path: &Path, meta: ArtifactMeta) -> Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModel::new(meta, exe))
+    }
+
+    /// Load (or fetch from cache) an artifact by name from the registry.
+    pub fn load(&self, registry: &Registry, name: &str) -> Result<Arc<LoadedModel>> {
+        if let Some(m) = self.cache.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let meta = registry
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = meta.hlo_path(&registry.dir);
+        let model = Arc::new(self.compile_file(&path, meta)?);
+        self.cache.lock().unwrap().insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,90 @@
+//! A compiled model variant: metadata + PJRT executable.
+
+use anyhow::{ensure, Context, Result};
+
+use super::io::{literal_from_host, literal_to_vec_f32, HostTensor};
+use super::registry::ArtifactMeta;
+
+/// One AOT-compiled executable with its manifest metadata.
+pub struct LoadedModel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    pub fn new(meta: ArtifactMeta, exe: xla::PjRtLoadedExecutable) -> Self {
+        LoadedModel { meta, exe }
+    }
+
+    /// Execute with host tensors; validates counts/shapes against the
+    /// manifest and unpacks the tuple output.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        ensure!(
+            inputs.len() == self.meta.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.meta.name,
+            self.meta.inputs.len(),
+            inputs.len()
+        );
+        for (t, spec) in inputs.iter().zip(&self.meta.inputs) {
+            ensure!(
+                t.shape == spec.shape,
+                "{}: input {} shape {:?} != manifest {:?}",
+                self.meta.name,
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(literal_from_host).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.meta.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: outputs arrive as one tuple.
+        let parts = tuple.to_tuple()?;
+        ensure!(
+            parts.len() == self.meta.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.meta.name,
+            self.meta.outputs.len(),
+            parts.len()
+        );
+        parts
+            .iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, spec)| {
+                Ok(HostTensor::new(spec.shape.clone(), literal_to_vec_f32(lit)?))
+            })
+            .collect()
+    }
+
+    /// Execute with pre-staged device buffers (hot path: parameters stay
+    /// device-resident across calls, avoiding the host->device copy).
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        let result = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing {} (buffers)", self.meta.name))?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        parts
+            .iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, spec)| {
+                Ok(HostTensor::new(spec.shape.clone(), literal_to_vec_f32(lit)?))
+            })
+            .collect()
+    }
+
+    /// Stage a host tensor as a device buffer for repeated use.
+    pub fn stage(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let client = self.exe.client();
+        let dims: Vec<usize> = t.shape.clone();
+        Ok(client.buffer_from_host_buffer(&t.data, &dims, None)?)
+    }
+}

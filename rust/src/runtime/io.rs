@@ -1,0 +1,78 @@
+//! Host-side tensor plumbing between the coordinator and PJRT literals.
+
+use anyhow::Result;
+
+/// A plain host tensor (f32, row-major) — the coordinator's currency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Build an f32 PJRT literal of the given shape.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+pub fn literal_from_host(t: &HostTensor) -> Result<xla::Literal> {
+    if t.shape.is_empty() {
+        // Rank-0: reshape a 1-element vector to scalar.
+        let lit = xla::Literal::vec1(&t.data);
+        return Ok(lit.reshape(&[])?);
+    }
+    literal_f32(&t.shape, &t.data)
+}
+
+/// Extract f32 data (any rank) from a literal.
+pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        let z = HostTensor::zeros(vec![4]);
+        assert_eq!(z.data, vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_rejects_mismatch() {
+        HostTensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! `python/compile/aot.py` runs once at build time; everything here is
+//! Python-free.  The flow is `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`
+//! (see /opt/xla-example/load_hlo for the reference wiring).
+
+mod client;
+mod executable;
+mod io;
+mod registry;
+
+pub use client::RuntimeClient;
+pub use executable::LoadedModel;
+pub use io::{literal_f32, literal_to_vec_f32, HostTensor};
+pub use registry::{ArtifactMeta, Registry, TensorSpec};

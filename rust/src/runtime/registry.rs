@@ -1,0 +1,209 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) into typed metadata the coordinator and bench
+//! harness select executables by.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Shape + dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.get_str("name").ok_or_else(|| anyhow!("spec missing name"))?.to_string(),
+            shape: v
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+            dtype: v.get_str("dtype").unwrap_or("f32").to_string(),
+        })
+    }
+}
+
+/// Metadata for one AOT-compiled model variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Operator: laplacian | weighted_laplacian | biharmonic | biharl |
+    /// pinn_step | pinn_eval.
+    pub op: String,
+    /// Method: nested | standard | collapsed.
+    pub method: String,
+    /// Mode: exact | stochastic | train | eval.
+    pub mode: String,
+    /// Input dimension D of the network.
+    pub dim: usize,
+    /// Hidden/output widths of the MLP.
+    pub widths: Vec<usize>,
+    /// Compiled batch size B.
+    pub batch: usize,
+    /// Monte-Carlo sample count S (0 for exact).
+    pub samples: usize,
+    /// Length of the flat parameter vector.
+    pub theta_len: usize,
+    /// [(fan_in, fan_out), ...] per layer (matches model.py).
+    pub layer_dims: Vec<(usize, usize)>,
+    /// plain | kernel (Pallas-fused activation).
+    pub variant: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<ArtifactMeta> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact missing {key}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let layer_dims = v
+            .get("layer_dims")
+            .and_then(Json::as_arr)
+            .map(|dims| {
+                dims.iter()
+                    .filter_map(|d| {
+                        let pair = d.as_arr()?;
+                        Some((pair.first()?.as_usize()?, pair.get(1)?.as_usize()?))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(ArtifactMeta {
+            name: v.get_str("name").ok_or_else(|| anyhow!("artifact missing name"))?.to_string(),
+            file: v.get_str("file").ok_or_else(|| anyhow!("artifact missing file"))?.to_string(),
+            op: v.get_str("op").unwrap_or_default().to_string(),
+            method: v.get_str("method").unwrap_or_default().to_string(),
+            mode: v.get_str("mode").unwrap_or_default().to_string(),
+            dim: v.get_usize("dim").unwrap_or(0),
+            widths: v
+                .get("widths")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            batch: v.get_usize("batch").unwrap_or(0),
+            samples: v.get_usize("samples").unwrap_or(0),
+            theta_len: v.get_usize("theta_len").unwrap_or(0),
+            layer_dims,
+            variant: v.get_str("variant").unwrap_or("plain").to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+
+    /// Absolute path of the HLO text file given the artifacts dir.
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.file)
+    }
+}
+
+/// The full artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub artifacts: Vec<ArtifactMeta>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let artifacts: Vec<ArtifactMeta> = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<_>>()?;
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        let by_name = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+        Ok(Registry {
+            dir,
+            preset: root.get_str("preset").unwrap_or("unknown").to_string(),
+            artifacts,
+            by_name,
+        })
+    }
+
+    /// Default location: $CTAYLOR_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Registry> {
+        let dir = std::env::var("CTAYLOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Registry::load(dir)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name).map(|&i| &self.artifacts[i])
+    }
+
+    /// All artifacts matching (op, method, mode), sorted by (batch, samples).
+    pub fn select(&self, op: &str, method: &str, mode: &str) -> Vec<&ArtifactMeta> {
+        let mut out: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.op == op && a.method == method && a.mode == mode && a.variant == "plain")
+            .collect();
+        out.sort_by_key(|a| (a.batch, a.samples));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let text = r#"{"preset":"small","artifacts":[
+          {"name":"lap_b2","file":"lap_b2.hlo.txt","op":"laplacian",
+           "method":"collapsed","mode":"exact","dim":4,"widths":[8,1],
+           "batch":2,"samples":0,"theta_len":49,
+           "layer_dims":[[4,8],[8,1]],"variant":"plain",
+           "inputs":[{"name":"theta","shape":[49],"dtype":"f32"},
+                     {"name":"x","shape":[2,4],"dtype":"f32"}],
+           "outputs":[{"name":"f0","shape":[2,1],"dtype":"f32"},
+                      {"name":"op","shape":[2,1],"dtype":"f32"}]}]}"#;
+        let dir = std::env::temp_dir().join("ctaylor_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.preset, "small");
+        let a = reg.get("lap_b2").unwrap();
+        assert_eq!(a.batch, 2);
+        assert_eq!(a.layer_dims, vec![(4, 8), (8, 1)]);
+        assert_eq!(a.inputs[1].element_count(), 8);
+        assert_eq!(reg.select("laplacian", "collapsed", "exact").len(), 1);
+    }
+}

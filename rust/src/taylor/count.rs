@@ -1,0 +1,105 @@
+//! The paper's analytical cost model: number of channel vectors propagated
+//! through every node of the computational graph (sections 3.2–3.3 and
+//! table F2).  Ratios of these counts predict the measured runtime/memory
+//! ratios between standard and collapsed Taylor mode.
+
+/// Vectors per node for a sum of R K-th directional derivatives.
+pub fn vectors_standard(order: usize, num_dirs: usize) -> usize {
+    1 + order * num_dirs
+}
+
+/// After collapsing: R - 1 highest-degree channels removed.
+pub fn vectors_collapsed(order: usize, num_dirs: usize) -> usize {
+    1 + (order - 1) * num_dirs + 1
+}
+
+/// Exact Laplacian (K = 2, R = D): 1 + 2D vs 1 + D + 1 (paper §3.2).
+pub fn laplacian_standard(dim: usize) -> usize {
+    vectors_standard(2, dim)
+}
+
+pub fn laplacian_collapsed(dim: usize) -> usize {
+    vectors_collapsed(2, dim)
+}
+
+/// Exact biharmonic via the Griewank interpolation families (paper §3.3):
+/// D jets along 4e_d, D(D-1) along 3e_{d1}+e_{d2}, D(D-1)/2 along
+/// 2e_{d1}+2e_{d2}; standard Taylor propagates 6D² − 2D + 1 vectors.
+pub fn biharmonic_standard(dim: usize) -> usize {
+    6 * dim * dim - 2 * dim + 1
+}
+
+/// After collapsing each family: 9/2 D² − 3/2 D + 4 (25% fewer in the
+/// quadratic coefficient).
+pub fn biharmonic_collapsed(dim: usize) -> usize {
+    (9 * dim * dim - 3 * dim) / 2 + 4
+}
+
+/// Δ-vectors added per extra Monte-Carlo sample (paper table F2, bottom):
+/// a K-jet adds K channels in standard mode, K-1 in collapsed mode (the
+/// collapsed channel is shared).
+pub fn delta_per_sample_standard(order: usize) -> usize {
+    order
+}
+
+pub fn delta_per_sample_collapsed(order: usize) -> usize {
+    order - 1
+}
+
+/// Theoretical slope ratio collapsed/standard for exact operators, per
+/// datum (paper table F2 top, e.g. (2+D)/(1+2D) ≈ 0.51 for D = 50).
+pub fn exact_ratio_laplacian(dim: usize) -> f64 {
+    (1 + dim + 1) as f64 / (1 + 2 * dim) as f64
+}
+
+pub fn exact_ratio_biharmonic(dim: usize) -> f64 {
+    biharmonic_collapsed(dim) as f64 / biharmonic_standard(dim) as f64
+}
+
+pub fn stochastic_ratio(order: usize) -> f64 {
+    delta_per_sample_collapsed(order) as f64 / delta_per_sample_standard(order) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laplacian_counts_match_paper() {
+        // D = 50: standard 1+2·50 = 101, collapsed 1+50+1 = 52, ratio ≈ 0.51.
+        assert_eq!(laplacian_standard(50), 101);
+        assert_eq!(laplacian_collapsed(50), 52);
+        assert!((exact_ratio_laplacian(50) - 0.5148).abs() < 1e-3);
+    }
+
+    #[test]
+    fn biharmonic_counts_match_paper() {
+        // Paper §3.3: 6D²−2D+1 vs 9/2D²−3/2D+4; D = 5 (table F2): 141 vs 109.
+        assert_eq!(biharmonic_standard(5), 141);
+        assert_eq!(biharmonic_collapsed(5), 109);
+        assert!((exact_ratio_biharmonic(5) - 0.77).abs() < 0.01);
+    }
+
+    #[test]
+    fn stochastic_deltas_match_table_f2() {
+        // Laplacian: 2 vs 1 (ratio 0.5); biharmonic: 4 vs 3 (ratio 0.75).
+        assert_eq!(delta_per_sample_standard(2), 2);
+        assert_eq!(delta_per_sample_collapsed(2), 1);
+        assert_eq!(delta_per_sample_standard(4), 4);
+        assert_eq!(delta_per_sample_collapsed(4), 3);
+        assert!((stochastic_ratio(2) - 0.5).abs() < 1e-12);
+        assert!((stochastic_ratio(4) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn collapsing_always_saves_r_minus_1() {
+        for k in 2..6 {
+            for r in 1..20 {
+                assert_eq!(
+                    vectors_standard(k, r) - vectors_collapsed(k, r),
+                    r - 1
+                );
+            }
+        }
+    }
+}

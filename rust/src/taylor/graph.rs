@@ -1,0 +1,278 @@
+//! Computational-graph IR for Taylor-mode programs.
+//!
+//! This is the native replica of the paper's torch.fx layer: standard
+//! Taylor mode is *built* as a graph (trace.rs), and the §C rewrites
+//! (rewrite/) collapse it — push `replicate` nodes down to remove repeated
+//! direction-independent compute, then push the final `sum` over
+//! directions up through every direction-linear node until it sticks at
+//! the nonlinear Faà di Bruno terms.
+//!
+//! Convention: tensors with a *direction axis* carry it as the leading
+//! axis (`[R, ...]`); `Replicate` introduces it, `SumDirs` removes it, and
+//! elementwise ops broadcast direction-free operands against it.
+
+use std::collections::BTreeSet;
+
+use super::tensor::Tensor;
+
+pub type NodeId = usize;
+
+/// Elementwise unary functions with known derivatives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryKind {
+    Tanh,
+    Sin,
+    Cos,
+    Exp,
+    Neg,
+}
+
+impl UnaryKind {
+    pub fn apply(&self, x: f64) -> f64 {
+        match self {
+            UnaryKind::Tanh => x.tanh(),
+            UnaryKind::Sin => x.sin(),
+            UnaryKind::Cos => x.cos(),
+            UnaryKind::Exp => x.exp(),
+            UnaryKind::Neg => -x,
+        }
+    }
+}
+
+/// Graph operations.  Binary ops broadcast a direction-free operand
+/// against a direction-tagged one (leading-axis broadcast).
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// External input (slot index into the evaluation inputs).
+    Input { slot: usize },
+    /// Embedded constant (weights, seed directions, zeros).
+    Const(Tensor),
+    /// `[...] -> [r, ...]` by repetition; introduces the direction axis.
+    Replicate { r: usize },
+    /// `[r, ...] -> [...]`: the sum over directions.
+    SumDirs,
+    Add,
+    Sub,
+    Mul,
+    /// x * s (scalar).
+    Scale(f64),
+    /// x + s (scalar).
+    AddConst(f64),
+    Unary(UnaryKind),
+    /// x @ W on the trailing axis.
+    MatMul { w: Tensor },
+    /// x + b broadcast over the trailing axis.
+    AddBias { b: Tensor },
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    pub args: Vec<NodeId>,
+}
+
+/// A DAG with append-only nodes (args always reference smaller ids) and a
+/// list of output node ids.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<NodeId>,
+    pub num_inputs: usize,
+}
+
+impl Graph {
+    pub fn push(&mut self, op: Op, args: Vec<NodeId>) -> NodeId {
+        for &a in &args {
+            debug_assert!(a < self.nodes.len(), "arg {a} references a future node");
+        }
+        self.nodes.push(Node { op, args });
+        self.nodes.len() - 1
+    }
+
+    // -- builder conveniences ------------------------------------------------
+
+    pub fn input(&mut self, slot: usize) -> NodeId {
+        self.num_inputs = self.num_inputs.max(slot + 1);
+        self.push(Op::Input { slot }, vec![])
+    }
+
+    pub fn constant(&mut self, t: Tensor) -> NodeId {
+        self.push(Op::Const(t), vec![])
+    }
+
+    pub fn constf(&mut self, v: f64) -> NodeId {
+        self.constant(Tensor::scalar(v))
+    }
+
+    pub fn replicate(&mut self, x: NodeId, r: usize) -> NodeId {
+        self.push(Op::Replicate { r }, vec![x])
+    }
+
+    pub fn sum_dirs(&mut self, x: NodeId) -> NodeId {
+        self.push(Op::SumDirs, vec![x])
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Op::Add, vec![a, b])
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Op::Sub, vec![a, b])
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Op::Mul, vec![a, b])
+    }
+
+    pub fn scale(&mut self, x: NodeId, s: f64) -> NodeId {
+        self.push(Op::Scale(s), vec![x])
+    }
+
+    pub fn add_const(&mut self, x: NodeId, s: f64) -> NodeId {
+        self.push(Op::AddConst(s), vec![x])
+    }
+
+    pub fn unary(&mut self, k: UnaryKind, x: NodeId) -> NodeId {
+        self.push(Op::Unary(k), vec![x])
+    }
+
+    pub fn tanh(&mut self, x: NodeId) -> NodeId {
+        self.unary(UnaryKind::Tanh, x)
+    }
+
+    pub fn matmul(&mut self, x: NodeId, w: Tensor) -> NodeId {
+        self.push(Op::MatMul { w }, vec![x])
+    }
+
+    pub fn add_bias(&mut self, x: NodeId, b: Tensor) -> NodeId {
+        self.push(Op::AddBias { b }, vec![x])
+    }
+
+    // -- analysis -------------------------------------------------------------
+
+    /// Node ids reachable from the outputs.
+    pub fn live_set(&self) -> BTreeSet<NodeId> {
+        let mut live = BTreeSet::new();
+        let mut stack: Vec<NodeId> = self.outputs.clone();
+        while let Some(id) = stack.pop() {
+            if live.insert(id) {
+                stack.extend(&self.nodes[id].args);
+            }
+        }
+        live
+    }
+
+    /// Remove dead nodes, compacting ids (preserves relative order, so the
+    /// args-before-use invariant survives).
+    pub fn dce(&self) -> Graph {
+        let live = self.live_set();
+        let mut remap = vec![usize::MAX; self.nodes.len()];
+        let mut nodes = Vec::with_capacity(live.len());
+        for &id in &live {
+            remap[id] = nodes.len();
+            let node = &self.nodes[id];
+            nodes.push(Node {
+                op: node.op.clone(),
+                args: node.args.iter().map(|&a| remap[a]).collect(),
+            });
+        }
+        Graph {
+            nodes,
+            outputs: self.outputs.iter().map(|&o| remap[o]).collect(),
+            num_inputs: self.num_inputs,
+        }
+    }
+
+    /// Whether each (live) node's value carries the direction axis.
+    /// Direction tags flow: Replicate sets, SumDirs clears, everything else
+    /// is tagged iff any argument is tagged.
+    pub fn direction_tags(&self) -> Vec<bool> {
+        let mut tags = vec![false; self.nodes.len()];
+        for (id, node) in self.nodes.iter().enumerate() {
+            tags[id] = match node.op {
+                Op::Replicate { .. } => true,
+                Op::SumDirs => false,
+                Op::Input { .. } | Op::Const(_) => false,
+                _ => node.args.iter().any(|&a| tags[a]),
+            };
+        }
+        tags
+    }
+
+    /// Input slots may also carry direction axes (e.g. seed directions fed
+    /// at runtime); callers pass which slots are direction-tagged.
+    pub fn direction_tags_with_inputs(&self, tagged_slots: &[usize]) -> Vec<bool> {
+        let mut tags = vec![false; self.nodes.len()];
+        for (id, node) in self.nodes.iter().enumerate() {
+            tags[id] = match node.op {
+                Op::Replicate { .. } => true,
+                Op::SumDirs => false,
+                Op::Input { slot } => tagged_slots.contains(&slot),
+                Op::Const(_) => false,
+                _ => node.args.iter().any(|&a| tags[a]),
+            };
+        }
+        tags
+    }
+
+    /// The paper's cost proxy: number of live nodes whose value carries the
+    /// direction axis (each is an R-wide stack of vectors), plus live
+    /// direction-free compute nodes (1 vector each).  Constants/inputs are
+    /// excluded — they are storage, not propagation work.
+    pub fn propagation_cost(&self, tagged_slots: &[usize], num_dirs: usize) -> usize {
+        let tags = self.direction_tags_with_inputs(tagged_slots);
+        let live = self.live_set();
+        live.iter()
+            .filter(|&&id| !matches!(self.nodes[id].op, Op::Input { .. } | Op::Const(_)))
+            .map(|&id| if tags[id] { num_dirs } else { 1 })
+            .sum()
+    }
+
+    /// Count live nodes carrying the direction axis.
+    pub fn tagged_node_count(&self, tagged_slots: &[usize]) -> usize {
+        let tags = self.direction_tags_with_inputs(tagged_slots);
+        self.live_set().iter().filter(|&&id| tags[id]).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dce_drops_unreachable() {
+        let mut g = Graph::default();
+        let x = g.input(0);
+        let _dead = g.constf(99.0);
+        let y = g.scale(x, 2.0);
+        g.outputs = vec![y];
+        let g2 = g.dce();
+        assert_eq!(g2.nodes.len(), 2);
+        assert_eq!(g2.outputs, vec![1]);
+    }
+
+    #[test]
+    fn direction_tags_flow() {
+        let mut g = Graph::default();
+        let x = g.input(0);
+        let r = g.replicate(x, 4);
+        let y = g.scale(r, 2.0);
+        let s = g.sum_dirs(y);
+        let z = g.add_const(s, 1.0);
+        g.outputs = vec![z];
+        let tags = g.direction_tags();
+        assert!(!tags[x] && tags[r] && tags[y] && !tags[s] && !tags[z]);
+    }
+
+    #[test]
+    fn propagation_cost_counts_direction_width() {
+        let mut g = Graph::default();
+        let x = g.input(0);
+        let r = g.replicate(x, 4);
+        let y = g.scale(r, 2.0); // tagged: 4
+        let s = g.sum_dirs(y); // untagged: 1
+        g.outputs = vec![s];
+        // replicate(4) + scale(4) + sum(1) = 9
+        assert_eq!(g.propagation_cost(&[], 4), 9);
+    }
+}

@@ -1,0 +1,152 @@
+//! Reference interpreter for the graph IR.
+//!
+//! Evaluates nodes in id order (the IR's args-before-use invariant makes
+//! this a valid topological order); the rewrite passes only append nodes,
+//! so original and collapsed graphs evaluate with the same code.
+
+use anyhow::{bail, Result};
+
+use super::graph::{Graph, Op};
+use super::tensor::Tensor;
+
+/// Evaluate the graph on the given input tensors; returns the outputs.
+pub fn eval(graph: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let live = graph.live_set();
+    let mut vals: Vec<Option<Tensor>> = vec![None; graph.nodes.len()];
+    for (id, node) in graph.nodes.iter().enumerate() {
+        if !live.contains(&id) {
+            continue;
+        }
+        let arg = |i: usize| -> &Tensor { vals[node.args[i]].as_ref().expect("topo order") };
+        let v = match &node.op {
+            Op::Input { slot } => {
+                if *slot >= inputs.len() {
+                    bail!("missing input slot {slot}");
+                }
+                inputs[*slot].clone()
+            }
+            Op::Const(t) => t.clone(),
+            Op::Replicate { r } => arg(0).replicate(*r),
+            Op::SumDirs => arg(0).sum_axis0(),
+            Op::Add => arg(0).add(arg(1)),
+            Op::Sub => arg(0).sub(arg(1)),
+            Op::Mul => arg(0).mul(arg(1)),
+            Op::Scale(s) => arg(0).scale(*s),
+            Op::AddConst(s) => arg(0).map(|x| x + s),
+            Op::Unary(k) => {
+                let k = *k;
+                arg(0).map(move |x| k.apply(x))
+            }
+            Op::MatMul { w } => arg(0).matmul(w),
+            Op::AddBias { b } => arg(0).add_bias(b),
+        };
+        vals[id] = Some(v);
+    }
+    Ok(graph
+        .outputs
+        .iter()
+        .map(|&o| vals[o].clone().expect("output not evaluated"))
+        .collect())
+}
+
+/// FLOP estimate: elementwise ops cost one flop per output element; matmul
+/// costs 2·rows·I·O.  Used by the native ablation bench to compare graph
+/// variants without timing noise.
+pub fn flops(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<u64> {
+    let shapes = infer_shapes(graph, input_shapes)?;
+    let live = graph.live_set();
+    let mut total = 0u64;
+    for (id, node) in graph.nodes.iter().enumerate() {
+        if !live.contains(&id) {
+            continue;
+        }
+        let out_elems: u64 = shapes[id].iter().product::<usize>() as u64;
+        total += match &node.op {
+            Op::Input { .. } | Op::Const(_) | Op::Replicate { .. } => 0,
+            Op::MatMul { w } => {
+                let rows: u64 =
+                    shapes[node.args[0]].iter().product::<usize>() as u64 / w.shape[0] as u64;
+                2 * rows * (w.shape[0] * w.shape[1]) as u64
+            }
+            Op::SumDirs => shapes[node.args[0]].iter().product::<usize>() as u64,
+            _ => out_elems,
+        };
+    }
+    Ok(total)
+}
+
+/// Shape inference mirroring the interpreter's broadcasting.
+pub fn infer_shapes(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Vec<Vec<usize>>> {
+    let mut shapes: Vec<Vec<usize>> = vec![vec![]; graph.nodes.len()];
+    for (id, node) in graph.nodes.iter().enumerate() {
+        let arg = |i: usize| -> &Vec<usize> { &shapes[node.args[i]] };
+        shapes[id] = match &node.op {
+            Op::Input { slot } => {
+                if *slot >= input_shapes.len() {
+                    bail!("missing input shape for slot {slot}");
+                }
+                input_shapes[*slot].clone()
+            }
+            Op::Const(t) => t.shape.clone(),
+            Op::Replicate { r } => {
+                let mut s = vec![*r];
+                s.extend(arg(0));
+                s
+            }
+            Op::SumDirs => arg(0)[1..].to_vec(),
+            Op::Add | Op::Sub | Op::Mul => {
+                let (a, b) = (arg(0), arg(1));
+                if a.len() >= b.len() { a.clone() } else { b.clone() }
+            }
+            Op::Scale(_) | Op::AddConst(_) | Op::Unary(_) => arg(0).clone(),
+            Op::MatMul { w } => {
+                let mut s = arg(0).clone();
+                *s.last_mut().expect("matmul rank >= 1") = w.shape[1];
+                s
+            }
+            Op::AddBias { .. } => arg(0).clone(),
+        };
+    }
+    Ok(shapes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taylor::graph::UnaryKind;
+
+    #[test]
+    fn evaluates_simple_expression() {
+        // y = tanh(2x) + 1
+        let mut g = Graph::default();
+        let x = g.input(0);
+        let sx = g.scale(x, 2.0);
+        let t = g.unary(UnaryKind::Tanh, sx);
+        let y = g.add_const(t, 1.0);
+        g.outputs = vec![y];
+        let out = eval(&g, &[Tensor::new(vec![2], vec![0.0, 0.5])]).unwrap();
+        assert!((out[0].data[0] - 1.0).abs() < 1e-14);
+        assert!((out[0].data[1] - (1.0f64.tanh() + 1.0)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn shapes_track_broadcast_and_matmul() {
+        let mut g = Graph::default();
+        let x = g.input(0); // [3, 2, 4]
+        let w = g.matmul(x, Tensor::zeros(&[4, 5]));
+        let s = g.sum_dirs(w);
+        g.outputs = vec![s];
+        let shapes = infer_shapes(&g, &[vec![3, 2, 4]]).unwrap();
+        assert_eq!(shapes[w], vec![3, 2, 5]);
+        assert_eq!(shapes[s], vec![2, 5]);
+    }
+
+    #[test]
+    fn flops_matmul_dominates() {
+        let mut g = Graph::default();
+        let x = g.input(0); // [8, 4]
+        let m = g.matmul(x, Tensor::zeros(&[4, 16]));
+        g.outputs = vec![m];
+        assert_eq!(flops(&g, &[vec![8, 4]]).unwrap(), 2 * 8 * 4 * 16);
+    }
+}

@@ -1,0 +1,219 @@
+//! Jet bundles: standard (paper eq. D13) and collapsed (eq. D14) Taylor
+//! mode over the native tensor engine, for arbitrary degree K.
+
+use super::rules::{nonlinear_terms, DerivFamily};
+use super::tensor::Tensor;
+
+/// Standard-mode bundle: x0 `[B, D]`, coefficient channels `xs[k-1]`
+/// `[R, B, D]` for k = 1..K — `1 + K·R` vectors per node.
+#[derive(Debug, Clone)]
+pub struct JetStd {
+    pub x0: Tensor,
+    pub xs: Vec<Tensor>,
+}
+
+/// Collapsed-mode bundle: degrees 1..K-1 per direction plus the *summed*
+/// degree-K channel `[B, D]` — `1 + (K-1)·R + 1` vectors per node.
+#[derive(Debug, Clone)]
+pub struct JetCol {
+    pub x0: Tensor,
+    pub xs: Vec<Tensor>,
+    pub xk_sum: Tensor,
+}
+
+impl JetStd {
+    pub fn order(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn num_dirs(&self) -> usize {
+        self.xs[0].shape[0]
+    }
+
+    /// Seed with x1 = dirs (`[R, B, D]` or `[R, D]` broadcast over batch),
+    /// higher coefficients zero (paper eq. 7b).
+    pub fn seed(x0: &Tensor, dirs: &Tensor, order: usize) -> JetStd {
+        assert!(order >= 1);
+        let dirs = broadcast_dirs(x0, dirs);
+        let zero = Tensor::zeros(&dirs.shape);
+        let mut xs = vec![dirs];
+        xs.resize(order, zero);
+        JetStd { x0: x0.clone(), xs }
+    }
+
+    /// Standard mode ends with propagate-then-sum (paper fig. 2 left).
+    pub fn highest_sum(&self) -> Tensor {
+        self.xs.last().unwrap().sum_axis0()
+    }
+}
+
+impl JetCol {
+    pub fn order(&self) -> usize {
+        self.xs.len() + 1
+    }
+
+    pub fn num_dirs(&self) -> usize {
+        self.xs[0].shape[0]
+    }
+
+    pub fn seed(x0: &Tensor, dirs: &Tensor, order: usize) -> JetCol {
+        assert!(order >= 2, "collapsing needs K >= 2");
+        let dirs = broadcast_dirs(x0, dirs);
+        let zero = Tensor::zeros(&dirs.shape);
+        let mut xs = vec![dirs];
+        xs.resize(order - 1, zero);
+        JetCol { x0: x0.clone(), xs, xk_sum: Tensor::zeros(&x0.shape) }
+    }
+
+    /// Collapsed mode already carries the sum (paper fig. 2 right).
+    pub fn highest_sum(&self) -> Tensor {
+        self.xk_sum.clone()
+    }
+}
+
+fn broadcast_dirs(x0: &Tensor, dirs: &Tensor) -> Tensor {
+    if dirs.rank() == x0.rank() + 1 {
+        return dirs.clone();
+    }
+    // dirs [R, D] -> [R, B, D] by repeating each direction over the batch.
+    assert_eq!(dirs.rank(), 2, "dirs must be [R, D] or [R, B, D]");
+    let (r, d) = (dirs.shape[0], dirs.shape[1]);
+    let b = x0.shape[0];
+    let mut data = Vec::with_capacity(r * b * d);
+    for ri in 0..r {
+        for _ in 0..b {
+            data.extend_from_slice(&dirs.data[ri * d..(ri + 1) * d]);
+        }
+    }
+    Tensor::new(vec![r, b, d], data)
+}
+
+// ---------------------------------------------------------------------------
+// Propagation rules
+// ---------------------------------------------------------------------------
+
+/// Affine map: every channel goes through W; only x0 gets the bias.
+pub fn linear_std(jet: &JetStd, w: &Tensor, b: Option<&Tensor>) -> JetStd {
+    let mut y0 = jet.x0.matmul(w);
+    if let Some(b) = b {
+        y0 = y0.add_bias(b);
+    }
+    JetStd { x0: y0, xs: jet.xs.iter().map(|x| x.matmul(w)).collect() }
+}
+
+pub fn linear_col(jet: &JetCol, w: &Tensor, b: Option<&Tensor>) -> JetCol {
+    let mut y0 = jet.x0.matmul(w);
+    if let Some(b) = b {
+        y0 = y0.add_bias(b);
+    }
+    JetCol {
+        x0: y0,
+        xs: jet.xs.iter().map(|x| x.matmul(w)).collect(),
+        xk_sum: jet.xk_sum.matmul(w),
+    }
+}
+
+/// Elementwise map in standard mode: full Faà di Bruno per degree.
+pub fn elementwise_std(jet: &JetStd, f: &dyn DerivFamily) -> JetStd {
+    let k_max = jet.order();
+    let derivs = f.derivatives(&jet.x0, k_max);
+    let mut ys = Vec::with_capacity(k_max);
+    for k in 1..=k_max {
+        // trivial partition: φ' · x_k (broadcasts [B,D] against [R,B,D])
+        let mut yk = derivs[1].mul(&jet.xs[k - 1]);
+        if let Some(nl) = nonlinear_terms(&derivs, &jet.xs, k) {
+            yk = yk.add(&nl);
+        }
+        ys.push(yk);
+    }
+    JetStd { x0: derivs[0].clone(), xs: ys }
+}
+
+/// Elementwise map in collapsed mode (paper eq. 6): the summed degree-K
+/// channel receives φ'·xK_sum (linear, pulled-in sum) plus the nonlinear
+/// partition terms *summed over directions on the spot*.
+pub fn elementwise_col(jet: &JetCol, f: &dyn DerivFamily) -> JetCol {
+    let k_max = jet.order();
+    let derivs = f.derivatives(&jet.x0, k_max);
+    let mut ys = Vec::with_capacity(k_max - 1);
+    for k in 1..k_max {
+        let mut yk = derivs[1].mul(&jet.xs[k - 1]);
+        if let Some(nl) = nonlinear_terms(&derivs, &jet.xs, k) {
+            yk = yk.add(&nl);
+        }
+        ys.push(yk);
+    }
+    let mut yk_sum = derivs[1].mul(&jet.xk_sum);
+    if let Some(nl) = nonlinear_terms(&derivs, &jet.xs, k_max) {
+        yk_sum = yk_sum.add(&nl.sum_axis0());
+    }
+    JetCol { x0: derivs[0].clone(), xs: ys, xk_sum: yk_sum }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taylor::rules::{Sin, Tanh};
+
+    /// Collapse identity on a single elementwise node: the summed highest
+    /// coefficient agrees between standard and collapsed propagation even
+    /// with *nonzero* higher-order seeds.
+    #[test]
+    fn collapse_identity_elementwise_k4() {
+        let b = 2;
+        let d = 3;
+        let r = 4;
+        let mut rng = crate::util::prng::Rng::new(1);
+        let rand = |shape: &[usize], rng: &mut crate::util::prng::Rng| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape.to_vec(), (0..n).map(|_| rng.normal()).collect())
+        };
+        let x0 = rand(&[b, d], &mut rng);
+        let xs: Vec<Tensor> = (0..4).map(|_| rand(&[r, b, d], &mut rng)).collect();
+
+        let std_jet = JetStd { x0: x0.clone(), xs: xs.clone() };
+        let col_jet = JetCol {
+            x0,
+            xs: xs[..3].to_vec(),
+            xk_sum: xs[3].sum_axis0(),
+        };
+        let out_std = elementwise_std(&std_jet, &Tanh);
+        let out_col = elementwise_col(&col_jet, &Tanh);
+        let diff = out_std.highest_sum().max_abs_diff(&out_col.highest_sum());
+        assert!(diff < 1e-12, "collapse identity violated: {diff}");
+        // Lower-degree channels agree exactly too.
+        for k in 0..3 {
+            assert!(out_std.xs[k].max_abs_diff(&out_col.xs[k]) < 1e-12);
+        }
+    }
+
+    /// 2-jet of sin along one direction reproduces v^T H v = -sin(x)·v² sum.
+    #[test]
+    fn sin_second_directional_derivative() {
+        let x0 = Tensor::new(vec![1, 2], vec![0.3, -0.7]);
+        let v = Tensor::new(vec![1, 1, 2], vec![1.0, 2.0]);
+        let jet = JetStd::seed(&x0, &v, 2);
+        let out = elementwise_std(&jet, &Sin);
+        // elementwise sin: f2 = -sin(x)*v²
+        let expect0 = -(0.3f64.sin()) * 1.0;
+        let expect1 = -((-0.7f64).sin()) * 4.0;
+        assert!((out.xs[1].data[0] - expect0).abs() < 1e-14);
+        assert!((out.xs[1].data[1] - expect1).abs() < 1e-14);
+    }
+
+    #[test]
+    fn linear_rule_is_exact() {
+        let x0 = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let dirs = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let w = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let bias = Tensor::new(vec![3], vec![0.5, 0.5, 0.5]);
+        let jet = JetStd::seed(&x0, &dirs, 2);
+        let out = linear_std(&jet, &w, Some(&bias));
+        assert_eq!(out.x0.data, vec![9.5, 12.5, 15.5]);
+        // x1 channels = rows of W (no bias)
+        assert_eq!(out.xs[0].index_axis0(0).data, vec![1., 2., 3.]);
+        assert_eq!(out.xs[0].index_axis0(1).data, vec![4., 5., 6.]);
+        // zero higher coefficients stay zero through a linear map
+        assert!(out.xs[1].data.iter().all(|&z| z == 0.0));
+    }
+}

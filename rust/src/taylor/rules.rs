@@ -1,0 +1,179 @@
+//! Elementwise derivative families and the generic Faà di Bruno rule.
+//!
+//! Unlike the build-time Python library (fixed K ≤ 4), the native engine
+//! propagates jets of *arbitrary* degree by walking the integer partitions
+//! of paper eq. (3) directly — this is what lets property tests check the
+//! collapse identity for K the Python side never compiled.
+
+use super::partitions::{nu, partitions, trivial};
+use super::tensor::Tensor;
+
+/// A family of elementwise derivatives: returns [φ, φ', ..., φ^(order)] at x0.
+pub trait DerivFamily {
+    fn derivatives(&self, x0: &Tensor, order: usize) -> Vec<Tensor>;
+    fn name(&self) -> &'static str;
+}
+
+/// tanh and its derivatives in closed form (u = 1 - t²):
+/// t' = u, t'' = -2tu, t''' = u(6t²-2), t'''' = tu(16-24t²); higher orders
+/// via the recurrence d/dx P(t) = P'(t)·u on polynomials in t.
+pub struct Tanh;
+
+impl DerivFamily for Tanh {
+    fn derivatives(&self, x0: &Tensor, order: usize) -> Vec<Tensor> {
+        // Represent φ^(m) as a polynomial in t = tanh(x): start with P0 = t,
+        // then P_{m+1}(t) = P_m'(t) · (1 - t²).
+        let t = x0.map(f64::tanh);
+        let mut polys: Vec<Vec<f64>> = vec![vec![0.0, 1.0]]; // P0(t) = t
+        for _ in 0..order {
+            let p = polys.last().unwrap();
+            // derivative of p
+            let dp: Vec<f64> = (1..p.len()).map(|i| p[i] * i as f64).collect();
+            // multiply by (1 - t²)
+            let mut q = vec![0.0; dp.len() + 2];
+            for (i, &c) in dp.iter().enumerate() {
+                q[i] += c;
+                q[i + 2] -= c;
+            }
+            while q.last() == Some(&0.0) && q.len() > 1 {
+                q.pop();
+            }
+            polys.push(q);
+        }
+        polys
+            .iter()
+            .map(|p| t.map(|tv| p.iter().rev().fold(0.0, |acc, &c| acc * tv + c)))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "tanh"
+    }
+}
+
+/// sin and its 4-cycle of derivatives.
+pub struct Sin;
+
+impl DerivFamily for Sin {
+    fn derivatives(&self, x0: &Tensor, order: usize) -> Vec<Tensor> {
+        (0..=order)
+            .map(|k| match k % 4 {
+                0 => x0.map(f64::sin),
+                1 => x0.map(f64::cos),
+                2 => x0.map(|v| -v.sin()),
+                _ => x0.map(|v| -v.cos()),
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "sin"
+    }
+}
+
+/// exp: all derivatives equal.
+pub struct Exp;
+
+impl DerivFamily for Exp {
+    fn derivatives(&self, x0: &Tensor, order: usize) -> Vec<Tensor> {
+        let e = x0.map(f64::exp);
+        vec![e; order + 1]
+    }
+
+    fn name(&self) -> &'static str {
+        "exp"
+    }
+}
+
+/// The degree-k Faà di Bruno sum for an elementwise map, split as
+/// (nonlinear part over part(k)\{k}, linear factor φ').
+///
+/// `coeffs[j-1]` is the degree-j input channel tensor; returns the sum of
+/// ν(σ)·φ^(|σ|)·∏_{s∈σ} x_s over all non-trivial partitions (None if k = 1,
+/// which has only the trivial partition).
+pub fn nonlinear_terms(
+    derivs: &[Tensor],
+    coeffs: &[Tensor],
+    k: usize,
+) -> Option<Tensor> {
+    let mut acc: Option<Tensor> = None;
+    let triv = trivial(k);
+    for sigma in partitions(k) {
+        if sigma == triv {
+            continue;
+        }
+        let d = &derivs[sigma.len()];
+        let mut term = d.clone();
+        for &s in &sigma {
+            term = term.mul(&coeffs[s - 1]);
+        }
+        let term = term.scale(nu(&sigma) as f64);
+        acc = Some(match acc {
+            Some(a) => a.add(&term),
+            None => term,
+        });
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t1(v: f64) -> Tensor {
+        Tensor::new(vec![1], vec![v])
+    }
+
+    #[test]
+    fn tanh_derivatives_match_closed_forms() {
+        let x = t1(0.37);
+        let d = Tanh.derivatives(&x, 4);
+        let t = 0.37f64.tanh();
+        let u = 1.0 - t * t;
+        assert!((d[0].data[0] - t).abs() < 1e-14);
+        assert!((d[1].data[0] - u).abs() < 1e-14);
+        assert!((d[2].data[0] - (-2.0 * t * u)).abs() < 1e-14);
+        assert!((d[3].data[0] - u * (6.0 * t * t - 2.0)).abs() < 1e-13);
+        assert!((d[4].data[0] - t * u * (16.0 - 24.0 * t * t)).abs() < 1e-13);
+    }
+
+    #[test]
+    fn tanh_high_order_finite_difference() {
+        // 5th derivative via central differences of the 4th.
+        let x = 0.2;
+        let h = 1e-5;
+        let d4 = |x: f64| Tanh.derivatives(&t1(x), 4)[4].data[0];
+        let fd5 = (d4(x + h) - d4(x - h)) / (2.0 * h);
+        let an5 = Tanh.derivatives(&t1(x), 5)[5].data[0];
+        assert!((fd5 - an5).abs() < 1e-5, "{fd5} vs {an5}");
+    }
+
+    #[test]
+    fn sin_exp_families() {
+        let x = t1(0.5);
+        let ds = Sin.derivatives(&x, 4);
+        assert!((ds[4].data[0] - 0.5f64.sin()).abs() < 1e-14);
+        let de = Exp.derivatives(&x, 3);
+        for d in &de {
+            assert!((d.data[0] - 0.5f64.exp()).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn nonlinear_terms_degree2() {
+        // f2_nonlinear = φ'' x1² for scalar channels.
+        let derivs = Tanh.derivatives(&t1(0.3), 2);
+        let x1 = t1(2.0);
+        let x2 = t1(5.0); // must not appear in the nonlinear part
+        let nl = nonlinear_terms(&derivs, &[x1, x2], 2).unwrap();
+        let t = 0.3f64.tanh();
+        let u = 1.0 - t * t;
+        assert!((nl.data[0] - (-2.0 * t * u) * 4.0).abs() < 1e-13);
+    }
+
+    #[test]
+    fn degree1_has_no_nonlinear_part() {
+        let derivs = Tanh.derivatives(&t1(0.3), 1);
+        assert!(nonlinear_terms(&derivs, &[t1(1.0)], 1).is_none());
+    }
+}

@@ -1,0 +1,280 @@
+//! Dense row-major f64 tensors for the native Taylor/nested-AD engines.
+//!
+//! Deliberately minimal: exactly the operations jet propagation needs —
+//! elementwise arithmetic with *leading-axis broadcasting* (a `[B, H]`
+//! tensor broadcasts against `[R, B, H]` direction channels), 2-D matmul
+//! applied to the trailing axis of arbitrarily-batched operands, and
+//! reductions over the leading (direction) axis.
+
+use std::fmt;
+
+/// Dense row-major tensor of f64.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, "{:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f64>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f64) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Apply f elementwise.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// Elementwise combine with leading-axis broadcasting: shapes must be
+    /// equal, or one operand's shape must be a suffix of the other's (it is
+    /// then repeated along the extra leading axes).
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        if self.shape == other.shape {
+            let data = self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect();
+            return Tensor { shape: self.shape.clone(), data };
+        }
+        if is_suffix(&other.shape, &self.shape) {
+            // other broadcasts up to self
+            let n = other.data.len().max(1);
+            let data = self
+                .data
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| f(a, other.data[i % n]))
+                .collect();
+            return Tensor { shape: self.shape.clone(), data };
+        }
+        if is_suffix(&self.shape, &other.shape) {
+            let n = self.data.len().max(1);
+            let data = other
+                .data
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| f(self.data[i % n], b))
+                .collect();
+            return Tensor { shape: other.shape.clone(), data };
+        }
+        panic!("incompatible shapes {:?} vs {:?}", self.shape, other.shape);
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    /// Matrix product on the trailing axis: self is `[..., I]`, w is
+    /// `[I, O]`, result `[..., O]`.  Leading axes are treated as batch.
+    pub fn matmul(&self, w: &Tensor) -> Tensor {
+        assert_eq!(w.rank(), 2, "weight must be 2-D");
+        let (i, o) = (w.shape[0], w.shape[1]);
+        assert_eq!(
+            *self.shape.last().expect("matmul input must have rank >= 1"),
+            i,
+            "contraction mismatch {:?} @ {:?}",
+            self.shape,
+            w.shape
+        );
+        let rows = self.data.len() / i;
+        let mut out = vec![0.0; rows * o];
+        for r in 0..rows {
+            let xrow = &self.data[r * i..(r + 1) * i];
+            let orow = &mut out[r * o..(r + 1) * o];
+            for (k, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w.data[k * o..(k + 1) * o];
+                for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                    *ov += xv * wv;
+                }
+            }
+        }
+        let mut shape = self.shape.clone();
+        *shape.last_mut().unwrap() = o;
+        Tensor { shape, data: out }
+    }
+
+    /// Add a bias along the trailing axis (bias shape `[O]`).
+    pub fn add_bias(&self, b: &Tensor) -> Tensor {
+        assert_eq!(b.rank(), 1);
+        self.zip(b, |x, y| x + y)
+    }
+
+    /// Sum over the leading axis: `[R, ...] -> [...]`.
+    pub fn sum_axis0(&self) -> Tensor {
+        assert!(self.rank() >= 1, "sum_axis0 needs rank >= 1");
+        let r = self.shape[0];
+        let rest: usize = self.shape[1..].iter().product();
+        let mut out = vec![0.0; rest];
+        for chunk in self.data.chunks(rest.max(1)) {
+            for (o, &v) in out.iter_mut().zip(chunk) {
+                *o += v;
+            }
+        }
+        debug_assert_eq!(r * rest, self.data.len());
+        Tensor { shape: self.shape[1..].to_vec(), data: out }
+    }
+
+    /// Insert a new leading axis of size r by repetition: `[...] -> [r, ...]`.
+    pub fn replicate(&self, r: usize) -> Tensor {
+        let mut shape = Vec::with_capacity(self.rank() + 1);
+        shape.push(r);
+        shape.extend_from_slice(&self.shape);
+        let mut data = Vec::with_capacity(r * self.data.len());
+        for _ in 0..r {
+            data.extend_from_slice(&self.data);
+        }
+        Tensor { shape, data }
+    }
+
+    /// Stack equal-shaped tensors along a new leading axis.
+    pub fn stack(items: &[Tensor]) -> Tensor {
+        assert!(!items.is_empty());
+        let inner = items[0].shape.clone();
+        let mut data = Vec::with_capacity(items.len() * items[0].len());
+        for t in items {
+            assert_eq!(t.shape, inner, "stack requires equal shapes");
+            data.extend_from_slice(&t.data);
+        }
+        let mut shape = vec![items.len()];
+        shape.extend(inner);
+        Tensor { shape, data }
+    }
+
+    /// Index the leading axis: `[R, ...] -> [...]` (copy).
+    pub fn index_axis0(&self, idx: usize) -> Tensor {
+        let rest: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[idx * rest..(idx + 1) * rest].to_vec(),
+        }
+    }
+
+    /// Max |a - b| over all elements (shapes must match).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+fn is_suffix(small: &[usize], big: &[usize]) -> bool {
+    small.len() <= big.len() && big[big.len() - small.len()..] == *small
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_hand_computation() {
+        let x = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let w = Tensor::new(vec![3, 2], vec![1., 0., 0., 1., 1., 1.]);
+        let y = x.matmul(&w);
+        assert_eq!(y.shape, vec![2, 2]);
+        assert_eq!(y.data, vec![4., 5., 10., 11.]);
+    }
+
+    #[test]
+    fn matmul_batched_leading_axes() {
+        let x = Tensor::new(vec![2, 1, 2], vec![1., 2., 3., 4.]);
+        let w = Tensor::new(vec![2, 1], vec![10., 1.]);
+        let y = x.matmul(&w);
+        assert_eq!(y.shape, vec![2, 1, 1]);
+        assert_eq!(y.data, vec![12., 34.]);
+    }
+
+    #[test]
+    fn broadcast_mul_leading_axis() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]); // [R=2, H=2]
+        let b = Tensor::new(vec![2], vec![10., 100.]); // [H=2]
+        let c = a.mul(&b);
+        assert_eq!(c.data, vec![10., 200., 30., 400.]);
+        let d = b.mul(&a); // symmetric
+        assert_eq!(d.data, c.data);
+    }
+
+    #[test]
+    fn sum_axis0_and_replicate_roundtrip() {
+        let t = Tensor::new(vec![2], vec![1., 2.]);
+        let r = t.replicate(3);
+        assert_eq!(r.shape, vec![3, 2]);
+        let s = r.sum_axis0();
+        assert_eq!(s.data, vec![3., 6.]);
+    }
+
+    #[test]
+    fn stack_and_index() {
+        let a = Tensor::new(vec![2], vec![1., 2.]);
+        let b = Tensor::new(vec![2], vec![3., 4.]);
+        let s = Tensor::stack(&[a.clone(), b.clone()]);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.index_axis0(1), b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn incompatible_shapes_panic() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4]);
+        a.add(&b);
+    }
+}

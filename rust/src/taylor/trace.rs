@@ -1,0 +1,197 @@
+//! Tracing: build standard-Taylor-mode MLP graphs in the IR.
+//!
+//! This plays the role of the paper's torch.fx symbolic trace + Taylor
+//! overload step: the user-facing computation is *vanilla* Taylor mode
+//! (paper eq. D13), built here explicitly; `rewrite::collapse` then turns
+//! it into collapsed Taylor mode without the builder knowing anything
+//! about collapsing.
+
+use super::graph::{Graph, NodeId, UnaryKind};
+use super::tensor::Tensor;
+use crate::mlp::Mlp;
+
+/// Channels of a K-jet inside the graph: x0 plus K coefficient channels.
+struct GraphJet {
+    x0: NodeId,
+    xs: Vec<NodeId>,
+}
+
+/// tanh derivative nodes d0..d4 built compositionally (so the rewrite
+/// passes see plain Mul/Sub/Scale structure, like torch.fx would).
+fn tanh_derivs(g: &mut Graph, x0: NodeId, order: usize) -> Vec<NodeId> {
+    let t = g.tanh(x0);
+    let mut out = vec![t];
+    if order >= 1 {
+        let sq = g.mul(t, t);
+        let negsq = g.scale(sq, -1.0);
+        let u = g.add_const(negsq, 1.0); // u = 1 - t²
+        out.push(u);
+        if order >= 2 {
+            let tu = g.mul(t, u);
+            let d2 = g.scale(tu, -2.0); // -2 t u
+            out.push(d2);
+            if order >= 3 {
+                let sq6 = g.scale(sq, 6.0);
+                let inner = g.add_const(sq6, -2.0); // 6t² - 2
+                let d3 = g.mul(u, inner);
+                out.push(d3);
+                if order >= 4 {
+                    let sq24 = g.scale(sq, -24.0);
+                    let inner4 = g.add_const(sq24, 16.0); // 16 - 24t²
+                    let tu2 = g.mul(t, u);
+                    let d4 = g.mul(tu2, inner4);
+                    out.push(d4);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Faà di Bruno output coefficient k (1-based) for an elementwise map,
+/// k <= 4, from derivative nodes `d` and input channels `xs` (paper §A).
+fn fdb_coeff(g: &mut Graph, d: &[NodeId], xs: &[NodeId], k: usize) -> NodeId {
+    let lin = g.mul(d[1], xs[k - 1]); // trivial partition, always present
+    match k {
+        1 => lin,
+        2 => {
+            let x1sq = g.mul(xs[0], xs[0]);
+            let nl = g.mul(d[2], x1sq);
+            g.add(nl, lin)
+        }
+        3 => {
+            let x1sq = g.mul(xs[0], xs[0]);
+            let x1cu = g.mul(x1sq, xs[0]);
+            let t1 = g.mul(d[3], x1cu);
+            let x1x2 = g.mul(xs[0], xs[1]);
+            let t2p = g.mul(d[2], x1x2);
+            let t2 = g.scale(t2p, 3.0);
+            let s = g.add(t1, t2);
+            g.add(s, lin)
+        }
+        4 => {
+            let x1sq = g.mul(xs[0], xs[0]);
+            let x1q = g.mul(x1sq, x1sq);
+            let t1 = g.mul(d[4], x1q);
+            let x1sqx2 = g.mul(x1sq, xs[1]);
+            let t2p = g.mul(d[3], x1sqx2);
+            let t2 = g.scale(t2p, 6.0);
+            let x1x3 = g.mul(xs[0], xs[2]);
+            let t3p = g.mul(d[2], x1x3);
+            let t3 = g.scale(t3p, 4.0);
+            let x2sq = g.mul(xs[1], xs[1]);
+            let t4p = g.mul(d[2], x2sq);
+            let t4 = g.scale(t4p, 3.0);
+            let s1 = g.add(t1, t2);
+            let s2 = g.add(t3, t4);
+            let s = g.add(s1, s2);
+            g.add(s, lin)
+        }
+        _ => panic!("fdb_coeff only implemented for k <= 4"),
+    }
+}
+
+/// Build the standard-Taylor graph computing `sum_r` of the K-th jet
+/// coefficient of the MLP, along R runtime directions.
+///
+/// Inputs: slot 0 = x0 `[B, D]`, slot 1 = dirs `[R, B, D]` (tagged).
+/// Outputs: `[f0, sum_r fK_r]`.  Higher seed coefficients are zero
+/// constants *replicated* across directions — exactly the redundant
+/// structure the §C passes are meant to eliminate.
+pub fn build_mlp_jet_std(mlp: &Mlp, order: usize, num_dirs: usize) -> Graph {
+    assert!((2..=4).contains(&order));
+    let mut g = Graph::default();
+    let x0 = g.input(0);
+    let x1 = g.input(1);
+    let zero_seed = g.constant(Tensor::zeros(&[mlp.batch_hint, mlp.in_dim]));
+    let mut xs = vec![x1];
+    for _ in 1..order {
+        let z = g.replicate(zero_seed, num_dirs);
+        xs.push(z);
+    }
+    let mut jet = GraphJet { x0, xs };
+
+    let n_layers = mlp.layers.len();
+    for (li, (w, b)) in mlp.layers.iter().enumerate() {
+        // linear: all channels through W, bias only on x0
+        let h0m = g.matmul(jet.x0, w.clone());
+        let h0 = g.add_bias(h0m, b.clone());
+        let hs: Vec<NodeId> = jet.xs.iter().map(|&x| g.matmul(x, w.clone())).collect();
+        jet = GraphJet { x0: h0, xs: hs };
+        if li + 1 < n_layers {
+            let d = tanh_derivs(&mut g, jet.x0, order);
+            let ys: Vec<NodeId> =
+                (1..=order).map(|k| fdb_coeff(&mut g, &d, &jet.xs, k)).collect();
+            jet = GraphJet { x0: d[0], xs: ys };
+        }
+    }
+
+    let summed = g.sum_dirs(*jet.xs.last().unwrap());
+    g.outputs = vec![jet.x0, summed];
+    g
+}
+
+/// Which input slots carry the direction axis for graphs built above.
+pub const TAGGED_SLOTS: &[usize] = &[1];
+
+/// Basis directions e_1..e_D broadcast over the batch: `[D, B, D]`.
+pub fn basis_dirs(dim: usize, batch: usize) -> Tensor {
+    let mut data = vec![0.0; dim * batch * dim];
+    for r in 0..dim {
+        for b in 0..batch {
+            data[(r * batch + b) * dim + r] = 1.0;
+        }
+    }
+    Tensor::new(vec![dim, batch, dim], data)
+}
+
+pub fn _unary_used() -> UnaryKind {
+    UnaryKind::Tanh
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlp::Mlp;
+    use crate::taylor::interp::eval;
+    use crate::taylor::rewrite::collapse;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn std_graph_laplacian_matches_jet_engine() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::init(&mut rng, 3, &[8, 6, 1], 2);
+        let g = build_mlp_jet_std(&mlp, 2, 3);
+
+        let x0 = mlp.random_input(&mut rng);
+        let dirs = basis_dirs(3, 2);
+        let out = eval(&g, &[x0.clone(), dirs.clone()]).unwrap();
+
+        // Engine-level collapsed laplacian as oracle.
+        let (f0, lap) = crate::operators::laplacian_native(&mlp, &x0, true);
+        assert!(out[0].max_abs_diff(&f0) < 1e-10);
+        assert!(out[1].max_abs_diff(&lap) < 1e-10);
+    }
+
+    #[test]
+    fn collapse_preserves_semantics_and_cuts_cost() {
+        let mut rng = Rng::new(2);
+        let mlp = Mlp::init(&mut rng, 4, &[10, 1], 2);
+        let g = build_mlp_jet_std(&mlp, 2, 4);
+        let c = collapse(&g, TAGGED_SLOTS, 4);
+
+        let x0 = mlp.random_input(&mut rng);
+        let dirs = basis_dirs(4, 2);
+        let a = eval(&g, &[x0.clone(), dirs.clone()]).unwrap();
+        let b = eval(&c, &[x0, dirs]).unwrap();
+        assert!(a[0].max_abs_diff(&b[0]) < 1e-10);
+        assert!(a[1].max_abs_diff(&b[1]) < 1e-10);
+
+        let cost_std = g.propagation_cost(TAGGED_SLOTS, 4);
+        let cost_col = c.propagation_cost(TAGGED_SLOTS, 4);
+        assert!(
+            cost_col < cost_std,
+            "collapse must reduce propagation cost: {cost_col} !< {cost_std}"
+        );
+    }
+}

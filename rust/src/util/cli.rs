@@ -1,0 +1,123 @@
+//! Tiny command-line parser (no `clap` offline; DESIGN.md §2).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [positional...]`,
+//! `--key=value`, and typed accessors with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argv entries (excluding argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        out.options.insert(stripped.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(argv("bench --reps 10 --out report.json"), &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get_usize("reps", 0), 10);
+        assert_eq!(a.get("out"), Some("report.json"));
+    }
+
+    #[test]
+    fn parses_flags_and_equals() {
+        let a = Args::parse(argv("serve --verbose --port=8042"), &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize("port", 0), 8042);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(argv("run --fast"), &[]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = Args::parse(argv("analyze a.hlo.txt b.hlo.txt"), &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("analyze"));
+        assert_eq!(a.positional, vec!["a.hlo.txt", "b.hlo.txt"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(""), &[]);
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+        assert_eq!(a.get_f64("lr", 0.1), 0.1);
+    }
+}

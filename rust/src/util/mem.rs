@@ -1,0 +1,42 @@
+//! Process-memory introspection via /proc (Linux).
+//!
+//! Used by the bench harness to report measured peak RSS alongside the
+//! analytical HLO-derived memory proxies (DESIGN.md §2: the paper's CUDA
+//! peak-memory counter has no CPU equivalent, so we report both an
+//! analytical proxy and the observed process high-water mark).
+
+use std::fs;
+
+/// Current resident set size in bytes, or None if unavailable.
+pub fn current_rss() -> Option<u64> {
+    read_status_kib("VmRSS:").map(|k| k * 1024)
+}
+
+/// Peak resident set size (high-water mark) in bytes.
+pub fn peak_rss() -> Option<u64> {
+    read_status_kib("VmHWM:").map(|k| k * 1024)
+}
+
+fn read_status_kib(key: &str) -> Option<u64> {
+    let status = fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            let kib: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kib);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_and_peak_dominates() {
+        let rss = current_rss().expect("VmRSS on Linux");
+        let peak = peak_rss().expect("VmHWM on Linux");
+        assert!(rss > 0);
+        assert!(peak >= rss);
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained substrates: JSON, CLI parsing, PRNG, statistics, memory
+//! introspection.  The offline environment ships no serde/clap/rand/
+//! criterion, so these replace them (DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+pub mod mem;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,152 @@
+//! Deterministic PRNG + distributions (no `rand` crate offline).
+//!
+//! SplitMix64 core: tiny state, passes BigCrush for our purposes (workload
+//! generation, stochastic-estimator directions, parameter init, property
+//! tests).  All sampling the paper needs: uniform, Gaussian (Box–Muller),
+//! Rademacher — the unit-variance direction distributions of eq. (7a).
+
+/// SplitMix64 (Steele et al.); one u64 of state, splittable by reseeding.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Derive an independent stream (for per-thread / per-request use).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0x9e3779b97f4a7c15)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.uniform()).max(f64::MIN_POSITIVE);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Rademacher (+1/-1 with equal probability) — unit variance, the
+    /// paper's default stochastic-Laplacian direction distribution.
+    pub fn rademacher(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    pub fn fill_uniform_f32(&mut self, out: &mut [f32], lo: f32, hi: f32) {
+        for v in out {
+            *v = self.uniform_in(lo as f64, hi as f64) as f32;
+        }
+    }
+
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        for v in out {
+            *v = self.normal() as f32;
+        }
+    }
+
+    pub fn fill_rademacher_f32(&mut self, out: &mut [f32]) {
+        for v in out {
+            *v = self.rademacher() as f32;
+        }
+    }
+
+    /// Glorot-uniform init for a [fan_in, fan_out] weight block, matching
+    /// python/compile/model.py so Rust-initialized models behave alike.
+    pub fn glorot_f32(&mut self, fan_in: usize, fan_out: usize, out: &mut [f32]) {
+        let lim = (6.0 / (fan_in + fan_out) as f64).sqrt() as f32;
+        self.fill_uniform_f32(out, -lim, lim);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m1 += z;
+            m2 += z * z;
+        }
+        assert!((m1 / n as f64).abs() < 0.02);
+        assert!((m2 / n as f64 - 1.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn rademacher_unit_variance() {
+        let mut r = Rng::new(11);
+        let n = 10_000;
+        let mut m2 = 0.0;
+        for _ in 0..n {
+            let z = r.rademacher();
+            assert!(z == 1.0 || z == -1.0);
+            m2 += z * z;
+        }
+        assert_eq!(m2, n as f64);
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut a = Rng::new(5);
+        let mut b = a.split();
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

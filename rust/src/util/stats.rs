@@ -1,0 +1,150 @@
+//! Measurement harness: timing, summary statistics, least-squares fits.
+//!
+//! Mirrors the paper's benchmarking protocol (section 4): report the
+//! *minimum* of N repetitions for runtime, and fit linear functions across
+//! a sweep to extract per-datum / per-sample slopes (table 1, table G3).
+
+use std::time::Instant;
+
+/// Timing summary over repeated runs (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub max: f64,
+    pub reps: usize,
+}
+
+/// Run `f` once for warmup, then `reps` timed repetitions.
+pub fn time_fn<F: FnMut()>(mut f: F, reps: usize) -> Timing {
+    f(); // warmup: first call pays one-time costs (page faults, caches)
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&mut samples)
+}
+
+/// Summary of raw duration samples (sorts in place).
+pub fn summarize(samples: &mut [f64]) -> Timing {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    Timing {
+        min: samples[0],
+        median: samples[n / 2],
+        mean: samples.iter().sum::<f64>() / n as f64,
+        max: samples[n - 1],
+        reps: n,
+    }
+}
+
+/// Least-squares line y = slope*x + intercept with R^2.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearFit {
+    pub slope: f64,
+    pub intercept: f64,
+    pub r2: f64,
+}
+
+/// Fit a line through (x, y) points. Panics on fewer than 2 points or
+/// degenerate x (all equal).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LinearFit {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points to fit a line");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    assert!(sxx > 0.0, "degenerate x values");
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (slope * x + intercept);
+            e * e
+        })
+        .sum();
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    LinearFit { slope, intercept, r2 }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Format bytes human-readably (B/KiB/MiB/GiB).
+pub fn fmt_bytes(b: f64) -> String {
+    let b = b.abs().max(0.0);
+    if b < 1024.0 {
+        format!("{b:.0}B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1}KiB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2}MiB", b / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2}GiB", b / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_exact_line() {
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 0.5).collect();
+        let f = linear_fit(&xs, &ys);
+        assert!((f.slope - 3.0).abs() < 1e-12);
+        assert!((f.intercept - 0.5).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_noisy_line_r2() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| 2.0 * x + if i % 2 == 0 { 0.1 } else { -0.1 })
+            .collect();
+        let f = linear_fit(&xs, &ys);
+        assert!((f.slope - 2.0).abs() < 0.01);
+        assert!(f.r2 > 0.99);
+    }
+
+    #[test]
+    fn timing_orders() {
+        let t = time_fn(
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+            5,
+        );
+        assert!(t.min <= t.median && t.median <= t.max);
+        assert_eq!(t.reps, 5);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_bytes(2048.0), "2.0KiB");
+    }
+}

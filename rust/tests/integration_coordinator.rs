@@ -1,0 +1,122 @@
+//! Integration tests for the serving coordinator: submit → batch →
+//! execute → reply, over the real AOT artifacts.
+
+use ctaylor::coordinator::{RouteKey, Service, ServiceConfig};
+use ctaylor::runtime::Registry;
+use ctaylor::util::prng::Rng;
+
+fn start_service() -> Service {
+    let dir = std::env::var("CTAYLOR_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    let reg = Registry::load(dir).expect("run `make artifacts` first");
+    Service::start(reg, ServiceConfig::default()).unwrap()
+}
+
+fn random_points(rng: &mut Rng, n: usize, dim: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n * dim];
+    rng.fill_normal_f32(&mut v);
+    v
+}
+
+#[test]
+fn serves_single_request() {
+    let svc = start_service();
+    let mut rng = Rng::new(1);
+    let route = RouteKey::new("laplacian", "collapsed", "exact");
+    let resp = svc
+        .eval_blocking(route, random_points(&mut rng, 4, 16), 16)
+        .unwrap();
+    assert_eq!(resp.f0.len(), 4);
+    assert_eq!(resp.op.len(), 4);
+    assert!(resp.f0.iter().all(|v| v.is_finite()));
+    assert!(resp.op.iter().all(|v| v.is_finite()));
+    assert!(resp.latency_s > 0.0);
+    svc.shutdown();
+}
+
+#[test]
+fn odd_sizes_are_padded_and_split() {
+    let svc = start_service();
+    let mut rng = Rng::new(2);
+    let route = RouteKey::new("laplacian", "collapsed", "exact");
+    // 21 points: needs 16 + 4 + padded-1 (or similar) blocks.
+    let resp = svc
+        .eval_blocking(route, random_points(&mut rng, 21, 16), 16)
+        .unwrap();
+    assert_eq!(resp.op.len(), 21);
+    assert!(resp.op.iter().all(|v| v.is_finite()));
+    svc.shutdown();
+}
+
+#[test]
+fn methods_agree_through_the_service() {
+    let svc = start_service();
+    let mut rng = Rng::new(3);
+    let pts = random_points(&mut rng, 8, 16);
+    let a = svc
+        .eval_blocking(RouteKey::new("laplacian", "collapsed", "exact"), pts.clone(), 16)
+        .unwrap();
+    let b = svc
+        .eval_blocking(RouteKey::new("laplacian", "standard", "exact"), pts.clone(), 16)
+        .unwrap();
+    let c = svc
+        .eval_blocking(RouteKey::new("laplacian", "nested", "exact"), pts, 16)
+        .unwrap();
+    for i in 0..8 {
+        assert!((a.op[i] - b.op[i]).abs() < 1e-2 * (1.0 + a.op[i].abs()));
+        assert!((a.op[i] - c.op[i]).abs() < 1e-2 * (1.0 + a.op[i].abs()));
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn concurrent_clients_multiplex() {
+    let svc = std::sync::Arc::new(start_service());
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            let route = RouteKey::new("laplacian", "collapsed", "exact");
+            for _ in 0..5 {
+                let n = 1 + rng.below(10);
+                let resp = svc
+                    .eval_blocking(route.clone(), random_points(&mut rng, n, 16), 16)
+                    .unwrap();
+                assert_eq!(resp.op.len(), n);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(svc.metrics().requests.load(std::sync::atomic::Ordering::Relaxed) >= 20);
+}
+
+#[test]
+fn stochastic_route_works_and_metrics_accumulate() {
+    let svc = start_service();
+    let mut rng = Rng::new(5);
+    let route = RouteKey::new("laplacian", "collapsed", "stochastic");
+    let resp = svc
+        .eval_blocking(route, random_points(&mut rng, 4, 16), 16)
+        .unwrap();
+    assert_eq!(resp.op.len(), 4);
+    assert!(resp.op.iter().all(|v| v.is_finite()));
+    let summary = svc.metrics().summary();
+    assert!(summary.contains("requests=1"), "{summary}");
+    svc.shutdown();
+}
+
+#[test]
+fn unknown_route_is_rejected() {
+    let svc = start_service();
+    let err = svc.submit(RouteKey::new("nonexistent", "x", "exact"), vec![0.0; 16], 16);
+    assert!(err.is_err());
+    let err2 = svc.submit(
+        RouteKey::new("laplacian", "collapsed", "exact"),
+        vec![0.0; 7], // not a multiple of dim
+        16,
+    );
+    assert!(err2.is_err());
+}

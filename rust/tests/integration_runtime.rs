@@ -1,0 +1,166 @@
+//! Integration tests: load real AOT artifacts and execute them via PJRT.
+//!
+//! These exercise the full python→HLO-text→rust path; they require
+//! `make artifacts` to have populated ./artifacts.
+
+use ctaylor::runtime::{HostTensor, Registry, RuntimeClient};
+use ctaylor::util::prng::Rng;
+
+fn registry() -> Registry {
+    let dir = std::env::var("CTAYLOR_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    Registry::load(dir).expect("run `make artifacts` before cargo test")
+}
+
+fn glorot_theta(meta: &ctaylor::runtime::ArtifactMeta, rng: &mut Rng) -> HostTensor {
+    let mut theta = vec![0.0f32; meta.theta_len];
+    let mut off = 0;
+    for &(fi, fo) in &meta.layer_dims {
+        rng.glorot_f32(fi, fo, &mut theta[off..off + fi * fo]);
+        off += fi * fo + fo; // biases stay zero
+    }
+    HostTensor::new(vec![meta.theta_len], theta)
+}
+
+#[test]
+fn laplacian_collapsed_executes_and_matches_standard_and_nested() {
+    let reg = registry();
+    let client = RuntimeClient::cpu().unwrap();
+    let mut rng = Rng::new(42);
+
+    let col = client.load(&reg, "laplacian_collapsed_exact_b4").unwrap();
+    let std_ = client.load(&reg, "laplacian_standard_exact_b4").unwrap();
+    let nst = client.load(&reg, "laplacian_nested_exact_b4").unwrap();
+
+    let theta = glorot_theta(&col.meta, &mut rng);
+    let mut xdata = vec![0.0f32; 4 * col.meta.dim];
+    rng.fill_normal_f32(&mut xdata);
+    let x = HostTensor::new(vec![4, col.meta.dim], xdata);
+
+    let out_c = col.run(&[theta.clone(), x.clone()]).unwrap();
+    let out_s = std_.run(&[theta.clone(), x.clone()]).unwrap();
+    let out_n = nst.run(&[theta.clone(), x.clone()]).unwrap();
+
+    // All three methods agree on f(x) and Delta f(x).
+    for i in 0..2 {
+        for b in 0..4 {
+            let (c, s, n) = (out_c[i].data[b], out_s[i].data[b], out_n[i].data[b]);
+            assert!((c - s).abs() < 1e-3 * (1.0 + c.abs()), "col vs std: {c} vs {s}");
+            assert!((c - n).abs() < 1e-3 * (1.0 + c.abs()), "col vs nested: {c} vs {n}");
+        }
+    }
+}
+
+#[test]
+fn biharmonic_methods_agree() {
+    let reg = registry();
+    let client = RuntimeClient::cpu().unwrap();
+    let mut rng = Rng::new(7);
+
+    let col = client.load(&reg, "biharmonic_collapsed_exact_b2").unwrap();
+    let nst = client.load(&reg, "biharmonic_nested_exact_b2").unwrap();
+    let theta = glorot_theta(&col.meta, &mut rng);
+    let mut xdata = vec![0.0f32; 2 * col.meta.dim];
+    rng.fill_normal_f32(&mut xdata);
+    let x = HostTensor::new(vec![2, col.meta.dim], xdata);
+
+    let out_c = col.run(&[theta.clone(), x.clone()]).unwrap();
+    let out_n = nst.run(&[theta, x]).unwrap();
+    for b in 0..2 {
+        let (c, n) = (out_c[1].data[b], out_n[1].data[b]);
+        // Biharmonic mixes 4th derivatives in f32; allow a loose relative tol.
+        assert!(
+            (c - n).abs() < 5e-2 * (1.0 + n.abs()),
+            "biharmonic col {c} vs nested {n}"
+        );
+    }
+}
+
+#[test]
+fn stochastic_laplacian_converges_towards_exact() {
+    let reg = registry();
+    let client = RuntimeClient::cpu().unwrap();
+    let mut rng = Rng::new(3);
+
+    let exact = client.load(&reg, "laplacian_collapsed_exact_b4").unwrap();
+    let stoch = client.load(&reg, "laplacian_collapsed_stochastic_s16_b4").unwrap();
+    let theta = glorot_theta(&exact.meta, &mut rng);
+    let d = exact.meta.dim;
+    let mut xdata = vec![0.0f32; 4 * d];
+    rng.fill_normal_f32(&mut xdata);
+    let x = HostTensor::new(vec![4, d], xdata);
+
+    let lap = exact.run(&[theta.clone(), x.clone()]).unwrap()[1].clone();
+
+    // Average many independent 16-sample Rademacher estimates.
+    let trials = 64;
+    let mut acc = vec![0.0f64; 4];
+    for _ in 0..trials {
+        let mut dirs = vec![0.0f32; 16 * d];
+        rng.fill_rademacher_f32(&mut dirs);
+        let est = stoch
+            .run(&[theta.clone(), x.clone(), HostTensor::new(vec![16, d], dirs)])
+            .unwrap();
+        for b in 0..4 {
+            acc[b] += est[1].data[b] as f64 / trials as f64;
+        }
+    }
+    for b in 0..4 {
+        let rel = (acc[b] - lap.data[b] as f64).abs() / (1.0 + lap.data[b].abs() as f64);
+        assert!(rel < 0.1, "stochastic mean {} vs exact {}", acc[b], lap.data[b]);
+    }
+}
+
+#[test]
+fn kernel_variant_matches_plain() {
+    let reg = registry();
+    let client = RuntimeClient::cpu().unwrap();
+    let mut rng = Rng::new(9);
+
+    let kern = client.load(&reg, "laplacian_collapsed_exact_kernel_b8").unwrap();
+    let plain = client.load(&reg, "laplacian_collapsed_exact_b8").unwrap();
+    let theta = glorot_theta(&kern.meta, &mut rng);
+    let d = kern.meta.dim;
+    let mut xdata = vec![0.0f32; 8 * d];
+    rng.fill_normal_f32(&mut xdata);
+    let x = HostTensor::new(vec![8, d], xdata);
+
+    let a = kern.run(&[theta.clone(), x.clone()]).unwrap();
+    let b = plain.run(&[theta, x]).unwrap();
+    for i in 0..2 {
+        for j in 0..8 {
+            assert!(
+                (a[i].data[j] - b[i].data[j]).abs() < 1e-3 * (1.0 + b[i].data[j].abs()),
+                "pallas-kernel artifact deviates from plain: {} vs {}",
+                a[i].data[j],
+                b[i].data[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn device_resident_params_give_same_answers() {
+    let reg = registry();
+    let client = RuntimeClient::cpu().unwrap();
+    let mut rng = Rng::new(5);
+
+    let model = client.load(&reg, "laplacian_collapsed_exact_b4").unwrap();
+    let theta = glorot_theta(&model.meta, &mut rng);
+    let d = model.meta.dim;
+    let mut xdata = vec![0.0f32; 4 * d];
+    rng.fill_normal_f32(&mut xdata);
+    let x = HostTensor::new(vec![4, d], xdata);
+
+    let via_host = model.run(&[theta.clone(), x.clone()]).unwrap();
+    let tb = model.stage(&theta).unwrap();
+    let xb = model.stage(&x).unwrap();
+    let via_dev = model.run_buffers(&[&tb, &xb]).unwrap();
+    for i in 0..2 {
+        assert_eq!(via_host[i].shape, via_dev[i].shape);
+        for (a, b) in via_host[i].data.iter().zip(&via_dev[i].data) {
+            assert!((a - b).abs() <= 1e-6);
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! TCP front-end integration: JSON-lines protocol end to end.
+
+use std::sync::Arc;
+
+use ctaylor::coordinator::{Client, Server, Service, ServiceConfig};
+use ctaylor::runtime::Registry;
+use ctaylor::util::prng::Rng;
+
+fn start() -> (Arc<Service>, Server) {
+    let dir = std::env::var("CTAYLOR_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    let reg = Registry::load(dir).expect("run `make artifacts` first");
+    let svc = Arc::new(Service::start(reg, ServiceConfig::default()).unwrap());
+    let server = Server::start(svc.clone(), "127.0.0.1:0").unwrap();
+    (svc, server)
+}
+
+#[test]
+fn tcp_roundtrip_laplacian() {
+    let (_svc, server) = start();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let mut rng = Rng::new(1);
+    let dim = 16;
+    let mut pts = vec![0.0f32; 5 * dim];
+    rng.fill_normal_f32(&mut pts);
+    let (f0, op) = client
+        .eval("laplacian", "collapsed", "exact", dim, &pts)
+        .unwrap();
+    assert_eq!(f0.len(), 5);
+    assert_eq!(op.len(), 5);
+    assert!(op.iter().all(|v| v.is_finite()));
+    server.stop();
+}
+
+#[test]
+fn tcp_bad_requests_get_errors_not_disconnects() {
+    let (_svc, server) = start();
+    let mut client = Client::connect(server.addr()).unwrap();
+    // bad route
+    let err = client.eval("nope", "collapsed", "exact", 16, &[0.0; 16]);
+    assert!(err.is_err());
+    // connection still usable afterwards
+    let mut rng = Rng::new(2);
+    let mut pts = vec![0.0f32; 16];
+    rng.fill_normal_f32(&mut pts);
+    let (f0, _) = client
+        .eval("laplacian", "collapsed", "exact", 16, &pts)
+        .unwrap();
+    assert_eq!(f0.len(), 1);
+    server.stop();
+}
+
+#[test]
+fn tcp_concurrent_clients() {
+    let (_svc, server) = start();
+    let addr = server.addr();
+    let mut handles = Vec::new();
+    for t in 0..3u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let mut rng = Rng::new(50 + t);
+            for _ in 0..4 {
+                let n = 1 + rng.below(6);
+                let mut pts = vec![0.0f32; n * 16];
+                rng.fill_normal_f32(&mut pts);
+                let (_, op) = client
+                    .eval("laplacian", "collapsed", "exact", 16, &pts)
+                    .unwrap();
+                assert_eq!(op.len(), n);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.stop();
+}

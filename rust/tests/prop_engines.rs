@@ -1,0 +1,126 @@
+//! Cross-engine property tests: the three native implementations (nested
+//! first-order AD, standard Taylor, collapsed Taylor) must agree on every
+//! operator for random networks, points and directions.
+
+use ctaylor::mlp::Mlp;
+use ctaylor::nested;
+use ctaylor::operators::{self, stochastic};
+use ctaylor::taylor::tensor::Tensor;
+use ctaylor::util::prng::Rng;
+
+fn random_mlp(rng: &mut Rng, dim: usize) -> Mlp {
+    let depth = 1 + rng.below(3);
+    let mut widths: Vec<usize> = (0..depth).map(|_| 4 + rng.below(8)).collect();
+    widths.push(1);
+    let batch = 1 + rng.below(4);
+    Mlp::init(rng, dim, &widths, batch)
+}
+
+#[test]
+fn laplacian_three_way_agreement() {
+    let mut rng = Rng::new(1);
+    for case in 0..20 {
+        let dim = 2 + rng.below(5);
+        let mlp = random_mlp(&mut rng, dim);
+        let x = mlp.random_input(&mut rng);
+        let (_, std_) = operators::laplacian_native(&mlp, &x, false);
+        let (_, col) = operators::laplacian_native(&mlp, &x, true);
+        let nst = nested::laplacian(&mlp, &x, None, 1.0);
+        assert!(std_.max_abs_diff(&col) < 1e-10, "case {case}: std vs col");
+        assert!(std_.max_abs_diff(&nst) < 1e-9, "case {case}: std vs nested");
+    }
+}
+
+#[test]
+fn weighted_laplacian_reduces_and_scales() {
+    let mut rng = Rng::new(2);
+    for _ in 0..10 {
+        let dim = 2 + rng.below(4);
+        let mlp = random_mlp(&mut rng, dim);
+        let x = mlp.random_input(&mut rng);
+        // sigma = c * I must give c^2 * laplacian (D = sigma sigma^T = c² I)
+        let c = 0.5 + rng.uniform();
+        let mut sigma = Tensor::zeros(&[dim, dim]);
+        for i in 0..dim {
+            sigma.data[i * dim + i] = c;
+        }
+        let (_, wlap) = operators::weighted_laplacian_native(&mlp, &x, &sigma, true);
+        let (_, lap) = operators::laplacian_native(&mlp, &x, true);
+        assert!(wlap.max_abs_diff(&lap.scale(c * c)) < 1e-9);
+    }
+}
+
+#[test]
+fn stochastic_modes_agree_per_draw() {
+    let mut rng = Rng::new(3);
+    for _ in 0..10 {
+        let dim = 2 + rng.below(4);
+        let mlp = random_mlp(&mut rng, dim);
+        let x = mlp.random_input(&mut rng);
+        let s = 1 + rng.below(6);
+        let dirs = stochastic::sample_dirs(
+            &mut rng,
+            stochastic::DirectionDist::Gaussian,
+            s,
+            dim,
+        );
+        let (_, a) = operators::stochastic_laplacian_native(&mlp, &x, &dirs, false);
+        let (_, b) = operators::stochastic_laplacian_native(&mlp, &x, &dirs, true);
+        assert!(a.max_abs_diff(&b) < 1e-10);
+        let (_, c) = operators::stochastic_biharmonic_native(&mlp, &x, &dirs, false);
+        let (_, d) = operators::stochastic_biharmonic_native(&mlp, &x, &dirs, true);
+        assert!(c.max_abs_diff(&d) < 1e-8);
+    }
+}
+
+#[test]
+fn biharmonic_interpolation_vs_nested_tvp() {
+    let mut rng = Rng::new(4);
+    for case in 0..8 {
+        let dim = 2 + rng.below(3);
+        let mlp = random_mlp(&mut rng, dim);
+        let x = mlp.random_input(&mut rng);
+        let (_, taylor_) = operators::biharmonic_native(&mlp, &x, true);
+        let tvp = nested::biharmonic_tvp(&mlp, &x);
+        let scale = tvp.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        assert!(
+            taylor_.max_abs_diff(&tvp) < 1e-7 * scale,
+            "case {case}: interpolation {taylor_:?} vs TVP {tvp:?}"
+        );
+    }
+}
+
+#[test]
+fn laplacian_of_quadratic_is_exact_trace() {
+    // For f(x) = sum tanh-free linear-quadratic composition we can't avoid
+    // tanh, so instead check on a 1-layer *linear* network: Hessian = 0.
+    let mut rng = Rng::new(5);
+    let mlp = Mlp::init(&mut rng, 4, &[1], 3); // purely linear: Δf = 0
+    let x = mlp.random_input(&mut rng);
+    let (_, lap) = operators::laplacian_native(&mlp, &x, true);
+    assert!(lap.data.iter().all(|v| v.abs() < 1e-12));
+    let nst = nested::laplacian(&mlp, &x, None, 1.0);
+    assert!(nst.data.iter().all(|v| v.abs() < 1e-12));
+}
+
+#[test]
+fn vector_count_model_matches_bundle_sizes() {
+    use ctaylor::taylor::count;
+    use ctaylor::taylor::jet::{JetCol, JetStd};
+
+    let mut rng = Rng::new(6);
+    for _ in 0..10 {
+        let dim = 2 + rng.below(5);
+        let r = 1 + rng.below(6);
+        let k = 2 + rng.below(3);
+        let x0 = Tensor::zeros(&[2, dim]);
+        let dirs = Tensor::zeros(&[r, 2, dim]);
+        let s = JetStd::seed(&x0, &dirs, k);
+        let c = JetCol::seed(&x0, &dirs, k);
+        // channel count = 1 (x0) + K*R (std) vs 1 + (K-1)*R + 1 (collapsed)
+        let std_channels = 1 + s.xs.len() * r;
+        let col_channels = 1 + c.xs.len() * r + 1;
+        assert_eq!(std_channels, count::vectors_standard(k, r));
+        assert_eq!(col_channels, count::vectors_collapsed(k, r));
+    }
+}

@@ -1,0 +1,113 @@
+//! Property tests for the §C collapse rewrites: over random network
+//! shapes, jet degrees, direction counts and inputs, the rewritten graph
+//! (1) computes the same outputs and (2) strictly reduces propagation cost.
+//! (Hand-rolled randomized harness — no proptest offline; DESIGN.md §2.)
+
+use ctaylor::mlp::Mlp;
+use ctaylor::taylor::interp::{eval, flops, infer_shapes};
+use ctaylor::taylor::rewrite::collapse;
+use ctaylor::taylor::tensor::Tensor;
+use ctaylor::taylor::trace::{build_mlp_jet_std, TAGGED_SLOTS};
+use ctaylor::util::prng::Rng;
+
+fn random_case(rng: &mut Rng) -> (Mlp, usize, usize, Tensor, Tensor) {
+    let dim = 2 + rng.below(4); // 2..5
+    let batch = 1 + rng.below(3);
+    let order = 2 + rng.below(3); // 2..4
+    let n_dirs = 1 + rng.below(5);
+    let depth = 1 + rng.below(3);
+    let mut widths: Vec<usize> = (0..depth).map(|_| 3 + rng.below(8)).collect();
+    widths.push(1);
+    let mlp = Mlp::init(rng, dim, &widths, batch);
+    let x0 = mlp.random_input(rng);
+    let n = n_dirs * batch * dim;
+    let dirs = Tensor::new(
+        vec![n_dirs, batch, dim],
+        (0..n).map(|_| rng.normal()).collect(),
+    );
+    (mlp, order, n_dirs, x0, dirs)
+}
+
+#[test]
+fn collapse_preserves_semantics_over_random_cases() {
+    let mut rng = Rng::new(0xC011A95E);
+    for case in 0..30 {
+        let (mlp, order, n_dirs, x0, dirs) = random_case(&mut rng);
+        let g = build_mlp_jet_std(&mlp, order, n_dirs);
+        let c = collapse(&g, TAGGED_SLOTS, n_dirs);
+
+        let a = eval(&g, &[x0.clone(), dirs.clone()]).unwrap();
+        let b = eval(&c, &[x0, dirs]).unwrap();
+        for (out_a, out_b) in a.iter().zip(&b) {
+            let diff = out_a.max_abs_diff(out_b);
+            let scale = out_a.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            assert!(
+                diff < 1e-9 * scale,
+                "case {case} (K={order}, R={n_dirs}): rewrite changed output by {diff} (scale {scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn collapse_strictly_reduces_cost_and_flops() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..20 {
+        let (mlp, order, n_dirs, x0, dirs) = random_case(&mut rng);
+        if n_dirs < 2 {
+            continue; // R = 1: nothing to collapse, cost may tie
+        }
+        let g = build_mlp_jet_std(&mlp, order, n_dirs);
+        let c = collapse(&g, TAGGED_SLOTS, n_dirs);
+
+        let cost_g = g.propagation_cost(TAGGED_SLOTS, n_dirs);
+        let cost_c = c.propagation_cost(TAGGED_SLOTS, n_dirs);
+        assert!(
+            cost_c < cost_g,
+            "case {case}: cost not reduced ({cost_c} !< {cost_g})"
+        );
+
+        let shapes = vec![x0.shape.clone(), dirs.shape.clone()];
+        let f_g = flops(&g, &shapes).unwrap();
+        let f_c = flops(&c, &shapes).unwrap();
+        assert!(
+            f_c <= f_g,
+            "case {case}: flops increased ({f_c} > {f_g})"
+        );
+    }
+}
+
+#[test]
+fn rewrites_are_idempotent() {
+    let mut rng = Rng::new(0x1D3);
+    for _ in 0..10 {
+        let (mlp, order, n_dirs, x0, dirs) = random_case(&mut rng);
+        let g = build_mlp_jet_std(&mlp, order, n_dirs);
+        let c1 = collapse(&g, TAGGED_SLOTS, n_dirs);
+        let c2 = collapse(&c1, TAGGED_SLOTS, n_dirs);
+        // A second collapse must not change cost (fixpoint) nor semantics.
+        assert_eq!(
+            c1.propagation_cost(TAGGED_SLOTS, n_dirs),
+            c2.propagation_cost(TAGGED_SLOTS, n_dirs)
+        );
+        let a = eval(&c1, &[x0.clone(), dirs.clone()]).unwrap();
+        let b = eval(&c2, &[x0, dirs]).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.max_abs_diff(y) < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn shape_inference_agrees_with_interpreter() {
+    let mut rng = Rng::new(0x5AFE);
+    for _ in 0..10 {
+        let (mlp, order, n_dirs, x0, dirs) = random_case(&mut rng);
+        let g = build_mlp_jet_std(&mlp, order, n_dirs);
+        let shapes = infer_shapes(&g, &[x0.shape.clone(), dirs.shape.clone()]).unwrap();
+        let outs = eval(&g, &[x0, dirs]).unwrap();
+        for (&oid, out) in g.outputs.iter().zip(&outs) {
+            assert_eq!(shapes[oid], out.shape, "inferred vs actual shape");
+        }
+    }
+}
