@@ -95,11 +95,11 @@ pub fn run_fig5_table1(registry: &Registry, reps: usize) -> Result<String> {
             }
         }
     }
-    let get = |op: &str, method: &str, mode: &str| -> &Sweep {
+    fn get<'a>(all: &'a [Sweep], op: &str, method: &str, mode: &str) -> &'a Sweep {
         all.iter()
             .find(|s| s.op == op && s.method == method && s.mode == mode)
             .unwrap()
-    };
+    }
 
     let mut out = String::from(
         "# Table 1 — per-datum (exact) / per-sample (stochastic) slopes\n\n",
@@ -114,8 +114,8 @@ pub fn run_fig5_table1(registry: &Registry, reps: usize) -> Result<String> {
             for method in METHODS {
                 let mut row = vec![mode.to_string(), metric.to_string(), method.to_string()];
                 for op in OPS {
-                    let s = get(op, method, mode);
-                    let base = f(get(op, "nested", mode));
+                    let s = get(&all, op, method, mode);
+                    let base = f(get(&all, op, "nested", mode));
                     row.push(with_ratio(f(s), base));
                 }
                 rows.push(row);

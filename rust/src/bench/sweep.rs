@@ -5,7 +5,7 @@
 use anyhow::{bail, Result};
 
 use crate::hlo;
-use crate::runtime::{Registry, RuntimeClient};
+use crate::runtime::{DeviceBuffer, Registry, RuntimeClient};
 use crate::util::stats::{linear_fit, time_fn, LinearFit};
 
 use super::workload;
@@ -71,24 +71,27 @@ pub fn run_sweep(
     for meta in &artifacts {
         let model = client.load(registry, &meta.name)?;
         let inputs = workload::inputs_for(meta, seed);
-        // Stage everything device-side once; time pure execution.
-        let bufs: Vec<xla::PjRtBuffer> =
+        // Stage everything once; time pure execution.
+        let bufs: Vec<DeviceBuffer> =
             inputs.iter().map(|t| model.stage(t)).collect::<Result<_>>()?;
-        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let refs: Vec<&DeviceBuffer> = bufs.iter().collect();
         let timing = time_fn(
             || {
                 model.run_buffers(&refs).expect("bench execution failed");
             },
             reps,
         );
-        let an = hlo::analyze_file(&meta.hlo_path(&registry.dir))?;
+        // Memory/FLOP proxies come from the artifact's HLO text; builtin
+        // (fileless) artifacts report zero until an AOT set is dropped in.
+        let hlo_path = meta.hlo_path(&registry.dir);
+        let an = if hlo_path.exists() { Some(hlo::analyze_file(&hlo_path)?) } else { None };
         let x = if mode == "stochastic" { meta.samples } else { meta.batch };
         points.push(SweepPoint {
             x: x as f64,
             time_s: timing.min,
-            mem_diff: an.total_intermediate_bytes as f64,
-            mem_nondiff: an.peak_live_bytes as f64,
-            flops: an.flops as f64,
+            mem_diff: an.map(|a| a.total_intermediate_bytes as f64).unwrap_or(0.0),
+            mem_nondiff: an.map(|a| a.peak_live_bytes as f64).unwrap_or(0.0),
+            flops: an.map(|a| a.flops as f64).unwrap_or(0.0),
         });
     }
     let xs: Vec<f64> = points.iter().map(|p| p.x).collect();

@@ -36,7 +36,9 @@ pub fn sigma_for(meta: &ArtifactMeta, seed: u64) -> HostTensor {
 }
 
 /// Directions `[S, D]` for stochastic estimators: Rademacher for traces,
-/// Gaussian for the 4th-order biharmonic (Isserlis unbiasedness).
+/// Gaussian for the 4th-order biharmonic (Isserlis unbiasedness).  The
+/// weighted Laplacian gets σ-premultiplied dirs — aot.py's artifact
+/// contract keeps the compiled executable shape-uniform (paper eq. 8a).
 pub fn dirs_for(meta: &ArtifactMeta, seed: u64) -> HostTensor {
     let mut rng = Rng::new(seed ^ 0xd15);
     let mut d = vec![0.0f32; meta.samples * meta.dim];
@@ -45,15 +47,23 @@ pub fn dirs_for(meta: &ArtifactMeta, seed: u64) -> HostTensor {
     } else {
         rng.fill_rademacher_f32(&mut d);
     }
+    if meta.op == "weighted_laplacian" {
+        let sigma = sigma_for(meta, seed);
+        d = crate::operators::stochastic::premultiply_sigma_f32(
+            &d, &sigma.data, meta.dim, meta.dim,
+        );
+    }
     HostTensor::new(vec![meta.samples, meta.dim], d)
 }
 
-/// All inputs for one artifact in manifest order.
+/// All inputs for one artifact in manifest order: θ, x, then σ (exact
+/// weighted Laplacian) or dirs (stochastic estimators).
 pub fn inputs_for(meta: &ArtifactMeta, seed: u64) -> Vec<HostTensor> {
     let mut v = vec![theta_for(meta, seed), input_for(meta, seed)];
     if meta.op == "weighted_laplacian" && meta.mode == "exact" {
         v.push(sigma_for(meta, seed));
-    } else if meta.mode == "stochastic" {
+    }
+    if meta.mode == "stochastic" {
         v.push(dirs_for(meta, seed));
     }
     v

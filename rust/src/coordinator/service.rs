@@ -20,7 +20,7 @@ use super::batcher::plan_blocks;
 use super::metrics::Metrics;
 use super::request::{EvalRequest, EvalResponse, RouteKey};
 use super::router::Router;
-use crate::runtime::{HostTensor, Registry, RuntimeClient};
+use crate::runtime::{DeviceBuffer, HostTensor, Registry, RuntimeClient};
 use crate::util::prng::Rng;
 
 /// Service tuning knobs.
@@ -171,7 +171,7 @@ struct Pending {
 }
 
 struct ModelState {
-    theta_buf: xla::PjRtBuffer,
+    theta_buf: DeviceBuffer,
     sigma: Option<HostTensor>,
 }
 
@@ -273,7 +273,7 @@ fn flush_all(
                     .or_insert_with(|| glorot_theta(meta, rng))
                     .clone();
                 let theta_buf = model.stage(&theta)?;
-                let sigma = if meta.op == "weighted_laplacian" && meta.mode == "exact" {
+                let sigma = if meta.op == "weighted_laplacian" {
                     // Full-rank diagonal σ (the paper's choice), entries in
                     // [0.5, 1.5] so the operator stays well-conditioned.
                     let mut s = vec![0.0f32; dim * dim];
@@ -311,14 +311,16 @@ fn flush_all(
             }
             debug_assert_eq!(gathered, block.used);
 
-            // Execute: θ (device-resident) + x (+ σ or sampled directions).
+            // Execute: θ (staged) + x, then σ (exact weighted) or sampled
+            // directions (stochastic), in manifest input order.  Weighted
+            // stochastic gets σ-premultiplied dirs (the aot.py contract).
             let state = model_state.get(name).unwrap();
             let x = HostTensor::new(vec![block.size, dim], xdata);
             let xbuf = model.stage(&x)?;
-            let outputs = if let Some(sigma) = &state.sigma {
-                let sbuf = model.stage(sigma)?;
-                model.run_buffers(&[&state.theta_buf, &xbuf, &sbuf])?
-            } else if meta.mode == "stochastic" {
+            let mut bufs = vec![&state.theta_buf, &xbuf];
+            let sbuf;
+            let dbuf;
+            if meta.mode == "stochastic" {
                 let s = meta.samples;
                 let mut dirs = vec![0.0f32; s * dim];
                 // 4th-order estimators need Gaussian moments (Isserlis);
@@ -328,11 +330,18 @@ fn flush_all(
                 } else {
                     rng.fill_rademacher_f32(&mut dirs);
                 }
-                let dbuf = model.stage(&HostTensor::new(vec![s, dim], dirs))?;
-                model.run_buffers(&[&state.theta_buf, &xbuf, &dbuf])?
-            } else {
-                model.run_buffers(&[&state.theta_buf, &xbuf])?
-            };
+                if let Some(sigma) = &state.sigma {
+                    dirs = crate::operators::stochastic::premultiply_sigma_f32(
+                        &dirs, &sigma.data, dim, dim,
+                    );
+                }
+                dbuf = model.stage(&HostTensor::new(vec![s, dim], dirs))?;
+                bufs.push(&dbuf);
+            } else if let Some(sigma) = &state.sigma {
+                sbuf = model.stage(sigma)?;
+                bufs.push(&sbuf);
+            }
+            let outputs = model.run_buffers(&bufs)?;
             metrics.record_batch(block.size - block.used);
 
             // Scatter outputs back to the requests that contributed points;

@@ -3,9 +3,13 @@
 //! Parses the subset jax's `as_hlo_text` emits: named computations, one
 //! instruction per line of the form
 //! `[ROOT] name = <type> opcode(operand, ...), attr=..., ...`.
+//!
+//! Hand-rolled tokenizer — the offline crate set ships no `regex`
+//! (DESIGN.md §2), and the grammar is simple enough that scanning
+//! identifier runs and matching brackets directly is both faster and
+//! easier to audit than the former regex triplet.
 
 use anyhow::{anyhow, bail, Context, Result};
-use regex::Regex;
 
 use super::shape::{parse_type, HloType};
 
@@ -59,6 +63,113 @@ impl HloModule {
     }
 }
 
+/// Identifier characters of HLO names/opcodes (`add.2`, `Arg_0.9`,
+/// `get-tuple-element`, `region_0.1`).
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || matches!(c, '_' | '.' | '-')
+}
+
+/// `HloModule <name>...` header; returns the module name.
+fn parse_header(line: &str) -> Option<String> {
+    let rest = line.strip_prefix("HloModule")?;
+    let rest = rest.strip_prefix(char::is_whitespace)?.trim_start();
+    let name: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// `name {`, `ENTRY name {`, or `name (params) -> type {` openers;
+/// returns (computation name, is_entry).
+fn parse_computation_open(line: &str) -> Option<(String, bool)> {
+    let body = line.strip_suffix('{')?.trim_end();
+    let (is_entry, body) = match body.strip_prefix("ENTRY") {
+        Some(rest) if rest.is_empty() || rest.starts_with(char::is_whitespace) => {
+            (true, rest.trim_start())
+        }
+        _ => (false, body),
+    };
+    let body = body.strip_prefix('%').unwrap_or(body);
+    let name: String = body.chars().take_while(|&c| is_ident_char(c)).collect();
+    if name.is_empty() {
+        return None;
+    }
+    // Whatever follows the name must be absent or a parameter list —
+    // otherwise this is not a computation opener.
+    let after = body[name.len()..].trim_start();
+    if !after.is_empty() && !after.starts_with('(') {
+        return None;
+    }
+    Some((name, is_entry))
+}
+
+/// A tokenized `[ROOT] name = <type> opcode(tail` line (the tail still
+/// holds `operands), attrs`).
+struct RawInstruction<'a> {
+    is_root: bool,
+    name: &'a str,
+    ty_text: &'a str,
+    opcode: &'a str,
+    tail: &'a str,
+}
+
+/// Index just past the `)` matching the `(` at `text[0]`.
+fn matching_paren_end(text: &str) -> Option<usize> {
+    let mut depth = 0i32;
+    for (i, c) in text.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i + 1);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Tokenize one instruction line; `None` for lines that are not
+/// instructions (mirrors the old regex's silent skip).
+fn parse_instruction_line(trimmed: &str) -> Option<RawInstruction<'_>> {
+    let (is_root, rest) = match trimmed.strip_prefix("ROOT") {
+        Some(r) if r.starts_with(char::is_whitespace) => (true, r.trim_start()),
+        _ => (false, trimmed),
+    };
+    let rest = rest.strip_prefix('%').unwrap_or(rest);
+    let eq = rest.find('=')?;
+    let name = rest[..eq].trim_end();
+    if name.is_empty() || !name.chars().all(is_ident_char) {
+        return None;
+    }
+    let rhs = rest[eq + 1..].trim_start();
+    // The output type is either a parenthesized tuple or a bare array
+    // shape; after it comes ` opcode(`.
+    let (ty_text, after_ty) = if rhs.starts_with('(') {
+        let end = matching_paren_end(rhs)?;
+        (&rhs[..end], &rhs[end..])
+    } else {
+        // Array type contains no parens: the first `(` opens the operand
+        // list, and the opcode is the word right before it.
+        let open = rhs.find('(')?;
+        let head = rhs[..open].trim_end();
+        let cut = head.rfind(char::is_whitespace)?;
+        (&head[..cut], &rhs[cut..])
+    };
+    // after_ty / the tail of the array branch is ` opcode(...`.
+    let open = after_ty.find('(')?;
+    let opcode = after_ty[..open].trim();
+    if opcode.is_empty() || !opcode.chars().all(is_ident_char) {
+        return None;
+    }
+    let tail = &after_ty[open + 1..];
+    Some(RawInstruction { is_root, name, ty_text: ty_text.trim(), opcode, tail })
+}
+
 /// Split an operand/attr tail at top-level commas.
 fn split_top_level(text: &str) -> Vec<String> {
     let mut parts = Vec::new();
@@ -84,52 +195,36 @@ fn split_top_level(text: &str) -> Vec<String> {
 
 /// Parse a full HLO text module.
 pub fn parse_module(text: &str) -> Result<HloModule> {
-    let header = Regex::new(r"^HloModule\s+([\w\.\-]+)").unwrap();
-    // `name {` or `ENTRY name {` or `name (params) -> type {`
-    let comp_open = Regex::new(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(\([^{]*)?\{\s*$").unwrap();
-    let instr_re = Regex::new(
-        r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^=]*?\)|[\w\[\]\{\},\s]+?))\s+([\w\-]+)\((.*)$",
-    )
-    .unwrap();
-
     let mut name = String::new();
     let mut computations: Vec<Computation> = Vec::new();
     let mut current: Option<Computation> = None;
 
     for raw in text.lines() {
-        let line = raw.trim_end();
-        if line.trim().is_empty() {
+        let trimmed = raw.trim();
+        if trimmed.is_empty() {
             continue;
         }
-        if let Some(c) = header.captures(line.trim()) {
-            name = c[1].to_string();
+        if let Some(n) = parse_header(trimmed) {
+            name = n;
             continue;
         }
         if current.is_none() {
-            if let Some(c) = comp_open.captures(line.trim()) {
-                current = Some(Computation {
-                    name: c[2].to_string(),
-                    is_entry: c.get(1).is_some(),
-                    instructions: Vec::new(),
-                });
-                continue;
+            if let Some((cname, is_entry)) = parse_computation_open(trimmed) {
+                current = Some(Computation { name: cname, is_entry, instructions: Vec::new() });
             }
             continue;
         }
-        if line.trim() == "}" {
+        if trimmed == "}" {
             computations.push(current.take().unwrap());
             continue;
         }
         let cur = current.as_mut().unwrap();
-        let trimmed = line.trim();
-        if let Some(c) = instr_re.captures(trimmed) {
-            let ty_text = c[3].trim();
-            let ty = parse_type(ty_text)
+        if let Some(instr) = parse_instruction_line(trimmed) {
+            let ty = parse_type(instr.ty_text)
                 .with_context(|| format!("shape in line {trimmed:?}"))?;
-            let opcode = c[4].to_string();
             // The tail holds `operands), attr=..., ...` — find the matching
             // close paren of the operand list.
-            let tail = &c[5];
+            let tail = instr.tail;
             let mut depth = 1i32;
             let mut close = tail.len();
             for (i, ch) in tail.char_indices() {
@@ -159,11 +254,11 @@ pub fn parse_module(text: &str) -> Result<HloModule> {
                 .filter(|o| !o.is_empty())
                 .collect();
             cur.instructions.push(Instruction {
-                name: c[2].to_string(),
+                name: instr.name.to_string(),
                 ty,
-                opcode,
+                opcode: instr.opcode.to_string(),
                 operands,
-                is_root: c.get(1).is_some(),
+                is_root: instr.is_root,
                 attrs,
             });
         }

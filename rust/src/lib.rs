@@ -27,6 +27,15 @@
 //! * [`bench`] — sweeps, slope fits and table/figure regeneration.
 //! * [`util`] — JSON / CLI / PRNG / stats substrates.
 
+// Deliberate API-shape choices the CI clippy gate (-D warnings) would
+// otherwise reject: `Tensor::add`/`Rational::mul` etc. mirror the paper's
+// operator notation rather than implementing `std::ops` (jet rules want
+// by-reference tensor ops), and the rewrite passes thread `&Vec` working
+// buffers through helper closures.  Anything else gets a targeted
+// per-item allow, not a crate-wide one.
+#![allow(clippy::should_implement_trait)]
+#![allow(clippy::ptr_arg)]
+
 pub mod bench;
 pub mod coordinator;
 pub mod hlo;

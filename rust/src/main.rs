@@ -43,8 +43,11 @@ fn main() -> Result<()> {
     }
 }
 
+/// Load the manifest named by `--artifacts` (default ./artifacts), falling
+/// back to the builtin preset when none exists so every subcommand works
+/// with zero setup.  A present-but-malformed manifest is a hard error.
 fn registry(args: &Args) -> Result<Registry> {
-    Registry::load(args.get_or("artifacts", "artifacts"))
+    Registry::load_or_builtin(args.get_or("artifacts", "artifacts"))
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

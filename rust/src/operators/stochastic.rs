@@ -50,9 +50,47 @@ pub fn premultiply_sigma(dirs: &Tensor, sigma: &Tensor) -> Tensor {
     out
 }
 
+/// f32 host-side premultiply for the serving/bench paths (the aot.py
+/// contract: weighted stochastic artifacts receive σ·v, not raw v).
+/// `dirs` is `[S, R]` row-major, `sigma` is `[D, R]`; returns `[S, D]`.
+pub fn premultiply_sigma_f32(dirs: &[f32], sigma: &[f32], d: usize, r: usize) -> Vec<f32> {
+    assert_eq!(sigma.len(), d * r, "sigma must be [D, R]");
+    assert_eq!(dirs.len() % r, 0, "dirs width must match rank(σ)");
+    let s = dirs.len() / r;
+    let mut out = vec![0.0f32; s * d];
+    for si in 0..s {
+        for di in 0..d {
+            let mut acc = 0.0f32;
+            for ri in 0..r {
+                acc += sigma[di * r + ri] * dirs[si * r + ri];
+            }
+            out[si * d + di] = acc;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn f32_premultiply_matches_tensor_path() {
+        let mut rng = Rng::new(9);
+        let (s, d) = (5, 3);
+        let dirs = sample_dirs(&mut rng, DirectionDist::Gaussian, s, d);
+        let mut sigma = Tensor::zeros(&[d, d]);
+        for v in sigma.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let expect = premultiply_sigma(&dirs, &sigma);
+        let dirs32: Vec<f32> = dirs.data.iter().map(|&v| v as f32).collect();
+        let sigma32: Vec<f32> = sigma.data.iter().map(|&v| v as f32).collect();
+        let got = premultiply_sigma_f32(&dirs32, &sigma32, d, d);
+        for (g, e) in got.iter().zip(&expect.data) {
+            assert!((f64::from(*g) - e).abs() < 1e-5, "{g} vs {e}");
+        }
+    }
 
     #[test]
     fn rademacher_entries_are_pm1() {

@@ -1,23 +1,26 @@
-//! A compiled model variant: metadata + PJRT executable.
+//! A loaded model variant: manifest metadata + execution backend.
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Result};
 
-use super::io::{literal_from_host, literal_to_vec_f32, HostTensor};
+use super::io::{DeviceBuffer, HostTensor};
+use super::native;
 use super::registry::ArtifactMeta;
 
-/// One AOT-compiled executable with its manifest metadata.
+/// One loadable executable with its manifest metadata.  Execution goes
+/// through the native backend (see native.rs); `stage`/`run_buffers`
+/// preserve the stage-once / execute-many call structure a device backend
+/// (PJRT) needs, so swapping the backend later is call-site compatible.
 pub struct LoadedModel {
     pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
 }
 
 impl LoadedModel {
-    pub fn new(meta: ArtifactMeta, exe: xla::PjRtLoadedExecutable) -> Self {
-        LoadedModel { meta, exe }
+    pub fn new(meta: ArtifactMeta) -> Self {
+        LoadedModel { meta }
     }
 
     /// Execute with host tensors; validates counts/shapes against the
-    /// manifest and unpacks the tuple output.
+    /// manifest.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         ensure!(
             inputs.len() == self.meta.inputs.len(),
@@ -36,55 +39,27 @@ impl LoadedModel {
                 spec.shape
             );
         }
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(literal_from_host).collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.meta.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True: outputs arrive as one tuple.
-        let parts = tuple.to_tuple()?;
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        let outputs = native::execute(&self.meta, &refs)?;
         ensure!(
-            parts.len() == self.meta.outputs.len(),
+            outputs.len() == self.meta.outputs.len(),
             "{}: expected {} outputs, got {}",
             self.meta.name,
             self.meta.outputs.len(),
-            parts.len()
+            outputs.len()
         );
-        parts
-            .iter()
-            .zip(&self.meta.outputs)
-            .map(|(lit, spec)| {
-                Ok(HostTensor::new(spec.shape.clone(), literal_to_vec_f32(lit)?))
-            })
-            .collect()
+        Ok(outputs)
     }
 
-    /// Execute with pre-staged device buffers (hot path: parameters stay
-    /// device-resident across calls, avoiding the host->device copy).
-    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
-        let result = self
-            .exe
-            .execute_b(inputs)
-            .with_context(|| format!("executing {} (buffers)", self.meta.name))?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        parts
-            .iter()
-            .zip(&self.meta.outputs)
-            .map(|(lit, spec)| {
-                Ok(HostTensor::new(spec.shape.clone(), literal_to_vec_f32(lit)?))
-            })
-            .collect()
+    /// Execute with pre-staged buffers (hot path: no per-call copies;
+    /// shape validation happened at staging/build time).
+    pub fn run_buffers(&self, inputs: &[&DeviceBuffer]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().map(|b| b.host()).collect();
+        native::execute(&self.meta, &refs)
     }
 
-    /// Stage a host tensor as a device buffer for repeated use.
-    pub fn stage(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        let client = self.exe.client();
-        let dims: Vec<usize> = t.shape.clone();
-        Ok(client.buffer_from_host_buffer(&t.data, &dims, None)?)
+    /// Stage a host tensor for repeated use.
+    pub fn stage(&self, t: &HostTensor) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer::from_host(t))
     }
 }

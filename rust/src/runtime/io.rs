@@ -1,6 +1,5 @@
-//! Host-side tensor plumbing between the coordinator and PJRT literals.
-
-use anyhow::Result;
+//! Host-side tensor plumbing between the coordinator and the execution
+//! backend.
 
 /// A plain host tensor (f32, row-major) — the coordinator's currency.
 #[derive(Debug, Clone, PartialEq)]
@@ -33,29 +32,34 @@ impl HostTensor {
     }
 }
 
-/// Build an f32 PJRT literal of the given shape.
-pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
-    assert_eq!(shape.iter().product::<usize>(), data.len());
-    let lit = xla::Literal::vec1(data);
-    if shape.len() == 1 {
-        return Ok(lit);
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
+/// A tensor staged for repeated execution.
+///
+/// On the PJRT backend this was a device-resident `PjRtBuffer`; the native
+/// backend executes on the host, so staging just pins the host copy.  The
+/// type is kept so call sites (coordinator worker, bench sweeps) preserve
+/// the stage-once / execute-many structure a device backend needs.
+#[derive(Debug, Clone)]
+pub struct DeviceBuffer {
+    pub(crate) host: HostTensor,
 }
 
-pub fn literal_from_host(t: &HostTensor) -> Result<xla::Literal> {
-    if t.shape.is_empty() {
-        // Rank-0: reshape a 1-element vector to scalar.
-        let lit = xla::Literal::vec1(&t.data);
-        return Ok(lit.reshape(&[])?);
+impl DeviceBuffer {
+    pub fn from_host(t: &HostTensor) -> DeviceBuffer {
+        DeviceBuffer { host: t.clone() }
     }
-    literal_f32(&t.shape, &t.data)
-}
 
-/// Extract f32 data (any rank) from a literal.
-pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+    /// Borrow the staged tensor (the execution hot path — no copy).
+    pub fn host(&self) -> &HostTensor {
+        &self.host
+    }
+
+    pub fn to_host(&self) -> HostTensor {
+        self.host.clone()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.host.shape
+    }
 }
 
 #[cfg(test)]
@@ -74,5 +78,13 @@ mod tests {
     #[should_panic]
     fn host_tensor_rejects_mismatch() {
         HostTensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn staging_roundtrips() {
+        let t = HostTensor::new(vec![2], vec![1.0, 2.0]);
+        let b = DeviceBuffer::from_host(&t);
+        assert_eq!(b.shape(), &[2]);
+        assert_eq!(b.to_host(), t);
     }
 }

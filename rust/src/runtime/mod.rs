@@ -1,16 +1,19 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Artifact runtime: resolve manifest entries to executables and run them.
 //!
-//! `python/compile/aot.py` runs once at build time; everything here is
-//! Python-free.  The flow is `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`
-//! (see /opt/xla-example/load_hlo for the reference wiring).
+//! The offline crate set ships no PJRT bindings, so execution goes through
+//! the native backend (native.rs) built on the in-crate engines; the
+//! registry/client/executable surface matches what a PJRT-backed runtime
+//! needs (`python/compile/aot.py` produces the HLO artifacts a future
+//! backend would compile), so the backend can be swapped without touching
+//! the coordinator or bench layers.
 
 mod client;
 mod executable;
 mod io;
+mod native;
 mod registry;
 
 pub use client::RuntimeClient;
 pub use executable::LoadedModel;
-pub use io::{literal_f32, literal_to_vec_f32, HostTensor};
+pub use io::{DeviceBuffer, HostTensor};
 pub use registry::{ArtifactMeta, Registry, TensorSpec};

@@ -1,0 +1,280 @@
+//! Native execution backend: runs artifact metadata through the in-crate
+//! engines instead of a PJRT executable.
+//!
+//! The offline crate set ships no `xla`/PJRT bindings (DESIGN.md §2), so
+//! the runtime executes each artifact's (op, method, mode) natively: the
+//! nested first-order engine, the standard Taylor engine or the collapsed
+//! Taylor engine — all three semantically cross-checked in
+//! tests/prop_engines.rs.  The artifact's `theta` input is unpacked into
+//! an [`Mlp`] exactly as `python/compile/model.py` lays parameters out, so
+//! a future PJRT backend can swap in behind the same [`ArtifactMeta`]
+//! surface without touching callers.
+
+use anyhow::{bail, ensure, Result};
+
+use super::io::HostTensor;
+use super::registry::ArtifactMeta;
+use crate::mlp::Mlp;
+use crate::nested;
+use crate::operators;
+use crate::taylor::tensor::Tensor;
+
+/// Execution method selected by an artifact's manifest entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Method {
+    Nested,
+    Standard,
+    Collapsed,
+}
+
+impl Method {
+    fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "nested" => Method::Nested,
+            "standard" => Method::Standard,
+            "collapsed" => Method::Collapsed,
+            other => bail!("unknown method {other:?}"),
+        })
+    }
+
+    fn collapsed(self) -> bool {
+        self == Method::Collapsed
+    }
+}
+
+fn to_f64(t: &HostTensor) -> Tensor {
+    Tensor::new(t.shape.clone(), t.data.iter().map(|&v| v as f64).collect())
+}
+
+fn to_f32(t: &Tensor) -> HostTensor {
+    HostTensor::new(t.shape.clone(), t.data.iter().map(|&v| v as f32).collect())
+}
+
+/// Unpack a flat `theta` vector into an [`Mlp`] (per-layer W then b, the
+/// `model.py` layout the integration tests replicate).
+fn mlp_from_theta(meta: &ArtifactMeta, theta: &[f32]) -> Result<Mlp> {
+    ensure!(
+        theta.len() == meta.theta_len,
+        "{}: theta length {} != manifest {}",
+        meta.name,
+        theta.len(),
+        meta.theta_len
+    );
+    ensure!(!meta.layer_dims.is_empty(), "{}: manifest has no layer_dims", meta.name);
+    let mut layers = Vec::new();
+    let mut off = 0usize;
+    for &(fi, fo) in &meta.layer_dims {
+        ensure!(
+            off + fi * fo + fo <= theta.len(),
+            "{}: theta too short for layer ({fi}, {fo})",
+            meta.name
+        );
+        let w = Tensor::new(
+            vec![fi, fo],
+            theta[off..off + fi * fo].iter().map(|&v| v as f64).collect(),
+        );
+        off += fi * fo;
+        let b = Tensor::new(vec![fo], theta[off..off + fo].iter().map(|&v| v as f64).collect());
+        off += fo;
+        layers.push((w, b));
+    }
+    ensure!(off == theta.len(), "{}: {} unused theta entries", meta.name, theta.len() - off);
+    Ok(Mlp {
+        in_dim: meta.dim,
+        widths: meta.widths.clone(),
+        layers,
+        batch_hint: meta.batch.max(1),
+    })
+}
+
+/// Direction rows for the nested engine's weighted Laplacian: columns of
+/// σ (`[D, R]`) transposed to `[R, D]` rows (paper eq. 8b).
+fn sigma_columns(sigma: &Tensor) -> Tensor {
+    let (d, r) = (sigma.shape[0], sigma.shape[1]);
+    let mut dirs = Tensor::zeros(&[r, d]);
+    for i in 0..d {
+        for j in 0..r {
+            dirs.data[j * d + i] = sigma.data[i * r + j];
+        }
+    }
+    dirs
+}
+
+/// Execute one artifact natively.  `inputs` follow the manifest order:
+/// `theta`, `x`, then `sigma` (weighted Laplacian) and/or `dirs`
+/// (stochastic modes).  Returns `[f0, op]`, each `[B, 1]` f32.
+pub fn execute(meta: &ArtifactMeta, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    ensure!(inputs.len() >= 2, "{}: need at least theta and x inputs", meta.name);
+    let mlp = mlp_from_theta(meta, &inputs[0].data)?;
+    let x = inputs[1];
+    ensure!(
+        x.shape.len() == 2 && x.shape[1] == meta.dim,
+        "{}: x shape {:?} is not [B, {}]",
+        meta.name,
+        x.shape,
+        meta.dim
+    );
+    let x0 = to_f64(x);
+    let method = Method::parse(&meta.method)?;
+
+    let aux = |idx: usize, what: &str| -> Result<Tensor> {
+        let t = inputs.get(idx).ok_or_else(|| {
+            anyhow::anyhow!("{}: missing input {idx} ({what}) for {}", meta.name, meta.mode)
+        })?;
+        Ok(to_f64(t))
+    };
+    let checked_dirs = |idx: usize| -> Result<Tensor> {
+        let dirs = aux(idx, "dirs")?;
+        ensure!(
+            dirs.rank() == 2 && dirs.shape[1] == meta.dim,
+            "{}: dirs shape {:?} is not [S, {}]",
+            meta.name,
+            dirs.shape,
+            meta.dim
+        );
+        Ok(dirs)
+    };
+    let checked_sigma = |idx: usize| -> Result<Tensor> {
+        let sigma = aux(idx, "sigma")?;
+        ensure!(
+            sigma.shape == [meta.dim, meta.dim],
+            "{}: sigma shape {:?} is not [{d}, {d}]",
+            meta.name,
+            sigma.shape,
+            d = meta.dim
+        );
+        Ok(sigma)
+    };
+
+    let (f0, opv) = match (meta.op.as_str(), meta.mode.as_str()) {
+        ("laplacian", "exact") => match method {
+            Method::Nested => (mlp.apply(&x0), nested::laplacian(&mlp, &x0, None, 1.0)),
+            m => operators::laplacian_native(&mlp, &x0, m.collapsed()),
+        },
+        ("laplacian", "stochastic") | ("weighted_laplacian", "stochastic") => {
+            // Weighted stochastic follows the aot.py artifact contract
+            // (paper eq. 8a): callers pass dirs already premultiplied by σ,
+            // so the executable is shape-uniform with the plain estimator.
+            let dirs = checked_dirs(2)?;
+            match method {
+                Method::Nested => {
+                    let s = dirs.shape[0] as f64;
+                    (mlp.apply(&x0), nested::laplacian(&mlp, &x0, Some(&dirs), 1.0 / s))
+                }
+                m => operators::stochastic_laplacian_native(&mlp, &x0, &dirs, m.collapsed()),
+            }
+        }
+        ("weighted_laplacian", "exact") => {
+            let sigma = checked_sigma(2)?;
+            match method {
+                Method::Nested => {
+                    let dirs = sigma_columns(&sigma);
+                    (mlp.apply(&x0), nested::laplacian(&mlp, &x0, Some(&dirs), 1.0))
+                }
+                m => operators::weighted_laplacian_native(&mlp, &x0, &sigma, m.collapsed()),
+            }
+        }
+        ("biharmonic", "exact") => match method {
+            Method::Nested => (mlp.apply(&x0), nested::biharmonic_tvp(&mlp, &x0)),
+            m => operators::biharmonic_native(&mlp, &x0, m.collapsed()),
+        },
+        ("biharmonic", "stochastic") => {
+            let dirs = checked_dirs(2)?;
+            match method {
+                Method::Nested => {
+                    (mlp.apply(&x0), nested::stochastic_biharmonic_tvp(&mlp, &x0, &dirs))
+                }
+                m => operators::stochastic_biharmonic_native(&mlp, &x0, &dirs, m.collapsed()),
+            }
+        }
+        (op, mode) => bail!("{}: no native executor for op {op:?} mode {mode:?}", meta.name),
+    };
+
+    Ok(vec![to_f32(&f0), to_f32(&opv)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workload::theta_for;
+    use crate::runtime::Registry;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn executes_builtin_laplacian_artifact() {
+        let reg = Registry::builtin();
+        let meta = reg.get("laplacian_collapsed_exact_b2").unwrap();
+        let theta = theta_for(meta, 1);
+        let mut rng = Rng::new(2);
+        let mut xdata = vec![0.0f32; 2 * meta.dim];
+        rng.fill_normal_f32(&mut xdata);
+        let x = HostTensor::new(vec![2, meta.dim], xdata);
+        let out = execute(meta, &[&theta, &x]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].shape, vec![2, 1]);
+        assert_eq!(out[1].shape, vec![2, 1]);
+        assert!(out[1].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn theta_unpacking_rejects_bad_lengths() {
+        let reg = Registry::builtin();
+        let meta = reg.get("laplacian_collapsed_exact_b2").unwrap();
+        let theta = HostTensor::zeros(vec![meta.theta_len + 1]);
+        let x = HostTensor::zeros(vec![2, meta.dim]);
+        assert!(execute(meta, &[&theta, &x]).is_err());
+    }
+
+    #[test]
+    fn methods_agree_through_the_executor() {
+        let reg = Registry::builtin();
+        let col = reg.get("laplacian_collapsed_exact_b2").unwrap();
+        let std_ = reg.get("laplacian_standard_exact_b2").unwrap();
+        let nst = reg.get("laplacian_nested_exact_b2").unwrap();
+        let theta = theta_for(col, 3);
+        let mut rng = Rng::new(4);
+        let mut xdata = vec![0.0f32; 2 * col.dim];
+        rng.fill_normal_f32(&mut xdata);
+        let x = HostTensor::new(vec![2, col.dim], xdata);
+        let a = execute(col, &[&theta, &x]).unwrap();
+        let b = execute(std_, &[&theta, &x]).unwrap();
+        let c = execute(nst, &[&theta, &x]).unwrap();
+        for i in 0..2 {
+            assert!((a[1].data[i] - b[1].data[i]).abs() < 1e-3 * (1.0 + a[1].data[i].abs()));
+            assert!((a[1].data[i] - c[1].data[i]).abs() < 1e-3 * (1.0 + a[1].data[i].abs()));
+        }
+    }
+
+    #[test]
+    fn weighted_stochastic_consumes_premultiplied_directions() {
+        // The artifact contract (aot.py): weighted stochastic receives
+        // σ-premultiplied dirs.  With σ = c·I the premultiplied estimate
+        // must equal c² times the plain estimate on the same draw.
+        let reg = Registry::builtin();
+        let wmeta = reg.get("weighted_laplacian_collapsed_stochastic_s8_b4").unwrap();
+        let lmeta = reg.get("laplacian_collapsed_stochastic_s8_b4").unwrap();
+        let theta = theta_for(wmeta, 5);
+        let mut rng = Rng::new(6);
+        let d = wmeta.dim;
+        let mut xdata = vec![0.0f32; 2 * d];
+        rng.fill_normal_f32(&mut xdata);
+        let x = HostTensor::new(vec![2, d], xdata);
+        let mut dirs = vec![0.0f32; 8 * d];
+        rng.fill_rademacher_f32(&mut dirs);
+        let c = 1.5f32;
+        let scaled: Vec<f32> = dirs.iter().map(|&v| c * v).collect();
+        let dirs = HostTensor::new(vec![8, d], dirs);
+        let sdirs = HostTensor::new(vec![8, d], scaled);
+        let w = execute(wmeta, &[&theta, &x, &sdirs]).unwrap();
+        let p = execute(lmeta, &[&theta, &x, &dirs]).unwrap();
+        for b in 0..2 {
+            let expect = c * c * p[1].data[b];
+            assert!(
+                (w[1].data[b] - expect).abs() < 1e-3 * (1.0 + expect.abs()),
+                "weighted {} vs c^2 * plain {}",
+                w[1].data[b],
+                expect
+            );
+        }
+    }
+}

@@ -158,10 +158,61 @@ impl Registry {
         })
     }
 
-    /// Default location: $CTAYLOR_ARTIFACTS or ./artifacts.
+    /// Default location: $CTAYLOR_ARTIFACTS or ./artifacts, falling back
+    /// to the builtin preset when no manifest exists on disk.
     pub fn load_default() -> Result<Registry> {
         let dir = std::env::var("CTAYLOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Registry::load(dir)
+        Registry::load_or_builtin(dir)
+    }
+
+    /// Load `<dir>/manifest.json` if it exists, else the builtin preset
+    /// rooted at the same directory (so HLO-text probes stay where the
+    /// caller pointed).  A manifest that exists but fails to parse is a
+    /// real error — silently serving the builtin set instead of the user's
+    /// artifacts would make every downstream number lie about what it
+    /// measured.
+    pub fn load_or_builtin(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref();
+        if dir.join("manifest.json").exists() {
+            Registry::load(dir)
+        } else {
+            let mut reg = Registry::builtin();
+            reg.dir = dir.to_path_buf();
+            Ok(reg)
+        }
+    }
+
+    /// The builtin artifact preset: every (op, method, mode) route the
+    /// native execution backend serves, with the batch/sample ladders the
+    /// bench sweeps fit slopes over.  No files needed — `file` names where
+    /// a future AOT pipeline will drop the HLO text (the analyzer treats a
+    /// missing file as "memory proxies unavailable").
+    pub fn builtin() -> Registry {
+        const METHODS: [&str; 3] = ["nested", "standard", "collapsed"];
+        let mut artifacts = Vec::new();
+        for method in METHODS {
+            // Laplacian / weighted Laplacian: D = 16, tanh MLP 32-32-1.
+            for batch in [1, 2, 4, 8, 16] {
+                artifacts.push(builtin_meta("laplacian", method, "exact", 16, &[32, 32, 1], batch, 0, "plain"));
+                artifacts.push(builtin_meta("weighted_laplacian", method, "exact", 16, &[32, 32, 1], batch, 0, "plain"));
+            }
+            for samples in [4, 8, 16] {
+                artifacts.push(builtin_meta("laplacian", method, "stochastic", 16, &[32, 32, 1], 4, samples, "plain"));
+                artifacts.push(builtin_meta("weighted_laplacian", method, "stochastic", 16, &[32, 32, 1], 4, samples, "plain"));
+            }
+            // Biharmonic: 4th-order jets are O(D^2) families, keep D small.
+            for batch in [1, 2, 4, 8] {
+                artifacts.push(builtin_meta("biharmonic", method, "exact", 4, &[16, 16, 1], batch, 0, "plain"));
+            }
+            for samples in [4, 8, 16] {
+                artifacts.push(builtin_meta("biharmonic", method, "stochastic", 4, &[16, 16, 1], 2, samples, "plain"));
+            }
+        }
+        // The Pallas-fused activation variant (same semantics natively).
+        artifacts.push(builtin_meta("laplacian", "collapsed", "exact", 16, &[32, 32, 1], 8, 0, "kernel"));
+        let by_name =
+            artifacts.iter().enumerate().map(|(i, a)| (a.name.clone(), i)).collect();
+        Registry { dir: PathBuf::from("artifacts"), preset: "builtin".to_string(), artifacts, by_name }
     }
 
     pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
@@ -177,6 +228,66 @@ impl Registry {
             .collect();
         out.sort_by_key(|a| (a.batch, a.samples));
         out
+    }
+}
+
+/// Construct one builtin artifact's metadata.
+#[allow(clippy::too_many_arguments)]
+fn builtin_meta(
+    op: &str,
+    method: &str,
+    mode: &str,
+    dim: usize,
+    widths: &[usize],
+    batch: usize,
+    samples: usize,
+    variant: &str,
+) -> ArtifactMeta {
+    let mut layer_dims = Vec::new();
+    let mut prev = dim;
+    for &w in widths {
+        layer_dims.push((prev, w));
+        prev = w;
+    }
+    let theta_len: usize = layer_dims.iter().map(|&(fi, fo)| fi * fo + fo).sum();
+    let name = if mode == "stochastic" {
+        format!("{op}_{method}_stochastic_s{samples}_b{batch}")
+    } else if variant == "kernel" {
+        format!("{op}_{method}_{mode}_kernel_b{batch}")
+    } else {
+        format!("{op}_{method}_{mode}_b{batch}")
+    };
+    let spec = |sname: &str, shape: Vec<usize>| TensorSpec {
+        name: sname.to_string(),
+        shape,
+        dtype: "f32".to_string(),
+    };
+    // Input arity mirrors python/compile/aot.py: exact weighted takes σ;
+    // stochastic (weighted included) takes dirs, with weighted callers
+    // passing σ-premultiplied dirs so the artifact stays shape-uniform.
+    let mut inputs = vec![spec("theta", vec![theta_len]), spec("x", vec![batch, dim])];
+    if op == "weighted_laplacian" && mode == "exact" {
+        inputs.push(spec("sigma", vec![dim, dim]));
+    }
+    if mode == "stochastic" {
+        inputs.push(spec("dirs", vec![samples, dim]));
+    }
+    let outputs = vec![spec("f0", vec![batch, 1]), spec("op", vec![batch, 1])];
+    ArtifactMeta {
+        file: format!("{name}.hlo.txt"),
+        name,
+        op: op.to_string(),
+        method: method.to_string(),
+        mode: mode.to_string(),
+        dim,
+        widths: widths.to_vec(),
+        batch,
+        samples,
+        theta_len,
+        layer_dims,
+        variant: variant.to_string(),
+        inputs,
+        outputs,
     }
 }
 
@@ -205,5 +316,33 @@ mod tests {
         assert_eq!(a.layer_dims, vec![(4, 8), (8, 1)]);
         assert_eq!(a.inputs[1].element_count(), 8);
         assert_eq!(reg.select("laplacian", "collapsed", "exact").len(), 1);
+    }
+
+    #[test]
+    fn builtin_registry_covers_all_routes() {
+        let reg = Registry::builtin();
+        assert_eq!(reg.preset, "builtin");
+        for op in ["laplacian", "weighted_laplacian", "biharmonic"] {
+            for method in ["nested", "standard", "collapsed"] {
+                for mode in ["exact", "stochastic"] {
+                    assert!(
+                        reg.select(op, method, mode).len() >= 2,
+                        "sweep needs >= 2 artifacts for {op}/{method}/{mode}"
+                    );
+                }
+            }
+        }
+        let a = reg.get("laplacian_collapsed_exact_b4").expect("ladder artifact");
+        assert_eq!(a.batch, 4);
+        assert_eq!(a.dim, 16);
+        assert_eq!(a.theta_len, 16 * 32 + 32 + 32 * 32 + 32 + 32 + 1);
+        let s = reg.get("laplacian_collapsed_stochastic_s16_b4").expect("stochastic artifact");
+        assert_eq!(s.samples, 16);
+        assert_eq!(s.inputs.len(), 3);
+        // Weighted stochastic also takes 3 inputs: callers pass
+        // σ-premultiplied dirs (the aot.py artifact contract).
+        let ws = reg.get("weighted_laplacian_collapsed_stochastic_s16_b4").unwrap();
+        assert_eq!(ws.inputs.len(), 3);
+        assert!(reg.get("laplacian_collapsed_exact_kernel_b8").is_some());
     }
 }

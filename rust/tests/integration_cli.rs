@@ -1,0 +1,59 @@
+//! CLI surface tests: spawn the real `ctaylor` binary (cargo builds it for
+//! integration tests and exports its path) and assert exit codes + stdout
+//! shape for the documented subcommands.
+
+use std::process::{Command, Output};
+
+fn ctaylor(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_ctaylor"))
+        .args(args)
+        .output()
+        .expect("spawning ctaylor binary")
+}
+
+#[test]
+fn info_reports_manifest_overview() {
+    let out = ctaylor(&["info"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("preset:"), "stdout: {stdout}");
+    assert!(stdout.contains("artifacts"), "stdout: {stdout}");
+    // The builtin preset serves every operator route.
+    assert!(stdout.contains("laplacian/collapsed/exact"), "stdout: {stdout}");
+}
+
+#[test]
+fn gamma_prints_paper_fig4_coefficients() {
+    let out = ctaylor(&["gamma"]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("13/192"), "stdout: {stdout}");
+    assert!(stdout.contains("-1/3"), "stdout: {stdout}");
+    assert!(stdout.contains("5/8"), "stdout: {stdout}");
+}
+
+#[test]
+fn eval_runs_the_collapsed_laplacian_end_to_end() {
+    let out = ctaylor(&["eval", "--op", "laplacian", "--method", "collapsed", "--n", "2"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("laplacian/collapsed/exact"), "stdout: {stdout}");
+    assert!(stdout.contains("f(x_0)"), "stdout: {stdout}");
+    assert!(stdout.contains("op(x_1)"), "stdout: {stdout}");
+}
+
+#[test]
+fn bad_subcommand_fails_with_nonzero_exit() {
+    let out = ctaylor(&["frobnicate"]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown subcommand"), "stderr: {stderr}");
+}
+
+#[test]
+fn no_subcommand_prints_usage_and_succeeds() {
+    let out = ctaylor(&[]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("subcommands:"), "stdout: {stdout}");
+}

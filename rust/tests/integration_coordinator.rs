@@ -8,7 +8,7 @@ use ctaylor::util::prng::Rng;
 fn start_service() -> Service {
     let dir = std::env::var("CTAYLOR_ARTIFACTS")
         .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
-    let reg = Registry::load(dir).expect("run `make artifacts` first");
+    let reg = Registry::load_or_builtin(dir).expect("manifest present but malformed");
     Service::start(reg, ServiceConfig::default()).unwrap()
 }
 

@@ -1,7 +1,9 @@
-//! Integration tests: load real AOT artifacts and execute them via PJRT.
+//! Integration tests: load artifacts from the registry and execute them
+//! through the runtime client.
 //!
-//! These exercise the full python→HLO-text→rust path; they require
-//! `make artifacts` to have populated ./artifacts.
+//! With an AOT artifact set in ./artifacts (or $CTAYLOR_ARTIFACTS) these
+//! exercise the python→manifest→rust path; otherwise they run against the
+//! builtin preset on the native execution backend.
 
 use ctaylor::runtime::{HostTensor, Registry, RuntimeClient};
 use ctaylor::util::prng::Rng;
@@ -10,7 +12,7 @@ fn registry() -> Registry {
     let dir = std::env::var("CTAYLOR_ARTIFACTS").unwrap_or_else(|_| {
         format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
     });
-    Registry::load(dir).expect("run `make artifacts` before cargo test")
+    Registry::load_or_builtin(dir).expect("manifest present but malformed")
 }
 
 fn glorot_theta(meta: &ctaylor::runtime::ArtifactMeta, rng: &mut Rng) -> HostTensor {

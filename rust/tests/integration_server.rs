@@ -9,7 +9,7 @@ use ctaylor::util::prng::Rng;
 fn start() -> (Arc<Service>, Server) {
     let dir = std::env::var("CTAYLOR_ARTIFACTS")
         .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
-    let reg = Registry::load(dir).expect("run `make artifacts` first");
+    let reg = Registry::load_or_builtin(dir).expect("manifest present but malformed");
     let svc = Arc::new(Service::start(reg, ServiceConfig::default()).unwrap());
     let server = Server::start(svc.clone(), "127.0.0.1:0").unwrap();
     (svc, server)
