@@ -30,28 +30,41 @@ fn results_dir() -> PathBuf {
     std::env::var("CTAYLOR_RESULTS").map(PathBuf::from).unwrap_or_else(|_| "bench_results".into())
 }
 
-/// Fig. 1: Laplacian runtime vs batch size for the three implementations.
+/// Fig. 1: runtime vs batch size for the three implementations — the
+/// exact Laplacian plus the composed Helmholtz-type spec, so the smoke
+/// bench tracks the single-push composed-operator path over time.
 pub fn run_fig1(registry: &Registry, reps: usize) -> Result<String> {
     let client = RuntimeClient::cpu()?;
     let mut rows = Vec::new();
     let mut sweeps = Vec::new();
-    for method in METHODS {
-        let s = run_sweep(&client, registry, "laplacian", method, "exact", reps, 1)?;
-        for p in &s.points {
-            rows.push(vec![
-                method.to_string(),
-                format!("{}", p.x as usize),
-                format!("{:.3}", p.time_s * 1e3),
-            ]);
+    for op in ["laplacian", "helmholtz"] {
+        for method in METHODS {
+            let s = run_sweep(&client, registry, op, method, "exact", reps, 1)?;
+            for p in &s.points {
+                rows.push(vec![
+                    op.to_string(),
+                    method.to_string(),
+                    format!("{}", p.x as usize),
+                    format!("{:.3}", p.time_s * 1e3),
+                ]);
+            }
+            sweeps.push(s);
         }
-        sweeps.push(s);
     }
-    let mut out = String::from("# Fig. 1 — exact Laplacian runtime vs batch (ms)\n\n");
-    out.push_str(&table(&["method", "batch", "time [ms]"], &rows));
+    let mut out =
+        String::from("# Fig. 1 — exact Laplacian & Helmholtz-spec runtime vs batch (ms)\n\n");
+    out.push_str(&table(&["op", "method", "batch", "time [ms]"], &rows));
     out.push_str("\nper-datum slope [ms]:\n");
-    let base = sweeps[0].ms_per_x();
-    for s in &sweeps {
-        out.push_str(&format!("  {:<10} {}\n", s.method, with_ratio(s.ms_per_x(), base)));
+    for chunk in sweeps.chunks(METHODS.len()) {
+        let base = chunk[0].ms_per_x();
+        for s in chunk {
+            out.push_str(&format!(
+                "  {:<18} {:<10} {}\n",
+                s.op,
+                s.method,
+                with_ratio(s.ms_per_x(), base)
+            ));
+        }
     }
     let j = Json::arr(sweeps.iter().map(sweep_json));
     save_json(&results_dir(), "fig1", &j)?;
@@ -64,6 +77,7 @@ fn sweep_json(s: &Sweep) -> Json {
         ("op", Json::str(&s.op)),
         ("method", Json::str(&s.method)),
         ("mode", Json::str(&s.mode)),
+        ("mem_source", Json::str(s.mem_source())),
         ("ms_per_x", Json::num(s.ms_per_x())),
         ("mib_diff_per_x", Json::num(s.mib_diff_per_x())),
         ("mib_nondiff_per_x", Json::num(s.mib_nondiff_per_x())),
@@ -121,11 +135,24 @@ pub fn run_fig5_table1(registry: &Registry, reps: usize) -> Result<String> {
                 rows.push(row);
             }
             out.push_str(&table(
-                &["mode", "metric", "implementation", "Laplacian", "Weighted Laplacian", "Biharmonic"],
+                &[
+                    "mode",
+                    "metric",
+                    "implementation",
+                    "Laplacian",
+                    "Weighted Laplacian",
+                    "Biharmonic",
+                ],
                 &rows,
             ));
             out.push('\n');
         }
+    }
+    if all.iter().any(|s| s.mem_source() == "count-model") {
+        out.push_str(
+            "note: memory rows use the analytic propagated-vector proxy for artifacts \
+             without HLO on disk (count-model), not a measurement.\n",
+        );
     }
     let j = Json::arr(all.iter().map(sweep_json));
     save_json(&results_dir(), "fig5_table1", &j)?;
@@ -150,11 +177,10 @@ pub fn run_table_f2(registry: &Registry, reps: usize) -> Result<String> {
 
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();
-    for (mode, ops) in [
-        ("exact", vec![("laplacian", lap_dim), ("weighted_laplacian", lap_dim), ("biharmonic", bih_dim)]),
-        ("stochastic", vec![("laplacian", lap_dim), ("weighted_laplacian", lap_dim), ("biharmonic", bih_dim)]),
-    ] {
-        for (op, dim) in ops {
+    let op_dims =
+        [("laplacian", lap_dim), ("weighted_laplacian", lap_dim), ("biharmonic", bih_dim)];
+    for mode in ["exact", "stochastic"] {
+        for (op, dim) in op_dims {
             let theory = match (mode, op) {
                 ("exact", "biharmonic") => count::exact_ratio_biharmonic(dim),
                 ("exact", _) => count::exact_ratio_laplacian(dim),
@@ -165,12 +191,17 @@ pub fn run_table_f2(registry: &Registry, reps: usize) -> Result<String> {
             let s_col = run_sweep(&client, registry, op, "collapsed", mode, reps, 3)?;
             let time_ratio = s_col.ms_per_x() / s_std.ms_per_x();
             let mem_ratio = s_col.mib_diff_per_x() / s_std.mib_diff_per_x();
+            let mem_source = if s_std.mem_source() == "hlo" && s_col.mem_source() == "hlo" {
+                "hlo"
+            } else {
+                "count-model"
+            };
             rows.push(vec![
                 mode.to_string(),
                 format!("{op} (D={dim})"),
                 format!("{theory:.2}"),
                 format!("{time_ratio:.2}"),
-                format!("{mem_ratio:.2}"),
+                format!("{mem_ratio:.2} [{mem_source}]"),
             ]);
             json_rows.push(Json::obj(vec![
                 ("mode", Json::str(mode)),
@@ -179,6 +210,7 @@ pub fn run_table_f2(registry: &Registry, reps: usize) -> Result<String> {
                 ("theory", Json::num(theory)),
                 ("time_ratio", Json::num(time_ratio)),
                 ("mem_ratio", Json::num(mem_ratio)),
+                ("mem_source", Json::str(mem_source)),
             ]));
         }
     }
@@ -188,6 +220,10 @@ pub fn run_table_f2(registry: &Registry, reps: usize) -> Result<String> {
         &["mode", "operator", "theory Δvec ratio", "empirical time", "empirical mem"],
         &rows,
     ));
+    out.push_str(
+        "\nmem [count-model] rows use the analytic propagated-vector proxy (no HLO on disk):\n\
+         their mem ratio restates the theory column rather than measuring it.\n",
+    );
     save_json(&results_dir(), "table_f2", &Json::Arr(json_rows))?;
     save_text(&results_dir(), "table_f2", &out)?;
     Ok(out)
@@ -220,10 +256,21 @@ pub fn run_figg9_tableg3(registry: &Registry, reps: usize) -> Result<String> {
         }
         out.push_str(&format!("## {op}\n"));
         out.push_str(&table(
-            &["implementation", "time [ms/datum]", "mem diff [MiB/datum]", "mem non-diff [MiB/datum]"],
+            &[
+                "implementation",
+                "time [ms/datum]",
+                "mem diff [MiB/datum]",
+                "mem non-diff [MiB/datum]",
+            ],
             &rows,
         ));
         out.push('\n');
+    }
+    if all.iter().any(|s| s.mem_source() == "count-model") {
+        out.push_str(
+            "note: memory rows use the analytic propagated-vector proxy for artifacts \
+             without HLO on disk (count-model), not a measurement.\n",
+        );
     }
     let j = Json::arr(all.iter().map(sweep_json));
     save_json(&results_dir(), "figg9_tableg3", &j)?;
@@ -232,11 +279,15 @@ pub fn run_figg9_tableg3(registry: &Registry, reps: usize) -> Result<String> {
 }
 
 /// Native-engine ablation: wallclock of the three methods on the in-Rust
-/// engines, plus the §C graph-rewrite effect (propagation cost + FLOPs).
+/// engines, the single-push vs per-family biharmonic plan, plus the §C
+/// graph-rewrite effect (propagation cost + FLOPs).
 pub fn run_native_ablation(reps: usize) -> Result<String> {
     use crate::mlp::Mlp;
+    use crate::operators::{plan, OperatorSpec};
     use crate::taylor::interp;
+    use crate::taylor::jet::Collapse;
     use crate::taylor::rewrite::collapse;
+    use crate::taylor::tensor::Tensor;
     use crate::taylor::trace::{basis_dirs, build_mlp_jet_std, TAGGED_SLOTS};
     use crate::util::stats::time_fn;
 
@@ -254,16 +305,59 @@ pub fn run_native_ablation(reps: usize) -> Result<String> {
     );
     let t_std = time_fn(
         || {
-            std::hint::black_box(crate::operators::laplacian_native(&mlp, &x, false));
+            std::hint::black_box(crate::operators::laplacian_native(&mlp, &x, Collapse::Standard));
         },
         reps,
     );
     let t_col = time_fn(
         || {
-            std::hint::black_box(crate::operators::laplacian_native(&mlp, &x, true));
+            std::hint::black_box(crate::operators::laplacian_native(&mlp, &x, Collapse::Collapsed));
         },
         reps,
     );
+
+    // Single-push vs per-family biharmonic: the compiled OperatorSpec
+    // stacks the three Griewank families into one direction bundle; the
+    // pre-plan engine pushed one 4-jet per family (three MLP traversals,
+    // three derivative evaluations per node).
+    let bdim = 4;
+    let bmlp = Mlp::init(&mut rng, bdim, &[32, 32, 1], batch);
+    let bx = bmlp.random_input(&mut rng);
+    let bspec = OperatorSpec::biharmonic(bdim);
+    let bplan = bspec.compile();
+    let t_bih_single = time_fn(
+        || {
+            std::hint::black_box(plan::apply(&bmlp, &bx, &bplan, Collapse::Collapsed));
+        },
+        reps,
+    );
+    let family_plans: Vec<_> = bspec
+        .families
+        .iter()
+        .map(|fam| {
+            OperatorSpec { name: "family".into(), c0: 0.0, families: vec![fam.clone()] }.compile()
+        })
+        .collect();
+    let per_family_sum = || {
+        let mut total: Option<Tensor> = None;
+        for p in &family_plans {
+            let (_, s) = plan::apply(&bmlp, &bx, p, Collapse::Collapsed);
+            total = Some(match total {
+                Some(t) => t.add(&s),
+                None => s,
+            });
+        }
+        total.expect("three families")
+    };
+    let t_bih_per_family = time_fn(
+        || {
+            std::hint::black_box(per_family_sum());
+        },
+        reps,
+    );
+    // Both paths must compute the same operator.
+    let single = plan::apply(&bmlp, &bx, &bplan, Collapse::Collapsed).1;
+    let bih_dev = single.max_abs_diff(&per_family_sum());
 
     // Graph rewrite ablation
     let g = build_mlp_jet_std(&mlp, 2, dim);
@@ -289,10 +383,13 @@ pub fn run_native_ablation(reps: usize) -> Result<String> {
     );
 
     let mut out = String::from("# Native-engine ablation (Laplacian, D=8, B=8)\n\n");
+    let engine_row = |name: &str, t: f64| {
+        vec![name.to_string(), format!("{:.3}", t * 1e3), "-".into(), "-".into()]
+    };
     let rows = vec![
-        vec!["nested 1st-order (engine)".into(), format!("{:.3}", t_nested.min * 1e3), "-".into(), "-".into()],
-        vec!["standard Taylor (engine)".into(), format!("{:.3}", t_std.min * 1e3), "-".into(), "-".into()],
-        vec!["collapsed Taylor (engine)".into(), format!("{:.3}", t_col.min * 1e3), "-".into(), "-".into()],
+        engine_row("nested 1st-order (engine)", t_nested.min),
+        engine_row("standard Taylor (engine)", t_std.min),
+        engine_row("collapsed Taylor (engine)", t_col.min),
         vec![
             "standard Taylor (graph)".into(),
             format!("{:.3}", t_graph_std.min * 1e3),
@@ -312,6 +409,16 @@ pub fn run_native_ablation(reps: usize) -> Result<String> {
         flops_col as f64 / flops_std as f64,
         cost_col as f64 / cost_std as f64
     ));
+    out.push_str(&format!(
+        "\n# Biharmonic plan (D={bdim}, B={batch}, collapsed): single stacked push \
+         vs per-family\n\nsingle push   {:.3} ms\nper-family    {:.3} ms (3 pushes)\n",
+        t_bih_single.min * 1e3,
+        t_bih_per_family.min * 1e3,
+    ));
+    out.push_str(&format!(
+        "speedup x{:.2}, max |Δ| = {bih_dev:.2e}\n",
+        t_bih_per_family.min / t_bih_single.min.max(1e-12),
+    ));
     save_text(&results_dir(), "native_ablation", &out)?;
     save_json(
         &results_dir(),
@@ -326,6 +433,9 @@ pub fn run_native_ablation(reps: usize) -> Result<String> {
             ("flops_col", flops_col as f64),
             ("cost_std", cost_std as f64),
             ("cost_col", cost_col as f64),
+            ("biharmonic_single_push_ms", t_bih_single.min * 1e3),
+            ("biharmonic_per_family_ms", t_bih_per_family.min * 1e3),
+            ("biharmonic_push_dev", bih_dev),
         ]),
     )?;
     Ok(out)

@@ -5,7 +5,8 @@
 use anyhow::{bail, Result};
 
 use crate::hlo;
-use crate::runtime::{DeviceBuffer, Registry, RuntimeClient};
+use crate::runtime::{ArtifactMeta, DeviceBuffer, Registry, RuntimeClient};
+use crate::taylor::count;
 use crate::util::stats::{linear_fit, time_fn, LinearFit};
 
 use super::workload;
@@ -17,12 +18,15 @@ pub struct SweepPoint {
     pub x: f64,
     /// Min runtime over reps (seconds).
     pub time_s: f64,
-    /// Differentiable-memory proxy (bytes, from HLO analysis).
+    /// Differentiable-memory proxy (bytes).
     pub mem_diff: f64,
     /// Non-differentiable-memory proxy (bytes).
     pub mem_nondiff: f64,
     /// Estimated FLOPs.
     pub flops: f64,
+    /// True when the memory/FLOP numbers come from real HLO analysis;
+    /// false when they are the count-model fallback (builtin artifacts).
+    pub mem_measured: bool,
 }
 
 /// A measured family with its fitted slopes.
@@ -43,6 +47,16 @@ impl Sweep {
         self.time_fit.slope * 1e3
     }
 
+    /// "hlo" when every point's memory numbers come from HLO analysis,
+    /// "count-model" when any point used the analytic fallback.
+    pub fn mem_source(&self) -> &'static str {
+        if self.points.iter().all(|p| p.mem_measured) {
+            "hlo"
+        } else {
+            "count-model"
+        }
+    }
+
     /// MiB added per datum/sample.
     pub fn mib_diff_per_x(&self) -> f64 {
         self.mem_diff_fit.slope / (1024.0 * 1024.0)
@@ -51,6 +65,25 @@ impl Sweep {
     pub fn mib_nondiff_per_x(&self) -> f64 {
         self.mem_nondiff_fit.slope / (1024.0 * 1024.0)
     }
+}
+
+/// Analytic stand-in for the HLO proxies when an artifact ships no HLO
+/// text (the builtin preset): the paper's propagated-vector cost model
+/// (`taylor::count::route_vectors`) times the network's activation
+/// footprint.  Slope *ratios* between methods — the claims the tables
+/// test — match the table-F2 Δ-vector theory by construction; absolute
+/// bytes/FLOPs are a model, not a measurement.
+fn analytic_proxy(meta: &ArtifactMeta) -> (f64, f64, f64) {
+    let vecs =
+        count::route_vectors(&meta.op, &meta.method, &meta.mode, meta.dim, meta.samples) as f64;
+    let batch = meta.batch.max(1) as f64;
+    let widths_sum: usize = meta.widths.iter().sum();
+    let max_width = meta.widths.iter().copied().max().unwrap_or(1);
+    let bytes = 4.0; // f32 activations
+    let mem_diff = vecs * batch * widths_sum as f64 * bytes;
+    let mem_nondiff = vecs * batch * 2.0 * max_width as f64 * bytes; // two live layers
+    let flops = vecs * batch * 2.0 * meta.theta_len as f64;
+    (mem_diff, mem_nondiff, flops)
 }
 
 /// Measure one family.  `reps` timed repetitions per artifact (min kept).
@@ -81,17 +114,25 @@ pub fn run_sweep(
             },
             reps,
         );
-        // Memory/FLOP proxies come from the artifact's HLO text; builtin
-        // (fileless) artifacts report zero until an AOT set is dropped in.
+        // Memory/FLOP proxies come from the artifact's HLO text when it
+        // exists; builtin (fileless) artifacts fall back to the paper's
+        // propagated-vector cost model instead of reporting zero.
         let hlo_path = meta.hlo_path(&registry.dir);
-        let an = if hlo_path.exists() { Some(hlo::analyze_file(&hlo_path)?) } else { None };
+        let mem_measured = hlo_path.exists();
+        let (mem_diff, mem_nondiff, flops) = if mem_measured {
+            let a = hlo::analyze_file(&hlo_path)?;
+            (a.total_intermediate_bytes as f64, a.peak_live_bytes as f64, a.flops as f64)
+        } else {
+            analytic_proxy(meta)
+        };
         let x = if mode == "stochastic" { meta.samples } else { meta.batch };
         points.push(SweepPoint {
             x: x as f64,
             time_s: timing.min,
-            mem_diff: an.map(|a| a.total_intermediate_bytes as f64).unwrap_or(0.0),
-            mem_nondiff: an.map(|a| a.peak_live_bytes as f64).unwrap_or(0.0),
-            flops: an.map(|a| a.flops as f64).unwrap_or(0.0),
+            mem_diff,
+            mem_nondiff,
+            flops,
+            mem_measured,
         });
     }
     let xs: Vec<f64> = points.iter().map(|p| p.x).collect();

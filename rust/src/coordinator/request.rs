@@ -6,7 +6,7 @@ use std::time::Instant;
 /// Which compiled operator family a request targets.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct RouteKey {
-    /// laplacian | weighted_laplacian | biharmonic | biharl
+    /// laplacian | weighted_laplacian | helmholtz | biharmonic | biharl
     pub op: String,
     /// nested | standard | collapsed
     pub method: String,

@@ -17,8 +17,11 @@
 //!   sum-push-up).
 //! * [`nested`] — the nested first-order AD baseline (reverse tape +
 //!   forward duals, forward-over-reverse HVPs).
-//! * [`operators`] — Laplacian / weighted Laplacian / biharmonic built on
-//!   both engines, incl. Griewank interpolation for mixed partials.
+//! * [`operators`] — plan-driven linear PDE operators: [`operators::plan`]
+//!   compiles an `OperatorSpec` (weighted degree-k direction families) into
+//!   one stacked bundle per jet push; Laplacian / weighted Laplacian /
+//!   Helmholtz-type / biharmonic are presets, incl. Griewank interpolation
+//!   for mixed partials.
 //! * [`hlo`] — HLO text parser + memory/FLOP analyzer (the memory columns
 //!   of the paper's tables).
 //! * [`runtime`] — PJRT loader/executor for the AOT artifacts produced by

@@ -3,8 +3,9 @@
 //! Subcommands map 1:1 to the experiment index in DESIGN.md §4:
 //!
 //! ```text
-//! ctaylor info                         # manifest + platform overview
+//! ctaylor info                         # manifest + spec-preset overview
 //! ctaylor gamma                        # fig. 4: interpolation coefficients
+//! ctaylor spec [--op helmholtz] [--dim 16] [--c0 2.25] [--c2 1.0]
 //! ctaylor analyze <name|path>...       # HLO memory/FLOP analysis
 //! ctaylor eval --op laplacian --method collapsed [--n 8]
 //! ctaylor bench [--which fig1|table1|f2|g3|native|coordinator|all] [--reps N]
@@ -17,7 +18,10 @@ use ctaylor::bench;
 use ctaylor::coordinator::{RouteKey, Service, ServiceConfig};
 use ctaylor::hlo;
 use ctaylor::operators::interpolation::{compositions, gamma};
+use ctaylor::operators::plan::{HELMHOLTZ_C0, HELMHOLTZ_C2};
+use ctaylor::operators::OperatorSpec;
 use ctaylor::runtime::Registry;
+use ctaylor::taylor::count;
 use ctaylor::util::cli::Args;
 use ctaylor::util::prng::Rng;
 use ctaylor::util::stats::fmt_bytes;
@@ -27,6 +31,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("gamma") => cmd_gamma(),
+        Some("spec") => cmd_spec(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("eval") => cmd_eval(&args),
         Some("bench") => cmd_bench(&args),
@@ -36,7 +41,7 @@ fn main() -> Result<()> {
         None => {
             println!(
                 "ctaylor — Collapsing Taylor Mode AD (NeurIPS 2025) reproduction\n\
-                 subcommands: info | gamma | analyze | eval | bench | serve-demo"
+                 subcommands: info | gamma | spec | analyze | eval | bench | serve-demo"
             );
             Ok(())
         }
@@ -60,7 +65,34 @@ fn cmd_info(args: &Args) -> Result<()> {
     for (k, v) in by_op {
         println!("  {k:<42} {v} artifacts");
     }
+    let dim_of = |op: &str, fallback: usize| {
+        reg.select(op, "collapsed", "exact").first().map(|a| a.dim).unwrap_or(fallback)
+    };
+    let lap_dim = dim_of("laplacian", 16);
+    let bih_dim = dim_of("biharmonic", 4);
+    println!("\nspec presets (operators::plan — one stacked jet push each):");
+    for spec in [
+        OperatorSpec::laplacian(lap_dim),
+        OperatorSpec::helmholtz_preset(dim_of("helmholtz", lap_dim)),
+        OperatorSpec::biharmonic(bih_dim),
+    ] {
+        print_spec(&spec);
+    }
     Ok(())
+}
+
+fn print_spec(spec: &OperatorSpec) {
+    let plan = spec.compile();
+    let r = plan.dirs.shape[0];
+    println!(
+        "  {:<22} K={}  families={}  bundle R={}  vectors/node std={} col={}",
+        format!("{} (D={})", spec.name, spec.dim().unwrap_or(0)),
+        plan.order,
+        spec.families.len(),
+        r,
+        count::vectors_standard(plan.order, r),
+        count::vectors_collapsed(plan.order, r),
+    );
 }
 
 fn cmd_gamma() -> Result<()> {
@@ -68,6 +100,60 @@ fn cmd_gamma() -> Result<()> {
     for j in compositions(4, 2) {
         let g = gamma(&[2, 2], &j);
         println!("  j = ({}, {}):  γ = {}/{}", j[0], j[1], g.num, g.den);
+    }
+    let spec = OperatorSpec::biharmonic(4);
+    let plan = spec.compile();
+    println!("\nγ-derived biharmonic spec (D = 4):");
+    for (fam, label) in spec.families.iter().zip(["A: 4e_d", "B: 3e_d1+e_d2", "C: 2e_d1+2e_d2"]) {
+        println!("  family {label:<14} weight {:+.6}  ({} dirs)", fam.weight, fam.dirs.shape[0]);
+    }
+    println!(
+        "compiled: one stacked bundle of {} directions — a single 4-jet push \
+         (the pre-plan engine pushed each family separately)",
+        plan.dirs.shape[0]
+    );
+    Ok(())
+}
+
+/// Print a composed OperatorSpec and its compiled single-bundle plan.
+fn cmd_spec(args: &Args) -> Result<()> {
+    let op = args.get_or("op", "helmholtz").to_string();
+    let dim = args.get_usize("dim", 16);
+    let spec = match op.as_str() {
+        "laplacian" => OperatorSpec::laplacian(dim),
+        "biharmonic" => OperatorSpec::biharmonic(dim),
+        "helmholtz" => OperatorSpec::helmholtz(
+            dim,
+            args.get_f64("c0", HELMHOLTZ_C0),
+            args.get_f64("c2", HELMHOLTZ_C2),
+        ),
+        other => bail!("unknown spec preset {other:?} (laplacian | biharmonic | helmholtz)"),
+    };
+    let plan = spec.compile();
+    println!(
+        "spec {}: c0={}  K={}  families={}",
+        spec.name,
+        spec.c0,
+        plan.order,
+        spec.families.len()
+    );
+    for f in &spec.families {
+        println!("  degree {} × {:>3} dirs  weight {:+.6}", f.degree, f.dirs.shape[0], f.weight);
+    }
+    println!(
+        "compiled: one bundle of {} directions ({} in the degree-K sum, {} lower-degree reads)",
+        plan.dirs.shape[0],
+        plan.num_top_dirs,
+        plan.lower.len()
+    );
+    if plan.order >= 2 {
+        println!(
+            "vectors/node: standard {} vs collapsed {} (ratio {:.2})",
+            count::vectors_standard(plan.order, plan.dirs.shape[0]),
+            count::vectors_collapsed(plan.order, plan.dirs.shape[0]),
+            count::vectors_collapsed(plan.order, plan.dirs.shape[0]) as f64
+                / count::vectors_standard(plan.order, plan.dirs.shape[0]) as f64
+        );
     }
     Ok(())
 }

@@ -173,7 +173,8 @@ pub fn stochastic_biharmonic_tvp(mlp: &Mlp, x0: &Tensor, dirs: &Tensor) -> Tenso
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::operators;
+    use crate::operators::{self, plan, FamilySpec, OperatorSpec};
+    use crate::taylor::jet::Collapse;
     use crate::util::prng::Rng;
 
     #[test]
@@ -182,7 +183,7 @@ mod tests {
         let mlp = Mlp::init(&mut rng, 4, &[9, 7, 1], 3);
         let x = mlp.random_input(&mut rng);
         let lap_nested = laplacian(&mlp, &x, None, 1.0);
-        let (_, lap_col) = operators::laplacian_native(&mlp, &x, true);
+        let (_, lap_col) = operators::laplacian_native(&mlp, &x, Collapse::Collapsed);
         assert!(
             lap_nested.max_abs_diff(&lap_col) < 1e-10,
             "nested vs collapsed Taylor"
@@ -199,7 +200,13 @@ mod tests {
         let d4_nested = tvp4(&mlp, &x.data, &v, &v, &v, &v);
         // 4-jet along v: highest coefficient = <∂⁴f, v⊗⁴>
         let dirs = Tensor::new(vec![1, 3], v.clone());
-        let (_, d4_jet) = operators::taylor_sum_highest(&mlp, &x, &dirs, 4, true, 1.0);
+        let spec = OperatorSpec::new(
+            "d4",
+            0.0,
+            vec![FamilySpec { weight: 1.0, degree: 4, dirs }],
+        )
+        .unwrap();
+        let (_, d4_jet) = plan::apply(&mlp, &x, &spec.compile(), Collapse::Collapsed);
         assert!(
             (d4_nested - d4_jet.data[0]).abs() < 1e-9,
             "{d4_nested} vs {}",
@@ -213,7 +220,7 @@ mod tests {
         let mlp = Mlp::init(&mut rng, 3, &[8, 1], 2);
         let x = mlp.random_input(&mut rng);
         let bih_nested = biharmonic_tvp(&mlp, &x);
-        let (_, bih_taylor) = operators::biharmonic_native(&mlp, &x, true);
+        let (_, bih_taylor) = operators::biharmonic_native(&mlp, &x, Collapse::Collapsed);
         assert!(
             bih_nested.max_abs_diff(&bih_taylor) < 1e-8,
             "TVP biharmonic vs Griewank interpolation"

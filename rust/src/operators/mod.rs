@@ -1,39 +1,29 @@
-//! PDE operators on the native engines: Laplacian, weighted Laplacian and
-//! biharmonic, each in nested-AD, standard-Taylor and collapsed-Taylor
-//! variants, exact and stochastic (paper §3.2–3.3).
+//! PDE operators on the native engines, plan-driven: every operator is an
+//! [`OperatorSpec`] preset compiled to a single stacked direction bundle
+//! (paper §3.2–3.3), evaluated in nested-AD, standard-Taylor or
+//! collapsed-Taylor form, exact and stochastic.
 
 pub mod interpolation;
+pub mod plan;
 pub mod stochastic;
 
 use crate::mlp::Mlp;
 use crate::nested;
-use crate::taylor::jet::{
-    elementwise_col, elementwise_std, linear_col, linear_std, JetCol, JetStd,
-};
+use crate::taylor::jet::{elementwise, linear, Collapse, Jet};
 use crate::taylor::rules::Tanh;
 use crate::taylor::tensor::Tensor;
 
 pub use interpolation::BiharmonicPlan;
+pub use plan::{FamilySpec, OperatorPlan, OperatorSpec};
 
-/// Push a standard jet bundle through the MLP (final layer linear).
-pub fn mlp_jet_std(mlp: &Mlp, mut jet: JetStd) -> JetStd {
+/// Push a jet bundle (either collapse policy) through the MLP (final
+/// layer linear).
+pub fn mlp_jet(mlp: &Mlp, mut jet: Jet) -> Jet {
     let n = mlp.layers.len();
     for (i, (w, b)) in mlp.layers.iter().enumerate() {
-        jet = linear_std(&jet, w, Some(b));
+        jet = linear(&jet, w, Some(b));
         if i + 1 < n {
-            jet = elementwise_std(&jet, &Tanh);
-        }
-    }
-    jet
-}
-
-/// Push a collapsed jet bundle through the MLP.
-pub fn mlp_jet_col(mlp: &Mlp, mut jet: JetCol) -> JetCol {
-    let n = mlp.layers.len();
-    for (i, (w, b)) in mlp.layers.iter().enumerate() {
-        jet = linear_col(&jet, w, Some(b));
-        if i + 1 < n {
-            jet = elementwise_col(&jet, &Tanh);
+            jet = elementwise(&jet, &Tanh);
         }
     }
     jet
@@ -48,31 +38,9 @@ pub fn basis(dim: usize) -> Tensor {
     t
 }
 
-/// Σ_r of the K-th jet coefficient along `dirs` (`[R, D]` or `[R, B, D]`),
-/// scaled — the common building block of paper eq. (5).
-pub fn taylor_sum_highest(
-    mlp: &Mlp,
-    x0: &Tensor,
-    dirs: &Tensor,
-    order: usize,
-    collapsed: bool,
-    scale: f64,
-) -> (Tensor, Tensor) {
-    if collapsed {
-        let jet = JetCol::seed(x0, dirs, order);
-        let out = mlp_jet_col(mlp, jet);
-        (out.x0.clone(), out.highest_sum().scale(scale))
-    } else {
-        let jet = JetStd::seed(x0, dirs, order);
-        let out = mlp_jet_std(mlp, jet);
-        (out.x0.clone(), out.highest_sum().scale(scale))
-    }
-}
-
 /// Exact Laplacian via 2-jets (collapsed = the forward Laplacian).
-pub fn laplacian_native(mlp: &Mlp, x0: &Tensor, collapsed: bool) -> (Tensor, Tensor) {
-    let dirs = basis(x0.shape[1]);
-    taylor_sum_highest(mlp, x0, &dirs, 2, collapsed, 1.0)
+pub fn laplacian_native(mlp: &Mlp, x0: &Tensor, mode: Collapse) -> (Tensor, Tensor) {
+    plan::apply(mlp, x0, &OperatorSpec::laplacian(x0.shape[1]).compile(), mode)
 }
 
 /// Weighted Laplacian: directions = columns of σ (`[D, R]`), paper eq. 8b.
@@ -80,17 +48,9 @@ pub fn weighted_laplacian_native(
     mlp: &Mlp,
     x0: &Tensor,
     sigma: &Tensor,
-    collapsed: bool,
+    mode: Collapse,
 ) -> (Tensor, Tensor) {
-    let (d, r) = (sigma.shape[0], sigma.shape[1]);
-    // transpose to [R, D] rows
-    let mut dirs = Tensor::zeros(&[r, d]);
-    for i in 0..d {
-        for j in 0..r {
-            dirs.data[j * d + i] = sigma.data[i * r + j];
-        }
-    }
-    taylor_sum_highest(mlp, x0, &dirs, 2, collapsed, 1.0)
+    plan::apply(mlp, x0, &OperatorSpec::weighted_laplacian(sigma).compile(), mode)
 }
 
 /// Stochastic Laplacian: 1/S Σ v_s^T H v_s along sampled dirs `[S, D]`.
@@ -98,31 +58,15 @@ pub fn stochastic_laplacian_native(
     mlp: &Mlp,
     x0: &Tensor,
     dirs: &Tensor,
-    collapsed: bool,
+    mode: Collapse,
 ) -> (Tensor, Tensor) {
-    let s = dirs.shape[0] as f64;
-    taylor_sum_highest(mlp, x0, dirs, 2, collapsed, 1.0 / s)
+    plan::apply(mlp, x0, &OperatorSpec::stochastic_laplacian(dirs).compile(), mode)
 }
 
-/// Exact biharmonic via the Griewank interpolation families (eq. E22).
-pub fn biharmonic_native(mlp: &Mlp, x0: &Tensor, collapsed: bool) -> (Tensor, Tensor) {
-    let plan = BiharmonicPlan::new(x0.shape[1]);
-    let fams = [
-        (plan.directions_a(), plan.w_a),
-        (plan.directions_b(), plan.w_b),
-        (plan.directions_c(), plan.w_c),
-    ];
-    let mut f0 = None;
-    let mut total: Option<Tensor> = None;
-    for (dirs, w) in fams {
-        let (v0, s) = taylor_sum_highest(mlp, x0, &dirs, 4, collapsed, w);
-        f0 = Some(v0);
-        total = Some(match total {
-            Some(t) => t.add(&s),
-            None => s,
-        });
-    }
-    (f0.unwrap(), total.unwrap())
+/// Exact biharmonic via the Griewank interpolation families (eq. E22) —
+/// the compiled spec stacks all three families into one jet push.
+pub fn biharmonic_native(mlp: &Mlp, x0: &Tensor, mode: Collapse) -> (Tensor, Tensor) {
+    plan::apply(mlp, x0, &OperatorSpec::biharmonic(x0.shape[1]).compile(), mode)
 }
 
 /// Stochastic biharmonic (eq. 9) via 4-jets along *Gaussian* directions.
@@ -132,10 +76,20 @@ pub fn stochastic_biharmonic_native(
     mlp: &Mlp,
     x0: &Tensor,
     dirs: &Tensor,
-    collapsed: bool,
+    mode: Collapse,
 ) -> (Tensor, Tensor) {
-    let s = dirs.shape[0] as f64;
-    taylor_sum_highest(mlp, x0, dirs, 4, collapsed, 1.0 / (3.0 * s))
+    plan::apply(mlp, x0, &OperatorSpec::stochastic_biharmonic(dirs).compile(), mode)
+}
+
+/// Helmholtz-type composed operator c₀·f + c₂·Δf in one jet push.
+pub fn helmholtz_native(
+    mlp: &Mlp,
+    x0: &Tensor,
+    c0: f64,
+    c2: f64,
+    mode: Collapse,
+) -> (Tensor, Tensor) {
+    plan::apply(mlp, x0, &OperatorSpec::helmholtz(x0.shape[1], c0, c2).compile(), mode)
 }
 
 /// Nested-AD exact Laplacian baseline (re-export for symmetry).
@@ -181,8 +135,8 @@ mod tests {
     #[test]
     fn laplacian_std_col_and_fd_agree() {
         let (mlp, x, _) = setup(4, 3);
-        let (_, lap_s) = laplacian_native(&mlp, &x, false);
-        let (_, lap_c) = laplacian_native(&mlp, &x, true);
+        let (_, lap_s) = laplacian_native(&mlp, &x, Collapse::Standard);
+        let (_, lap_c) = laplacian_native(&mlp, &x, Collapse::Collapsed);
         let lap_fd = fd_laplacian(&mlp, &x);
         assert!(lap_s.max_abs_diff(&lap_c) < 1e-12, "std vs collapsed");
         for i in 0..3 {
@@ -199,15 +153,15 @@ mod tests {
     fn weighted_laplacian_identity_sigma_is_laplacian() {
         let (mlp, x, _) = setup(4, 2);
         let sigma = basis(4);
-        let (_, wlap) = weighted_laplacian_native(&mlp, &x, &sigma, true);
-        let (_, lap) = laplacian_native(&mlp, &x, true);
+        let (_, wlap) = weighted_laplacian_native(&mlp, &x, &sigma, Collapse::Collapsed);
+        let (_, lap) = laplacian_native(&mlp, &x, Collapse::Collapsed);
         assert!(wlap.max_abs_diff(&lap) < 1e-12);
     }
 
     #[test]
     fn stochastic_laplacian_is_unbiased() {
         let (mlp, x, mut rng) = setup(3, 1);
-        let (_, lap) = laplacian_native(&mlp, &x, true);
+        let (_, lap) = laplacian_native(&mlp, &x, Collapse::Collapsed);
         let trials = 3000;
         let s = 4;
         let mut mean = 0.0;
@@ -216,7 +170,7 @@ mod tests {
             for v in dirs.data.iter_mut() {
                 *v = rng.rademacher();
             }
-            let (_, est) = stochastic_laplacian_native(&mlp, &x, &dirs, true);
+            let (_, est) = stochastic_laplacian_native(&mlp, &x, &dirs, Collapse::Collapsed);
             mean += est.data[0] / trials as f64;
         }
         assert!(
@@ -229,14 +183,14 @@ mod tests {
     #[test]
     fn biharmonic_matches_fd_of_laplacian() {
         let (mlp, x, _) = setup(3, 2);
-        let (_, bih_c) = biharmonic_native(&mlp, &x, true);
-        let (_, bih_s) = biharmonic_native(&mlp, &x, false);
+        let (_, bih_c) = biharmonic_native(&mlp, &x, Collapse::Collapsed);
+        let (_, bih_s) = biharmonic_native(&mlp, &x, Collapse::Standard);
         assert!(bih_c.max_abs_diff(&bih_s) < 1e-9, "std vs collapsed");
         // FD of the (exact jet) Laplacian in each coordinate.
         let (b, d) = (x.shape[0], x.shape[1]);
         let h = 1e-4;
         let mut fd = Tensor::zeros(&[b, 1]);
-        let lap = |xq: &Tensor| laplacian_native(&mlp, xq, true).1;
+        let lap = |xq: &Tensor| laplacian_native(&mlp, xq, Collapse::Collapsed).1;
         let base = lap(&x);
         for di in 0..d {
             let mut xp = x.clone();
@@ -258,5 +212,14 @@ mod tests {
                 fd.data[i]
             );
         }
+    }
+
+    #[test]
+    fn helmholtz_native_composes_f_and_laplacian() {
+        let (mlp, x, _) = setup(4, 2);
+        let (f0, hf) = helmholtz_native(&mlp, &x, 2.25, 1.0, Collapse::Collapsed);
+        let (_, lap) = laplacian_native(&mlp, &x, Collapse::Collapsed);
+        let manual = f0.scale(2.25).add(&lap);
+        assert!(hf.max_abs_diff(&manual) < 1e-10);
     }
 }

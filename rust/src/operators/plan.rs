@@ -1,0 +1,392 @@
+//! Plan-driven general linear PDE operators (paper §3.2, generalised).
+//!
+//! An [`OperatorSpec`] describes a linear operator as
+//!
+//! ```text
+//!   L f = c₀·f + Σ_i w_i · Σ_r ∂^{k_i} f[v_{ir}^{⊗k_i}]
+//! ```
+//!
+//! — a weighted sum of degree-k directional-derivative families.
+//! [`OperatorSpec::compile`] stacks every family into ONE direction
+//! bundle: family weights are absorbed into the directions via |w|^(1/k)
+//! premultiplication (∂^k f is k-homogeneous in its direction), signs ride
+//! as ±1 per-direction weights on the degree-K sum, and families of lower
+//! degree become per-direction channel reads after the push.  Any composed
+//! operator — Laplacian, the biharmonic's three Griewank families,
+//! Helmholtz-type c₀·f + c₂·Δf, anisotropic Δ_D combinations — therefore
+//! executes as a **single** MLP jet push per method instead of one push
+//! per family (the pre-plan engine pushed the biharmonic three times).
+
+use anyhow::{ensure, Result};
+
+use super::interpolation::BiharmonicPlan;
+use crate::mlp::Mlp;
+use crate::taylor::jet::{Collapse, Jet};
+use crate::taylor::tensor::Tensor;
+
+/// The builtin Helmholtz-type preset coefficients: L f = c₀·f + c₂·Δf
+/// with c₀ = k² for wavenumber k = 1.5.
+pub const HELMHOLTZ_C0: f64 = 2.25;
+pub const HELMHOLTZ_C2: f64 = 1.0;
+
+/// One weighted family of degree-k directional derivatives:
+/// w · Σ_r ∂^k f[v_r^{⊗k}] with the rows of `dirs` as directions.
+#[derive(Debug, Clone)]
+pub struct FamilySpec {
+    pub weight: f64,
+    pub degree: usize,
+    /// `[R, D]` direction rows (unscaled; compile absorbs the weight).
+    pub dirs: Tensor,
+}
+
+/// A linear operator: c₀·f plus weighted directional-derivative families.
+#[derive(Debug, Clone)]
+pub struct OperatorSpec {
+    pub name: String,
+    pub c0: f64,
+    pub families: Vec<FamilySpec>,
+}
+
+impl OperatorSpec {
+    /// Build and validate a composed spec.
+    pub fn new(
+        name: impl Into<String>,
+        c0: f64,
+        families: Vec<FamilySpec>,
+    ) -> Result<OperatorSpec> {
+        let spec = OperatorSpec { name: name.into(), c0, families };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.c0 != 0.0 || !self.families.is_empty(),
+            "{}: operator has no terms",
+            self.name
+        );
+        let mut dim = None;
+        for f in &self.families {
+            ensure!(f.degree >= 1, "{}: family degree must be >= 1", self.name);
+            ensure!(f.dirs.rank() == 2, "{}: family dirs must be [R, D]", self.name);
+            ensure!(f.weight.is_finite(), "{}: non-finite family weight", self.name);
+            let d = f.dirs.shape[1];
+            ensure!(*dim.get_or_insert(d) == d, "{}: inconsistent direction dims", self.name);
+        }
+        Ok(())
+    }
+
+    /// Highest family degree — the shared jet order K (0 for pure c₀·f).
+    pub fn order(&self) -> usize {
+        self.families.iter().map(|f| f.degree).max().unwrap_or(0)
+    }
+
+    /// Input dimension D (None for a pure c₀·f spec).
+    pub fn dim(&self) -> Option<usize> {
+        self.families.first().map(|f| f.dirs.shape[1])
+    }
+
+    /// Total stacked directions across families.
+    pub fn num_dirs(&self) -> usize {
+        self.families.iter().map(|f| f.dirs.shape[0]).sum()
+    }
+
+    // -- presets ------------------------------------------------------------
+
+    /// Δf: D identity directions of degree 2.
+    pub fn laplacian(dim: usize) -> OperatorSpec {
+        OperatorSpec {
+            name: "laplacian".into(),
+            c0: 0.0,
+            families: vec![FamilySpec { weight: 1.0, degree: 2, dirs: super::basis(dim) }],
+        }
+    }
+
+    /// Tr(σσᵀ∇²f): the columns of σ `[D, R]` as degree-2 directions
+    /// (paper eq. 8b).
+    pub fn weighted_laplacian(sigma: &Tensor) -> OperatorSpec {
+        OperatorSpec {
+            name: "weighted_laplacian".into(),
+            c0: 0.0,
+            families: vec![FamilySpec { weight: 1.0, degree: 2, dirs: sigma.transpose2() }],
+        }
+    }
+
+    /// Δ²f via the three Griewank interpolation families (paper eq. E22) —
+    /// compiled into one bundle, they run as a single 4-jet push.
+    pub fn biharmonic(dim: usize) -> OperatorSpec {
+        let plan = BiharmonicPlan::new(dim);
+        OperatorSpec {
+            name: "biharmonic".into(),
+            c0: 0.0,
+            families: vec![
+                FamilySpec { weight: plan.w_a, degree: 4, dirs: plan.directions_a() },
+                FamilySpec { weight: plan.w_b, degree: 4, dirs: plan.directions_b() },
+                FamilySpec { weight: plan.w_c, degree: 4, dirs: plan.directions_c() },
+            ],
+        }
+    }
+
+    /// Helmholtz-type composed operator c₀·f + c₂·Δf (mixed order 0 + 2).
+    pub fn helmholtz(dim: usize, c0: f64, c2: f64) -> OperatorSpec {
+        OperatorSpec {
+            name: "helmholtz".into(),
+            c0,
+            families: vec![FamilySpec { weight: c2, degree: 2, dirs: super::basis(dim) }],
+        }
+    }
+
+    /// The builtin helmholtz artifact preset (fixed c₀, c₂).
+    pub fn helmholtz_preset(dim: usize) -> OperatorSpec {
+        OperatorSpec::helmholtz(dim, HELMHOLTZ_C0, HELMHOLTZ_C2)
+    }
+
+    /// Hutchinson estimator of Δf along sampled dirs `[S, D]` (eq. 7a):
+    /// weight 1/S.
+    pub fn stochastic_laplacian(dirs: &Tensor) -> OperatorSpec {
+        let s = dirs.shape[0] as f64;
+        OperatorSpec {
+            name: "stochastic_laplacian".into(),
+            c0: 0.0,
+            families: vec![FamilySpec { weight: 1.0 / s, degree: 2, dirs: dirs.clone() }],
+        }
+    }
+
+    /// Unbiased Δ²f estimator along *Gaussian* dirs (eq. 9): Isserlis gives
+    /// E⟨∂⁴f, v^{⊗4}⟩ = 3Δ²f, so the weight is 1/(3S).
+    pub fn stochastic_biharmonic(dirs: &Tensor) -> OperatorSpec {
+        let s = dirs.shape[0] as f64;
+        OperatorSpec {
+            name: "stochastic_biharmonic".into(),
+            c0: 0.0,
+            families: vec![FamilySpec { weight: 1.0 / (3.0 * s), degree: 4, dirs: dirs.clone() }],
+        }
+    }
+
+    /// Stochastic Helmholtz-type: c₀·f plus the Hutchinson Δ estimate —
+    /// the mixed-order stochastic spec.
+    pub fn stochastic_helmholtz(c0: f64, c2: f64, dirs: &Tensor) -> OperatorSpec {
+        let s = dirs.shape[0] as f64;
+        OperatorSpec {
+            name: "stochastic_helmholtz".into(),
+            c0,
+            families: vec![FamilySpec { weight: c2 / s, degree: 2, dirs: dirs.clone() }],
+        }
+    }
+
+    /// Compile to the single stacked direction bundle.
+    pub fn compile(&self) -> OperatorPlan {
+        let order = self.order();
+        let dim = self.dim().unwrap_or(0);
+        let mut rows: Vec<f64> = Vec::new();
+        let mut top_weights: Vec<f64> = Vec::new();
+        let mut lower = Vec::new();
+        let mut num_top = 0usize;
+        for fam in &self.families {
+            let r = fam.dirs.shape[0];
+            if fam.weight == 0.0 || r == 0 {
+                continue;
+            }
+            // ∂^k f[(c·v)^⊗k] = c^k·∂^k f[v^⊗k]: |w|^(1/k) rides on the
+            // directions, the sign on the per-direction sum weight.
+            let scale = fam.weight.abs().powf(1.0 / fam.degree as f64);
+            let sign = fam.weight.signum();
+            let start = top_weights.len();
+            for v in &fam.dirs.data {
+                rows.push(v * scale);
+            }
+            if fam.degree == order {
+                top_weights.extend(std::iter::repeat(sign).take(r));
+                num_top += r;
+            } else {
+                top_weights.extend(std::iter::repeat(0.0).take(r));
+                lower.push(LowerRead { degree: fam.degree, sign, start, len: r });
+            }
+        }
+        let n = top_weights.len();
+        OperatorPlan {
+            name: self.name.clone(),
+            order,
+            c0: self.c0,
+            dirs: Tensor::new(vec![n, dim], rows),
+            top_weights,
+            lower,
+            num_top_dirs: num_top,
+        }
+    }
+}
+
+/// A lower-than-K family read: after the push, sum rows
+/// `[start, start + len)` of the degree-k per-direction channel, signed.
+#[derive(Debug, Clone, Copy)]
+pub struct LowerRead {
+    pub degree: usize,
+    pub sign: f64,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// A compiled operator: everything one evaluation needs, as data.
+#[derive(Debug, Clone)]
+pub struct OperatorPlan {
+    pub name: String,
+    /// Shared jet degree K = max family degree (0 ⇒ pure c₀·f).
+    pub order: usize,
+    pub c0: f64,
+    /// `[R_total, D]`: all families stacked, |w|^(1/k) absorbed per row.
+    pub dirs: Tensor,
+    /// Per-direction degree-K sum weight: sign(w) for degree-K rows, 0 for
+    /// rows that only feed a lower-degree read.
+    pub top_weights: Vec<f64>,
+    pub lower: Vec<LowerRead>,
+    /// Directions participating in the degree-K sum (cost-model input).
+    pub num_top_dirs: usize,
+}
+
+/// Evaluate a compiled plan: ONE jet push regardless of how many families
+/// the spec composed.  Returns `(f(x), L f(x))`.
+pub fn apply(mlp: &Mlp, x0: &Tensor, plan: &OperatorPlan, mode: Collapse) -> (Tensor, Tensor) {
+    if plan.dirs.shape[0] == 0 {
+        let f0 = mlp.apply(x0);
+        let op = f0.scale(plan.c0);
+        return (f0, op);
+    }
+    // All-ones weights collapse to the unweighted fast path.
+    let weights = if plan.top_weights.iter().all(|&w| w == 1.0) {
+        None
+    } else {
+        Some(plan.top_weights.clone())
+    };
+    let jet = Jet::seed_weighted(x0, &plan.dirs, plan.order, mode, weights);
+    let out = super::mlp_jet(mlp, jet);
+    let mut op = out.highest_sum();
+    for read in &plan.lower {
+        let part = out.xs[read.degree - 1].sum_axis0_range(read.start, read.len);
+        op.add_scaled_assign(&part, read.sign);
+    }
+    if plan.c0 != 0.0 {
+        op.add_scaled_assign(&out.x0, plan.c0);
+    }
+    (out.x0, op)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn setup(dim: usize, batch: usize) -> (Mlp, Tensor) {
+        let mut rng = Rng::new(21);
+        let mlp = Mlp::init(&mut rng, dim, &[10, 8, 1], batch);
+        let x = mlp.random_input(&mut rng);
+        (mlp, x)
+    }
+
+    #[test]
+    fn compile_absorbs_weights_and_signs() {
+        let spec = OperatorSpec::biharmonic(3);
+        let plan = spec.compile();
+        assert_eq!(plan.order, 4);
+        assert_eq!(plan.dirs.shape, vec![3 + 6 + 3, 3]);
+        assert_eq!(plan.num_top_dirs, plan.dirs.shape[0]);
+        assert!(plan.lower.is_empty());
+        // Family B's γ-weight is negative: its rows must carry sign -1.
+        let w_b = spec.families[1].weight;
+        assert!(w_b < 0.0, "family B weight should be negative, got {w_b}");
+        for r in 3..9 {
+            assert_eq!(plan.top_weights[r], -1.0);
+        }
+        // |w|^(1/4) premultiplication: row 0 is 4·e_0 scaled.
+        let expect = 4.0 * spec.families[0].weight.abs().powf(0.25);
+        assert!((plan.dirs.data[0] - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_order_compiles_to_lower_reads() {
+        let spec = OperatorSpec::helmholtz_preset(4);
+        let plan = spec.compile();
+        // Single degree-2 family + c0: no lower reads, 4 top dirs.
+        assert_eq!(plan.order, 2);
+        assert_eq!(plan.lower.len(), 0);
+        assert_eq!(plan.c0, HELMHOLTZ_C0);
+        // Now compose degree 1 + degree 2: the degree-1 family becomes a read.
+        let dim = 4;
+        let adv = FamilySpec {
+            weight: -0.5,
+            degree: 1,
+            dirs: Tensor::new(vec![1, dim], vec![1.0, 0.0, 0.0, 0.0]),
+        };
+        let lap = FamilySpec { weight: 1.0, degree: 2, dirs: super::super::basis(dim) };
+        let spec = OperatorSpec::new("advection_diffusion", 0.0, vec![adv, lap]).unwrap();
+        let plan = spec.compile();
+        assert_eq!(plan.order, 2);
+        assert_eq!(plan.lower.len(), 1);
+        assert_eq!(plan.lower[0].degree, 1);
+        assert_eq!(plan.lower[0].sign, -1.0);
+        assert_eq!(plan.lower[0].len, 1);
+        assert_eq!(plan.top_weights[0], 0.0, "degree-1 row is out of the top sum");
+        assert_eq!(plan.num_top_dirs, dim);
+    }
+
+    #[test]
+    fn helmholtz_plan_matches_manual_composition() {
+        let (mlp, x) = setup(4, 3);
+        let (c0, c2) = (1.7, -0.8);
+        let plan = OperatorSpec::helmholtz(4, c0, c2).compile();
+        for mode in [Collapse::Standard, Collapse::Collapsed] {
+            let (f0, hf) = apply(&mlp, &x, &plan, mode);
+            let (_, lap) = super::super::laplacian_native(&mlp, &x, mode);
+            let manual = f0.scale(c0).add(&lap.scale(c2));
+            assert!(hf.max_abs_diff(&manual) < 1e-10, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn mixed_order_plan_reads_lower_channels() {
+        // b·∂f/∂x₀ + Δf against the same terms evaluated separately.
+        let dim = 3;
+        let (mlp, x) = setup(dim, 2);
+        let b_adv = 0.75;
+        let mut e0 = vec![0.0; dim];
+        e0[0] = 1.0;
+        let adv =
+            FamilySpec { weight: b_adv, degree: 1, dirs: Tensor::new(vec![1, dim], e0.clone()) };
+        let lap = FamilySpec { weight: 1.0, degree: 2, dirs: super::super::basis(dim) };
+        let spec = OperatorSpec::new("advdiff", 0.0, vec![adv, lap]).unwrap();
+        let plan = spec.compile();
+        // Reference: Laplacian plus b·(first directional derivative).
+        let (_, lapv) = super::super::laplacian_native(&mlp, &x, Collapse::Collapsed);
+        let grad_spec = OperatorSpec::new(
+            "ddx0",
+            0.0,
+            vec![FamilySpec { weight: 1.0, degree: 1, dirs: Tensor::new(vec![1, dim], e0) }],
+        )
+        .unwrap();
+        let (_, ddx0) = apply(&mlp, &x, &grad_spec.compile(), Collapse::Standard);
+        let expect = lapv.add(&ddx0.scale(b_adv));
+        for mode in [Collapse::Standard, Collapse::Collapsed] {
+            let (_, got) = apply(&mlp, &x, &plan, mode);
+            assert!(got.max_abs_diff(&expect) < 1e-10, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn pure_c0_spec_is_a_forward_pass() {
+        let (mlp, x) = setup(3, 2);
+        let spec = OperatorSpec::new("mass", 2.5, vec![]).unwrap();
+        let (f0, opv) = apply(&mlp, &x, &spec.compile(), Collapse::Collapsed);
+        assert!(opv.max_abs_diff(&f0.scale(2.5)) < 1e-15);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_specs() {
+        assert!(OperatorSpec::new("empty", 0.0, vec![]).is_err());
+        let bad_deg =
+            FamilySpec { weight: 1.0, degree: 0, dirs: Tensor::new(vec![1, 2], vec![1., 0.]) };
+        assert!(OperatorSpec::new("bad", 0.0, vec![bad_deg]).is_err());
+        let a = FamilySpec { weight: 1.0, degree: 2, dirs: Tensor::new(vec![1, 2], vec![1., 0.]) };
+        let d3 = Tensor::new(vec![1, 3], vec![1., 0., 0.]);
+        let b = FamilySpec { weight: 1.0, degree: 2, dirs: d3 };
+        assert!(OperatorSpec::new("mixed_dim", 0.0, vec![a, b]).is_err());
+    }
+}

@@ -2,13 +2,15 @@
 //! engines instead of a PJRT executable.
 //!
 //! The offline crate set ships no `xla`/PJRT bindings (DESIGN.md §2), so
-//! the runtime executes each artifact's (op, method, mode) natively: the
-//! nested first-order engine, the standard Taylor engine or the collapsed
-//! Taylor engine — all three semantically cross-checked in
-//! tests/prop_engines.rs.  The artifact's `theta` input is unpacked into
-//! an [`Mlp`] exactly as `python/compile/model.py` lays parameters out, so
-//! a future PJRT backend can swap in behind the same [`ArtifactMeta`]
-//! surface without touching callers.
+//! the runtime executes each artifact natively.  An artifact's (op, mode)
+//! route resolves to an [`OperatorSpec`] — the plan-driven propagation
+//! core — and its method picks the engine: the nested first-order
+//! baseline, or the unified Taylor jet engine in standard or collapsed
+//! form (all semantically cross-checked in tests/prop_engines.rs).  The
+//! artifact's `theta` input is unpacked into an [`Mlp`] exactly as
+//! `python/compile/model.py` lays parameters out, so a future PJRT
+//! backend can swap in behind the same [`ArtifactMeta`] surface without
+//! touching callers.
 
 use anyhow::{bail, ensure, Result};
 
@@ -16,29 +18,26 @@ use super::io::HostTensor;
 use super::registry::ArtifactMeta;
 use crate::mlp::Mlp;
 use crate::nested;
-use crate::operators;
+use crate::operators::plan::{self, HELMHOLTZ_C0, HELMHOLTZ_C2};
+use crate::operators::OperatorSpec;
+use crate::taylor::jet::Collapse;
 use crate::taylor::tensor::Tensor;
 
 /// Execution method selected by an artifact's manifest entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Method {
     Nested,
-    Standard,
-    Collapsed,
+    Taylor(Collapse),
 }
 
 impl Method {
     fn parse(s: &str) -> Result<Method> {
         Ok(match s {
             "nested" => Method::Nested,
-            "standard" => Method::Standard,
-            "collapsed" => Method::Collapsed,
+            "standard" => Method::Taylor(Collapse::Standard),
+            "collapsed" => Method::Taylor(Collapse::Collapsed),
             other => bail!("unknown method {other:?}"),
         })
-    }
-
-    fn collapsed(self) -> bool {
-        self == Method::Collapsed
     }
 }
 
@@ -87,17 +86,113 @@ fn mlp_from_theta(meta: &ArtifactMeta, theta: &[f32]) -> Result<Mlp> {
     })
 }
 
-/// Direction rows for the nested engine's weighted Laplacian: columns of
-/// σ (`[D, R]`) transposed to `[R, D]` rows (paper eq. 8b).
-fn sigma_columns(sigma: &Tensor) -> Tensor {
-    let (d, r) = (sigma.shape[0], sigma.shape[1]);
-    let mut dirs = Tensor::zeros(&[r, d]);
-    for i in 0..d {
-        for j in 0..r {
-            dirs.data[j * d + i] = sigma.data[i * r + j];
+/// The auxiliary input one route consumes beyond (θ, x): σ for the exact
+/// weighted Laplacian, sampled directions for every stochastic estimator.
+#[derive(Debug)]
+enum Aux {
+    None,
+    Sigma(Tensor),
+    Dirs(Tensor),
+}
+
+impl Aux {
+    fn resolve(meta: &ArtifactMeta, inputs: &[&HostTensor]) -> Result<Aux> {
+        let get = |what: &str| -> Result<Tensor> {
+            let t = inputs.get(2).ok_or_else(|| {
+                anyhow::anyhow!("{}: missing input 2 ({what}) for {}", meta.name, meta.mode)
+            })?;
+            Ok(to_f64(t))
+        };
+        if meta.mode == "stochastic" {
+            let dirs = get("dirs")?;
+            ensure!(
+                dirs.rank() == 2 && dirs.shape[1] == meta.dim,
+                "{}: dirs shape {:?} is not [S, {}]",
+                meta.name,
+                dirs.shape,
+                meta.dim
+            );
+            return Ok(Aux::Dirs(dirs));
         }
+        if meta.op == "weighted_laplacian" {
+            let sigma = get("sigma")?;
+            ensure!(
+                sigma.shape == [meta.dim, meta.dim],
+                "{}: sigma shape {:?} is not [{d}, {d}]",
+                meta.name,
+                sigma.shape,
+                d = meta.dim
+            );
+            return Ok(Aux::Sigma(sigma));
+        }
+        Ok(Aux::None)
     }
-    dirs
+}
+
+/// Resolve an artifact's (op, mode) route to the [`OperatorSpec`] the
+/// Taylor engine evaluates as one compiled jet push.  Weighted stochastic
+/// artifacts follow the aot.py contract (paper eq. 8a): callers pass dirs
+/// already premultiplied by σ, so the spec is the plain estimator's.
+fn resolve_spec(meta: &ArtifactMeta, aux: &Aux) -> Result<OperatorSpec> {
+    let spec = match (meta.op.as_str(), meta.mode.as_str(), aux) {
+        ("laplacian", "exact", Aux::None) => OperatorSpec::laplacian(meta.dim),
+        ("weighted_laplacian", "exact", Aux::Sigma(sigma)) => {
+            OperatorSpec::weighted_laplacian(sigma)
+        }
+        ("helmholtz", "exact", Aux::None) => OperatorSpec::helmholtz_preset(meta.dim),
+        ("biharmonic", "exact", Aux::None) => OperatorSpec::biharmonic(meta.dim),
+        ("laplacian", "stochastic", Aux::Dirs(dirs))
+        | ("weighted_laplacian", "stochastic", Aux::Dirs(dirs)) => {
+            OperatorSpec::stochastic_laplacian(dirs)
+        }
+        ("helmholtz", "stochastic", Aux::Dirs(dirs)) => {
+            OperatorSpec::stochastic_helmholtz(HELMHOLTZ_C0, HELMHOLTZ_C2, dirs)
+        }
+        ("biharmonic", "stochastic", Aux::Dirs(dirs)) => OperatorSpec::stochastic_biharmonic(dirs),
+        (op, mode, _) => bail!("{}: no native executor for op {op:?} mode {mode:?}", meta.name),
+    };
+    Ok(spec)
+}
+
+/// The nested first-order-AD baseline per route.  Not plan-driven: nested
+/// AD has per-operator closed forms (VHVP loops, dual towers) rather than
+/// a direction bundle to stack, but it consumes the same resolved aux.
+/// `f0` is the already-computed forward pass (the helmholtz c₀·f term
+/// reuses it rather than re-running the network).
+fn execute_nested(
+    mlp: &Mlp,
+    meta: &ArtifactMeta,
+    x0: &Tensor,
+    aux: &Aux,
+    f0: &Tensor,
+) -> Result<Tensor> {
+    let opv = match (meta.op.as_str(), meta.mode.as_str(), aux) {
+        ("laplacian", "exact", Aux::None) => nested::laplacian(mlp, x0, None, 1.0),
+        ("weighted_laplacian", "exact", Aux::Sigma(sigma)) => {
+            let dirs = sigma.transpose2();
+            nested::laplacian(mlp, x0, Some(&dirs), 1.0)
+        }
+        ("helmholtz", "exact", Aux::None) => {
+            let lap = nested::laplacian(mlp, x0, None, 1.0);
+            f0.scale(HELMHOLTZ_C0).add(&lap.scale(HELMHOLTZ_C2))
+        }
+        ("biharmonic", "exact", Aux::None) => nested::biharmonic_tvp(mlp, x0),
+        ("laplacian", "stochastic", Aux::Dirs(dirs))
+        | ("weighted_laplacian", "stochastic", Aux::Dirs(dirs)) => {
+            let s = dirs.shape[0] as f64;
+            nested::laplacian(mlp, x0, Some(dirs), 1.0 / s)
+        }
+        ("helmholtz", "stochastic", Aux::Dirs(dirs)) => {
+            let s = dirs.shape[0] as f64;
+            let lap = nested::laplacian(mlp, x0, Some(dirs), 1.0 / s);
+            f0.scale(HELMHOLTZ_C0).add(&lap.scale(HELMHOLTZ_C2))
+        }
+        ("biharmonic", "stochastic", Aux::Dirs(dirs)) => {
+            nested::stochastic_biharmonic_tvp(mlp, x0, dirs)
+        }
+        (op, mode, _) => bail!("{}: no nested executor for op {op:?} mode {mode:?}", meta.name),
+    };
+    Ok(opv)
 }
 
 /// Execute one artifact natively.  `inputs` follow the manifest order:
@@ -115,79 +210,18 @@ pub fn execute(meta: &ArtifactMeta, inputs: &[&HostTensor]) -> Result<Vec<HostTe
         meta.dim
     );
     let x0 = to_f64(x);
-    let method = Method::parse(&meta.method)?;
+    let aux = Aux::resolve(meta, inputs)?;
 
-    let aux = |idx: usize, what: &str| -> Result<Tensor> {
-        let t = inputs.get(idx).ok_or_else(|| {
-            anyhow::anyhow!("{}: missing input {idx} ({what}) for {}", meta.name, meta.mode)
-        })?;
-        Ok(to_f64(t))
-    };
-    let checked_dirs = |idx: usize| -> Result<Tensor> {
-        let dirs = aux(idx, "dirs")?;
-        ensure!(
-            dirs.rank() == 2 && dirs.shape[1] == meta.dim,
-            "{}: dirs shape {:?} is not [S, {}]",
-            meta.name,
-            dirs.shape,
-            meta.dim
-        );
-        Ok(dirs)
-    };
-    let checked_sigma = |idx: usize| -> Result<Tensor> {
-        let sigma = aux(idx, "sigma")?;
-        ensure!(
-            sigma.shape == [meta.dim, meta.dim],
-            "{}: sigma shape {:?} is not [{d}, {d}]",
-            meta.name,
-            sigma.shape,
-            d = meta.dim
-        );
-        Ok(sigma)
-    };
-
-    let (f0, opv) = match (meta.op.as_str(), meta.mode.as_str()) {
-        ("laplacian", "exact") => match method {
-            Method::Nested => (mlp.apply(&x0), nested::laplacian(&mlp, &x0, None, 1.0)),
-            m => operators::laplacian_native(&mlp, &x0, m.collapsed()),
-        },
-        ("laplacian", "stochastic") | ("weighted_laplacian", "stochastic") => {
-            // Weighted stochastic follows the aot.py artifact contract
-            // (paper eq. 8a): callers pass dirs already premultiplied by σ,
-            // so the executable is shape-uniform with the plain estimator.
-            let dirs = checked_dirs(2)?;
-            match method {
-                Method::Nested => {
-                    let s = dirs.shape[0] as f64;
-                    (mlp.apply(&x0), nested::laplacian(&mlp, &x0, Some(&dirs), 1.0 / s))
-                }
-                m => operators::stochastic_laplacian_native(&mlp, &x0, &dirs, m.collapsed()),
-            }
+    let (f0, opv) = match Method::parse(&meta.method)? {
+        Method::Nested => {
+            let f0 = mlp.apply(&x0);
+            let opv = execute_nested(&mlp, meta, &x0, &aux, &f0)?;
+            (f0, opv)
         }
-        ("weighted_laplacian", "exact") => {
-            let sigma = checked_sigma(2)?;
-            match method {
-                Method::Nested => {
-                    let dirs = sigma_columns(&sigma);
-                    (mlp.apply(&x0), nested::laplacian(&mlp, &x0, Some(&dirs), 1.0))
-                }
-                m => operators::weighted_laplacian_native(&mlp, &x0, &sigma, m.collapsed()),
-            }
+        Method::Taylor(mode) => {
+            let spec = resolve_spec(meta, &aux)?;
+            plan::apply(&mlp, &x0, &spec.compile(), mode)
         }
-        ("biharmonic", "exact") => match method {
-            Method::Nested => (mlp.apply(&x0), nested::biharmonic_tvp(&mlp, &x0)),
-            m => operators::biharmonic_native(&mlp, &x0, m.collapsed()),
-        },
-        ("biharmonic", "stochastic") => {
-            let dirs = checked_dirs(2)?;
-            match method {
-                Method::Nested => {
-                    (mlp.apply(&x0), nested::stochastic_biharmonic_tvp(&mlp, &x0, &dirs))
-                }
-                m => operators::stochastic_biharmonic_native(&mlp, &x0, &dirs, m.collapsed()),
-            }
-        }
-        (op, mode) => bail!("{}: no native executor for op {op:?} mode {mode:?}", meta.name),
     };
 
     Ok(vec![to_f32(&f0), to_f32(&opv)])
@@ -242,6 +276,29 @@ mod tests {
         for i in 0..2 {
             assert!((a[1].data[i] - b[1].data[i]).abs() < 1e-3 * (1.0 + a[1].data[i].abs()));
             assert!((a[1].data[i] - c[1].data[i]).abs() < 1e-3 * (1.0 + a[1].data[i].abs()));
+        }
+    }
+
+    #[test]
+    fn helmholtz_route_composes_f_and_laplacian() {
+        let reg = Registry::builtin();
+        let hel = reg.get("helmholtz_collapsed_exact_b2").unwrap();
+        let lap = reg.get("laplacian_collapsed_exact_b2").unwrap();
+        let theta = theta_for(hel, 8);
+        let mut rng = Rng::new(9);
+        let mut xdata = vec![0.0f32; 2 * hel.dim];
+        rng.fill_normal_f32(&mut xdata);
+        let x = HostTensor::new(vec![2, hel.dim], xdata);
+        let h = execute(hel, &[&theta, &x]).unwrap();
+        let l = execute(lap, &[&theta, &x]).unwrap();
+        for b in 0..2 {
+            let expect = HELMHOLTZ_C0 as f32 * h[0].data[b] + HELMHOLTZ_C2 as f32 * l[1].data[b];
+            assert!(
+                (h[1].data[b] - expect).abs() < 1e-3 * (1.0 + expect.abs()),
+                "helmholtz {} vs c0·f + c2·Δf {}",
+                h[1].data[b],
+                expect
+            );
         }
     }
 

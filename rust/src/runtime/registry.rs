@@ -43,8 +43,8 @@ pub struct ArtifactMeta {
     pub name: String,
     /// HLO text file, relative to the artifacts dir.
     pub file: String,
-    /// Operator: laplacian | weighted_laplacian | biharmonic | biharl |
-    /// pinn_step | pinn_eval.
+    /// Operator: laplacian | weighted_laplacian | helmholtz | biharmonic |
+    /// biharl | pinn_step | pinn_eval.
     pub op: String,
     /// Method: nested | standard | collapsed.
     pub method: String,
@@ -189,30 +189,42 @@ impl Registry {
     /// missing file as "memory proxies unavailable").
     pub fn builtin() -> Registry {
         const METHODS: [&str; 3] = ["nested", "standard", "collapsed"];
+        // Degree-2 operators (Laplacian / weighted Laplacian / the composed
+        // Helmholtz-type spec) run at D = 16 on a tanh MLP 32-32-1; the
+        // biharmonic's 4th-order jets are O(D^2) families, so D stays small.
+        const DEG2_OPS: [&str; 3] = ["laplacian", "weighted_laplacian", "helmholtz"];
+        const W2: [usize; 3] = [32, 32, 1];
+        const W4: [usize; 3] = [16, 16, 1];
         let mut artifacts = Vec::new();
         for method in METHODS {
-            // Laplacian / weighted Laplacian: D = 16, tanh MLP 32-32-1.
             for batch in [1, 2, 4, 8, 16] {
-                artifacts.push(builtin_meta("laplacian", method, "exact", 16, &[32, 32, 1], batch, 0, "plain"));
-                artifacts.push(builtin_meta("weighted_laplacian", method, "exact", 16, &[32, 32, 1], batch, 0, "plain"));
+                for op in DEG2_OPS {
+                    artifacts.push(builtin_meta(op, method, "exact", 16, &W2, batch, 0, "plain"));
+                }
             }
-            for samples in [4, 8, 16] {
-                artifacts.push(builtin_meta("laplacian", method, "stochastic", 16, &[32, 32, 1], 4, samples, "plain"));
-                artifacts.push(builtin_meta("weighted_laplacian", method, "stochastic", 16, &[32, 32, 1], 4, samples, "plain"));
+            for s in [4, 8, 16] {
+                for op in DEG2_OPS {
+                    artifacts.push(builtin_meta(op, method, "stochastic", 16, &W2, 4, s, "plain"));
+                }
             }
-            // Biharmonic: 4th-order jets are O(D^2) families, keep D small.
             for batch in [1, 2, 4, 8] {
-                artifacts.push(builtin_meta("biharmonic", method, "exact", 4, &[16, 16, 1], batch, 0, "plain"));
+                let m = builtin_meta("biharmonic", method, "exact", 4, &W4, batch, 0, "plain");
+                artifacts.push(m);
             }
-            for samples in [4, 8, 16] {
-                artifacts.push(builtin_meta("biharmonic", method, "stochastic", 4, &[16, 16, 1], 2, samples, "plain"));
+            for s in [4, 8, 16] {
+                let m = builtin_meta("biharmonic", method, "stochastic", 4, &W4, 2, s, "plain");
+                artifacts.push(m);
             }
         }
         // The Pallas-fused activation variant (same semantics natively).
-        artifacts.push(builtin_meta("laplacian", "collapsed", "exact", 16, &[32, 32, 1], 8, 0, "kernel"));
-        let by_name =
-            artifacts.iter().enumerate().map(|(i, a)| (a.name.clone(), i)).collect();
-        Registry { dir: PathBuf::from("artifacts"), preset: "builtin".to_string(), artifacts, by_name }
+        artifacts.push(builtin_meta("laplacian", "collapsed", "exact", 16, &W2, 8, 0, "kernel"));
+        let by_name = artifacts.iter().enumerate().map(|(i, a)| (a.name.clone(), i)).collect();
+        Registry {
+            dir: PathBuf::from("artifacts"),
+            preset: "builtin".to_string(),
+            artifacts,
+            by_name,
+        }
     }
 
     pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
@@ -322,7 +334,7 @@ mod tests {
     fn builtin_registry_covers_all_routes() {
         let reg = Registry::builtin();
         assert_eq!(reg.preset, "builtin");
-        for op in ["laplacian", "weighted_laplacian", "biharmonic"] {
+        for op in ["laplacian", "weighted_laplacian", "helmholtz", "biharmonic"] {
             for method in ["nested", "standard", "collapsed"] {
                 for mode in ["exact", "stochastic"] {
                     assert!(
@@ -344,5 +356,11 @@ mod tests {
         let ws = reg.get("weighted_laplacian_collapsed_stochastic_s16_b4").unwrap();
         assert_eq!(ws.inputs.len(), 3);
         assert!(reg.get("laplacian_collapsed_exact_kernel_b8").is_some());
+        // The composed-spec preset: exact helmholtz takes only (θ, x),
+        // stochastic helmholtz takes sampled dirs like the plain estimator.
+        let he = reg.get("helmholtz_collapsed_exact_b4").unwrap();
+        assert_eq!(he.inputs.len(), 2);
+        let hs = reg.get("helmholtz_collapsed_stochastic_s8_b4").unwrap();
+        assert_eq!(hs.inputs.len(), 3);
     }
 }

@@ -13,6 +13,46 @@ pub fn vectors_collapsed(order: usize, num_dirs: usize) -> usize {
     1 + (order - 1) * num_dirs + 1
 }
 
+/// Nested first-order AD proxy: every differentiation level roughly
+/// doubles the live tape, so a K-th-order operator along R directions
+/// carries ~(2^K − 1) vectors per direction plus the shared primal.  A
+/// model, not a measurement — used only where HLO analysis is unavailable.
+pub fn vectors_nested(order: usize, num_dirs: usize) -> usize {
+    1 + ((1usize << order) - 1) * num_dirs
+}
+
+/// Total stacked directions of the exact biharmonic's three Griewank
+/// families: D + D(D−1) + D(D−1)/2 = D(3D−1)/2 (paper §3.3).  Plugging it
+/// into [`vectors_standard`]/[`vectors_collapsed`] at K = 4 reproduces
+/// [`biharmonic_standard`]/[`biharmonic_collapsed`] exactly.
+pub fn biharmonic_dirs(dim: usize) -> usize {
+    dim * (3 * dim - 1) / 2
+}
+
+/// Propagated-vector count for one artifact route (op × method × mode) —
+/// the analytic stand-in the bench memory proxies use for builtin
+/// (HLO-less) artifacts.  Exact routes propagate along the operator's
+/// compiled direction bundle; stochastic routes along S samples.
+pub fn route_vectors(op: &str, method: &str, mode: &str, dim: usize, samples: usize) -> usize {
+    let order = if op == "biharmonic" { 4 } else { 2 };
+    let dirs = if mode == "stochastic" {
+        samples
+    } else if op == "biharmonic" {
+        biharmonic_dirs(dim)
+    } else {
+        dim
+    };
+    match method {
+        // Exact nested biharmonic runs D² fourth-order TVPs (∂⁴ along
+        // e_i²⊗e_j² pairs) rather than the Griewank bundle.
+        "nested" if op == "biharmonic" && mode == "exact" => vectors_nested(order, dim * dim),
+        "nested" => vectors_nested(order, dirs),
+        "standard" => vectors_standard(order, dirs),
+        "collapsed" => vectors_collapsed(order, dirs),
+        _ => 0,
+    }
+}
+
 /// Exact Laplacian (K = 2, R = D): 1 + 2D vs 1 + D + 1 (paper §3.2).
 pub fn laplacian_standard(dim: usize) -> usize {
     vectors_standard(2, dim)
@@ -89,6 +129,31 @@ mod tests {
         assert_eq!(delta_per_sample_collapsed(4), 3);
         assert!((stochastic_ratio(2) - 0.5).abs() < 1e-12);
         assert!((stochastic_ratio(4) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn route_vectors_reproduce_closed_forms() {
+        // The generic route model must agree with the paper's closed forms.
+        for d in [4, 5, 16, 50] {
+            let lap = |m: &str| route_vectors("laplacian", m, "exact", d, 0);
+            assert_eq!(lap("standard"), laplacian_standard(d));
+            assert_eq!(lap("collapsed"), laplacian_collapsed(d));
+            let bih = |m: &str| route_vectors("biharmonic", m, "exact", d, 0);
+            assert_eq!(bih("standard"), biharmonic_standard(d));
+            assert_eq!(bih("collapsed"), biharmonic_collapsed(d));
+            // Helmholtz-type specs share the Laplacian's degree-2 bundle.
+            let hel = |m: &str| route_vectors("helmholtz", m, "exact", d, 0);
+            assert_eq!(hel("collapsed"), laplacian_collapsed(d));
+        }
+        // Stochastic routes scale in S with the table-F2 per-sample deltas.
+        let s16 = route_vectors("laplacian", "standard", "stochastic", 16, 16);
+        let s8 = route_vectors("laplacian", "standard", "stochastic", 16, 8);
+        assert_eq!(s16 - s8, 8 * delta_per_sample_standard(2));
+        let c16 = route_vectors("biharmonic", "collapsed", "stochastic", 4, 16);
+        let c8 = route_vectors("biharmonic", "collapsed", "stochastic", 4, 8);
+        assert_eq!(c16 - c8, 8 * delta_per_sample_collapsed(4));
+        // The nested proxy dominates standard at equal (K, R).
+        assert!(vectors_nested(2, 10) > vectors_standard(2, 10));
     }
 
     #[test]

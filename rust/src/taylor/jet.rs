@@ -1,73 +1,121 @@
-//! Jet bundles: standard (paper eq. D13) and collapsed (eq. D14) Taylor
-//! mode over the native tensor engine, for arbitrary degree K.
+//! The unified jet bundle: one engine covering standard (paper eq. D13)
+//! and collapsed (eq. D14) Taylor mode over the native tensor engine, for
+//! arbitrary degree K.
+//!
+//! The former `JetStd`/`JetCol` twin engines (and their `linear_std/col`,
+//! `elementwise_std/col` rule pairs) are a single [`Jet`] now: [`Collapse`]
+//! selects whether the highest coefficient rides as per-direction channels
+//! (standard, fig. 2 left) or as one pre-summed channel (collapsed, fig. 2
+//! right), and optional per-direction `top_weights` let a compiled
+//! [`crate::operators::plan::OperatorPlan`] weight each direction's
+//! contribution to the degree-K sum — ±1 signs after |w|^(1/k) weight
+//! absorption, 0 for directions that only feed lower-degree reads.
 
 use super::rules::{nonlinear_terms, DerivFamily};
 use super::tensor::Tensor;
 
-/// Standard-mode bundle: x0 `[B, D]`, coefficient channels `xs[k-1]`
-/// `[R, B, D]` for k = 1..K — `1 + K·R` vectors per node.
-#[derive(Debug, Clone)]
-pub struct JetStd {
-    pub x0: Tensor,
-    pub xs: Vec<Tensor>,
+/// Collapse policy for the highest Taylor coefficient.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collapse {
+    /// Propagate all K·R channels; sum over directions at the end.
+    Standard,
+    /// Propagate the degree-K channel pre-summed over directions:
+    /// `1 + (K-1)·R + 1` vectors per node instead of `1 + K·R`.
+    Collapsed,
 }
 
-/// Collapsed-mode bundle: degrees 1..K-1 per direction plus the *summed*
-/// degree-K channel `[B, D]` — `1 + (K-1)·R + 1` vectors per node.
+/// Jet bundle: x0 `[B, D]`, per-direction coefficient channels `xs[k-1]`
+/// `[R, B, D]` for k = 1..=xs.len(), plus (collapsed mode only) the summed
+/// degree-K channel `[B, D]`.
 #[derive(Debug, Clone)]
-pub struct JetCol {
+pub struct Jet {
     pub x0: Tensor,
     pub xs: Vec<Tensor>,
-    pub xk_sum: Tensor,
+    /// Collapsed-mode degree-K channel: Σ_r w_r·x_{K,r} (`None` ⇒ standard).
+    pub xk_sum: Option<Tensor>,
+    /// Per-direction weights of the degree-K sum (`None` ⇒ all ones).
+    pub top_weights: Option<Vec<f64>>,
 }
 
-impl JetStd {
+impl Jet {
     pub fn order(&self) -> usize {
-        self.xs.len()
+        self.xs.len() + usize::from(self.xk_sum.is_some())
+    }
+
+    pub fn collapse(&self) -> Collapse {
+        if self.xk_sum.is_some() {
+            Collapse::Collapsed
+        } else {
+            Collapse::Standard
+        }
     }
 
     pub fn num_dirs(&self) -> usize {
-        self.xs[0].shape[0]
+        self.xs.first().map_or(0, |x| x.shape[0])
     }
 
     /// Seed with x1 = dirs (`[R, B, D]` or `[R, D]` broadcast over batch),
     /// higher coefficients zero (paper eq. 7b).
-    pub fn seed(x0: &Tensor, dirs: &Tensor, order: usize) -> JetStd {
-        assert!(order >= 1);
+    pub fn seed(x0: &Tensor, dirs: &Tensor, order: usize, collapse: Collapse) -> Jet {
+        Jet::seed_weighted(x0, dirs, order, collapse, None)
+    }
+
+    /// Seed with per-direction weights on the degree-`order` sum.  Standard
+    /// mode applies them in [`Jet::highest_sum`]; collapsed mode applies
+    /// them to the on-the-spot direction sums of every degree-K partition
+    /// term (and to the degenerate `order == 1` seed, whose collapsed
+    /// channel is the weighted direction sum itself).
+    pub fn seed_weighted(
+        x0: &Tensor,
+        dirs: &Tensor,
+        order: usize,
+        collapse: Collapse,
+        top_weights: Option<Vec<f64>>,
+    ) -> Jet {
+        assert!(order >= 1, "jets need order >= 1");
         let dirs = broadcast_dirs(x0, dirs);
-        let zero = Tensor::zeros(&dirs.shape);
-        let mut xs = vec![dirs];
-        xs.resize(order, zero);
-        JetStd { x0: x0.clone(), xs }
+        if let Some(w) = &top_weights {
+            assert_eq!(w.len(), dirs.shape[0], "one top weight per direction");
+        }
+        match collapse {
+            Collapse::Standard => {
+                let zero = Tensor::zeros(&dirs.shape);
+                let mut xs = vec![dirs];
+                xs.resize(order, zero);
+                Jet { x0: x0.clone(), xs, xk_sum: None, top_weights }
+            }
+            Collapse::Collapsed if order == 1 => {
+                // Degenerate collapse: the first coefficient *is* the
+                // highest, so the summed channel replaces all per-direction
+                // channels from the seed onwards.
+                let sum = match &top_weights {
+                    Some(w) => dirs.weighted_sum_axis0(w),
+                    None => dirs.sum_axis0(),
+                };
+                Jet { x0: x0.clone(), xs: Vec::new(), xk_sum: Some(sum), top_weights }
+            }
+            Collapse::Collapsed => {
+                let zero = Tensor::zeros(&dirs.shape);
+                let mut xs = vec![dirs];
+                xs.resize(order - 1, zero);
+                Jet { x0: x0.clone(), xs, xk_sum: Some(Tensor::zeros(&x0.shape)), top_weights }
+            }
+        }
     }
 
-    /// Standard mode ends with propagate-then-sum (paper fig. 2 left).
+    /// Σ_r w_r · (degree-K coefficient of direction r): already carried in
+    /// collapsed mode, formed here in standard mode (paper fig. 2).
     pub fn highest_sum(&self) -> Tensor {
-        self.xs.last().unwrap().sum_axis0()
-    }
-}
-
-impl JetCol {
-    pub fn order(&self) -> usize {
-        self.xs.len() + 1
-    }
-
-    pub fn num_dirs(&self) -> usize {
-        self.xs[0].shape[0]
-    }
-
-    pub fn seed(x0: &Tensor, dirs: &Tensor, order: usize) -> JetCol {
-        assert!(order >= 2, "collapsing needs K >= 2");
-        let dirs = broadcast_dirs(x0, dirs);
-        let zero = Tensor::zeros(&dirs.shape);
-        let mut xs = vec![dirs];
-        xs.resize(order - 1, zero);
-        JetCol { x0: x0.clone(), xs, xk_sum: Tensor::zeros(&x0.shape) }
-    }
-
-    /// Collapsed mode already carries the sum (paper fig. 2 right).
-    pub fn highest_sum(&self) -> Tensor {
-        self.xk_sum.clone()
+        match &self.xk_sum {
+            Some(s) => s.clone(),
+            None => {
+                let top = self.xs.last().expect("standard jet carries channels");
+                match &self.top_weights {
+                    Some(w) => top.weighted_sum_axis0(w),
+                    None => top.sum_axis0(),
+                }
+            }
+        }
     }
 }
 
@@ -93,61 +141,48 @@ fn broadcast_dirs(x0: &Tensor, dirs: &Tensor) -> Tensor {
 // ---------------------------------------------------------------------------
 
 /// Affine map: every channel goes through W; only x0 gets the bias.
-pub fn linear_std(jet: &JetStd, w: &Tensor, b: Option<&Tensor>) -> JetStd {
+pub fn linear(jet: &Jet, w: &Tensor, b: Option<&Tensor>) -> Jet {
     let mut y0 = jet.x0.matmul(w);
     if let Some(b) = b {
         y0 = y0.add_bias(b);
     }
-    JetStd { x0: y0, xs: jet.xs.iter().map(|x| x.matmul(w)).collect() }
-}
-
-pub fn linear_col(jet: &JetCol, w: &Tensor, b: Option<&Tensor>) -> JetCol {
-    let mut y0 = jet.x0.matmul(w);
-    if let Some(b) = b {
-        y0 = y0.add_bias(b);
-    }
-    JetCol {
+    Jet {
         x0: y0,
         xs: jet.xs.iter().map(|x| x.matmul(w)).collect(),
-        xk_sum: jet.xk_sum.matmul(w),
+        xk_sum: jet.xk_sum.as_ref().map(|s| s.matmul(w)),
+        top_weights: jet.top_weights.clone(),
     }
 }
 
-/// Elementwise map in standard mode: full Faà di Bruno per degree.
-pub fn elementwise_std(jet: &JetStd, f: &dyn DerivFamily) -> JetStd {
+/// Elementwise map: full Faà di Bruno per per-direction degree (paper
+/// eq. 3).  The collapsed degree-K channel receives φ'·xK_sum (linear in
+/// the pulled-in sum — the collapse identity, paper eq. 6) plus the
+/// nonlinear partition terms summed over directions on the spot, weighted
+/// by the jet's `top_weights` when a plan set them.
+pub fn elementwise(jet: &Jet, f: &dyn DerivFamily) -> Jet {
     let k_max = jet.order();
     let derivs = f.derivatives(&jet.x0, k_max);
-    let mut ys = Vec::with_capacity(k_max);
-    for k in 1..=k_max {
+    let mut ys = Vec::with_capacity(jet.xs.len());
+    for k in 1..=jet.xs.len() {
         // trivial partition: φ' · x_k (broadcasts [B,D] against [R,B,D])
         let mut yk = derivs[1].mul(&jet.xs[k - 1]);
         if let Some(nl) = nonlinear_terms(&derivs, &jet.xs, k) {
-            yk = yk.add(&nl);
+            yk.add_assign(&nl);
         }
         ys.push(yk);
     }
-    JetStd { x0: derivs[0].clone(), xs: ys }
-}
-
-/// Elementwise map in collapsed mode (paper eq. 6): the summed degree-K
-/// channel receives φ'·xK_sum (linear, pulled-in sum) plus the nonlinear
-/// partition terms *summed over directions on the spot*.
-pub fn elementwise_col(jet: &JetCol, f: &dyn DerivFamily) -> JetCol {
-    let k_max = jet.order();
-    let derivs = f.derivatives(&jet.x0, k_max);
-    let mut ys = Vec::with_capacity(k_max - 1);
-    for k in 1..k_max {
-        let mut yk = derivs[1].mul(&jet.xs[k - 1]);
-        if let Some(nl) = nonlinear_terms(&derivs, &jet.xs, k) {
-            yk = yk.add(&nl);
+    let xk_sum = jet.xk_sum.as_ref().map(|xk| {
+        let mut yk = derivs[1].mul(xk);
+        if let Some(nl) = nonlinear_terms(&derivs, &jet.xs, k_max) {
+            let summed = match &jet.top_weights {
+                Some(w) => nl.weighted_sum_axis0(w),
+                None => nl.sum_axis0(),
+            };
+            yk.add_assign(&summed);
         }
-        ys.push(yk);
-    }
-    let mut yk_sum = derivs[1].mul(&jet.xk_sum);
-    if let Some(nl) = nonlinear_terms(&derivs, &jet.xs, k_max) {
-        yk_sum = yk_sum.add(&nl.sum_axis0());
-    }
-    JetCol { x0: derivs[0].clone(), xs: ys, xk_sum: yk_sum }
+        yk
+    });
+    Jet { x0: derivs[0].clone(), xs: ys, xk_sum, top_weights: jet.top_weights.clone() }
 }
 
 #[cfg(test)]
@@ -155,30 +190,30 @@ mod tests {
     use super::*;
     use crate::taylor::rules::{Sin, Tanh};
 
+    fn rand(shape: &[usize], rng: &mut crate::util::prng::Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape.to_vec(), (0..n).map(|_| rng.normal()).collect())
+    }
+
     /// Collapse identity on a single elementwise node: the summed highest
     /// coefficient agrees between standard and collapsed propagation even
     /// with *nonzero* higher-order seeds.
     #[test]
     fn collapse_identity_elementwise_k4() {
-        let b = 2;
-        let d = 3;
-        let r = 4;
+        let (b, d, r) = (2, 3, 4);
         let mut rng = crate::util::prng::Rng::new(1);
-        let rand = |shape: &[usize], rng: &mut crate::util::prng::Rng| {
-            let n: usize = shape.iter().product();
-            Tensor::new(shape.to_vec(), (0..n).map(|_| rng.normal()).collect())
-        };
         let x0 = rand(&[b, d], &mut rng);
         let xs: Vec<Tensor> = (0..4).map(|_| rand(&[r, b, d], &mut rng)).collect();
 
-        let std_jet = JetStd { x0: x0.clone(), xs: xs.clone() };
-        let col_jet = JetCol {
+        let std_jet = Jet { x0: x0.clone(), xs: xs.clone(), xk_sum: None, top_weights: None };
+        let col_jet = Jet {
             x0,
             xs: xs[..3].to_vec(),
-            xk_sum: xs[3].sum_axis0(),
+            xk_sum: Some(xs[3].sum_axis0()),
+            top_weights: None,
         };
-        let out_std = elementwise_std(&std_jet, &Tanh);
-        let out_col = elementwise_col(&col_jet, &Tanh);
+        let out_std = elementwise(&std_jet, &Tanh);
+        let out_col = elementwise(&col_jet, &Tanh);
         let diff = out_std.highest_sum().max_abs_diff(&out_col.highest_sum());
         assert!(diff < 1e-12, "collapse identity violated: {diff}");
         // Lower-degree channels agree exactly too.
@@ -187,13 +222,40 @@ mod tests {
         }
     }
 
+    /// The weighted collapse identity: ±1/0 per-direction weights commute
+    /// with propagation (the signed single-bundle plans rest on this).
+    #[test]
+    fn weighted_collapse_identity_k3() {
+        let (b, d, r) = (2, 2, 5);
+        let w = vec![1.0, -1.0, 0.0, -1.0, 1.0];
+        let mut rng = crate::util::prng::Rng::new(7);
+        let x0 = rand(&[b, d], &mut rng);
+        let xs: Vec<Tensor> = (0..3).map(|_| rand(&[r, b, d], &mut rng)).collect();
+        let std_jet = Jet {
+            x0: x0.clone(),
+            xs: xs.clone(),
+            xk_sum: None,
+            top_weights: Some(w.clone()),
+        };
+        let col_jet = Jet {
+            x0,
+            xs: xs[..2].to_vec(),
+            xk_sum: Some(xs[2].weighted_sum_axis0(&w)),
+            top_weights: Some(w),
+        };
+        let out_std = elementwise(&std_jet, &Tanh);
+        let out_col = elementwise(&col_jet, &Tanh);
+        let diff = out_std.highest_sum().max_abs_diff(&out_col.highest_sum());
+        assert!(diff < 1e-12, "weighted collapse identity violated: {diff}");
+    }
+
     /// 2-jet of sin along one direction reproduces v^T H v = -sin(x)·v² sum.
     #[test]
     fn sin_second_directional_derivative() {
         let x0 = Tensor::new(vec![1, 2], vec![0.3, -0.7]);
         let v = Tensor::new(vec![1, 1, 2], vec![1.0, 2.0]);
-        let jet = JetStd::seed(&x0, &v, 2);
-        let out = elementwise_std(&jet, &Sin);
+        let jet = Jet::seed(&x0, &v, 2, Collapse::Standard);
+        let out = elementwise(&jet, &Sin);
         // elementwise sin: f2 = -sin(x)*v²
         let expect0 = -(0.3f64.sin()) * 1.0;
         let expect1 = -((-0.7f64).sin()) * 4.0;
@@ -207,13 +269,30 @@ mod tests {
         let dirs = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
         let w = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
         let bias = Tensor::new(vec![3], vec![0.5, 0.5, 0.5]);
-        let jet = JetStd::seed(&x0, &dirs, 2);
-        let out = linear_std(&jet, &w, Some(&bias));
+        let jet = Jet::seed(&x0, &dirs, 2, Collapse::Standard);
+        let out = linear(&jet, &w, Some(&bias));
         assert_eq!(out.x0.data, vec![9.5, 12.5, 15.5]);
         // x1 channels = rows of W (no bias)
         assert_eq!(out.xs[0].index_axis0(0).data, vec![1., 2., 3.]);
         assert_eq!(out.xs[0].index_axis0(1).data, vec![4., 5., 6.]);
         // zero higher coefficients stay zero through a linear map
         assert!(out.xs[1].data.iter().all(|&z| z == 0.0));
+    }
+
+    /// Degenerate order-1 collapse: the summed tangent propagates alone.
+    #[test]
+    fn order1_collapse_is_summed_forward_mode() {
+        let x0 = Tensor::new(vec![1, 2], vec![0.4, -0.2]);
+        let dirs = Tensor::new(vec![3, 2], vec![1., 0., 0., 1., 2., -1.]);
+        let std_jet = Jet::seed(&x0, &dirs, 1, Collapse::Standard);
+        let col_jet = Jet::seed(&x0, &dirs, 1, Collapse::Collapsed);
+        assert_eq!(col_jet.order(), 1);
+        let out_std = elementwise(&linear(&std_jet, &basis2(), None), &Tanh);
+        let out_col = elementwise(&linear(&col_jet, &basis2(), None), &Tanh);
+        assert!(out_std.highest_sum().max_abs_diff(&out_col.highest_sum()) < 1e-14);
+    }
+
+    fn basis2() -> Tensor {
+        Tensor::new(vec![2, 2], vec![0.7, -0.3, 0.2, 1.1])
     }
 }

@@ -3,7 +3,8 @@
 //! * [`tensor`] — minimal dense tensors with leading-axis broadcasting.
 //! * [`partitions`] — integer partitions and the Faà di Bruno ν(σ).
 //! * [`rules`] — elementwise derivative families + generic degree-k terms.
-//! * [`jet`] — standard (eq. D13) and collapsed (eq. D14) jet bundles.
+//! * [`jet`] — the unified jet bundle ([`jet::Collapse`] selects standard
+//!   eq. D13 vs collapsed eq. D14 propagation of the highest coefficient).
 //! * [`graph`], [`trace`], [`interp`] — the computational-graph IR, the
 //!   vanilla-Taylor tracer and the reference interpreter.
 //! * [`rewrite`] — the §C collapse passes (replicate-push-down,
@@ -20,5 +21,5 @@ pub mod rules;
 pub mod tensor;
 pub mod trace;
 
-pub use jet::{JetCol, JetStd};
+pub use jet::{Collapse, Jet};
 pub use tensor::Tensor;

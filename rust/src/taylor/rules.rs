@@ -91,27 +91,34 @@ impl DerivFamily for Exp {
 /// `coeffs[j-1]` is the degree-j input channel tensor; returns the sum of
 /// ν(σ)·φ^(|σ|)·∏_{s∈σ} x_s over all non-trivial partitions (None if k = 1,
 /// which has only the trivial partition).
-pub fn nonlinear_terms(
-    derivs: &[Tensor],
-    coeffs: &[Tensor],
-    k: usize,
-) -> Option<Tensor> {
-    let mut acc: Option<Tensor> = None;
+pub fn nonlinear_terms(derivs: &[Tensor], coeffs: &[Tensor], k: usize) -> Option<Tensor> {
     let triv = trivial(k);
+    let mut acc: Option<Tensor> = None;
+    // One reusable buffer in the channels' (widest) shape: the former
+    // per-factor `mul` chain allocated a fresh [R, B, D] tensor per factor
+    // per partition term; mul_into/mul_assign reuse `scratch` instead.
+    let mut scratch: Option<Tensor> = None;
     for sigma in partitions(k) {
         if sigma == triv {
             continue;
         }
         let d = &derivs[sigma.len()];
-        let mut term = d.clone();
-        for &s in &sigma {
-            term = term.mul(&coeffs[s - 1]);
+        let scratch = scratch.get_or_insert_with(|| Tensor::zeros(&coeffs[sigma[0] - 1].shape));
+        d.mul_into(&coeffs[sigma[0] - 1], scratch);
+        for &s in &sigma[1..] {
+            scratch.mul_assign(&coeffs[s - 1]);
         }
-        let term = term.scale(nu(&sigma) as f64);
-        acc = Some(match acc {
-            Some(a) => a.add(&term),
-            None => term,
-        });
+        let nu_s = nu(&sigma) as f64;
+        match &mut acc {
+            Some(a) => a.add_scaled_assign(scratch, nu_s),
+            None => {
+                let mut t = scratch.clone();
+                if nu_s != 1.0 {
+                    t.scale_assign(nu_s);
+                }
+                acc = Some(t);
+            }
+        }
     }
     acc
 }

@@ -109,6 +109,104 @@ impl Tensor {
         self.zip(other, |a, b| a + b)
     }
 
+    /// In-place elementwise combine: `other` must have self's shape or a
+    /// suffix of it (it is repeated along the extra leading axes).  The
+    /// in-place twin of [`Tensor::zip`] for the jet hot loops — no fresh
+    /// allocation per combine.
+    fn zip_assign(&mut self, other: &Tensor, f: impl Fn(&mut f64, f64)) {
+        assert!(
+            is_suffix(&other.shape, &self.shape),
+            "cannot assign-broadcast {:?} into {:?}",
+            other.shape,
+            self.shape
+        );
+        if self.shape == other.shape {
+            for (a, &b) in self.data.iter_mut().zip(&other.data) {
+                f(a, b);
+            }
+            return;
+        }
+        let n = other.data.len().max(1);
+        for (i, a) in self.data.iter_mut().enumerate() {
+            f(a, other.data[i % n]);
+        }
+    }
+
+    /// `self += other` (suffix broadcast, in place).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        self.zip_assign(other, |a, b| *a += b);
+    }
+
+    /// `self *= other` (suffix broadcast, in place).
+    pub fn mul_assign(&mut self, other: &Tensor) {
+        self.zip_assign(other, |a, b| *a *= b);
+    }
+
+    /// `self += s · other` (suffix broadcast, in place).
+    pub fn add_scaled_assign(&mut self, other: &Tensor, s: f64) {
+        self.zip_assign(other, |a, b| *a += s * b);
+    }
+
+    /// `self *= s` in place.
+    pub fn scale_assign(&mut self, s: f64) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Write `self ⊙ other` into `out` without allocating.  `out` must
+    /// already have the broadcast result shape (the higher-rank operand's
+    /// — rank, not element count: a `[1, B, D]` single-direction channel
+    /// and a `[B, D]` derivative have equal lengths but broadcast to the
+    /// rank-3 shape).
+    pub fn mul_into(&self, other: &Tensor, out: &mut Tensor) {
+        let (big, small) = if self.rank() >= other.rank() {
+            (&self.shape, &other.shape)
+        } else {
+            (&other.shape, &self.shape)
+        };
+        assert!(
+            is_suffix(small, big),
+            "incompatible shapes {:?} vs {:?}",
+            self.shape,
+            other.shape
+        );
+        assert_eq!(&out.shape, big, "mul_into output must have the broadcast shape");
+        if self.data.len() == other.data.len() {
+            for ((o, &a), &b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
+                *o = a * b;
+            }
+            return;
+        }
+        // One operand repeats: walk the output in chunks of the smaller
+        // operand's length (the larger is aligned with the output), so the
+        // hot loop is a straight slice multiply with no per-element modulo.
+        let (long, short) = if self.data.len() >= other.data.len() {
+            (&self.data, &other.data)
+        } else {
+            (&other.data, &self.data)
+        };
+        let n = short.len().max(1);
+        for (ochunk, lchunk) in out.data.chunks_mut(n).zip(long.chunks(n)) {
+            for ((o, &a), &b) in ochunk.iter_mut().zip(lchunk).zip(short) {
+                *o = a * b;
+            }
+        }
+    }
+
+    /// Transpose a 2-D tensor: `[A, B] -> [B, A]`.
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2, "transpose2 needs a 2-D tensor");
+        let (a, b) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[b, a]);
+        for i in 0..a {
+            for j in 0..b {
+                out.data[j * a + i] = self.data[i * b + j];
+            }
+        }
+        out
+    }
+
     pub fn sub(&self, other: &Tensor) -> Tensor {
         self.zip(other, |a, b| a - b)
     }
@@ -167,6 +265,39 @@ impl Tensor {
             }
         }
         debug_assert_eq!(r * rest, self.data.len());
+        Tensor { shape: self.shape[1..].to_vec(), data: out }
+    }
+
+    /// Weighted sum over the leading axis: `[R, ...] -> [...]`, Σ_r w[r]·self[r].
+    /// Zero weights are skipped (plan bundles zero out directions that only
+    /// feed lower-degree reads).
+    pub fn weighted_sum_axis0(&self, w: &[f64]) -> Tensor {
+        assert!(self.rank() >= 1, "weighted_sum_axis0 needs rank >= 1");
+        assert_eq!(self.shape[0], w.len(), "one weight per leading-axis row");
+        let rest: usize = self.shape[1..].iter().product();
+        let mut out = vec![0.0; rest];
+        for (chunk, &wr) in self.data.chunks(rest.max(1)).zip(w) {
+            if wr == 0.0 {
+                continue;
+            }
+            for (o, &v) in out.iter_mut().zip(chunk) {
+                *o += wr * v;
+            }
+        }
+        Tensor { shape: self.shape[1..].to_vec(), data: out }
+    }
+
+    /// Sum rows `[start, start + len)` of the leading axis: `[R, ...] -> [...]`.
+    pub fn sum_axis0_range(&self, start: usize, len: usize) -> Tensor {
+        assert!(self.rank() >= 1, "sum_axis0_range needs rank >= 1");
+        assert!(start + len <= self.shape[0], "row range out of bounds");
+        let rest: usize = self.shape[1..].iter().product();
+        let mut out = vec![0.0; rest];
+        for r in start..start + len {
+            for (o, &v) in out.iter_mut().zip(&self.data[r * rest..(r + 1) * rest]) {
+                *o += v;
+            }
+        }
         Tensor { shape: self.shape[1..].to_vec(), data: out }
     }
 
@@ -276,5 +407,63 @@ mod tests {
         let a = Tensor::zeros(&[2, 3]);
         let b = Tensor::zeros(&[4]);
         a.add(&b);
+    }
+
+    #[test]
+    fn in_place_ops_match_allocating_twins() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2], vec![10., 100.]);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        assert_eq!(c.data, a.add(&b).data);
+        let mut d = a.clone();
+        d.mul_assign(&b);
+        assert_eq!(d.data, a.mul(&b).data);
+        let mut e = a.clone();
+        e.add_scaled_assign(&b, 0.5);
+        assert_eq!(e.data, a.add(&b.scale(0.5)).data);
+        let mut f = a.clone();
+        f.scale_assign(3.0);
+        assert_eq!(f.data, a.scale(3.0).data);
+    }
+
+    #[test]
+    fn mul_into_broadcasts_either_way() {
+        let big = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let small = Tensor::new(vec![2], vec![10., 100.]);
+        let mut out = Tensor::zeros(&[2, 2]);
+        small.mul_into(&big, &mut out);
+        assert_eq!(out.data, big.mul(&small).data);
+        big.mul_into(&small, &mut out);
+        assert_eq!(out.data, big.mul(&small).data);
+        big.mul_into(&big, &mut out);
+        assert_eq!(out.data, vec![1., 4., 9., 16.]);
+        // Equal element counts but different ranks: a single-direction
+        // channel [1, 2] against a [2] derivative broadcasts to [1, 2].
+        let chan = Tensor::new(vec![1, 2], vec![3., 5.]);
+        let deriv = Tensor::new(vec![2], vec![2., 4.]);
+        let mut out1 = Tensor::zeros(&[1, 2]);
+        deriv.mul_into(&chan, &mut out1);
+        assert_eq!(out1.data, vec![6., 20.]);
+    }
+
+    #[test]
+    fn transpose2_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose2();
+        assert_eq!(tt.shape, vec![3, 2]);
+        assert_eq!(tt.data, vec![1., 4., 2., 5., 3., 6.]);
+        assert_eq!(tt.transpose2(), t);
+    }
+
+    #[test]
+    fn weighted_and_range_sums() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let w = t.weighted_sum_axis0(&[1.0, 0.0, -2.0]);
+        assert_eq!(w.data, vec![1. - 10., 2. - 12.]);
+        assert_eq!(t.weighted_sum_axis0(&[1.0; 3]).data, t.sum_axis0().data);
+        let r = t.sum_axis0_range(1, 2);
+        assert_eq!(r.data, vec![8., 10.]);
+        assert_eq!(t.sum_axis0_range(0, 3).data, t.sum_axis0().data);
     }
 }

@@ -168,7 +168,8 @@ mod tests {
         let out = eval(&g, &[x0.clone(), dirs.clone()]).unwrap();
 
         // Engine-level collapsed laplacian as oracle.
-        let (f0, lap) = crate::operators::laplacian_native(&mlp, &x0, true);
+        let (f0, lap) =
+            crate::operators::laplacian_native(&mlp, &x0, crate::taylor::jet::Collapse::Collapsed);
         assert!(out[0].max_abs_diff(&f0) < 1e-10);
         assert!(out[1].max_abs_diff(&lap) < 1e-10);
     }

@@ -9,6 +9,7 @@
 use ctaylor::mlp::Mlp;
 use ctaylor::operators;
 use ctaylor::runtime::{HostTensor, Registry, RuntimeClient};
+use ctaylor::taylor::jet::Collapse;
 use ctaylor::taylor::tensor::Tensor;
 use ctaylor::util::prng::Rng;
 
@@ -52,7 +53,7 @@ fn native_engine_agrees_with_aot_artifact() {
             HostTensor::new(vec![4, meta.dim], xdata),
         ])
         .unwrap();
-    let (f0_native, lap_native) = operators::laplacian_native(&mlp, &x_native, true);
+    let (f0_native, lap_native) = operators::laplacian_native(&mlp, &x_native, Collapse::Collapsed);
 
     for b in 0..4 {
         let (a, c) = (out[0].data[b] as f64, f0_native.data[b]);
@@ -95,7 +96,7 @@ fn biharmonic_native_agrees_with_aot() {
             HostTensor::new(vec![2, meta.dim], xdata),
         ])
         .unwrap();
-    let (_, bih_native) = operators::biharmonic_native(&mlp, &x_native, true);
+    let (_, bih_native) = operators::biharmonic_native(&mlp, &x_native, Collapse::Collapsed);
     for b in 0..2 {
         let (a, c) = (out[1].data[b] as f64, bih_native.data[b]);
         // 4th derivatives in f32 vs f64: looser tolerance.

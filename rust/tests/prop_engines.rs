@@ -1,10 +1,13 @@
-//! Cross-engine property tests: the three native implementations (nested
-//! first-order AD, standard Taylor, collapsed Taylor) must agree on every
-//! operator for random networks, points and directions.
+//! Cross-engine property tests: the native implementations (nested
+//! first-order AD, and the unified Taylor jet engine in standard and
+//! collapsed form) must agree on every operator for random networks,
+//! points and directions — and every `OperatorSpec` preset must satisfy
+//! the collapse identity plus a finite-difference oracle.
 
 use ctaylor::mlp::Mlp;
 use ctaylor::nested;
-use ctaylor::operators::{self, stochastic};
+use ctaylor::operators::{self, plan, stochastic, FamilySpec, OperatorSpec};
+use ctaylor::taylor::jet::Collapse;
 use ctaylor::taylor::tensor::Tensor;
 use ctaylor::util::prng::Rng;
 
@@ -16,6 +19,24 @@ fn random_mlp(rng: &mut Rng, dim: usize) -> Mlp {
     Mlp::init(rng, dim, &widths, batch)
 }
 
+fn random_diag_sigma(rng: &mut Rng, dim: usize) -> Tensor {
+    let mut sigma = Tensor::zeros(&[dim, dim]);
+    for i in 0..dim {
+        sigma.data[i * dim + i] = 0.5 + rng.uniform();
+    }
+    sigma
+}
+
+/// Every exact OperatorSpec preset at a given dimension.
+fn exact_presets(rng: &mut Rng, dim: usize) -> Vec<OperatorSpec> {
+    vec![
+        OperatorSpec::laplacian(dim),
+        OperatorSpec::weighted_laplacian(&random_diag_sigma(rng, dim)),
+        OperatorSpec::biharmonic(dim),
+        OperatorSpec::helmholtz_preset(dim),
+    ]
+}
+
 #[test]
 fn laplacian_three_way_agreement() {
     let mut rng = Rng::new(1);
@@ -23,8 +44,8 @@ fn laplacian_three_way_agreement() {
         let dim = 2 + rng.below(5);
         let mlp = random_mlp(&mut rng, dim);
         let x = mlp.random_input(&mut rng);
-        let (_, std_) = operators::laplacian_native(&mlp, &x, false);
-        let (_, col) = operators::laplacian_native(&mlp, &x, true);
+        let (_, std_) = operators::laplacian_native(&mlp, &x, Collapse::Standard);
+        let (_, col) = operators::laplacian_native(&mlp, &x, Collapse::Collapsed);
         let nst = nested::laplacian(&mlp, &x, None, 1.0);
         assert!(std_.max_abs_diff(&col) < 1e-10, "case {case}: std vs col");
         assert!(std_.max_abs_diff(&nst) < 1e-9, "case {case}: std vs nested");
@@ -44,8 +65,8 @@ fn weighted_laplacian_reduces_and_scales() {
         for i in 0..dim {
             sigma.data[i * dim + i] = c;
         }
-        let (_, wlap) = operators::weighted_laplacian_native(&mlp, &x, &sigma, true);
-        let (_, lap) = operators::laplacian_native(&mlp, &x, true);
+        let (_, wlap) = operators::weighted_laplacian_native(&mlp, &x, &sigma, Collapse::Collapsed);
+        let (_, lap) = operators::laplacian_native(&mlp, &x, Collapse::Collapsed);
         assert!(wlap.max_abs_diff(&lap.scale(c * c)) < 1e-9);
     }
 }
@@ -64,11 +85,11 @@ fn stochastic_modes_agree_per_draw() {
             s,
             dim,
         );
-        let (_, a) = operators::stochastic_laplacian_native(&mlp, &x, &dirs, false);
-        let (_, b) = operators::stochastic_laplacian_native(&mlp, &x, &dirs, true);
+        let (_, a) = operators::stochastic_laplacian_native(&mlp, &x, &dirs, Collapse::Standard);
+        let (_, b) = operators::stochastic_laplacian_native(&mlp, &x, &dirs, Collapse::Collapsed);
         assert!(a.max_abs_diff(&b) < 1e-10);
-        let (_, c) = operators::stochastic_biharmonic_native(&mlp, &x, &dirs, false);
-        let (_, d) = operators::stochastic_biharmonic_native(&mlp, &x, &dirs, true);
+        let (_, c) = operators::stochastic_biharmonic_native(&mlp, &x, &dirs, Collapse::Standard);
+        let (_, d) = operators::stochastic_biharmonic_native(&mlp, &x, &dirs, Collapse::Collapsed);
         assert!(c.max_abs_diff(&d) < 1e-8);
     }
 }
@@ -80,7 +101,7 @@ fn biharmonic_interpolation_vs_nested_tvp() {
         let dim = 2 + rng.below(3);
         let mlp = random_mlp(&mut rng, dim);
         let x = mlp.random_input(&mut rng);
-        let (_, taylor_) = operators::biharmonic_native(&mlp, &x, true);
+        let (_, taylor_) = operators::biharmonic_native(&mlp, &x, Collapse::Collapsed);
         let tvp = nested::biharmonic_tvp(&mlp, &x);
         let scale = tvp.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
         assert!(
@@ -97,7 +118,7 @@ fn laplacian_of_quadratic_is_exact_trace() {
     let mut rng = Rng::new(5);
     let mlp = Mlp::init(&mut rng, 4, &[1], 3); // purely linear: Δf = 0
     let x = mlp.random_input(&mut rng);
-    let (_, lap) = operators::laplacian_native(&mlp, &x, true);
+    let (_, lap) = operators::laplacian_native(&mlp, &x, Collapse::Collapsed);
     assert!(lap.data.iter().all(|v| v.abs() < 1e-12));
     let nst = nested::laplacian(&mlp, &x, None, 1.0);
     assert!(nst.data.iter().all(|v| v.abs() < 1e-12));
@@ -106,7 +127,7 @@ fn laplacian_of_quadratic_is_exact_trace() {
 #[test]
 fn vector_count_model_matches_bundle_sizes() {
     use ctaylor::taylor::count;
-    use ctaylor::taylor::jet::{JetCol, JetStd};
+    use ctaylor::taylor::jet::Jet;
 
     let mut rng = Rng::new(6);
     for _ in 0..10 {
@@ -115,12 +136,179 @@ fn vector_count_model_matches_bundle_sizes() {
         let k = 2 + rng.below(3);
         let x0 = Tensor::zeros(&[2, dim]);
         let dirs = Tensor::zeros(&[r, 2, dim]);
-        let s = JetStd::seed(&x0, &dirs, k);
-        let c = JetCol::seed(&x0, &dirs, k);
+        let s = Jet::seed(&x0, &dirs, k, Collapse::Standard);
+        let c = Jet::seed(&x0, &dirs, k, Collapse::Collapsed);
         // channel count = 1 (x0) + K*R (std) vs 1 + (K-1)*R + 1 (collapsed)
         let std_channels = 1 + s.xs.len() * r;
         let col_channels = 1 + c.xs.len() * r + 1;
         assert_eq!(std_channels, count::vectors_standard(k, r));
         assert_eq!(col_channels, count::vectors_collapsed(k, r));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan subsystem
+// ---------------------------------------------------------------------------
+
+/// k-th directional derivative ∂^k f[v^⊗k] by central differences along
+/// the *normalized* direction (scaled back by |v|^k afterwards, so large
+/// plan-premultiplied directions don't blow up the step size).
+fn fd_directional(mlp: &Mlp, x0: &Tensor, v: &[f64], k: usize) -> Tensor {
+    let norm = v.iter().map(|a| a * a).sum::<f64>().sqrt();
+    assert!(norm > 0.0, "FD oracle needs a nonzero direction");
+    let (b, d) = (x0.shape[0], x0.shape[1]);
+    // Balance truncation (h²) against roundoff (ε/h^k) per stencil order.
+    let h = match k {
+        1 | 2 => 1e-4,
+        _ => 5e-3,
+    };
+    let f = |steps: f64| {
+        let mut xq = x0.clone();
+        for bi in 0..b {
+            for di in 0..d {
+                xq.data[bi * d + di] += steps * h * v[di] / norm;
+            }
+        }
+        mlp.apply(&xq)
+    };
+    let out = match k {
+        1 => f(1.0).sub(&f(-1.0)).scale(1.0 / (2.0 * h)),
+        2 => f(1.0).add(&f(-1.0)).sub(&f(0.0).scale(2.0)).scale(1.0 / (h * h)),
+        4 => f(2.0)
+            .add(&f(-2.0))
+            .sub(&f(1.0).add(&f(-1.0)).scale(4.0))
+            .add(&f(0.0).scale(6.0))
+            .scale(1.0 / (h * h * h * h)),
+        _ => panic!("unsupported FD degree {k}"),
+    };
+    out.scale(norm.powi(k as i32))
+}
+
+/// Finite-difference oracle for a whole spec: c₀·f plus every family's
+/// weighted directional-derivative sum, direction by direction.
+fn fd_spec(mlp: &Mlp, x0: &Tensor, spec: &OperatorSpec) -> Tensor {
+    let mut acc = mlp.apply(x0).scale(spec.c0);
+    for fam in &spec.families {
+        let d = fam.dirs.shape[1];
+        for r in 0..fam.dirs.shape[0] {
+            let v = &fam.dirs.data[r * d..(r + 1) * d];
+            acc = acc.add(&fd_directional(mlp, x0, v, fam.degree).scale(fam.weight));
+        }
+    }
+    acc
+}
+
+/// Collapse identity for every OperatorSpec preset: standard and collapsed
+/// evaluation of the compiled single-bundle plan agree to < 1e-9.
+#[test]
+fn spec_presets_collapse_identity() {
+    let mut rng = Rng::new(7);
+    for case in 0..6 {
+        let dim = 2 + rng.below(3);
+        let mlp = random_mlp(&mut rng, dim);
+        let x = mlp.random_input(&mut rng);
+        for spec in exact_presets(&mut rng, dim) {
+            let compiled = spec.compile();
+            let (f_s, std_) = plan::apply(&mlp, &x, &compiled, Collapse::Standard);
+            let (f_c, col) = plan::apply(&mlp, &x, &compiled, Collapse::Collapsed);
+            assert!(f_s.max_abs_diff(&f_c) < 1e-12, "case {case} {}: f0", spec.name);
+            assert!(
+                std_.max_abs_diff(&col) < 1e-9,
+                "case {case} {}: standard vs collapsed",
+                spec.name
+            );
+        }
+    }
+}
+
+/// Finite-difference oracle for every OperatorSpec preset.
+#[test]
+fn spec_presets_match_finite_differences() {
+    let mut rng = Rng::new(8);
+    for case in 0..4 {
+        let dim = 2 + rng.below(2);
+        let mlp = random_mlp(&mut rng, dim);
+        let x = mlp.random_input(&mut rng);
+        for spec in exact_presets(&mut rng, dim) {
+            let (_, got) = plan::apply(&mlp, &x, &spec.compile(), Collapse::Collapsed);
+            let fd = fd_spec(&mlp, &x, &spec);
+            // 4th-order FD stencils are noisier than 2nd-order ones.
+            let tol = if spec.order() >= 4 { 2e-2 } else { 1e-4 };
+            for i in 0..fd.len() {
+                assert!(
+                    (got.data[i] - fd.data[i]).abs() < tol * (1.0 + fd.data[i].abs()),
+                    "case {case} {}: jet {} vs fd {}",
+                    spec.name,
+                    got.data[i],
+                    fd.data[i]
+                );
+            }
+        }
+    }
+}
+
+/// A composed spec with a *negative* family weight (signed collapse) must
+/// match the FD oracle too — this exercises the ±1 top-weight path.
+#[test]
+fn signed_composed_spec_matches_fd() {
+    let mut rng = Rng::new(9);
+    let dim = 3;
+    let mlp = random_mlp(&mut rng, dim);
+    let x = mlp.random_input(&mut rng);
+    let mut aniso = Tensor::zeros(&[2, dim]);
+    for v in aniso.data.iter_mut() {
+        *v = rng.normal();
+    }
+    let spec = OperatorSpec::new(
+        "helmholtz_aniso",
+        1.5,
+        vec![
+            FamilySpec { weight: 1.0, degree: 2, dirs: operators::basis(dim) },
+            FamilySpec { weight: -0.6, degree: 2, dirs: aniso },
+        ],
+    )
+    .unwrap();
+    let compiled = spec.compile();
+    let (_, std_) = plan::apply(&mlp, &x, &compiled, Collapse::Standard);
+    let (_, col) = plan::apply(&mlp, &x, &compiled, Collapse::Collapsed);
+    assert!(std_.max_abs_diff(&col) < 1e-9, "signed collapse identity");
+    let fd = fd_spec(&mlp, &x, &spec);
+    for i in 0..fd.len() {
+        assert!(
+            (col.data[i] - fd.data[i]).abs() < 1e-4 * (1.0 + fd.data[i].abs()),
+            "signed spec: jet {} vs fd {}",
+            col.data[i],
+            fd.data[i]
+        );
+    }
+}
+
+/// Stochastic unbiasedness of the mixed-order Helmholtz-type spec:
+/// E[c₀·f + (c₂/S)·Σ_s v_sᵀHv_s] = c₀·f + c₂·Δf over Rademacher draws.
+#[test]
+fn mixed_order_stochastic_spec_is_unbiased() {
+    let mut rng = Rng::new(10);
+    let dim = 3;
+    let mlp = random_mlp(&mut rng, dim);
+    let x = mlp.random_input(&mut rng);
+    let (c0, c2) = (2.25, 1.0);
+    let (_, exact) =
+        plan::apply(&mlp, &x, &OperatorSpec::helmholtz(dim, c0, c2).compile(), Collapse::Collapsed);
+    let trials = 3000;
+    let s = 4;
+    let mut mean = Tensor::zeros(&exact.shape);
+    for _ in 0..trials {
+        let dirs = stochastic::sample_dirs(&mut rng, stochastic::DirectionDist::Rademacher, s, dim);
+        let spec = OperatorSpec::stochastic_helmholtz(c0, c2, &dirs);
+        let (_, est) = plan::apply(&mlp, &x, &spec.compile(), Collapse::Collapsed);
+        mean.add_scaled_assign(&est, 1.0 / trials as f64);
+    }
+    for i in 0..exact.len() {
+        assert!(
+            (mean.data[i] - exact.data[i]).abs() < 0.05 * (1.0 + exact.data[i].abs()),
+            "stochastic mean {} vs exact {}",
+            mean.data[i],
+            exact.data[i]
+        );
     }
 }
