@@ -21,7 +21,7 @@ use crate::taylor::count;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
 use report::{jobj, save_json, save_text, table, with_ratio};
-use sweep::{run_sweep, Sweep};
+use sweep::{run_sweep, Sweep, MEM_COUNT_MODEL, MEM_GRAPH_HLO, MEM_HLO};
 
 pub const METHODS: [&str; 3] = ["nested", "standard", "collapsed"];
 pub const OPS: [&str; 3] = ["laplacian", "weighted_laplacian", "biharmonic"];
@@ -148,7 +148,7 @@ pub fn run_fig5_table1(registry: &Registry, reps: usize) -> Result<String> {
             out.push('\n');
         }
     }
-    if all.iter().any(|s| s.mem_source() == "count-model") {
+    if all.iter().any(|s| s.mem_source() == MEM_COUNT_MODEL) {
         out.push_str(
             "note: memory rows use the analytic propagated-vector proxy for artifacts \
              without HLO on disk (count-model), not a measurement.\n",
@@ -191,10 +191,10 @@ pub fn run_table_f2(registry: &Registry, reps: usize) -> Result<String> {
             let s_col = run_sweep(&client, registry, op, "collapsed", mode, reps, 3)?;
             let time_ratio = s_col.ms_per_x() / s_std.ms_per_x();
             let mem_ratio = s_col.mib_diff_per_x() / s_std.mib_diff_per_x();
-            let mem_source = if s_std.mem_source() == "hlo" && s_col.mem_source() == "hlo" {
-                "hlo"
-            } else {
-                "count-model"
+            let mem_source = match (s_std.mem_source(), s_col.mem_source()) {
+                (MEM_HLO, MEM_HLO) => MEM_HLO,
+                (a, b) if a != MEM_COUNT_MODEL && b != MEM_COUNT_MODEL => MEM_GRAPH_HLO,
+                _ => MEM_COUNT_MODEL,
             };
             rows.push(vec![
                 mode.to_string(),
@@ -221,8 +221,9 @@ pub fn run_table_f2(registry: &Registry, reps: usize) -> Result<String> {
         &rows,
     ));
     out.push_str(
-        "\nmem [count-model] rows use the analytic propagated-vector proxy (no HLO on disk):\n\
-         their mem ratio restates the theory column rather than measuring it.\n",
+        "\nmem provenance: [hlo] analyzes on-disk AOT text; [graph-hlo] analyzes HLO emitted\n\
+         from the route's traced+collapsed graph (a real instruction-level analysis);\n\
+         [count-model] restates the analytic theory column rather than measuring it.\n",
     );
     save_json(&results_dir(), "table_f2", &Json::Arr(json_rows))?;
     save_text(&results_dir(), "table_f2", &out)?;
@@ -266,7 +267,7 @@ pub fn run_figg9_tableg3(registry: &Registry, reps: usize) -> Result<String> {
         ));
         out.push('\n');
     }
-    if all.iter().any(|s| s.mem_source() == "count-model") {
+    if all.iter().any(|s| s.mem_source() == MEM_COUNT_MODEL) {
         out.push_str(
             "note: memory rows use the analytic propagated-vector proxy for artifacts \
              without HLO on disk (count-model), not a measurement.\n",
@@ -437,6 +438,168 @@ pub fn run_native_ablation(reps: usize) -> Result<String> {
             ("biharmonic_per_family_ms", t_bih_per_family.min * 1e3),
             ("biharmonic_push_dev", bih_dev),
         ]),
+    )?;
+    Ok(out)
+}
+
+/// Graph-compiler ablation on the fig1 workload (laplacian D=16, 32-32-1):
+/// the standard trace and the §C-collapsed graph through the reference
+/// interpreter vs the buffer-planned VM, against the jet engine — the
+/// perf trajectory of the compiler win.
+pub fn run_graph_ablation(reps: usize) -> Result<String> {
+    use crate::mlp::Mlp;
+    use crate::operators::{plan, OperatorSpec};
+    use crate::taylor::jet::Collapse;
+    use crate::taylor::rewrite::collapse;
+    use crate::taylor::trace::{build_plan_jet_std, TAGGED_SLOTS};
+    use crate::taylor::{interp, program};
+    use crate::util::stats::time_fn;
+
+    // Mirrors the builtin fig1 laplacian artifacts (D = 16, 32-32-1).
+    let (dim, batch) = (16, 8);
+    let mut rng = Rng::new(17);
+    let mlp = Mlp::init(&mut rng, dim, &[32, 32, 1], batch);
+    let x = mlp.random_input(&mut rng);
+    let spec = OperatorSpec::laplacian(dim);
+    let oplan = spec.compile();
+    let num_dirs = oplan.dirs.shape[0];
+
+    let g_std = build_plan_jet_std(&mlp, &oplan, batch);
+    let g_col = collapse(&g_std, TAGGED_SLOTS, num_dirs);
+    let shapes = vec![vec![batch, dim], vec![num_dirs, batch, dim]];
+    let p_std = program::compile(&g_std, &shapes)?;
+    let p_col = program::compile(&g_col, &shapes)?;
+
+    // Directions broadcast over the batch, exactly as the runtime feeds
+    // the VM.
+    let dirs = oplan.dirs.broadcast_rows(batch);
+    let inputs = [x.clone(), dirs];
+
+    // All five paths must agree before timing anything.
+    let oracle = plan::apply(&mlp, &x, &oplan, Collapse::Collapsed);
+    let scale = oracle.1.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for out in [
+        interp::eval(&g_std, &inputs)?,
+        interp::eval(&g_col, &inputs)?,
+        p_std.execute(&inputs)?,
+        p_col.execute(&inputs)?,
+    ] {
+        anyhow::ensure!(out[0].max_abs_diff(&oracle.0) < 1e-10, "f0 deviates");
+        anyhow::ensure!(out[1].max_abs_diff(&oracle.1) < 1e-10 * scale, "operator deviates");
+    }
+
+    let t_interp_std = time_fn(
+        || {
+            std::hint::black_box(interp::eval(&g_std, &inputs).unwrap());
+        },
+        reps,
+    );
+    let t_interp_col = time_fn(
+        || {
+            std::hint::black_box(interp::eval(&g_col, &inputs).unwrap());
+        },
+        reps,
+    );
+    let t_vm_std = time_fn(
+        || {
+            std::hint::black_box(p_std.execute(&inputs).unwrap());
+        },
+        reps,
+    );
+    let t_vm_col = time_fn(
+        || {
+            std::hint::black_box(p_col.execute(&inputs).unwrap());
+        },
+        reps,
+    );
+    let t_jet = time_fn(
+        || {
+            std::hint::black_box(plan::apply(&mlp, &x, &oplan, Collapse::Collapsed));
+        },
+        reps,
+    );
+
+    let cost_std = g_std.propagation_cost(TAGGED_SLOTS, num_dirs);
+    let cost_col = g_col.propagation_cost(TAGGED_SLOTS, num_dirs);
+    let mut out = String::from("# Graph-compiler ablation (laplacian, D=16, B=8, 32-32-1)\n\n");
+    let rows = vec![
+        vec![
+            "interp std-trace".into(),
+            format!("{:.3}", t_interp_std.min * 1e3),
+            format!("{cost_std}"),
+            "-".into(),
+        ],
+        vec![
+            "interp §C-collapsed".into(),
+            format!("{:.3}", t_interp_col.min * 1e3),
+            format!("{cost_col}"),
+            "-".into(),
+        ],
+        vec![
+            "VM std-trace".into(),
+            format!("{:.3}", t_vm_std.min * 1e3),
+            format!("{cost_std}"),
+            format!("{} regs / {} instrs", p_std.num_regs(), p_std.instrs.len()),
+        ],
+        vec![
+            "VM §C-collapsed".into(),
+            format!("{:.3}", t_vm_col.min * 1e3),
+            format!("{cost_col}"),
+            format!("{} regs / {} instrs", p_col.num_regs(), p_col.instrs.len()),
+        ],
+        vec![
+            "jet engine (oracle)".into(),
+            format!("{:.3}", t_jet.min * 1e3),
+            "-".into(),
+            "-".into(),
+        ],
+    ];
+    out.push_str(&table(&["executor", "time [ms]", "propagation cost", "buffer plan"], &rows));
+    out.push_str(&format!(
+        "\nVM-collapsed vs interp-collapsed: x{:.2}; vs jet engine: x{:.2}\n",
+        t_interp_col.min / t_vm_col.min.max(1e-12),
+        t_jet.min / t_vm_col.min.max(1e-12),
+    ));
+    save_text(&results_dir(), "graph_ablation", &out)?;
+    save_json(
+        &results_dir(),
+        "graph_ablation",
+        &jobj(&[
+            ("interp_std_ms", t_interp_std.min * 1e3),
+            ("interp_col_ms", t_interp_col.min * 1e3),
+            ("vm_std_ms", t_vm_std.min * 1e3),
+            ("vm_col_ms", t_vm_col.min * 1e3),
+            ("jet_ms", t_jet.min * 1e3),
+            ("cost_std", cost_std as f64),
+            ("cost_col", cost_col as f64),
+            ("vm_col_regs", p_col.num_regs() as f64),
+            ("vm_col_instrs", p_col.instrs.len() as f64),
+            ("vm_col_flops", p_col.flops as f64),
+            ("vm_std_flops", p_std.flops as f64),
+            ("vm_col_arena_bytes", p_col.arena_bytes() as f64),
+            ("vm_std_arena_bytes", p_std.arena_bytes() as f64),
+        ]),
+    )?;
+    Ok(out)
+}
+
+/// The CI smoke bench: fig1 sweeps plus the graph-compiler ablation,
+/// combined into one `smoke.json` so BENCH_smoke tracks both the serving
+/// path and the compiler win per PR (reusing the fig1 build — no extra
+/// compile cost in the job).
+pub fn run_smoke(registry: &Registry, reps: usize) -> Result<String> {
+    let mut out = run_fig1(registry, reps)?;
+    out.push('\n');
+    out.push_str(&run_graph_ablation(reps.max(3))?);
+    let dir = results_dir();
+    let fig1 = std::fs::read_to_string(dir.join("fig1.json"))?;
+    let ablation = std::fs::read_to_string(dir.join("graph_ablation.json"))?;
+    let fig1_json = crate::util::json::parse(&fig1).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let abl_json = crate::util::json::parse(&ablation).map_err(|e| anyhow::anyhow!("{e}"))?;
+    save_json(
+        &dir,
+        "smoke",
+        &Json::obj(vec![("fig1", fig1_json), ("graph_ablation", abl_json)]),
     )?;
     Ok(out)
 }

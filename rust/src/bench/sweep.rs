@@ -5,11 +5,26 @@
 use anyhow::{bail, Result};
 
 use crate::hlo;
+use crate::mlp::Mlp;
+use crate::operators::OperatorSpec;
 use crate::runtime::{ArtifactMeta, DeviceBuffer, Registry, RuntimeClient};
 use crate::taylor::count;
+use crate::taylor::hlo_emit;
+use crate::taylor::jet::Collapse;
+use crate::taylor::rewrite;
+use crate::taylor::tensor::Tensor;
+use crate::taylor::trace;
+use crate::util::prng::Rng;
 use crate::util::stats::{linear_fit, time_fn, LinearFit};
 
 use super::workload;
+
+/// Where one point's memory/FLOP proxies come from: real on-disk HLO
+/// text, HLO emitted from the route's traced (+collapsed) graph, or the
+/// analytic count-model fallback.
+pub const MEM_HLO: &str = "hlo";
+pub const MEM_GRAPH_HLO: &str = "graph-hlo";
+pub const MEM_COUNT_MODEL: &str = "count-model";
 
 /// One measured point of a sweep.
 #[derive(Debug, Clone, Copy)]
@@ -24,9 +39,9 @@ pub struct SweepPoint {
     pub mem_nondiff: f64,
     /// Estimated FLOPs.
     pub flops: f64,
-    /// True when the memory/FLOP numbers come from real HLO analysis;
-    /// false when they are the count-model fallback (builtin artifacts).
-    pub mem_measured: bool,
+    /// Provenance of the memory/FLOP numbers ([`MEM_HLO`],
+    /// [`MEM_GRAPH_HLO`] or [`MEM_COUNT_MODEL`]).
+    pub mem_source: &'static str,
 }
 
 /// A measured family with its fitted slopes.
@@ -47,13 +62,17 @@ impl Sweep {
         self.time_fit.slope * 1e3
     }
 
-    /// "hlo" when every point's memory numbers come from HLO analysis,
-    /// "count-model" when any point used the analytic fallback.
+    /// Worst provenance across the family's points: "hlo" when every
+    /// point analyzed real HLO text, "graph-hlo" when the weakest source
+    /// was emitted-graph analysis, "count-model" when any point fell back
+    /// to the analytic model.
     pub fn mem_source(&self) -> &'static str {
-        if self.points.iter().all(|p| p.mem_measured) {
-            "hlo"
+        if self.points.iter().any(|p| p.mem_source == MEM_COUNT_MODEL) {
+            MEM_COUNT_MODEL
+        } else if self.points.iter().any(|p| p.mem_source == MEM_GRAPH_HLO) {
+            MEM_GRAPH_HLO
         } else {
-            "count-model"
+            MEM_HLO
         }
     }
 
@@ -65,6 +84,68 @@ impl Sweep {
     pub fn mib_nondiff_per_x(&self) -> f64 {
         self.mem_nondiff_fit.slope / (1024.0 * 1024.0)
     }
+}
+
+/// A representative `OperatorSpec` for one route, used only for graph
+/// shape/structure (σ is the identity, stochastic directions are dummy
+/// unit rows — memory/FLOP proxies depend on R and K, not on values).
+fn spec_for_proxy(meta: &ArtifactMeta) -> Option<OperatorSpec> {
+    use crate::operators::plan::{HELMHOLTZ_C0, HELMHOLTZ_C2};
+    let d = meta.dim;
+    if meta.mode == "stochastic" {
+        if meta.samples == 0 {
+            return None;
+        }
+        let dirs = Tensor::new(vec![meta.samples, d], vec![1.0; meta.samples * d]);
+        return match meta.op.as_str() {
+            "laplacian" | "weighted_laplacian" => Some(OperatorSpec::stochastic_laplacian(&dirs)),
+            "helmholtz" => {
+                Some(OperatorSpec::stochastic_helmholtz(HELMHOLTZ_C0, HELMHOLTZ_C2, &dirs))
+            }
+            "biharmonic" => Some(OperatorSpec::stochastic_biharmonic(&dirs)),
+            _ => None,
+        };
+    }
+    match meta.op.as_str() {
+        "laplacian" => Some(OperatorSpec::laplacian(d)),
+        "weighted_laplacian" => {
+            Some(OperatorSpec::weighted_laplacian(&crate::operators::basis(d)))
+        }
+        "helmholtz" => Some(OperatorSpec::helmholtz_preset(d)),
+        "biharmonic" => Some(OperatorSpec::biharmonic(d)),
+        _ => None,
+    }
+}
+
+/// Graph-derived HLO proxies for builtin Taylor-method artifacts: trace
+/// the route's plan, run the §C rewrites for the collapsed method, emit
+/// HLO text and push it through the real `hlo::analyzer` — the same
+/// analysis AOT artifacts get, instead of the count-model fallback.
+fn graph_proxy(meta: &ArtifactMeta) -> Option<(f64, f64, f64)> {
+    let mode = match meta.method.as_str() {
+        "standard" => Collapse::Standard,
+        "collapsed" => Collapse::Collapsed,
+        _ => return None, // nested AD has no Taylor graph
+    };
+    let spec = spec_for_proxy(meta)?;
+    let plan = spec.compile();
+    if plan.order == 0 || plan.dirs.shape[0] == 0 {
+        return None;
+    }
+    let batch = meta.batch.max(1);
+    // Weight values don't affect the proxies; a deterministic init keeps
+    // the traced constants well-formed.
+    let mlp = Mlp::init(&mut Rng::new(0), meta.dim, &meta.widths, batch);
+    let g = trace::build_plan_jet_std(&mlp, &plan, batch);
+    let g = match mode {
+        Collapse::Collapsed => rewrite::collapse(&g, trace::TAGGED_SLOTS, plan.dirs.shape[0]),
+        Collapse::Standard => g,
+    };
+    let shapes = vec![vec![batch, meta.dim], vec![plan.dirs.shape[0], batch, meta.dim]];
+    let text = hlo_emit::emit(&g, &shapes, &meta.name).ok()?;
+    let module = hlo::parser::parse_module(&text).ok()?;
+    let a = hlo::analyzer::analyze(&module).ok()?;
+    Some((a.total_intermediate_bytes as f64, a.peak_live_bytes as f64, a.flops as f64))
 }
 
 /// Analytic stand-in for the HLO proxies when an artifact ships no HLO
@@ -115,15 +196,24 @@ pub fn run_sweep(
             reps,
         );
         // Memory/FLOP proxies come from the artifact's HLO text when it
-        // exists; builtin (fileless) artifacts fall back to the paper's
-        // propagated-vector cost model instead of reporting zero.
+        // exists; builtin (fileless) Taylor artifacts analyze HLO emitted
+        // from their traced (+collapsed) graph; only routes without a
+        // Taylor graph (nested AD) fall back to the propagated-vector
+        // count model.
         let hlo_path = meta.hlo_path(&registry.dir);
-        let mem_measured = hlo_path.exists();
-        let (mem_diff, mem_nondiff, flops) = if mem_measured {
+        let (mem_diff, mem_nondiff, flops, mem_source) = if hlo_path.exists() {
             let a = hlo::analyze_file(&hlo_path)?;
-            (a.total_intermediate_bytes as f64, a.peak_live_bytes as f64, a.flops as f64)
+            (
+                a.total_intermediate_bytes as f64,
+                a.peak_live_bytes as f64,
+                a.flops as f64,
+                MEM_HLO,
+            )
+        } else if let Some((d, nd, fl)) = graph_proxy(meta) {
+            (d, nd, fl, MEM_GRAPH_HLO)
         } else {
-            analytic_proxy(meta)
+            let (d, nd, fl) = analytic_proxy(meta);
+            (d, nd, fl, MEM_COUNT_MODEL)
         };
         let x = if mode == "stochastic" { meta.samples } else { meta.batch };
         points.push(SweepPoint {
@@ -132,7 +222,7 @@ pub fn run_sweep(
             mem_diff,
             mem_nondiff,
             flops,
-            mem_measured,
+            mem_source,
         });
     }
     let xs: Vec<f64> = points.iter().map(|p| p.x).collect();

@@ -15,6 +15,10 @@ pub struct Metrics {
     pub padded_points: AtomicU64,
     pub errors: AtomicU64,
     pub rejected: AtomicU64,
+    /// Route → compiled-program cache hits/misses, mirrored from the
+    /// worker's `RuntimeClient` after each flush (gauges, not counters).
+    pub program_cache_hits: AtomicU64,
+    pub program_cache_misses: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -53,6 +57,12 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Mirror the runtime's program-cache counters (worker-side snapshot).
+    pub fn set_program_cache(&self, hits: u64, misses: u64) {
+        self.program_cache_hits.store(hits, Ordering::Relaxed);
+        self.program_cache_misses.store(misses, Ordering::Relaxed);
+    }
+
     pub fn mean_latency_s(&self) -> f64 {
         let n = self.count_latencies();
         if n == 0 {
@@ -86,13 +96,15 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} points={} batches={} padded={} errors={} rejected={} \
-             mean_latency={:.3}ms p99<={:.3}ms",
+             prog_cache_hits={} prog_cache_misses={} mean_latency={:.3}ms p99<={:.3}ms",
             self.requests.load(Ordering::Relaxed),
             self.points.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.padded_points.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.program_cache_hits.load(Ordering::Relaxed),
+            self.program_cache_misses.load(Ordering::Relaxed),
             self.mean_latency_s() * 1e3,
             self.latency_quantile_s(0.99) * 1e3,
         )

@@ -362,6 +362,11 @@ fn flush_all(
                 offset += take;
             }
         }
+        // Mirror the compiled-program cache counters into the metrics so
+        // the serving amortization (steady state = VM execution only) is
+        // observable per batch.
+        let (h, m) = client.program_cache_stats();
+        metrics.set_program_cache(h, m);
         // Reply to fully-served requests.
         while let Some(front) = queue.front() {
             if front.f0.len() < front.req.n_points {

@@ -8,7 +8,7 @@
 //! ctaylor spec [--op helmholtz] [--dim 16] [--c0 2.25] [--c2 1.0]
 //! ctaylor analyze <name|path>...       # HLO memory/FLOP analysis
 //! ctaylor eval --op laplacian --method collapsed [--n 8]
-//! ctaylor bench [--which fig1|table1|f2|g3|native|coordinator|all] [--reps N]
+//! ctaylor bench [--which fig1|table1|f2|g3|native|graph|smoke|coordinator|all] [--reps N]
 //! ctaylor serve-demo [--requests N]    # coordinator under load
 //! ```
 
@@ -232,6 +232,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     if run("native") {
         println!("{}", bench::run_native_ablation(reps.max(5))?);
+    }
+    if run("graph") {
+        println!("{}", bench::run_graph_ablation(reps.max(5))?);
+    }
+    if which == "smoke" {
+        println!("{}", bench::run_smoke(&reg, reps)?);
     }
     if run("coordinator") {
         let reg2 = registry(args)?;

@@ -9,27 +9,40 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use super::executable::LoadedModel;
+use super::native::ProgramCache;
 use super::registry::{ArtifactMeta, Registry};
 
-/// Name-keyed executable cache over the native execution backend.
+/// Name-keyed executable cache over the native execution backend, plus
+/// the client-wide [`ProgramCache`] every loaded model compiles its
+/// Taylor routes through (the PJRT compile cache's shape, kept for the
+/// native backend).
 pub struct RuntimeClient {
     cache: Mutex<BTreeMap<String, Arc<LoadedModel>>>,
+    programs: Arc<ProgramCache>,
 }
 
 impl RuntimeClient {
     pub fn cpu() -> Result<Self> {
-        Ok(RuntimeClient { cache: Mutex::new(BTreeMap::new()) })
+        Ok(RuntimeClient {
+            cache: Mutex::new(BTreeMap::new()),
+            programs: Arc::new(ProgramCache::new()),
+        })
     }
 
     pub fn platform(&self) -> String {
         "native-cpu".to_string()
     }
 
+    /// (hits, misses) of the route → compiled-program cache.
+    pub fn program_cache_stats(&self) -> (u64, u64) {
+        self.programs.stats()
+    }
+
     /// Build one executable (uncached).  The HLO text at `path` is not
     /// needed by the native backend — it feeds the memory analyzer — so a
     /// missing file is not an error here.
     pub fn compile_file(&self, _path: &Path, meta: ArtifactMeta) -> Result<LoadedModel> {
-        Ok(LoadedModel::new(meta))
+        Ok(LoadedModel::with_cache(meta, self.programs.clone()))
     }
 
     /// Load (or fetch from cache) an artifact by name from the registry.

@@ -1,22 +1,30 @@
 //! A loaded model variant: manifest metadata + execution backend.
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use super::io::{DeviceBuffer, HostTensor};
-use super::native;
+use super::native::{self, ProgramCache};
 use super::registry::ArtifactMeta;
 
 /// One loadable executable with its manifest metadata.  Execution goes
-/// through the native backend (see native.rs); `stage`/`run_buffers`
-/// preserve the stage-once / execute-many call structure a device backend
-/// (PJRT) needs, so swapping the backend later is call-site compatible.
+/// through the native backend (see native.rs); Taylor-method routes run
+/// the cached compiled-program VM path, with the [`ProgramCache`] shared
+/// across every model the owning [`super::RuntimeClient`] loads.
+/// `stage`/`run_buffers` preserve the stage-once / execute-many call
+/// structure a device backend (PJRT) needs, so swapping the backend later
+/// is call-site compatible.
 pub struct LoadedModel {
     pub meta: ArtifactMeta,
+    cache: Arc<ProgramCache>,
 }
 
 impl LoadedModel {
-    pub fn new(meta: ArtifactMeta) -> Self {
-        LoadedModel { meta }
+    /// Build over a shared program cache (the client's per-process one —
+    /// every model must share it so route programs compile once).
+    pub fn with_cache(meta: ArtifactMeta, cache: Arc<ProgramCache>) -> Self {
+        LoadedModel { meta, cache }
     }
 
     /// Execute with host tensors; validates counts/shapes against the
@@ -40,7 +48,7 @@ impl LoadedModel {
             );
         }
         let refs: Vec<&HostTensor> = inputs.iter().collect();
-        let outputs = native::execute(&self.meta, &refs)?;
+        let outputs = native::execute(&self.meta, &refs, &self.cache)?;
         ensure!(
             outputs.len() == self.meta.outputs.len(),
             "{}: expected {} outputs, got {}",
@@ -55,7 +63,7 @@ impl LoadedModel {
     /// shape validation happened at staging/build time).
     pub fn run_buffers(&self, inputs: &[&DeviceBuffer]) -> Result<Vec<HostTensor>> {
         let refs: Vec<&HostTensor> = inputs.iter().map(|b| b.host()).collect();
-        native::execute(&self.meta, &refs)
+        native::execute(&self.meta, &refs, &self.cache)
     }
 
     /// Stage a host tensor for repeated use.

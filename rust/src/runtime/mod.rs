@@ -16,4 +16,5 @@ mod registry;
 pub use client::RuntimeClient;
 pub use executable::LoadedModel;
 pub use io::{DeviceBuffer, HostTensor};
+pub use native::ProgramCache;
 pub use registry::{ArtifactMeta, Registry, TensorSpec};

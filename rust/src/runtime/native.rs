@@ -4,13 +4,22 @@
 //! The offline crate set ships no `xla`/PJRT bindings (DESIGN.md §2), so
 //! the runtime executes each artifact natively.  An artifact's (op, mode)
 //! route resolves to an [`OperatorSpec`] — the plan-driven propagation
-//! core — and its method picks the engine: the nested first-order
-//! baseline, or the unified Taylor jet engine in standard or collapsed
-//! form (all semantically cross-checked in tests/prop_engines.rs).  The
+//! core.  Taylor methods (standard and collapsed) execute through the §C
+//! graph compiler: the route's compiled `OperatorPlan` is traced into the
+//! graph IR, collapsed (for the collapsed method) by the rewrite passes,
+//! lowered to a buffer-planned [`Program`] and cached per
+//! (route, batch, θ) in a [`ProgramCache`] — steady-state per-batch work
+//! is VM execution only, no re-trace/re-compile.  `plan::apply` (the jet
+//! engine) stays as the cross-check oracle (tests/prop_rewrite.rs), and
+//! the nested first-order baseline keeps its closed forms.  The
 //! artifact's `theta` input is unpacked into an [`Mlp`] exactly as
 //! `python/compile/model.py` lays parameters out, so a future PJRT
 //! backend can swap in behind the same [`ArtifactMeta`] surface without
 //! touching callers.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure, Result};
 
@@ -18,10 +27,112 @@ use super::io::HostTensor;
 use super::registry::ArtifactMeta;
 use crate::mlp::Mlp;
 use crate::nested;
-use crate::operators::plan::{self, HELMHOLTZ_C0, HELMHOLTZ_C2};
+use crate::operators::plan::{OperatorPlan, HELMHOLTZ_C0, HELMHOLTZ_C2};
 use crate::operators::OperatorSpec;
 use crate::taylor::jet::Collapse;
+use crate::taylor::program::{self, Program};
+use crate::taylor::rewrite;
 use crate::taylor::tensor::Tensor;
+use crate::taylor::trace;
+
+/// Per-route cache of compiled [`Program`]s: (artifact, batch, θ) →
+/// traced + rewritten + buffer-planned executable.  Hit/miss counters
+/// feed the coordinator metrics, so the serving cache-amortization claim
+/// is observable.
+/// One cached program plus the exact θ it was compiled against: keys
+/// carry only a 64-bit θ fingerprint, so hits re-verify the full bytes —
+/// a fingerprint collision recompiles instead of silently serving a
+/// program with the wrong embedded weights.
+#[derive(Debug)]
+struct CacheEntry {
+    program: Arc<Program>,
+    theta: Vec<f32>,
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    map: BTreeMap<String, CacheEntry>,
+    /// Insertion order, for FIFO eviction.
+    order: VecDeque<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct ProgramCache {
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Cap on cached programs: programs embed θ as f64 constants, so a
+/// θ-churn workload (per-request parameters) must not grow memory without
+/// bound — beyond the cap the oldest *inserted* entry is evicted
+/// (steady-state serving uses a handful of routes, far below this).
+const MAX_CACHED_PROGRAMS: usize = 256;
+
+impl ProgramCache {
+    pub fn new() -> ProgramCache {
+        ProgramCache::default()
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Number of compiled programs held.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn get_or_compile(
+        &self,
+        key: String,
+        theta: &[f32],
+        build: impl FnOnce() -> Result<Program>,
+    ) -> Result<Arc<Program>> {
+        if let Some(e) = self.inner.lock().unwrap().map.get(&key) {
+            if e.theta == theta {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(e.program.clone());
+            }
+            // fingerprint collision: fall through and recompile
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Compile outside the lock; a racing builder just compiles twice.
+        let p = Arc::new(build()?);
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        while inner.map.len() >= MAX_CACHED_PROGRAMS {
+            match inner.order.pop_front() {
+                Some(old) => {
+                    inner.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        let entry = CacheEntry { program: p.clone(), theta: theta.to_vec() };
+        if inner.map.insert(key.clone(), entry).is_none() {
+            inner.order.push_back(key);
+        }
+        Ok(p)
+    }
+}
+
+/// FNV-1a over the raw θ bits: programs embed the unpacked weights as
+/// constants, so the cache key must pin the parameter values.
+fn theta_fingerprint(theta: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for v in theta {
+        for b in v.to_bits().to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
 
 /// Execution method selected by an artifact's manifest entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -195,10 +306,73 @@ fn execute_nested(
     Ok(opv)
 }
 
+/// Trace a route's compiled plan into the graph IR and lower it to a
+/// buffer-planned [`Program`] (collapsed methods run the §C rewrites
+/// between the two).
+fn compile_route(
+    mlp: &Mlp,
+    plan: &OperatorPlan,
+    batch: usize,
+    dim: usize,
+    mode: Collapse,
+) -> Result<Program> {
+    let graph = trace::build_plan_jet_std(mlp, plan, batch);
+    let num_dirs = plan.dirs.shape[0];
+    let graph = match mode {
+        Collapse::Collapsed => rewrite::collapse(&graph, trace::TAGGED_SLOTS, num_dirs),
+        Collapse::Standard => graph,
+    };
+    let mut input_shapes = vec![vec![batch, dim]];
+    if plan.order >= 1 {
+        input_shapes.push(vec![num_dirs, batch, dim]);
+    }
+    program::compile(&graph, &input_shapes)
+}
+
+/// Execute one Taylor-method artifact through the cached compiled-program
+/// path: resolve the spec, compile (or fetch) the route's program, run
+/// the VM on `[x0, scaled dirs]`.
+fn execute_taylor(
+    meta: &ArtifactMeta,
+    mlp: &Mlp,
+    x0: &Tensor,
+    aux: &Aux,
+    mode: Collapse,
+    cache: &ProgramCache,
+    theta: &[f32],
+) -> Result<(Tensor, Tensor)> {
+    let spec = resolve_spec(meta, aux)?;
+    let plan = spec.compile();
+    let batch = x0.shape[0];
+    // The program embeds θ (weights as constants) and the batch-shaped
+    // zero seeds; the |w|^(1/k)-scaled directions stay a runtime input, so
+    // stochastic routes (fresh dirs every batch) still hit the cache.  The
+    // direction *count* R shapes the seeds and weight masks, so it is part
+    // of the key (a caller varying S per call recompiles, not errors).
+    let num_dirs = plan.dirs.shape[0];
+    let theta_fp = theta_fingerprint(theta);
+    let key = format!("{}|b{}|r{}|t{theta_fp:016x}", meta.name, batch, num_dirs);
+    let prog =
+        cache.get_or_compile(key, theta, || compile_route(mlp, &plan, batch, meta.dim, mode))?;
+    let mut inputs = vec![x0.clone()];
+    if plan.order >= 1 {
+        inputs.push(plan.dirs.broadcast_rows(batch));
+    }
+    let mut out = prog.execute(&inputs)?;
+    ensure!(out.len() == 2, "{}: traced program must emit [f0, op]", meta.name);
+    let opv = out.pop().expect("two outputs");
+    let f0 = out.pop().expect("two outputs");
+    Ok((f0, opv))
+}
+
 /// Execute one artifact natively.  `inputs` follow the manifest order:
 /// `theta`, `x`, then `sigma` (weighted Laplacian) and/or `dirs`
 /// (stochastic modes).  Returns `[f0, op]`, each `[B, 1]` f32.
-pub fn execute(meta: &ArtifactMeta, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+pub fn execute(
+    meta: &ArtifactMeta,
+    inputs: &[&HostTensor],
+    cache: &ProgramCache,
+) -> Result<Vec<HostTensor>> {
     ensure!(inputs.len() >= 2, "{}: need at least theta and x inputs", meta.name);
     let mlp = mlp_from_theta(meta, &inputs[0].data)?;
     let x = inputs[1];
@@ -219,8 +393,7 @@ pub fn execute(meta: &ArtifactMeta, inputs: &[&HostTensor]) -> Result<Vec<HostTe
             (f0, opv)
         }
         Method::Taylor(mode) => {
-            let spec = resolve_spec(meta, &aux)?;
-            plan::apply(&mlp, &x0, &spec.compile(), mode)
+            execute_taylor(meta, &mlp, &x0, &aux, mode, cache, &inputs[0].data)?
         }
     };
 
@@ -231,8 +404,13 @@ pub fn execute(meta: &ArtifactMeta, inputs: &[&HostTensor]) -> Result<Vec<HostTe
 mod tests {
     use super::*;
     use crate::bench::workload::theta_for;
+    use crate::operators::plan;
     use crate::runtime::Registry;
     use crate::util::prng::Rng;
+
+    fn exec(meta: &ArtifactMeta, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        execute(meta, inputs, &ProgramCache::new())
+    }
 
     #[test]
     fn executes_builtin_laplacian_artifact() {
@@ -243,7 +421,7 @@ mod tests {
         let mut xdata = vec![0.0f32; 2 * meta.dim];
         rng.fill_normal_f32(&mut xdata);
         let x = HostTensor::new(vec![2, meta.dim], xdata);
-        let out = execute(meta, &[&theta, &x]).unwrap();
+        let out = exec(meta, &[&theta, &x]).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].shape, vec![2, 1]);
         assert_eq!(out[1].shape, vec![2, 1]);
@@ -256,7 +434,7 @@ mod tests {
         let meta = reg.get("laplacian_collapsed_exact_b2").unwrap();
         let theta = HostTensor::zeros(vec![meta.theta_len + 1]);
         let x = HostTensor::zeros(vec![2, meta.dim]);
-        assert!(execute(meta, &[&theta, &x]).is_err());
+        assert!(exec(meta, &[&theta, &x]).is_err());
     }
 
     #[test]
@@ -270,13 +448,54 @@ mod tests {
         let mut xdata = vec![0.0f32; 2 * col.dim];
         rng.fill_normal_f32(&mut xdata);
         let x = HostTensor::new(vec![2, col.dim], xdata);
-        let a = execute(col, &[&theta, &x]).unwrap();
-        let b = execute(std_, &[&theta, &x]).unwrap();
-        let c = execute(nst, &[&theta, &x]).unwrap();
+        let a = exec(col, &[&theta, &x]).unwrap();
+        let b = exec(std_, &[&theta, &x]).unwrap();
+        let c = exec(nst, &[&theta, &x]).unwrap();
         for i in 0..2 {
             assert!((a[1].data[i] - b[1].data[i]).abs() < 1e-3 * (1.0 + a[1].data[i].abs()));
             assert!((a[1].data[i] - c[1].data[i]).abs() < 1e-3 * (1.0 + a[1].data[i].abs()));
         }
+    }
+
+    #[test]
+    fn taylor_routes_hit_the_program_cache_and_match_the_jet_oracle() {
+        let reg = Registry::builtin();
+        let cache = ProgramCache::new();
+        let meta = reg.get("laplacian_collapsed_exact_b2").unwrap();
+        let theta = theta_for(meta, 9);
+        let mut rng = Rng::new(10);
+        let mut xdata = vec![0.0f32; 2 * meta.dim];
+        rng.fill_normal_f32(&mut xdata);
+        let x = HostTensor::new(vec![2, meta.dim], xdata);
+
+        let out1 = execute(meta, &[&theta, &x], &cache).unwrap();
+        assert_eq!(cache.stats(), (0, 1), "first batch compiles");
+        let out2 = execute(meta, &[&theta, &x], &cache).unwrap();
+        assert_eq!(cache.stats(), (1, 1), "second batch reuses the program");
+        assert_eq!(out1[1].data, out2[1].data);
+
+        // Same route, new θ: the program embeds weights, so it recompiles.
+        let theta2 = theta_for(meta, 10);
+        execute(meta, &[&theta2, &x], &cache).unwrap();
+        assert_eq!(cache.stats(), (1, 2));
+
+        // The VM path must agree with the jet-engine oracle to 1e-10 (f64).
+        let mlp = mlp_from_theta(meta, &theta.data).unwrap();
+        let x0 = to_f64(&x);
+        let spec = OperatorSpec::laplacian(meta.dim);
+        let (f0, lap) = plan::apply(&mlp, &x0, &spec.compile(), Collapse::Collapsed);
+        let (vf0, vlap) = execute_taylor(
+            meta,
+            &mlp,
+            &x0,
+            &Aux::None,
+            Collapse::Collapsed,
+            &cache,
+            &theta.data,
+        )
+        .unwrap();
+        assert!(vf0.max_abs_diff(&f0) < 1e-10);
+        assert!(vlap.max_abs_diff(&lap) < 1e-10);
     }
 
     #[test]
@@ -289,8 +508,8 @@ mod tests {
         let mut xdata = vec![0.0f32; 2 * hel.dim];
         rng.fill_normal_f32(&mut xdata);
         let x = HostTensor::new(vec![2, hel.dim], xdata);
-        let h = execute(hel, &[&theta, &x]).unwrap();
-        let l = execute(lap, &[&theta, &x]).unwrap();
+        let h = exec(hel, &[&theta, &x]).unwrap();
+        let l = exec(lap, &[&theta, &x]).unwrap();
         for b in 0..2 {
             let expect = HELMHOLTZ_C0 as f32 * h[0].data[b] + HELMHOLTZ_C2 as f32 * l[1].data[b];
             assert!(
@@ -322,8 +541,8 @@ mod tests {
         let scaled: Vec<f32> = dirs.iter().map(|&v| c * v).collect();
         let dirs = HostTensor::new(vec![8, d], dirs);
         let sdirs = HostTensor::new(vec![8, d], scaled);
-        let w = execute(wmeta, &[&theta, &x, &sdirs]).unwrap();
-        let p = execute(lmeta, &[&theta, &x, &dirs]).unwrap();
+        let w = exec(wmeta, &[&theta, &x, &sdirs]).unwrap();
+        let p = exec(lmeta, &[&theta, &x, &dirs]).unwrap();
         for b in 0..2 {
             let expect = c * c * p[1].data[b];
             assert!(

@@ -51,6 +51,9 @@ pub enum Op {
     Replicate { r: usize },
     /// `[r, ...] -> [...]`: the sum over directions.
     SumDirs,
+    /// `[r, ...] -> [...]`: weighted sum over directions Σ_r w[r]·x[r]
+    /// (the compiled plan's ±1 top-sum signs and 0/±1 lower-degree reads).
+    SumDirsW(Vec<f64>),
     Add,
     Sub,
     Mul,
@@ -110,6 +113,10 @@ impl Graph {
 
     pub fn sum_dirs(&mut self, x: NodeId) -> NodeId {
         self.push(Op::SumDirs, vec![x])
+    }
+
+    pub fn sum_dirs_weighted(&mut self, x: NodeId, w: Vec<f64>) -> NodeId {
+        self.push(Op::SumDirsW(w), vec![x])
     }
 
     pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
@@ -191,7 +198,7 @@ impl Graph {
         for (id, node) in self.nodes.iter().enumerate() {
             tags[id] = match node.op {
                 Op::Replicate { .. } => true,
-                Op::SumDirs => false,
+                Op::SumDirs | Op::SumDirsW(_) => false,
                 Op::Input { .. } | Op::Const(_) => false,
                 _ => node.args.iter().any(|&a| tags[a]),
             };
@@ -206,7 +213,7 @@ impl Graph {
         for (id, node) in self.nodes.iter().enumerate() {
             tags[id] = match node.op {
                 Op::Replicate { .. } => true,
-                Op::SumDirs => false,
+                Op::SumDirs | Op::SumDirsW(_) => false,
                 Op::Input { slot } => tagged_slots.contains(&slot),
                 Op::Const(_) => false,
                 _ => node.args.iter().any(|&a| tags[a]),

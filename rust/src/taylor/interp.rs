@@ -9,43 +9,64 @@ use anyhow::{bail, Result};
 use super::graph::{Graph, Op};
 use super::tensor::Tensor;
 
+/// A computed node value: pass-through nodes (`Input`, `Const`) borrow
+/// their tensor instead of cloning it — the interpreter stays the simple
+/// reference semantics but is no longer quadratic in memory traffic on
+/// constant-heavy graphs.
+enum Val<'a> {
+    Owned(Tensor),
+    Borrowed(&'a Tensor),
+}
+
+impl Val<'_> {
+    fn get(&self) -> &Tensor {
+        match self {
+            Val::Owned(t) => t,
+            Val::Borrowed(t) => t,
+        }
+    }
+}
+
 /// Evaluate the graph on the given input tensors; returns the outputs.
 pub fn eval(graph: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
     let live = graph.live_set();
-    let mut vals: Vec<Option<Tensor>> = vec![None; graph.nodes.len()];
+    let mut vals: Vec<Option<Val>> = Vec::with_capacity(graph.nodes.len());
+    vals.resize_with(graph.nodes.len(), || None);
     for (id, node) in graph.nodes.iter().enumerate() {
         if !live.contains(&id) {
             continue;
         }
-        let arg = |i: usize| -> &Tensor { vals[node.args[i]].as_ref().expect("topo order") };
+        let arg =
+            |i: usize| -> &Tensor { vals[node.args[i]].as_ref().expect("topo order").get() };
         let v = match &node.op {
             Op::Input { slot } => {
                 if *slot >= inputs.len() {
                     bail!("missing input slot {slot}");
                 }
-                inputs[*slot].clone()
+                Val::Borrowed(&inputs[*slot])
             }
-            Op::Const(t) => t.clone(),
-            Op::Replicate { r } => arg(0).replicate(*r),
-            Op::SumDirs => arg(0).sum_axis0(),
-            Op::Add => arg(0).add(arg(1)),
-            Op::Sub => arg(0).sub(arg(1)),
-            Op::Mul => arg(0).mul(arg(1)),
-            Op::Scale(s) => arg(0).scale(*s),
-            Op::AddConst(s) => arg(0).map(|x| x + s),
+            Op::Const(t) => Val::Borrowed(t),
+            Op::Replicate { r } => Val::Owned(arg(0).replicate(*r)),
+            Op::SumDirs => Val::Owned(arg(0).sum_axis0()),
+            Op::SumDirsW(w) => Val::Owned(arg(0).weighted_sum_axis0(w)),
+            Op::Add => Val::Owned(arg(0).add(arg(1))),
+            Op::Sub => Val::Owned(arg(0).sub(arg(1))),
+            Op::Mul => Val::Owned(arg(0).mul(arg(1))),
+            Op::Scale(s) => Val::Owned(arg(0).scale(*s)),
+            Op::AddConst(s) => Val::Owned(arg(0).map(|x| x + s)),
             Op::Unary(k) => {
                 let k = *k;
-                arg(0).map(move |x| k.apply(x))
+                Val::Owned(arg(0).map(move |x| k.apply(x)))
             }
-            Op::MatMul { w } => arg(0).matmul(w),
-            Op::AddBias { b } => arg(0).add_bias(b),
+            Op::MatMul { w } => Val::Owned(arg(0).matmul(w)),
+            Op::AddBias { b } => Val::Owned(arg(0).add_bias(b)),
         };
         vals[id] = Some(v);
     }
     Ok(graph
         .outputs
         .iter()
-        .map(|&o| vals[o].clone().expect("output not evaluated"))
+        .map(|&o| vals[o].as_ref().expect("output not evaluated").get().clone())
         .collect())
 }
 
@@ -69,6 +90,8 @@ pub fn flops(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<u64> {
                 2 * rows * (w.shape[0] * w.shape[1]) as u64
             }
             Op::SumDirs => shapes[node.args[0]].iter().product::<usize>() as u64,
+            // multiply-accumulate per input element
+            Op::SumDirsW(_) => 2 * shapes[node.args[0]].iter().product::<usize>() as u64,
             _ => out_elems,
         };
     }
@@ -93,7 +116,7 @@ pub fn infer_shapes(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Vec<Ve
                 s.extend(arg(0));
                 s
             }
-            Op::SumDirs => arg(0)[1..].to_vec(),
+            Op::SumDirs | Op::SumDirsW(_) => arg(0)[1..].to_vec(),
             Op::Add | Op::Sub | Op::Mul => {
                 let (a, b) = (arg(0), arg(1));
                 if a.len() >= b.len() { a.clone() } else { b.clone() }

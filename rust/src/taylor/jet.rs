@@ -125,15 +125,7 @@ fn broadcast_dirs(x0: &Tensor, dirs: &Tensor) -> Tensor {
     }
     // dirs [R, D] -> [R, B, D] by repeating each direction over the batch.
     assert_eq!(dirs.rank(), 2, "dirs must be [R, D] or [R, B, D]");
-    let (r, d) = (dirs.shape[0], dirs.shape[1]);
-    let b = x0.shape[0];
-    let mut data = Vec::with_capacity(r * b * d);
-    for ri in 0..r {
-        for _ in 0..b {
-            data.extend_from_slice(&dirs.data[ri * d..(ri + 1) * d]);
-        }
-    }
-    Tensor::new(vec![r, b, d], data)
+    dirs.broadcast_rows(x0.shape[0])
 }
 
 // ---------------------------------------------------------------------------

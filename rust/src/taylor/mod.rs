@@ -6,16 +6,23 @@
 //! * [`jet`] — the unified jet bundle ([`jet::Collapse`] selects standard
 //!   eq. D13 vs collapsed eq. D14 propagation of the highest coefficient).
 //! * [`graph`], [`trace`], [`interp`] — the computational-graph IR, the
-//!   vanilla-Taylor tracer and the reference interpreter.
-//! * [`rewrite`] — the §C collapse passes (replicate-push-down,
+//!   plan-driven vanilla-Taylor tracer and the reference interpreter.
+//! * [`rewrite`] — the §C collapse passes (replicate-push-down, weighted
 //!   sum-push-up).
+//! * [`program`] — the graph compiler: CSE + constant folding + fused
+//!   elementwise chains + liveness-planned buffer arena, executed by an
+//!   in-place VM (the production path behind `runtime::native`).
+//! * [`hlo_emit`] — HLO text emission from graphs, feeding the
+//!   `hlo::analyzer` memory proxies for builtin artifacts.
 //! * [`count`] — the paper's propagated-vector cost model (table F2).
 
 pub mod count;
 pub mod graph;
+pub mod hlo_emit;
 pub mod interp;
 pub mod jet;
 pub mod partitions;
+pub mod program;
 pub mod rewrite;
 pub mod rules;
 pub mod tensor;

@@ -1,0 +1,846 @@
+//! Compile a graph to a flat, buffer-planned linear program.
+//!
+//! This is the execution half of the paper's compiler claim (§C): after
+//! tracing and the collapse rewrites, the graph is lowered through
+//!
+//! 1. **simplify** — constant folding (zero seed chains evaporate), the
+//!    cheap algebraic identities (x·0, x+0, 1·x, scale-by-1) and CSE, so
+//!    the shared Faà-di-Bruno powers (x₁², x₁³, …) are computed once;
+//! 2. **fusion** — runs of single-use `Scale`/`AddConst`/`Unary` nodes
+//!    become one fused elementwise instruction (one pass over the data);
+//! 3. **buffer planning** — a liveness sweep assigns every instruction an
+//!    arena register, reusing dead buffers of the same size and writing
+//!    elementwise results in place when the producer dies at its consumer.
+//!
+//! The resulting [`Program`] is executed by an in-place VM
+//! ([`Program::execute`]): no per-node `Tensor` allocation, no clones of
+//! constants or inputs — the per-call cost is one arena allocation plus
+//! the actual arithmetic.  `interp::eval` remains the reference
+//! interpreter the VM is property-tested against.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use super::graph::{Graph, Op, UnaryKind};
+use super::interp;
+use super::tensor::Tensor;
+
+/// One fused elementwise step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EwOp {
+    Scale(f64),
+    AddConst(f64),
+    Unary(UnaryKind),
+}
+
+impl EwOp {
+    #[inline]
+    fn apply(&self, x: f64) -> f64 {
+        match self {
+            EwOp::Scale(s) => x * s,
+            EwOp::AddConst(s) => x + s,
+            EwOp::Unary(k) => k.apply(x),
+        }
+    }
+}
+
+/// Where an instruction reads a value from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    /// An arena register written by an earlier instruction.
+    Reg(usize),
+    /// An evaluation input (never copied into the arena).
+    Input(usize),
+    /// An entry of the constant table (never copied into the arena).
+    Const(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinKind {
+    Add,
+    Sub,
+    Mul,
+}
+
+/// One VM instruction.  `dst` always names an arena register; `Bin` and
+/// `Ew` may alias `dst` with a source register (the planner only does this
+/// when the source dies here and already has the output shape).
+#[derive(Debug, Clone)]
+pub enum Instr {
+    Replicate { src: Operand, r: usize, dst: usize },
+    /// Plain (`weights: None`) or weighted sum over the leading axis.
+    SumDirs { src: Operand, weights: Option<usize>, dst: usize },
+    Bin { kind: BinKind, a: Operand, b: Operand, dst: usize },
+    Ew { src: Operand, chain: Vec<EwOp>, dst: usize },
+    MatMul { src: Operand, w: usize, dst: usize },
+    AddBias { src: Operand, b: usize, dst: usize },
+}
+
+impl Instr {
+    fn dst(&self) -> usize {
+        match self {
+            Instr::Replicate { dst, .. }
+            | Instr::SumDirs { dst, .. }
+            | Instr::Bin { dst, .. }
+            | Instr::Ew { dst, .. }
+            | Instr::MatMul { dst, .. }
+            | Instr::AddBias { dst, .. } => *dst,
+        }
+    }
+}
+
+/// A compiled, buffer-planned linear program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+    /// Output shape per instruction (parallel to `instrs`).
+    pub instr_shapes: Vec<Vec<usize>>,
+    /// Embedded tensors: graph constants, matmul weights, biases.
+    pub consts: Vec<Tensor>,
+    /// Deduplicated weighted-sum weight vectors.
+    pub weight_vecs: Vec<Vec<f64>>,
+    /// Element count of each arena register.
+    pub reg_len: Vec<usize>,
+    pub outputs: Vec<Operand>,
+    pub num_inputs: usize,
+    /// Expected input shapes (validated per call).
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Static FLOP estimate of the simplified graph.
+    pub flops: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Simplify: constant folding + identities + CSE
+// ---------------------------------------------------------------------------
+
+/// Evaluate an op on constant arguments (compile-time interpreter).
+fn fold(op: &Op, args: &[&Tensor]) -> Option<Tensor> {
+    Some(match op {
+        Op::Replicate { r } => args[0].replicate(*r),
+        Op::SumDirs => args[0].sum_axis0(),
+        Op::SumDirsW(w) => args[0].weighted_sum_axis0(w),
+        Op::Add => args[0].add(args[1]),
+        Op::Sub => args[0].sub(args[1]),
+        Op::Mul => args[0].mul(args[1]),
+        Op::Scale(s) => args[0].scale(*s),
+        Op::AddConst(s) => args[0].map(|x| x + s),
+        Op::Unary(k) => {
+            let k = *k;
+            args[0].map(move |x| k.apply(x))
+        }
+        Op::MatMul { w } => args[0].matmul(w),
+        Op::AddBias { b } => args[0].add_bias(b),
+        Op::Input { .. } | Op::Const(_) => return None,
+    })
+}
+
+/// Intern a constant node in the new graph, deduplicating by value.
+fn intern_const_node(ng: &mut Graph, const_nodes: &mut Vec<usize>, t: Tensor) -> usize {
+    for &cid in const_nodes.iter() {
+        if let Op::Const(c) = &ng.nodes[cid].op {
+            if *c == t {
+                return cid;
+            }
+        }
+    }
+    let id = ng.push(Op::Const(t), vec![]);
+    const_nodes.push(id);
+    id
+}
+
+fn is_zero_const(ng: &Graph, id: usize) -> bool {
+    matches!(&ng.nodes[id].op, Op::Const(t) if t.data.iter().all(|&v| v == 0.0))
+}
+
+fn is_one_const(ng: &Graph, id: usize) -> bool {
+    matches!(&ng.nodes[id].op, Op::Const(t) if t.data.iter().all(|&v| v == 1.0))
+}
+
+/// CSE key (`None` for ops keyed by embedded tensors, which we skip).
+fn cse_key(op: &Op, args: &[usize]) -> Option<String> {
+    Some(match op {
+        Op::Input { slot } => format!("i{slot}"),
+        Op::Replicate { r } => format!("r{r}:{}", args[0]),
+        Op::SumDirs => format!("s:{}", args[0]),
+        Op::SumDirsW(w) => {
+            let mut k = String::from("w");
+            for v in w {
+                k.push_str(&format!("{:x},", v.to_bits()));
+            }
+            format!("{k}:{}", args[0])
+        }
+        // commutative: canonical arg order
+        Op::Add => format!("+{},{}", args[0].min(args[1]), args[0].max(args[1])),
+        Op::Mul => format!("*{},{}", args[0].min(args[1]), args[0].max(args[1])),
+        Op::Sub => format!("-{},{}", args[0], args[1]),
+        Op::Scale(s) => format!("x{:x}:{}", s.to_bits(), args[0]),
+        Op::AddConst(s) => format!("a{:x}:{}", s.to_bits(), args[0]),
+        Op::Unary(k) => format!("u{k:?}:{}", args[0]),
+        Op::MatMul { .. } | Op::AddBias { .. } | Op::Const(_) => return None,
+    })
+}
+
+/// Constant folding + algebraic identities + CSE, preserving semantics and
+/// the args-before-use invariant.  Returns a dce'd graph.
+pub fn simplify(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Graph> {
+    let g = graph.dce();
+    let shapes = interp::infer_shapes(&g, input_shapes)?;
+    let mut ng = Graph { nodes: Vec::new(), outputs: Vec::new(), num_inputs: g.num_inputs };
+    let mut remap: Vec<usize> = vec![usize::MAX; g.nodes.len()];
+    let mut cse: BTreeMap<String, usize> = BTreeMap::new();
+    let mut const_nodes: Vec<usize> = Vec::new();
+
+    for (id, node) in g.nodes.iter().enumerate() {
+        if let Op::Const(t) = &node.op {
+            remap[id] = intern_const_node(&mut ng, &mut const_nodes, t.clone());
+            continue;
+        }
+        let args: Vec<usize> = node.args.iter().map(|&a| remap[a]).collect();
+
+        // 1) fold ops whose arguments are all constants
+        if !args.is_empty() {
+            let cargs: Option<Vec<&Tensor>> = args
+                .iter()
+                .map(|&a| match &ng.nodes[a].op {
+                    Op::Const(t) => Some(t),
+                    _ => None,
+                })
+                .collect();
+            if let Some(cs) = cargs {
+                if let Some(t) = fold(&node.op, &cs) {
+                    remap[id] = intern_const_node(&mut ng, &mut const_nodes, t);
+                    continue;
+                }
+            }
+        }
+
+        // 2) algebraic identities (shape-preserving aliases only)
+        let same_shape = |other: usize| shapes[other] == shapes[id];
+        let alias: Option<usize> = match &node.op {
+            Op::Scale(s) if *s == 1.0 => Some(args[0]),
+            Op::AddConst(s) if *s == 0.0 => Some(args[0]),
+            Op::Add => {
+                if is_zero_const(&ng, args[0]) && same_shape(node.args[1]) {
+                    Some(args[1])
+                } else if is_zero_const(&ng, args[1]) && same_shape(node.args[0]) {
+                    Some(args[0])
+                } else {
+                    None
+                }
+            }
+            Op::Sub if is_zero_const(&ng, args[1]) && same_shape(node.args[0]) => Some(args[0]),
+            Op::Mul => {
+                if is_one_const(&ng, args[0]) && same_shape(node.args[1]) {
+                    Some(args[1])
+                } else if is_one_const(&ng, args[1]) && same_shape(node.args[0]) {
+                    Some(args[0])
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
+        if let Some(a) = alias {
+            remap[id] = a;
+            continue;
+        }
+        // x·0 and 0·x annihilate to a zero constant of the output shape
+        if matches!(node.op, Op::Mul)
+            && (is_zero_const(&ng, args[0]) || is_zero_const(&ng, args[1]))
+        {
+            let z = Tensor::zeros(&shapes[id]);
+            remap[id] = intern_const_node(&mut ng, &mut const_nodes, z);
+            continue;
+        }
+        if matches!(node.op, Op::Scale(s) if s == 0.0) {
+            let z = Tensor::zeros(&shapes[id]);
+            remap[id] = intern_const_node(&mut ng, &mut const_nodes, z);
+            continue;
+        }
+
+        // 3) CSE
+        match cse_key(&node.op, &args) {
+            Some(key) => {
+                if let Some(&hit) = cse.get(&key) {
+                    remap[id] = hit;
+                } else {
+                    let nid = ng.push(node.op.clone(), args);
+                    cse.insert(key, nid);
+                    remap[id] = nid;
+                }
+            }
+            None => {
+                remap[id] = ng.push(node.op.clone(), args);
+            }
+        }
+    }
+
+    ng.outputs = g.outputs.iter().map(|&o| remap[o]).collect();
+    Ok(ng.dce())
+}
+
+// ---------------------------------------------------------------------------
+// Compile: fusion + liveness-planned register allocation
+// ---------------------------------------------------------------------------
+
+fn is_ew_op(op: &Op) -> bool {
+    matches!(op, Op::Scale(_) | Op::AddConst(_) | Op::Unary(_))
+}
+
+fn ew_of(op: &Op) -> EwOp {
+    match op {
+        Op::Scale(s) => EwOp::Scale(*s),
+        Op::AddConst(s) => EwOp::AddConst(*s),
+        Op::Unary(k) => EwOp::Unary(*k),
+        other => panic!("not an elementwise op: {other:?}"),
+    }
+}
+
+fn intern_tensor(consts: &mut Vec<Tensor>, t: &Tensor) -> usize {
+    match consts.iter().position(|c| c == t) {
+        Some(i) => i,
+        None => {
+            consts.push(t.clone());
+            consts.len() - 1
+        }
+    }
+}
+
+fn intern_weights(pool: &mut Vec<Vec<f64>>, w: &[f64]) -> usize {
+    match pool.iter().position(|p| p == w) {
+        Some(i) => i,
+        None => {
+            pool.push(w.to_vec());
+            pool.len() - 1
+        }
+    }
+}
+
+/// Compile a graph into a buffer-planned [`Program`] for the given input
+/// shapes.
+pub fn compile(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Program> {
+    let s = simplify(graph, input_shapes)?;
+    let shapes = interp::infer_shapes(&s, input_shapes)?;
+    let flops = interp::flops(&s, input_shapes)?;
+    let n = s.nodes.len();
+
+    // uses + unique user, for elementwise-chain fusion
+    let mut uses = vec![0usize; n];
+    let mut single_user = vec![usize::MAX; n];
+    for (j, node) in s.nodes.iter().enumerate() {
+        for &a in &node.args {
+            uses[a] += 1;
+            single_user[a] = j;
+        }
+    }
+    let mut is_output = vec![false; n];
+    for &o in &s.outputs {
+        is_output[o] = true;
+    }
+    // An elementwise node is absorbed into its unique elementwise consumer.
+    let mut absorbed = vec![false; n];
+    for i in 0..n {
+        if is_ew_op(&s.nodes[i].op) && !is_output[i] && uses[i] == 1 {
+            let j = single_user[i];
+            if j != usize::MAX && is_ew_op(&s.nodes[j].op) {
+                absorbed[i] = true;
+            }
+        }
+    }
+    // Chain (source node, fused ops) for an emitted elementwise node.
+    let chain_of = |j: usize| -> (usize, Vec<EwOp>) {
+        let mut ops = vec![ew_of(&s.nodes[j].op)];
+        let mut cur = s.nodes[j].args[0];
+        while absorbed[cur] {
+            ops.push(ew_of(&s.nodes[cur].op));
+            cur = s.nodes[cur].args[0];
+        }
+        ops.reverse();
+        (cur, ops)
+    };
+    let is_value_node =
+        |j: usize| !absorbed[j] && !matches!(s.nodes[j].op, Op::Input { .. } | Op::Const(_));
+
+    // Liveness over *emitted* reads: the VM frees a register after the last
+    // instruction that reads it.
+    let mut last_use = vec![0usize; n];
+    for j in 0..n {
+        if !is_value_node(j) {
+            continue;
+        }
+        let reads: Vec<usize> = if is_ew_op(&s.nodes[j].op) {
+            vec![chain_of(j).0]
+        } else {
+            s.nodes[j].args.clone()
+        };
+        for a in reads {
+            last_use[a] = last_use[a].max(j);
+        }
+    }
+    for &o in &s.outputs {
+        last_use[o] = usize::MAX;
+    }
+
+    let mut consts: Vec<Tensor> = Vec::new();
+    let mut weight_vecs: Vec<Vec<f64>> = Vec::new();
+    let mut oper: Vec<Option<Operand>> = vec![None; n];
+    let mut reg_of = vec![usize::MAX; n];
+    let mut reg_len: Vec<usize> = Vec::new();
+    let mut free: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    let mut instrs: Vec<Instr> = Vec::new();
+    let mut instr_shapes: Vec<Vec<usize>> = Vec::new();
+
+    for j in 0..n {
+        match &s.nodes[j].op {
+            Op::Input { slot } => {
+                oper[j] = Some(Operand::Input(*slot));
+                continue;
+            }
+            Op::Const(t) => {
+                oper[j] = Some(Operand::Const(intern_tensor(&mut consts, t)));
+                continue;
+            }
+            _ => {}
+        }
+        if absorbed[j] {
+            continue;
+        }
+        let elems: usize = shapes[j].iter().product();
+        let operand_of = |x: usize, oper: &[Option<Operand>], reg_of: &[usize]| -> Operand {
+            match oper[x] {
+                Some(o) => o,
+                None => Operand::Reg(reg_of[x]),
+            }
+        };
+        // Source node ids (for liveness) and the in-place candidate: a
+        // register-backed source that dies here and has the output shape.
+        let (srcs, inplace): (Vec<usize>, Option<usize>) = match &s.nodes[j].op {
+            Op::Scale(_) | Op::AddConst(_) | Op::Unary(_) => {
+                let (src, _) = chain_of(j);
+                let ok = reg_of[src] != usize::MAX && last_use[src] == j;
+                (vec![src], if ok { Some(reg_of[src]) } else { None })
+            }
+            Op::Add | Op::Sub | Op::Mul => {
+                let (a, b) = (s.nodes[j].args[0], s.nodes[j].args[1]);
+                let ok = |x: usize| {
+                    reg_of[x] != usize::MAX && last_use[x] == j && shapes[x] == shapes[j]
+                };
+                let commutes = matches!(s.nodes[j].op, Op::Add | Op::Mul);
+                if ok(a) {
+                    (vec![a, b], Some(reg_of[a]))
+                } else if commutes && ok(b) {
+                    // swap so the in-place operand is always `a`
+                    (vec![b, a], Some(reg_of[b]))
+                } else {
+                    (vec![a, b], None)
+                }
+            }
+            _ => (s.nodes[j].args.clone(), None),
+        };
+        let dst = match inplace {
+            Some(r) => r,
+            None => match free.get_mut(&elems).and_then(|v| v.pop()) {
+                Some(r) => r,
+                None => {
+                    reg_len.push(elems);
+                    reg_len.len() - 1
+                }
+            },
+        };
+        let instr = match &s.nodes[j].op {
+            Op::Replicate { r } => {
+                Instr::Replicate { src: operand_of(srcs[0], &oper, &reg_of), r: *r, dst }
+            }
+            Op::SumDirs => {
+                Instr::SumDirs { src: operand_of(srcs[0], &oper, &reg_of), weights: None, dst }
+            }
+            Op::SumDirsW(w) => Instr::SumDirs {
+                src: operand_of(srcs[0], &oper, &reg_of),
+                weights: Some(intern_weights(&mut weight_vecs, w)),
+                dst,
+            },
+            Op::Add | Op::Sub | Op::Mul => {
+                let kind = match &s.nodes[j].op {
+                    Op::Add => BinKind::Add,
+                    Op::Sub => BinKind::Sub,
+                    _ => BinKind::Mul,
+                };
+                Instr::Bin {
+                    kind,
+                    a: operand_of(srcs[0], &oper, &reg_of),
+                    b: operand_of(srcs[1], &oper, &reg_of),
+                    dst,
+                }
+            }
+            Op::Scale(_) | Op::AddConst(_) | Op::Unary(_) => {
+                let (_, chain) = chain_of(j);
+                Instr::Ew { src: operand_of(srcs[0], &oper, &reg_of), chain, dst }
+            }
+            Op::MatMul { w } => Instr::MatMul {
+                src: operand_of(srcs[0], &oper, &reg_of),
+                w: intern_tensor(&mut consts, w),
+                dst,
+            },
+            Op::AddBias { b } => Instr::AddBias {
+                src: operand_of(srcs[0], &oper, &reg_of),
+                b: intern_tensor(&mut consts, b),
+                dst,
+            },
+            Op::Input { .. } | Op::Const(_) => unreachable!("handled above"),
+        };
+        instrs.push(instr);
+        instr_shapes.push(shapes[j].clone());
+        reg_of[j] = dst;
+        // release dying source registers (the in-place one became dst)
+        let mut freed: Vec<usize> = Vec::new();
+        for &a in &srcs {
+            let r = reg_of[a];
+            if r != usize::MAX && r != dst && last_use[a] == j && !freed.contains(&r) {
+                freed.push(r);
+                free.entry(reg_len[r]).or_default().push(r);
+            }
+        }
+    }
+
+    let outputs: Vec<Operand> = s
+        .outputs
+        .iter()
+        .map(|&o| match oper[o] {
+            Some(op) => op,
+            None => Operand::Reg(reg_of[o]),
+        })
+        .collect();
+    ensure!(
+        outputs.iter().all(|o| !matches!(o, Operand::Reg(r) if *r == usize::MAX)),
+        "program output was never emitted"
+    );
+
+    Ok(Program {
+        instrs,
+        instr_shapes,
+        consts,
+        weight_vecs,
+        reg_len,
+        outputs,
+        num_inputs: s.num_inputs,
+        input_shapes: input_shapes.to_vec(),
+        flops,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The VM
+// ---------------------------------------------------------------------------
+
+fn resolve<'a>(
+    o: Operand,
+    regs: &'a [Tensor],
+    inputs: &'a [Tensor],
+    consts: &'a [Tensor],
+) -> &'a Tensor {
+    match o {
+        Operand::Reg(r) => &regs[r],
+        Operand::Input(i) => &inputs[i],
+        Operand::Const(c) => &consts[c],
+    }
+}
+
+fn bin_fn(kind: BinKind) -> fn(f64, f64) -> f64 {
+    match kind {
+        BinKind::Add => |x, y| x + y,
+        BinKind::Sub => |x, y| x - y,
+        BinKind::Mul => |x, y| x * y,
+    }
+}
+
+/// `out = a ∘ b` with suffix broadcasting (the smaller operand repeats
+/// along the extra leading axes of the larger).
+fn bin_into(f: fn(f64, f64) -> f64, a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    if a.data.len() == b.data.len() {
+        for ((o, &x), &y) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
+            *o = f(x, y);
+        }
+    } else if a.data.len() > b.data.len() {
+        let nb = b.data.len().max(1);
+        for (ochunk, achunk) in out.data.chunks_mut(nb).zip(a.data.chunks(nb)) {
+            for ((o, &x), &y) in ochunk.iter_mut().zip(achunk).zip(&b.data) {
+                *o = f(x, y);
+            }
+        }
+    } else {
+        let na = a.data.len().max(1);
+        for (ochunk, bchunk) in out.data.chunks_mut(na).zip(b.data.chunks(na)) {
+            for ((o, &y), &x) in ochunk.iter_mut().zip(bchunk).zip(&a.data) {
+                *o = f(x, y);
+            }
+        }
+    }
+}
+
+impl Program {
+    /// Execute on the given inputs; returns the outputs.
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        ensure!(
+            inputs.len() >= self.num_inputs,
+            "program expects {} inputs, got {}",
+            self.num_inputs,
+            inputs.len()
+        );
+        for (i, spec) in self.input_shapes.iter().enumerate().take(self.num_inputs) {
+            ensure!(
+                &inputs[i].shape == spec,
+                "input {i} shape {:?} != compiled shape {spec:?}",
+                inputs[i].shape
+            );
+        }
+        let mut regs: Vec<Tensor> = self
+            .reg_len
+            .iter()
+            .map(|&e| Tensor { shape: vec![e], data: vec![0.0; e] })
+            .collect();
+        for (instr, shape) in self.instrs.iter().zip(&self.instr_shapes) {
+            self.step(instr, shape, &mut regs, inputs);
+        }
+        Ok(self
+            .outputs
+            .iter()
+            .map(|&o| match o {
+                Operand::Reg(r) => regs[r].clone(),
+                Operand::Input(i) => inputs[i].clone(),
+                Operand::Const(c) => self.consts[c].clone(),
+            })
+            .collect())
+    }
+
+    fn step(&self, instr: &Instr, out_shape: &[usize], regs: &mut [Tensor], inputs: &[Tensor]) {
+        let dst = instr.dst();
+        // Take the destination buffer out so sources can be read from the
+        // arena without aliasing; aliased in-place operands use `out`.
+        let mut out =
+            std::mem::replace(&mut regs[dst], Tensor { shape: Vec::new(), data: Vec::new() });
+        match instr {
+            Instr::Replicate { src, .. } => {
+                let s = resolve(*src, regs, inputs, &self.consts);
+                let ns = s.data.len().max(1);
+                for chunk in out.data.chunks_mut(ns) {
+                    chunk.copy_from_slice(&s.data);
+                }
+            }
+            Instr::SumDirs { src, weights, .. } => {
+                let s = resolve(*src, regs, inputs, &self.consts);
+                let rest = out.data.len().max(1);
+                out.data.fill(0.0);
+                match weights {
+                    None => {
+                        for chunk in s.data.chunks(rest) {
+                            for (o, &v) in out.data.iter_mut().zip(chunk) {
+                                *o += v;
+                            }
+                        }
+                    }
+                    Some(w) => {
+                        for (chunk, &wr) in s.data.chunks(rest).zip(&self.weight_vecs[*w]) {
+                            if wr == 0.0 {
+                                continue;
+                            }
+                            for (o, &v) in out.data.iter_mut().zip(chunk) {
+                                *o += wr * v;
+                            }
+                        }
+                    }
+                }
+            }
+            Instr::Bin { kind, a, b, dst } => {
+                let f = bin_fn(*kind);
+                let a_alias = matches!(a, Operand::Reg(r) if r == dst);
+                let b_alias = matches!(b, Operand::Reg(r) if r == dst);
+                if a_alias && b_alias {
+                    for o in out.data.iter_mut() {
+                        *o = f(*o, *o);
+                    }
+                } else if a_alias {
+                    let bt = resolve(*b, regs, inputs, &self.consts);
+                    if bt.data.len() == out.data.len() {
+                        for (o, &y) in out.data.iter_mut().zip(&bt.data) {
+                            *o = f(*o, y);
+                        }
+                    } else {
+                        let nb = bt.data.len().max(1);
+                        for ochunk in out.data.chunks_mut(nb) {
+                            for (o, &y) in ochunk.iter_mut().zip(&bt.data) {
+                                *o = f(*o, y);
+                            }
+                        }
+                    }
+                } else {
+                    debug_assert!(!b_alias, "planner aliases only operand a");
+                    let at = resolve(*a, regs, inputs, &self.consts);
+                    let bt = resolve(*b, regs, inputs, &self.consts);
+                    bin_into(f, at, bt, &mut out);
+                }
+            }
+            Instr::Ew { src, chain, dst } => {
+                if matches!(src, Operand::Reg(r) if r == dst) {
+                    for v in out.data.iter_mut() {
+                        let mut x = *v;
+                        for op in chain {
+                            x = op.apply(x);
+                        }
+                        *v = x;
+                    }
+                } else {
+                    let s = resolve(*src, regs, inputs, &self.consts);
+                    for (o, &sv) in out.data.iter_mut().zip(&s.data) {
+                        let mut x = sv;
+                        for op in chain {
+                            x = op.apply(x);
+                        }
+                        *o = x;
+                    }
+                }
+            }
+            Instr::MatMul { src, w, .. } => {
+                let x = resolve(*src, regs, inputs, &self.consts);
+                let wt = &self.consts[*w];
+                let (i, o_) = (wt.shape[0], wt.shape[1]);
+                let rows = x.data.len() / i.max(1);
+                out.data.fill(0.0);
+                for r in 0..rows {
+                    let xrow = &x.data[r * i..(r + 1) * i];
+                    let orow = &mut out.data[r * o_..(r + 1) * o_];
+                    for (k, &xv) in xrow.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &wt.data[k * o_..(k + 1) * o_];
+                        for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                            *ov += xv * wv;
+                        }
+                    }
+                }
+            }
+            Instr::AddBias { src, b, .. } => {
+                let x = resolve(*src, regs, inputs, &self.consts);
+                let bt = &self.consts[*b];
+                let nb = bt.data.len().max(1);
+                for (ochunk, xchunk) in out.data.chunks_mut(nb).zip(x.data.chunks(nb)) {
+                    for ((o, &xv), &bv) in ochunk.iter_mut().zip(xchunk).zip(&bt.data) {
+                        *o = xv + bv;
+                    }
+                }
+            }
+        }
+        out.shape = out_shape.to_vec();
+        regs[dst] = out;
+    }
+
+    /// Arena registers the program plans (reuse makes this far smaller
+    /// than the instruction count on deep graphs).
+    pub fn num_regs(&self) -> usize {
+        self.reg_len.len()
+    }
+
+    /// Peak arena bytes (f64) — the VM's non-differentiable memory proxy.
+    pub fn arena_bytes(&self) -> usize {
+        self.reg_len.iter().sum::<usize>() * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlp::Mlp;
+    use crate::taylor::rewrite::collapse;
+    use crate::taylor::trace::{basis_dirs, build_mlp_jet_std, TAGGED_SLOTS};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn vm_matches_interp_on_traced_graphs() {
+        let mut rng = Rng::new(3);
+        let mlp = Mlp::init(&mut rng, 3, &[7, 5, 1], 2);
+        for order in 2..=4 {
+            let g = build_mlp_jet_std(&mlp, order, 3);
+            let x0 = mlp.random_input(&mut rng);
+            let dirs = basis_dirs(3, 2);
+            let shapes = vec![x0.shape.clone(), dirs.shape.clone()];
+            let want = interp::eval(&g, &[x0.clone(), dirs.clone()]).unwrap();
+            for graph in [g.clone(), collapse(&g, TAGGED_SLOTS, 3)] {
+                let prog = compile(&graph, &shapes).unwrap();
+                let got = prog.execute(&[x0.clone(), dirs.clone()]).unwrap();
+                assert_eq!(got.len(), want.len());
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.shape, b.shape);
+                    assert!(a.max_abs_diff(b) < 1e-10, "order {order}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_and_cse_shrink_the_program() {
+        let mut rng = Rng::new(4);
+        let mlp = Mlp::init(&mut rng, 4, &[8, 8, 1], 2);
+        let g = build_mlp_jet_std(&mlp, 3, 4);
+        let shapes = vec![vec![2, 4], vec![4, 2, 4]];
+        let s = simplify(&g, &shapes).unwrap();
+        // The zero-seed chains fold away: strictly fewer nodes than the
+        // trace, and no Replicate of the zero constant survives.
+        assert!(s.nodes.len() < g.nodes.len());
+        let prog = compile(&g, &shapes).unwrap();
+        // Buffer reuse: far fewer registers than instructions.
+        assert!(prog.num_regs() < prog.instrs.len());
+        // Fused chains exist (tanh-derivative scale/add runs).
+        let fused = prog
+            .instrs
+            .iter()
+            .any(|i| matches!(i, Instr::Ew { chain, .. } if chain.len() > 1));
+        assert!(fused, "expected at least one fused elementwise chain");
+    }
+
+    #[test]
+    fn inplace_square_is_correct() {
+        // y = (2x)² exercises Bin with both operands aliasing dst.
+        let mut g = Graph::default();
+        let x = g.input(0);
+        let sx = g.scale(x, 2.0);
+        let sq = g.mul(sx, sx);
+        g.outputs = vec![sq];
+        let prog = compile(&g, &[vec![3]]).unwrap();
+        let out = prog
+            .execute(&[Tensor::new(vec![3], vec![1.0, -2.0, 0.5])])
+            .unwrap();
+        assert_eq!(out[0].data, vec![4.0, 16.0, 1.0]);
+    }
+
+    #[test]
+    fn weighted_sum_and_broadcast_bin() {
+        let mut g = Graph::default();
+        let x = g.input(0); // [3, 2] tagged
+        let u = g.input(1); // [2] free
+        let m = g.mul(x, u);
+        let sw = g.sum_dirs_weighted(m, vec![1.0, 0.0, -2.0]);
+        g.outputs = vec![sw];
+        let shapes = vec![vec![3, 2], vec![2]];
+        let xv = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let uv = Tensor::new(vec![2], vec![10., 100.]);
+        let want = interp::eval(&g, &[xv.clone(), uv.clone()]).unwrap();
+        let prog = compile(&g, &shapes).unwrap();
+        let got = prog.execute(&[xv, uv]).unwrap();
+        assert!(want[0].max_abs_diff(&got[0]) < 1e-12);
+    }
+
+    #[test]
+    fn outputs_may_be_inputs_and_constants() {
+        let mut g = Graph::default();
+        let x = g.input(0);
+        let c = g.constant(Tensor::new(vec![2], vec![7.0, 8.0]));
+        let y = g.add(x, c);
+        g.outputs = vec![x, c, y];
+        let prog = compile(&g, &[vec![2]]).unwrap();
+        let out = prog.execute(&[Tensor::new(vec![2], vec![1.0, 2.0])]).unwrap();
+        assert_eq!(out[0].data, vec![1.0, 2.0]);
+        assert_eq!(out[1].data, vec![7.0, 8.0]);
+        assert_eq!(out[2].data, vec![8.0, 10.0]);
+    }
+}

@@ -59,6 +59,15 @@ pub fn replicate_push(graph: &Graph, tagged_slots: &[usize]) -> Graph {
                     remap[id] = ng.push(Op::SumDirs, vec![remap[a]]);
                 }
             }
+            Op::SumDirsW(w) => {
+                let a = node.args[0];
+                if pending.contains_key(&a) {
+                    // weighted sum over replicated copies = scale by Σ w_r
+                    remap[id] = ng.push(Op::Scale(w.iter().sum()), vec![remap[a]]);
+                } else {
+                    remap[id] = ng.push(node.op.clone(), vec![remap[a]]);
+                }
+            }
             op => {
                 // Genuinely direction-dependent arg: tagged in the original
                 // graph but NOT pending (pending values are per-direction

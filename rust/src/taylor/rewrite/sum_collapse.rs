@@ -13,96 +13,127 @@ use std::collections::BTreeMap;
 
 use crate::taylor::graph::{Graph, Op};
 
-/// Rewrite every `SumDirs` node as far up the graph as linearity allows.
+/// The weight vector of one pushed sum: `None` is the all-ones plain
+/// `SumDirs`; `Some(i)` indexes a pooled weight vector (a plan's ±1 top
+/// signs or a 0/±1 lower-degree read mask).
+type WKey = Option<usize>;
+
+/// Rewrite every `SumDirs`/`SumDirsW` node as far up the graph as
+/// linearity allows.  Weighted sums push through exactly the same
+/// direction-linear nodes as plain ones — Σ_r w_r·(…) commutes wherever
+/// Σ_r does — so the compiled plans' ±1/0 weights ride along for free.
 pub fn sum_collapse(graph: &Graph, tagged_slots: &[usize], _num_dirs: usize) -> Graph {
     let tags = graph.direction_tags_with_inputs(tagged_slots);
     let mut ng = Graph { nodes: Vec::new(), outputs: Vec::new(), num_inputs: graph.num_inputs };
     let mut remap: Vec<usize> = vec![usize::MAX; graph.nodes.len()];
-    // old id -> new node computing sum_r value(old id); memoized so shared
-    // subtrees are only summed once.
-    let mut sum_memo: BTreeMap<usize, usize> = BTreeMap::new();
+    // (old id, weight key) -> new node computing Σ_r w_r·value(old id)_r;
+    // memoized so shared subtrees are only summed once per weighting.
+    let mut sum_memo: BTreeMap<(usize, WKey), usize> = BTreeMap::new();
+    // Distinct weight vectors encountered, deduplicated by equality.
+    let mut pool: Vec<Vec<f64>> = Vec::new();
+
+    // The weighted-sum node for `kind` applied to new node `arg`.
+    fn materialize(ng: &mut Graph, pool: &[Vec<f64>], kind: WKey, arg: usize) -> usize {
+        match kind {
+            None => ng.push(Op::SumDirs, vec![arg]),
+            Some(i) => ng.push(Op::SumDirsW(pool[i].clone()), vec![arg]),
+        }
+    }
+
+    fn weight_total(pool: &[Vec<f64>], kind: WKey, r: usize) -> f64 {
+        match kind {
+            None => r as f64,
+            Some(i) => pool[i].iter().sum(),
+        }
+    }
 
     // Recursion implemented as an explicit helper because it needs &mut ng.
+    #[allow(clippy::too_many_arguments)]
     fn sum_of(
         id: usize,
+        kind: WKey,
         graph: &Graph,
         tags: &[bool],
         remap: &[usize],
         ng: &mut Graph,
-        memo: &mut BTreeMap<usize, usize>,
+        memo: &mut BTreeMap<(usize, WKey), usize>,
+        pool: &[Vec<f64>],
     ) -> usize {
-        if let Some(&s) = memo.get(&id) {
+        if let Some(&s) = memo.get(&(id, kind)) {
             return s;
         }
         debug_assert!(tags[id], "sum_of on an untagged node");
         let node = graph.nodes[id].clone();
-        // Replication factor for scaling direction-free operands: recover
-        // it from any Replicate ancestor or tagged input shape at eval
-        // time is impossible here, so linear combine rules avoid needing
-        // it except for Replicate/AddConst/AddBias, which carry their own.
         let new_id = match node.op {
             Op::Replicate { r } => {
-                // sum_r of r identical copies
-                ng.push(Op::Scale(r as f64), vec![remap[node.args[0]]])
+                // Σ_r w_r of r identical copies = (Σ_r w_r)·value.
+                ng.push(Op::Scale(weight_total(pool, kind, r)), vec![remap[node.args[0]]])
             }
             Op::Add | Op::Sub => {
                 let (a, b) = (node.args[0], node.args[1]);
                 match (tags[a], tags[b]) {
                     (true, true) => {
-                        let sa = sum_of(a, graph, tags, remap, ng, memo);
-                        let sb = sum_of(b, graph, tags, remap, ng, memo);
+                        let sa = sum_of(a, kind, graph, tags, remap, ng, memo, pool);
+                        let sb = sum_of(b, kind, graph, tags, remap, ng, memo, pool);
                         ng.push(node.op.clone(), vec![sa, sb])
                     }
-                    // One operand direction-free: it was broadcast R times,
-                    // so it contributes R·value.  We cannot know R without
-                    // shape context; but in Taylor-mode graphs a broadcast
-                    // Add against a tagged operand never feeds the highest
-                    // coefficient (coefficients never get direction-free
-                    // *additive* terms — biases only touch x0).  Fall back
-                    // to a materialized sum for safety.
-                    _ => {
-                        let args = vec![remap[if tags[a] { a } else { b }]];
-                        let _ = args;
-                        ng.push(Op::SumDirs, vec![remap[id]])
-                    }
+                    // One operand direction-free: it was broadcast R times
+                    // and would contribute (Σ w)·value; Taylor-mode graphs
+                    // never feed coefficients direction-free additive terms
+                    // (biases only touch x0), so materialize for safety.
+                    _ => materialize(ng, pool, kind, remap[id]),
                 }
             }
             Op::Mul => {
                 let (a, b) = (node.args[0], node.args[1]);
                 match (tags[a], tags[b]) {
                     (true, false) => {
-                        let sa = sum_of(a, graph, tags, remap, ng, memo);
+                        let sa = sum_of(a, kind, graph, tags, remap, ng, memo, pool);
                         ng.push(Op::Mul, vec![sa, remap[b]])
                     }
                     (false, true) => {
-                        let sb = sum_of(b, graph, tags, remap, ng, memo);
+                        let sb = sum_of(b, kind, graph, tags, remap, ng, memo, pool);
                         ng.push(Op::Mul, vec![remap[a], sb])
                     }
                     // Nonlinear in the directions: the push stops here.
-                    _ => ng.push(Op::SumDirs, vec![remap[id]]),
+                    _ => materialize(ng, pool, kind, remap[id]),
                 }
             }
             Op::Scale(s) => {
-                let sa = sum_of(node.args[0], graph, tags, remap, ng, memo);
+                let sa = sum_of(node.args[0], kind, graph, tags, remap, ng, memo, pool);
                 ng.push(Op::Scale(s), vec![sa])
             }
             Op::MatMul { ref w } => {
-                let sa = sum_of(node.args[0], graph, tags, remap, ng, memo);
+                let sa = sum_of(node.args[0], kind, graph, tags, remap, ng, memo, pool);
                 ng.push(Op::MatMul { w: w.clone() }, vec![sa])
             }
             // Nonlinearities, direction-tagged inputs, and anything else:
-            // materialize the sum right here.
-            _ => ng.push(Op::SumDirs, vec![remap[id]]),
+            // materialize the (weighted) sum right here.
+            _ => materialize(ng, pool, kind, remap[id]),
         };
-        memo.insert(id, new_id);
+        memo.insert((id, kind), new_id);
         new_id
     }
 
     for (id, node) in graph.nodes.iter().enumerate() {
-        if let Op::SumDirs = node.op {
+        let kind: Option<WKey> = match &node.op {
+            Op::SumDirs => Some(None),
+            Op::SumDirsW(w) => {
+                let i = match pool.iter().position(|p| p == w) {
+                    Some(i) => i,
+                    None => {
+                        pool.push(w.clone());
+                        pool.len() - 1
+                    }
+                };
+                Some(Some(i))
+            }
+            _ => None,
+        };
+        if let Some(k) = kind {
             let a = node.args[0];
             if tags[a] {
-                remap[id] = sum_of(a, graph, &tags, &remap, &mut ng, &mut sum_memo);
+                remap[id] = sum_of(a, k, graph, &tags, &remap, &mut ng, &mut sum_memo, &pool);
                 continue;
             }
         }

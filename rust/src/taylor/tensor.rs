@@ -126,9 +126,14 @@ impl Tensor {
             }
             return;
         }
+        // Walk in chunks of the broadcast operand: straight slice loops,
+        // no per-element modulo (this runs per partition term in the jet
+        // hot loops).
         let n = other.data.len().max(1);
-        for (i, a) in self.data.iter_mut().enumerate() {
-            f(a, other.data[i % n]);
+        for chunk in self.data.chunks_mut(n) {
+            for (a, &b) in chunk.iter_mut().zip(&other.data) {
+                f(a, b);
+            }
         }
     }
 
@@ -299,6 +304,21 @@ impl Tensor {
             }
         }
         Tensor { shape: self.shape[1..].to_vec(), data: out }
+    }
+
+    /// Repeat each leading-axis row `b` times along a new middle axis:
+    /// `[R, D] -> [R, b, D]` — how `[R, D]` direction bundles broadcast
+    /// over a batch (shared by the jet engine and the program VM inputs).
+    pub fn broadcast_rows(&self, b: usize) -> Tensor {
+        assert_eq!(self.rank(), 2, "broadcast_rows needs a [R, D] tensor");
+        let (r, d) = (self.shape[0], self.shape[1]);
+        let mut data = Vec::with_capacity(r * b * d);
+        for ri in 0..r {
+            for _ in 0..b {
+                data.extend_from_slice(&self.data[ri * d..(ri + 1) * d]);
+            }
+        }
+        Tensor { shape: vec![r, b, d], data }
     }
 
     /// Insert a new leading axis of size r by repetition: `[...] -> [r, ...]`.

@@ -6,9 +6,10 @@
 //! it into collapsed Taylor mode without the builder knowing anything
 //! about collapsing.
 
-use super::graph::{Graph, NodeId, UnaryKind};
+use super::graph::{Graph, NodeId};
 use super::tensor::Tensor;
 use crate::mlp::Mlp;
+use crate::operators::plan::OperatorPlan;
 
 /// Channels of a K-jet inside the graph: x0 plus K coefficient channels.
 struct GraphJet {
@@ -91,6 +92,34 @@ fn fdb_coeff(g: &mut Graph, d: &[NodeId], xs: &[NodeId], k: usize) -> NodeId {
     }
 }
 
+/// Push a jet (x0 plus per-direction coefficient channels) through every
+/// MLP layer: all channels go through W, bias only on x0, tanh between
+/// layers via compositional Faà di Bruno nodes.  `xs` may be empty (a
+/// plain forward trace).
+fn push_mlp(g: &mut Graph, mlp: &Mlp, mut jet: GraphJet) -> GraphJet {
+    let order = jet.xs.len();
+    let n_layers = mlp.layers.len();
+    for (li, (w, b)) in mlp.layers.iter().enumerate() {
+        // linear: all channels through W, bias only on x0
+        let h0m = g.matmul(jet.x0, w.clone());
+        let h0 = g.add_bias(h0m, b.clone());
+        let hs: Vec<NodeId> = jet.xs.iter().map(|&x| g.matmul(x, w.clone())).collect();
+        jet = GraphJet { x0: h0, xs: hs };
+        if li + 1 < n_layers {
+            if order == 0 {
+                let t = g.tanh(jet.x0);
+                jet = GraphJet { x0: t, xs: Vec::new() };
+            } else {
+                let d = tanh_derivs(g, jet.x0, order);
+                let ys: Vec<NodeId> =
+                    (1..=order).map(|k| fdb_coeff(g, &d, &jet.xs, k)).collect();
+                jet = GraphJet { x0: d[0], xs: ys };
+            }
+        }
+    }
+    jet
+}
+
 /// Build the standard-Taylor graph computing `sum_r` of the K-th jet
 /// coefficient of the MLP, along R runtime directions.
 ///
@@ -109,25 +138,72 @@ pub fn build_mlp_jet_std(mlp: &Mlp, order: usize, num_dirs: usize) -> Graph {
         let z = g.replicate(zero_seed, num_dirs);
         xs.push(z);
     }
-    let mut jet = GraphJet { x0, xs };
-
-    let n_layers = mlp.layers.len();
-    for (li, (w, b)) in mlp.layers.iter().enumerate() {
-        // linear: all channels through W, bias only on x0
-        let h0m = g.matmul(jet.x0, w.clone());
-        let h0 = g.add_bias(h0m, b.clone());
-        let hs: Vec<NodeId> = jet.xs.iter().map(|&x| g.matmul(x, w.clone())).collect();
-        jet = GraphJet { x0: h0, xs: hs };
-        if li + 1 < n_layers {
-            let d = tanh_derivs(&mut g, jet.x0, order);
-            let ys: Vec<NodeId> =
-                (1..=order).map(|k| fdb_coeff(&mut g, &d, &jet.xs, k)).collect();
-            jet = GraphJet { x0: d[0], xs: ys };
-        }
-    }
-
+    let jet = push_mlp(&mut g, mlp, GraphJet { x0, xs });
     let summed = g.sum_dirs(*jet.xs.last().unwrap());
     g.outputs = vec![jet.x0, summed];
+    g
+}
+
+/// Build the standard-Taylor graph evaluating a *whole compiled operator
+/// plan*: the per-direction ±1 top-sum weights, the lower-degree channel
+/// reads and the c₀·f term — any `OperatorSpec` preset, not just the plain
+/// Laplacian sum.
+///
+/// Inputs: slot 0 = x0 `[B, D]`; slot 1 (when the plan has directions) =
+/// the plan's already-|w|^(1/k)-scaled direction bundle broadcast over the
+/// batch, `[R, B, D]` (tagged).  Outputs: `[f0, L f]`.
+pub fn build_plan_jet_std(mlp: &Mlp, plan: &OperatorPlan, batch: usize) -> Graph {
+    let order = plan.order;
+    assert!(order <= 4, "plan tracing implemented for K <= 4, got {order}");
+    let num_dirs = plan.dirs.shape[0];
+    let mut g = Graph::default();
+    let x0 = g.input(0);
+    let mut xs = Vec::new();
+    if order >= 1 {
+        xs.push(g.input(1));
+        if order >= 2 {
+            let zero_seed = g.constant(Tensor::zeros(&[batch, mlp.in_dim]));
+            for _ in 1..order {
+                let z = g.replicate(zero_seed, num_dirs);
+                xs.push(z);
+            }
+        }
+    }
+    let jet = push_mlp(&mut g, mlp, GraphJet { x0, xs });
+
+    // Assemble L f: weighted degree-K direction sum, then each lower-degree
+    // family as a signed partial direction sum, then the c₀·f term.
+    let mut op = if order >= 1 {
+        let top = *jet.xs.last().expect("order >= 1 keeps channels");
+        let topsum = if plan.top_weights.iter().all(|&w| w == 1.0) {
+            g.sum_dirs(top)
+        } else {
+            g.sum_dirs_weighted(top, plan.top_weights.clone())
+        };
+        let mut acc = topsum;
+        for read in &plan.lower {
+            let mut w = vec![0.0; num_dirs];
+            for wi in &mut w[read.start..read.start + read.len] {
+                *wi = read.sign;
+            }
+            let part = g.sum_dirs_weighted(jet.xs[read.degree - 1], w);
+            acc = g.add(acc, part);
+        }
+        Some(acc)
+    } else {
+        None
+    };
+    if plan.c0 != 0.0 {
+        let c = g.scale(jet.x0, plan.c0);
+        op = Some(match op {
+            Some(o) => g.add(o, c),
+            None => c,
+        });
+    }
+    // A zero operator (c0 = 0, no directions) cannot come from a validated
+    // spec; emit 0·f so the graph still has two outputs.
+    let op = op.unwrap_or_else(|| g.scale(jet.x0, 0.0));
+    g.outputs = vec![jet.x0, op];
     g
 }
 
@@ -143,10 +219,6 @@ pub fn basis_dirs(dim: usize, batch: usize) -> Tensor {
         }
     }
     Tensor::new(vec![dim, batch, dim], data)
-}
-
-pub fn _unary_used() -> UnaryKind {
-    UnaryKind::Tanh
 }
 
 #[cfg(test)]

@@ -109,6 +109,32 @@ fn stochastic_route_works_and_metrics_accumulate() {
 }
 
 #[test]
+fn second_batch_on_a_route_hits_the_program_cache() {
+    let svc = start_service();
+    let mut rng = Rng::new(7);
+    let route = RouteKey::new("laplacian", "collapsed", "exact");
+    // Two batches, same route and batch shape: the first compiles the
+    // route's program, the second must be pure VM execution.
+    svc.eval_blocking(route.clone(), random_points(&mut rng, 4, 16), 16)
+        .unwrap();
+    svc.eval_blocking(route, random_points(&mut rng, 4, 16), 16)
+        .unwrap();
+    let hits = svc
+        .metrics()
+        .program_cache_hits
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let misses = svc
+        .metrics()
+        .program_cache_misses
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(misses >= 1, "first batch must compile (misses={misses})");
+    assert!(hits >= 1, "second batch must reuse the compiled program (hits={hits})");
+    let summary = svc.metrics().summary();
+    assert!(summary.contains("prog_cache_hits="), "{summary}");
+    svc.shutdown();
+}
+
+#[test]
 fn unknown_route_is_rejected() {
     let svc = start_service();
     let err = svc.submit(RouteKey::new("nonexistent", "x", "exact"), vec![0.0; 16], 16);

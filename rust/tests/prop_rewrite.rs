@@ -4,10 +4,13 @@
 //! (Hand-rolled randomized harness — no proptest offline; DESIGN.md §2.)
 
 use ctaylor::mlp::Mlp;
+use ctaylor::operators::plan::{apply, FamilySpec, OperatorSpec};
 use ctaylor::taylor::interp::{eval, flops, infer_shapes};
+use ctaylor::taylor::jet::Collapse;
+use ctaylor::taylor::program;
 use ctaylor::taylor::rewrite::collapse;
 use ctaylor::taylor::tensor::Tensor;
-use ctaylor::taylor::trace::{build_mlp_jet_std, TAGGED_SLOTS};
+use ctaylor::taylor::trace::{build_mlp_jet_std, build_plan_jet_std, TAGGED_SLOTS};
 use ctaylor::util::prng::Rng;
 
 fn random_case(rng: &mut Rng) -> (Mlp, usize, usize, Tensor, Tensor) {
@@ -94,6 +97,90 @@ fn rewrites_are_idempotent() {
         let b = eval(&c2, &[x0, dirs]).unwrap();
         for (x, y) in a.iter().zip(&b) {
             assert!(x.max_abs_diff(y) < 1e-12);
+        }
+    }
+}
+
+/// Every registry `OperatorSpec` preset (plus a composed mixed-order
+/// spec with a lower-degree read), at small dims for speed.
+fn presets(dim: usize, rng: &mut Rng) -> Vec<OperatorSpec> {
+    let mut sigma = Tensor::zeros(&[dim, dim]);
+    for i in 0..dim {
+        sigma.data[i * dim + i] = 0.5 + 0.2 * i as f64;
+    }
+    let mut ddata = vec![0.0; 3 * dim];
+    for v in ddata.iter_mut() {
+        *v = rng.normal();
+    }
+    let dirs = Tensor::new(vec![3, dim], ddata);
+    let mut e0 = vec![0.0; dim];
+    e0[0] = 1.0;
+    let advdiff = OperatorSpec::new(
+        "advdiff",
+        0.5,
+        vec![
+            FamilySpec { weight: -0.75, degree: 1, dirs: Tensor::new(vec![1, dim], e0) },
+            FamilySpec { weight: 1.0, degree: 2, dirs: ctaylor::operators::basis(dim) },
+        ],
+    )
+    .unwrap();
+    vec![
+        OperatorSpec::laplacian(dim),
+        OperatorSpec::weighted_laplacian(&sigma),
+        OperatorSpec::helmholtz_preset(dim),
+        OperatorSpec::biharmonic(dim),
+        OperatorSpec::stochastic_laplacian(&dirs),
+        OperatorSpec::stochastic_biharmonic(&dirs),
+        OperatorSpec::stochastic_helmholtz(2.25, 1.0, &dirs),
+        advdiff,
+    ]
+}
+
+/// For every preset: the traced + collapsed + compiled VM path matches
+/// the jet-engine oracle (`plan::apply`) to 1e-10 relative, and the
+/// collapsed graph's propagation cost is strictly below the standard
+/// trace's.
+#[test]
+fn every_preset_compiles_and_matches_the_jet_oracle() {
+    let mut rng = Rng::new(0x9E7);
+    let (dim, batch) = (3usize, 2usize);
+    let mlp = Mlp::init(&mut rng, dim, &[8, 6, 1], batch);
+    let x0 = mlp.random_input(&mut rng);
+    for spec in presets(dim, &mut rng) {
+        let plan = spec.compile();
+        let r = plan.dirs.shape[0];
+        assert!(r >= 2, "{}: preset should stack >= 2 directions", spec.name);
+        // Directions broadcast over the batch, as the runtime feeds them.
+        let dirs = plan.dirs.broadcast_rows(batch);
+        let inputs = vec![x0.clone(), dirs];
+        let shapes = vec![vec![batch, dim], vec![r, batch, dim]];
+
+        let g_std = build_plan_jet_std(&mlp, &plan, batch);
+        let g_col = collapse(&g_std, TAGGED_SLOTS, r);
+        let cost_std = g_std.propagation_cost(TAGGED_SLOTS, r);
+        let cost_col = g_col.propagation_cost(TAGGED_SLOTS, r);
+        assert!(
+            cost_col < cost_std,
+            "{}: collapse must cut propagation cost ({cost_col} !< {cost_std})",
+            spec.name
+        );
+
+        let (f0, opv) = apply(&mlp, &x0, &plan, Collapse::Collapsed);
+        let scale = opv.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for (label, g) in [("std", &g_std), ("collapsed", &g_col)] {
+            let prog = program::compile(g, &shapes).unwrap();
+            let out = prog.execute(&inputs).unwrap();
+            assert!(
+                out[0].max_abs_diff(&f0) < 1e-10,
+                "{} [{label}]: f0 deviates from the jet engine",
+                spec.name
+            );
+            let diff = out[1].max_abs_diff(&opv);
+            assert!(
+                diff < 1e-10 * scale,
+                "{} [{label}]: VM deviates from plan::apply by {diff:.2e}",
+                spec.name
+            );
         }
     }
 }
