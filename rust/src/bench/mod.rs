@@ -583,23 +583,163 @@ pub fn run_graph_ablation(reps: usize) -> Result<String> {
     Ok(out)
 }
 
-/// The CI smoke bench: fig1 sweeps plus the graph-compiler ablation,
-/// combined into one `smoke.json` so BENCH_smoke tracks both the serving
-/// path and the compiler win per PR (reusing the fig1 build — no extra
-/// compile cost in the job).
+/// GEMM micro-kernel sweep: the seed's branchy zero-skip triple loop vs
+/// the tiled packed kernel, in GFLOP/s, across MLP-layer-like shapes plus
+/// the 256³ headline — the kernel layer's perf trajectory.
+pub fn run_kernel_micro(reps: usize) -> Result<String> {
+    use crate::taylor::kernels;
+    use crate::util::stats::time_fn;
+
+    let shapes: [(usize, usize, usize); 5] =
+        [(256, 256, 256), (512, 64, 64), (1024, 32, 32), (256, 16, 32), (4096, 32, 1)];
+    let mut rng = Rng::new(33);
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for (m, k, n) in shapes {
+        let mut a = vec![0.0f64; m * k];
+        let mut b = vec![0.0f64; k * n];
+        for v in a.iter_mut() {
+            *v = rng.normal();
+        }
+        for v in b.iter_mut() {
+            *v = rng.normal();
+        }
+        let mut c = vec![0.0f64; m * n];
+        let mut c_ref = vec![0.0f64; m * n];
+        let flops = 2.0 * (m * k * n) as f64;
+        let t_naive = time_fn(
+            || {
+                kernels::gemm_reference(m, k, n, &a, &b, &mut c_ref);
+                std::hint::black_box(&c_ref);
+            },
+            reps,
+        );
+        let t_tiled = time_fn(
+            || {
+                kernels::gemm(m, k, n, &a, &b, &mut c);
+                std::hint::black_box(&c);
+            },
+            reps,
+        );
+        // Faster must also mean equal.
+        for (w, g) in c_ref.iter().zip(&c) {
+            anyhow::ensure!(
+                (w - g).abs() <= 1e-12 * (1.0 + w.abs()),
+                "tiled GEMM deviates from the naive loop on {m}x{k}x{n}"
+            );
+        }
+        let gf = |t: f64| flops / t.max(1e-12) / 1e9;
+        let speedup = t_naive.min / t_tiled.min.max(1e-12);
+        rows.push(vec![
+            format!("{m}x{k}x{n}"),
+            format!("{:.2}", gf(t_naive.min)),
+            format!("{:.2}", gf(t_tiled.min)),
+            format!("x{speedup:.2}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("n", Json::num(n as f64)),
+            ("naive_gflops", Json::num(gf(t_naive.min))),
+            ("tiled_gflops", Json::num(gf(t_tiled.min))),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    let mut out = String::from("# Kernel micro-bench — naive vs tiled GEMM (f64)\n\n");
+    out.push_str(&table(&["m x k x n", "naive GFLOP/s", "tiled GFLOP/s", "speedup"], &rows));
+    save_json(&results_dir(), "kernel_micro", &Json::Arr(json_rows))?;
+    save_text(&results_dir(), "kernel_micro", &out)?;
+    Ok(out)
+}
+
+/// Thread-scaling ablation: the serving path (cache hit → sharded VM) on
+/// the largest fig1 batch, swept across executor counts 1/2/4/N.  Each
+/// count gets its own pool and cache, so every row measures the same
+/// steady state at a different parallelism.
+pub fn run_thread_scaling(registry: &Registry, reps: usize) -> Result<String> {
+    use crate::runtime::native;
+    use crate::runtime::HostTensor;
+    use crate::util::pool::Pool;
+    use crate::util::stats::time_fn;
+
+    let meta = registry
+        .select("laplacian", "collapsed", "exact")
+        .into_iter()
+        .max_by_key(|a| a.batch)
+        .ok_or_else(|| anyhow::anyhow!("no laplacian artifacts in the registry"))?
+        .clone();
+    let inputs = workload::inputs_for(&meta, 7);
+    let refs: Vec<&HostTensor> = inputs.iter().collect();
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut counts = vec![1usize, 2, 4, avail];
+    counts.sort_unstable();
+    counts.dedup();
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    let mut base = None;
+    for t in counts {
+        // `t` executors total: the caller plus t-1 pool workers.
+        let pool = Pool::new(t - 1);
+        let cache = native::ProgramCache::new();
+        // Compile outside the timed region (steady-state = cache hit).
+        native::execute_pooled(&meta, &refs, &cache, &pool)?;
+        let timing = time_fn(
+            || {
+                native::execute_pooled(&meta, &refs, &cache, &pool).expect("serving execution");
+            },
+            reps,
+        );
+        let b = *base.get_or_insert(timing.min);
+        rows.push(vec![
+            format!("{t}"),
+            format!("{}", native::shard_count(meta.batch, t)),
+            format!("{:.3}", timing.min * 1e3),
+            format!("x{:.2}", b / timing.min.max(1e-12)),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("threads", Json::num(t as f64)),
+            ("shards", Json::num(native::shard_count(meta.batch, t) as f64)),
+            ("ms", Json::num(timing.min * 1e3)),
+            ("speedup_vs_1", Json::num(b / timing.min.max(1e-12))),
+        ]));
+    }
+    let mut out = format!(
+        "# Thread scaling — {} (B={}) through the sharded serving path\n\n",
+        meta.name, meta.batch
+    );
+    out.push_str(&table(&["threads", "shards", "time [ms]", "speedup vs 1"], &rows));
+    save_json(&results_dir(), "thread_scaling", &Json::Arr(json_rows))?;
+    save_text(&results_dir(), "thread_scaling", &out)?;
+    Ok(out)
+}
+
+/// The CI smoke bench: fig1 sweeps, the graph-compiler ablation, the GEMM
+/// kernel micro-sweep and the thread-scaling ablation, combined into one
+/// `smoke.json` so BENCH_smoke tracks the serving path, the compiler win
+/// and the kernel/threading layer per PR (reusing the fig1 build — no
+/// extra compile cost in the job).
 pub fn run_smoke(registry: &Registry, reps: usize) -> Result<String> {
     let mut out = run_fig1(registry, reps)?;
     out.push('\n');
     out.push_str(&run_graph_ablation(reps.max(3))?);
+    out.push('\n');
+    out.push_str(&run_kernel_micro(reps.max(3))?);
+    out.push('\n');
+    out.push_str(&run_thread_scaling(registry, reps.max(3))?);
     let dir = results_dir();
-    let fig1 = std::fs::read_to_string(dir.join("fig1.json"))?;
-    let ablation = std::fs::read_to_string(dir.join("graph_ablation.json"))?;
-    let fig1_json = crate::util::json::parse(&fig1).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let abl_json = crate::util::json::parse(&ablation).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let load = |name: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(dir.join(format!("{name}.json")))?;
+        crate::util::json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))
+    };
     save_json(
         &dir,
         "smoke",
-        &Json::obj(vec![("fig1", fig1_json), ("graph_ablation", abl_json)]),
+        &Json::obj(vec![
+            ("fig1", load("fig1")?),
+            ("graph_ablation", load("graph_ablation")?),
+            ("kernel_micro", load("kernel_micro")?),
+            ("thread_scaling", load("thread_scaling")?),
+        ]),
     )?;
     Ok(out)
 }

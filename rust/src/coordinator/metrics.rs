@@ -19,6 +19,9 @@ pub struct Metrics {
     /// worker's `RuntimeClient` after each flush (gauges, not counters).
     pub program_cache_hits: AtomicU64,
     pub program_cache_misses: AtomicU64,
+    /// Executor threads of the serving worker pool (gauge, set at worker
+    /// start): 1 = strictly single-threaded VM serving.
+    pub pool_executors: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -63,6 +66,11 @@ impl Metrics {
         self.program_cache_misses.store(misses, Ordering::Relaxed);
     }
 
+    /// Record the worker pool's executor-thread count (batch sharding).
+    pub fn set_pool_executors(&self, n: u64) {
+        self.pool_executors.store(n, Ordering::Relaxed);
+    }
+
     pub fn mean_latency_s(&self) -> f64 {
         let n = self.count_latencies();
         if n == 0 {
@@ -96,7 +104,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} points={} batches={} padded={} errors={} rejected={} \
-             prog_cache_hits={} prog_cache_misses={} mean_latency={:.3}ms p99<={:.3}ms",
+             prog_cache_hits={} prog_cache_misses={} pool_executors={} \
+             mean_latency={:.3}ms p99<={:.3}ms",
             self.requests.load(Ordering::Relaxed),
             self.points.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -105,6 +114,7 @@ impl Metrics {
             self.rejected.load(Ordering::Relaxed),
             self.program_cache_hits.load(Ordering::Relaxed),
             self.program_cache_misses.load(Ordering::Relaxed),
+            self.pool_executors.load(Ordering::Relaxed),
             self.mean_latency_s() * 1e3,
             self.latency_quantile_s(0.99) * 1e3,
         )

@@ -193,6 +193,9 @@ fn worker_loop(
     config: ServiceConfig,
 ) -> Result<()> {
     let client = RuntimeClient::cpu()?;
+    // The native backend shards packed batches over the global pool; the
+    // executor count (CTAYLOR_THREADS) is surfaced as a serving gauge.
+    metrics.set_pool_executors(crate::util::pool::Pool::global().executors() as u64);
     let mut rng = Rng::new(config.seed);
     // Shared parameter vectors per (dim, widths): every artifact of one
     // network shape sees the same θ.

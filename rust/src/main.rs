@@ -8,7 +8,8 @@
 //! ctaylor spec [--op helmholtz] [--dim 16] [--c0 2.25] [--c2 1.0]
 //! ctaylor analyze <name|path>...       # HLO memory/FLOP analysis
 //! ctaylor eval --op laplacian --method collapsed [--n 8]
-//! ctaylor bench [--which fig1|table1|f2|g3|native|graph|smoke|coordinator|all] [--reps N]
+//! ctaylor bench [--which fig1|table1|f2|g3|native|graph|kernels|threads|smoke|coordinator|all]
+//!               [--reps N]
 //! ctaylor serve-demo [--requests N]    # coordinator under load
 //! ```
 
@@ -235,6 +236,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     if run("graph") {
         println!("{}", bench::run_graph_ablation(reps.max(5))?);
+    }
+    if run("kernels") {
+        println!("{}", bench::run_kernel_micro(reps.max(3))?);
+    }
+    if run("threads") {
+        println!("{}", bench::run_thread_scaling(&reg, reps.max(3))?);
     }
     if which == "smoke" {
         println!("{}", bench::run_smoke(&reg, reps)?);

@@ -38,6 +38,12 @@ impl RuntimeClient {
         self.programs.stats()
     }
 
+    /// Number of compiled route programs held — each carries its reusable
+    /// execution arenas and, for exact routes, its broadcast directions.
+    pub fn programs_cached(&self) -> usize {
+        self.programs.len()
+    }
+
     /// Build one executable (uncached).  The HLO text at `path` is not
     /// needed by the native backend — it feeds the memory analyzer — so a
     /// missing file is not an error here.
@@ -81,5 +87,6 @@ mod tests {
         assert_eq!(client.cached(), 1);
         assert!(client.load(&reg, "no_such_artifact").is_err());
         assert_eq!(client.platform(), "native-cpu");
+        assert_eq!(client.programs_cached(), 0, "loading compiles no programs yet");
     }
 }

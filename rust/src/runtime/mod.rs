@@ -10,7 +10,7 @@
 mod client;
 mod executable;
 mod io;
-mod native;
+pub mod native;
 mod registry;
 
 pub use client::RuntimeClient;

@@ -16,6 +16,15 @@
 //! `python/compile/model.py` lays parameters out, so a future PJRT
 //! backend can swap in behind the same [`ArtifactMeta`] surface without
 //! touching callers.
+//!
+//! Execution-layer mechanics (the hardware-speed path): every cached
+//! program carries its own free-list of [`ExecArena`]s (steady-state VM
+//! runs allocate nothing) plus, for exact routes, the batch-broadcast
+//! direction bundle; large packed batches are sharded row-wise across
+//! the [`Pool`] workers (`CTAYLOR_THREADS`), each thread running the
+//! same cached sub-batch program against its own arena — per-row
+//! arithmetic is identical, so sharded results are bitwise equal to
+//! single-threaded ones.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,22 +39,46 @@ use crate::nested;
 use crate::operators::plan::{OperatorPlan, HELMHOLTZ_C0, HELMHOLTZ_C2};
 use crate::operators::OperatorSpec;
 use crate::taylor::jet::Collapse;
-use crate::taylor::program::{self, Program};
+use crate::taylor::program::{self, ExecArena, Program};
 use crate::taylor::rewrite;
 use crate::taylor::tensor::Tensor;
 use crate::taylor::trace;
+use crate::util::pool::{Pool, TypedJob};
 
-/// Per-route cache of compiled [`Program`]s: (artifact, batch, θ) →
-/// traced + rewritten + buffer-planned executable.  Hit/miss counters
-/// feed the coordinator metrics, so the serving cache-amortization claim
-/// is observable.
+/// A compiled route program plus the per-program execution state the
+/// serving path reuses call to call: the broadcast direction input
+/// (exact routes only — stochastic routes draw fresh directions per
+/// call) and a free-list of [`ExecArena`]s, one per concurrent executor
+/// thread, so steady-state VM runs perform zero heap allocations.
+#[derive(Debug)]
+pub struct CachedProgram {
+    pub program: Program,
+    bdirs: Option<Tensor>,
+    arenas: Mutex<Vec<ExecArena>>,
+}
+
+impl CachedProgram {
+    fn new(program: Program, bdirs: Option<Tensor>) -> CachedProgram {
+        CachedProgram { program, bdirs, arenas: Mutex::new(Vec::new()) }
+    }
+
+    /// Run the VM against a pooled arena (popped for the duration of the
+    /// call, so concurrent shard threads each get their own).
+    pub fn run(&self, inputs: &[&Tensor], outs: &mut Vec<Tensor>) -> Result<()> {
+        let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
+        let res = self.program.execute_with(&mut arena, inputs, outs);
+        self.arenas.lock().unwrap().push(arena);
+        res
+    }
+}
+
 /// One cached program plus the exact θ it was compiled against: keys
 /// carry only a 64-bit θ fingerprint, so hits re-verify the full bytes —
 /// a fingerprint collision recompiles instead of silently serving a
 /// program with the wrong embedded weights.
 #[derive(Debug)]
 struct CacheEntry {
-    program: Arc<Program>,
+    program: Arc<CachedProgram>,
     theta: Vec<f32>,
 }
 
@@ -56,6 +89,10 @@ struct CacheInner {
     order: VecDeque<String>,
 }
 
+/// Per-route cache of compiled programs: (artifact, sub-batch, θ) →
+/// traced + rewritten + buffer-planned [`CachedProgram`].  Hit/miss
+/// counters feed the coordinator metrics, so the serving
+/// cache-amortization claim is observable.
 #[derive(Debug, Default)]
 pub struct ProgramCache {
     inner: Mutex<CacheInner>,
@@ -92,8 +129,8 @@ impl ProgramCache {
         &self,
         key: String,
         theta: &[f32],
-        build: impl FnOnce() -> Result<Program>,
-    ) -> Result<Arc<Program>> {
+        build: impl FnOnce() -> Result<CachedProgram>,
+    ) -> Result<Arc<CachedProgram>> {
         if let Some(e) = self.inner.lock().unwrap().map.get(&key) {
             if e.theta == theta {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -329,9 +366,86 @@ fn compile_route(
     program::compile(&graph, &input_shapes)
 }
 
+/// Minimum rows a shard must keep: below this the pool dispatch overhead
+/// beats the row-parallel win.
+const MIN_SHARD_ROWS: usize = 4;
+
+/// Number of equal sub-batches a packed batch splits into for the given
+/// executor count: the largest count that divides the batch evenly with
+/// at least [`MIN_SHARD_ROWS`] rows each (1 ⇒ run single-threaded).
+pub fn shard_count(batch: usize, executors: usize) -> usize {
+    if executors <= 1 || batch < 2 * MIN_SHARD_ROWS {
+        return 1;
+    }
+    let mut t = executors.min(batch / MIN_SHARD_ROWS);
+    while t > 1 && batch % t != 0 {
+        t -= 1;
+    }
+    t
+}
+
+/// Split a packed batch row-wise into `shards` equal sub-batches and run
+/// the *same* cached sub-batch program over each on the worker pool (one
+/// arena per thread), stitching outputs back in row order.  Per-row
+/// arithmetic is identical to the single-threaded program, so results
+/// are bitwise equal.
+fn run_sharded(
+    prog: &Arc<CachedProgram>,
+    x0: &Tensor,
+    fresh_dirs: Option<Arc<Tensor>>,
+    shards: usize,
+    sub: usize,
+    dim: usize,
+    pool: &Pool,
+) -> Result<Vec<Tensor>> {
+    let jobs: Vec<TypedJob<Result<Vec<Tensor>>>> = (0..shards)
+        .map(|s| {
+            let prog = Arc::clone(prog);
+            let dirs = fresh_dirs.clone();
+            let xs = Tensor::new(
+                vec![sub, dim],
+                x0.data[s * sub * dim..(s + 1) * sub * dim].to_vec(),
+            );
+            let job: TypedJob<Result<Vec<Tensor>>> = Box::new(move || {
+                let mut inputs: Vec<&Tensor> = vec![&xs];
+                if let Some(d) = dirs.as_deref() {
+                    inputs.push(d);
+                } else if let Some(d) = prog.bdirs.as_ref() {
+                    inputs.push(d);
+                }
+                let mut outs = Vec::new();
+                prog.run(&inputs, &mut outs)?;
+                Ok(outs)
+            });
+            job
+        })
+        .collect();
+    let results = pool.run(jobs);
+    // Stitch each output's shard rows back into the full batch.
+    let mut stitched: Vec<Tensor> = Vec::new();
+    for (s, r) in results.into_iter().enumerate() {
+        let outs = r?;
+        if s == 0 {
+            for t in &outs {
+                ensure!(t.shape.first() == Some(&sub), "shard output must be batch-leading");
+                let mut shape = t.shape.clone();
+                shape[0] = sub * shards;
+                stitched.push(Tensor::zeros(&shape));
+            }
+        }
+        for (full, part) in stitched.iter_mut().zip(&outs) {
+            let len = part.data.len();
+            full.data[s * len..(s + 1) * len].copy_from_slice(&part.data);
+        }
+    }
+    Ok(stitched)
+}
+
 /// Execute one Taylor-method artifact through the cached compiled-program
-/// path: resolve the spec, compile (or fetch) the route's program, run
-/// the VM on `[x0, scaled dirs]`.
+/// path: resolve the spec, compile (or fetch) the route's program — split
+/// into per-thread sub-batches when the pool and batch allow — and run
+/// the VM on `[x0, scaled dirs]` against the program's pooled arenas.
+#[allow(clippy::too_many_arguments)]
 fn execute_taylor(
     meta: &ArtifactMeta,
     mlp: &Mlp,
@@ -340,6 +454,7 @@ fn execute_taylor(
     mode: Collapse,
     cache: &ProgramCache,
     theta: &[f32],
+    pool: &Pool,
 ) -> Result<(Tensor, Tensor)> {
     let spec = resolve_spec(meta, aux)?;
     let plan = spec.compile();
@@ -349,29 +464,68 @@ fn execute_taylor(
     // stochastic routes (fresh dirs every batch) still hit the cache.  The
     // direction *count* R shapes the seeds and weight masks, so it is part
     // of the key (a caller varying S per call recompiles, not errors).
+    // Sharded batches cache the program at the *sub-batch* size: every
+    // shard thread runs the same executable.
     let num_dirs = plan.dirs.shape[0];
+    let shards = shard_count(batch, pool.executors());
+    let sub = batch / shards;
     let theta_fp = theta_fingerprint(theta);
-    let key = format!("{}|b{}|r{}|t{theta_fp:016x}", meta.name, batch, num_dirs);
-    let prog =
-        cache.get_or_compile(key, theta, || compile_route(mlp, &plan, batch, meta.dim, mode))?;
-    let mut inputs = vec![x0.clone()];
-    if plan.order >= 1 {
-        inputs.push(plan.dirs.broadcast_rows(batch));
-    }
-    let mut out = prog.execute(&inputs)?;
-    ensure!(out.len() == 2, "{}: traced program must emit [f0, op]", meta.name);
-    let opv = out.pop().expect("two outputs");
-    let f0 = out.pop().expect("two outputs");
+    let key = format!("{}|b{sub}|r{num_dirs}|t{theta_fp:016x}", meta.name);
+    let stochastic = meta.mode == "stochastic";
+    let has_dirs = plan.order >= 1;
+    let prog = cache.get_or_compile(key, theta, || {
+        let program = compile_route(mlp, &plan, sub, meta.dim, mode)?;
+        // Exact routes: the scaled direction bundle is part of the route,
+        // so its batch broadcast is compiled-in state reused every call.
+        let bdirs = if has_dirs && !stochastic {
+            Some(plan.dirs.broadcast_rows(sub))
+        } else {
+            None
+        };
+        Ok(CachedProgram::new(program, bdirs))
+    })?;
+    let fresh_dirs = if has_dirs && stochastic {
+        Some(Arc::new(plan.dirs.broadcast_rows(sub)))
+    } else {
+        None
+    };
+
+    let mut outs = if shards == 1 {
+        let mut inputs: Vec<&Tensor> = vec![x0];
+        if has_dirs {
+            inputs.push(fresh_dirs.as_deref().or(prog.bdirs.as_ref()).expect("direction input"));
+        }
+        let mut outs = Vec::new();
+        prog.run(&inputs, &mut outs)?;
+        outs
+    } else {
+        run_sharded(&prog, x0, fresh_dirs, shards, sub, meta.dim, pool)?
+    };
+    ensure!(outs.len() == 2, "{}: traced program must emit [f0, op]", meta.name);
+    let opv = outs.pop().expect("two outputs");
+    let f0 = outs.pop().expect("two outputs");
     Ok((f0, opv))
 }
 
 /// Execute one artifact natively.  `inputs` follow the manifest order:
 /// `theta`, `x`, then `sigma` (weighted Laplacian) and/or `dirs`
-/// (stochastic modes).  Returns `[f0, op]`, each `[B, 1]` f32.
+/// (stochastic modes).  Returns `[f0, op]`, each `[B, 1]` f32.  Taylor
+/// routes shard large batches across the process-wide [`Pool::global`].
 pub fn execute(
     meta: &ArtifactMeta,
     inputs: &[&HostTensor],
     cache: &ProgramCache,
+) -> Result<Vec<HostTensor>> {
+    execute_pooled(meta, inputs, cache, Pool::global())
+}
+
+/// [`execute`] with an explicit worker pool — the bench harness sweeps
+/// pool sizes through this; serving uses the global pool.
+pub fn execute_pooled(
+    meta: &ArtifactMeta,
+    inputs: &[&HostTensor],
+    cache: &ProgramCache,
+    pool: &Pool,
 ) -> Result<Vec<HostTensor>> {
     ensure!(inputs.len() >= 2, "{}: need at least theta and x inputs", meta.name);
     let mlp = mlp_from_theta(meta, &inputs[0].data)?;
@@ -393,7 +547,7 @@ pub fn execute(
             (f0, opv)
         }
         Method::Taylor(mode) => {
-            execute_taylor(meta, &mlp, &x0, &aux, mode, cache, &inputs[0].data)?
+            execute_taylor(meta, &mlp, &x0, &aux, mode, cache, &inputs[0].data, pool)?
         }
     };
 
@@ -426,6 +580,22 @@ mod tests {
         assert_eq!(out[0].shape, vec![2, 1]);
         assert_eq!(out[1].shape, vec![2, 1]);
         assert!(out[1].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn shard_counts_divide_batches_evenly() {
+        assert_eq!(shard_count(16, 1), 1, "single executor never shards");
+        assert_eq!(shard_count(4, 8), 1, "small batches stay whole");
+        assert_eq!(shard_count(16, 2), 2);
+        assert_eq!(shard_count(16, 4), 4);
+        assert_eq!(shard_count(16, 3), 2, "non-dividing counts fall back to the next divisor");
+        assert_eq!(shard_count(8, 4), 2, "MIN_SHARD_ROWS caps the split");
+        for batch in [8usize, 12, 16, 24, 64] {
+            for ex in 1..=8usize {
+                let t = shard_count(batch, ex);
+                assert!(t >= 1 && batch % t == 0 && (t == 1 || batch / t >= MIN_SHARD_ROWS));
+            }
+        }
     }
 
     #[test]
@@ -492,6 +662,7 @@ mod tests {
             Collapse::Collapsed,
             &cache,
             &theta.data,
+            Pool::global(),
         )
         .unwrap();
         assert!(vf0.max_abs_diff(&f0) < 1e-10);

@@ -132,7 +132,9 @@ fn broadcast_dirs(x0: &Tensor, dirs: &Tensor) -> Tensor {
 // Propagation rules
 // ---------------------------------------------------------------------------
 
-/// Affine map: every channel goes through W; only x0 gets the bias.
+/// Affine map: every channel goes through W (the tiled GEMM kernel —
+/// `Tensor::matmul` routes through `taylor::kernels`); only x0 gets the
+/// bias.
 pub fn linear(jet: &Jet, w: &Tensor, b: Option<&Tensor>) -> Jet {
     let mut y0 = jet.x0.matmul(w);
     if let Some(b) = b {

@@ -1,0 +1,407 @@
+//! Tiled dense f64 kernels: the GEMM and transpose under `Tensor::matmul`,
+//! the jet engine's linear rule and the program VM's `Instr::MatMul`.
+//!
+//! The seed VM ran every matmul through a row-major triple loop with a
+//! branchy per-element zero-skip — kept verbatim as [`gemm_reference`]
+//! for property tests and the `kernel_micro` bench baseline.  [`gemm`]
+//! replaces it with a BLIS-style cache-blocked kernel: B is packed per
+//! `[KC × NC]` block into NR-wide column panels and A per `[MC × KC]`
+//! block into MR-tall row panels (both zero-padded to the tile size so
+//! the micro-kernel never branches on edges), and an unrolled MR × NR
+//! register tile accumulates with fused multiply-adds where the target
+//! has the instruction.  Packing scratch lives in thread-locals, so
+//! steady-state calls allocate nothing — the kernel layer keeps the
+//! zero-alloc property of the VM's [`super::program::ExecArena`] path.
+//!
+//! A mostly-zero A — the scaled one-hot direction bundles every exact
+//! route feeds its first layer — keeps the seed's zero-skip loop (dense
+//! tiles would multiply the zeros, ~len/nnz wasted work); a cheap
+//! nonzero probe picks the path per call.
+//!
+//! Accumulation walks k in ascending order exactly like the reference
+//! loop, so in the default build (no hardware FMA enabled at compile
+//! time) results are bitwise identical to [`gemm_reference`] whenever k
+//! fits one KC-block; beyond that (k > 256 partial-sum grouping, or an
+//! FMA build fusing the rounding) they match to f64 rounding — the
+//! property tests assert ≤ 1e-12 relative.
+
+use std::cell::RefCell;
+
+/// Register-tile rows (micro-kernel height).
+pub const MR: usize = 4;
+/// Register-tile columns (micro-kernel width).
+pub const NR: usize = 4;
+/// Rows of A per L2-resident packed block.
+const MC: usize = 128;
+/// Contraction depth per packed panel pair.
+const KC: usize = 256;
+/// Columns of B per packed block.
+const NC: usize = 512;
+
+thread_local! {
+    /// (packed-A, packed-B) scratch, reused across calls on this thread.
+    static PACK: RefCell<(Vec<f64>, Vec<f64>)> = const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Fused multiply-add where the target really has the instruction;
+/// separate mul+add otherwise (`f64::mul_add` without hardware FMA is a
+/// libm call — far slower than the loop it would replace).
+#[inline(always)]
+fn fmadd(a: f64, b: f64, acc: f64) -> f64 {
+    if cfg!(target_feature = "fma") {
+        a.mul_add(b, acc)
+    } else {
+        a * b + acc
+    }
+}
+
+/// `c = a · b` for row-major `a [m, k]`, `b [k, n]`, `c [m, n]`
+/// (overwrites `c`).  Dispatches to the straight-line loop below the
+/// cache-blocking break-even and to the packed tiled kernel above it.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    assert_eq!(a.len(), m * k, "gemm: a is not [{m}, {k}]");
+    assert_eq!(b.len(), k * n, "gemm: b is not [{k}, {n}]");
+    assert_eq!(c.len(), m * n, "gemm: c is not [{m}, {n}]");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    // Quarter-dense or sparser A: the zero-skip loop does ~nnz/len of
+    // the dense work (exact-route direction bundles are scaled one-hot
+    // rows — nnz = m).  The probe costs one pass over A, ~1/n of the
+    // multiply work.  Skipping exact 0.0 terms keeps the sum bitwise.
+    let nnz = a.iter().filter(|&&v| v != 0.0).count();
+    if nnz * 4 <= m * k {
+        return gemm_skip(m, k, n, a, b, c);
+    }
+    // Below the break-even (thin outputs, tiny depth, or simply not
+    // enough work to amortize packing) the simple loop wins.
+    if m < MR || n < NR || 2 * m * k * n < (1 << 15) {
+        return gemm_small(m, k, n, a, b, c);
+    }
+    PACK.with(|pack| {
+        let mut pack = pack.borrow_mut();
+        let (ap, bp) = &mut *pack;
+        let need_a = MC.min(m).div_ceil(MR) * MR * KC.min(k);
+        let need_b = NC.min(n).div_ceil(NR) * NR * KC.min(k);
+        if ap.len() < need_a {
+            ap.resize(need_a, 0.0);
+        }
+        if bp.len() < need_b {
+            bp.resize(need_b, 0.0);
+        }
+        gemm_blocked(m, k, n, a, b, c, ap, bp);
+    });
+}
+
+/// The packed, register-tiled main path (`m >= MR`, `n >= NR`, `k >= 1`).
+fn gemm_blocked(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    ap: &mut [f64],
+    bp: &mut [f64],
+) {
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            pack_b(b, n, pc, jc, kc, nc, bp);
+            // The first k-block overwrites C, later blocks accumulate —
+            // C never needs a separate zeroing pass.
+            let overwrite = pc == 0;
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                pack_a(a, k, ic, pc, mc, kc, ap);
+                for jr in (0..nc).step_by(NR) {
+                    let nr = NR.min(nc - jr);
+                    for ir in (0..mc).step_by(MR) {
+                        let mr = MR.min(mc - ir);
+                        let apan = &ap[(ir / MR) * MR * kc..];
+                        let bpan = &bp[(jr / NR) * NR * kc..];
+                        let base = (ic + ir) * n + jc + jr;
+                        micro_kernel(kc, apan, bpan, &mut c[base..], n, mr, nr, overwrite);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The unrolled MR × NR register tile over one packed panel pair.  The
+/// panels are zero-padded, so the accumulation loop is branch-free; only
+/// the write-back respects the true `mr × nr` edge extent.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel(
+    kc: usize,
+    ap: &[f64],
+    bp: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+    overwrite: bool,
+) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for p in 0..kc {
+        let ar = &ap[p * MR..p * MR + MR];
+        let br = &bp[p * NR..p * NR + NR];
+        for i in 0..MR {
+            for j in 0..NR {
+                acc[i][j] = fmadd(ar[i], br[j], acc[i][j]);
+            }
+        }
+    }
+    for (i, arow) in acc.iter().enumerate().take(mr) {
+        let crow = &mut c[i * ldc..i * ldc + nr];
+        if overwrite {
+            for (cv, &av) in crow.iter_mut().zip(arow) {
+                *cv = av;
+            }
+        } else {
+            for (cv, &av) in crow.iter_mut().zip(arow) {
+                *cv += av;
+            }
+        }
+    }
+}
+
+/// Pack an `[mc, kc]` block of A (row-major, leading dim `lda`) into
+/// MR-tall panels: panel `i0/MR` stores column p as MR consecutive rows,
+/// zero-padded past `mc`.
+fn pack_a(a: &[f64], lda: usize, ic: usize, pc: usize, mc: usize, kc: usize, ap: &mut [f64]) {
+    for pi in 0..mc.div_ceil(MR) {
+        let i0 = pi * MR;
+        let dst = &mut ap[pi * MR * kc..(pi + 1) * MR * kc];
+        for p in 0..kc {
+            for r in 0..MR {
+                let row = i0 + r;
+                dst[p * MR + r] = if row < mc { a[(ic + row) * lda + pc + p] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack a `[kc, nc]` block of B (row-major, leading dim `ldb`) into
+/// NR-wide panels: panel `j0/NR` stores row p as NR consecutive columns,
+/// zero-padded past `nc`.
+fn pack_b(b: &[f64], ldb: usize, pc: usize, jc: usize, kc: usize, nc: usize, bp: &mut [f64]) {
+    for pj in 0..nc.div_ceil(NR) {
+        let j0 = pj * NR;
+        let cols = NR.min(nc - j0);
+        let dst = &mut bp[pj * NR * kc..(pj + 1) * NR * kc];
+        for p in 0..kc {
+            let src = &b[(pc + p) * ldb + jc + j0..(pc + p) * ldb + jc + j0 + cols];
+            let d = &mut dst[p * NR..(p + 1) * NR];
+            d[..cols].copy_from_slice(src);
+            for slot in d[cols..].iter_mut() {
+                *slot = 0.0;
+            }
+        }
+    }
+}
+
+/// Straight-line fallback for shapes below the blocking break-even: no
+/// packing, no zero-skip branch, row-major streaming over B.
+fn gemm_small(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert!(m * k == a.len() && k * n == b.len() && m * n == c.len());
+    for (crow, arow) in c.chunks_exact_mut(n).zip(a.chunks_exact(k)) {
+        crow.fill(0.0);
+        for (&av, brow) in arow.iter().zip(b.chunks_exact(n)) {
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv = fmadd(av, bv, *cv);
+            }
+        }
+    }
+}
+
+/// The zero-skip saxpy loop (the seed's matmul): [`gemm`]'s fast path
+/// for sparse A, where it does ~nnz/len of the dense work.
+fn gemm_skip(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    c.fill(0.0);
+    for r in 0..m {
+        let xrow = &a[r * k..(r + 1) * k];
+        let orow = &mut c[r * n..(r + 1) * n];
+        for (p, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &b[p * n..(p + 1) * n];
+            for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                *ov += xv * wv;
+            }
+        }
+    }
+}
+
+/// The seed's naive matmul, kept verbatim as the property-test oracle
+/// and the `kernel_micro` bench baseline: row-major triple loop with the
+/// branchy per-element zero-skip.
+pub fn gemm_reference(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    gemm_skip(m, k, n, a, b, c);
+}
+
+/// Blocked 2-D transpose `dst[j, i] = src[i, j]` (`src` is `[rows, cols]`
+/// row-major): 32 × 32 tiles so both sides stream through cache lines
+/// instead of striding one of them.
+pub fn transpose2_into(src: &[f64], rows: usize, cols: usize, dst: &mut [f64]) {
+    assert_eq!(src.len(), rows * cols, "transpose2_into: src is not [{rows}, {cols}]");
+    assert_eq!(dst.len(), rows * cols, "transpose2_into: dst size mismatch");
+    const TB: usize = 32;
+    for i0 in (0..rows).step_by(TB) {
+        for j0 in (0..cols).step_by(TB) {
+            for i in i0..rows.min(i0 + TB) {
+                for j in j0..cols.min(j0 + TB) {
+                    dst[j * rows + i] = src[i * cols + j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_mat(rng: &mut Rng, len: usize, with_zeros: bool) -> Vec<f64> {
+        (0..len)
+            .map(|i| {
+                if with_zeros && i % 7 == 0 {
+                    0.0
+                } else {
+                    rng.normal()
+                }
+            })
+            .collect()
+    }
+
+    fn assert_matches_reference(m: usize, k: usize, n: usize, rng: &mut Rng) {
+        let a = random_mat(rng, m * k, true);
+        let b = random_mat(rng, k * n, false);
+        let mut want = vec![f64::NAN; m * n];
+        let mut got = vec![f64::NAN; m * n];
+        gemm_reference(m, k, n, &a, &b, &mut want);
+        gemm(m, k, n, &a, &b, &mut got);
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            let rel = (w - g).abs() / (1.0 + w.abs());
+            assert!(rel <= 1e-12, "({m}x{k}x{n}) elem {i}: {g} vs reference {w}");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_reference_on_fixed_edge_shapes() {
+        let mut rng = Rng::new(41);
+        // Empty and 1-wide edges, tile remainders, multi-block depths.
+        for (m, k, n) in [
+            (0, 3, 4),
+            (3, 0, 4),
+            (3, 4, 0),
+            (1, 1, 1),
+            (1, 64, 1),
+            (5, 3, 1),
+            (4, 4, 4),
+            (7, 5, 9),
+            (33, 17, 29),
+            (130, 37, 6),
+            (64, 300, 12),
+            (20, 260, 20),
+        ] {
+            assert_matches_reference(m, k, n, &mut rng);
+        }
+    }
+
+    #[test]
+    fn gemm_matches_reference_on_random_shapes() {
+        let mut rng = Rng::new(42);
+        for _ in 0..40 {
+            let m = rng.below(80);
+            let k = 1 + rng.below(70);
+            let n = 1 + rng.below(48);
+            assert_matches_reference(m, k, n, &mut rng);
+        }
+    }
+
+    #[test]
+    fn gemm_handles_rb_leading_axes_as_flat_rows() {
+        // [R, B, I] @ [I, O] is rows = R·B through the kernel — the exact
+        // shape every jet direction-channel matmul takes.
+        let (r, bsz, i, o) = (6, 5, 8, 3);
+        let mut rng = Rng::new(43);
+        let a = random_mat(&mut rng, r * bsz * i, true);
+        let b = random_mat(&mut rng, i * o, false);
+        let mut want = vec![0.0; r * bsz * o];
+        let mut got = vec![0.0; r * bsz * o];
+        gemm_reference(r * bsz, i, o, &a, &b, &mut want);
+        gemm(r * bsz, i, o, &a, &b, &mut got);
+        for (w, g) in want.iter().zip(&got) {
+            assert!((w - g).abs() <= 1e-12 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn one_hot_direction_bundles_take_the_zero_skip_path_bitwise() {
+        // The exact-route shape: a scaled basis bundle broadcast over the
+        // batch — one nonzero per row.  Sparse A must route through the
+        // retained zero-skip loop, which is the reference itself, so the
+        // result is bitwise equal in every build configuration.
+        let (d, bsz, h) = (16usize, 16usize, 32usize);
+        let mut rng = Rng::new(46);
+        let mut a = vec![0.0f64; d * bsz * d];
+        for r in 0..d {
+            for bb in 0..bsz {
+                a[(r * bsz + bb) * d + r] = 1.37;
+            }
+        }
+        let b = random_mat(&mut rng, d * h, false);
+        let mut want = vec![0.0; d * bsz * h];
+        let mut got = vec![1.0; d * bsz * h];
+        gemm_reference(d * bsz, d, h, &a, &b, &mut want);
+        gemm(d * bsz, d, h, &a, &b, &mut got);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn transpose_roundtrips_and_matches_direct() {
+        let mut rng = Rng::new(44);
+        for (rows, cols) in [(1, 1), (3, 7), (40, 33), (65, 64), (2, 100)] {
+            let src = random_mat(&mut rng, rows * cols, false);
+            let mut t = vec![0.0; rows * cols];
+            transpose2_into(&src, rows, cols, &mut t);
+            for i in 0..rows {
+                for j in 0..cols {
+                    assert_eq!(t[j * rows + i], src[i * cols + j]);
+                }
+            }
+            let mut back = vec![0.0; rows * cols];
+            transpose2_into(&t, cols, rows, &mut back);
+            assert_eq!(back, src);
+        }
+    }
+
+    #[test]
+    fn thread_local_scratch_is_reused() {
+        // Two large calls in a row: the second must not regrow scratch —
+        // observable as identical results with no panic and, indirectly,
+        // by the packed path being hit (shape above the break-even).
+        let mut rng = Rng::new(45);
+        let (m, k, n) = (96, 64, 32);
+        let a = random_mat(&mut rng, m * k, false);
+        let b = random_mat(&mut rng, k * n, false);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        gemm(m, k, n, &a, &b, &mut c1);
+        gemm(m, k, n, &a, &b, &mut c2);
+        assert_eq!(c1, c2);
+    }
+}

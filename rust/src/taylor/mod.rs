@@ -1,6 +1,8 @@
 //! Native Taylor-mode AD engine (the Rust replica of the paper's library).
 //!
 //! * [`tensor`] — minimal dense tensors with leading-axis broadcasting.
+//! * [`kernels`] — tiled f64 GEMM + blocked transpose (the dense kernels
+//!   under `Tensor::matmul`, the jet linear rule and the VM's MatMul).
 //! * [`partitions`] — integer partitions and the Faà di Bruno ν(σ).
 //! * [`rules`] — elementwise derivative families + generic degree-k terms.
 //! * [`jet`] — the unified jet bundle ([`jet::Collapse`] selects standard
@@ -21,6 +23,7 @@ pub mod graph;
 pub mod hlo_emit;
 pub mod interp;
 pub mod jet;
+pub mod kernels;
 pub mod partitions;
 pub mod program;
 pub mod rewrite;

@@ -12,10 +12,15 @@
 //!    arena register, reusing dead buffers of the same size and writing
 //!    elementwise results in place when the producer dies at its consumer.
 //!
-//! The resulting [`Program`] is executed by an in-place VM
-//! ([`Program::execute`]): no per-node `Tensor` allocation, no clones of
-//! constants or inputs — the per-call cost is one arena allocation plus
-//! the actual arithmetic.  `interp::eval` remains the reference
+//! The resulting [`Program`] is executed by an in-place VM: no per-node
+//! `Tensor` allocation, no clones of constants or inputs.  The serving
+//! entry point is [`Program::execute_with`], which runs against a
+//! caller-owned [`ExecArena`] (the liveness-planned register buffers,
+//! reused call to call) and writes outputs into caller-owned tensors —
+//! steady-state execution performs **zero heap allocations**.  Dense
+//! matmuls go through the tiled [`super::kernels`] GEMM.
+//! [`Program::execute`] remains as a thin allocate-per-call wrapper for
+//! one-shot callers, and `interp::eval` remains the reference
 //! interpreter the VM is property-tested against.
 
 use std::collections::BTreeMap;
@@ -24,6 +29,7 @@ use anyhow::{ensure, Result};
 
 use super::graph::{Graph, Op, UnaryKind};
 use super::interp;
+use super::kernels;
 use super::tensor::Tensor;
 
 /// One fused elementwise step.
@@ -536,13 +542,50 @@ pub fn compile(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Program> {
 fn resolve<'a>(
     o: Operand,
     regs: &'a [Tensor],
-    inputs: &'a [Tensor],
+    inputs: &'a [&'a Tensor],
     consts: &'a [Tensor],
 ) -> &'a Tensor {
     match o {
         Operand::Reg(r) => &regs[r],
-        Operand::Input(i) => &inputs[i],
+        Operand::Input(i) => inputs[i],
         Operand::Const(c) => &consts[c],
+    }
+}
+
+/// A reusable register arena for [`Program::execute_with`]: owns the
+/// liveness-planned buffers between calls so steady-state execution
+/// allocates nothing.  An arena re-shapes itself to whatever program it
+/// is handed (first use per program allocates; subsequent calls with the
+/// same register plan reuse every buffer — pointer-stable, see the
+/// `perf_exec` tests).
+#[derive(Debug, Default)]
+pub struct ExecArena {
+    regs: Vec<Tensor>,
+}
+
+impl ExecArena {
+    pub fn new() -> ExecArena {
+        ExecArena::default()
+    }
+
+    /// Match the arena to a program's register plan, keeping existing
+    /// buffers when they already fit (the steady-state path).
+    fn prepare(&mut self, reg_len: &[usize]) {
+        let fits = self.regs.len() == reg_len.len()
+            && self.regs.iter().zip(reg_len).all(|(t, &l)| t.data.len() == l);
+        if fits {
+            return;
+        }
+        self.regs.clear();
+        for &e in reg_len {
+            self.regs.push(Tensor { shape: vec![e], data: vec![0.0; e] });
+        }
+    }
+
+    /// Addresses of the register buffers — lets tests assert pointer
+    /// stability (no reallocation) across steady-state calls.
+    pub fn buffer_addrs(&self) -> Vec<usize> {
+        self.regs.iter().map(|t| t.data.as_ptr() as usize).collect()
     }
 }
 
@@ -579,8 +622,31 @@ fn bin_into(f: fn(f64, f64) -> f64, a: &Tensor, b: &Tensor, out: &mut Tensor) {
 }
 
 impl Program {
-    /// Execute on the given inputs; returns the outputs.
+    /// Execute on the given inputs; returns freshly allocated outputs.
+    /// Thin compatibility wrapper over [`Program::execute_with`] for
+    /// one-shot callers (tests, benches); serving paths hold an
+    /// [`ExecArena`] and output buffers instead.
     pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let mut arena = ExecArena::new();
+        let mut outs = Vec::new();
+        self.execute_with(&mut arena, &refs, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// Execute against caller-owned state: `arena` holds the
+    /// liveness-planned register buffers (reused call to call) and
+    /// `outs` receives the outputs, reusing its tensors' buffers when
+    /// they already have the right size.  Output operands that are
+    /// inputs or constants are copied into `outs` rather than cloned
+    /// into fresh tensors.  Steady state — same program, same shapes —
+    /// performs zero heap allocations.
+    pub fn execute_with(
+        &self,
+        arena: &mut ExecArena,
+        inputs: &[&Tensor],
+        outs: &mut Vec<Tensor>,
+    ) -> Result<()> {
         ensure!(
             inputs.len() >= self.num_inputs,
             "program expects {} inputs, got {}",
@@ -594,26 +660,25 @@ impl Program {
                 inputs[i].shape
             );
         }
-        let mut regs: Vec<Tensor> = self
-            .reg_len
-            .iter()
-            .map(|&e| Tensor { shape: vec![e], data: vec![0.0; e] })
-            .collect();
+        arena.prepare(&self.reg_len);
         for (instr, shape) in self.instrs.iter().zip(&self.instr_shapes) {
-            self.step(instr, shape, &mut regs, inputs);
+            self.step(instr, shape, &mut arena.regs, inputs);
         }
-        Ok(self
-            .outputs
-            .iter()
-            .map(|&o| match o {
-                Operand::Reg(r) => regs[r].clone(),
-                Operand::Input(i) => inputs[i].clone(),
-                Operand::Const(c) => self.consts[c].clone(),
-            })
-            .collect())
+        outs.truncate(self.outputs.len());
+        while outs.len() < self.outputs.len() {
+            outs.push(Tensor { shape: vec![0], data: Vec::new() });
+        }
+        for (&o, out) in self.outputs.iter().zip(outs.iter_mut()) {
+            let src = resolve(o, &arena.regs, inputs, &self.consts);
+            out.data.resize(src.data.len(), 0.0);
+            out.data.copy_from_slice(&src.data);
+            out.shape.clear();
+            out.shape.extend_from_slice(&src.shape);
+        }
+        Ok(())
     }
 
-    fn step(&self, instr: &Instr, out_shape: &[usize], regs: &mut [Tensor], inputs: &[Tensor]) {
+    fn step(&self, instr: &Instr, out_shape: &[usize], regs: &mut [Tensor], inputs: &[&Tensor]) {
         let dst = instr.dst();
         // Take the destination buffer out so sources can be read from the
         // arena without aliasing; aliased in-place operands use `out`.
@@ -705,20 +770,7 @@ impl Program {
                 let wt = &self.consts[*w];
                 let (i, o_) = (wt.shape[0], wt.shape[1]);
                 let rows = x.data.len() / i.max(1);
-                out.data.fill(0.0);
-                for r in 0..rows {
-                    let xrow = &x.data[r * i..(r + 1) * i];
-                    let orow = &mut out.data[r * o_..(r + 1) * o_];
-                    for (k, &xv) in xrow.iter().enumerate() {
-                        if xv == 0.0 {
-                            continue;
-                        }
-                        let wrow = &wt.data[k * o_..(k + 1) * o_];
-                        for (ov, &wv) in orow.iter_mut().zip(wrow) {
-                            *ov += xv * wv;
-                        }
-                    }
-                }
+                kernels::gemm(rows, i, o_, &x.data, &wt.data, &mut out.data);
             }
             Instr::AddBias { src, b, .. } => {
                 let x = resolve(*src, regs, inputs, &self.consts);
@@ -731,7 +783,10 @@ impl Program {
                 }
             }
         }
-        out.shape = out_shape.to_vec();
+        // clear+extend instead of `to_vec` so the shape vec's capacity is
+        // reused across calls (the arena's zero-alloc steady state).
+        out.shape.clear();
+        out.shape.extend_from_slice(out_shape);
         regs[dst] = out;
     }
 

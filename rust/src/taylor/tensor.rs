@@ -8,6 +8,8 @@
 
 use std::fmt;
 
+use super::kernels;
+
 /// Dense row-major tensor of f64.
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
@@ -199,16 +201,12 @@ impl Tensor {
         }
     }
 
-    /// Transpose a 2-D tensor: `[A, B] -> [B, A]`.
+    /// Transpose a 2-D tensor: `[A, B] -> [B, A]` (cache-blocked).
     pub fn transpose2(&self) -> Tensor {
         assert_eq!(self.rank(), 2, "transpose2 needs a 2-D tensor");
         let (a, b) = (self.shape[0], self.shape[1]);
         let mut out = Tensor::zeros(&[b, a]);
-        for i in 0..a {
-            for j in 0..b {
-                out.data[j * a + i] = self.data[i * b + j];
-            }
-        }
+        kernels::transpose2_into(&self.data, a, b, &mut out.data);
         out
     }
 
@@ -221,7 +219,8 @@ impl Tensor {
     }
 
     /// Matrix product on the trailing axis: self is `[..., I]`, w is
-    /// `[I, O]`, result `[..., O]`.  Leading axes are treated as batch.
+    /// `[I, O]`, result `[..., O]`.  Leading axes are treated as batch
+    /// (flattened into GEMM rows for the tiled kernel).
     pub fn matmul(&self, w: &Tensor) -> Tensor {
         assert_eq!(w.rank(), 2, "weight must be 2-D");
         let (i, o) = (w.shape[0], w.shape[1]);
@@ -232,21 +231,9 @@ impl Tensor {
             self.shape,
             w.shape
         );
-        let rows = self.data.len() / i;
+        let rows = self.data.len() / i.max(1);
         let mut out = vec![0.0; rows * o];
-        for r in 0..rows {
-            let xrow = &self.data[r * i..(r + 1) * i];
-            let orow = &mut out[r * o..(r + 1) * o];
-            for (k, &xv) in xrow.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let wrow = &w.data[k * o..(k + 1) * o];
-                for (ov, &wv) in orow.iter_mut().zip(wrow) {
-                    *ov += xv * wv;
-                }
-            }
-        }
+        kernels::gemm(rows, i, o, &self.data, &w.data, &mut out);
         let mut shape = self.shape.clone();
         *shape.last_mut().unwrap() = o;
         Tensor { shape, data: out }

@@ -5,5 +5,6 @@
 pub mod cli;
 pub mod json;
 pub mod mem;
+pub mod pool;
 pub mod prng;
 pub mod stats;

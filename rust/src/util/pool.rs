@@ -1,0 +1,221 @@
+//! A hand-rolled worker pool (std-only — no external deps) for sharding
+//! packed batches across cores.
+//!
+//! [`Pool::global`] is the serving pool: its size comes from the
+//! `CTAYLOR_THREADS` env var (total executor threads; default = available
+//! parallelism) and it is shared by every runtime client in the process.
+//! [`Pool::run`] executes a set of jobs and returns their results in
+//! submission order; the *first* job runs inline on the calling thread
+//! (which would otherwise idle waiting), so a pool built with `n - 1`
+//! workers keeps exactly `n` cores busy.  A pool with zero workers runs
+//! every job inline — the single-threaded configuration.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A type-erased unit of work queued to the workers.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A typed job handed to [`Pool::run`].
+pub type TypedJob<T> = Box<dyn FnOnce() -> T + Send + 'static>;
+
+pub struct Pool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// A pool of exactly `workers` worker threads (0 is valid: every
+    /// [`Pool::run`] then executes inline on the caller).
+    pub fn new(workers: usize) -> Pool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..workers)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("ctaylor-pool-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool { tx: Some(tx), workers }
+    }
+
+    /// Worker-thread count (the caller adds one more during [`Pool::run`]).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Total executor threads a `run` engages: the workers plus the
+    /// calling thread.
+    pub fn executors(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// The process-wide serving pool: `CTAYLOR_THREADS` total executors
+    /// (default: available parallelism), i.e. `CTAYLOR_THREADS - 1`
+    /// workers.  `CTAYLOR_THREADS=1` serves strictly single-threaded.
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(|| Pool::new(threads_from_env().saturating_sub(1)))
+    }
+
+    /// Run all jobs to completion, returning results in submission
+    /// order.  The first job executes inline on the caller; the rest go
+    /// to the workers.  Panics if any job panicked — under an unwinding
+    /// profile the worker thread itself survives for future runs.  (The
+    /// release bin/benches build with `panic = "abort"`, where any panic
+    /// aborts the whole process by design; jobs report failures as
+    /// `Result` values, never by panicking.)
+    pub fn run<T: Send + 'static>(&self, jobs: Vec<TypedJob<T>>) -> Vec<T> {
+        if self.workers.is_empty() {
+            return jobs.into_iter().map(|job| job()).collect();
+        }
+        let n = jobs.len();
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let (rtx, rrx) = channel::<(usize, T)>();
+        let mut jobs = jobs.into_iter();
+        let first = jobs.next();
+        for (i, job) in jobs.enumerate() {
+            let rtx = rtx.clone();
+            let wrapped: Job = Box::new(move || {
+                let out = job();
+                let _ = rtx.send((i + 1, out));
+            });
+            self.tx.as_ref().expect("pool running").send(wrapped).expect("pool workers alive");
+        }
+        drop(rtx);
+        if let Some(job) = first {
+            slots[0] = Some(job());
+        }
+        let mut remaining = n.saturating_sub(1);
+        while remaining > 0 {
+            match rrx.recv() {
+                Ok((i, v)) => {
+                    slots[i] = Some(v);
+                    remaining -= 1;
+                }
+                // recv fails only once every result sender is gone with
+                // results still missing — i.e. a job panicked mid-run.
+                Err(_) => panic!("a pool job panicked"),
+            }
+        }
+        slots.into_iter().map(|s| s.expect("all jobs completed")).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue; workers drain and exit
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return,
+        };
+        match job {
+            Ok(job) => {
+                // A panicking job must not take the worker down; run()
+                // notices the dropped result sender and re-panics on the
+                // calling thread.
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            }
+            Err(_) => return, // pool dropped
+        }
+    }
+}
+
+/// `CTAYLOR_THREADS` (total executors, >= 1) or available parallelism.
+fn threads_from_env() -> usize {
+    if let Ok(v) = std::env::var("CTAYLOR_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        let pool = Pool::new(3);
+        assert_eq!(pool.executors(), 4);
+        let jobs: Vec<TypedJob<usize>> = (0..20)
+            .map(|i| {
+                let job: TypedJob<usize> = Box::new(move || {
+                    // Jitter completion order: later jobs finish earlier.
+                    std::thread::sleep(std::time::Duration::from_micros(((20 - i) * 50) as u64));
+                    i * i
+                });
+                job
+            })
+            .collect();
+        let out = pool.run(jobs);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = Pool::new(0);
+        assert_eq!(pool.workers(), 0);
+        assert_eq!(pool.executors(), 1);
+        let caller = std::thread::current().id();
+        let jobs: Vec<TypedJob<std::thread::ThreadId>> = (0..3)
+            .map(|_| {
+                let job: TypedJob<std::thread::ThreadId> =
+                    Box::new(|| std::thread::current().id());
+                job
+            })
+            .collect();
+        for id in pool.run(jobs) {
+            assert_eq!(id, caller, "zero-worker pool must run on the caller");
+        }
+    }
+
+    #[test]
+    fn first_job_runs_on_the_caller() {
+        let pool = Pool::new(2);
+        let caller = std::thread::current().id();
+        let jobs: Vec<TypedJob<std::thread::ThreadId>> = (0..4)
+            .map(|_| {
+                let job: TypedJob<std::thread::ThreadId> =
+                    Box::new(|| std::thread::current().id());
+                job
+            })
+            .collect();
+        let ids = pool.run(jobs);
+        assert_eq!(ids[0], caller);
+    }
+
+    #[test]
+    fn empty_run_is_a_noop() {
+        let pool = Pool::new(2);
+        let out: Vec<u8> = pool.run(Vec::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = Pool::new(1);
+        let bad: Vec<TypedJob<()>> = vec![Box::new(|| {}), Box::new(|| panic!("job boom"))];
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run(bad)));
+        assert!(res.is_err(), "run must surface the job panic");
+        // The worker thread survived and still executes new jobs.
+        let ok: Vec<TypedJob<u32>> = vec![Box::new(|| 7), Box::new(|| 8)];
+        assert_eq!(pool.run(ok), vec![7, 8]);
+    }
+}

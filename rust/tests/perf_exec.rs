@@ -1,0 +1,158 @@
+//! The hardware-speed execution layer, end to end: the tiled GEMM against
+//! the naive reference through `Tensor::matmul`, zero-allocation arena
+//! reuse in `Program::execute_with` (asserted via pointer stability), and
+//! pool-sharded VM serving vs single-threaded across every registry
+//! route — sharding must not change a single bit.
+
+use ctaylor::bench::workload;
+use ctaylor::mlp::Mlp;
+use ctaylor::operators::OperatorSpec;
+use ctaylor::runtime::native::{self, ProgramCache};
+use ctaylor::runtime::{HostTensor, Registry};
+use ctaylor::taylor::kernels;
+use ctaylor::taylor::program::{compile, ExecArena};
+use ctaylor::taylor::rewrite::collapse;
+use ctaylor::taylor::tensor::Tensor;
+use ctaylor::taylor::trace::{build_plan_jet_std, TAGGED_SLOTS};
+use ctaylor::util::pool::Pool;
+use ctaylor::util::prng::Rng;
+
+/// `[R, B, I] @ [I, O]` through the tiled kernel matches the naive
+/// reference flattened over the leading axes — the exact shape every jet
+/// direction-channel matmul takes.
+#[test]
+fn tensor_matmul_leading_axes_match_naive_reference() {
+    let mut rng = Rng::new(0x6E33);
+    let cases = [(1, 1, 1, 1), (3, 2, 5, 4), (16, 8, 32, 32), (6, 4, 32, 1), (2, 1, 7, 9)];
+    for (r, b, i, o) in cases {
+        let n = r * b * i;
+        let x = Tensor::new(
+            vec![r, b, i],
+            (0..n).map(|j| if j % 5 == 0 { 0.0 } else { rng.normal() }).collect(),
+        );
+        let w = Tensor::new(vec![i, o], (0..i * o).map(|_| rng.normal()).collect());
+        let y = x.matmul(&w);
+        assert_eq!(y.shape, vec![r, b, o]);
+        let mut want = vec![0.0; r * b * o];
+        kernels::gemm_reference(r * b, i, o, &x.data, &w.data, &mut want);
+        for (idx, (a, g)) in want.iter().zip(&y.data).enumerate() {
+            let rel = (a - g).abs() / (1.0 + a.abs());
+            assert!(rel <= 1e-12, "({r},{b},{i},{o}) elem {idx}: {g} vs {a}");
+        }
+    }
+}
+
+/// Steady-state `execute_with` allocates nothing: across repeated calls
+/// the arena's register buffers and the caller's output buffers keep
+/// their addresses (no realloc), and results stay identical.  The legacy
+/// `Program::execute` wrapper agrees with the arena path.
+#[test]
+fn execute_with_reuses_arena_and_output_buffers() {
+    let mut rng = Rng::new(0xA3E4A);
+    let (dim, batch) = (6usize, 4usize);
+    let mlp = Mlp::init(&mut rng, dim, &[12, 10, 1], batch);
+    let plan = OperatorSpec::laplacian(dim).compile();
+    let g = build_plan_jet_std(&mlp, &plan, batch);
+    let g = collapse(&g, TAGGED_SLOTS, plan.dirs.shape[0]);
+    let shapes = vec![vec![batch, dim], vec![plan.dirs.shape[0], batch, dim]];
+    let prog = compile(&g, &shapes).unwrap();
+
+    let x = mlp.random_input(&mut rng);
+    let dirs = plan.dirs.broadcast_rows(batch);
+    let inputs = [&x, &dirs];
+    let mut arena = ExecArena::new();
+    let mut outs = Vec::new();
+    prog.execute_with(&mut arena, &inputs, &mut outs).unwrap();
+    let arena_addrs = arena.buffer_addrs();
+    assert!(!arena_addrs.is_empty(), "program must plan registers");
+    let out_addrs: Vec<usize> = outs.iter().map(|t| t.data.as_ptr() as usize).collect();
+    let first: Vec<Vec<f64>> = outs.iter().map(|t| t.data.clone()).collect();
+
+    for _ in 0..3 {
+        prog.execute_with(&mut arena, &inputs, &mut outs).unwrap();
+    }
+    assert_eq!(arena.buffer_addrs(), arena_addrs, "arena registers must not reallocate");
+    let out_addrs2: Vec<usize> = outs.iter().map(|t| t.data.as_ptr() as usize).collect();
+    assert_eq!(out_addrs2, out_addrs, "output buffers must be reused in place");
+    for (a, b) in first.iter().zip(&outs) {
+        assert_eq!(a, &b.data, "steady-state reruns must be bitwise identical");
+    }
+
+    let legacy = prog.execute(&[x.clone(), dirs.clone()]).unwrap();
+    assert_eq!(legacy.len(), outs.len());
+    for (a, b) in legacy.iter().zip(&outs) {
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.data, b.data, "compat wrapper must match the arena path");
+    }
+}
+
+/// One arena re-targets across programs of different register plans and,
+/// once re-targeted, is pointer-stable again — and stays correct (each
+/// program's output matches its freshly-allocated `execute`).
+#[test]
+fn arena_retargets_between_programs() {
+    let mut rng = Rng::new(0x7777);
+    let mut arena = ExecArena::new();
+    let mut outs = Vec::new();
+    for dim in [3usize, 5] {
+        let mlp = Mlp::init(&mut rng, dim, &[8, 1], 2);
+        let plan = OperatorSpec::laplacian(dim).compile();
+        let g = build_plan_jet_std(&mlp, &plan, 2);
+        let shapes = vec![vec![2, dim], vec![plan.dirs.shape[0], 2, dim]];
+        let prog = compile(&g, &shapes).unwrap();
+        let x = mlp.random_input(&mut rng);
+        let dirs = plan.dirs.broadcast_rows(2);
+        let inputs = [&x, &dirs];
+        prog.execute_with(&mut arena, &inputs, &mut outs).unwrap();
+        let addrs = arena.buffer_addrs();
+        prog.execute_with(&mut arena, &inputs, &mut outs).unwrap();
+        assert_eq!(arena.buffer_addrs(), addrs, "same plan keeps the buffers");
+        let fresh = prog.execute(&[x.clone(), dirs.clone()]).unwrap();
+        for (a, b) in fresh.iter().zip(&outs) {
+            assert_eq!(a.data, b.data, "re-targeted arena computes the same values");
+        }
+    }
+}
+
+/// Sharded serving equals single-threaded serving, bit for bit, on every
+/// (op, Taylor-method, mode) route the builtin registry serves — the
+/// per-row arithmetic is identical, only the scheduling differs.
+#[test]
+fn sharded_serving_matches_single_threaded_for_every_preset() {
+    let reg = Registry::builtin();
+    let single = Pool::new(0); // 1 executor: never shards
+    let multi = Pool::new(3); // 4 executors
+    let mut sharded_routes = 0usize;
+    for op in ["laplacian", "weighted_laplacian", "helmholtz", "biharmonic"] {
+        for method in ["standard", "collapsed"] {
+            for mode in ["exact", "stochastic"] {
+                let metas = reg.select(op, method, mode);
+                let meta = *metas.last().expect("registry covers every route");
+                let inputs = workload::inputs_for(meta, 11);
+                let refs: Vec<&HostTensor> = inputs.iter().collect();
+                let a = native::execute_pooled(meta, &refs, &ProgramCache::new(), &single)
+                    .unwrap_or_else(|e| panic!("{}: single-threaded failed: {e:#}", meta.name));
+                let b = native::execute_pooled(meta, &refs, &ProgramCache::new(), &multi)
+                    .unwrap_or_else(|e| panic!("{}: sharded failed: {e:#}", meta.name));
+                assert_eq!(a.len(), b.len());
+                for (ta, tb) in a.iter().zip(&b) {
+                    assert_eq!(ta.shape, tb.shape, "{}", meta.name);
+                    for (va, vb) in ta.data.iter().zip(&tb.data) {
+                        assert!(
+                            (va - vb).abs() <= 1e-12,
+                            "{}: sharded {vb} vs single {va}",
+                            meta.name
+                        );
+                    }
+                }
+                if native::shard_count(meta.batch, multi.executors()) > 1 {
+                    sharded_routes += 1;
+                }
+            }
+        }
+    }
+    assert!(
+        sharded_routes >= 4,
+        "the largest exact batches must actually exercise sharding ({sharded_routes})"
+    );
+}
