@@ -1,29 +1,42 @@
-//! Composed-operator walkthrough: describe a Helmholtz-type operator
-//! L f = c₀·f + c₂·Δf as an [`OperatorSpec`], compile it to ONE stacked
-//! direction bundle, and evaluate it with a single jet push — then extend
-//! it with an anisotropic (negatively-weighted) family to show signed
-//! composition, and finally serve the builtin `helmholtz` route through
-//! the coordinator end to end.
+//! Composed-operator walkthrough through the typed front door: describe a
+//! Helmholtz-type operator L f = c₀·f + c₂·Δf as an [`OperatorSpec`],
+//! compile it into an `Engine` handle evaluating ONE stacked jet push —
+//! then extend it with an anisotropic (negatively-weighted) family to show
+//! signed composition, and finally serve the builtin `helmholtz` route
+//! through the coordinator end to end.
 //!
 //! ```bash
 //! cargo run --release --example helmholtz
 //! ```
 
 use anyhow::Result;
+use ctaylor::api::{Engine, Method};
 use ctaylor::coordinator::{RouteKey, Service, ServiceConfig};
 use ctaylor::mlp::Mlp;
 use ctaylor::operators::{self, plan, FamilySpec, OperatorSpec};
-use ctaylor::runtime::Registry;
+use ctaylor::runtime::{HostTensor, Registry};
 use ctaylor::taylor::count;
 use ctaylor::taylor::jet::Collapse;
 use ctaylor::taylor::tensor::Tensor;
 use ctaylor::util::prng::Rng;
 
+/// Max relative deviation of engine f32 output against an f64 oracle.
+fn max_rel_dev(got: &[f32], want: &[f64]) -> f64 {
+    got.iter()
+        .zip(want)
+        .map(|(&g, &w)| (g as f64 - w).abs() / (1.0 + w.abs()))
+        .fold(0.0, f64::max)
+}
+
+/// Max absolute deviation between two engine outputs.
+fn max_abs_dev(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
 fn main() -> Result<()> {
     let dim = 8;
-    let mut rng = Rng::new(42);
-    let mlp = Mlp::init(&mut rng, dim, &[32, 32, 1], 16);
-    let x = mlp.random_input(&mut rng);
+    let widths = [32usize, 32, 1];
+    let batch = 16;
 
     // 1. Compose the spec: L f = c₀·f + c₂·Δf (mixed order 0 + 2).
     let (c0, c2) = (2.25, 1.0);
@@ -41,18 +54,35 @@ fn main() -> Result<()> {
         count::vectors_collapsed(compiled.order, compiled.dirs.shape[0])
     );
 
-    // 2. One collapsed push evaluates the whole operator; cross-check
-    //    against manually composing f and Δf.
-    let (f0, hf) = plan::apply(&mlp, &x, &compiled, Collapse::Collapsed);
-    let (_, lap) = operators::laplacian_native(&mlp, &x, Collapse::Collapsed);
-    let manual = f0.scale(c0).add(&lap.scale(c2));
-    let dev = hf.max_abs_diff(&manual);
-    println!("single push vs manual c0·f + c2·Δf: max |Δ| = {dev:.2e}");
-    anyhow::ensure!(dev < 1e-9, "composed plan disagrees with manual composition");
+    // 2. Compile the spec into a typed Engine handle and evaluate it.  The
+    //    jet-engine oracle (plan::apply) runs on bitwise-identical weights:
+    //    glorot_theta and Mlp::init draw from the same Glorot stream.
+    let engine = Engine::builder().registry(Registry::load_default()?).build()?;
+    let handle = engine.compile(spec.clone(), Method::Collapsed, &widths)?;
+    let theta = handle.meta().glorot_theta(&mut Rng::new(42));
+    let mlp = Mlp::init(&mut Rng::new(42), dim, &widths, batch);
 
-    // 3. Standard and collapsed propagation agree (the collapse identity).
-    let (_, hf_std) = plan::apply(&mlp, &x, &compiled, Collapse::Standard);
-    println!("standard vs collapsed: max |Δ| = {:.2e}", hf.max_abs_diff(&hf_std));
+    let mut rng = Rng::new(7);
+    let mut xdata = vec![0.0f32; batch * dim];
+    rng.fill_normal_f32(&mut xdata);
+    let x = HostTensor::new(vec![batch, dim], xdata.clone());
+    let x0 = Tensor::new(vec![batch, dim], xdata.iter().map(|&v| v as f64).collect());
+
+    let out = handle.eval().theta(&theta).x(&x).run()?;
+    let (f0, _) = plan::apply(&mlp, &x0, &compiled, Collapse::Collapsed);
+    let (_, lap) = operators::laplacian_native(&mlp, &x0, Collapse::Collapsed);
+    let manual = f0.scale(c0).add(&lap.scale(c2));
+    let dev = max_rel_dev(&out.op.data, &manual.data);
+    println!("engine handle vs manual c0·f + c2·Δf oracle: max rel |Δ| = {dev:.2e}");
+    anyhow::ensure!(dev < 1e-5, "composed handle disagrees with manual composition");
+
+    // 3. Standard and collapsed propagation agree (the collapse identity):
+    //    the same spec compiled under the other method is a second handle.
+    let handle_std = engine.compile(spec.clone(), Method::Standard, &widths)?;
+    let out_std = handle_std.eval().theta(&theta).x(&x).run()?;
+    let dev = max_abs_dev(&out.op.data, &out_std.op.data);
+    println!("standard vs collapsed handles: max |Δ| = {dev:.2e}");
+    anyhow::ensure!(dev < 1e-4, "collapse identity violated through the engine");
 
     // 4. Composition is open: add an anisotropic, *negatively* weighted
     //    second-order family — the signed single-bundle collapse at work.
@@ -68,17 +98,19 @@ fn main() -> Result<()> {
             FamilySpec { weight: -0.5, degree: 2, dirs: aniso },
         ],
     )?;
-    let custom_plan = custom.compile();
-    let (_, g_std) = plan::apply(&mlp, &x, &custom_plan, Collapse::Standard);
-    let (_, g_col) = plan::apply(&mlp, &x, &custom_plan, Collapse::Collapsed);
+    let h_col = engine.compile(custom.clone(), Method::Collapsed, &widths)?;
+    let h_std = engine.compile(custom.clone(), Method::Standard, &widths)?;
+    let g_col = h_col.eval().theta(&theta).x(&x).run()?;
+    let g_std = h_std.eval().theta(&theta).x(&x).run()?;
+    let dev = max_abs_dev(&g_col.op.data, &g_std.op.data);
     println!(
-        "\ncustom spec {} ({} families, {} stacked dirs): std vs col max |Δ| = {:.2e}",
+        "\ncustom spec {} ({} families, {} stacked dirs): std vs col max |Δ| = {dev:.2e}",
         custom.name,
         custom.families.len(),
-        custom_plan.dirs.shape[0],
-        g_std.max_abs_diff(&g_col)
+        custom.compile().dirs.shape[0]
     );
-    anyhow::ensure!(g_std.max_abs_diff(&g_col) < 1e-9, "signed collapse identity violated");
+    anyhow::ensure!(dev < 1e-4, "signed collapse identity violated");
+    println!("engine stats after 4 compiled handles: {}", engine.stats());
 
     // 5. The builtin `helmholtz` route, served end to end.
     let registry = Registry::load_default()?;

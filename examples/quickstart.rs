@@ -1,64 +1,73 @@
-//! Quickstart: load an AOT-compiled collapsed-Taylor Laplacian and run it.
+//! Quickstart: the typed front door in four steps.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 //!
-//! Walks through the three API layers: the artifact registry, direct
-//! executable use (including the Pallas-kernel variant), and the paper's
-//! cost model.
+//! Build an [`Engine`], obtain a typed `OperatorHandle` for the
+//! collapsed-Taylor Laplacian, evaluate through the named-input request
+//! builder, and read the engine gauges.  No artifacts on disk are needed:
+//! the registry falls back to the builtin preset.
 
 use anyhow::Result;
-use ctaylor::runtime::{HostTensor, Registry, RuntimeClient};
+use ctaylor::api::Engine;
+use ctaylor::runtime::{HostTensor, Registry};
 use ctaylor::taylor::count;
 use ctaylor::util::prng::Rng;
 
 fn main() -> Result<()> {
-    // 1. The registry describes every AOT-compiled model variant.
-    let registry = Registry::load_default()?;
-    println!("loaded manifest: preset={} with {} artifacts", registry.preset, registry.artifacts.len());
+    // 1. One Engine per process: registry + program cache + worker pool.
+    //    Route strings are parsed exactly once, when a handle is built.
+    let engine = Engine::builder().registry(Registry::load_default()?).build()?;
+    let reg = engine.registry();
+    println!("engine over preset={} with {} artifacts", reg.preset, reg.artifacts.len());
 
-    // 2. Compile one artifact on the PJRT CPU client (cached thereafter).
-    let client = RuntimeClient::cpu()?;
-    let model = client.load(&registry, "laplacian_collapsed_exact_b8")?;
-    let meta = &model.meta;
+    let model = engine.operator("laplacian_collapsed_exact_b8")?;
+    let meta = model.meta().clone();
     println!(
-        "model: {} — D={} widths={:?} batch={} ({} params)",
-        meta.name, meta.dim, meta.widths, meta.batch, meta.theta_len
+        "handle: {} — method={} D={} widths={:?} batch={} ({} params)",
+        model.name(),
+        model.method(),
+        meta.dim,
+        meta.widths,
+        meta.batch,
+        meta.theta_len
     );
 
-    // 3. Parameters: Glorot weights, zero biases (same layout as model.py).
+    // 2. Parameters: Glorot weights, zero biases (same layout as model.py).
     let mut rng = Rng::new(42);
-    let mut theta = vec![0.0f32; meta.theta_len];
-    let mut off = 0;
-    for &(fi, fo) in &meta.layer_dims {
-        rng.glorot_f32(fi, fo, &mut theta[off..off + fi * fo]);
-        off += fi * fo + fo;
-    }
-    let theta = HostTensor::new(vec![meta.theta_len], theta);
+    let theta = meta.glorot_theta(&mut rng);
 
-    // 4. A batch of points, and one forward pass = value + Laplacian.
+    // 3. A batch of points; one request = value + Laplacian.  Inputs are
+    //    named — forgetting one fails with an error that says which.
     let mut x = vec![0.0f32; meta.batch * meta.dim];
     rng.fill_normal_f32(&mut x);
     let x = HostTensor::new(vec![meta.batch, meta.dim], x);
-    let out = model.run(&[theta.clone(), x.clone()])?;
+    let out = model.eval().theta(&theta).x(&x).run()?;
     println!("\n  i      f(x_i)        Δf(x_i)");
     for i in 0..meta.batch {
-        println!("  {i}   {:+.6}   {:+.6}", out[0].data[i], out[1].data[i]);
+        println!("  {i}   {:+.6}   {:+.6}", out.f0.data[i], out.op.data[i]);
     }
 
-    // 5. The same computation with the fused Pallas activation kernel (L1).
-    let kern = client.load(&registry, "laplacian_collapsed_exact_kernel_b8")?;
-    let kout = kern.run(&[theta, x])?;
-    let max_dev = out[1]
+    // 4. The same computation with the fused Pallas activation kernel (L1).
+    let kern = engine.operator("laplacian_collapsed_exact_kernel_b8")?;
+    let kout = kern.eval().theta(&theta).x(&x).run()?;
+    let max_dev = out
+        .op
         .data
         .iter()
-        .zip(&kout[1].data)
+        .zip(&kout.op.data)
         .map(|(a, b)| (a - b).abs())
         .fold(0f32, f32::max);
     println!("\nPallas-kernel variant max deviation: {max_dev:.2e}");
+    anyhow::ensure!(max_dev < 1e-3, "kernel variant must match the plain route");
+    anyhow::ensure!(out.op.data.iter().all(|v| v.is_finite()), "outputs must be finite");
 
-    // 6. Why collapsed wins (paper §3.2): vectors propagated per node.
+    // The first request per route compiled a program; repeats are pure VM
+    // execution against cached, arena-backed programs.
+    println!("engine stats: {}", engine.stats());
+
+    // Why collapsed wins (paper §3.2): vectors propagated per node.
     let d = meta.dim;
     println!(
         "\ncost model (D={d}): standard Taylor {} vectors, collapsed {} vectors, ratio {:.2}",

@@ -1,0 +1,125 @@
+//! Structured errors for the typed serving surface.
+//!
+//! Every failure mode of the `ctaylor::api` front door is a named variant,
+//! split by phase: *load-time* errors ([`ApiError::UnknownOperator`] through
+//! [`ApiError::InvalidSpec`]) fire in [`crate::api::Engine::operator`] /
+//! [`crate::api::Engine::compile`] — a malformed artifact fails when the
+//! handle is built, never mid-request — and *request-time* errors
+//! ([`ApiError::MissingInput`] through [`ApiError::ShapeMismatch`]) name the
+//! offending input (`theta` / `x` / `sigma` / `dirs`) with expected-vs-got
+//! shapes instead of the old positional-slice "missing input 2" messages.
+
+use std::fmt;
+
+/// Everything that can go wrong at the `ctaylor::api` surface.
+///
+/// # Examples
+///
+/// ```
+/// use ctaylor::api::{ApiError, Engine};
+/// use ctaylor::runtime::Registry;
+///
+/// let engine = Engine::builder().registry(Registry::builtin()).build().unwrap();
+/// match engine.operator("no_such_artifact") {
+///     Err(ApiError::UnknownOperator { name }) => assert_eq!(name, "no_such_artifact"),
+///     other => panic!("expected UnknownOperator, got {other:?}"),
+/// }
+/// ```
+#[derive(Debug)]
+pub enum ApiError {
+    /// `Engine::operator` was asked for a name the manifest does not have.
+    UnknownOperator { name: String },
+    /// The artifact's `method` string failed to parse — caught at load.
+    UnknownMethod { artifact: String, method: String },
+    /// The artifact's (op, mode) pair is outside what the backend serves —
+    /// caught at load.
+    UnsupportedRoute { artifact: String, op: String, mode: String },
+    /// The manifest entry is structurally broken (bad `layer_dims`,
+    /// inconsistent `theta_len`, ...) — caught at load.
+    MalformedArtifact { artifact: String, reason: String },
+    /// `Engine::compile` was given an invalid spec or configuration.
+    InvalidSpec { name: String, reason: String },
+    /// A required named input was not supplied to the request builder.
+    MissingInput { artifact: String, input: &'static str, expected: Vec<usize> },
+    /// An input was supplied that this route does not take.
+    UnexpectedInput { artifact: String, input: &'static str, reason: String },
+    /// A supplied input has the wrong shape.
+    ShapeMismatch { artifact: String, input: &'static str, expected: Vec<usize>, got: Vec<usize> },
+    /// An execution-backend failure below the API layer.
+    Internal(anyhow::Error),
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::UnknownOperator { name } => {
+                write!(f, "operator {name:?} is not in the manifest")
+            }
+            ApiError::UnknownMethod { artifact, method } => {
+                write!(
+                    f,
+                    "{artifact}: unknown method {method:?} \
+                     (expected nested | standard | collapsed)"
+                )
+            }
+            ApiError::UnsupportedRoute { artifact, op, mode } => {
+                write!(f, "{artifact}: no executor for op {op:?} mode {mode:?}")
+            }
+            ApiError::MalformedArtifact { artifact, reason } => {
+                write!(f, "{artifact}: malformed manifest entry: {reason}")
+            }
+            ApiError::InvalidSpec { name, reason } => {
+                write!(f, "spec {name:?}: {reason}")
+            }
+            ApiError::MissingInput { artifact, input, expected } => {
+                write!(f, "{artifact}: missing input `{input}` (expected shape {expected:?})")
+            }
+            ApiError::UnexpectedInput { artifact, input, reason } => {
+                write!(f, "{artifact}: unexpected input `{input}`: {reason}")
+            }
+            ApiError::ShapeMismatch { artifact, input, expected, got } => {
+                write!(
+                    f,
+                    "{artifact}: input `{input}` has shape {got:?}, expected {expected:?}"
+                )
+            }
+            ApiError::Internal(e) => write!(f, "execution backend: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ApiError::Internal(e) => Some(e.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_name_the_input_and_both_shapes() {
+        let e = ApiError::ShapeMismatch {
+            artifact: "lap_b2".into(),
+            input: "x",
+            expected: vec![2, 16],
+            got: vec![3, 4],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("`x`"), "{msg}");
+        assert!(msg.contains("[2, 16]"), "{msg}");
+        assert!(msg.contains("[3, 4]"), "{msg}");
+
+        let e = ApiError::MissingInput {
+            artifact: "w".into(),
+            input: "sigma",
+            expected: vec![16, 16],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("`sigma`") && msg.contains("[16, 16]"), "{msg}");
+    }
+}

@@ -1,0 +1,513 @@
+//! Typed operator handles and the named-input evaluation request.
+//!
+//! A handle is built **once** per operator — [`crate::api::Engine::operator`]
+//! resolves the manifest's `method` / `op` / `mode` strings into enums right
+//! there, so the per-request path ([`EvalRequest::run`]) performs no string
+//! parsing at all: a malformed artifact fails at load, never at run.
+
+use std::sync::Arc;
+
+use crate::runtime::native::{self, Aux, OpKind};
+use crate::runtime::{ArtifactMeta, HostTensor};
+use crate::taylor::jet::Collapse;
+
+use super::error::ApiError;
+use super::Shared;
+
+/// Evaluation strategy, parsed from the manifest exactly once at load.
+///
+/// # Examples
+///
+/// ```
+/// use ctaylor::api::Method;
+///
+/// assert_eq!(Method::parse("collapsed"), Some(Method::Collapsed));
+/// assert_eq!(Method::parse("frobnicate"), None);
+/// assert_eq!(Method::Standard.as_str(), "standard");
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Nested first-order AD (reverse tape + forward duals).
+    Nested,
+    /// Standard Taylor mode: `1 + KR` propagated vectors per node.
+    Standard,
+    /// Collapsed Taylor mode: `1 + (K-1)R + 1` vectors per node (the
+    /// paper's contribution).
+    Collapsed,
+}
+
+impl Method {
+    /// Parse a manifest `method` string.  Called from handle construction
+    /// only — steady-state evaluation never sees a method string.
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "nested" => Some(Method::Nested),
+            "standard" => Some(Method::Standard),
+            "collapsed" => Some(Method::Collapsed),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Method::Nested => "nested",
+            Method::Standard => "standard",
+            Method::Collapsed => "collapsed",
+        }
+    }
+
+    /// The Taylor collapse policy, `None` for nested AD.
+    pub(crate) fn collapse(self) -> Option<Collapse> {
+        match self {
+            Method::Nested => None,
+            Method::Standard => Some(Collapse::Standard),
+            Method::Collapsed => Some(Collapse::Collapsed),
+        }
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Which auxiliary input (beyond `theta` and `x`) a handle's route
+/// consumes — resolved once at load from the route's (op, mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AuxInput {
+    /// The route takes only `theta` and `x`.
+    None,
+    /// The exact weighted Laplacian takes a `[D, D]` σ matrix.
+    Sigma,
+    /// Stochastic estimators take sampled `[S, D]` directions.
+    Directions,
+}
+
+/// How a handle maps to the execution backend.
+#[derive(Debug)]
+enum RouteKind {
+    /// A manifest artifact: the (op, mode) pair typed at load; the
+    /// `OperatorSpec` is resolved per request because σ / sampled
+    /// directions arrive with the request.
+    Artifact { op: OpKind, aux: AuxInput },
+    /// An ad-hoc `Engine::compile` spec: directions are part of the spec,
+    /// so the whole operator is fixed at handle construction.
+    Custom { spec: crate::operators::OperatorSpec },
+}
+
+#[derive(Debug)]
+pub(crate) struct HandleCore {
+    meta: ArtifactMeta,
+    method: Method,
+    route: RouteKind,
+}
+
+/// A loaded, typed operator: the only way to evaluate anything.
+///
+/// Obtained from [`crate::api::Engine::operator`] (manifest artifacts) or
+/// [`crate::api::Engine::compile`] (ad-hoc [`crate::operators::OperatorSpec`]s).
+/// Cheap to clone; all clones share the owning engine's program cache and
+/// worker pool.
+///
+/// # Examples
+///
+/// ```
+/// use ctaylor::api::Engine;
+/// use ctaylor::runtime::{HostTensor, Registry};
+///
+/// # fn main() -> Result<(), Box<dyn std::error::Error>> {
+/// let engine = Engine::builder().registry(Registry::builtin()).build()?;
+/// let handle = engine.operator("laplacian_collapsed_exact_b2")?;
+/// let theta = HostTensor::zeros(vec![handle.meta().theta_len]);
+/// let x = HostTensor::zeros(vec![2, handle.meta().dim]);
+/// let out = handle.eval().theta(&theta).x(&x).run()?;
+/// assert_eq!(out.f0.shape, vec![2, 1]);
+/// assert_eq!(out.op.shape, vec![2, 1]);
+/// # Ok(()) }
+/// ```
+#[derive(Debug, Clone)]
+pub struct OperatorHandle {
+    pub(crate) shared: Arc<Shared>,
+    pub(crate) core: Arc<HandleCore>,
+}
+
+/// Build a handle from a manifest entry.  This is the ONE place the
+/// stringly-typed manifest route is parsed; everything downstream is enums.
+pub(crate) fn handle_from_meta(
+    shared: Arc<Shared>,
+    meta: ArtifactMeta,
+) -> Result<OperatorHandle, ApiError> {
+    let artifact = meta.name.clone();
+    let method = Method::parse(&meta.method).ok_or_else(|| ApiError::UnknownMethod {
+        artifact: artifact.clone(),
+        method: meta.method.clone(),
+    })?;
+    let unsupported = || ApiError::UnsupportedRoute {
+        artifact: artifact.clone(),
+        op: meta.op.clone(),
+        mode: meta.mode.clone(),
+    };
+    let op = OpKind::parse(&meta.op).ok_or_else(unsupported)?;
+    let aux = match meta.mode.as_str() {
+        "stochastic" => AuxInput::Directions,
+        "exact" => {
+            if op == OpKind::WeightedLaplacian {
+                AuxInput::Sigma
+            } else {
+                AuxInput::None
+            }
+        }
+        _ => return Err(unsupported()),
+    };
+    let malformed = |reason: String| ApiError::MalformedArtifact {
+        artifact: artifact.clone(),
+        reason,
+    };
+    if meta.layer_dims.is_empty() {
+        return Err(malformed("manifest has no layer_dims".into()));
+    }
+    let expect: usize = meta.layer_dims.iter().map(|&(fi, fo)| fi * fo + fo).sum();
+    if expect != meta.theta_len {
+        return Err(malformed(format!(
+            "theta_len {} != layer_dims total {expect}",
+            meta.theta_len
+        )));
+    }
+    if meta.dim == 0 || meta.layer_dims[0].0 != meta.dim {
+        return Err(malformed(format!(
+            "input dim {} inconsistent with layer_dims {:?}",
+            meta.dim, meta.layer_dims
+        )));
+    }
+    if meta.batch == 0 {
+        return Err(malformed("compiled batch must be >= 1".into()));
+    }
+    if aux == AuxInput::Directions && meta.samples == 0 {
+        return Err(malformed("stochastic route with samples = 0".into()));
+    }
+    let core = HandleCore { meta, method, route: RouteKind::Artifact { op, aux } };
+    Ok(OperatorHandle { shared, core: Arc::new(core) })
+}
+
+/// Build a handle from an ad-hoc spec (`Engine::compile`).
+pub(crate) fn handle_from_spec(
+    shared: Arc<Shared>,
+    spec: crate::operators::OperatorSpec,
+    method: Method,
+    widths: &[usize],
+) -> Result<OperatorHandle, ApiError> {
+    let invalid = |reason: String| ApiError::InvalidSpec { name: spec.name.clone(), reason };
+    if method == Method::Nested {
+        return Err(invalid(
+            "nested AD has per-operator closed forms; use a named registry route".into(),
+        ));
+    }
+    spec.validate().map_err(|e| invalid(format!("{e:#}")))?;
+    let dim = match spec.dim() {
+        Some(d) => d,
+        None => {
+            return Err(invalid(
+                "spec needs at least one direction family to fix the input dimension".into(),
+            ))
+        }
+    };
+    if widths.is_empty() {
+        return Err(invalid("widths must name the MLP hidden/output layers".into()));
+    }
+    let mut layer_dims = Vec::new();
+    let mut prev = dim;
+    for &w in widths {
+        if w == 0 {
+            return Err(invalid("zero-width layer".into()));
+        }
+        layer_dims.push((prev, w));
+        prev = w;
+    }
+    let theta_len: usize = layer_dims.iter().map(|&(fi, fo)| fi * fo + fo).sum();
+    // A unique name: it keys the engine's program cache, and two ad-hoc
+    // specs may share a display name while embedding different directions.
+    let name = format!("custom#{}:{}", shared.next_custom_id(), spec.name);
+    let meta = ArtifactMeta {
+        file: String::new(),
+        name,
+        op: "custom".to_string(),
+        method: method.as_str().to_string(),
+        mode: "exact".to_string(),
+        dim,
+        widths: widths.to_vec(),
+        batch: 0, // flexible: the request's x fixes the batch
+        samples: 0,
+        theta_len,
+        layer_dims,
+        variant: "plain".to_string(),
+        inputs: Vec::new(),
+        outputs: Vec::new(),
+    };
+    let core = HandleCore { meta, method, route: RouteKind::Custom { spec } };
+    Ok(OperatorHandle { shared, core: Arc::new(core) })
+}
+
+impl OperatorHandle {
+    /// Start a named-input evaluation request.
+    pub fn eval(&self) -> EvalRequest<'_> {
+        EvalRequest { handle: self, theta: None, x: None, sigma: None, dirs: None }
+    }
+
+    /// The handle's manifest metadata (synthetic for `Engine::compile`
+    /// handles: `batch` is 0 there, meaning "any batch").
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.core.meta
+    }
+
+    /// The handle's unique name (artifact name, or an engine-assigned
+    /// `custom#<id>:<spec name>` for compiled specs).
+    pub fn name(&self) -> &str {
+        &self.core.meta.name
+    }
+
+    /// The evaluation strategy, parsed once at load.
+    pub fn method(&self) -> Method {
+        self.core.method
+    }
+
+    /// Which auxiliary input this route consumes beyond `theta` and `x`.
+    pub fn aux_input(&self) -> AuxInput {
+        match &self.core.route {
+            RouteKind::Artifact { aux, .. } => *aux,
+            RouteKind::Custom { .. } => AuxInput::None,
+        }
+    }
+
+    fn run_request(&self, req: &EvalRequest<'_>) -> Result<EvalOutput, ApiError> {
+        let core = &self.core;
+        let meta = &core.meta;
+        let name = &meta.name;
+        let d = meta.dim;
+        let missing = |input: &'static str, expected: Vec<usize>| ApiError::MissingInput {
+            artifact: name.clone(),
+            input,
+            expected,
+        };
+        let mismatch = |input: &'static str, expected: Vec<usize>, got: &[usize]| {
+            ApiError::ShapeMismatch {
+                artifact: name.clone(),
+                input,
+                expected,
+                got: got.to_vec(),
+            }
+        };
+        let unexpected = |input: &'static str, reason: String| ApiError::UnexpectedInput {
+            artifact: name.clone(),
+            input,
+            reason,
+        };
+
+        let theta = req.theta.ok_or_else(|| missing("theta", vec![meta.theta_len]))?;
+        if theta.shape != [meta.theta_len] {
+            return Err(mismatch("theta", vec![meta.theta_len], &theta.shape));
+        }
+
+        let flexible = matches!(core.route, RouteKind::Custom { .. });
+        let x = req.x.ok_or_else(|| missing("x", vec![meta.batch.max(1), d]))?;
+        let x_ok = if flexible {
+            x.shape.len() == 2 && x.shape[1] == d && x.shape[0] >= 1
+        } else {
+            x.shape == [meta.batch, d]
+        };
+        if !x_ok {
+            let expected_batch =
+                if flexible { x.shape.first().copied().unwrap_or(1).max(1) } else { meta.batch };
+            return Err(mismatch("x", vec![expected_batch, d], &x.shape));
+        }
+
+        let aux = match self.aux_input() {
+            AuxInput::None => {
+                if req.sigma.is_some() {
+                    return Err(unexpected(
+                        "sigma",
+                        format!("route {}/{} takes no sigma", meta.op, meta.mode),
+                    ));
+                }
+                if req.dirs.is_some() {
+                    return Err(unexpected(
+                        "dirs",
+                        format!("route {}/{} takes no sampled directions", meta.op, meta.mode),
+                    ));
+                }
+                Aux::None
+            }
+            AuxInput::Sigma => {
+                if req.dirs.is_some() {
+                    return Err(unexpected(
+                        "dirs",
+                        "the exact weighted route takes sigma, not directions".into(),
+                    ));
+                }
+                let s = req.sigma.ok_or_else(|| missing("sigma", vec![d, d]))?;
+                if s.shape != [d, d] {
+                    return Err(mismatch("sigma", vec![d, d], &s.shape));
+                }
+                Aux::Sigma(native::to_f64(s))
+            }
+            AuxInput::Directions => {
+                if req.sigma.is_some() {
+                    return Err(unexpected(
+                        "sigma",
+                        "stochastic routes take sigma-premultiplied directions, not sigma".into(),
+                    ));
+                }
+                let dd = req.dirs.ok_or_else(|| missing("dirs", vec![meta.samples, d]))?;
+                if dd.shape != [meta.samples, d] {
+                    return Err(mismatch("dirs", vec![meta.samples, d], &dd.shape));
+                }
+                Aux::Dirs(native::to_f64(dd))
+            }
+        };
+
+        let mlp = native::mlp_from_theta(meta, &theta.data).map_err(ApiError::Internal)?;
+        let x0 = native::to_f64(x);
+        let (f0, opv) = match (core.method.collapse(), &core.route) {
+            (None, RouteKind::Artifact { op, .. }) => {
+                let f0 = mlp.apply(&x0);
+                let opv = native::execute_nested(&mlp, *op, &x0, &aux, &f0)
+                    .map_err(ApiError::Internal)?;
+                (f0, opv)
+            }
+            (Some(mode), RouteKind::Artifact { op, .. }) => {
+                let spec = native::resolve_spec(*op, d, &aux).map_err(ApiError::Internal)?;
+                // Any aux-derived direction bundle (sampled dirs OR the σ
+                // columns) arrives with the request, so its batch
+                // broadcast must never be cached as program state — the
+                // compiled program itself is aux-independent (directions
+                // are a runtime input), which is why the cache key needs
+                // no σ/dirs fingerprint.
+                let fresh = !matches!(aux, Aux::None);
+                native::execute_taylor(
+                    name,
+                    &mlp,
+                    &x0,
+                    &spec,
+                    mode,
+                    fresh,
+                    &self.shared.programs,
+                    &theta.data,
+                    self.shared.pool(),
+                )
+                .map_err(ApiError::Internal)?
+            }
+            (Some(mode), RouteKind::Custom { spec }) => native::execute_taylor(
+                name,
+                &mlp,
+                &x0,
+                spec,
+                mode,
+                false,
+                &self.shared.programs,
+                &theta.data,
+                self.shared.pool(),
+            )
+            .map_err(ApiError::Internal)?,
+            (None, RouteKind::Custom { .. }) => {
+                unreachable!("nested custom specs are rejected at Engine::compile")
+            }
+        };
+        Ok(EvalOutput { f0: native::to_f32(&f0), op: native::to_f32(&opv) })
+    }
+}
+
+/// A named-input evaluation request: `.theta(..)`, `.x(..)`, plus
+/// `.sigma(..)` or `.directions(..)` where the route requires them.
+///
+/// Inputs are borrowed — building a request allocates nothing, so the
+/// steady-state serving path pays only for execution.
+///
+/// # Examples
+///
+/// ```
+/// use ctaylor::api::{ApiError, Engine};
+/// use ctaylor::runtime::{HostTensor, Registry};
+///
+/// # fn main() -> Result<(), Box<dyn std::error::Error>> {
+/// let engine = Engine::builder().registry(Registry::builtin()).build()?;
+/// let handle = engine.operator("laplacian_collapsed_stochastic_s4_b4")?;
+/// let theta = HostTensor::zeros(vec![handle.meta().theta_len]);
+/// let x = HostTensor::zeros(vec![4, 16]);
+///
+/// // Stochastic routes require sampled directions; the error names them.
+/// let err = handle.eval().theta(&theta).x(&x).run().unwrap_err();
+/// assert!(matches!(err, ApiError::MissingInput { input: "dirs", .. }));
+///
+/// let dirs = HostTensor::zeros(vec![4, 16]);
+/// let out = handle.eval().theta(&theta).x(&x).directions(&dirs).run()?;
+/// assert_eq!(out.op.shape, vec![4, 1]);
+/// # Ok(()) }
+/// ```
+#[derive(Debug)]
+pub struct EvalRequest<'a> {
+    handle: &'a OperatorHandle,
+    theta: Option<&'a HostTensor>,
+    x: Option<&'a HostTensor>,
+    sigma: Option<&'a HostTensor>,
+    dirs: Option<&'a HostTensor>,
+}
+
+impl<'a> EvalRequest<'a> {
+    /// The flat parameter vector `[theta_len]` (per-layer W then b).
+    pub fn theta(mut self, t: &'a HostTensor) -> Self {
+        self.theta = Some(t);
+        self
+    }
+
+    /// The evaluation points `[B, D]`.
+    pub fn x(mut self, t: &'a HostTensor) -> Self {
+        self.x = Some(t);
+        self
+    }
+
+    /// The `[D, D]` σ matrix (exact weighted Laplacian only).
+    pub fn sigma(mut self, t: &'a HostTensor) -> Self {
+        self.sigma = Some(t);
+        self
+    }
+
+    /// Sampled directions `[S, D]` (stochastic routes only; weighted
+    /// stochastic routes take σ-premultiplied directions, paper eq. 8a).
+    pub fn directions(mut self, t: &'a HostTensor) -> Self {
+        self.dirs = Some(t);
+        self
+    }
+
+    /// Validate the named inputs and execute.
+    pub fn run(self) -> Result<EvalOutput, ApiError> {
+        self.handle.run_request(&self)
+    }
+}
+
+/// The result of one evaluation: the network values and the operator
+/// values, each `[B, 1]` f32.
+///
+/// # Examples
+///
+/// ```
+/// use ctaylor::api::Engine;
+/// use ctaylor::runtime::{HostTensor, Registry};
+///
+/// # fn main() -> Result<(), Box<dyn std::error::Error>> {
+/// let engine = Engine::builder().registry(Registry::builtin()).build()?;
+/// let handle = engine.operator("helmholtz_collapsed_exact_b1")?;
+/// let theta = HostTensor::zeros(vec![handle.meta().theta_len]);
+/// let x = HostTensor::zeros(vec![1, handle.meta().dim]);
+/// let out = handle.eval().theta(&theta).x(&x).run()?;
+/// // A zero network: f = 0, so L f = c0*f + c2*Δf = 0.
+/// assert_eq!(out.f0.data[0], 0.0);
+/// assert_eq!(out.op.data[0], 0.0);
+/// # Ok(()) }
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalOutput {
+    /// Network values `f(x)`, shape `[B, 1]`.
+    pub f0: HostTensor,
+    /// Operator values `L f(x)` (Δf, Tr(σσᵀ∇²f), Δ²f, ...), shape `[B, 1]`.
+    pub op: HostTensor,
+}

@@ -1,0 +1,528 @@
+//! The typed front door: an [`Engine`] session over typed
+//! [`OperatorHandle`]s — the only public way to execute operators.
+//!
+//! The paper's thesis is that collapsing "could — or should — be done by a
+//! machine learning compiler, without exposing complexity to users".  This
+//! module is where that complexity stops: callers build one [`Engine`]
+//! (registry, worker-thread count, program-cache capacity, default collapse
+//! policy), obtain typed handles via [`Engine::operator`] (manifest routes)
+//! or [`Engine::compile`] (ad-hoc [`OperatorSpec`]s), and evaluate through a
+//! named-input [`EvalRequest`] builder.  Method / op / mode strings are
+//! parsed **once** at handle construction; the steady-state request path is
+//! enum dispatch plus cached-program VM execution only.
+//!
+//! The backend boundary sits just below this module: a handle's Taylor
+//! route resolves to a cached, buffer-planned `Program` run against pooled
+//! execution arenas (`taylor::program::execute_with`).  A future PJRT/XLA
+//! backend replaces that cached program behind the same [`Engine`] /
+//! [`OperatorHandle`] surface, and the batch-sharding pool generalizes to
+//! multi-device dispatch — no caller changes.
+//!
+//! # Examples
+//!
+//! ```
+//! use ctaylor::api::Engine;
+//! use ctaylor::runtime::{HostTensor, Registry};
+//!
+//! # fn main() -> Result<(), Box<dyn std::error::Error>> {
+//! let engine = Engine::builder().registry(Registry::builtin()).build()?;
+//! let laplace = engine.operator("laplacian_collapsed_exact_b4")?;
+//!
+//! let theta = HostTensor::zeros(vec![laplace.meta().theta_len]);
+//! let x = HostTensor::zeros(vec![4, laplace.meta().dim]);
+//! let out = laplace.eval().theta(&theta).x(&x).run()?;
+//! assert_eq!(out.op.shape, vec![4, 1]);
+//!
+//! // The route's compiled program is cached: a second batch is VM-only.
+//! laplace.eval().theta(&theta).x(&x).run()?;
+//! let stats = engine.stats();
+//! assert_eq!(stats.program_cache_hits, 1);
+//! assert_eq!(stats.program_cache_misses, 1);
+//! # Ok(()) }
+//! ```
+
+mod error;
+mod handle;
+
+pub use error::ApiError;
+pub use handle::{AuxInput, EvalOutput, EvalRequest, Method, OperatorHandle};
+
+pub use crate::runtime::native::shard_count;
+pub use crate::taylor::jet::Collapse;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::operators::OperatorSpec;
+use crate::runtime::native::ProgramCache;
+use crate::runtime::Registry;
+use crate::util::pool::Pool;
+
+/// The worker pool an engine executes on: the process-wide serving pool by
+/// default, or an engine-owned pool when the builder pins a thread count.
+enum PoolChoice {
+    Global,
+    Owned(Pool),
+}
+
+/// Engine state shared by the engine and every handle it produced (handles
+/// stay valid after the `Engine` value is dropped).
+pub(crate) struct Shared {
+    registry: Registry,
+    pub(crate) programs: ProgramCache,
+    pool: PoolChoice,
+    /// Name-keyed handle cache: each artifact's route strings are parsed
+    /// at most once per engine.  Values hold no back-reference to
+    /// `Shared`, so there is no Arc cycle.
+    handles: Mutex<BTreeMap<String, Arc<handle::HandleCore>>>,
+    custom_ids: AtomicU64,
+    default_collapse: Collapse,
+}
+
+impl Shared {
+    pub(crate) fn pool(&self) -> &Pool {
+        match &self.pool {
+            PoolChoice::Global => Pool::global(),
+            PoolChoice::Owned(p) => p,
+        }
+    }
+
+    pub(crate) fn next_custom_id(&self) -> u64 {
+        self.custom_ids.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for Shared {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Shared").field("preset", &self.registry.preset).finish_non_exhaustive()
+    }
+}
+
+/// Builder for [`Engine`]: registry, worker-thread count, program-cache
+/// capacity and the default collapse policy.
+///
+/// # Examples
+///
+/// ```
+/// use ctaylor::api::{Collapse, Engine};
+/// use ctaylor::runtime::Registry;
+///
+/// # fn main() -> Result<(), Box<dyn std::error::Error>> {
+/// let engine = Engine::builder()
+///     .registry(Registry::builtin())
+///     .threads(1) // strictly single-threaded execution
+///     .cache_capacity(64)
+///     .collapse(Collapse::Collapsed)
+///     .build()?;
+/// assert_eq!(engine.stats().pool_executors, 1);
+/// # Ok(()) }
+/// ```
+#[derive(Debug, Default)]
+pub struct EngineBuilder {
+    registry: Option<Registry>,
+    threads: Option<usize>,
+    cache_capacity: Option<usize>,
+    collapse: Option<Collapse>,
+}
+
+impl EngineBuilder {
+    /// The artifact registry to serve.  Default: [`Registry::load_default`]
+    /// (`$CTAYLOR_ARTIFACTS` / `./artifacts`, falling back to the builtin
+    /// preset).
+    pub fn registry(mut self, registry: Registry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Total executor threads for batch sharding (>= 1; 1 = strictly
+    /// single-threaded).  Default: the process-wide pool sized by
+    /// `CTAYLOR_THREADS` / available parallelism.
+    pub fn threads(mut self, total: usize) -> Self {
+        self.threads = Some(total.max(1));
+        self
+    }
+
+    /// Capacity of the compiled-program cache (entries; oldest-inserted
+    /// evicted beyond it).  Default: 256.
+    pub fn cache_capacity(mut self, entries: usize) -> Self {
+        self.cache_capacity = Some(entries.max(1));
+        self
+    }
+
+    /// Default collapse policy for [`Engine::compile_default`].
+    /// Default: [`Collapse::Collapsed`].
+    pub fn collapse(mut self, policy: Collapse) -> Self {
+        self.collapse = Some(policy);
+        self
+    }
+
+    pub fn build(self) -> Result<Engine, ApiError> {
+        let registry = match self.registry {
+            Some(r) => r,
+            None => Registry::load_default().map_err(ApiError::Internal)?,
+        };
+        let pool = match self.threads {
+            None => PoolChoice::Global,
+            Some(total) => PoolChoice::Owned(Pool::new(total - 1)),
+        };
+        let programs = match self.cache_capacity {
+            None => ProgramCache::new(),
+            Some(cap) => ProgramCache::with_capacity(cap),
+        };
+        Ok(Engine {
+            shared: Arc::new(Shared {
+                registry,
+                programs,
+                pool,
+                handles: Mutex::new(BTreeMap::new()),
+                custom_ids: AtomicU64::new(0),
+                default_collapse: self.collapse.unwrap_or(Collapse::Collapsed),
+            }),
+        })
+    }
+}
+
+/// A serving session: the registry, the compiled-program cache, the worker
+/// pool and a handle cache, behind one typed facade.
+///
+/// Cloning is cheap and shares all state.  See the [module docs](self) for
+/// the full walkthrough.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    shared: Arc<Shared>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Load a typed handle for a manifest artifact.  Route strings are
+    /// parsed here, once: a malformed artifact fails at this call, never
+    /// during evaluation.  Handles are cached per name.
+    pub fn operator(&self, name: &str) -> Result<OperatorHandle, ApiError> {
+        if let Some(core) = self.shared.handles.lock().unwrap().get(name) {
+            return Ok(OperatorHandle { shared: self.shared.clone(), core: core.clone() });
+        }
+        let meta = self
+            .shared
+            .registry
+            .get(name)
+            .ok_or_else(|| ApiError::UnknownOperator { name: name.to_string() })?
+            .clone();
+        let h = handle::handle_from_meta(self.shared.clone(), meta)?;
+        self.shared.handles.lock().unwrap().insert(name.to_string(), h.core.clone());
+        Ok(h)
+    }
+
+    /// Compile an ad-hoc [`OperatorSpec`] into a handle evaluating it with
+    /// the given Taylor `method` on a tanh MLP of the given `widths`
+    /// (hidden + output, e.g. `&[32, 32, 1]`).  Unlike artifact handles,
+    /// compiled handles accept any batch size.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use ctaylor::api::{Engine, Method};
+    /// use ctaylor::operators::OperatorSpec;
+    /// use ctaylor::runtime::{HostTensor, Registry};
+    ///
+    /// # fn main() -> Result<(), Box<dyn std::error::Error>> {
+    /// let engine = Engine::builder().registry(Registry::builtin()).build()?;
+    /// let handle = engine.compile(OperatorSpec::laplacian(4), Method::Collapsed, &[8, 1])?;
+    /// let theta = HostTensor::zeros(vec![handle.meta().theta_len]);
+    /// let x = HostTensor::zeros(vec![3, 4]); // any batch
+    /// let out = handle.eval().theta(&theta).x(&x).run()?;
+    /// assert_eq!(out.op.shape, vec![3, 1]);
+    /// # Ok(()) }
+    /// ```
+    pub fn compile(
+        &self,
+        spec: OperatorSpec,
+        method: Method,
+        widths: &[usize],
+    ) -> Result<OperatorHandle, ApiError> {
+        handle::handle_from_spec(self.shared.clone(), spec, method, widths)
+    }
+
+    /// [`Engine::compile`] with the engine's default collapse policy.
+    pub fn compile_default(
+        &self,
+        spec: OperatorSpec,
+        widths: &[usize],
+    ) -> Result<OperatorHandle, ApiError> {
+        let method = match self.shared.default_collapse {
+            Collapse::Standard => Method::Standard,
+            Collapse::Collapsed => Method::Collapsed,
+        };
+        self.compile(spec, method, widths)
+    }
+
+    /// The served artifact registry.
+    pub fn registry(&self) -> &Registry {
+        &self.shared.registry
+    }
+
+    /// The engine's default collapse policy (builder-configured).
+    pub fn default_collapse(&self) -> Collapse {
+        self.shared.default_collapse
+    }
+
+    /// One snapshot of every engine-level gauge.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use ctaylor::api::Engine;
+    /// use ctaylor::runtime::Registry;
+    ///
+    /// # fn main() -> Result<(), Box<dyn std::error::Error>> {
+    /// let engine = Engine::builder().registry(Registry::builtin()).threads(2).build()?;
+    /// let stats = engine.stats();
+    /// assert_eq!(stats.pool_executors, 2);
+    /// assert_eq!(stats.programs_cached, 0); // nothing evaluated yet
+    /// # Ok(()) }
+    /// ```
+    pub fn stats(&self) -> EngineStats {
+        let (hits, misses) = self.shared.programs.stats();
+        EngineStats {
+            operators_loaded: self.shared.handles.lock().unwrap().len(),
+            programs_cached: self.shared.programs.len(),
+            program_cache_hits: hits,
+            program_cache_misses: misses,
+            pool_executors: self.shared.pool().executors(),
+        }
+    }
+}
+
+/// Engine-level gauges: handle / compiled-program cache occupancy, cache
+/// hit/miss counters and the worker-pool width — one struct instead of
+/// per-field getters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Artifact handles resolved (route strings parsed) so far.
+    pub operators_loaded: usize,
+    /// Compiled route programs held (each with its arena free-list).
+    pub programs_cached: usize,
+    /// Program-cache hits: batches served by pure VM execution.
+    pub program_cache_hits: u64,
+    /// Program-cache misses: trace + rewrite + lower compilations.
+    pub program_cache_misses: u64,
+    /// Executor threads available for batch sharding.
+    pub pool_executors: usize,
+}
+
+impl std::fmt::Display for EngineStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "operators={} programs={} prog_hits={} prog_misses={} pool_executors={}",
+            self.operators_loaded,
+            self.programs_cached,
+            self.program_cache_hits,
+            self.program_cache_misses,
+            self.pool_executors
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workload;
+    use crate::mlp::Mlp;
+    use crate::operators::plan::{self, HELMHOLTZ_C0, HELMHOLTZ_C2};
+    use crate::runtime::HostTensor;
+    use crate::taylor::tensor::Tensor;
+    use crate::util::prng::Rng;
+
+    fn engine() -> Engine {
+        Engine::builder().registry(Registry::builtin()).threads(1).build().unwrap()
+    }
+
+    fn to_f64(t: &HostTensor) -> Tensor {
+        Tensor::new(t.shape.clone(), t.data.iter().map(|&v| v as f64).collect())
+    }
+
+    #[test]
+    fn executes_builtin_laplacian_artifact() {
+        let eng = engine();
+        let h = eng.operator("laplacian_collapsed_exact_b2").unwrap();
+        let w = workload::workload_for(h.meta(), 2);
+        let out = w.request(&h).run().unwrap();
+        assert_eq!(out.f0.shape, vec![2, 1]);
+        assert_eq!(out.op.shape, vec![2, 1]);
+        assert!(out.op.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn handles_are_cached_per_name() {
+        let eng = engine();
+        eng.operator("laplacian_collapsed_exact_b4").unwrap();
+        eng.operator("laplacian_collapsed_exact_b4").unwrap();
+        assert_eq!(eng.stats().operators_loaded, 1);
+        assert!(matches!(
+            eng.operator("no_such_artifact"),
+            Err(ApiError::UnknownOperator { .. })
+        ));
+    }
+
+    #[test]
+    fn theta_length_is_validated_by_name() {
+        let eng = engine();
+        let h = eng.operator("laplacian_collapsed_exact_b2").unwrap();
+        let theta = HostTensor::zeros(vec![h.meta().theta_len + 1]);
+        let x = HostTensor::zeros(vec![2, h.meta().dim]);
+        let err = h.eval().theta(&theta).x(&x).run().unwrap_err();
+        assert!(matches!(err, ApiError::ShapeMismatch { input: "theta", .. }), "{err}");
+    }
+
+    #[test]
+    fn methods_agree_through_the_engine() {
+        let eng = engine();
+        let col = eng.operator("laplacian_collapsed_exact_b2").unwrap();
+        let std_ = eng.operator("laplacian_standard_exact_b2").unwrap();
+        let nst = eng.operator("laplacian_nested_exact_b2").unwrap();
+        let w = workload::workload_for(col.meta(), 3);
+        let a = w.request(&col).run().unwrap();
+        let b = w.request(&std_).run().unwrap();
+        let c = w.request(&nst).run().unwrap();
+        for i in 0..2 {
+            let v = a.op.data[i];
+            assert!((v - b.op.data[i]).abs() < 1e-3 * (1.0 + v.abs()));
+            assert!((v - c.op.data[i]).abs() < 1e-3 * (1.0 + v.abs()));
+        }
+    }
+
+    #[test]
+    fn taylor_routes_hit_the_program_cache_and_match_the_jet_oracle() {
+        let eng = engine();
+        let h = eng.operator("laplacian_collapsed_exact_b2").unwrap();
+        let seed = 9;
+        let w = workload::workload_for(h.meta(), seed);
+
+        let out1 = w.request(&h).run().unwrap();
+        assert_eq!(eng.stats().program_cache_misses, 1, "first batch compiles");
+        let out2 = w.request(&h).run().unwrap();
+        assert_eq!(eng.stats().program_cache_hits, 1, "second batch reuses the program");
+        assert_eq!(out1, out2);
+
+        // Same route, new theta: the program embeds weights -> recompile.
+        let w2 = workload::workload_for(h.meta(), seed + 1);
+        w2.request(&h).run().unwrap();
+        assert_eq!(eng.stats().program_cache_misses, 2);
+
+        // The engine's f32 output must match the jet-engine oracle run on
+        // bitwise-identical f64 weights (same Glorot stream as the
+        // workload's theta).
+        let meta = h.meta();
+        let mlp = Mlp::init(&mut Rng::new(seed), meta.dim, &meta.widths, meta.batch);
+        let x0 = to_f64(&w.x);
+        let spec = crate::operators::OperatorSpec::laplacian(meta.dim);
+        let (f0, lap) = plan::apply(&mlp, &x0, &spec.compile(), Collapse::Collapsed);
+        for b in 0..meta.batch {
+            for (got, want) in [
+                (out1.f0.data[b] as f64, f0.data[b] as f32 as f64),
+                (out1.op.data[b] as f64, lap.data[b] as f32 as f64),
+            ] {
+                assert!(
+                    (got - want).abs() <= 1e-10 * (1.0 + want.abs()),
+                    "row {b}: engine {got} vs oracle {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn helmholtz_route_composes_f_and_laplacian() {
+        let eng = engine();
+        let hel = eng.operator("helmholtz_collapsed_exact_b2").unwrap();
+        let lap = eng.operator("laplacian_collapsed_exact_b2").unwrap();
+        let w = workload::workload_for(hel.meta(), 8);
+        let hout = w.request(&hel).run().unwrap();
+        let lout = w.request(&lap).run().unwrap();
+        for b in 0..2 {
+            let expect =
+                HELMHOLTZ_C0 as f32 * hout.f0.data[b] + HELMHOLTZ_C2 as f32 * lout.op.data[b];
+            assert!(
+                (hout.op.data[b] - expect).abs() < 1e-3 * (1.0 + expect.abs()),
+                "helmholtz {} vs c0*f + c2*lap {}",
+                hout.op.data[b],
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_stochastic_consumes_premultiplied_directions() {
+        // The artifact contract (aot.py): weighted stochastic receives
+        // sigma-premultiplied dirs.  With sigma = c*I the premultiplied
+        // estimate equals c^2 times the plain estimate on the same draw.
+        let eng = engine();
+        let wh = eng.operator("weighted_laplacian_collapsed_stochastic_s8_b4").unwrap();
+        let lh = eng.operator("laplacian_collapsed_stochastic_s8_b4").unwrap();
+        let meta = wh.meta().clone();
+        let d = meta.dim;
+        let theta = workload::theta_for(&meta, 5);
+        let mut rng = Rng::new(6);
+        let mut xdata = vec![0.0f32; 4 * d];
+        rng.fill_normal_f32(&mut xdata);
+        let x = HostTensor::new(vec![4, d], xdata);
+        let mut dirs = vec![0.0f32; 8 * d];
+        rng.fill_rademacher_f32(&mut dirs);
+        let c = 1.5f32;
+        let scaled: Vec<f32> = dirs.iter().map(|&v| c * v).collect();
+        let dirs = HostTensor::new(vec![8, d], dirs);
+        let sdirs = HostTensor::new(vec![8, d], scaled);
+        let wv = wh.eval().theta(&theta).x(&x).directions(&sdirs).run().unwrap();
+        let pv = lh.eval().theta(&theta).x(&x).directions(&dirs).run().unwrap();
+        for b in 0..4 {
+            let expect = c * c * pv.op.data[b];
+            assert!(
+                (wv.op.data[b] - expect).abs() < 1e-3 * (1.0 + expect.abs()),
+                "weighted {} vs c^2 * plain {}",
+                wv.op.data[b],
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn compiled_spec_matches_the_registry_route() {
+        let eng = engine();
+        let artifact = eng.operator("laplacian_collapsed_exact_b2").unwrap();
+        let meta = artifact.meta().clone();
+        let custom = eng
+            .compile(
+                crate::operators::OperatorSpec::laplacian(meta.dim),
+                Method::Collapsed,
+                &meta.widths,
+            )
+            .unwrap();
+        assert_eq!(custom.method(), Method::Collapsed);
+        assert_eq!(custom.aux_input(), AuxInput::None);
+        let w = workload::workload_for(&meta, 4);
+        let a = w.request(&artifact).run().unwrap();
+        let b = custom.eval().theta(&w.theta).x(&w.x).run().unwrap();
+        assert_eq!(a, b, "compiled spec and registry route share the execution path");
+    }
+
+    #[test]
+    fn compile_rejects_nested_and_empty_specs() {
+        let eng = engine();
+        let spec = crate::operators::OperatorSpec::laplacian(4);
+        assert!(matches!(
+            eng.compile(spec, Method::Nested, &[8, 1]),
+            Err(ApiError::InvalidSpec { .. })
+        ));
+        let spec = crate::operators::OperatorSpec::laplacian(4);
+        let no_widths = eng.compile(spec, Method::Collapsed, &[]);
+        assert!(matches!(no_widths, Err(ApiError::InvalidSpec { .. })));
+        // compile_default uses the builder policy (Collapsed by default).
+        let h = eng
+            .compile_default(crate::operators::OperatorSpec::laplacian(4), &[8, 1])
+            .unwrap();
+        assert_eq!(h.method(), Method::Collapsed);
+    }
+}

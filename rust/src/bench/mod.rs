@@ -15,8 +15,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::api::Engine;
 use crate::coordinator::{RouteKey, Service, ServiceConfig};
-use crate::runtime::{Registry, RuntimeClient};
+use crate::runtime::Registry;
 use crate::taylor::count;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
@@ -34,12 +35,12 @@ fn results_dir() -> PathBuf {
 /// exact Laplacian plus the composed Helmholtz-type spec, so the smoke
 /// bench tracks the single-push composed-operator path over time.
 pub fn run_fig1(registry: &Registry, reps: usize) -> Result<String> {
-    let client = RuntimeClient::cpu()?;
+    let engine = Engine::builder().registry(registry.clone()).build()?;
     let mut rows = Vec::new();
     let mut sweeps = Vec::new();
     for op in ["laplacian", "helmholtz"] {
         for method in METHODS {
-            let s = run_sweep(&client, registry, op, method, "exact", reps, 1)?;
+            let s = run_sweep(&engine, op, method, "exact", reps, 1)?;
             for p in &s.points {
                 rows.push(vec![
                     op.to_string(),
@@ -100,12 +101,12 @@ fn sweep_json(s: &Sweep) -> Json {
 /// (stochastic) slopes of runtime and both memory proxies, for all three
 /// operators × three implementations.
 pub fn run_fig5_table1(registry: &Registry, reps: usize) -> Result<String> {
-    let client = RuntimeClient::cpu()?;
+    let engine = Engine::builder().registry(registry.clone()).build()?;
     let mut all: Vec<Sweep> = Vec::new();
     for mode in ["exact", "stochastic"] {
         for op in OPS {
             for method in METHODS {
-                all.push(run_sweep(&client, registry, op, method, mode, reps, 2)?);
+                all.push(run_sweep(&engine, op, method, mode, reps, 2)?);
             }
         }
     }
@@ -162,7 +163,7 @@ pub fn run_fig5_table1(registry: &Registry, reps: usize) -> Result<String> {
 
 /// Table F2: theoretical Δ-vector ratios vs the measured slope ratios.
 pub fn run_table_f2(registry: &Registry, reps: usize) -> Result<String> {
-    let client = RuntimeClient::cpu()?;
+    let engine = Engine::builder().registry(registry.clone()).build()?;
     // Dims come from the manifest (preset-dependent).
     let lap_dim = registry
         .select("laplacian", "collapsed", "exact")
@@ -187,8 +188,8 @@ pub fn run_table_f2(registry: &Registry, reps: usize) -> Result<String> {
                 (_, "biharmonic") => count::stochastic_ratio(4),
                 _ => count::stochastic_ratio(2),
             };
-            let s_std = run_sweep(&client, registry, op, "standard", mode, reps, 3)?;
-            let s_col = run_sweep(&client, registry, op, "collapsed", mode, reps, 3)?;
+            let s_std = run_sweep(&engine, op, "standard", mode, reps, 3)?;
+            let s_col = run_sweep(&engine, op, "collapsed", mode, reps, 3)?;
             let time_ratio = s_col.ms_per_x() / s_std.ms_per_x();
             let mem_ratio = s_col.mib_diff_per_x() / s_std.mib_diff_per_x();
             let mem_source = match (s_std.mem_source(), s_col.mem_source()) {
@@ -233,7 +234,7 @@ pub fn run_table_f2(registry: &Registry, reps: usize) -> Result<String> {
 /// Fig. G9 + Table G3: the Laplacian column plus the biharmonic computed
 /// as nested Laplacians, per available method.
 pub fn run_figg9_tableg3(registry: &Registry, reps: usize) -> Result<String> {
-    let client = RuntimeClient::cpu()?;
+    let engine = Engine::builder().registry(registry.clone()).build()?;
     let mut out = String::from("# Table G3 — Laplacian & biharmonic-as-nested-Laplacians\n\n");
     let mut all = Vec::new();
     for op in ["laplacian", "biharl"] {
@@ -244,7 +245,7 @@ pub fn run_figg9_tableg3(registry: &Registry, reps: usize) -> Result<String> {
             if registry.select(op, method, "exact").len() < 2 {
                 continue; // method not compiled for this op
             }
-            let s = run_sweep(&client, registry, op, method, "exact", reps, 4)?;
+            let s = run_sweep(&engine, op, method, "exact", reps, 4)?;
             let bt = *base_t.get_or_insert(s.ms_per_x());
             let bm = *base_m.get_or_insert(s.mib_diff_per_x());
             rows.push(vec![
@@ -654,12 +655,10 @@ pub fn run_kernel_micro(reps: usize) -> Result<String> {
 
 /// Thread-scaling ablation: the serving path (cache hit → sharded VM) on
 /// the largest fig1 batch, swept across executor counts 1/2/4/N.  Each
-/// count gets its own pool and cache, so every row measures the same
-/// steady state at a different parallelism.
+/// count gets its own engine (own pool, own program cache), so every row
+/// measures the same steady state at a different parallelism.
 pub fn run_thread_scaling(registry: &Registry, reps: usize) -> Result<String> {
-    use crate::runtime::native;
-    use crate::runtime::HostTensor;
-    use crate::util::pool::Pool;
+    use crate::api::shard_count;
     use crate::util::stats::time_fn;
 
     let meta = registry
@@ -668,8 +667,7 @@ pub fn run_thread_scaling(registry: &Registry, reps: usize) -> Result<String> {
         .max_by_key(|a| a.batch)
         .ok_or_else(|| anyhow::anyhow!("no laplacian artifacts in the registry"))?
         .clone();
-    let inputs = workload::inputs_for(&meta, 7);
-    let refs: Vec<&HostTensor> = inputs.iter().collect();
+    let w = workload::workload_for(&meta, 7);
     let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut counts = vec![1usize, 2, 4, avail];
     counts.sort_unstable();
@@ -678,27 +676,26 @@ pub fn run_thread_scaling(registry: &Registry, reps: usize) -> Result<String> {
     let mut json_rows = Vec::new();
     let mut base = None;
     for t in counts {
-        // `t` executors total: the caller plus t-1 pool workers.
-        let pool = Pool::new(t - 1);
-        let cache = native::ProgramCache::new();
+        let engine = Engine::builder().registry(registry.clone()).threads(t).build()?;
+        let handle = engine.operator(&meta.name)?;
         // Compile outside the timed region (steady-state = cache hit).
-        native::execute_pooled(&meta, &refs, &cache, &pool)?;
+        w.request(&handle).run()?;
         let timing = time_fn(
             || {
-                native::execute_pooled(&meta, &refs, &cache, &pool).expect("serving execution");
+                w.request(&handle).run().expect("serving execution");
             },
             reps,
         );
         let b = *base.get_or_insert(timing.min);
         rows.push(vec![
             format!("{t}"),
-            format!("{}", native::shard_count(meta.batch, t)),
+            format!("{}", shard_count(meta.batch, t)),
             format!("{:.3}", timing.min * 1e3),
             format!("x{:.2}", b / timing.min.max(1e-12)),
         ]);
         json_rows.push(Json::obj(vec![
             ("threads", Json::num(t as f64)),
-            ("shards", Json::num(native::shard_count(meta.batch, t) as f64)),
+            ("shards", Json::num(shard_count(meta.batch, t) as f64)),
             ("ms", Json::num(timing.min * 1e3)),
             ("speedup_vs_1", Json::num(b / timing.min.max(1e-12))),
         ]));

@@ -4,10 +4,11 @@
 
 use anyhow::{bail, Result};
 
+use crate::api::Engine;
 use crate::hlo;
 use crate::mlp::Mlp;
 use crate::operators::OperatorSpec;
-use crate::runtime::{ArtifactMeta, DeviceBuffer, Registry, RuntimeClient};
+use crate::runtime::ArtifactMeta;
 use crate::taylor::count;
 use crate::taylor::hlo_emit;
 use crate::taylor::jet::Collapse;
@@ -167,31 +168,30 @@ fn analytic_proxy(meta: &ArtifactMeta) -> (f64, f64, f64) {
     (mem_diff, mem_nondiff, flops)
 }
 
-/// Measure one family.  `reps` timed repetitions per artifact (min kept).
+/// Measure one family through the public `Engine` surface.  `reps` timed
+/// repetitions per artifact (min kept).
 pub fn run_sweep(
-    client: &RuntimeClient,
-    registry: &Registry,
+    engine: &Engine,
     op: &str,
     method: &str,
     mode: &str,
     reps: usize,
     seed: u64,
 ) -> Result<Sweep> {
+    let registry = engine.registry();
     let artifacts = registry.select(op, method, mode);
     if artifacts.len() < 2 {
         bail!("need >= 2 artifacts for a sweep of {op}/{method}/{mode}");
     }
     let mut points = Vec::new();
     for meta in &artifacts {
-        let model = client.load(registry, &meta.name)?;
-        let inputs = workload::inputs_for(meta, seed);
-        // Stage everything once; time pure execution.
-        let bufs: Vec<DeviceBuffer> =
-            inputs.iter().map(|t| model.stage(t)).collect::<Result<_>>()?;
-        let refs: Vec<&DeviceBuffer> = bufs.iter().collect();
+        let handle = engine.operator(&meta.name)?;
+        // Build the named inputs once; request construction borrows them,
+        // so the timed region is validation + execution only.
+        let w = workload::workload_for(meta, seed);
         let timing = time_fn(
             || {
-                model.run_buffers(&refs).expect("bench execution failed");
+                w.request(&handle).run().expect("bench execution failed");
             },
             reps,
         );

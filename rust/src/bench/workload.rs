@@ -1,19 +1,16 @@
 //! Workload generation for benchmark runs: deterministic parameters,
-//! inputs, σ matrices and stochastic directions per artifact.
+//! inputs, σ matrices and stochastic directions per artifact, packaged as
+//! a named [`Workload`] that attaches to an API request builder.
 
+use crate::api::{EvalRequest, OperatorHandle};
 use crate::runtime::{ArtifactMeta, HostTensor};
 use crate::util::prng::Rng;
 
 /// Deterministic Glorot parameters for an artifact's network shape.
+/// Drawing from `Rng::new(seed)` matches `Mlp::init(&mut Rng::new(seed))`
+/// bitwise, which the oracle tests rely on.
 pub fn theta_for(meta: &ArtifactMeta, seed: u64) -> HostTensor {
-    let mut rng = Rng::new(seed);
-    let mut theta = vec![0.0f32; meta.theta_len];
-    let mut off = 0;
-    for &(fi, fo) in &meta.layer_dims {
-        rng.glorot_f32(fi, fo, &mut theta[off..off + fi * fo]);
-        off += fi * fo + fo;
-    }
-    HostTensor::new(vec![meta.theta_len], theta)
+    meta.glorot_theta(&mut Rng::new(seed))
 }
 
 /// Standard-normal input batch `[B, D]`.
@@ -56,17 +53,39 @@ pub fn dirs_for(meta: &ArtifactMeta, seed: u64) -> HostTensor {
     HostTensor::new(vec![meta.samples, meta.dim], d)
 }
 
-/// All inputs for one artifact in manifest order: θ, x, then σ (exact
+/// The named inputs one artifact's route consumes: θ, x, then σ (exact
 /// weighted Laplacian) or dirs (stochastic estimators).
-pub fn inputs_for(meta: &ArtifactMeta, seed: u64) -> Vec<HostTensor> {
-    let mut v = vec![theta_for(meta, seed), input_for(meta, seed)];
-    if meta.op == "weighted_laplacian" && meta.mode == "exact" {
-        v.push(sigma_for(meta, seed));
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub theta: HostTensor,
+    pub x: HostTensor,
+    pub sigma: Option<HostTensor>,
+    pub dirs: Option<HostTensor>,
+}
+
+impl Workload {
+    /// Attach this workload to a handle's request builder in named form.
+    pub fn request<'a>(&'a self, handle: &'a OperatorHandle) -> EvalRequest<'a> {
+        let mut req = handle.eval().theta(&self.theta).x(&self.x);
+        if let Some(s) = &self.sigma {
+            req = req.sigma(s);
+        }
+        if let Some(d) = &self.dirs {
+            req = req.directions(d);
+        }
+        req
     }
-    if meta.mode == "stochastic" {
-        v.push(dirs_for(meta, seed));
-    }
-    v
+}
+
+/// Deterministic named inputs for one artifact.
+pub fn workload_for(meta: &ArtifactMeta, seed: u64) -> Workload {
+    let sigma = if meta.op == "weighted_laplacian" && meta.mode == "exact" {
+        Some(sigma_for(meta, seed))
+    } else {
+        None
+    };
+    let dirs = if meta.mode == "stochastic" { Some(dirs_for(meta, seed)) } else { None };
+    Workload { theta: theta_for(meta, seed), x: input_for(meta, seed), sigma, dirs }
 }
 
 #[cfg(test)]

@@ -16,7 +16,8 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub rejected: AtomicU64,
     /// Route → compiled-program cache hits/misses, mirrored from the
-    /// worker's `RuntimeClient` after each flush (gauges, not counters).
+    /// worker engine's [`crate::api::EngineStats`] after each flush
+    /// (gauges, not counters).
     pub program_cache_hits: AtomicU64,
     pub program_cache_misses: AtomicU64,
     /// Executor threads of the serving worker pool (gauge, set at worker
@@ -60,15 +61,13 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Mirror the runtime's program-cache counters (worker-side snapshot).
-    pub fn set_program_cache(&self, hits: u64, misses: u64) {
-        self.program_cache_hits.store(hits, Ordering::Relaxed);
-        self.program_cache_misses.store(misses, Ordering::Relaxed);
-    }
-
-    /// Record the worker pool's executor-thread count (batch sharding).
-    pub fn set_pool_executors(&self, n: u64) {
-        self.pool_executors.store(n, Ordering::Relaxed);
+    /// Mirror one engine-gauge snapshot (program-cache hits/misses and
+    /// the batch-sharding pool width) — the single seam between serving
+    /// metrics and [`crate::api::Engine::stats`].
+    pub fn set_engine(&self, stats: &crate::api::EngineStats) {
+        self.program_cache_hits.store(stats.program_cache_hits, Ordering::Relaxed);
+        self.program_cache_misses.store(stats.program_cache_misses, Ordering::Relaxed);
+        self.pool_executors.store(stats.pool_executors as u64, Ordering::Relaxed);
     }
 
     pub fn mean_latency_s(&self) -> f64 {

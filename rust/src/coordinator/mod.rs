@@ -4,8 +4,9 @@
 //! of points, continuously, against a fixed set of compiled model
 //! variants.  This module provides the router (manifest → batch-size
 //! ladder), the dynamic batcher (pack requests into compiled shapes), the
-//! worker (PJRT execution with device-resident parameters) and service
-//! metrics — the vLLM-router-shaped skeleton adapted to PDE operators.
+//! worker (one [`crate::api::Engine`] with typed per-route handles and
+//! resident parameters) and service metrics — the vLLM-router-shaped
+//! skeleton adapted to PDE operators.
 
 pub mod batcher;
 pub mod metrics;

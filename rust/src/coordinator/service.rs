@@ -1,11 +1,13 @@
 //! The evaluation service: bounded submission queue → dynamic batcher →
-//! PJRT worker → per-request replies.
+//! engine worker → per-request replies.
 //!
 //! VMC / PINN clients submit batches of points against a route
 //! (operator, method, mode); the worker packs them into compiled batch
-//! shapes (batcher.rs), keeps model parameters device-resident, samples
-//! stochastic directions from its own PRNG, and scatters results back.
-//! Threads + channels stand in for tokio (DESIGN.md §2).
+//! shapes (batcher.rs), holds one [`Engine`] whose typed
+//! `OperatorHandle`s resolve each route's strings exactly once, keeps
+//! per-model parameters resident, samples stochastic directions from its
+//! own PRNG, and scatters results back.  Threads + channels stand in for
+//! tokio (DESIGN.md §2).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -20,7 +22,8 @@ use super::batcher::plan_blocks;
 use super::metrics::Metrics;
 use super::request::{EvalRequest, EvalResponse, RouteKey};
 use super::router::Router;
-use crate::runtime::{DeviceBuffer, HostTensor, Registry, RuntimeClient};
+use crate::api::Engine;
+use crate::runtime::{HostTensor, Registry};
 use crate::util::prng::Rng;
 
 /// Service tuning knobs.
@@ -171,18 +174,8 @@ struct Pending {
 }
 
 struct ModelState {
-    theta_buf: DeviceBuffer,
+    theta: HostTensor,
     sigma: Option<HostTensor>,
-}
-
-fn glorot_theta(meta: &crate::runtime::ArtifactMeta, rng: &mut Rng) -> HostTensor {
-    let mut theta = vec![0.0f32; meta.theta_len];
-    let mut off = 0;
-    for &(fi, fo) in &meta.layer_dims {
-        rng.glorot_f32(fi, fo, &mut theta[off..off + fi * fo]);
-        off += fi * fo + fo;
-    }
-    HostTensor::new(vec![meta.theta_len], theta)
 }
 
 fn worker_loop(
@@ -192,10 +185,11 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     config: ServiceConfig,
 ) -> Result<()> {
-    let client = RuntimeClient::cpu()?;
-    // The native backend shards packed batches over the global pool; the
-    // executor count (CTAYLOR_THREADS) is surfaced as a serving gauge.
-    metrics.set_pool_executors(crate::util::pool::Pool::global().executors() as u64);
+    // One engine per service: typed handles per route, the shared
+    // compiled-program cache and the batch-sharding pool
+    // (CTAYLOR_THREADS), all surfaced as serving gauges.
+    let engine = Engine::builder().registry(registry).build()?;
+    metrics.set_engine(&engine.stats());
     let mut rng = Rng::new(config.seed);
     // Shared parameter vectors per (dim, widths): every artifact of one
     // network shape sees the same θ.
@@ -230,15 +224,14 @@ fn worker_loop(
             Err(RecvTimeoutError::Disconnected) => {
                 // Drain remaining work, then exit.
                 flush_all(
-                    &client, &registry, &router, &metrics, &mut rng, &mut thetas,
-                    &mut model_state, &mut queues,
+                    &engine, &router, &metrics, &mut rng, &mut thetas, &mut model_state,
+                    &mut queues,
                 )?;
                 return Ok(());
             }
         }
         flush_all(
-            &client, &registry, &router, &metrics, &mut rng, &mut thetas,
-            &mut model_state, &mut queues,
+            &engine, &router, &metrics, &mut rng, &mut thetas, &mut model_state, &mut queues,
         )?;
         last_flush = Instant::now();
     }
@@ -246,8 +239,7 @@ fn worker_loop(
 
 #[allow(clippy::too_many_arguments)]
 fn flush_all(
-    client: &RuntimeClient,
-    registry: &Registry,
+    engine: &Engine,
     router: &Router,
     metrics: &Arc<Metrics>,
     rng: &mut Rng,
@@ -264,18 +256,19 @@ fn flush_all(
         let blocks = plan_blocks(pending, &sizes);
         for block in blocks {
             let name = router.artifact(route, block.size)?;
-            let model = client.load(registry, name)?;
-            let meta = &model.meta;
+            // Typed handle: route strings were parsed when the handle was
+            // first built; the engine caches it per name thereafter.
+            let handle = engine.operator(name)?;
+            let meta = handle.meta();
             let dim = meta.dim;
 
-            // Lazily build per-model state: θ staged on device, σ cached.
+            // Lazily build per-model state: shared θ plus a cached σ.
             if !model_state.contains_key(name) {
                 let key = (meta.dim, meta.widths.clone());
                 let theta = thetas
                     .entry(key)
-                    .or_insert_with(|| glorot_theta(meta, rng))
+                    .or_insert_with(|| meta.glorot_theta(rng))
                     .clone();
-                let theta_buf = model.stage(&theta)?;
                 let sigma = if meta.op == "weighted_laplacian" {
                     // Full-rank diagonal σ (the paper's choice), entries in
                     // [0.5, 1.5] so the operator stays well-conditioned.
@@ -287,7 +280,7 @@ fn flush_all(
                 } else {
                     None
                 };
-                model_state.insert(name.to_string(), ModelState { theta_buf, sigma });
+                model_state.insert(name.to_string(), ModelState { theta, sigma });
             }
 
             // Gather `used` points from the queue front (requests may split
@@ -314,16 +307,13 @@ fn flush_all(
             }
             debug_assert_eq!(gathered, block.used);
 
-            // Execute: θ (staged) + x, then σ (exact weighted) or sampled
-            // directions (stochastic), in manifest input order.  Weighted
-            // stochastic gets σ-premultiplied dirs (the aot.py contract).
+            // Execute through the typed request builder: θ + x, then σ
+            // (exact weighted) or sampled directions (stochastic).
+            // Weighted stochastic gets σ-premultiplied dirs (the aot.py
+            // contract, paper eq. 8a).
             let state = model_state.get(name).unwrap();
             let x = HostTensor::new(vec![block.size, dim], xdata);
-            let xbuf = model.stage(&x)?;
-            let mut bufs = vec![&state.theta_buf, &xbuf];
-            let sbuf;
-            let dbuf;
-            if meta.mode == "stochastic" {
+            let dirs_t = if meta.mode == "stochastic" {
                 let s = meta.samples;
                 let mut dirs = vec![0.0f32; s * dim];
                 // 4th-order estimators need Gaussian moments (Isserlis);
@@ -338,17 +328,21 @@ fn flush_all(
                         &dirs, &sigma.data, dim, dim,
                     );
                 }
-                dbuf = model.stage(&HostTensor::new(vec![s, dim], dirs))?;
-                bufs.push(&dbuf);
+                Some(HostTensor::new(vec![s, dim], dirs))
+            } else {
+                None
+            };
+            let mut req = handle.eval().theta(&state.theta).x(&x);
+            if let Some(d) = &dirs_t {
+                req = req.directions(d);
             } else if let Some(sigma) = &state.sigma {
-                sbuf = model.stage(sigma)?;
-                bufs.push(&sbuf);
+                req = req.sigma(sigma);
             }
-            let outputs = model.run_buffers(&bufs)?;
+            let out = req.run()?;
             metrics.record_batch(block.size - block.used);
 
             // Scatter outputs back to the requests that contributed points;
-            // outputs[0] = f0 [B, 1], outputs[1] = op [B, 1].
+            // out.f0 / out.op are each [B, 1].
             let mut offset = 0usize;
             for p in queue.iter_mut() {
                 if offset >= block.used {
@@ -360,16 +354,15 @@ fn flush_all(
                     continue;
                 }
                 let take = want.min(block.used - offset);
-                p.f0.extend_from_slice(&outputs[0].data[offset..offset + take]);
-                p.op.extend_from_slice(&outputs[1].data[offset..offset + take]);
+                p.f0.extend_from_slice(&out.f0.data[offset..offset + take]);
+                p.op.extend_from_slice(&out.op.data[offset..offset + take]);
                 offset += take;
             }
         }
-        // Mirror the compiled-program cache counters into the metrics so
-        // the serving amortization (steady state = VM execution only) is
-        // observable per batch.
-        let (h, m) = client.program_cache_stats();
-        metrics.set_program_cache(h, m);
+        // Mirror the engine gauges (program-cache hits/misses, pool width)
+        // into the metrics so the serving amortization (steady state = VM
+        // execution only) is observable per batch.
+        metrics.set_engine(&engine.stats());
         // Reply to fully-served requests.
         while let Some(front) = queue.front() {
             if front.f0.len() < front.req.n_points {

@@ -12,6 +12,10 @@
 //! node instead of `1 + KR`.
 //!
 //! Layout (see DESIGN.md):
+//! * [`api`] — **the public front door**: a typed [`api::Engine`] session
+//!   produces [`api::OperatorHandle`]s (manifest routes or ad-hoc
+//!   [`operators::OperatorSpec`]s, method strings parsed once at load) that
+//!   evaluate through a named-input request builder.
 //! * [`taylor`] — native Taylor-mode engine: jets, Faà di Bruno, a graph IR
 //!   and the paper's §C collapse rewrites (replicate-push-down,
 //!   sum-push-up).
@@ -24,9 +28,11 @@
 //!   for mixed partials.
 //! * [`hlo`] — HLO text parser + memory/FLOP analyzer (the memory columns
 //!   of the paper's tables).
-//! * [`runtime`] — PJRT loader/executor for the AOT artifacts produced by
+//! * [`runtime`] — manifest registry + host tensors over the (internal)
+//!   native execution backend for the AOT artifacts produced by
 //!   `python/compile/aot.py`.
-//! * [`coordinator`] — the serving layer: router, dynamic batcher, workers.
+//! * [`coordinator`] — the serving layer: router, dynamic batcher, workers
+//!   (consumes [`api::Engine`] internally).
 //! * [`bench`] — sweeps, slope fits and table/figure regeneration.
 //! * [`util`] — JSON / CLI / PRNG / stats substrates.
 
@@ -39,6 +45,7 @@
 #![allow(clippy::should_implement_trait)]
 #![allow(clippy::ptr_arg)]
 
+pub mod api;
 pub mod bench;
 pub mod coordinator;
 pub mod hlo;

@@ -15,13 +15,14 @@
 
 use anyhow::{bail, Context, Result};
 
+use ctaylor::api::Engine;
 use ctaylor::bench;
 use ctaylor::coordinator::{RouteKey, Service, ServiceConfig};
 use ctaylor::hlo;
 use ctaylor::operators::interpolation::{compositions, gamma};
 use ctaylor::operators::plan::{HELMHOLTZ_C0, HELMHOLTZ_C2};
 use ctaylor::operators::OperatorSpec;
-use ctaylor::runtime::Registry;
+use ctaylor::runtime::{HostTensor, Registry};
 use ctaylor::taylor::count;
 use ctaylor::util::cli::Args;
 use ctaylor::util::prng::Rng;
@@ -57,8 +58,10 @@ fn registry(args: &Args) -> Result<Registry> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let reg = registry(args)?;
+    let engine = Engine::builder().registry(registry(args)?).build()?;
+    let reg = engine.registry();
     println!("preset: {}  artifacts: {}", reg.preset, reg.artifacts.len());
+    println!("engine: native-cpu  {}", engine.stats());
     let mut by_op = std::collections::BTreeMap::new();
     for a in &reg.artifacts {
         *by_op.entry(format!("{}/{}/{}", a.op, a.method, a.mode)).or_insert(0) += 1;
@@ -156,6 +159,25 @@ fn cmd_spec(args: &Args) -> Result<()> {
                 / count::vectors_standard(plan.order, plan.dirs.shape[0]) as f64
         );
     }
+
+    // Evaluate the composed spec through the Engine front door: an ad-hoc
+    // spec compiles to a typed handle with the engine's default collapse
+    // policy and runs on a deterministic Glorot network.
+    let engine = Engine::builder().registry(registry(args)?).build()?;
+    let handle = engine.compile_default(spec, &[32, 32, 1])?;
+    let meta = handle.meta().clone();
+    let mut rng = Rng::new(args.get_u64("seed", 42));
+    let theta = meta.glorot_theta(&mut rng);
+    let batch = 4usize;
+    let mut xdata = vec![0.0f32; batch * dim];
+    rng.fill_normal_f32(&mut xdata);
+    let x = HostTensor::new(vec![batch, dim], xdata);
+    let out = handle.eval().theta(&theta).x(&x).run()?;
+    println!("\nengine.compile({}, {}) on a Glorot 32-32-1 net:", meta.name, handle.method());
+    for b in 0..batch {
+        println!("  f(x_{b}) = {:+.6}   L f(x_{b}) = {:+.6}", out.f0.data[b], out.op.data[b]);
+    }
+    println!("engine stats: {}", engine.stats());
     Ok(())
 }
 

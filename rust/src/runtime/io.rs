@@ -1,7 +1,7 @@
-//! Host-side tensor plumbing between the coordinator and the execution
+//! Host-side tensor plumbing between the API surface and the execution
 //! backend.
 
-/// A plain host tensor (f32, row-major) — the coordinator's currency.
+/// A plain host tensor (f32, row-major) — the serving-layer currency.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostTensor {
     pub shape: Vec<usize>,
@@ -32,36 +32,6 @@ impl HostTensor {
     }
 }
 
-/// A tensor staged for repeated execution.
-///
-/// On the PJRT backend this was a device-resident `PjRtBuffer`; the native
-/// backend executes on the host, so staging just pins the host copy.  The
-/// type is kept so call sites (coordinator worker, bench sweeps) preserve
-/// the stage-once / execute-many structure a device backend needs.
-#[derive(Debug, Clone)]
-pub struct DeviceBuffer {
-    pub(crate) host: HostTensor,
-}
-
-impl DeviceBuffer {
-    pub fn from_host(t: &HostTensor) -> DeviceBuffer {
-        DeviceBuffer { host: t.clone() }
-    }
-
-    /// Borrow the staged tensor (the execution hot path — no copy).
-    pub fn host(&self) -> &HostTensor {
-        &self.host
-    }
-
-    pub fn to_host(&self) -> HostTensor {
-        self.host.clone()
-    }
-
-    pub fn shape(&self) -> &[usize] {
-        &self.host.shape
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,13 +48,5 @@ mod tests {
     #[should_panic]
     fn host_tensor_rejects_mismatch() {
         HostTensor::new(vec![2, 2], vec![0.0; 3]);
-    }
-
-    #[test]
-    fn staging_roundtrips() {
-        let t = HostTensor::new(vec![2], vec![1.0, 2.0]);
-        let b = DeviceBuffer::from_host(&t);
-        assert_eq!(b.shape(), &[2]);
-        assert_eq!(b.to_host(), t);
     }
 }

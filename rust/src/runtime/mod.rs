@@ -1,20 +1,18 @@
-//! Artifact runtime: resolve manifest entries to executables and run them.
+//! Artifact runtime: the manifest registry, host tensors and the native
+//! execution backend.
 //!
 //! The offline crate set ships no PJRT bindings, so execution goes through
-//! the native backend (native.rs) built on the in-crate engines; the
-//! registry/client/executable surface matches what a PJRT-backed runtime
-//! needs (`python/compile/aot.py` produces the HLO artifacts a future
-//! backend would compile), so the backend can be swapped without touching
-//! the coordinator or bench layers.
+//! the native backend (native.rs) built on the in-crate engines.  The
+//! backend is crate-internal: all execution flows through the typed
+//! `ctaylor::api` facade (`Engine` / `OperatorHandle`), which parses each
+//! manifest route exactly once and hands this layer fully-typed work.  A
+//! future PJRT backend (`python/compile/aot.py` produces the HLO artifacts
+//! it would compile) replaces the cached native programs behind that same
+//! facade without touching callers.
 
-mod client;
-mod executable;
 mod io;
-pub mod native;
+pub(crate) mod native;
 mod registry;
 
-pub use client::RuntimeClient;
-pub use executable::LoadedModel;
-pub use io::{DeviceBuffer, HostTensor};
-pub use native::ProgramCache;
+pub use io::HostTensor;
 pub use registry::{ArtifactMeta, Registry, TensorSpec};

@@ -1,30 +1,30 @@
-//! Native execution backend: runs artifact metadata through the in-crate
-//! engines instead of a PJRT executable.
+//! Native execution backend: the typed building blocks under the
+//! `ctaylor::api` facade.
 //!
 //! The offline crate set ships no `xla`/PJRT bindings (DESIGN.md §2), so
-//! the runtime executes each artifact natively.  An artifact's (op, mode)
-//! route resolves to an [`OperatorSpec`] — the plan-driven propagation
-//! core.  Taylor methods (standard and collapsed) execute through the §C
-//! graph compiler: the route's compiled `OperatorPlan` is traced into the
-//! graph IR, collapsed (for the collapsed method) by the rewrite passes,
-//! lowered to a buffer-planned [`Program`] and cached per
-//! (route, batch, θ) in a [`ProgramCache`] — steady-state per-batch work
-//! is VM execution only, no re-trace/re-compile.  `plan::apply` (the jet
-//! engine) stays as the cross-check oracle (tests/prop_rewrite.rs), and
-//! the nested first-order baseline keeps its closed forms.  The
-//! artifact's `theta` input is unpacked into an [`Mlp`] exactly as
-//! `python/compile/model.py` lays parameters out, so a future PJRT
-//! backend can swap in behind the same [`ArtifactMeta`] surface without
-//! touching callers.
+//! the runtime executes each route natively.  A route arrives here fully
+//! typed — [`OpKind`] + resolved [`Aux`] tensors + a `Collapse` policy —
+//! because the API layer parses every manifest string exactly once at
+//! handle construction.  Taylor methods execute through the §C graph
+//! compiler: the route's compiled `OperatorPlan` is traced into the graph
+//! IR, collapsed (for the collapsed method) by the rewrite passes, lowered
+//! to a buffer-planned [`Program`] and cached per (route, batch, θ) in a
+//! [`ProgramCache`] — steady-state per-batch work is VM execution only, no
+//! re-trace/re-compile.  `plan::apply` (the jet engine) stays as the
+//! cross-check oracle (tests/prop_rewrite.rs), and the nested first-order
+//! baseline keeps its closed forms.  A `theta` input is unpacked into an
+//! [`Mlp`] exactly as `python/compile/model.py` lays parameters out, so a
+//! future PJRT backend can swap in behind the same `Engine` surface
+//! without touching callers.
 //!
 //! Execution-layer mechanics (the hardware-speed path): every cached
 //! program carries its own free-list of [`ExecArena`]s (steady-state VM
-//! runs allocate nothing) plus, for exact routes, the batch-broadcast
-//! direction bundle; large packed batches are sharded row-wise across
-//! the [`Pool`] workers (`CTAYLOR_THREADS`), each thread running the
-//! same cached sub-batch program against its own arena — per-row
-//! arithmetic is identical, so sharded results are bitwise equal to
-//! single-threaded ones.
+//! runs allocate nothing) plus, for fixed-direction routes, the
+//! batch-broadcast direction bundle; large packed batches are sharded
+//! row-wise across the [`Pool`] workers (`CTAYLOR_THREADS`), each thread
+//! running the same cached sub-batch program against its own arena —
+//! per-row arithmetic is identical, so sharded results are bitwise equal
+//! to single-threaded ones.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -47,9 +47,9 @@ use crate::util::pool::{Pool, TypedJob};
 
 /// A compiled route program plus the per-program execution state the
 /// serving path reuses call to call: the broadcast direction input
-/// (exact routes only — stochastic routes draw fresh directions per
-/// call) and a free-list of [`ExecArena`]s, one per concurrent executor
-/// thread, so steady-state VM runs perform zero heap allocations.
+/// (fixed-direction routes only — stochastic routes draw fresh directions
+/// per call) and a free-list of [`ExecArena`]s, one per concurrent
+/// executor thread, so steady-state VM runs perform zero heap allocations.
 #[derive(Debug)]
 pub struct CachedProgram {
     pub program: Program,
@@ -89,26 +89,43 @@ struct CacheInner {
     order: VecDeque<String>,
 }
 
-/// Per-route cache of compiled programs: (artifact, sub-batch, θ) →
+/// Default cap on cached programs: programs embed θ as f64 constants, so
+/// a θ-churn workload (per-request parameters) must not grow memory
+/// without bound — beyond the cap the oldest *inserted* entry is evicted
+/// (steady-state serving uses a handful of routes, far below this).
+pub const DEFAULT_PROGRAM_CAPACITY: usize = 256;
+
+/// Per-route cache of compiled programs: (route, sub-batch, θ) →
 /// traced + rewritten + buffer-planned [`CachedProgram`].  Hit/miss
-/// counters feed the coordinator metrics, so the serving
-/// cache-amortization claim is observable.
-#[derive(Debug, Default)]
+/// counters feed `Engine::stats`, so the serving cache-amortization claim
+/// is observable.
+#[derive(Debug)]
 pub struct ProgramCache {
     inner: Mutex<CacheInner>,
     hits: AtomicU64,
     misses: AtomicU64,
+    capacity: usize,
 }
 
-/// Cap on cached programs: programs embed θ as f64 constants, so a
-/// θ-churn workload (per-request parameters) must not grow memory without
-/// bound — beyond the cap the oldest *inserted* entry is evicted
-/// (steady-state serving uses a handful of routes, far below this).
-const MAX_CACHED_PROGRAMS: usize = 256;
+impl Default for ProgramCache {
+    fn default() -> ProgramCache {
+        ProgramCache::with_capacity(DEFAULT_PROGRAM_CAPACITY)
+    }
+}
 
 impl ProgramCache {
     pub fn new() -> ProgramCache {
         ProgramCache::default()
+    }
+
+    /// A cache evicting (FIFO by insertion) beyond `capacity` entries.
+    pub fn with_capacity(capacity: usize) -> ProgramCache {
+        ProgramCache {
+            inner: Mutex::new(CacheInner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            capacity: capacity.max(1),
+        }
     }
 
     /// (hits, misses) so far.
@@ -143,7 +160,7 @@ impl ProgramCache {
         let p = Arc::new(build()?);
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
-        while inner.map.len() >= MAX_CACHED_PROGRAMS {
+        while inner.map.len() >= self.capacity {
             match inner.order.pop_front() {
                 Some(old) => {
                     inner.map.remove(&old);
@@ -171,35 +188,59 @@ fn theta_fingerprint(theta: &[f32]) -> u64 {
     h
 }
 
-/// Execution method selected by an artifact's manifest entry.
+/// Typed operator kinds the native backend serves.  Parsed from manifest
+/// strings exactly once, at API handle construction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Method {
-    Nested,
-    Taylor(Collapse),
+pub enum OpKind {
+    Laplacian,
+    WeightedLaplacian,
+    Helmholtz,
+    Biharmonic,
 }
 
-impl Method {
-    fn parse(s: &str) -> Result<Method> {
-        Ok(match s {
-            "nested" => Method::Nested,
-            "standard" => Method::Taylor(Collapse::Standard),
-            "collapsed" => Method::Taylor(Collapse::Collapsed),
-            other => bail!("unknown method {other:?}"),
-        })
+impl OpKind {
+    /// Parse a manifest `op` string (load-time only).
+    pub fn parse(s: &str) -> Option<OpKind> {
+        match s {
+            "laplacian" => Some(OpKind::Laplacian),
+            "weighted_laplacian" => Some(OpKind::WeightedLaplacian),
+            "helmholtz" => Some(OpKind::Helmholtz),
+            "biharmonic" => Some(OpKind::Biharmonic),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OpKind::Laplacian => "laplacian",
+            OpKind::WeightedLaplacian => "weighted_laplacian",
+            OpKind::Helmholtz => "helmholtz",
+            OpKind::Biharmonic => "biharmonic",
+        }
     }
 }
 
-fn to_f64(t: &HostTensor) -> Tensor {
+/// The resolved auxiliary input one evaluation consumes beyond (θ, x):
+/// σ for the exact weighted Laplacian, sampled directions for every
+/// stochastic estimator.  Validated and converted by the API layer.
+#[derive(Debug)]
+pub enum Aux {
+    None,
+    Sigma(Tensor),
+    Dirs(Tensor),
+}
+
+pub fn to_f64(t: &HostTensor) -> Tensor {
     Tensor::new(t.shape.clone(), t.data.iter().map(|&v| v as f64).collect())
 }
 
-fn to_f32(t: &Tensor) -> HostTensor {
+pub fn to_f32(t: &Tensor) -> HostTensor {
     HostTensor::new(t.shape.clone(), t.data.iter().map(|&v| v as f32).collect())
 }
 
 /// Unpack a flat `theta` vector into an [`Mlp`] (per-layer W then b, the
 /// `model.py` layout the integration tests replicate).
-fn mlp_from_theta(meta: &ArtifactMeta, theta: &[f32]) -> Result<Mlp> {
+pub fn mlp_from_theta(meta: &ArtifactMeta, theta: &[f32]) -> Result<Mlp> {
     ensure!(
         theta.len() == meta.theta_len,
         "{}: theta length {} != manifest {}",
@@ -234,70 +275,24 @@ fn mlp_from_theta(meta: &ArtifactMeta, theta: &[f32]) -> Result<Mlp> {
     })
 }
 
-/// The auxiliary input one route consumes beyond (θ, x): σ for the exact
-/// weighted Laplacian, sampled directions for every stochastic estimator.
-#[derive(Debug)]
-enum Aux {
-    None,
-    Sigma(Tensor),
-    Dirs(Tensor),
-}
-
-impl Aux {
-    fn resolve(meta: &ArtifactMeta, inputs: &[&HostTensor]) -> Result<Aux> {
-        let get = |what: &str| -> Result<Tensor> {
-            let t = inputs.get(2).ok_or_else(|| {
-                anyhow::anyhow!("{}: missing input 2 ({what}) for {}", meta.name, meta.mode)
-            })?;
-            Ok(to_f64(t))
-        };
-        if meta.mode == "stochastic" {
-            let dirs = get("dirs")?;
-            ensure!(
-                dirs.rank() == 2 && dirs.shape[1] == meta.dim,
-                "{}: dirs shape {:?} is not [S, {}]",
-                meta.name,
-                dirs.shape,
-                meta.dim
-            );
-            return Ok(Aux::Dirs(dirs));
-        }
-        if meta.op == "weighted_laplacian" {
-            let sigma = get("sigma")?;
-            ensure!(
-                sigma.shape == [meta.dim, meta.dim],
-                "{}: sigma shape {:?} is not [{d}, {d}]",
-                meta.name,
-                sigma.shape,
-                d = meta.dim
-            );
-            return Ok(Aux::Sigma(sigma));
-        }
-        Ok(Aux::None)
-    }
-}
-
-/// Resolve an artifact's (op, mode) route to the [`OperatorSpec`] the
-/// Taylor engine evaluates as one compiled jet push.  Weighted stochastic
-/// artifacts follow the aot.py contract (paper eq. 8a): callers pass dirs
-/// already premultiplied by σ, so the spec is the plain estimator's.
-fn resolve_spec(meta: &ArtifactMeta, aux: &Aux) -> Result<OperatorSpec> {
-    let spec = match (meta.op.as_str(), meta.mode.as_str(), aux) {
-        ("laplacian", "exact", Aux::None) => OperatorSpec::laplacian(meta.dim),
-        ("weighted_laplacian", "exact", Aux::Sigma(sigma)) => {
-            OperatorSpec::weighted_laplacian(sigma)
-        }
-        ("helmholtz", "exact", Aux::None) => OperatorSpec::helmholtz_preset(meta.dim),
-        ("biharmonic", "exact", Aux::None) => OperatorSpec::biharmonic(meta.dim),
-        ("laplacian", "stochastic", Aux::Dirs(dirs))
-        | ("weighted_laplacian", "stochastic", Aux::Dirs(dirs)) => {
+/// Resolve a typed (op, aux) route to the [`OperatorSpec`] the Taylor
+/// engine evaluates as one compiled jet push.  Weighted stochastic routes
+/// follow the aot.py contract (paper eq. 8a): callers pass dirs already
+/// premultiplied by σ, so the spec is the plain estimator's.
+pub fn resolve_spec(kind: OpKind, dim: usize, aux: &Aux) -> Result<OperatorSpec> {
+    let spec = match (kind, aux) {
+        (OpKind::Laplacian, Aux::None) => OperatorSpec::laplacian(dim),
+        (OpKind::WeightedLaplacian, Aux::Sigma(sigma)) => OperatorSpec::weighted_laplacian(sigma),
+        (OpKind::Helmholtz, Aux::None) => OperatorSpec::helmholtz_preset(dim),
+        (OpKind::Biharmonic, Aux::None) => OperatorSpec::biharmonic(dim),
+        (OpKind::Laplacian | OpKind::WeightedLaplacian, Aux::Dirs(dirs)) => {
             OperatorSpec::stochastic_laplacian(dirs)
         }
-        ("helmholtz", "stochastic", Aux::Dirs(dirs)) => {
+        (OpKind::Helmholtz, Aux::Dirs(dirs)) => {
             OperatorSpec::stochastic_helmholtz(HELMHOLTZ_C0, HELMHOLTZ_C2, dirs)
         }
-        ("biharmonic", "stochastic", Aux::Dirs(dirs)) => OperatorSpec::stochastic_biharmonic(dirs),
-        (op, mode, _) => bail!("{}: no native executor for op {op:?} mode {mode:?}", meta.name),
+        (OpKind::Biharmonic, Aux::Dirs(dirs)) => OperatorSpec::stochastic_biharmonic(dirs),
+        (kind, _) => bail!("{}: route/aux mismatch (API validation bug)", kind.as_str()),
     };
     Ok(spec)
 }
@@ -307,38 +302,35 @@ fn resolve_spec(meta: &ArtifactMeta, aux: &Aux) -> Result<OperatorSpec> {
 /// a direction bundle to stack, but it consumes the same resolved aux.
 /// `f0` is the already-computed forward pass (the helmholtz c₀·f term
 /// reuses it rather than re-running the network).
-fn execute_nested(
+pub fn execute_nested(
     mlp: &Mlp,
-    meta: &ArtifactMeta,
+    kind: OpKind,
     x0: &Tensor,
     aux: &Aux,
     f0: &Tensor,
 ) -> Result<Tensor> {
-    let opv = match (meta.op.as_str(), meta.mode.as_str(), aux) {
-        ("laplacian", "exact", Aux::None) => nested::laplacian(mlp, x0, None, 1.0),
-        ("weighted_laplacian", "exact", Aux::Sigma(sigma)) => {
+    let opv = match (kind, aux) {
+        (OpKind::Laplacian, Aux::None) => nested::laplacian(mlp, x0, None, 1.0),
+        (OpKind::WeightedLaplacian, Aux::Sigma(sigma)) => {
             let dirs = sigma.transpose2();
             nested::laplacian(mlp, x0, Some(&dirs), 1.0)
         }
-        ("helmholtz", "exact", Aux::None) => {
+        (OpKind::Helmholtz, Aux::None) => {
             let lap = nested::laplacian(mlp, x0, None, 1.0);
             f0.scale(HELMHOLTZ_C0).add(&lap.scale(HELMHOLTZ_C2))
         }
-        ("biharmonic", "exact", Aux::None) => nested::biharmonic_tvp(mlp, x0),
-        ("laplacian", "stochastic", Aux::Dirs(dirs))
-        | ("weighted_laplacian", "stochastic", Aux::Dirs(dirs)) => {
+        (OpKind::Biharmonic, Aux::None) => nested::biharmonic_tvp(mlp, x0),
+        (OpKind::Laplacian | OpKind::WeightedLaplacian, Aux::Dirs(dirs)) => {
             let s = dirs.shape[0] as f64;
             nested::laplacian(mlp, x0, Some(dirs), 1.0 / s)
         }
-        ("helmholtz", "stochastic", Aux::Dirs(dirs)) => {
+        (OpKind::Helmholtz, Aux::Dirs(dirs)) => {
             let s = dirs.shape[0] as f64;
             let lap = nested::laplacian(mlp, x0, Some(dirs), 1.0 / s);
             f0.scale(HELMHOLTZ_C0).add(&lap.scale(HELMHOLTZ_C2))
         }
-        ("biharmonic", "stochastic", Aux::Dirs(dirs)) => {
-            nested::stochastic_biharmonic_tvp(mlp, x0, dirs)
-        }
-        (op, mode, _) => bail!("{}: no nested executor for op {op:?} mode {mode:?}", meta.name),
+        (OpKind::Biharmonic, Aux::Dirs(dirs)) => nested::stochastic_biharmonic_tvp(mlp, x0, dirs),
+        (kind, _) => bail!("{}: route/aux mismatch (API validation bug)", kind.as_str()),
     };
     Ok(opv)
 }
@@ -372,7 +364,7 @@ const MIN_SHARD_ROWS: usize = 4;
 
 /// Number of equal sub-batches a packed batch splits into for the given
 /// executor count: the largest count that divides the batch evenly with
-/// at least [`MIN_SHARD_ROWS`] rows each (1 ⇒ run single-threaded).
+/// at least `MIN_SHARD_ROWS` (4) rows each (1 ⇒ run single-threaded).
 pub fn shard_count(batch: usize, executors: usize) -> usize {
     if executors <= 1 || batch < 2 * MIN_SHARD_ROWS {
         return 1;
@@ -441,24 +433,31 @@ fn run_sharded(
     Ok(stitched)
 }
 
-/// Execute one Taylor-method artifact through the cached compiled-program
-/// path: resolve the spec, compile (or fetch) the route's program — split
+/// Execute one Taylor-method evaluation through the cached
+/// compiled-program path: compile (or fetch) the route's program — split
 /// into per-thread sub-batches when the pool and batch allow — and run
 /// the VM on `[x0, scaled dirs]` against the program's pooled arenas.
+///
+/// `route_key` is the caller's unique route identity (artifact name or an
+/// engine-assigned custom-spec id); `fresh_dirs` marks routes whose
+/// directions arrive with the request (stochastic estimators), so their
+/// batch broadcast is never cached as program state.
 #[allow(clippy::too_many_arguments)]
-fn execute_taylor(
-    meta: &ArtifactMeta,
+pub fn execute_taylor(
+    route_key: &str,
     mlp: &Mlp,
     x0: &Tensor,
-    aux: &Aux,
+    spec: &OperatorSpec,
     mode: Collapse,
+    fresh_dirs: bool,
     cache: &ProgramCache,
     theta: &[f32],
     pool: &Pool,
 ) -> Result<(Tensor, Tensor)> {
-    let spec = resolve_spec(meta, aux)?;
+    ensure!(x0.rank() == 2, "{route_key}: x must be [B, D]");
     let plan = spec.compile();
     let batch = x0.shape[0];
+    let dim = x0.shape[1];
     // The program embeds θ (weights as constants) and the batch-shaped
     // zero seeds; the |w|^(1/k)-scaled directions stay a runtime input, so
     // stochastic routes (fresh dirs every batch) still hit the cache.  The
@@ -470,21 +469,20 @@ fn execute_taylor(
     let shards = shard_count(batch, pool.executors());
     let sub = batch / shards;
     let theta_fp = theta_fingerprint(theta);
-    let key = format!("{}|b{sub}|r{num_dirs}|t{theta_fp:016x}", meta.name);
-    let stochastic = meta.mode == "stochastic";
+    let key = format!("{route_key}|b{sub}|r{num_dirs}|t{theta_fp:016x}");
     let has_dirs = plan.order >= 1;
     let prog = cache.get_or_compile(key, theta, || {
-        let program = compile_route(mlp, &plan, sub, meta.dim, mode)?;
-        // Exact routes: the scaled direction bundle is part of the route,
+        let program = compile_route(mlp, &plan, sub, dim, mode)?;
+        // Fixed-direction routes: the scaled bundle is part of the route,
         // so its batch broadcast is compiled-in state reused every call.
-        let bdirs = if has_dirs && !stochastic {
+        let bdirs = if has_dirs && !fresh_dirs {
             Some(plan.dirs.broadcast_rows(sub))
         } else {
             None
         };
         Ok(CachedProgram::new(program, bdirs))
     })?;
-    let fresh_dirs = if has_dirs && stochastic {
+    let fresh = if has_dirs && fresh_dirs {
         Some(Arc::new(plan.dirs.broadcast_rows(sub)))
     } else {
         None
@@ -493,94 +491,23 @@ fn execute_taylor(
     let mut outs = if shards == 1 {
         let mut inputs: Vec<&Tensor> = vec![x0];
         if has_dirs {
-            inputs.push(fresh_dirs.as_deref().or(prog.bdirs.as_ref()).expect("direction input"));
+            inputs.push(fresh.as_deref().or(prog.bdirs.as_ref()).expect("direction input"));
         }
         let mut outs = Vec::new();
         prog.run(&inputs, &mut outs)?;
         outs
     } else {
-        run_sharded(&prog, x0, fresh_dirs, shards, sub, meta.dim, pool)?
+        run_sharded(&prog, x0, fresh, shards, sub, dim, pool)?
     };
-    ensure!(outs.len() == 2, "{}: traced program must emit [f0, op]", meta.name);
+    ensure!(outs.len() == 2, "{route_key}: traced program must emit [f0, op]");
     let opv = outs.pop().expect("two outputs");
     let f0 = outs.pop().expect("two outputs");
     Ok((f0, opv))
 }
 
-/// Execute one artifact natively.  `inputs` follow the manifest order:
-/// `theta`, `x`, then `sigma` (weighted Laplacian) and/or `dirs`
-/// (stochastic modes).  Returns `[f0, op]`, each `[B, 1]` f32.  Taylor
-/// routes shard large batches across the process-wide [`Pool::global`].
-pub fn execute(
-    meta: &ArtifactMeta,
-    inputs: &[&HostTensor],
-    cache: &ProgramCache,
-) -> Result<Vec<HostTensor>> {
-    execute_pooled(meta, inputs, cache, Pool::global())
-}
-
-/// [`execute`] with an explicit worker pool — the bench harness sweeps
-/// pool sizes through this; serving uses the global pool.
-pub fn execute_pooled(
-    meta: &ArtifactMeta,
-    inputs: &[&HostTensor],
-    cache: &ProgramCache,
-    pool: &Pool,
-) -> Result<Vec<HostTensor>> {
-    ensure!(inputs.len() >= 2, "{}: need at least theta and x inputs", meta.name);
-    let mlp = mlp_from_theta(meta, &inputs[0].data)?;
-    let x = inputs[1];
-    ensure!(
-        x.shape.len() == 2 && x.shape[1] == meta.dim,
-        "{}: x shape {:?} is not [B, {}]",
-        meta.name,
-        x.shape,
-        meta.dim
-    );
-    let x0 = to_f64(x);
-    let aux = Aux::resolve(meta, inputs)?;
-
-    let (f0, opv) = match Method::parse(&meta.method)? {
-        Method::Nested => {
-            let f0 = mlp.apply(&x0);
-            let opv = execute_nested(&mlp, meta, &x0, &aux, &f0)?;
-            (f0, opv)
-        }
-        Method::Taylor(mode) => {
-            execute_taylor(meta, &mlp, &x0, &aux, mode, cache, &inputs[0].data, pool)?
-        }
-    };
-
-    Ok(vec![to_f32(&f0), to_f32(&opv)])
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bench::workload::theta_for;
-    use crate::operators::plan;
-    use crate::runtime::Registry;
-    use crate::util::prng::Rng;
-
-    fn exec(meta: &ArtifactMeta, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
-        execute(meta, inputs, &ProgramCache::new())
-    }
-
-    #[test]
-    fn executes_builtin_laplacian_artifact() {
-        let reg = Registry::builtin();
-        let meta = reg.get("laplacian_collapsed_exact_b2").unwrap();
-        let theta = theta_for(meta, 1);
-        let mut rng = Rng::new(2);
-        let mut xdata = vec![0.0f32; 2 * meta.dim];
-        rng.fill_normal_f32(&mut xdata);
-        let x = HostTensor::new(vec![2, meta.dim], xdata);
-        let out = exec(meta, &[&theta, &x]).unwrap();
-        assert_eq!(out.len(), 2);
-        assert_eq!(out[0].shape, vec![2, 1]);
-        assert_eq!(out[1].shape, vec![2, 1]);
-        assert!(out[1].data.iter().all(|v| v.is_finite()));
-    }
 
     #[test]
     fn shard_counts_divide_batches_evenly() {
@@ -599,129 +526,43 @@ mod tests {
     }
 
     #[test]
-    fn theta_unpacking_rejects_bad_lengths() {
-        let reg = Registry::builtin();
-        let meta = reg.get("laplacian_collapsed_exact_b2").unwrap();
-        let theta = HostTensor::zeros(vec![meta.theta_len + 1]);
-        let x = HostTensor::zeros(vec![2, meta.dim]);
-        assert!(exec(meta, &[&theta, &x]).is_err());
-    }
-
-    #[test]
-    fn methods_agree_through_the_executor() {
-        let reg = Registry::builtin();
-        let col = reg.get("laplacian_collapsed_exact_b2").unwrap();
-        let std_ = reg.get("laplacian_standard_exact_b2").unwrap();
-        let nst = reg.get("laplacian_nested_exact_b2").unwrap();
-        let theta = theta_for(col, 3);
-        let mut rng = Rng::new(4);
-        let mut xdata = vec![0.0f32; 2 * col.dim];
-        rng.fill_normal_f32(&mut xdata);
-        let x = HostTensor::new(vec![2, col.dim], xdata);
-        let a = exec(col, &[&theta, &x]).unwrap();
-        let b = exec(std_, &[&theta, &x]).unwrap();
-        let c = exec(nst, &[&theta, &x]).unwrap();
-        for i in 0..2 {
-            assert!((a[1].data[i] - b[1].data[i]).abs() < 1e-3 * (1.0 + a[1].data[i].abs()));
-            assert!((a[1].data[i] - c[1].data[i]).abs() < 1e-3 * (1.0 + a[1].data[i].abs()));
+    fn op_kinds_round_trip_their_strings() {
+        for kind in
+            [OpKind::Laplacian, OpKind::WeightedLaplacian, OpKind::Helmholtz, OpKind::Biharmonic]
+        {
+            assert_eq!(OpKind::parse(kind.as_str()), Some(kind));
         }
+        assert_eq!(OpKind::parse("pinn_step"), None);
     }
 
     #[test]
-    fn taylor_routes_hit_the_program_cache_and_match_the_jet_oracle() {
-        let reg = Registry::builtin();
-        let cache = ProgramCache::new();
-        let meta = reg.get("laplacian_collapsed_exact_b2").unwrap();
-        let theta = theta_for(meta, 9);
-        let mut rng = Rng::new(10);
-        let mut xdata = vec![0.0f32; 2 * meta.dim];
-        rng.fill_normal_f32(&mut xdata);
-        let x = HostTensor::new(vec![2, meta.dim], xdata);
-
-        let out1 = execute(meta, &[&theta, &x], &cache).unwrap();
-        assert_eq!(cache.stats(), (0, 1), "first batch compiles");
-        let out2 = execute(meta, &[&theta, &x], &cache).unwrap();
-        assert_eq!(cache.stats(), (1, 1), "second batch reuses the program");
-        assert_eq!(out1[1].data, out2[1].data);
-
-        // Same route, new θ: the program embeds weights, so it recompiles.
-        let theta2 = theta_for(meta, 10);
-        execute(meta, &[&theta2, &x], &cache).unwrap();
-        assert_eq!(cache.stats(), (1, 2));
-
-        // The VM path must agree with the jet-engine oracle to 1e-10 (f64).
-        let mlp = mlp_from_theta(meta, &theta.data).unwrap();
-        let x0 = to_f64(&x);
-        let spec = OperatorSpec::laplacian(meta.dim);
-        let (f0, lap) = plan::apply(&mlp, &x0, &spec.compile(), Collapse::Collapsed);
-        let (vf0, vlap) = execute_taylor(
-            meta,
-            &mlp,
-            &x0,
-            &Aux::None,
-            Collapse::Collapsed,
-            &cache,
-            &theta.data,
-            Pool::global(),
-        )
-        .unwrap();
-        assert!(vf0.max_abs_diff(&f0) < 1e-10);
-        assert!(vlap.max_abs_diff(&lap) < 1e-10);
-    }
-
-    #[test]
-    fn helmholtz_route_composes_f_and_laplacian() {
-        let reg = Registry::builtin();
-        let hel = reg.get("helmholtz_collapsed_exact_b2").unwrap();
-        let lap = reg.get("laplacian_collapsed_exact_b2").unwrap();
-        let theta = theta_for(hel, 8);
-        let mut rng = Rng::new(9);
-        let mut xdata = vec![0.0f32; 2 * hel.dim];
-        rng.fill_normal_f32(&mut xdata);
-        let x = HostTensor::new(vec![2, hel.dim], xdata);
-        let h = exec(hel, &[&theta, &x]).unwrap();
-        let l = exec(lap, &[&theta, &x]).unwrap();
-        for b in 0..2 {
-            let expect = HELMHOLTZ_C0 as f32 * h[0].data[b] + HELMHOLTZ_C2 as f32 * l[1].data[b];
-            assert!(
-                (h[1].data[b] - expect).abs() < 1e-3 * (1.0 + expect.abs()),
-                "helmholtz {} vs c0·f + c2·Δf {}",
-                h[1].data[b],
-                expect
-            );
+    fn program_cache_evicts_fifo_beyond_capacity() {
+        let cache = ProgramCache::with_capacity(2);
+        let theta = [0.0f32];
+        let build = || -> Result<CachedProgram> {
+            let spec = OperatorSpec::laplacian(2);
+            let mut rng = crate::util::prng::Rng::new(1);
+            let mlp = Mlp::init(&mut rng, 2, &[3, 1], 1);
+            let plan = spec.compile();
+            Ok(CachedProgram::new(compile_route(&mlp, &plan, 1, 2, Collapse::Collapsed)?, None))
+        };
+        for key in ["a", "b", "c"] {
+            cache.get_or_compile(key.to_string(), &theta, build).unwrap();
         }
+        assert_eq!(cache.len(), 2, "capacity 2 holds the two newest entries");
+        assert_eq!(cache.stats(), (0, 3));
+        cache.get_or_compile("c".to_string(), &theta, build).unwrap();
+        assert_eq!(cache.stats(), (1, 3), "the newest entry is still a hit");
     }
 
     #[test]
-    fn weighted_stochastic_consumes_premultiplied_directions() {
-        // The artifact contract (aot.py): weighted stochastic receives
-        // σ-premultiplied dirs.  With σ = c·I the premultiplied estimate
-        // must equal c² times the plain estimate on the same draw.
-        let reg = Registry::builtin();
-        let wmeta = reg.get("weighted_laplacian_collapsed_stochastic_s8_b4").unwrap();
-        let lmeta = reg.get("laplacian_collapsed_stochastic_s8_b4").unwrap();
-        let theta = theta_for(wmeta, 5);
-        let mut rng = Rng::new(6);
-        let d = wmeta.dim;
-        let mut xdata = vec![0.0f32; 2 * d];
-        rng.fill_normal_f32(&mut xdata);
-        let x = HostTensor::new(vec![2, d], xdata);
-        let mut dirs = vec![0.0f32; 8 * d];
-        rng.fill_rademacher_f32(&mut dirs);
-        let c = 1.5f32;
-        let scaled: Vec<f32> = dirs.iter().map(|&v| c * v).collect();
-        let dirs = HostTensor::new(vec![8, d], dirs);
-        let sdirs = HostTensor::new(vec![8, d], scaled);
-        let w = exec(wmeta, &[&theta, &x, &sdirs]).unwrap();
-        let p = exec(lmeta, &[&theta, &x, &dirs]).unwrap();
-        for b in 0..2 {
-            let expect = c * c * p[1].data[b];
-            assert!(
-                (w[1].data[b] - expect).abs() < 1e-3 * (1.0 + expect.abs()),
-                "weighted {} vs c^2 * plain {}",
-                w[1].data[b],
-                expect
-            );
-        }
+    fn resolve_spec_is_typed_per_route() {
+        let dirs = Tensor::new(vec![3, 4], vec![1.0; 12]);
+        let s = resolve_spec(OpKind::Laplacian, 4, &Aux::None).unwrap();
+        assert_eq!(s.name, "laplacian");
+        let s = resolve_spec(OpKind::Biharmonic, 4, &Aux::Dirs(dirs)).unwrap();
+        assert_eq!(s.name, "stochastic_biharmonic");
+        // A mismatched pair is an API-layer bug, surfaced loudly.
+        assert!(resolve_spec(OpKind::Laplacian, 4, &Aux::Sigma(Tensor::zeros(&[4, 4]))).is_err());
     }
 }

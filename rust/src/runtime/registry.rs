@@ -7,7 +7,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::io::HostTensor;
 use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
 
 /// Shape + dtype of one executable input/output.
 #[derive(Debug, Clone, PartialEq)]
@@ -115,6 +117,20 @@ impl ArtifactMeta {
     /// Absolute path of the HLO text file given the artifacts dir.
     pub fn hlo_path(&self, dir: &Path) -> PathBuf {
         dir.join(&self.file)
+    }
+
+    /// A Glorot-uniform parameter vector for this artifact's network shape
+    /// (per-layer W then b, biases zero — the `model.py` layout).  Drawing
+    /// from the same `Rng` stream as [`crate::mlp::Mlp::init`] yields
+    /// bitwise-identical weights, which the cross-engine tests rely on.
+    pub fn glorot_theta(&self, rng: &mut Rng) -> HostTensor {
+        let mut theta = vec![0.0f32; self.theta_len];
+        let mut off = 0;
+        for &(fi, fo) in &self.layer_dims {
+            rng.glorot_f32(fi, fo, &mut theta[off..off + fi * fo]);
+            off += fi * fo + fo;
+        }
+        HostTensor::new(vec![self.theta_len], theta)
     }
 }
 

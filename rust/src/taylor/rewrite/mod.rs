@@ -2,11 +2,11 @@
 //!
 //! Collapsing standard Taylor mode is two rewrites:
 //!
-//! 1. **replicate-push-down** ([`replicate_push`]): `op(replicate(x), …)`
+//! 1. **replicate-push-down** ([`replicate_push()`]): `op(replicate(x), …)`
 //!    becomes `replicate(op(x, …))` whenever no operand carries a *genuine*
 //!    direction dependence — removing compute repeated identically for
 //!    every direction (the shared 0-th coefficient path).
-//! 2. **sum-push-up** ([`sum_collapse`]): the final `sum` over directions
+//! 2. **sum-push-up** ([`sum_collapse()`]): the final `sum` over directions
 //!    is propagated up through every direction-*linear* node (Add, Scale,
 //!    MatMul, Mul-by-direction-free, …) until it sticks at the nonlinear
 //!    Faà di Bruno terms.  What remains is exactly collapsed Taylor mode:

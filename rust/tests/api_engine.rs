@@ -1,0 +1,190 @@
+//! API-level round-trip tests: every builtin registry route evaluated
+//! through the public `Engine` front door, asserted against the
+//! pre-redesign `plan::apply` jet-engine oracle running on
+//! bitwise-identical f64 weights (the workload θ and `Mlp::init` draw the
+//! same Glorot stream).  Taylor routes must match the oracle to ≤ 1e-10
+//! relative after the common f32 cast — i.e. bit-for-bit at output
+//! precision — and the compiled-program cache must be observable through
+//! `Engine::stats`.
+
+use ctaylor::api::{Collapse, Engine, Method};
+use ctaylor::bench::workload::{self, Workload};
+use ctaylor::mlp::Mlp;
+use ctaylor::operators::plan::{self, HELMHOLTZ_C0, HELMHOLTZ_C2};
+use ctaylor::operators::OperatorSpec;
+use ctaylor::runtime::{ArtifactMeta, HostTensor, Registry};
+use ctaylor::taylor::tensor::Tensor;
+use ctaylor::util::prng::Rng;
+
+const OPS: [&str; 4] = ["laplacian", "weighted_laplacian", "helmholtz", "biharmonic"];
+const METHODS: [&str; 3] = ["nested", "standard", "collapsed"];
+const MODES: [&str; 2] = ["exact", "stochastic"];
+
+fn to_f64(t: &HostTensor) -> Tensor {
+    Tensor::new(t.shape.clone(), t.data.iter().map(|&v| v as f64).collect())
+}
+
+/// The route's oracle spec, resolved from the same workload tensors the
+/// engine consumes (weighted stochastic dirs arrive σ-premultiplied, so
+/// the oracle is the plain estimator's — the aot.py contract).
+fn oracle_spec(meta: &ArtifactMeta, w: &Workload) -> OperatorSpec {
+    let d = meta.dim;
+    if meta.mode == "stochastic" {
+        let dirs = to_f64(w.dirs.as_ref().expect("stochastic workload has dirs"));
+        return match meta.op.as_str() {
+            "laplacian" | "weighted_laplacian" => OperatorSpec::stochastic_laplacian(&dirs),
+            "helmholtz" => OperatorSpec::stochastic_helmholtz(HELMHOLTZ_C0, HELMHOLTZ_C2, &dirs),
+            "biharmonic" => OperatorSpec::stochastic_biharmonic(&dirs),
+            other => panic!("no oracle for op {other}"),
+        };
+    }
+    match meta.op.as_str() {
+        "laplacian" => OperatorSpec::laplacian(d),
+        "weighted_laplacian" => {
+            OperatorSpec::weighted_laplacian(&to_f64(w.sigma.as_ref().expect("sigma")))
+        }
+        "helmholtz" => OperatorSpec::helmholtz_preset(d),
+        "biharmonic" => OperatorSpec::biharmonic(d),
+        other => panic!("no oracle for op {other}"),
+    }
+}
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / (1.0 + b.abs())
+}
+
+#[test]
+fn every_registry_route_matches_the_plan_apply_oracle_through_the_engine() {
+    let engine = Engine::builder().registry(Registry::builtin()).build().unwrap();
+    let mut taylor_routes = 0u64;
+    for op in OPS {
+        for method in METHODS {
+            for mode in MODES {
+                let metas = engine.registry().select(op, method, mode);
+                let meta = (*metas.last().expect("registry covers every route")).clone();
+                let seed = 0x5eed ^ (meta.name.len() as u64);
+                let w = workload::workload_for(&meta, seed);
+                let handle = engine.operator(&meta.name).unwrap();
+                assert_eq!(handle.method(), Method::parse(method).unwrap());
+
+                // Evaluate twice: the second pass must be a pure cache hit
+                // for Taylor routes (steady state = VM execution only).
+                let out = w.request(&handle).run().unwrap();
+                let out2 = w.request(&handle).run().unwrap();
+                assert_eq!(out, out2, "{}: reruns must be identical", meta.name);
+
+                // Oracle on bitwise-identical weights.
+                let mlp = Mlp::init(&mut Rng::new(seed), meta.dim, &meta.widths, meta.batch);
+                let x0 = to_f64(&w.x);
+                let spec = oracle_spec(&meta, &w);
+                let collapse = match method {
+                    "standard" => Collapse::Standard,
+                    _ => Collapse::Collapsed,
+                };
+                let (f0, opv) = plan::apply(&mlp, &x0, &spec.compile(), collapse);
+                // Nested AD is a different algorithm: mathematical
+                // agreement, not bitwise (4th derivatives in f32 are the
+                // loosest).
+                let tol = match method {
+                    "nested" if op == "biharmonic" => 5e-2,
+                    "nested" => 1e-2,
+                    _ => 1e-10,
+                };
+                for b in 0..meta.batch {
+                    let f_want = f0.data[b] as f32 as f64;
+                    let o_want = opv.data[b] as f32 as f64;
+                    assert!(
+                        rel(out.f0.data[b] as f64, f_want) <= tol,
+                        "{}: f0 row {b}: engine {} vs oracle {f_want}",
+                        meta.name,
+                        out.f0.data[b]
+                    );
+                    assert!(
+                        rel(out.op.data[b] as f64, o_want) <= tol,
+                        "{}: op row {b}: engine {} vs oracle {o_want}",
+                        meta.name,
+                        out.op.data[b]
+                    );
+                }
+                if method != "nested" {
+                    taylor_routes += 1;
+                }
+            }
+        }
+    }
+
+    // Cache amortization is observable through the one EngineStats seam.
+    let stats = engine.stats();
+    assert_eq!(taylor_routes, 16, "4 ops x 2 Taylor methods x 2 modes");
+    assert!(
+        stats.program_cache_misses >= taylor_routes,
+        "every Taylor route compiles once: {stats}"
+    );
+    assert!(
+        stats.program_cache_hits >= taylor_routes,
+        "every Taylor route's second pass hits the cache: {stats}"
+    );
+    assert_eq!(
+        stats.programs_cached as u64, stats.program_cache_misses,
+        "distinct route keys never collide: {stats}"
+    );
+    assert_eq!(stats.operators_loaded, 24, "one cached handle per route");
+    assert!(stats.pool_executors >= 1);
+}
+
+/// Varying σ per request on ONE weighted-Laplacian handle must change the
+/// answer: the compiled program is σ-independent (directions are a runtime
+/// input) and is shared across σ's — a cache hit — but the σ-derived
+/// direction bundle is rebuilt per request, never reused as program state.
+/// With σ = c·I, Tr(σσᵀ∇²f) = c²·Δf.
+#[test]
+fn sigma_is_per_request_state_not_cached_program_state() {
+    let engine = Engine::builder().registry(Registry::builtin()).threads(1).build().unwrap();
+    let handle = engine.operator("weighted_laplacian_collapsed_exact_b4").unwrap();
+    let meta = handle.meta().clone();
+    let d = meta.dim;
+    let theta = workload::theta_for(&meta, 21);
+    let x = workload::input_for(&meta, 21);
+
+    let scaled_identity = |c: f32| {
+        let mut s = vec![0.0f32; d * d];
+        for i in 0..d {
+            s[i * d + i] = c;
+        }
+        HostTensor::new(vec![d, d], s)
+    };
+    let s1 = scaled_identity(1.0);
+    let s2 = scaled_identity(1.5);
+    let out1 = handle.eval().theta(&theta).x(&x).sigma(&s1).run().unwrap();
+    let out2 = handle.eval().theta(&theta).x(&x).sigma(&s2).run().unwrap();
+    let stats = engine.stats();
+    assert_eq!(
+        (stats.program_cache_misses, stats.program_cache_hits),
+        (1, 1),
+        "the program is sigma-independent and must be shared: {stats}"
+    );
+    for b in 0..meta.batch {
+        let expect = 2.25 * out1.op.data[b];
+        assert!(
+            (out2.op.data[b] - expect).abs() <= 1e-4 * (1.0 + expect.abs()),
+            "row {b}: sigma=1.5I gave {} but 2.25 * (sigma=I) = {expect} — \
+             a stale sigma bundle was served from the cache",
+            out2.op.data[b]
+        );
+    }
+}
+
+#[test]
+fn engine_stats_track_theta_churn_recompiles() {
+    let engine = Engine::builder().registry(Registry::builtin()).threads(1).build().unwrap();
+    let handle = engine.operator("laplacian_collapsed_exact_b4").unwrap();
+    let meta = handle.meta().clone();
+    for seed in 0..3u64 {
+        let w = workload::workload_for(&meta, seed);
+        w.request(&handle).run().unwrap();
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.program_cache_misses, 3, "each θ compiles its own program: {stats}");
+    assert_eq!(stats.program_cache_hits, 0, "{stats}");
+    assert_eq!(stats.programs_cached, 3, "{stats}");
+}

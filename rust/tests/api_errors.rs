@@ -1,0 +1,199 @@
+//! Load-vs-run phase separation and named-input diagnostics.
+//!
+//! Regression for the string-parsing hoist: a malformed artifact (bad
+//! method / op / mode / structure) fails at `Engine::operator` — handle
+//! construction, where manifest strings are parsed exactly once — never
+//! during steady-state evaluation.  And every registry route's missing or
+//! mis-shaped input produces an error naming the input (`theta` / `x` /
+//! `sigma` / `dirs`) with expected-vs-got shapes.
+
+use ctaylor::api::{ApiError, Engine};
+use ctaylor::bench::workload;
+use ctaylor::runtime::{HostTensor, Registry};
+
+/// A synthetic manifest: one well-formed route plus one broken artifact
+/// per load-time failure class.
+fn bad_manifest_dir() -> std::path::PathBuf {
+    let artifact = |name: &str, op: &str, method: &str, mode: &str, theta_len: usize| {
+        format!(
+            r#"{{"name":"{name}","file":"{name}.hlo.txt","op":"{op}",
+               "method":"{method}","mode":"{mode}","dim":4,"widths":[8,1],
+               "batch":2,"samples":0,"theta_len":{theta_len},
+               "layer_dims":[[4,8],[8,1]],"variant":"plain",
+               "inputs":[{{"name":"theta","shape":[{theta_len}],"dtype":"f32"}},
+                         {{"name":"x","shape":[2,4],"dtype":"f32"}}],
+               "outputs":[{{"name":"f0","shape":[2,1],"dtype":"f32"}},
+                          {{"name":"op","shape":[2,1],"dtype":"f32"}}]}}"#
+        )
+    };
+    let text = format!(
+        r#"{{"preset":"bad","artifacts":[{},{},{},{},{}]}}"#,
+        artifact("good", "laplacian", "collapsed", "exact", 49),
+        artifact("bad_method", "laplacian", "frobnicate", "exact", 49),
+        artifact("bad_op", "warp_drive", "collapsed", "exact", 49),
+        artifact("bad_mode", "laplacian", "collapsed", "sideways", 49),
+        artifact("bad_theta_len", "laplacian", "collapsed", "exact", 50),
+    );
+    let dir = std::env::temp_dir().join("ctaylor_api_errors_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), text).unwrap();
+    dir
+}
+
+#[test]
+fn malformed_artifacts_fail_at_load_not_at_run() {
+    let reg = Registry::load(bad_manifest_dir()).unwrap();
+    let engine = Engine::builder().registry(reg).threads(1).build().unwrap();
+
+    // Route strings parse at handle construction — each failure class has
+    // its own variant, and none of them ever reaches evaluation.
+    let err = engine.operator("bad_method").unwrap_err();
+    assert!(
+        matches!(&err, ApiError::UnknownMethod { method, .. } if method == "frobnicate"),
+        "{err}"
+    );
+    assert!(err.to_string().contains("frobnicate"), "{err}");
+    assert!(matches!(engine.operator("bad_op"), Err(ApiError::UnsupportedRoute { .. })));
+    assert!(matches!(engine.operator("bad_mode"), Err(ApiError::UnsupportedRoute { .. })));
+    assert!(matches!(
+        engine.operator("bad_theta_len"),
+        Err(ApiError::MalformedArtifact { .. })
+    ));
+
+    // The well-formed route loads once and then serves repeatedly with no
+    // further parsing: the second request is a pure program-cache hit.
+    let handle = engine.operator("good").unwrap();
+    let theta = HostTensor::zeros(vec![49]);
+    let x = HostTensor::zeros(vec![2, 4]);
+    handle.eval().theta(&theta).x(&x).run().unwrap();
+    handle.eval().theta(&theta).x(&x).run().unwrap();
+    let stats = engine.stats();
+    assert_eq!((stats.program_cache_misses, stats.program_cache_hits), (1, 1), "{stats}");
+}
+
+/// One representative artifact per registry route; every missing and
+/// mis-shaped input must be diagnosed by name with expected-vs-got shapes.
+#[test]
+fn named_input_diagnostics_cover_every_route() {
+    let engine = Engine::builder().registry(Registry::builtin()).threads(1).build().unwrap();
+    for op in ["laplacian", "weighted_laplacian", "helmholtz", "biharmonic"] {
+        for mode in ["exact", "stochastic"] {
+            let metas = engine.registry().select(op, "collapsed", mode);
+            let meta = (*metas.first().unwrap()).clone();
+            let handle = engine.operator(&meta.name).unwrap();
+            let w = workload::workload_for(&meta, 3);
+            let d = meta.dim;
+
+            // The complete request succeeds.
+            w.request(&handle).run().unwrap_or_else(|e| panic!("{}: {e}", meta.name));
+
+            // Missing theta.
+            let mut r = handle.eval().x(&w.x);
+            if let Some(s) = &w.sigma {
+                r = r.sigma(s);
+            }
+            if let Some(dd) = &w.dirs {
+                r = r.directions(dd);
+            }
+            let err = r.run().unwrap_err();
+            assert!(
+                matches!(err, ApiError::MissingInput { input: "theta", .. }),
+                "{}: {err}",
+                meta.name
+            );
+            assert!(err.to_string().contains("`theta`"), "{err}");
+
+            // Mis-shaped theta: the message carries expected vs got.
+            let bad_theta = HostTensor::zeros(vec![meta.theta_len + 1]);
+            let err = w.request(&handle).theta(&bad_theta).run().unwrap_err();
+            assert!(
+                matches!(err, ApiError::ShapeMismatch { input: "theta", .. }),
+                "{}: {err}",
+                meta.name
+            );
+            let msg = err.to_string();
+            assert!(msg.contains(&format!("[{}]", meta.theta_len)), "{msg}");
+            assert!(msg.contains(&format!("[{}]", meta.theta_len + 1)), "{msg}");
+
+            // Missing x.
+            let mut r = handle.eval().theta(&w.theta);
+            if let Some(s) = &w.sigma {
+                r = r.sigma(s);
+            }
+            if let Some(dd) = &w.dirs {
+                r = r.directions(dd);
+            }
+            let err = r.run().unwrap_err();
+            assert!(matches!(err, ApiError::MissingInput { input: "x", .. }), "{err}");
+
+            // Mis-shaped x (wrong point dimension).
+            let bad_x = HostTensor::zeros(vec![meta.batch, d + 1]);
+            let err = w.request(&handle).x(&bad_x).run().unwrap_err();
+            assert!(matches!(err, ApiError::ShapeMismatch { input: "x", .. }), "{err}");
+            let msg = err.to_string();
+            assert!(msg.contains(&format!("[{}, {}]", meta.batch, d)), "expected in {msg}");
+            assert!(msg.contains(&format!("[{}, {}]", meta.batch, d + 1)), "got in {msg}");
+
+            match (op, mode) {
+                ("weighted_laplacian", "exact") => {
+                    // Missing σ, then mis-shaped σ.
+                    let err = handle.eval().theta(&w.theta).x(&w.x).run().unwrap_err();
+                    assert!(
+                        matches!(err, ApiError::MissingInput { input: "sigma", .. }),
+                        "{err}"
+                    );
+                    assert!(err.to_string().contains("`sigma`"), "{err}");
+                    let bad = HostTensor::zeros(vec![d, d + 1]);
+                    let err =
+                        handle.eval().theta(&w.theta).x(&w.x).sigma(&bad).run().unwrap_err();
+                    assert!(
+                        matches!(err, ApiError::ShapeMismatch { input: "sigma", .. }),
+                        "{err}"
+                    );
+                    assert!(err.to_string().contains(&format!("[{d}, {d}]")), "{err}");
+                }
+                (_, "stochastic") => {
+                    // Missing dirs, wrong sample count, and σ where only
+                    // premultiplied dirs are accepted.
+                    let err = handle.eval().theta(&w.theta).x(&w.x).run().unwrap_err();
+                    assert!(
+                        matches!(err, ApiError::MissingInput { input: "dirs", .. }),
+                        "{err}"
+                    );
+                    assert!(err.to_string().contains("`dirs`"), "{err}");
+                    let bad = HostTensor::zeros(vec![meta.samples + 1, d]);
+                    let err = handle
+                        .eval()
+                        .theta(&w.theta)
+                        .x(&w.x)
+                        .directions(&bad)
+                        .run()
+                        .unwrap_err();
+                    assert!(
+                        matches!(err, ApiError::ShapeMismatch { input: "dirs", .. }),
+                        "{err}"
+                    );
+                    assert!(
+                        err.to_string().contains(&format!("[{}, {d}]", meta.samples)),
+                        "{err}"
+                    );
+                    let sigma = HostTensor::zeros(vec![d, d]);
+                    let err = w.request(&handle).sigma(&sigma).run().unwrap_err();
+                    assert!(
+                        matches!(err, ApiError::UnexpectedInput { input: "sigma", .. }),
+                        "{err}"
+                    );
+                }
+                _ => {
+                    // Exact self-contained routes reject stray aux inputs.
+                    let dirs = HostTensor::zeros(vec![4, d]);
+                    let err = w.request(&handle).directions(&dirs).run().unwrap_err();
+                    assert!(
+                        matches!(err, ApiError::UnexpectedInput { input: "dirs", .. }),
+                        "{err}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -43,6 +43,28 @@ fn eval_runs_the_collapsed_laplacian_end_to_end() {
 }
 
 #[test]
+fn spec_compiles_and_evaluates_through_the_engine() {
+    let out = ctaylor(&["spec", "--op", "helmholtz", "--dim", "8"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("spec helmholtz"), "stdout: {stdout}");
+    // The composed spec is evaluated through Engine::compile, not just
+    // printed: the demo block reports L f values and the engine gauges.
+    assert!(stdout.contains("engine.compile("), "stdout: {stdout}");
+    assert!(stdout.contains("L f(x_0)"), "stdout: {stdout}");
+    assert!(stdout.contains("engine stats:"), "stdout: {stdout}");
+}
+
+#[test]
+fn info_reports_engine_gauges() {
+    let out = ctaylor(&["info"]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("engine: native-cpu"), "stdout: {stdout}");
+    assert!(stdout.contains("pool_executors="), "stdout: {stdout}");
+}
+
+#[test]
 fn bad_subcommand_fails_with_nonzero_exit() {
     let out = ctaylor(&["frobnicate"]);
     assert!(!out.status.success());

@@ -1,53 +1,45 @@
 //! Integration tests: load artifacts from the registry and execute them
-//! through the runtime client.
+//! through the public `Engine` front door.
 //!
 //! With an AOT artifact set in ./artifacts (or $CTAYLOR_ARTIFACTS) these
 //! exercise the python→manifest→rust path; otherwise they run against the
 //! builtin preset on the native execution backend.
 
-use ctaylor::runtime::{HostTensor, Registry, RuntimeClient};
+use ctaylor::api::Engine;
+use ctaylor::runtime::{HostTensor, Registry};
 use ctaylor::util::prng::Rng;
 
-fn registry() -> Registry {
-    let dir = std::env::var("CTAYLOR_ARTIFACTS").unwrap_or_else(|_| {
-        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
-    });
-    Registry::load_or_builtin(dir).expect("manifest present but malformed")
-}
-
-fn glorot_theta(meta: &ctaylor::runtime::ArtifactMeta, rng: &mut Rng) -> HostTensor {
-    let mut theta = vec![0.0f32; meta.theta_len];
-    let mut off = 0;
-    for &(fi, fo) in &meta.layer_dims {
-        rng.glorot_f32(fi, fo, &mut theta[off..off + fi * fo]);
-        off += fi * fo + fo; // biases stay zero
-    }
-    HostTensor::new(vec![meta.theta_len], theta)
+fn engine() -> Engine {
+    let dir = std::env::var("CTAYLOR_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    let reg = Registry::load_or_builtin(dir).expect("manifest present but malformed");
+    Engine::builder().registry(reg).build().expect("engine over the manifest")
 }
 
 #[test]
 fn laplacian_collapsed_executes_and_matches_standard_and_nested() {
-    let reg = registry();
-    let client = RuntimeClient::cpu().unwrap();
+    let eng = engine();
     let mut rng = Rng::new(42);
 
-    let col = client.load(&reg, "laplacian_collapsed_exact_b4").unwrap();
-    let std_ = client.load(&reg, "laplacian_standard_exact_b4").unwrap();
-    let nst = client.load(&reg, "laplacian_nested_exact_b4").unwrap();
+    let col = eng.operator("laplacian_collapsed_exact_b4").unwrap();
+    let std_ = eng.operator("laplacian_standard_exact_b4").unwrap();
+    let nst = eng.operator("laplacian_nested_exact_b4").unwrap();
 
-    let theta = glorot_theta(&col.meta, &mut rng);
-    let mut xdata = vec![0.0f32; 4 * col.meta.dim];
+    let theta = col.meta().glorot_theta(&mut rng);
+    let mut xdata = vec![0.0f32; 4 * col.meta().dim];
     rng.fill_normal_f32(&mut xdata);
-    let x = HostTensor::new(vec![4, col.meta.dim], xdata);
+    let x = HostTensor::new(vec![4, col.meta().dim], xdata);
 
-    let out_c = col.run(&[theta.clone(), x.clone()]).unwrap();
-    let out_s = std_.run(&[theta.clone(), x.clone()]).unwrap();
-    let out_n = nst.run(&[theta.clone(), x.clone()]).unwrap();
+    let out_c = col.eval().theta(&theta).x(&x).run().unwrap();
+    let out_s = std_.eval().theta(&theta).x(&x).run().unwrap();
+    let out_n = nst.eval().theta(&theta).x(&x).run().unwrap();
 
     // All three methods agree on f(x) and Delta f(x).
-    for i in 0..2 {
-        for b in 0..4 {
-            let (c, s, n) = (out_c[i].data[b], out_s[i].data[b], out_n[i].data[b]);
+    for b in 0..4 {
+        for (c, s, n) in [
+            (out_c.f0.data[b], out_s.f0.data[b], out_n.f0.data[b]),
+            (out_c.op.data[b], out_s.op.data[b], out_n.op.data[b]),
+        ] {
             assert!((c - s).abs() < 1e-3 * (1.0 + c.abs()), "col vs std: {c} vs {s}");
             assert!((c - n).abs() < 1e-3 * (1.0 + c.abs()), "col vs nested: {c} vs {n}");
         }
@@ -56,44 +48,39 @@ fn laplacian_collapsed_executes_and_matches_standard_and_nested() {
 
 #[test]
 fn biharmonic_methods_agree() {
-    let reg = registry();
-    let client = RuntimeClient::cpu().unwrap();
+    let eng = engine();
     let mut rng = Rng::new(7);
 
-    let col = client.load(&reg, "biharmonic_collapsed_exact_b2").unwrap();
-    let nst = client.load(&reg, "biharmonic_nested_exact_b2").unwrap();
-    let theta = glorot_theta(&col.meta, &mut rng);
-    let mut xdata = vec![0.0f32; 2 * col.meta.dim];
+    let col = eng.operator("biharmonic_collapsed_exact_b2").unwrap();
+    let nst = eng.operator("biharmonic_nested_exact_b2").unwrap();
+    let theta = col.meta().glorot_theta(&mut rng);
+    let mut xdata = vec![0.0f32; 2 * col.meta().dim];
     rng.fill_normal_f32(&mut xdata);
-    let x = HostTensor::new(vec![2, col.meta.dim], xdata);
+    let x = HostTensor::new(vec![2, col.meta().dim], xdata);
 
-    let out_c = col.run(&[theta.clone(), x.clone()]).unwrap();
-    let out_n = nst.run(&[theta, x]).unwrap();
+    let out_c = col.eval().theta(&theta).x(&x).run().unwrap();
+    let out_n = nst.eval().theta(&theta).x(&x).run().unwrap();
     for b in 0..2 {
-        let (c, n) = (out_c[1].data[b], out_n[1].data[b]);
+        let (c, n) = (out_c.op.data[b], out_n.op.data[b]);
         // Biharmonic mixes 4th derivatives in f32; allow a loose relative tol.
-        assert!(
-            (c - n).abs() < 5e-2 * (1.0 + n.abs()),
-            "biharmonic col {c} vs nested {n}"
-        );
+        assert!((c - n).abs() < 5e-2 * (1.0 + n.abs()), "biharmonic col {c} vs nested {n}");
     }
 }
 
 #[test]
 fn stochastic_laplacian_converges_towards_exact() {
-    let reg = registry();
-    let client = RuntimeClient::cpu().unwrap();
+    let eng = engine();
     let mut rng = Rng::new(3);
 
-    let exact = client.load(&reg, "laplacian_collapsed_exact_b4").unwrap();
-    let stoch = client.load(&reg, "laplacian_collapsed_stochastic_s16_b4").unwrap();
-    let theta = glorot_theta(&exact.meta, &mut rng);
-    let d = exact.meta.dim;
+    let exact = eng.operator("laplacian_collapsed_exact_b4").unwrap();
+    let stoch = eng.operator("laplacian_collapsed_stochastic_s16_b4").unwrap();
+    let theta = exact.meta().glorot_theta(&mut rng);
+    let d = exact.meta().dim;
     let mut xdata = vec![0.0f32; 4 * d];
     rng.fill_normal_f32(&mut xdata);
     let x = HostTensor::new(vec![4, d], xdata);
 
-    let lap = exact.run(&[theta.clone(), x.clone()]).unwrap()[1].clone();
+    let lap = exact.eval().theta(&theta).x(&x).run().unwrap().op;
 
     // Average many independent 16-sample Rademacher estimates.
     let trials = 64;
@@ -101,11 +88,10 @@ fn stochastic_laplacian_converges_towards_exact() {
     for _ in 0..trials {
         let mut dirs = vec![0.0f32; 16 * d];
         rng.fill_rademacher_f32(&mut dirs);
-        let est = stoch
-            .run(&[theta.clone(), x.clone(), HostTensor::new(vec![16, d], dirs)])
-            .unwrap();
+        let dirs = HostTensor::new(vec![16, d], dirs);
+        let est = stoch.eval().theta(&theta).x(&x).directions(&dirs).run().unwrap();
         for b in 0..4 {
-            acc[b] += est[1].data[b] as f64 / trials as f64;
+            acc[b] += est.op.data[b] as f64 / trials as f64;
         }
     }
     for b in 0..4 {
@@ -116,53 +102,46 @@ fn stochastic_laplacian_converges_towards_exact() {
 
 #[test]
 fn kernel_variant_matches_plain() {
-    let reg = registry();
-    let client = RuntimeClient::cpu().unwrap();
+    let eng = engine();
     let mut rng = Rng::new(9);
 
-    let kern = client.load(&reg, "laplacian_collapsed_exact_kernel_b8").unwrap();
-    let plain = client.load(&reg, "laplacian_collapsed_exact_b8").unwrap();
-    let theta = glorot_theta(&kern.meta, &mut rng);
-    let d = kern.meta.dim;
+    let kern = eng.operator("laplacian_collapsed_exact_kernel_b8").unwrap();
+    let plain = eng.operator("laplacian_collapsed_exact_b8").unwrap();
+    let theta = kern.meta().glorot_theta(&mut rng);
+    let d = kern.meta().dim;
     let mut xdata = vec![0.0f32; 8 * d];
     rng.fill_normal_f32(&mut xdata);
     let x = HostTensor::new(vec![8, d], xdata);
 
-    let a = kern.run(&[theta.clone(), x.clone()]).unwrap();
-    let b = plain.run(&[theta, x]).unwrap();
-    for i in 0..2 {
-        for j in 0..8 {
-            assert!(
-                (a[i].data[j] - b[i].data[j]).abs() < 1e-3 * (1.0 + b[i].data[j].abs()),
-                "pallas-kernel artifact deviates from plain: {} vs {}",
-                a[i].data[j],
-                b[i].data[j]
-            );
-        }
+    let a = kern.eval().theta(&theta).x(&x).run().unwrap();
+    let b = plain.eval().theta(&theta).x(&x).run().unwrap();
+    for (va, vb) in a.op.data.iter().zip(&b.op.data) {
+        assert!(
+            (va - vb).abs() < 1e-3 * (1.0 + vb.abs()),
+            "pallas-kernel artifact deviates from plain: {va} vs {vb}"
+        );
     }
 }
 
 #[test]
-fn device_resident_params_give_same_answers() {
-    let reg = registry();
-    let client = RuntimeClient::cpu().unwrap();
+fn handles_and_programs_are_cached_per_engine() {
+    let eng = engine();
     let mut rng = Rng::new(5);
 
-    let model = client.load(&reg, "laplacian_collapsed_exact_b4").unwrap();
-    let theta = glorot_theta(&model.meta, &mut rng);
-    let d = model.meta.dim;
+    let model = eng.operator("laplacian_collapsed_exact_b4").unwrap();
+    let again = eng.operator("laplacian_collapsed_exact_b4").unwrap();
+    assert_eq!(eng.stats().operators_loaded, 1, "one handle per name");
+    let theta = model.meta().glorot_theta(&mut rng);
+    let d = model.meta().dim;
     let mut xdata = vec![0.0f32; 4 * d];
     rng.fill_normal_f32(&mut xdata);
     let x = HostTensor::new(vec![4, d], xdata);
 
-    let via_host = model.run(&[theta.clone(), x.clone()]).unwrap();
-    let tb = model.stage(&theta).unwrap();
-    let xb = model.stage(&x).unwrap();
-    let via_dev = model.run_buffers(&[&tb, &xb]).unwrap();
-    for i in 0..2 {
-        assert_eq!(via_host[i].shape, via_dev[i].shape);
-        for (a, b) in via_host[i].data.iter().zip(&via_dev[i].data) {
-            assert!((a - b).abs() <= 1e-6);
-        }
-    }
+    // Both handle clones share one compiled program.
+    let via_a = model.eval().theta(&theta).x(&x).run().unwrap();
+    let via_b = again.eval().theta(&theta).x(&x).run().unwrap();
+    assert_eq!(via_a, via_b);
+    let stats = eng.stats();
+    assert_eq!((stats.program_cache_misses, stats.program_cache_hits), (1, 1), "{stats}");
+    assert_eq!(stats.programs_cached, 1, "{stats}");
 }

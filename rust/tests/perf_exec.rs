@@ -4,17 +4,16 @@
 //! pool-sharded VM serving vs single-threaded across every registry
 //! route — sharding must not change a single bit.
 
+use ctaylor::api::{shard_count, Engine};
 use ctaylor::bench::workload;
 use ctaylor::mlp::Mlp;
 use ctaylor::operators::OperatorSpec;
-use ctaylor::runtime::native::{self, ProgramCache};
-use ctaylor::runtime::{HostTensor, Registry};
+use ctaylor::runtime::Registry;
 use ctaylor::taylor::kernels;
 use ctaylor::taylor::program::{compile, ExecArena};
 use ctaylor::taylor::rewrite::collapse;
 use ctaylor::taylor::tensor::Tensor;
 use ctaylor::taylor::trace::{build_plan_jet_std, TAGGED_SLOTS};
-use ctaylor::util::pool::Pool;
 use ctaylor::util::prng::Rng;
 
 /// `[R, B, I] @ [I, O]` through the tiled kernel matches the naive
@@ -116,36 +115,32 @@ fn arena_retargets_between_programs() {
 
 /// Sharded serving equals single-threaded serving, bit for bit, on every
 /// (op, Taylor-method, mode) route the builtin registry serves — the
-/// per-row arithmetic is identical, only the scheduling differs.
+/// per-row arithmetic is identical, only the scheduling differs.  Each
+/// engine pins its own executor count and owns its program cache.
 #[test]
 fn sharded_serving_matches_single_threaded_for_every_preset() {
     let reg = Registry::builtin();
-    let single = Pool::new(0); // 1 executor: never shards
-    let multi = Pool::new(3); // 4 executors
+    let single = Engine::builder().registry(reg.clone()).threads(1).build().unwrap();
+    let multi = Engine::builder().registry(reg.clone()).threads(4).build().unwrap();
     let mut sharded_routes = 0usize;
     for op in ["laplacian", "weighted_laplacian", "helmholtz", "biharmonic"] {
         for method in ["standard", "collapsed"] {
             for mode in ["exact", "stochastic"] {
                 let metas = reg.select(op, method, mode);
-                let meta = *metas.last().expect("registry covers every route");
-                let inputs = workload::inputs_for(meta, 11);
-                let refs: Vec<&HostTensor> = inputs.iter().collect();
-                let a = native::execute_pooled(meta, &refs, &ProgramCache::new(), &single)
-                    .unwrap_or_else(|e| panic!("{}: single-threaded failed: {e:#}", meta.name));
-                let b = native::execute_pooled(meta, &refs, &ProgramCache::new(), &multi)
-                    .unwrap_or_else(|e| panic!("{}: sharded failed: {e:#}", meta.name));
-                assert_eq!(a.len(), b.len());
-                for (ta, tb) in a.iter().zip(&b) {
-                    assert_eq!(ta.shape, tb.shape, "{}", meta.name);
-                    for (va, vb) in ta.data.iter().zip(&tb.data) {
-                        assert!(
-                            (va - vb).abs() <= 1e-12,
-                            "{}: sharded {vb} vs single {va}",
-                            meta.name
-                        );
-                    }
-                }
-                if native::shard_count(meta.batch, multi.executors()) > 1 {
+                let meta = (*metas.last().expect("registry covers every route")).clone();
+                let w = workload::workload_for(&meta, 11);
+                let ha = single.operator(&meta.name).unwrap();
+                let hb = multi.operator(&meta.name).unwrap();
+                let a = w
+                    .request(&ha)
+                    .run()
+                    .unwrap_or_else(|e| panic!("{}: single-threaded failed: {e}", meta.name));
+                let b = w
+                    .request(&hb)
+                    .run()
+                    .unwrap_or_else(|e| panic!("{}: sharded failed: {e}", meta.name));
+                assert_eq!(a, b, "{}: sharded must equal single-threaded bitwise", meta.name);
+                if shard_count(meta.batch, 4) > 1 {
                     sharded_routes += 1;
                 }
             }
@@ -155,4 +150,6 @@ fn sharded_serving_matches_single_threaded_for_every_preset() {
         sharded_routes >= 4,
         "the largest exact batches must actually exercise sharding ({sharded_routes})"
     );
+    assert_eq!(single.stats().pool_executors, 1);
+    assert_eq!(multi.stats().pool_executors, 4);
 }
