@@ -1,0 +1,1044 @@
+//! The performance barometer: a curated, process-isolated benchmark matrix
+//! with a stable machine-readable record format and regression diffing.
+//!
+//! Modeled on rebar's METHODOLOGY: a small set of *curated* cells — not an
+//! exhaustive sweep — each pinned to a fixed operator, engine, network
+//! shape, batch and seed, so the same cell id always measures the same
+//! computation. The driver (`ctaylor bench barometer`) spawns the release
+//! binary once per cell (`ctaylor bench run --cell <id> --json`), which
+//! isolates allocator state, caches and JIT-warmed code paths between
+//! cells; within a process the cell runs `warmup` untimed iterations and
+//! then `iters` timed ones, and reports the median (with min/max and
+//! sample count) of the per-iteration wall-clock nanoseconds.
+//!
+//! # Cell ids
+//!
+//! A cell id encodes every knob of the measured computation:
+//!
+//! ```text
+//! <op>-d<dim>-w<w0>x<w1>x…-b<batch>[-s<samples>]-<engine>
+//! gemm-<m>x<k>x<n>-<ref|tiled>
+//! ```
+//!
+//! e.g. `laplacian-d16-w32x32x1-b8-vm-col` or
+//! `stochastic_laplacian-d16-w32x32x1-b4-s16-jet-col`. Engine tags:
+//! `nested` (first-order AD composed K times), `jet-std` / `jet-col`
+//! (the Taylor jet engine, standard vs collapsed propagation),
+//! `interp-col` (graph interpreter on the §C-collapsed trace), `vm-std` /
+//! `vm-col` (the buffer-planned VM on the standard vs collapsed trace)
+//! and `ref` / `tiled` for the raw GEMM kernels.
+//!
+//! # Record format (`ctaylor-barometer/1`)
+//!
+//! `ctaylor bench run --cell <id> --json` prints exactly one line: a JSON
+//! object with these fields (this is the per-cell record that snapshot
+//! files embed, and the format `ctaylor bench cmp` consumes):
+//!
+//! | field | meaning |
+//! |---|---|
+//! | `format` | the literal `"ctaylor-barometer/1"` |
+//! | `id` | the cell id (join key for `cmp`) |
+//! | `engine` | engine tag (redundant with the id, kept for filtering) |
+//! | `op` | operator name, `gemm` for kernel cells |
+//! | `dim` | input dimension D (0 for kernel cells) |
+//! | `widths` | MLP layer widths, or `[m, k, n]` for kernel cells |
+//! | `batch` | batch size B (0 for kernel cells) |
+//! | `samples` | stochastic sample count S (0 = exact route) |
+//! | `seed` | the PRNG seed, derived from the id (FNV-1a, masked to 31 bits) |
+//! | `warmup` | untimed iterations run before measuring |
+//! | `iters` | timed iterations |
+//! | `git_rev` | `GITHUB_SHA`, else `git rev-parse --short HEAD`, else `unknown` |
+//! | `wall_ns` | `{median, min, max, count}` over the timed iterations, in ns |
+//! | `proxies` | `{vectors, flops, mem_diff_bytes, mem_nondiff_bytes}` from the `count` model |
+//! | `env` | `{os, arch, threads, host}` fingerprint of the measuring machine |
+//!
+//! A snapshot file (`BENCH_barometer.json`) wraps the records:
+//! `{format, git_rev, created_unix, env, cells: [record, …]}`.
+//!
+//! # Comparing snapshots
+//!
+//! [`cmp_records`] joins two snapshots by cell `id` and reads exactly one
+//! number per cell: `wall_ns.median`. Cells whose median moved by more
+//! than the noise threshold classify as regressions (slower) or
+//! improvements (faster); ids present on only one side report as `added`
+//! or `retired` rather than failing the join, which is what lets the
+//! matrix evolve without breaking diffability. With a fail threshold set,
+//! the report's `failed` flag trips when any *regressed* cell slowed by at
+//! least that percentage.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::mlp::Mlp;
+use crate::nested;
+use crate::operators::{self, plan, OperatorSpec};
+use crate::operators::plan::OperatorPlan;
+use crate::taylor::jet::Collapse;
+use crate::taylor::kernels;
+use crate::taylor::rewrite;
+use crate::taylor::tensor::Tensor;
+use crate::taylor::trace::{build_plan_jet_std, TAGGED_SLOTS};
+use crate::taylor::{count, interp, program};
+use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
+
+use super::report::table;
+
+/// Version tag every record and snapshot carries; bump on any breaking
+/// change to the record format.
+pub const FORMAT: &str = "ctaylor-barometer/1";
+
+/// Version tag of the one-line `cmp` summary JSON.
+pub const CMP_FORMAT: &str = "ctaylor-barometer-cmp/1";
+
+/// Engines a matrix cell can run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// First-order AD nested K times (the paper's baseline).
+    Nested,
+    /// Taylor jet engine, standard propagation (1 + KR vectors).
+    JetStd,
+    /// Taylor jet engine, collapsed propagation (1 + (K-1)R + 1 vectors).
+    JetCol,
+    /// Reference graph interpreter on the §C-collapsed trace.
+    InterpCol,
+    /// Buffer-planned VM on the standard trace.
+    VmStd,
+    /// Buffer-planned VM on the §C-collapsed trace.
+    VmCol,
+    /// Naive triple-loop GEMM kernel (kernel cells only).
+    GemmRef,
+    /// Tiled packed GEMM kernel (kernel cells only).
+    Gemm,
+}
+
+impl EngineKind {
+    /// The id suffix / `engine` record field.
+    pub fn tag(self) -> &'static str {
+        match self {
+            EngineKind::Nested => "nested",
+            EngineKind::JetStd => "jet-std",
+            EngineKind::JetCol => "jet-col",
+            EngineKind::InterpCol => "interp-col",
+            EngineKind::VmStd => "vm-std",
+            EngineKind::VmCol => "vm-col",
+            EngineKind::GemmRef => "ref",
+            EngineKind::Gemm => "tiled",
+        }
+    }
+
+    /// The `count` cost-model method this engine propagates with.
+    pub fn method(self) -> &'static str {
+        match self {
+            EngineKind::Nested => "nested",
+            EngineKind::JetStd | EngineKind::VmStd => "standard",
+            EngineKind::JetCol | EngineKind::InterpCol | EngineKind::VmCol => "collapsed",
+            EngineKind::GemmRef | EngineKind::Gemm => "kernel",
+        }
+    }
+}
+
+/// One cell of the matrix: a fully pinned (operator × engine × network ×
+/// batch × samples) measurement with its warmup/iteration budget.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// Operator: `laplacian`, `weighted_laplacian`, `helmholtz`,
+    /// `biharmonic`, `stochastic_laplacian`, `stochastic_biharmonic`,
+    /// or `gemm` for kernel cells.
+    pub op: &'static str,
+    pub engine: EngineKind,
+    /// Input dimension D; 0 for kernel cells.
+    pub dim: usize,
+    /// MLP layer widths; `[m, k, n]` for kernel cells.
+    pub widths: Vec<usize>,
+    /// Batch size; 0 for kernel cells.
+    pub batch: usize,
+    /// Stochastic sample count; 0 on exact routes.
+    pub samples: usize,
+    /// Untimed iterations before measurement.
+    pub warmup: usize,
+    /// Timed iterations (median reported).
+    pub iters: usize,
+    /// Whether the cell is part of the reduced (CI) matrix.
+    pub reduced: bool,
+}
+
+impl Cell {
+    fn exact(op: &'static str, engine: EngineKind, dim: usize, widths: &[usize], batch: usize) -> Cell {
+        Cell {
+            op,
+            engine,
+            dim,
+            widths: widths.to_vec(),
+            batch,
+            samples: 0,
+            warmup: 3,
+            iters: 20,
+            reduced: false,
+        }
+    }
+
+    fn stochastic(
+        op: &'static str,
+        engine: EngineKind,
+        dim: usize,
+        widths: &[usize],
+        batch: usize,
+        samples: usize,
+    ) -> Cell {
+        Cell { samples, ..Cell::exact(op, engine, dim, widths, batch) }
+    }
+
+    fn gemm(engine: EngineKind, m: usize, k: usize, n: usize) -> Cell {
+        Cell { dim: 0, batch: 0, ..Cell::exact("gemm", engine, 0, &[m, k, n], 0) }
+    }
+
+    fn reduced(mut self) -> Cell {
+        self.reduced = true;
+        self
+    }
+
+    /// Heavier cells (nested biharmonic, big GEMMs) get a smaller budget.
+    fn heavy(mut self) -> Cell {
+        self.warmup = 1;
+        self.iters = 7;
+        self
+    }
+
+    /// The stable cell id — the join key of the record format.
+    pub fn id(&self) -> String {
+        let w = self
+            .widths
+            .iter()
+            .map(|x| x.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        if self.op == "gemm" {
+            return format!("gemm-{w}-{}", self.engine.tag());
+        }
+        let s = if self.samples > 0 { format!("-s{}", self.samples) } else { String::new() };
+        format!("{}-d{}-w{w}-b{}{s}-{}", self.op, self.dim, self.batch, self.engine.tag())
+    }
+}
+
+/// MLP widths of the fig1 configuration (D = 16 operators).
+const W_MLP: &[usize] = &[32, 32, 1];
+/// MLP widths of the biharmonic configuration (small D, quartic cost).
+const W_BIH: &[usize] = &[16, 16, 1];
+/// A deeper network, so depth scaling stays on the trajectory.
+const W_DEEP: &[usize] = &[64, 64, 64, 1];
+
+/// The full curated matrix. Order is presentation order; ids are the
+/// identity. Adding a cell is backwards-compatible (it reports as `added`
+/// in a cmp against an older snapshot); changing any knob of an existing
+/// cell requires retiring its id and adding a new one.
+pub fn full_matrix() -> Vec<Cell> {
+    use EngineKind::*;
+    let mut m = Vec::new();
+    // Exact Laplacian on the fig1 config: every engine at B = 8, the
+    // trajectory headliners again at B = 32.
+    for e in [Nested, JetStd, JetCol, InterpCol, VmStd, VmCol] {
+        let cell = Cell::exact("laplacian", e, 16, W_MLP, 8);
+        m.push(if matches!(e, Nested | JetCol | VmCol) { cell.reduced() } else { cell });
+    }
+    for e in [Nested, JetCol, VmCol] {
+        m.push(Cell::exact("laplacian", e, 16, W_MLP, 32));
+    }
+    // Weighted Laplacian and Helmholtz: the composed-spec routes.
+    m.push(Cell::exact("weighted_laplacian", JetCol, 16, W_MLP, 8));
+    m.push(Cell::exact("weighted_laplacian", VmCol, 16, W_MLP, 8).reduced());
+    m.push(Cell::exact("helmholtz", JetCol, 16, W_MLP, 8));
+    m.push(Cell::exact("helmholtz", VmStd, 16, W_MLP, 8));
+    m.push(Cell::exact("helmholtz", VmCol, 16, W_MLP, 8).reduced());
+    // Exact biharmonic (K = 4): the paper's strongest collapse claim.
+    for e in [Nested, JetStd, JetCol, VmStd, VmCol] {
+        let cell = Cell::exact("biharmonic", e, 4, W_BIH, 4);
+        m.push(if e == Nested { cell.heavy() } else { cell });
+    }
+    m.push(Cell::exact("biharmonic", Nested, 4, W_BIH, 8).heavy().reduced());
+    m.push(Cell::exact("biharmonic", VmCol, 4, W_BIH, 8).reduced());
+    // Stochastic routes (STDE-style Monte-Carlo estimators).
+    for s in [16, 64] {
+        for e in [JetStd, JetCol, VmCol] {
+            let cell = Cell::stochastic("stochastic_laplacian", e, 16, W_MLP, 4, s);
+            m.push(if s == 16 && e == VmCol { cell.reduced() } else { cell });
+        }
+    }
+    for e in [JetStd, JetCol, VmCol] {
+        let cell = Cell::stochastic("stochastic_biharmonic", e, 8, W_BIH, 4, 16);
+        m.push(if e == JetCol { cell.reduced() } else { cell });
+    }
+    // Depth scaling on the deep net.
+    m.push(Cell::exact("laplacian", Nested, 16, W_DEEP, 8).heavy());
+    m.push(Cell::exact("laplacian", JetCol, 16, W_DEEP, 8));
+    m.push(Cell::exact("laplacian", VmCol, 16, W_DEEP, 8).reduced());
+    // Raw GEMM kernels: the 256³ headline and an MLP-layer-like shape.
+    m.push(Cell::gemm(GemmRef, 256, 256, 256).heavy());
+    m.push(Cell::gemm(Gemm, 256, 256, 256).heavy().reduced());
+    m.push(Cell::gemm(GemmRef, 4096, 32, 1));
+    m.push(Cell::gemm(Gemm, 4096, 32, 1));
+    m
+}
+
+/// The reduced matrix the CI barometer job runs: the `reduced`-flagged
+/// subset of [`full_matrix`].
+pub fn reduced_matrix() -> Vec<Cell> {
+    full_matrix().into_iter().filter(|c| c.reduced).collect()
+}
+
+/// Look a cell up by its id (searching the full matrix).
+pub fn find_cell(id: &str) -> Option<Cell> {
+    full_matrix().into_iter().find(|c| c.id() == id)
+}
+
+/// Deterministic per-cell seed: FNV-1a over the id, masked to 31 bits so
+/// the value survives the f64 round-trip of the JSON record exactly.
+pub fn cell_seed(id: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in id.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h & 0x7fff_ffff
+}
+
+/// `GITHUB_SHA` in CI, else the working tree's short HEAD, else `unknown`.
+pub fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// The `env` fingerprint recorded with every cell: enough to tell two
+/// machines' snapshots apart, nothing personally identifying. `host`
+/// comes from `CTAYLOR_BENCH_HOST` when set (CI sets it to the runner
+/// label), `threads` honors `CTAYLOR_THREADS`.
+pub fn env_fingerprint() -> Json {
+    let threads = std::env::var("CTAYLOR_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    let host = std::env::var("CTAYLOR_BENCH_HOST").unwrap_or_else(|_| "unknown".into());
+    Json::obj(vec![
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("host", Json::str(&host)),
+        ("os", Json::str(std::env::consts::OS)),
+        ("threads", Json::num(threads as f64)),
+    ])
+}
+
+fn measure<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> Vec<u64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let iters = iters.max(1);
+    let mut ns = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        ns.push(t0.elapsed().as_nanos() as u64);
+    }
+    ns
+}
+
+fn ns_stats(samples: &mut [u64]) -> (u64, u64, u64, usize) {
+    samples.sort_unstable();
+    let n = samples.len();
+    (samples[n / 2], samples[0], samples[n - 1], n)
+}
+
+fn theta_len(dim: usize, widths: &[usize]) -> usize {
+    let mut prev = dim;
+    let mut total = 0;
+    for &w in widths {
+        total += prev * w + w;
+        prev = w;
+    }
+    total
+}
+
+/// The analytic FLOP/memory proxies for a cell, from the paper's
+/// propagated-vector cost model (`taylor::count`). Kernel cells use the
+/// exact GEMM arithmetic instead.
+pub fn cell_proxy(cell: &Cell) -> count::CostProxy {
+    if cell.op == "gemm" {
+        let (m, k, n) = (cell.widths[0], cell.widths[1], cell.widths[2]);
+        return count::CostProxy {
+            vectors: 0,
+            flops: 2.0 * (m * k * n) as f64,
+            mem_diff_bytes: ((m * k + k * n + m * n) * 8) as f64,
+            mem_nondiff_bytes: ((m * k + k * n + m * n) * 8) as f64,
+        };
+    }
+    let (op, mode) = match cell.op.strip_prefix("stochastic_") {
+        Some(base) => (base, "stochastic"),
+        None => (cell.op, "exact"),
+    };
+    count::route_proxy(
+        op,
+        cell.engine.method(),
+        mode,
+        cell.dim,
+        cell.samples,
+        count::NetShape {
+            batch: cell.batch,
+            widths: &cell.widths,
+            theta_len: theta_len(cell.dim, &cell.widths),
+        },
+    )
+}
+
+fn spec_for(cell: &Cell, sto_dirs: Option<&Tensor>) -> Result<OperatorSpec> {
+    Ok(match cell.op {
+        "laplacian" => OperatorSpec::laplacian(cell.dim),
+        "weighted_laplacian" => OperatorSpec::weighted_laplacian(&operators::basis(cell.dim)),
+        "helmholtz" => OperatorSpec::helmholtz_preset(cell.dim),
+        "biharmonic" => OperatorSpec::biharmonic(cell.dim),
+        "stochastic_laplacian" => {
+            OperatorSpec::stochastic_laplacian(sto_dirs.context("stochastic cell without dirs")?)
+        }
+        "stochastic_biharmonic" => {
+            OperatorSpec::stochastic_biharmonic(sto_dirs.context("stochastic cell without dirs")?)
+        }
+        other => bail!("no operator spec for cell op {other:?}"),
+    })
+}
+
+/// Graph/VM outputs must agree with the jet-engine oracle before anything
+/// is timed: a fast wrong answer is not a benchmark.
+fn check_against_oracle(cell: &Cell, mlp: &Mlp, x: &Tensor, oplan: &OperatorPlan, out: &[Tensor]) -> Result<()> {
+    let (f0, op) = plan::apply(mlp, x, oplan, Collapse::Collapsed);
+    let scale = op.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    ensure!(
+        out[0].max_abs_diff(&f0) < 1e-8,
+        "cell {}: f(x_0) deviates from the jet oracle",
+        cell.id()
+    );
+    ensure!(
+        out[1].max_abs_diff(&op) < 1e-8 * scale,
+        "cell {}: operator output deviates from the jet oracle",
+        cell.id()
+    );
+    Ok(())
+}
+
+fn run_gemm(cell: &Cell, seed: u64) -> Result<Vec<u64>> {
+    let (m, k, n) = (cell.widths[0], cell.widths[1], cell.widths[2]);
+    let mut rng = Rng::new(seed);
+    let mut a = vec![0.0f64; m * k];
+    let mut b = vec![0.0f64; k * n];
+    for v in a.iter_mut() {
+        *v = rng.normal();
+    }
+    for v in b.iter_mut() {
+        *v = rng.normal();
+    }
+    let mut c = vec![0.0f64; m * n];
+    let reference = cell.engine == EngineKind::GemmRef;
+    ensure!(
+        reference || cell.engine == EngineKind::Gemm,
+        "cell {}: op gemm requires a kernel engine",
+        cell.id()
+    );
+    Ok(measure(
+        || {
+            if reference {
+                kernels::gemm_reference(m, k, n, &a, &b, &mut c);
+            } else {
+                kernels::gemm(m, k, n, &a, &b, &mut c);
+            }
+            std::hint::black_box(&c);
+        },
+        cell.warmup,
+        cell.iters,
+    ))
+}
+
+fn run_measured(cell: &Cell, seed: u64) -> Result<Vec<u64>> {
+    use EngineKind::*;
+    if cell.op == "gemm" {
+        return run_gemm(cell, seed);
+    }
+    let mut rng = Rng::new(seed);
+    let mlp = Mlp::init(&mut rng, cell.dim, &cell.widths, cell.batch);
+    let x = mlp.random_input(&mut rng);
+    let sto_dirs = (cell.samples > 0).then(|| {
+        let mut d = vec![0.0f64; cell.samples * cell.dim];
+        for v in d.iter_mut() {
+            *v = rng.rademacher();
+        }
+        Tensor::new(vec![cell.samples, cell.dim], d)
+    });
+    let ns = match cell.engine {
+        Nested => match cell.op {
+            "laplacian" => measure(
+                || {
+                    std::hint::black_box(nested::laplacian(&mlp, &x, None, 1.0));
+                },
+                cell.warmup,
+                cell.iters,
+            ),
+            "biharmonic" => measure(
+                || {
+                    std::hint::black_box(nested::biharmonic_tvp(&mlp, &x));
+                },
+                cell.warmup,
+                cell.iters,
+            ),
+            other => bail!("the matrix has no nested-AD implementation for {other:?}"),
+        },
+        JetStd | JetCol => {
+            let oplan = spec_for(cell, sto_dirs.as_ref())?.compile();
+            let mode = if cell.engine == JetStd { Collapse::Standard } else { Collapse::Collapsed };
+            measure(
+                || {
+                    std::hint::black_box(plan::apply(&mlp, &x, &oplan, mode));
+                },
+                cell.warmup,
+                cell.iters,
+            )
+        }
+        InterpCol => {
+            let oplan = spec_for(cell, sto_dirs.as_ref())?.compile();
+            let g = rewrite::collapse(
+                &build_plan_jet_std(&mlp, &oplan, cell.batch),
+                TAGGED_SLOTS,
+                oplan.dirs.shape[0],
+            );
+            let inputs = [x.clone(), oplan.dirs.broadcast_rows(cell.batch)];
+            check_against_oracle(cell, &mlp, &x, &oplan, &interp::eval(&g, &inputs)?)?;
+            measure(
+                || {
+                    std::hint::black_box(interp::eval(&g, &inputs).unwrap());
+                },
+                cell.warmup,
+                cell.iters,
+            )
+        }
+        VmStd | VmCol => {
+            let oplan = spec_for(cell, sto_dirs.as_ref())?.compile();
+            let g_std = build_plan_jet_std(&mlp, &oplan, cell.batch);
+            let g = if cell.engine == VmCol {
+                rewrite::collapse(&g_std, TAGGED_SLOTS, oplan.dirs.shape[0])
+            } else {
+                g_std
+            };
+            let num_dirs = oplan.dirs.shape[0];
+            let shapes = vec![vec![cell.batch, cell.dim], vec![num_dirs, cell.batch, cell.dim]];
+            let prog = program::compile(&g, &shapes)?;
+            let inputs = [x.clone(), oplan.dirs.broadcast_rows(cell.batch)];
+            check_against_oracle(cell, &mlp, &x, &oplan, &prog.execute(&inputs)?)?;
+            measure(
+                || {
+                    std::hint::black_box(prog.execute(&inputs).unwrap());
+                },
+                cell.warmup,
+                cell.iters,
+            )
+        }
+        GemmRef | Gemm => bail!("cell {}: kernel engines require the gemm op", cell.id()),
+    };
+    Ok(ns)
+}
+
+/// Run one cell in this process and return its record (one JSON object in
+/// the `ctaylor-barometer/1` format documented at module level).
+pub fn run_cell(cell: &Cell) -> Result<Json> {
+    let id = cell.id();
+    let seed = cell_seed(&id);
+    let mut ns = run_measured(cell, seed)?;
+    let proxy = cell_proxy(cell);
+    let (median, min, max, n) = ns_stats(&mut ns);
+    Ok(Json::obj(vec![
+        ("format", Json::str(FORMAT)),
+        ("id", Json::str(&id)),
+        ("engine", Json::str(cell.engine.tag())),
+        ("op", Json::str(cell.op)),
+        ("dim", Json::num(cell.dim as f64)),
+        ("widths", Json::arr(cell.widths.iter().map(|w| Json::num(*w as f64)))),
+        ("batch", Json::num(cell.batch as f64)),
+        ("samples", Json::num(cell.samples as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("warmup", Json::num(cell.warmup as f64)),
+        ("iters", Json::num(cell.iters as f64)),
+        ("git_rev", Json::str(&git_rev())),
+        (
+            "wall_ns",
+            Json::obj(vec![
+                ("count", Json::num(n as f64)),
+                ("max", Json::num(max as f64)),
+                ("median", Json::num(median as f64)),
+                ("min", Json::num(min as f64)),
+            ]),
+        ),
+        (
+            "proxies",
+            Json::obj(vec![
+                ("flops", Json::num(proxy.flops)),
+                ("mem_diff_bytes", Json::num(proxy.mem_diff_bytes)),
+                ("mem_nondiff_bytes", Json::num(proxy.mem_nondiff_bytes)),
+                ("vectors", Json::num(proxy.vectors as f64)),
+            ]),
+        ),
+        ("env", env_fingerprint()),
+    ]))
+}
+
+/// One human-readable line for a record (the non-`--json` CLI output).
+pub fn describe_record(record: &Json) -> String {
+    let id = record.get_str("id").unwrap_or("?");
+    let wall = record.get("wall_ns");
+    let ms = |k: &str| wall.and_then(|w| w.get_f64(k)).unwrap_or(0.0) / 1e6;
+    format!(
+        "cell {id}: median {:.3}ms (min {:.3}ms, max {:.3}ms, {} iters)",
+        ms("median"),
+        ms("min"),
+        ms("max"),
+        wall.and_then(|w| w.get_usize("count")).unwrap_or(0),
+    )
+}
+
+/// Spawn the release binary for one cell — process isolation per the
+/// methodology — and parse the record off its last stdout line.
+pub fn spawn_cell(bin: &Path, id: &str, warmup: Option<usize>, iters: Option<usize>) -> Result<Json> {
+    let mut cmd = std::process::Command::new(bin);
+    cmd.args(["bench", "run", "--cell", id, "--json"]);
+    if let Some(w) = warmup {
+        cmd.args(["--warmup", &w.to_string()]);
+    }
+    if let Some(i) = iters {
+        cmd.args(["--iters", &i.to_string()]);
+    }
+    let out = cmd
+        .output()
+        .with_context(|| format!("spawning {} bench run --cell {id}", bin.display()))?;
+    ensure!(
+        out.status.success(),
+        "cell {id} failed ({}): {}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout
+        .lines()
+        .rev()
+        .find(|l| !l.trim().is_empty())
+        .with_context(|| format!("cell {id} printed no record"))?;
+    json::parse(line).map_err(|e| anyhow!("cell {id}: unparseable record: {e}"))
+}
+
+/// Wrap per-cell records into a snapshot file body.
+pub fn snapshot(records: Vec<Json>) -> Json {
+    let created = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    Json::obj(vec![
+        ("format", Json::str(FORMAT)),
+        ("git_rev", Json::str(&git_rev())),
+        ("created_unix", Json::num(created as f64)),
+        ("env", env_fingerprint()),
+        ("cells", Json::Arr(records)),
+    ])
+}
+
+/// Read a snapshot file and check its `format` tag.
+pub fn load_snapshot<P: AsRef<Path>>(path: P) -> Result<Json> {
+    let path = path.as_ref();
+    let v = super::report::load_json(path)?;
+    let fmt = v.get_str("format").unwrap_or("");
+    ensure!(
+        fmt == FORMAT,
+        "{} has format {fmt:?}, expected {FORMAT:?}",
+        path.display()
+    );
+    Ok(v)
+}
+
+/// Thresholds for [`cmp_records`].
+#[derive(Debug, Clone, Copy)]
+pub struct CmpConfig {
+    /// Noise threshold in percent: |Δ| ≤ threshold classifies as unchanged.
+    pub threshold_pct: f64,
+    /// When set, the report fails if any regressed cell slowed by at
+    /// least this percentage (use a value ≥ `threshold_pct`).
+    pub fail_on_regress_pct: Option<f64>,
+}
+
+/// One joined cell: old/new median wall-ns and the percent change.
+#[derive(Debug, Clone)]
+pub struct CellDelta {
+    pub id: String,
+    pub old_ns: f64,
+    pub new_ns: f64,
+    /// `(new/old - 1) * 100`; positive = slower.
+    pub pct: f64,
+}
+
+/// The result of diffing two snapshots.
+#[derive(Debug, Clone)]
+pub struct CmpReport {
+    pub threshold_pct: f64,
+    pub fail_pct: Option<f64>,
+    /// Slower beyond the threshold, worst first.
+    pub regressions: Vec<CellDelta>,
+    /// Faster beyond the threshold, best first.
+    pub improvements: Vec<CellDelta>,
+    /// Within the noise threshold.
+    pub unchanged: Vec<CellDelta>,
+    /// Cell ids only in the new snapshot.
+    pub added: Vec<String>,
+    /// Cell ids only in the old snapshot.
+    pub retired: Vec<String>,
+    /// True iff `fail_pct` is set and some regression reaches it.
+    pub failed: bool,
+}
+
+fn cells_by_id(snap: &Json) -> Result<BTreeMap<String, f64>> {
+    let cells = snap
+        .get("cells")
+        .and_then(Json::as_arr)
+        .context("snapshot has no `cells` array")?;
+    let mut map = BTreeMap::new();
+    for c in cells {
+        let id = c.get_str("id").context("cell record without an `id`")?;
+        let median = c
+            .get("wall_ns")
+            .and_then(|w| w.get_f64("median"))
+            .with_context(|| format!("cell {id} has no wall_ns.median"))?;
+        map.insert(id.to_string(), median);
+    }
+    Ok(map)
+}
+
+/// Join two snapshots by cell id on `wall_ns.median` and classify every
+/// shared cell against the noise threshold. Ids on one side only are
+/// reported (`added` / `retired`), never an error — the rule that lets
+/// the matrix evolve without breaking old snapshots.
+pub fn cmp_records(old: &Json, new: &Json, cfg: &CmpConfig) -> Result<CmpReport> {
+    let old_cells = cells_by_id(old)?;
+    let new_cells = cells_by_id(new)?;
+    let mut regressions = Vec::new();
+    let mut improvements = Vec::new();
+    let mut unchanged = Vec::new();
+    let mut retired = Vec::new();
+    for (id, &old_ns) in &old_cells {
+        let Some(&new_ns) = new_cells.get(id) else {
+            retired.push(id.clone());
+            continue;
+        };
+        let pct = if old_ns > 0.0 { (new_ns / old_ns - 1.0) * 100.0 } else { 0.0 };
+        let d = CellDelta { id: id.clone(), old_ns, new_ns, pct };
+        if pct > cfg.threshold_pct {
+            regressions.push(d);
+        } else if pct < -cfg.threshold_pct {
+            improvements.push(d);
+        } else {
+            unchanged.push(d);
+        }
+    }
+    let added: Vec<String> =
+        new_cells.keys().filter(|k| !old_cells.contains_key(*k)).cloned().collect();
+    regressions.sort_by(|a, b| b.pct.partial_cmp(&a.pct).unwrap());
+    improvements.sort_by(|a, b| a.pct.partial_cmp(&b.pct).unwrap());
+    let failed =
+        cfg.fail_on_regress_pct.is_some_and(|p| regressions.iter().any(|d| d.pct >= p));
+    Ok(CmpReport {
+        threshold_pct: cfg.threshold_pct,
+        fail_pct: cfg.fail_on_regress_pct,
+        regressions,
+        improvements,
+        unchanged,
+        added,
+        retired,
+        failed,
+    })
+}
+
+impl CmpReport {
+    /// The human-readable regression report.
+    pub fn render_text(&self) -> String {
+        let row = |d: &CellDelta, status: &str| {
+            vec![
+                d.id.clone(),
+                format!("{:.3}", d.old_ns / 1e6),
+                format!("{:.3}", d.new_ns / 1e6),
+                format!("{:+.1}%", d.pct),
+                status.to_string(),
+            ]
+        };
+        let mut rows = Vec::new();
+        for d in &self.regressions {
+            rows.push(row(d, "REGRESSED"));
+        }
+        for d in &self.improvements {
+            rows.push(row(d, "improved"));
+        }
+        for d in &self.unchanged {
+            rows.push(row(d, "~"));
+        }
+        let mut out = String::from("# barometer cmp — median wall-clock per cell\n\n");
+        out.push_str(&table(&["cell", "old [ms]", "new [ms]", "delta", "status"], &rows));
+        for id in &self.added {
+            out.push_str(&format!("added:   {id}\n"));
+        }
+        for id in &self.retired {
+            out.push_str(&format!("retired: {id}\n"));
+        }
+        out.push_str(&format!(
+            "\n{} regressed, {} improved, {} unchanged within the ±{}% noise threshold\n",
+            self.regressions.len(),
+            self.improvements.len(),
+            self.unchanged.len(),
+            self.threshold_pct,
+        ));
+        if let Some(p) = self.fail_pct {
+            out.push_str(&format!(
+                "fail-on-regress at +{p}%: {}\n",
+                if self.failed { "FAIL" } else { "ok" }
+            ));
+        }
+        out
+    }
+
+    /// The single-line machine summary (`ctaylor-barometer-cmp/1`): the
+    /// last line `ctaylor bench cmp` prints, naming every regressed and
+    /// improved cell with old/new medians and the percent change.
+    pub fn summary_json(&self) -> Json {
+        let deltas = |v: &[CellDelta]| {
+            Json::arr(v.iter().map(|d| {
+                Json::obj(vec![
+                    ("id", Json::str(&d.id)),
+                    ("new_ns", Json::num(d.new_ns)),
+                    ("old_ns", Json::num(d.old_ns)),
+                    ("pct", Json::num((d.pct * 100.0).round() / 100.0)),
+                ])
+            }))
+        };
+        Json::obj(vec![
+            ("format", Json::str(CMP_FORMAT)),
+            ("threshold_pct", Json::num(self.threshold_pct)),
+            ("fail", Json::Bool(self.failed)),
+            ("regressions", deltas(&self.regressions)),
+            ("improvements", deltas(&self.improvements)),
+            ("unchanged", Json::num(self.unchanged.len() as f64)),
+            ("added", Json::arr(self.added.iter().map(|s| Json::str(s)))),
+            ("retired", Json::arr(self.retired.iter().map(|s| Json::str(s)))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_ids_are_stable() {
+        // Record-format stability: these exact strings are join keys in
+        // committed snapshots; changing them breaks the trajectory.
+        let c = Cell::exact("laplacian", EngineKind::VmCol, 16, W_MLP, 8);
+        assert_eq!(c.id(), "laplacian-d16-w32x32x1-b8-vm-col");
+        let s = Cell::stochastic("stochastic_laplacian", EngineKind::JetCol, 16, W_MLP, 4, 16);
+        assert_eq!(s.id(), "stochastic_laplacian-d16-w32x32x1-b4-s16-jet-col");
+        let g = Cell::gemm(EngineKind::Gemm, 256, 256, 256);
+        assert_eq!(g.id(), "gemm-256x256x256-tiled");
+    }
+
+    #[test]
+    fn matrix_ids_are_unique_and_findable() {
+        let m = full_matrix();
+        let ids: std::collections::BTreeSet<String> = m.iter().map(Cell::id).collect();
+        assert_eq!(ids.len(), m.len(), "duplicate cell ids in the matrix");
+        for id in &ids {
+            assert_eq!(find_cell(id).map(|c| c.id()).as_deref(), Some(id.as_str()));
+        }
+    }
+
+    #[test]
+    fn reduced_matrix_is_a_subset() {
+        let full: std::collections::BTreeSet<String> = full_matrix().iter().map(Cell::id).collect();
+        let reduced = reduced_matrix();
+        assert!(reduced.len() >= 8, "reduced matrix too small: {}", reduced.len());
+        assert!(reduced.len() < full.len());
+        for c in &reduced {
+            assert!(full.contains(&c.id()));
+        }
+    }
+
+    #[test]
+    fn seeds_are_deterministic_and_distinct() {
+        let a = cell_seed("laplacian-d16-w32x32x1-b8-vm-col");
+        assert_eq!(a, cell_seed("laplacian-d16-w32x32x1-b8-vm-col"));
+        assert_ne!(a, cell_seed("laplacian-d16-w32x32x1-b8-jet-col"));
+        assert!(a <= 0x7fff_ffff);
+    }
+
+    #[test]
+    fn proxies_follow_the_count_model() {
+        let std_cell = Cell::exact("laplacian", EngineKind::VmStd, 16, W_MLP, 8);
+        let col_cell = Cell::exact("laplacian", EngineKind::VmCol, 16, W_MLP, 8);
+        let p_std = cell_proxy(&std_cell);
+        let p_col = cell_proxy(&col_cell);
+        assert_eq!(p_std.vectors, count::laplacian_standard(16));
+        assert_eq!(p_col.vectors, count::laplacian_collapsed(16));
+        assert!(p_col.flops < p_std.flops);
+        let g = cell_proxy(&Cell::gemm(EngineKind::Gemm, 4, 5, 6));
+        assert_eq!(g.flops, 240.0);
+        assert_eq!(g.vectors, 0);
+    }
+
+    fn tiny(op: &'static str, engine: EngineKind, dim: usize) -> Cell {
+        Cell {
+            warmup: 0,
+            iters: 2,
+            ..Cell::exact(op, engine, dim, &[8, 1], 2)
+        }
+    }
+
+    #[test]
+    fn run_cell_produces_a_complete_record() {
+        let record = run_cell(&tiny("laplacian", EngineKind::JetCol, 4)).unwrap();
+        assert_eq!(record.get_str("format"), Some(FORMAT));
+        assert_eq!(record.get_str("id"), Some("laplacian-d4-w8x1-b2-jet-col"));
+        assert_eq!(record.get_usize("samples"), Some(0));
+        let wall = record.get("wall_ns").unwrap();
+        assert_eq!(wall.get_usize("count"), Some(2));
+        assert!(wall.get_f64("median").unwrap() > 0.0);
+        assert!(wall.get_f64("min").unwrap() <= wall.get_f64("max").unwrap());
+        assert!(record.get("proxies").unwrap().get_f64("flops").unwrap() > 0.0);
+        assert!(record.get("env").unwrap().get_str("os").is_some());
+        // The record is the single-line wire format: it must round-trip.
+        let line = json::to_string(&record);
+        assert!(!line.contains('\n'));
+        assert_eq!(json::parse(&line).unwrap(), record);
+    }
+
+    #[test]
+    fn run_cell_covers_every_engine_family() {
+        // One tiny cell per engine family keeps the full dispatch tested
+        // without a release-build benchmark run.
+        for engine in [EngineKind::Nested, EngineKind::VmStd, EngineKind::VmCol, EngineKind::InterpCol] {
+            let r = run_cell(&tiny("laplacian", engine, 4)).unwrap();
+            assert!(r.get("wall_ns").unwrap().get_f64("median").unwrap() > 0.0, "{engine:?}");
+        }
+        let mut g = Cell::gemm(EngineKind::Gemm, 8, 8, 8);
+        g.warmup = 0;
+        g.iters = 2;
+        assert!(run_cell(&g).is_ok());
+        let sto = Cell {
+            warmup: 0,
+            iters: 2,
+            ..Cell::stochastic("stochastic_laplacian", EngineKind::VmCol, 4, &[8, 1], 2, 4)
+        };
+        assert!(run_cell(&sto).is_ok());
+    }
+
+    fn snap(cells: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(FORMAT)),
+            ("git_rev", Json::str("test")),
+            ("created_unix", Json::num(0.0)),
+            ("env", env_fingerprint()),
+            (
+                "cells",
+                Json::arr(cells.iter().map(|(id, ns)| {
+                    Json::obj(vec![
+                        ("id", Json::str(id)),
+                        ("wall_ns", Json::obj(vec![("median", Json::num(*ns))])),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    #[test]
+    fn cmp_classifies_against_the_threshold() {
+        let old = snap(&[("a", 1000.0), ("b", 1000.0), ("c", 1000.0), ("gone", 5.0)]);
+        let new = snap(&[("a", 1500.0), ("b", 600.0), ("c", 1030.0), ("fresh", 7.0)]);
+        let cfg = CmpConfig { threshold_pct: 5.0, fail_on_regress_pct: None };
+        let rep = cmp_records(&old, &new, &cfg).unwrap();
+        assert_eq!(rep.regressions.len(), 1);
+        assert_eq!(rep.regressions[0].id, "a");
+        assert!((rep.regressions[0].pct - 50.0).abs() < 1e-9);
+        assert_eq!(rep.improvements.len(), 1);
+        assert_eq!(rep.improvements[0].id, "b");
+        assert_eq!(rep.unchanged.len(), 1);
+        assert_eq!(rep.added, vec!["fresh".to_string()]);
+        assert_eq!(rep.retired, vec!["gone".to_string()]);
+        assert!(!rep.failed);
+    }
+
+    #[test]
+    fn fail_on_regress_trips_at_its_own_threshold() {
+        let old = snap(&[("a", 1000.0), ("b", 1000.0)]);
+        let new = snap(&[("a", 1080.0), ("b", 1000.0)]);
+        let lenient =
+            cmp_records(&old, &new, &CmpConfig { threshold_pct: 5.0, fail_on_regress_pct: Some(10.0) })
+                .unwrap();
+        assert_eq!(lenient.regressions.len(), 1);
+        assert!(!lenient.failed, "8% regression must not trip a 10% gate");
+        let strict =
+            cmp_records(&old, &new, &CmpConfig { threshold_pct: 5.0, fail_on_regress_pct: Some(8.0) })
+                .unwrap();
+        assert!(strict.failed);
+    }
+
+    #[test]
+    fn summary_json_names_the_regressed_cells_on_one_line() {
+        let old = snap(&[("slow-cell", 1000.0)]);
+        let new = snap(&[("slow-cell", 2000.0)]);
+        let rep = cmp_records(
+            &old,
+            &new,
+            &CmpConfig { threshold_pct: 5.0, fail_on_regress_pct: Some(50.0) },
+        )
+        .unwrap();
+        let line = json::to_string(&rep.summary_json());
+        assert!(!line.contains('\n'));
+        let parsed = json::parse(&line).unwrap();
+        assert_eq!(parsed.get_str("format"), Some(CMP_FORMAT));
+        assert_eq!(parsed.get("fail"), Some(&Json::Bool(true)));
+        let regs = parsed.get("regressions").unwrap().as_arr().unwrap();
+        assert_eq!(regs[0].get_str("id"), Some("slow-cell"));
+        assert!((regs[0].get_f64("pct").unwrap() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cmp_rejects_a_malformed_snapshot() {
+        let bad = Json::obj(vec![("format", Json::str(FORMAT))]);
+        let good = snap(&[("a", 1.0)]);
+        let cfg = CmpConfig { threshold_pct: 5.0, fail_on_regress_pct: None };
+        assert!(cmp_records(&bad, &good, &cfg).is_err());
+    }
+
+    #[test]
+    fn render_text_reports_every_bucket() {
+        let old = snap(&[("a", 1000.0), ("b", 1000.0), ("gone", 5.0)]);
+        let new = snap(&[("a", 2000.0), ("b", 1000.0), ("fresh", 7.0)]);
+        let rep = cmp_records(
+            &old,
+            &new,
+            &CmpConfig { threshold_pct: 5.0, fail_on_regress_pct: Some(10.0) },
+        )
+        .unwrap();
+        let text = rep.render_text();
+        assert!(text.contains("REGRESSED"));
+        assert!(text.contains("added:   fresh"));
+        assert!(text.contains("retired: gone"));
+        assert!(text.contains("FAIL"));
+    }
+}

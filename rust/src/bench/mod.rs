@@ -6,6 +6,7 @@
 //! cite them.  Absolute numbers differ from the paper's RTX 6000; the
 //! claims under test are the *ratios* (who wins, by what factor).
 
+pub mod barometer;
 pub mod report;
 pub mod sweep;
 pub mod workload;
@@ -724,10 +725,7 @@ pub fn run_smoke(registry: &Registry, reps: usize) -> Result<String> {
     out.push('\n');
     out.push_str(&run_thread_scaling(registry, reps.max(3))?);
     let dir = results_dir();
-    let load = |name: &str| -> Result<Json> {
-        let text = std::fs::read_to_string(dir.join(format!("{name}.json")))?;
-        crate::util::json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))
-    };
+    let load = |name: &str| report::load_json(&dir.join(format!("{name}.json")));
     save_json(
         &dir,
         "smoke",

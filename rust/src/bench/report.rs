@@ -55,6 +55,15 @@ pub fn save_json(dir: &Path, name: &str, value: &Json) -> Result<()> {
     Ok(())
 }
 
+/// Read and parse a JSON file (the inverse of [`save_json`]); used by the
+/// smoke bench to merge section reports and by the barometer to load
+/// snapshots.
+pub fn load_json(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+}
+
 /// Persist a rendered text section alongside the JSON.
 pub fn save_text(dir: &Path, name: &str, text: &str) -> Result<()> {
     std::fs::create_dir_all(dir)?;
@@ -94,5 +103,13 @@ mod tests {
     #[test]
     fn ratio_format_matches_paper_style() {
         assert_eq!(with_ratio(0.33, 0.61), "0.330 (0.54x)");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("ctaylor-report-roundtrip");
+        let v = jobj(&[("a", 1.0), ("b", 2.5)]);
+        save_json(&dir, "roundtrip", &v).unwrap();
+        assert_eq!(load_json(&dir.join("roundtrip.json")).unwrap(), v);
     }
 }

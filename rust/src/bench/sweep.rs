@@ -151,21 +151,19 @@ fn graph_proxy(meta: &ArtifactMeta) -> Option<(f64, f64, f64)> {
 
 /// Analytic stand-in for the HLO proxies when an artifact ships no HLO
 /// text (the builtin preset): the paper's propagated-vector cost model
-/// (`taylor::count::route_vectors`) times the network's activation
-/// footprint.  Slope *ratios* between methods — the claims the tables
-/// test — match the table-F2 Δ-vector theory by construction; absolute
-/// bytes/FLOPs are a model, not a measurement.
+/// (`taylor::count::route_proxy`) times the network's activation
+/// footprint — the same model the barometer records, so sweep tables and
+/// barometer cells report identical proxies for identical routes.
 fn analytic_proxy(meta: &ArtifactMeta) -> (f64, f64, f64) {
-    let vecs =
-        count::route_vectors(&meta.op, &meta.method, &meta.mode, meta.dim, meta.samples) as f64;
-    let batch = meta.batch.max(1) as f64;
-    let widths_sum: usize = meta.widths.iter().sum();
-    let max_width = meta.widths.iter().copied().max().unwrap_or(1);
-    let bytes = 4.0; // f32 activations
-    let mem_diff = vecs * batch * widths_sum as f64 * bytes;
-    let mem_nondiff = vecs * batch * 2.0 * max_width as f64 * bytes; // two live layers
-    let flops = vecs * batch * 2.0 * meta.theta_len as f64;
-    (mem_diff, mem_nondiff, flops)
+    let p = count::route_proxy(
+        &meta.op,
+        &meta.method,
+        &meta.mode,
+        meta.dim,
+        meta.samples,
+        count::NetShape { batch: meta.batch, widths: &meta.widths, theta_len: meta.theta_len },
+    );
+    (p.mem_diff_bytes, p.mem_nondiff_bytes, p.flops)
 }
 
 /// Measure one family through the public `Engine` surface.  `reps` timed

@@ -10,6 +10,10 @@
 //! ctaylor eval --op laplacian --method collapsed [--n 8]
 //! ctaylor bench [--which fig1|table1|f2|g3|native|graph|kernels|threads|smoke|coordinator|all]
 //!               [--reps N]
+//! ctaylor bench run --cell <id> [--json] [--warmup N] [--iters N]
+//! ctaylor bench barometer [--matrix full|reduced] [--list] [--out FILE]
+//!                         [--warmup N] [--iters N]
+//! ctaylor bench cmp OLD.json NEW.json [--threshold PCT] [--fail-on-regress PCT]
 //! ctaylor serve-demo [--requests N]    # coordinator under load
 //! ```
 
@@ -17,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use ctaylor::api::Engine;
 use ctaylor::bench;
+use ctaylor::bench::barometer;
 use ctaylor::coordinator::{RouteKey, Service, ServiceConfig};
 use ctaylor::hlo;
 use ctaylor::operators::interpolation::{compositions, gamma};
@@ -25,11 +30,12 @@ use ctaylor::operators::OperatorSpec;
 use ctaylor::runtime::{HostTensor, Registry};
 use ctaylor::taylor::count;
 use ctaylor::util::cli::Args;
+use ctaylor::util::json;
 use ctaylor::util::prng::Rng;
 use ctaylor::util::stats::fmt_bytes;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["verbose"]);
+    let args = Args::from_env(&["verbose", "json", "list"]);
     match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("gamma") => cmd_gamma(),
@@ -237,6 +243,15 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
+    // Positional sub-subcommands are the barometer surface; the legacy
+    // `--which` selector (paper tables, smoke bench) stays untouched.
+    match args.positional.first().map(String::as_str) {
+        Some("run") => return cmd_bench_run(args),
+        Some("barometer") => return cmd_bench_barometer(args),
+        Some("cmp") => return cmd_bench_cmp(args),
+        Some(other) => bail!("unknown bench subcommand {other:?} (run | barometer | cmp)"),
+        None => {}
+    }
     let which = args.get_or("which", "all").to_string();
     let reps = args.get_usize("reps", 10);
     let reg = registry(args)?;
@@ -271,6 +286,81 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if run("coordinator") {
         let reg2 = registry(args)?;
         println!("{}", bench::run_coordinator_bench(reg2, args.get_usize("requests", 200))?);
+    }
+    Ok(())
+}
+
+/// `bench run --cell <id>`: measure one barometer cell in this process
+/// and print its record. With `--json` the record line is the only
+/// output; the driver and CI parse the *last* stdout line either way.
+fn cmd_bench_run(args: &Args) -> Result<()> {
+    let id = args
+        .get("cell")
+        .context("usage: ctaylor bench run --cell <id> [--json] [--warmup N] [--iters N]")?;
+    let mut cell = barometer::find_cell(id).with_context(|| {
+        format!("unknown cell {id:?}; `ctaylor bench barometer --list` prints the matrix")
+    })?;
+    cell.warmup = args.get_usize("warmup", cell.warmup);
+    cell.iters = args.get_usize("iters", cell.iters);
+    let record = barometer::run_cell(&cell)?;
+    if !args.flag("json") {
+        println!("{}", barometer::describe_record(&record));
+    }
+    println!("{}", json::to_string(&record));
+    Ok(())
+}
+
+/// `bench barometer`: spawn the binary once per matrix cell (process
+/// isolation) and write the aggregated snapshot.
+fn cmd_bench_barometer(args: &Args) -> Result<()> {
+    let cells = match args.get_or("matrix", "full") {
+        "full" => barometer::full_matrix(),
+        "reduced" => barometer::reduced_matrix(),
+        other => bail!("--matrix expects full or reduced, got {other:?}"),
+    };
+    if args.flag("list") {
+        for c in &cells {
+            println!("{}", c.id());
+        }
+        return Ok(());
+    }
+    let bin = std::env::current_exe().context("locating the ctaylor binary")?;
+    let warmup = args.get("warmup").map(str::parse).transpose()?;
+    let iters = args.get("iters").map(str::parse).transpose()?;
+    let mut records = Vec::new();
+    for (i, c) in cells.iter().enumerate() {
+        let id = c.id();
+        eprintln!("[{}/{}] {id}", i + 1, cells.len());
+        records.push(barometer::spawn_cell(&bin, &id, warmup, iters)?);
+    }
+    let snap = barometer::snapshot(records);
+    let out = args.get_or("out", "BENCH_barometer.json");
+    std::fs::write(out, json::to_string(&snap) + "\n")
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {out} ({} cells)", cells.len());
+    Ok(())
+}
+
+/// `bench cmp OLD.json NEW.json`: join two snapshots by cell id, print
+/// the human report, then the single-line JSON summary as the last stdout
+/// line. Exits nonzero when `--fail-on-regress` trips.
+fn cmd_bench_cmp(args: &Args) -> Result<()> {
+    if args.positional.len() != 3 {
+        bail!("usage: ctaylor bench cmp OLD.json NEW.json [--threshold PCT] [--fail-on-regress PCT]");
+    }
+    let cfg = barometer::CmpConfig {
+        threshold_pct: args.get_f64("threshold", 5.0),
+        fail_on_regress_pct: args.get("fail-on-regress").map(str::parse).transpose()?,
+    };
+    let old = barometer::load_snapshot(&args.positional[1])?;
+    let new = barometer::load_snapshot(&args.positional[2])?;
+    let report = barometer::cmp_records(&old, &new, &cfg)?;
+    print!("{}", report.render_text());
+    println!("{}", json::to_string(&report.summary_json()));
+    if report.failed {
+        // Rust's stdout is line-buffered; the summary line above is
+        // already flushed when we take the gating exit.
+        std::process::exit(1);
     }
     Ok(())
 }

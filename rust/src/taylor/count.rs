@@ -100,6 +100,61 @@ pub fn stochastic_ratio(order: usize) -> f64 {
     delta_per_sample_collapsed(order) as f64 / delta_per_sample_standard(order) as f64
 }
 
+/// Network-shape inputs to [`route_proxy`]: the activation footprint the
+/// propagated-vector counts multiply against.
+#[derive(Debug, Clone, Copy)]
+pub struct NetShape<'a> {
+    /// Batch size (clamped to ≥ 1).
+    pub batch: usize,
+    /// MLP layer widths.
+    pub widths: &'a [usize],
+    /// Total parameter count (weights + biases).
+    pub theta_len: usize,
+}
+
+/// Analytic FLOP / memory proxies for one route: the propagated-vector
+/// count times the network's activation footprint. Ratios between
+/// methods match the table-F2 Δ-vector theory by construction; absolute
+/// bytes/FLOPs are a model, not a measurement. Shared by the bench
+/// sweeps and the barometer so both report identical numbers for the
+/// same route.
+#[derive(Debug, Clone, Copy)]
+pub struct CostProxy {
+    /// Channel vectors propagated per graph node ([`route_vectors`]).
+    pub vectors: usize,
+    /// Estimated FLOPs per evaluation.
+    pub flops: f64,
+    /// Differentiable-memory proxy (bytes): every activation, per vector.
+    pub mem_diff_bytes: f64,
+    /// Non-differentiable-memory proxy (bytes): two live layers.
+    pub mem_nondiff_bytes: f64,
+}
+
+/// The count-model cost proxy for one (op × method × mode) route on a
+/// concrete network. f32 activations (4 bytes); FLOPs are one fused
+/// multiply-add per parameter per vector per datum.
+pub fn route_proxy(
+    op: &str,
+    method: &str,
+    mode: &str,
+    dim: usize,
+    samples: usize,
+    net: NetShape<'_>,
+) -> CostProxy {
+    let vectors = route_vectors(op, method, mode, dim, samples);
+    let batch = net.batch.max(1) as f64;
+    let widths_sum: usize = net.widths.iter().sum();
+    let max_width = net.widths.iter().copied().max().unwrap_or(1);
+    let bytes = 4.0; // f32 activations
+    let v = vectors as f64;
+    CostProxy {
+        vectors,
+        flops: v * batch * 2.0 * net.theta_len as f64,
+        mem_diff_bytes: v * batch * widths_sum as f64 * bytes,
+        mem_nondiff_bytes: v * batch * 2.0 * max_width as f64 * bytes,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +209,24 @@ mod tests {
         assert_eq!(c16 - c8, 8 * delta_per_sample_collapsed(4));
         // The nested proxy dominates standard at equal (K, R).
         assert!(vectors_nested(2, 10) > vectors_standard(2, 10));
+    }
+
+    #[test]
+    fn route_proxy_ratios_match_vector_ratios() {
+        // The proxy multiplies the vector count by method-independent
+        // factors, so proxy ratios must equal vector-count ratios exactly.
+        let net = NetShape { batch: 8, widths: &[32, 32, 1], theta_len: 1633 };
+        let p_std = route_proxy("laplacian", "standard", "exact", 16, 0, net);
+        let p_col = route_proxy("laplacian", "collapsed", "exact", 16, 0, net);
+        assert_eq!(p_std.vectors, laplacian_standard(16));
+        assert_eq!(p_col.vectors, laplacian_collapsed(16));
+        let want = p_col.vectors as f64 / p_std.vectors as f64;
+        assert!((p_col.flops / p_std.flops - want).abs() < 1e-12);
+        assert!((p_col.mem_diff_bytes / p_std.mem_diff_bytes - want).abs() < 1e-12);
+        assert!((p_col.mem_nondiff_bytes / p_std.mem_nondiff_bytes - want).abs() < 1e-12);
+        // Spot-check the absolute formula: vectors · batch · Σwidths · 4.
+        assert_eq!(p_col.mem_diff_bytes, 18.0 * 8.0 * 65.0 * 4.0);
+        assert_eq!(p_col.flops, 18.0 * 8.0 * 2.0 * 1633.0);
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! `bench cmp` regression-diff coverage: the join/threshold/exit-code
+//! logic on the committed fixture pair (an injected +50% regression, a
+//! −30% improvement, an in-noise cell, and one added / one retired id),
+//! plus the spawned-CLI surface that CI's barometer job drives.
+
+use std::process::{Command, Output};
+
+use ctaylor::bench::barometer::{self, CmpConfig};
+use ctaylor::util::json::{self, Json};
+
+fn ctaylor(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_ctaylor"))
+        .args(args)
+        .output()
+        .expect("spawning ctaylor binary")
+}
+
+const OLD: &str = "tests/fixtures/barometer_old.json";
+const NEW: &str = "tests/fixtures/barometer_new.json";
+
+fn last_json_line(stdout: &str) -> Json {
+    let line = stdout
+        .lines()
+        .rev()
+        .find(|l| !l.trim().is_empty())
+        .expect("cmp printed nothing");
+    json::parse(line).unwrap_or_else(|e| panic!("last line is not JSON ({e}): {line}"))
+}
+
+#[test]
+fn fixture_pair_classifies_every_bucket() {
+    let old = barometer::load_snapshot(OLD).unwrap();
+    let new = barometer::load_snapshot(NEW).unwrap();
+    let rep = barometer::cmp_records(
+        &old,
+        &new,
+        &CmpConfig { threshold_pct: 5.0, fail_on_regress_pct: None },
+    )
+    .unwrap();
+    assert_eq!(rep.regressions.len(), 1);
+    assert_eq!(rep.regressions[0].id, "laplacian-d16-w32x32x1-b8-vm-col");
+    assert!((rep.regressions[0].pct - 50.0).abs() < 1e-9);
+    assert_eq!(rep.improvements.len(), 1);
+    assert_eq!(rep.improvements[0].id, "laplacian-d16-w32x32x1-b8-jet-col");
+    assert_eq!(rep.unchanged.len(), 1, "the +2% biharmonic cell is inside the 5% noise band");
+    assert_eq!(rep.added, vec!["helmholtz-d16-w32x32x1-b8-vm-col".to_string()]);
+    assert_eq!(rep.retired, vec!["gemm-256x256x256-tiled".to_string()]);
+    // Without --fail-on-regress a regression reports but never fails.
+    assert!(!rep.failed);
+    // With it, the 50% regression trips a 10% gate.
+    let gated = barometer::cmp_records(
+        &old,
+        &new,
+        &CmpConfig { threshold_pct: 5.0, fail_on_regress_pct: Some(10.0) },
+    )
+    .unwrap();
+    assert!(gated.failed);
+}
+
+#[test]
+fn cli_cmp_exits_nonzero_and_names_regressions_in_json() {
+    let out = ctaylor(&["bench", "cmp", OLD, NEW, "--fail-on-regress", "10"]);
+    assert!(!out.status.success(), "a 50% regression must fail a 10% gate");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("REGRESSED"), "stdout: {stdout}");
+    let summary = last_json_line(&stdout);
+    assert_eq!(summary.get_str("format"), Some("ctaylor-barometer-cmp/1"));
+    assert_eq!(summary.get("fail"), Some(&Json::Bool(true)));
+    let regs = summary.get("regressions").unwrap().as_arr().unwrap();
+    assert_eq!(regs.len(), 1);
+    assert_eq!(regs[0].get_str("id"), Some("laplacian-d16-w32x32x1-b8-vm-col"));
+}
+
+#[test]
+fn cli_cmp_without_fail_flag_reports_and_exits_zero() {
+    let out = ctaylor(&["bench", "cmp", OLD, NEW, "--threshold", "5"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let summary = last_json_line(&stdout);
+    assert_eq!(summary.get("fail"), Some(&Json::Bool(false)));
+    assert_eq!(summary.get_usize("unchanged"), Some(1));
+    let added = summary.get("added").unwrap().as_arr().unwrap();
+    assert_eq!(added[0].as_str(), Some("helmholtz-d16-w32x32x1-b8-vm-col"));
+    let retired = summary.get("retired").unwrap().as_arr().unwrap();
+    assert_eq!(retired[0].as_str(), Some("gemm-256x256x256-tiled"));
+}
+
+#[test]
+fn cli_cmp_rejects_a_non_barometer_file() {
+    let out = ctaylor(&["bench", "cmp", "Cargo.toml", NEW]);
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cli_bench_run_emits_a_parseable_single_line_record() {
+    let out = ctaylor(&[
+        "bench",
+        "run",
+        "--cell",
+        "laplacian-d16-w32x32x1-b8-vm-col",
+        "--json",
+        "--warmup",
+        "1",
+        "--iters",
+        "3",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    // With --json the record is the only stdout line.
+    assert_eq!(stdout.trim().lines().count(), 1, "stdout: {stdout}");
+    let record = last_json_line(&stdout);
+    assert_eq!(record.get_str("format"), Some("ctaylor-barometer/1"));
+    assert_eq!(record.get_str("id"), Some("laplacian-d16-w32x32x1-b8-vm-col"));
+    assert_eq!(record.get_usize("iters"), Some(3));
+    let wall = record.get("wall_ns").unwrap();
+    assert!(wall.get_f64("median").unwrap() > 0.0);
+    assert_eq!(wall.get_usize("count"), Some(3));
+    assert!(record.get("proxies").unwrap().get_f64("flops").unwrap() > 0.0);
+}
+
+#[test]
+fn cli_bench_run_rejects_an_unknown_cell() {
+    let out = ctaylor(&["bench", "run", "--cell", "no-such-cell"]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown cell"), "stderr: {stderr}");
+}
+
+#[test]
+fn cli_barometer_list_prints_the_reduced_matrix_ids() {
+    let out = ctaylor(&["bench", "barometer", "--matrix", "reduced", "--list"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let listed: Vec<&str> = stdout.lines().filter(|l| !l.trim().is_empty()).collect();
+    let expected: Vec<String> =
+        barometer::reduced_matrix().iter().map(barometer::Cell::id).collect();
+    assert_eq!(listed, expected.iter().map(String::as_str).collect::<Vec<_>>());
+}
+
+#[test]
+fn committed_baseline_matches_the_reduced_matrix() {
+    // The repo-root baseline must stay joinable against what the CI
+    // barometer job produces: same format tag, same cell ids.
+    let snap = barometer::load_snapshot("../BENCH_barometer.json").unwrap();
+    let cells = snap.get("cells").unwrap().as_arr().unwrap();
+    let baseline_ids: std::collections::BTreeSet<&str> =
+        cells.iter().filter_map(|c| c.get_str("id")).collect();
+    let matrix_ids: std::collections::BTreeSet<String> =
+        barometer::reduced_matrix().iter().map(barometer::Cell::id).collect();
+    assert_eq!(
+        baseline_ids,
+        matrix_ids.iter().map(String::as_str).collect(),
+        "regenerate BENCH_barometer.json after editing the reduced matrix"
+    );
+    for c in cells {
+        assert!(
+            c.get("wall_ns").and_then(|w| w.get_f64("median")).unwrap_or(0.0) > 0.0,
+            "cell {:?} has no positive wall_ns.median",
+            c.get_str("id")
+        );
+    }
+}
