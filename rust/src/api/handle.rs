@@ -389,6 +389,7 @@ impl OperatorHandle {
                     &x0,
                     &spec,
                     mode,
+                    self.shared.precision,
                     fresh,
                     &self.shared.programs,
                     &theta.data,
@@ -402,6 +403,7 @@ impl OperatorHandle {
                 &x0,
                 spec,
                 mode,
+                self.shared.precision,
                 false,
                 &self.shared.programs,
                 &theta.data,

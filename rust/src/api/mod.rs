@@ -48,6 +48,7 @@ pub use error::ApiError;
 pub use handle::{AuxInput, EvalOutput, EvalRequest, Method, OperatorHandle};
 
 pub use crate::runtime::native::shard_count;
+pub use crate::taylor::element::Precision;
 pub use crate::taylor::jet::Collapse;
 
 use std::collections::BTreeMap;
@@ -78,6 +79,7 @@ pub(crate) struct Shared {
     handles: Mutex<BTreeMap<String, Arc<handle::HandleCore>>>,
     custom_ids: AtomicU64,
     default_collapse: Collapse,
+    pub(crate) precision: Precision,
 }
 
 impl Shared {
@@ -124,6 +126,7 @@ pub struct EngineBuilder {
     threads: Option<usize>,
     cache_capacity: Option<usize>,
     collapse: Option<Collapse>,
+    precision: Option<Precision>,
 }
 
 impl EngineBuilder {
@@ -157,6 +160,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Numeric precision for compiled programs and VM execution
+    /// ([`Precision::F64`], or f32 storage with optional f64 GEMM
+    /// accumulation).  Default: the `CTAYLOR_PRECISION` environment
+    /// variable (`f64` / `f32` / `f32-acc64`) when set and valid,
+    /// otherwise [`Precision::F64`].
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = Some(precision);
+        self
+    }
+
     pub fn build(self) -> Result<Engine, ApiError> {
         let registry = match self.registry {
             Some(r) => r,
@@ -178,6 +191,7 @@ impl EngineBuilder {
                 handles: Mutex::new(BTreeMap::new()),
                 custom_ids: AtomicU64::new(0),
                 default_collapse: self.collapse.unwrap_or(Collapse::Collapsed),
+                precision: self.precision.or_else(Precision::from_env).unwrap_or_default(),
             }),
         })
     }
@@ -267,6 +281,11 @@ impl Engine {
     /// The engine's default collapse policy (builder-configured).
     pub fn default_collapse(&self) -> Collapse {
         self.shared.default_collapse
+    }
+
+    /// The numeric precision this engine compiles and executes at.
+    pub fn precision(&self) -> Precision {
+        self.shared.precision
     }
 
     /// One snapshot of every engine-level gauge.
@@ -397,7 +416,14 @@ mod tests {
 
     #[test]
     fn taylor_routes_hit_the_program_cache_and_match_the_jet_oracle() {
-        let eng = engine();
+        // Pinned to f64: the 1e-10 oracle bound below must hold even when
+        // the suite runs under a CTAYLOR_PRECISION=f32 environment.
+        let eng = Engine::builder()
+            .registry(Registry::builtin())
+            .threads(1)
+            .precision(Precision::F64)
+            .build()
+            .unwrap();
         let h = eng.operator("laplacian_collapsed_exact_b2").unwrap();
         let seed = 9;
         let w = workload::workload_for(h.meta(), seed);
@@ -506,6 +532,36 @@ mod tests {
         let a = w.request(&artifact).run().unwrap();
         let b = custom.eval().theta(&w.theta).x(&w.x).run().unwrap();
         assert_eq!(a, b, "compiled spec and registry route share the execution path");
+    }
+
+    #[test]
+    fn builder_precision_overrides_the_environment_default() {
+        let f32p = Precision::F32 { accumulate_f64: true };
+        let eng = Engine::builder()
+            .registry(Registry::builtin())
+            .threads(1)
+            .precision(f32p)
+            .build()
+            .unwrap();
+        assert_eq!(eng.precision(), f32p);
+
+        // An f32 engine still tracks the f64 route within single-precision
+        // tolerance on a builtin artifact.
+        let h = eng.operator("laplacian_collapsed_exact_b2").unwrap();
+        let w = workload::workload_for(h.meta(), 11);
+        let out = w.request(&h).run().unwrap();
+        let eng64 = Engine::builder()
+            .registry(Registry::builtin())
+            .threads(1)
+            .precision(Precision::F64)
+            .build()
+            .unwrap();
+        let h64 = eng64.operator("laplacian_collapsed_exact_b2").unwrap();
+        let out64 = w.request(&h64).run().unwrap();
+        for b in 0..out.op.data.len() {
+            let (got, want) = (out.op.data[b], out64.op.data[b]);
+            assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()), "row {b}: {got} vs {want}");
+        }
     }
 
     #[test]

@@ -25,8 +25,11 @@
 //! `nested` (first-order AD composed K times), `jet-std` / `jet-col`
 //! (the Taylor jet engine, standard vs collapsed propagation),
 //! `interp-col` (graph interpreter on the §C-collapsed trace), `vm-std` /
-//! `vm-col` (the buffer-planned VM on the standard vs collapsed trace)
-//! and `ref` / `tiled` for the raw GEMM kernels.
+//! `vm-col` (the buffer-planned VM on the standard vs collapsed trace),
+//! `vm-col-f32` (the same collapsed program cast to f32 storage) and
+//! `ref` / `tiled` / `tiled-f32` for the raw GEMM kernels.  f32 cells
+//! carry distinct ids from their f64 counterparts, so a `cmp` join never
+//! compares across precisions.
 //!
 //! # Record format (`ctaylor-barometer/1`)
 //!
@@ -109,10 +112,14 @@ pub enum EngineKind {
     VmStd,
     /// Buffer-planned VM on the §C-collapsed trace.
     VmCol,
+    /// The collapsed VM program cast to f32 storage (`Precision::F32`).
+    VmColF32,
     /// Naive triple-loop GEMM kernel (kernel cells only).
     GemmRef,
     /// Tiled packed GEMM kernel (kernel cells only).
     Gemm,
+    /// Tiled packed GEMM kernel in f32 (kernel cells only).
+    GemmF32,
 }
 
 impl EngineKind {
@@ -125,8 +132,10 @@ impl EngineKind {
             EngineKind::InterpCol => "interp-col",
             EngineKind::VmStd => "vm-std",
             EngineKind::VmCol => "vm-col",
+            EngineKind::VmColF32 => "vm-col-f32",
             EngineKind::GemmRef => "ref",
             EngineKind::Gemm => "tiled",
+            EngineKind::GemmF32 => "tiled-f32",
         }
     }
 
@@ -135,8 +144,9 @@ impl EngineKind {
         match self {
             EngineKind::Nested => "nested",
             EngineKind::JetStd | EngineKind::VmStd => "standard",
-            EngineKind::JetCol | EngineKind::InterpCol | EngineKind::VmCol => "collapsed",
-            EngineKind::GemmRef | EngineKind::Gemm => "kernel",
+            EngineKind::JetCol | EngineKind::InterpCol => "collapsed",
+            EngineKind::VmCol | EngineKind::VmColF32 => "collapsed",
+            EngineKind::GemmRef | EngineKind::Gemm | EngineKind::GemmF32 => "kernel",
         }
     }
 }
@@ -275,11 +285,18 @@ pub fn full_matrix() -> Vec<Cell> {
     m.push(Cell::exact("laplacian", Nested, 16, W_DEEP, 8).heavy());
     m.push(Cell::exact("laplacian", JetCol, 16, W_DEEP, 8));
     m.push(Cell::exact("laplacian", VmCol, 16, W_DEEP, 8).reduced());
+    // f32 execution: the collapsed VM program cast to single precision
+    // (the Precision::F32 serving path), on the fig1 headliners.
+    m.push(Cell::exact("laplacian", VmColF32, 16, W_MLP, 8).reduced());
+    m.push(Cell::exact("laplacian", VmColF32, 16, W_MLP, 32));
+    m.push(Cell::exact("helmholtz", VmColF32, 16, W_MLP, 8));
     // Raw GEMM kernels: the 256³ headline and an MLP-layer-like shape.
     m.push(Cell::gemm(GemmRef, 256, 256, 256).heavy());
     m.push(Cell::gemm(Gemm, 256, 256, 256).heavy().reduced());
+    m.push(Cell::gemm(GemmF32, 256, 256, 256).heavy().reduced());
     m.push(Cell::gemm(GemmRef, 4096, 32, 1));
     m.push(Cell::gemm(Gemm, 4096, 32, 1));
+    m.push(Cell::gemm(GemmF32, 4096, 32, 1));
     m
 }
 
@@ -377,11 +394,12 @@ fn theta_len(dim: usize, widths: &[usize]) -> usize {
 pub fn cell_proxy(cell: &Cell) -> count::CostProxy {
     if cell.op == "gemm" {
         let (m, k, n) = (cell.widths[0], cell.widths[1], cell.widths[2]);
+        let esz = if cell.engine == EngineKind::GemmF32 { 4 } else { 8 };
         return count::CostProxy {
             vectors: 0,
             flops: 2.0 * (m * k * n) as f64,
-            mem_diff_bytes: ((m * k + k * n + m * n) * 8) as f64,
-            mem_nondiff_bytes: ((m * k + k * n + m * n) * 8) as f64,
+            mem_diff_bytes: ((m * k + k * n + m * n) * esz) as f64,
+            mem_nondiff_bytes: ((m * k + k * n + m * n) * esz) as f64,
         };
     }
     let (op, mode) = match cell.op.strip_prefix("stochastic_") {
@@ -436,6 +454,31 @@ fn check_against_oracle(cell: &Cell, mlp: &Mlp, x: &Tensor, oplan: &OperatorPlan
     Ok(())
 }
 
+/// f32 cells run against the same f64 jet oracle, at single-precision
+/// tolerances (docs/METHODOLOGY.md, cross-precision comparison semantics).
+fn check_f32_against_oracle(
+    cell: &Cell,
+    mlp: &Mlp,
+    x: &Tensor,
+    oplan: &OperatorPlan,
+    out: &[Tensor<f32>],
+) -> Result<()> {
+    let (f0, op) = plan::apply(mlp, x, oplan, Collapse::Collapsed);
+    let scale = op.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    let (f0_32, op_32): (Tensor, Tensor) = (out[0].cast(), out[1].cast());
+    ensure!(
+        f0_32.max_abs_diff(&f0) < 1e-4,
+        "cell {}: f32 f(x_0) deviates from the jet oracle",
+        cell.id()
+    );
+    ensure!(
+        op_32.max_abs_diff(&op) < 1e-3 * scale,
+        "cell {}: f32 operator output deviates from the jet oracle",
+        cell.id()
+    );
+    Ok(())
+}
+
 fn run_gemm(cell: &Cell, seed: u64) -> Result<Vec<u64>> {
     let (m, k, n) = (cell.widths[0], cell.widths[1], cell.widths[2]);
     let mut rng = Rng::new(seed);
@@ -446,6 +489,19 @@ fn run_gemm(cell: &Cell, seed: u64) -> Result<Vec<u64>> {
     }
     for v in b.iter_mut() {
         *v = rng.normal();
+    }
+    if cell.engine == EngineKind::GemmF32 {
+        let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let b32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let mut c32 = vec![0.0f32; m * n];
+        return Ok(measure(
+            || {
+                kernels::gemm(m, k, n, &a32, &b32, &mut c32);
+                std::hint::black_box(&c32);
+            },
+            cell.warmup,
+            cell.iters,
+        ));
     }
     let mut c = vec![0.0f64; m * n];
     let reference = cell.engine == EngineKind::GemmRef;
@@ -529,28 +585,43 @@ fn run_measured(cell: &Cell, seed: u64) -> Result<Vec<u64>> {
                 cell.iters,
             )
         }
-        VmStd | VmCol => {
+        VmStd | VmCol | VmColF32 => {
             let oplan = spec_for(cell, sto_dirs.as_ref())?.compile();
             let g_std = build_plan_jet_std(&mlp, &oplan, cell.batch);
-            let g = if cell.engine == VmCol {
-                rewrite::collapse(&g_std, TAGGED_SLOTS, oplan.dirs.shape[0])
-            } else {
+            let g = if cell.engine == VmStd {
                 g_std
+            } else {
+                rewrite::collapse(&g_std, TAGGED_SLOTS, oplan.dirs.shape[0])
             };
             let num_dirs = oplan.dirs.shape[0];
             let shapes = vec![vec![cell.batch, cell.dim], vec![num_dirs, cell.batch, cell.dim]];
             let prog = program::compile(&g, &shapes)?;
             let inputs = [x.clone(), oplan.dirs.broadcast_rows(cell.batch)];
-            check_against_oracle(cell, &mlp, &x, &oplan, &prog.execute(&inputs)?)?;
-            measure(
-                || {
-                    std::hint::black_box(prog.execute(&inputs).unwrap());
-                },
-                cell.warmup,
-                cell.iters,
-            )
+            if cell.engine == VmColF32 {
+                let prog32: program::Program<f32> = prog.cast(false);
+                let in32 = [inputs[0].cast::<f32>(), inputs[1].cast::<f32>()];
+                check_f32_against_oracle(cell, &mlp, &x, &oplan, &prog32.execute(&in32)?)?;
+                measure(
+                    || {
+                        std::hint::black_box(prog32.execute(&in32).unwrap());
+                    },
+                    cell.warmup,
+                    cell.iters,
+                )
+            } else {
+                check_against_oracle(cell, &mlp, &x, &oplan, &prog.execute(&inputs)?)?;
+                measure(
+                    || {
+                        std::hint::black_box(prog.execute(&inputs).unwrap());
+                    },
+                    cell.warmup,
+                    cell.iters,
+                )
+            }
         }
-        GemmRef | Gemm => bail!("cell {}: kernel engines require the gemm op", cell.id()),
+        GemmRef | Gemm | GemmF32 => {
+            bail!("cell {}: kernel engines require the gemm op", cell.id())
+        }
     };
     Ok(ns)
 }
@@ -852,10 +923,14 @@ mod tests {
         // committed snapshots; changing them breaks the trajectory.
         let c = Cell::exact("laplacian", EngineKind::VmCol, 16, W_MLP, 8);
         assert_eq!(c.id(), "laplacian-d16-w32x32x1-b8-vm-col");
+        let c32 = Cell::exact("laplacian", EngineKind::VmColF32, 16, W_MLP, 8);
+        assert_eq!(c32.id(), "laplacian-d16-w32x32x1-b8-vm-col-f32");
         let s = Cell::stochastic("stochastic_laplacian", EngineKind::JetCol, 16, W_MLP, 4, 16);
         assert_eq!(s.id(), "stochastic_laplacian-d16-w32x32x1-b4-s16-jet-col");
         let g = Cell::gemm(EngineKind::Gemm, 256, 256, 256);
         assert_eq!(g.id(), "gemm-256x256x256-tiled");
+        let g32 = Cell::gemm(EngineKind::GemmF32, 256, 256, 256);
+        assert_eq!(g32.id(), "gemm-256x256x256-tiled-f32");
     }
 
     #[test]
@@ -931,14 +1006,23 @@ mod tests {
     fn run_cell_covers_every_engine_family() {
         // One tiny cell per engine family keeps the full dispatch tested
         // without a release-build benchmark run.
-        for engine in [EngineKind::Nested, EngineKind::VmStd, EngineKind::VmCol, EngineKind::InterpCol] {
+        let engines = [
+            EngineKind::Nested,
+            EngineKind::VmStd,
+            EngineKind::VmCol,
+            EngineKind::VmColF32,
+            EngineKind::InterpCol,
+        ];
+        for engine in engines {
             let r = run_cell(&tiny("laplacian", engine, 4)).unwrap();
             assert!(r.get("wall_ns").unwrap().get_f64("median").unwrap() > 0.0, "{engine:?}");
         }
-        let mut g = Cell::gemm(EngineKind::Gemm, 8, 8, 8);
-        g.warmup = 0;
-        g.iters = 2;
-        assert!(run_cell(&g).is_ok());
+        for engine in [EngineKind::Gemm, EngineKind::GemmF32] {
+            let mut g = Cell::gemm(engine, 8, 8, 8);
+            g.warmup = 0;
+            g.iters = 2;
+            assert!(run_cell(&g).is_ok(), "{engine:?}");
+        }
         let sto = Cell {
             warmup: 0,
             iters: 2,

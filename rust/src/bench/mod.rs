@@ -630,6 +630,34 @@ pub fn run_kernel_micro(reps: usize) -> Result<String> {
                 "tiled GEMM deviates from the naive loop on {m}x{k}x{n}"
             );
         }
+        // Single-precision rows: the same tiled seam, f32 storage with
+        // pure-f32 vs f64-accumulating microkernels.
+        let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let b32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let mut c32 = vec![0.0f32; m * n];
+        let t_f32 = time_fn(
+            || {
+                kernels::gemm(m, k, n, &a32, &b32, &mut c32);
+                std::hint::black_box(&c32);
+            },
+            reps,
+        );
+        let mut c32a = vec![0.0f32; m * n];
+        let t_f32a = time_fn(
+            || {
+                kernels::gemm_with(m, k, n, &a32, &b32, &mut c32a, true);
+                std::hint::black_box(&c32a);
+            },
+            reps,
+        );
+        for got in [&c32, &c32a] {
+            for (w, g) in c_ref.iter().zip(got.iter()) {
+                anyhow::ensure!(
+                    (w - f64::from(*g)).abs() <= 1e-2 * (1.0 + w.abs()),
+                    "f32 tiled GEMM drifts from the f64 loop on {m}x{k}x{n}"
+                );
+            }
+        }
         let gf = |t: f64| flops / t.max(1e-12) / 1e9;
         let speedup = t_naive.min / t_tiled.min.max(1e-12);
         rows.push(vec![
@@ -637,6 +665,8 @@ pub fn run_kernel_micro(reps: usize) -> Result<String> {
             format!("{:.2}", gf(t_naive.min)),
             format!("{:.2}", gf(t_tiled.min)),
             format!("x{speedup:.2}"),
+            format!("{:.2}", gf(t_f32.min)),
+            format!("{:.2}", gf(t_f32a.min)),
         ]);
         json_rows.push(Json::obj(vec![
             ("m", Json::num(m as f64)),
@@ -644,11 +674,14 @@ pub fn run_kernel_micro(reps: usize) -> Result<String> {
             ("n", Json::num(n as f64)),
             ("naive_gflops", Json::num(gf(t_naive.min))),
             ("tiled_gflops", Json::num(gf(t_tiled.min))),
+            ("f32_gflops", Json::num(gf(t_f32.min))),
+            ("f32a64_gflops", Json::num(gf(t_f32a.min))),
             ("speedup", Json::num(speedup)),
         ]));
     }
-    let mut out = String::from("# Kernel micro-bench — naive vs tiled GEMM (f64)\n\n");
-    out.push_str(&table(&["m x k x n", "naive GFLOP/s", "tiled GFLOP/s", "speedup"], &rows));
+    let mut out = String::from("# Kernel micro-bench — naive/tiled f64 vs tiled f32 GEMM\n\n");
+    let hdr = ["m x k x n", "naive f64", "tiled f64", "speedup", "tiled f32", "f32 acc64"];
+    out.push_str(&table(&hdr, &rows));
     save_json(&results_dir(), "kernel_micro", &Json::Arr(json_rows))?;
     save_text(&results_dir(), "kernel_micro", &out)?;
     Ok(out)

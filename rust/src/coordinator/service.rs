@@ -22,7 +22,7 @@ use super::batcher::plan_blocks;
 use super::metrics::Metrics;
 use super::request::{EvalRequest, EvalResponse, RouteKey};
 use super::router::Router;
-use crate::api::Engine;
+use crate::api::{Engine, Precision};
 use crate::runtime::{HostTensor, Registry};
 use crate::util::prng::Rng;
 
@@ -37,6 +37,9 @@ pub struct ServiceConfig {
     pub seed: u64,
     /// Flush as soon as a route has at least this many points pending.
     pub eager_points: usize,
+    /// Numeric precision for the worker's engine; `None` defers to the
+    /// engine default (`CTAYLOR_PRECISION`, else f64).
+    pub precision: Option<Precision>,
 }
 
 impl Default for ServiceConfig {
@@ -48,6 +51,7 @@ impl Default for ServiceConfig {
             // Tuned in the §Perf pass (EXPERIMENTS.md): 64 beats 16 by ~15%
             // throughput on burst loads by cutting batch count ~35%.
             eager_points: 64,
+            precision: None,
         }
     }
 }
@@ -188,7 +192,11 @@ fn worker_loop(
     // One engine per service: typed handles per route, the shared
     // compiled-program cache and the batch-sharding pool
     // (CTAYLOR_THREADS), all surfaced as serving gauges.
-    let engine = Engine::builder().registry(registry).build()?;
+    let mut builder = Engine::builder().registry(registry);
+    if let Some(p) = config.precision {
+        builder = builder.precision(p);
+    }
+    let engine = builder.build()?;
     metrics.set_engine(&engine.stats());
     let mut rng = Rng::new(config.seed);
     // Shared parameter vectors per (dim, widths): every artifact of one

@@ -26,6 +26,7 @@
 //! per-row arithmetic is identical, so sharded results are bitwise equal
 //! to single-threaded ones.
 
+use std::borrow::Cow;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -38,6 +39,7 @@ use crate::mlp::Mlp;
 use crate::nested;
 use crate::operators::plan::{OperatorPlan, HELMHOLTZ_C0, HELMHOLTZ_C2};
 use crate::operators::OperatorSpec;
+use crate::taylor::element::{Element, Precision};
 use crate::taylor::jet::Collapse;
 use crate::taylor::program::{self, ExecArena, Program};
 use crate::taylor::rewrite;
@@ -51,25 +53,129 @@ use crate::util::pool::{Pool, TypedJob};
 /// per call) and a free-list of [`ExecArena`]s, one per concurrent
 /// executor thread, so steady-state VM runs perform zero heap allocations.
 #[derive(Debug)]
-pub struct CachedProgram {
-    pub program: Program,
-    bdirs: Option<Tensor>,
-    arenas: Mutex<Vec<ExecArena>>,
+pub struct CachedProgram<E: Element = f64> {
+    pub program: Program<E>,
+    bdirs: Option<Tensor<E>>,
+    arenas: Mutex<Vec<ExecArena<E>>>,
 }
 
-impl CachedProgram {
-    fn new(program: Program, bdirs: Option<Tensor>) -> CachedProgram {
+impl<E: Element> CachedProgram<E> {
+    fn new(program: Program<E>, bdirs: Option<Tensor<E>>) -> CachedProgram<E> {
         CachedProgram { program, bdirs, arenas: Mutex::new(Vec::new()) }
     }
 
     /// Run the VM against a pooled arena (popped for the duration of the
     /// call, so concurrent shard threads each get their own).
-    pub fn run(&self, inputs: &[&Tensor], outs: &mut Vec<Tensor>) -> Result<()> {
+    pub fn run(&self, inputs: &[&Tensor<E>], outs: &mut Vec<Tensor<E>>) -> Result<()> {
         let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
         let res = self.program.execute_with(&mut arena, inputs, outs);
         self.arenas.lock().unwrap().push(arena);
         res
     }
+}
+
+/// A cached program at its serving precision.  The [`ProgramKey`]
+/// carries the precision, so a lookup can only ever see its own variant;
+/// the enum keeps [`ProgramCache`] itself monomorphic.
+#[derive(Debug, Clone)]
+pub enum CachedExec {
+    F64(Arc<CachedProgram<f64>>),
+    F32(Arc<CachedProgram<f32>>),
+}
+
+/// Dispatch glue between a runtime [`Precision`] value and the concrete
+/// element type a cached program executes at.  The f64 impl is the
+/// identity everywhere (no copies on the default path); the f32 impl
+/// casts at the route boundary.
+pub trait PrecisionExec: Element {
+    fn wrap(p: Arc<CachedProgram<Self>>) -> CachedExec;
+    fn unwrap(e: &CachedExec) -> Option<&Arc<CachedProgram<Self>>>;
+    /// Re-embed a freshly compiled f64 program at this precision.
+    fn adapt_program(p: Program, precision: Precision) -> Program<Self>;
+    /// Convert an owned f64 tensor (identity for f64).
+    fn from_f64_tensor(t: Tensor) -> Tensor<Self>;
+    /// Borrow an f64 tensor at this precision (borrow for f64, cast for
+    /// f32 — the only per-call conversion on the reduced-precision path).
+    fn as_elem(t: &Tensor) -> Cow<'_, Tensor<Self>>;
+    /// Convert an output back to the engine's f64 currency.
+    fn into_f64_tensor(t: Tensor<Self>) -> Tensor;
+}
+
+impl PrecisionExec for f64 {
+    fn wrap(p: Arc<CachedProgram<f64>>) -> CachedExec {
+        CachedExec::F64(p)
+    }
+
+    fn unwrap(e: &CachedExec) -> Option<&Arc<CachedProgram<f64>>> {
+        match e {
+            CachedExec::F64(p) => Some(p),
+            CachedExec::F32(_) => None,
+        }
+    }
+
+    fn adapt_program(p: Program, _precision: Precision) -> Program<f64> {
+        p
+    }
+
+    fn from_f64_tensor(t: Tensor) -> Tensor<f64> {
+        t
+    }
+
+    fn as_elem(t: &Tensor) -> Cow<'_, Tensor<f64>> {
+        Cow::Borrowed(t)
+    }
+
+    fn into_f64_tensor(t: Tensor<f64>) -> Tensor {
+        t
+    }
+}
+
+impl PrecisionExec for f32 {
+    fn wrap(p: Arc<CachedProgram<f32>>) -> CachedExec {
+        CachedExec::F32(p)
+    }
+
+    fn unwrap(e: &CachedExec) -> Option<&Arc<CachedProgram<f32>>> {
+        match e {
+            CachedExec::F32(p) => Some(p),
+            CachedExec::F64(_) => None,
+        }
+    }
+
+    fn adapt_program(p: Program, precision: Precision) -> Program<f32> {
+        let acc = matches!(precision, Precision::F32 { accumulate_f64: true });
+        p.cast(acc)
+    }
+
+    fn from_f64_tensor(t: Tensor) -> Tensor<f32> {
+        t.cast()
+    }
+
+    fn as_elem(t: &Tensor) -> Cow<'_, Tensor<f32>> {
+        Cow::Owned(t.cast())
+    }
+
+    fn into_f64_tensor(t: Tensor<f32>) -> Tensor {
+        t.cast()
+    }
+}
+
+/// Typed program-cache key: every dimension that selects a distinct
+/// compiled executable, spelled out instead of packed into a string.
+/// `precision` is part of the identity, so f32 and f64 handles on the
+/// same artifact can never share a compiled program.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ProgramKey {
+    /// Caller-unique route identity (artifact name or custom-spec id).
+    pub route: String,
+    /// Compiled (sub-)batch rows.
+    pub batch: usize,
+    /// Direction count R (shapes the seeds and weight masks).
+    pub num_dirs: usize,
+    /// FNV-1a fingerprint of the exact θ bytes.
+    pub theta_fp: u64,
+    /// Serving element type (and GEMM accumulation width).
+    pub precision: Precision,
 }
 
 /// One cached program plus the exact θ it was compiled against: keys
@@ -78,15 +184,15 @@ impl CachedProgram {
 /// program with the wrong embedded weights.
 #[derive(Debug)]
 struct CacheEntry {
-    program: Arc<CachedProgram>,
+    program: CachedExec,
     theta: Vec<f32>,
 }
 
 #[derive(Debug, Default)]
 struct CacheInner {
-    map: BTreeMap<String, CacheEntry>,
+    map: BTreeMap<ProgramKey, CacheEntry>,
     /// Insertion order, for FIFO eviction.
-    order: VecDeque<String>,
+    order: VecDeque<ProgramKey>,
 }
 
 /// Default cap on cached programs: programs embed θ as f64 constants, so
@@ -142,16 +248,21 @@ impl ProgramCache {
         self.len() == 0
     }
 
-    fn get_or_compile(
+    fn get_or_compile<E: PrecisionExec>(
         &self,
-        key: String,
+        key: ProgramKey,
         theta: &[f32],
-        build: impl FnOnce() -> Result<CachedProgram>,
-    ) -> Result<Arc<CachedProgram>> {
+        build: impl FnOnce() -> Result<CachedProgram<E>>,
+    ) -> Result<Arc<CachedProgram<E>>> {
         if let Some(e) = self.inner.lock().unwrap().map.get(&key) {
             if e.theta == theta {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return Ok(e.program.clone());
+                // The key carries the precision, so the variant always
+                // matches; a mismatch would be a key-construction bug and
+                // falls through to a recompile rather than panicking.
+                if let Some(p) = E::unwrap(&e.program) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(p.clone());
+                }
             }
             // fingerprint collision: fall through and recompile
         }
@@ -168,7 +279,7 @@ impl ProgramCache {
                 None => break,
             }
         }
-        let entry = CacheEntry { program: p.clone(), theta: theta.to_vec() };
+        let entry = CacheEntry { program: E::wrap(p.clone()), theta: theta.to_vec() };
         if inner.map.insert(key.clone(), entry).is_none() {
             inner.order.push_back(key);
         }
@@ -381,16 +492,16 @@ pub fn shard_count(batch: usize, executors: usize) -> usize {
 /// arena per thread), stitching outputs back in row order.  Per-row
 /// arithmetic is identical to the single-threaded program, so results
 /// are bitwise equal.
-fn run_sharded(
-    prog: &Arc<CachedProgram>,
-    x0: &Tensor,
-    fresh_dirs: Option<Arc<Tensor>>,
+fn run_sharded<E: Element>(
+    prog: &Arc<CachedProgram<E>>,
+    x0: &Tensor<E>,
+    fresh_dirs: Option<Arc<Tensor<E>>>,
     shards: usize,
     sub: usize,
     dim: usize,
     pool: &Pool,
-) -> Result<Vec<Tensor>> {
-    let jobs: Vec<TypedJob<Result<Vec<Tensor>>>> = (0..shards)
+) -> Result<Vec<Tensor<E>>> {
+    let jobs: Vec<TypedJob<Result<Vec<Tensor<E>>>>> = (0..shards)
         .map(|s| {
             let prog = Arc::clone(prog);
             let dirs = fresh_dirs.clone();
@@ -398,8 +509,8 @@ fn run_sharded(
                 vec![sub, dim],
                 x0.data[s * sub * dim..(s + 1) * sub * dim].to_vec(),
             );
-            let job: TypedJob<Result<Vec<Tensor>>> = Box::new(move || {
-                let mut inputs: Vec<&Tensor> = vec![&xs];
+            let job: TypedJob<Result<Vec<Tensor<E>>>> = Box::new(move || {
+                let mut inputs: Vec<&Tensor<E>> = vec![&xs];
                 if let Some(d) = dirs.as_deref() {
                     inputs.push(d);
                 } else if let Some(d) = prog.bdirs.as_ref() {
@@ -414,7 +525,7 @@ fn run_sharded(
         .collect();
     let results = pool.run(jobs);
     // Stitch each output's shard rows back into the full batch.
-    let mut stitched: Vec<Tensor> = Vec::new();
+    let mut stitched: Vec<Tensor<E>> = Vec::new();
     for (s, r) in results.into_iter().enumerate() {
         let outs = r?;
         if s == 0 {
@@ -441,7 +552,9 @@ fn run_sharded(
 /// `route_key` is the caller's unique route identity (artifact name or an
 /// engine-assigned custom-spec id); `fresh_dirs` marks routes whose
 /// directions arrive with the request (stochastic estimators), so their
-/// batch broadcast is never cached as program state.
+/// batch broadcast is never cached as program state.  `precision` selects
+/// the element type the cached program executes at; inputs and outputs
+/// stay in the engine's f64 currency, converted at this boundary.
 #[allow(clippy::too_many_arguments)]
 pub fn execute_taylor(
     route_key: &str,
@@ -449,6 +562,30 @@ pub fn execute_taylor(
     x0: &Tensor,
     spec: &OperatorSpec,
     mode: Collapse,
+    precision: Precision,
+    fresh_dirs: bool,
+    cache: &ProgramCache,
+    theta: &[f32],
+    pool: &Pool,
+) -> Result<(Tensor, Tensor)> {
+    match precision {
+        Precision::F64 => execute_taylor_typed::<f64>(
+            route_key, mlp, x0, spec, mode, precision, fresh_dirs, cache, theta, pool,
+        ),
+        Precision::F32 { .. } => execute_taylor_typed::<f32>(
+            route_key, mlp, x0, spec, mode, precision, fresh_dirs, cache, theta, pool,
+        ),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_taylor_typed<E: PrecisionExec>(
+    route_key: &str,
+    mlp: &Mlp,
+    x0: &Tensor,
+    spec: &OperatorSpec,
+    mode: Collapse,
+    precision: Precision,
     fresh_dirs: bool,
     cache: &ProgramCache,
     theta: &[f32],
@@ -469,27 +606,36 @@ pub fn execute_taylor(
     let shards = shard_count(batch, pool.executors());
     let sub = batch / shards;
     let theta_fp = theta_fingerprint(theta);
-    let key = format!("{route_key}|b{sub}|r{num_dirs}|t{theta_fp:016x}");
+    let key = ProgramKey {
+        route: route_key.to_string(),
+        batch: sub,
+        num_dirs,
+        theta_fp,
+        precision,
+    };
     let has_dirs = plan.order >= 1;
-    let prog = cache.get_or_compile(key, theta, || {
-        let program = compile_route(mlp, &plan, sub, dim, mode)?;
+    let prog = cache.get_or_compile::<E>(key, theta, || {
+        // Tracing, rewrites and buffer planning all run in f64; the
+        // planned program is re-embedded at the serving precision.
+        let program = E::adapt_program(compile_route(mlp, &plan, sub, dim, mode)?, precision);
         // Fixed-direction routes: the scaled bundle is part of the route,
         // so its batch broadcast is compiled-in state reused every call.
         let bdirs = if has_dirs && !fresh_dirs {
-            Some(plan.dirs.broadcast_rows(sub))
+            Some(E::from_f64_tensor(plan.dirs.broadcast_rows(sub)))
         } else {
             None
         };
         Ok(CachedProgram::new(program, bdirs))
     })?;
     let fresh = if has_dirs && fresh_dirs {
-        Some(Arc::new(plan.dirs.broadcast_rows(sub)))
+        Some(Arc::new(E::from_f64_tensor(plan.dirs.broadcast_rows(sub))))
     } else {
         None
     };
 
+    let x0e = E::as_elem(x0);
     let mut outs = if shards == 1 {
-        let mut inputs: Vec<&Tensor> = vec![x0];
+        let mut inputs: Vec<&Tensor<E>> = vec![x0e.as_ref()];
         if has_dirs {
             inputs.push(fresh.as_deref().or(prog.bdirs.as_ref()).expect("direction input"));
         }
@@ -497,12 +643,12 @@ pub fn execute_taylor(
         prog.run(&inputs, &mut outs)?;
         outs
     } else {
-        run_sharded(&prog, x0, fresh, shards, sub, dim, pool)?
+        run_sharded(&prog, x0e.as_ref(), fresh, shards, sub, dim, pool)?
     };
     ensure!(outs.len() == 2, "{route_key}: traced program must emit [f0, op]");
     let opv = outs.pop().expect("two outputs");
     let f0 = outs.pop().expect("two outputs");
-    Ok((f0, opv))
+    Ok((E::into_f64_tensor(f0), E::into_f64_tensor(opv)))
 }
 
 #[cfg(test)]
@@ -535,6 +681,10 @@ mod tests {
         assert_eq!(OpKind::parse("pinn_step"), None);
     }
 
+    fn test_key(route: &str, precision: Precision) -> ProgramKey {
+        ProgramKey { route: route.to_string(), batch: 1, num_dirs: 2, theta_fp: 0, precision }
+    }
+
     #[test]
     fn program_cache_evicts_fifo_beyond_capacity() {
         let cache = ProgramCache::with_capacity(2);
@@ -546,13 +696,89 @@ mod tests {
             let plan = spec.compile();
             Ok(CachedProgram::new(compile_route(&mlp, &plan, 1, 2, Collapse::Collapsed)?, None))
         };
-        for key in ["a", "b", "c"] {
-            cache.get_or_compile(key.to_string(), &theta, build).unwrap();
+        for route in ["a", "b", "c"] {
+            cache.get_or_compile(test_key(route, Precision::F64), &theta, build).unwrap();
         }
         assert_eq!(cache.len(), 2, "capacity 2 holds the two newest entries");
         assert_eq!(cache.stats(), (0, 3));
-        cache.get_or_compile("c".to_string(), &theta, build).unwrap();
+        cache.get_or_compile(test_key("c", Precision::F64), &theta, build).unwrap();
         assert_eq!(cache.stats(), (1, 3), "the newest entry is still a hit");
+    }
+
+    #[test]
+    fn f32_and_f64_handles_never_share_a_program() {
+        let cache = ProgramCache::new();
+        let spec = OperatorSpec::laplacian(2);
+        let mut rng = crate::util::prng::Rng::new(7);
+        let mlp = Mlp::init(&mut rng, 2, &[3, 1], 2);
+        let theta = [0.0f32];
+        let pool = Pool::new(0);
+        let x0 = Tensor::new(vec![2, 2], vec![0.1, -0.2, 0.3, 0.4]);
+        let f32p = Precision::F32 { accumulate_f64: false };
+        let mut ops: Vec<Tensor> = Vec::new();
+        for precision in [Precision::F64, f32p] {
+            let (_, opv) = execute_taylor(
+                "lap", &mlp, &x0, &spec, Collapse::Collapsed, precision, false, &cache, &theta,
+                &pool,
+            )
+            .unwrap();
+            ops.push(opv);
+        }
+        // Precision is part of the typed key: two compiles, zero sharing.
+        assert_eq!(cache.len(), 2, "one compiled program per precision");
+        assert_eq!(cache.stats(), (0, 2));
+        assert!(ops[0].max_abs_diff(&ops[1]) < 1e-3, "f32 route must track the f64 one");
+        // Re-running either precision hits its own entry.
+        execute_taylor(
+            "lap", &mlp, &x0, &spec, Collapse::Collapsed, f32p, false, &cache, &theta, &pool,
+        )
+        .unwrap();
+        assert_eq!(cache.stats(), (1, 2));
+    }
+
+    #[test]
+    fn every_builtin_taylor_route_compiles_with_fused_tanh_jets() {
+        // Every tanh-MLP route the builtin registry serves through the VM
+        // (standard and collapsed, exact and stochastic) must compile its
+        // activation chains into fused `JetTanh` instructions.
+        use std::collections::BTreeSet;
+        let registry = crate::runtime::Registry::builtin();
+        let mut seen: BTreeSet<(String, String, String)> = BTreeSet::new();
+        let mut rng = crate::util::prng::Rng::new(3);
+        for meta in &registry.artifacts {
+            if meta.method == "nested" || meta.variant != "plain" {
+                continue;
+            }
+            if !seen.insert((meta.op.clone(), meta.method.clone(), meta.mode.clone())) {
+                continue;
+            }
+            let mode =
+                if meta.method == "standard" { Collapse::Standard } else { Collapse::Collapsed };
+            let kind = OpKind::parse(&meta.op).unwrap();
+            let aux = if meta.mode == "stochastic" {
+                let s = meta.samples.max(2);
+                let mut d = vec![0.0f64; s * meta.dim];
+                for v in d.iter_mut() {
+                    *v = rng.rademacher();
+                }
+                Aux::Dirs(Tensor::new(vec![s, meta.dim], d))
+            } else if meta.op == "weighted_laplacian" {
+                Aux::Sigma(crate::operators::basis(meta.dim))
+            } else {
+                Aux::None
+            };
+            let spec = resolve_spec(kind, meta.dim, &aux).unwrap();
+            let mlp = Mlp::init(&mut rng, meta.dim, &meta.widths, 2);
+            let prog = compile_route(&mlp, &spec.compile(), 2, meta.dim, mode).unwrap();
+            assert!(
+                prog.instrs.iter().any(|i| i.jet_tanh_degree().is_some()),
+                "route {}/{}/{}: no fused JetTanh in the compiled program",
+                meta.op,
+                meta.method,
+                meta.mode
+            );
+        }
+        assert_eq!(seen.len(), 16, "expected every (op, method, mode) taylor route");
     }
 
     #[test]

@@ -1,0 +1,483 @@
+//! The numeric element type of the execution stack.
+//!
+//! Every layer below the API surface — [`super::tensor::Tensor`], the
+//! GEMM/transpose kernels ([`super::kernels`]), the program VM and its
+//! [`super::program::ExecArena`] — is generic over a sealed [`Element`]
+//! (`f32` or `f64`).  The trait carries exactly what the kernels need:
+//! the identities, conversions to/from the f64 compile-time world (graphs
+//! are traced, rewritten and compiled in f64; a program is *cast* to its
+//! serving precision afterwards), a hardware-gated fused multiply-add,
+//! the unary math the fused elementwise chains apply, and the per-dtype
+//! register-tile micro-kernel behind [`super::kernels::gemm`].
+//!
+//! The micro-kernels are deliberately monomorphic per type: `f64` keeps
+//! the exact 4×4 tile the f64-only kernel layer shipped with (so f64
+//! results stay bitwise-stable across this refactor), while `f32` uses a
+//! twice-as-wide 4×8 tile — eight f32 lanes fill the same vector register
+//! a 4-wide f64 tile does, which is where the ~2× arithmetic-density win
+//! of serving in f32 comes from.  Accumulation order inside a tile is
+//! identical to the straight-line reference loop in both cases.
+//!
+//! [`Precision`] is the public selector threaded from
+//! `Engine::builder().precision(..)` down to the compiled-program cache:
+//! `F32 { accumulate_f64: true }` keeps f32 storage and bandwidth but
+//! runs each GEMM contraction in f64 ([`Element::gemm_acc64`]), the
+//! classic mixed-precision middle ground.
+
+use std::cell::RefCell;
+
+/// Serving precision of a compiled route.
+///
+/// Part of the program-cache key ([`crate::runtime::native::ProgramKey`]):
+/// two handles on the same artifact at different precisions never share a
+/// compiled program.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Precision {
+    /// Full f64 throughout (the historical default).
+    #[default]
+    F64,
+    /// f32 storage and elementwise math; `accumulate_f64` additionally
+    /// runs GEMM contractions with f64 accumulators.
+    F32 { accumulate_f64: bool },
+}
+
+impl Precision {
+    /// Short stable tag for cache keys, bench cell ids and logs.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 { accumulate_f64: false } => "f32",
+            Precision::F32 { accumulate_f64: true } => "f32a64",
+        }
+    }
+
+    /// Parse the `CTAYLOR_PRECISION` env-var syntax: `f64`, `f32`, or
+    /// `f32_acc64` / `f32-acc64` / `f32a64` for f32 with f64 accumulation.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32 { accumulate_f64: false }),
+            "f32_acc64" | "f32-acc64" | "f32a64" => Some(Precision::F32 { accumulate_f64: true }),
+            _ => None,
+        }
+    }
+
+    /// The process-wide override: `CTAYLOR_PRECISION`, if set and valid.
+    pub fn from_env() -> Option<Precision> {
+        std::env::var("CTAYLOR_PRECISION").ok().and_then(|v| Precision::parse(&v))
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.tag())
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+}
+
+/// The sealed numeric element of tensors, kernels and compiled programs.
+pub trait Element:
+    sealed::Sealed
+    + Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Stable dtype name (`"f32"` / `"f64"`).
+    const DTYPE: &'static str;
+    /// Register-tile rows of this dtype's GEMM micro-kernel.
+    const MR: usize;
+    /// Register-tile columns of this dtype's GEMM micro-kernel.
+    const NR: usize;
+
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+
+    /// Fused multiply-add where the target really has the instruction;
+    /// separate mul+add otherwise (`mul_add` without hardware FMA is a
+    /// libm call — far slower than the loop it would replace).
+    fn fmadd(a: Self, b: Self, acc: Self) -> Self;
+
+    fn abs(self) -> Self;
+    fn tanh(self) -> Self;
+    fn sin(self) -> Self;
+    fn cos(self) -> Self;
+    fn exp(self) -> Self;
+
+    /// Run `f` with this dtype's thread-local (packed-A, packed-B) GEMM
+    /// scratch; each dtype owns its own buffers so mixed-precision
+    /// processes never thrash one pair.
+    fn with_pack_scratch<R>(f: impl FnOnce(&mut Vec<Self>, &mut Vec<Self>) -> R) -> R;
+
+    /// The unrolled `MR × NR` register tile over one packed panel pair.
+    /// Panels are zero-padded, so the accumulation loop is branch-free;
+    /// only the write-back respects the true `mr × nr` edge extent.
+    #[allow(clippy::too_many_arguments)]
+    fn micro_kernel(
+        kc: usize,
+        ap: &[Self],
+        bp: &[Self],
+        c: &mut [Self],
+        ldc: usize,
+        mr: usize,
+        nr: usize,
+        overwrite: bool,
+    );
+
+    /// `c = a · b` with f64 accumulators regardless of `Self`: the
+    /// `Precision::F32 { accumulate_f64: true }` GEMM path.  For f64 this
+    /// is the ordinary kernel.
+    fn gemm_acc64(m: usize, k: usize, n: usize, a: &[Self], b: &[Self], c: &mut [Self]);
+}
+
+thread_local! {
+    /// f64 (packed-A, packed-B) scratch, reused across calls on this thread.
+    static PACK_F64: RefCell<(Vec<f64>, Vec<f64>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+    /// f32 (packed-A, packed-B) scratch.
+    static PACK_F32: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+    /// f64 accumulator rows for the f32 `accumulate_f64` GEMM path.
+    static ACC64_ROW: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+impl Element for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const DTYPE: &'static str = "f64";
+    const MR: usize = 4;
+    const NR: usize = 4;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline(always)]
+    fn fmadd(a: f64, b: f64, acc: f64) -> f64 {
+        if cfg!(target_feature = "fma") {
+            a.mul_add(b, acc)
+        } else {
+            a * b + acc
+        }
+    }
+
+    #[inline(always)]
+    fn abs(self) -> f64 {
+        f64::abs(self)
+    }
+
+    #[inline(always)]
+    fn tanh(self) -> f64 {
+        f64::tanh(self)
+    }
+
+    #[inline(always)]
+    fn sin(self) -> f64 {
+        f64::sin(self)
+    }
+
+    #[inline(always)]
+    fn cos(self) -> f64 {
+        f64::cos(self)
+    }
+
+    #[inline(always)]
+    fn exp(self) -> f64 {
+        f64::exp(self)
+    }
+
+    fn with_pack_scratch<R>(f: impl FnOnce(&mut Vec<f64>, &mut Vec<f64>) -> R) -> R {
+        PACK_F64.with(|pack| {
+            let mut pack = pack.borrow_mut();
+            let (ap, bp) = &mut *pack;
+            f(ap, bp)
+        })
+    }
+
+    /// The exact 4×4 tile the f64-only kernel layer shipped with: ascending
+    /// k, mul+add unless the build has hardware FMA — bitwise-stable
+    /// against the pre-generic implementation.
+    #[inline(always)]
+    fn micro_kernel(
+        kc: usize,
+        ap: &[f64],
+        bp: &[f64],
+        c: &mut [f64],
+        ldc: usize,
+        mr: usize,
+        nr: usize,
+        overwrite: bool,
+    ) {
+        const MR: usize = <f64 as Element>::MR;
+        const NR: usize = <f64 as Element>::NR;
+        let mut acc = [[0.0f64; NR]; MR];
+        for p in 0..kc {
+            let ar = &ap[p * MR..p * MR + MR];
+            let br = &bp[p * NR..p * NR + NR];
+            for i in 0..MR {
+                for j in 0..NR {
+                    acc[i][j] = <f64 as Element>::fmadd(ar[i], br[j], acc[i][j]);
+                }
+            }
+        }
+        for (i, arow) in acc.iter().enumerate().take(mr) {
+            let crow = &mut c[i * ldc..i * ldc + nr];
+            if overwrite {
+                for (cv, &av) in crow.iter_mut().zip(arow) {
+                    *cv = av;
+                }
+            } else {
+                for (cv, &av) in crow.iter_mut().zip(arow) {
+                    *cv += av;
+                }
+            }
+        }
+    }
+
+    fn gemm_acc64(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        // f64 accumulation *is* the ordinary kernel.
+        super::kernels::gemm(m, k, n, a, b, c);
+    }
+}
+
+impl Element for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const DTYPE: &'static str = "f32";
+    const MR: usize = 4;
+    /// Twice the f64 width: 8 f32 lanes fill the same vector register
+    /// 4 f64 lanes do, so the 4×8 tile keeps the register budget of the
+    /// f64 4×4 tile at double the arithmetic per packed element.
+    const NR: usize = 8;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn fmadd(a: f32, b: f32, acc: f32) -> f32 {
+        if cfg!(target_feature = "fma") {
+            a.mul_add(b, acc)
+        } else {
+            a * b + acc
+        }
+    }
+
+    #[inline(always)]
+    fn abs(self) -> f32 {
+        f32::abs(self)
+    }
+
+    #[inline(always)]
+    fn tanh(self) -> f32 {
+        f32::tanh(self)
+    }
+
+    #[inline(always)]
+    fn sin(self) -> f32 {
+        f32::sin(self)
+    }
+
+    #[inline(always)]
+    fn cos(self) -> f32 {
+        f32::cos(self)
+    }
+
+    #[inline(always)]
+    fn exp(self) -> f32 {
+        f32::exp(self)
+    }
+
+    fn with_pack_scratch<R>(f: impl FnOnce(&mut Vec<f32>, &mut Vec<f32>) -> R) -> R {
+        PACK_F32.with(|pack| {
+            let mut pack = pack.borrow_mut();
+            let (ap, bp) = &mut *pack;
+            f(ap, bp)
+        })
+    }
+
+    #[inline(always)]
+    fn micro_kernel(
+        kc: usize,
+        ap: &[f32],
+        bp: &[f32],
+        c: &mut [f32],
+        ldc: usize,
+        mr: usize,
+        nr: usize,
+        overwrite: bool,
+    ) {
+        const MR: usize = <f32 as Element>::MR;
+        const NR: usize = <f32 as Element>::NR;
+        let mut acc = [[0.0f32; NR]; MR];
+        for p in 0..kc {
+            let ar = &ap[p * MR..p * MR + MR];
+            let br = &bp[p * NR..p * NR + NR];
+            for i in 0..MR {
+                for j in 0..NR {
+                    acc[i][j] = <f32 as Element>::fmadd(ar[i], br[j], acc[i][j]);
+                }
+            }
+        }
+        for (i, arow) in acc.iter().enumerate().take(mr) {
+            let crow = &mut c[i * ldc..i * ldc + nr];
+            if overwrite {
+                for (cv, &av) in crow.iter_mut().zip(arow) {
+                    *cv = av;
+                }
+            } else {
+                for (cv, &av) in crow.iter_mut().zip(arow) {
+                    *cv += av;
+                }
+            }
+        }
+    }
+
+    /// f32 storage, f64 contraction: each output row accumulates in a
+    /// thread-local f64 buffer and rounds once at write-back.  Precision
+    /// is the point of this path, so it streams row-major without tiling.
+    fn gemm_acc64(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        assert_eq!(a.len(), m * k, "gemm_acc64: a is not [{m}, {k}]");
+        assert_eq!(b.len(), k * n, "gemm_acc64: b is not [{k}, {n}]");
+        assert_eq!(c.len(), m * n, "gemm_acc64: c is not [{m}, {n}]");
+        if m == 0 || n == 0 {
+            return;
+        }
+        if k == 0 {
+            c.fill(0.0);
+            return;
+        }
+        ACC64_ROW.with(|row| {
+            let mut row = row.borrow_mut();
+            if row.len() < n {
+                row.resize(n, 0.0);
+            }
+            let acc = &mut row[..n];
+            for (crow, arow) in c.chunks_exact_mut(n).zip(a.chunks_exact(k)) {
+                acc.fill(0.0);
+                for (&av, brow) in arow.iter().zip(b.chunks_exact(n)) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let av = av as f64;
+                    for (sum, &bv) in acc.iter_mut().zip(brow) {
+                        *sum += av * bv as f64;
+                    }
+                }
+                for (cv, &sum) in crow.iter_mut().zip(acc.iter()) {
+                    *cv = sum as f32;
+                }
+            }
+        });
+    }
+}
+
+/// Cast a slice between element types via f64 (identity when `S == D`).
+pub fn cast_slice<S: Element, D: Element>(src: &[S]) -> Vec<D> {
+    src.iter().map(|&v| D::from_f64(v.to_f64())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_tags_round_trip() {
+        for p in [
+            Precision::F64,
+            Precision::F32 { accumulate_f64: false },
+            Precision::F32 { accumulate_f64: true },
+        ] {
+            assert_eq!(Precision::parse(p.tag()), Some(p));
+        }
+        assert_eq!(Precision::parse("F32_ACC64"), Some(Precision::F32 { accumulate_f64: true }));
+        assert_eq!(Precision::parse("bf16"), None);
+    }
+
+    #[test]
+    fn precision_is_ordered_and_defaults_to_f64() {
+        assert_eq!(Precision::default(), Precision::F64);
+        // Ord is what lets it live inside the BTreeMap program-cache key.
+        let mut set = std::collections::BTreeSet::new();
+        set.insert(Precision::F64);
+        set.insert(Precision::F32 { accumulate_f64: false });
+        set.insert(Precision::F32 { accumulate_f64: true });
+        assert_eq!(set.len(), 3);
+    }
+
+    #[test]
+    fn element_conversions_and_identities() {
+        assert_eq!(<f32 as Element>::from_f64(1.5), 1.5f32);
+        assert_eq!(Element::to_f64(2.5f32), 2.5);
+        assert_eq!(f64::ZERO + f64::ONE, 1.0);
+        assert_eq!(f32::DTYPE, "f32");
+        assert_eq!(<f32 as Element>::NR, 2 * <f64 as Element>::NR);
+    }
+
+    #[test]
+    fn acc64_gemm_is_more_accurate_than_plain_f32() {
+        // A contraction designed to lose low bits in f32: many terms of
+        // alternating magnitude.  The f64-accumulated path must land
+        // closer to the f64 reference than plain f32 summation.
+        let k = 4096usize;
+        let a: Vec<f32> = (0..k).map(|i| if i % 2 == 0 { 1.0e4 } else { 1.0 }).collect();
+        let b: Vec<f32> = (0..k).map(|i| if i % 2 == 0 { 1.0e-4 } else { 1.0 }).collect();
+        let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let mut plain = [0.0f32];
+        let mut mixed = [0.0f32];
+        // plain f32 accumulation via the straight summation loop
+        let mut s = 0.0f32;
+        for (&x, &y) in a.iter().zip(&b) {
+            s += x * y;
+        }
+        plain[0] = s;
+        <f32 as Element>::gemm_acc64(1, k, 1, &a, &b, &mut mixed);
+        let err_plain = (plain[0] as f64 - exact).abs();
+        let err_mixed = (mixed[0] as f64 - exact).abs();
+        assert!(
+            err_mixed <= err_plain,
+            "acc64 ({err_mixed}) should not be worse than plain f32 ({err_plain})"
+        );
+        // And the mixed result is within one f32 ulp-ish of the exact sum.
+        assert!(err_mixed <= exact.abs() * 1e-6, "mixed err {err_mixed} vs exact {exact}");
+    }
+
+    #[test]
+    fn cast_slice_round_trips_representable_values() {
+        let src = [0.5f64, -1.25, 3.0];
+        let as32: Vec<f32> = cast_slice(&src);
+        let back: Vec<f64> = cast_slice(&as32);
+        assert_eq!(back, src);
+    }
+}

@@ -1,5 +1,6 @@
-//! Tiled dense f64 kernels: the GEMM and transpose under `Tensor::matmul`,
-//! the jet engine's linear rule and the program VM's `Instr::MatMul`.
+//! Tiled dense kernels, generic over the [`Element`] dtype: the GEMM and
+//! transpose under `Tensor::matmul`, the jet engine's linear rule and the
+//! program VM's `Instr::MatMul`.
 //!
 //! The seed VM ran every matmul through a row-major triple loop with a
 //! branchy per-element zero-skip — kept verbatim as [`gemm_reference`]
@@ -9,9 +10,14 @@
 //! block into MR-tall row panels (both zero-padded to the tile size so
 //! the micro-kernel never branches on edges), and an unrolled MR × NR
 //! register tile accumulates with fused multiply-adds where the target
-//! has the instruction.  Packing scratch lives in thread-locals, so
-//! steady-state calls allocate nothing — the kernel layer keeps the
-//! zero-alloc property of the VM's [`super::program::ExecArena`] path.
+//! has the instruction.  The tile extent is per-dtype
+//! ([`Element::MR`]/[`Element::NR`]: 4×4 for f64, 4×8 for f32 — same
+//! vector-register budget, double the lanes) and the tile body itself
+//! lives on the trait ([`Element::micro_kernel`]) so each dtype's inner
+//! loop stays monomorphic and unrolled.  Packing scratch lives in
+//! per-dtype thread-locals, so steady-state calls allocate nothing — the
+//! kernel layer keeps the zero-alloc property of the VM's
+//! [`super::program::ExecArena`] path.
 //!
 //! A mostly-zero A — the scaled one-hot direction bundles every exact
 //! route feeds its first layer — keeps the seed's zero-skip loop (dense
@@ -22,15 +28,16 @@
 //! loop, so in the default build (no hardware FMA enabled at compile
 //! time) results are bitwise identical to [`gemm_reference`] whenever k
 //! fits one KC-block; beyond that (k > 256 partial-sum grouping, or an
-//! FMA build fusing the rounding) they match to f64 rounding — the
-//! property tests assert ≤ 1e-12 relative.
+//! FMA build fusing the rounding) they match to dtype rounding — the
+//! property tests assert ≤ 1e-12 relative for f64.
 
-use std::cell::RefCell;
+use super::element::Element;
 
-/// Register-tile rows (micro-kernel height).
-pub const MR: usize = 4;
-/// Register-tile columns (micro-kernel width).
-pub const NR: usize = 4;
+/// Register-tile rows of the f64 micro-kernel (see [`Element::MR`] for
+/// the per-dtype extent the blocked kernel actually uses).
+pub const MR: usize = <f64 as Element>::MR;
+/// Register-tile columns of the f64 micro-kernel.
+pub const NR: usize = <f64 as Element>::NR;
 /// Rows of A per L2-resident packed block.
 const MC: usize = 128;
 /// Contraction depth per packed panel pair.
@@ -38,27 +45,10 @@ const KC: usize = 256;
 /// Columns of B per packed block.
 const NC: usize = 512;
 
-thread_local! {
-    /// (packed-A, packed-B) scratch, reused across calls on this thread.
-    static PACK: RefCell<(Vec<f64>, Vec<f64>)> = const { RefCell::new((Vec::new(), Vec::new())) };
-}
-
-/// Fused multiply-add where the target really has the instruction;
-/// separate mul+add otherwise (`f64::mul_add` without hardware FMA is a
-/// libm call — far slower than the loop it would replace).
-#[inline(always)]
-fn fmadd(a: f64, b: f64, acc: f64) -> f64 {
-    if cfg!(target_feature = "fma") {
-        a.mul_add(b, acc)
-    } else {
-        a * b + acc
-    }
-}
-
 /// `c = a · b` for row-major `a [m, k]`, `b [k, n]`, `c [m, n]`
 /// (overwrites `c`).  Dispatches to the straight-line loop below the
 /// cache-blocking break-even and to the packed tiled kernel above it.
-pub fn gemm(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+pub fn gemm<E: Element>(m: usize, k: usize, n: usize, a: &[E], b: &[E], c: &mut [E]) {
     assert_eq!(a.len(), m * k, "gemm: a is not [{m}, {k}]");
     assert_eq!(b.len(), k * n, "gemm: b is not [{k}, {n}]");
     assert_eq!(c.len(), m * n, "gemm: c is not [{m}, {n}]");
@@ -66,48 +56,68 @@ pub fn gemm(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
         return;
     }
     if k == 0 {
-        c.fill(0.0);
+        c.fill(E::ZERO);
         return;
     }
     // Quarter-dense or sparser A: the zero-skip loop does ~nnz/len of
     // the dense work (exact-route direction bundles are scaled one-hot
     // rows — nnz = m).  The probe costs one pass over A, ~1/n of the
     // multiply work.  Skipping exact 0.0 terms keeps the sum bitwise.
-    let nnz = a.iter().filter(|&&v| v != 0.0).count();
+    let nnz = a.iter().filter(|&&v| v != E::ZERO).count();
     if nnz * 4 <= m * k {
         return gemm_skip(m, k, n, a, b, c);
     }
     // Below the break-even (thin outputs, tiny depth, or simply not
     // enough work to amortize packing) the simple loop wins.
-    if m < MR || n < NR || 2 * m * k * n < (1 << 15) {
+    if m < E::MR || n < E::NR || 2 * m * k * n < (1 << 15) {
         return gemm_small(m, k, n, a, b, c);
     }
-    PACK.with(|pack| {
-        let mut pack = pack.borrow_mut();
-        let (ap, bp) = &mut *pack;
-        let need_a = MC.min(m).div_ceil(MR) * MR * KC.min(k);
-        let need_b = NC.min(n).div_ceil(NR) * NR * KC.min(k);
+    E::with_pack_scratch(|ap, bp| {
+        let need_a = MC.min(m).div_ceil(E::MR) * E::MR * KC.min(k);
+        let need_b = NC.min(n).div_ceil(E::NR) * E::NR * KC.min(k);
         if ap.len() < need_a {
-            ap.resize(need_a, 0.0);
+            ap.resize(need_a, E::ZERO);
         }
         if bp.len() < need_b {
-            bp.resize(need_b, 0.0);
+            bp.resize(need_b, E::ZERO);
         }
         gemm_blocked(m, k, n, a, b, c, ap, bp);
     });
 }
 
-/// The packed, register-tiled main path (`m >= MR`, `n >= NR`, `k >= 1`).
-fn gemm_blocked(
+/// `c = a · b` honoring the mixed-precision flag: `accumulate_f64` runs
+/// the contraction with f64 accumulators regardless of `E` (a no-op
+/// distinction for f64 itself).  The VM's `Instr::MatMul` routes through
+/// here so a compiled program's precision choice reaches every matmul.
+pub fn gemm_with<E: Element>(
     m: usize,
     k: usize,
     n: usize,
-    a: &[f64],
-    b: &[f64],
-    c: &mut [f64],
-    ap: &mut [f64],
-    bp: &mut [f64],
+    a: &[E],
+    b: &[E],
+    c: &mut [E],
+    accumulate_f64: bool,
 ) {
+    if accumulate_f64 {
+        E::gemm_acc64(m, k, n, a, b, c);
+    } else {
+        gemm(m, k, n, a, b, c);
+    }
+}
+
+/// The packed, register-tiled main path (`m >= MR`, `n >= NR`, `k >= 1`).
+#[allow(clippy::too_many_arguments)]
+fn gemm_blocked<E: Element>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[E],
+    b: &[E],
+    c: &mut [E],
+    ap: &mut [E],
+    bp: &mut [E],
+) {
+    let (mr_t, nr_t) = (E::MR, E::NR);
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
@@ -119,55 +129,16 @@ fn gemm_blocked(
             for ic in (0..m).step_by(MC) {
                 let mc = MC.min(m - ic);
                 pack_a(a, k, ic, pc, mc, kc, ap);
-                for jr in (0..nc).step_by(NR) {
-                    let nr = NR.min(nc - jr);
-                    for ir in (0..mc).step_by(MR) {
-                        let mr = MR.min(mc - ir);
-                        let apan = &ap[(ir / MR) * MR * kc..];
-                        let bpan = &bp[(jr / NR) * NR * kc..];
+                for jr in (0..nc).step_by(nr_t) {
+                    let nr = nr_t.min(nc - jr);
+                    for ir in (0..mc).step_by(mr_t) {
+                        let mr = mr_t.min(mc - ir);
+                        let apan = &ap[(ir / mr_t) * mr_t * kc..];
+                        let bpan = &bp[(jr / nr_t) * nr_t * kc..];
                         let base = (ic + ir) * n + jc + jr;
-                        micro_kernel(kc, apan, bpan, &mut c[base..], n, mr, nr, overwrite);
+                        E::micro_kernel(kc, apan, bpan, &mut c[base..], n, mr, nr, overwrite);
                     }
                 }
-            }
-        }
-    }
-}
-
-/// The unrolled MR × NR register tile over one packed panel pair.  The
-/// panels are zero-padded, so the accumulation loop is branch-free; only
-/// the write-back respects the true `mr × nr` edge extent.
-#[inline(always)]
-#[allow(clippy::too_many_arguments)]
-fn micro_kernel(
-    kc: usize,
-    ap: &[f64],
-    bp: &[f64],
-    c: &mut [f64],
-    ldc: usize,
-    mr: usize,
-    nr: usize,
-    overwrite: bool,
-) {
-    let mut acc = [[0.0f64; NR]; MR];
-    for p in 0..kc {
-        let ar = &ap[p * MR..p * MR + MR];
-        let br = &bp[p * NR..p * NR + NR];
-        for i in 0..MR {
-            for j in 0..NR {
-                acc[i][j] = fmadd(ar[i], br[j], acc[i][j]);
-            }
-        }
-    }
-    for (i, arow) in acc.iter().enumerate().take(mr) {
-        let crow = &mut c[i * ldc..i * ldc + nr];
-        if overwrite {
-            for (cv, &av) in crow.iter_mut().zip(arow) {
-                *cv = av;
-            }
-        } else {
-            for (cv, &av) in crow.iter_mut().zip(arow) {
-                *cv += av;
             }
         }
     }
@@ -176,14 +147,23 @@ fn micro_kernel(
 /// Pack an `[mc, kc]` block of A (row-major, leading dim `lda`) into
 /// MR-tall panels: panel `i0/MR` stores column p as MR consecutive rows,
 /// zero-padded past `mc`.
-fn pack_a(a: &[f64], lda: usize, ic: usize, pc: usize, mc: usize, kc: usize, ap: &mut [f64]) {
-    for pi in 0..mc.div_ceil(MR) {
-        let i0 = pi * MR;
-        let dst = &mut ap[pi * MR * kc..(pi + 1) * MR * kc];
+fn pack_a<E: Element>(
+    a: &[E],
+    lda: usize,
+    ic: usize,
+    pc: usize,
+    mc: usize,
+    kc: usize,
+    ap: &mut [E],
+) {
+    let mr_t = E::MR;
+    for pi in 0..mc.div_ceil(mr_t) {
+        let i0 = pi * mr_t;
+        let dst = &mut ap[pi * mr_t * kc..(pi + 1) * mr_t * kc];
         for p in 0..kc {
-            for r in 0..MR {
+            for r in 0..mr_t {
                 let row = i0 + r;
-                dst[p * MR + r] = if row < mc { a[(ic + row) * lda + pc + p] } else { 0.0 };
+                dst[p * mr_t + r] = if row < mc { a[(ic + row) * lda + pc + p] } else { E::ZERO };
             }
         }
     }
@@ -192,17 +172,26 @@ fn pack_a(a: &[f64], lda: usize, ic: usize, pc: usize, mc: usize, kc: usize, ap:
 /// Pack a `[kc, nc]` block of B (row-major, leading dim `ldb`) into
 /// NR-wide panels: panel `j0/NR` stores row p as NR consecutive columns,
 /// zero-padded past `nc`.
-fn pack_b(b: &[f64], ldb: usize, pc: usize, jc: usize, kc: usize, nc: usize, bp: &mut [f64]) {
-    for pj in 0..nc.div_ceil(NR) {
-        let j0 = pj * NR;
-        let cols = NR.min(nc - j0);
-        let dst = &mut bp[pj * NR * kc..(pj + 1) * NR * kc];
+fn pack_b<E: Element>(
+    b: &[E],
+    ldb: usize,
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+    bp: &mut [E],
+) {
+    let nr_t = E::NR;
+    for pj in 0..nc.div_ceil(nr_t) {
+        let j0 = pj * nr_t;
+        let cols = nr_t.min(nc - j0);
+        let dst = &mut bp[pj * nr_t * kc..(pj + 1) * nr_t * kc];
         for p in 0..kc {
             let src = &b[(pc + p) * ldb + jc + j0..(pc + p) * ldb + jc + j0 + cols];
-            let d = &mut dst[p * NR..(p + 1) * NR];
+            let d = &mut dst[p * nr_t..(p + 1) * nr_t];
             d[..cols].copy_from_slice(src);
             for slot in d[cols..].iter_mut() {
-                *slot = 0.0;
+                *slot = E::ZERO;
             }
         }
     }
@@ -210,13 +199,13 @@ fn pack_b(b: &[f64], ldb: usize, pc: usize, jc: usize, kc: usize, nc: usize, bp:
 
 /// Straight-line fallback for shapes below the blocking break-even: no
 /// packing, no zero-skip branch, row-major streaming over B.
-fn gemm_small(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+fn gemm_small<E: Element>(m: usize, k: usize, n: usize, a: &[E], b: &[E], c: &mut [E]) {
     debug_assert!(m * k == a.len() && k * n == b.len() && m * n == c.len());
     for (crow, arow) in c.chunks_exact_mut(n).zip(a.chunks_exact(k)) {
-        crow.fill(0.0);
+        crow.fill(E::ZERO);
         for (&av, brow) in arow.iter().zip(b.chunks_exact(n)) {
             for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv = fmadd(av, bv, *cv);
+                *cv = E::fmadd(av, bv, *cv);
             }
         }
     }
@@ -224,13 +213,13 @@ fn gemm_small(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64])
 
 /// The zero-skip saxpy loop (the seed's matmul): [`gemm`]'s fast path
 /// for sparse A, where it does ~nnz/len of the dense work.
-fn gemm_skip(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
-    c.fill(0.0);
+fn gemm_skip<E: Element>(m: usize, k: usize, n: usize, a: &[E], b: &[E], c: &mut [E]) {
+    c.fill(E::ZERO);
     for r in 0..m {
         let xrow = &a[r * k..(r + 1) * k];
         let orow = &mut c[r * n..(r + 1) * n];
         for (p, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
+            if xv == E::ZERO {
                 continue;
             }
             let wrow = &b[p * n..(p + 1) * n];
@@ -244,7 +233,7 @@ fn gemm_skip(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) 
 /// The seed's naive matmul, kept verbatim as the property-test oracle
 /// and the `kernel_micro` bench baseline: row-major triple loop with the
 /// branchy per-element zero-skip.
-pub fn gemm_reference(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+pub fn gemm_reference<E: Element>(m: usize, k: usize, n: usize, a: &[E], b: &[E], c: &mut [E]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
@@ -254,7 +243,7 @@ pub fn gemm_reference(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mu
 /// Blocked 2-D transpose `dst[j, i] = src[i, j]` (`src` is `[rows, cols]`
 /// row-major): 32 × 32 tiles so both sides stream through cache lines
 /// instead of striding one of them.
-pub fn transpose2_into(src: &[f64], rows: usize, cols: usize, dst: &mut [f64]) {
+pub fn transpose2_into<E: Element>(src: &[E], rows: usize, cols: usize, dst: &mut [E]) {
     assert_eq!(src.len(), rows * cols, "transpose2_into: src is not [{rows}, {cols}]");
     assert_eq!(dst.len(), rows * cols, "transpose2_into: dst size mismatch");
     const TB: usize = 32;
@@ -299,6 +288,28 @@ mod tests {
         }
     }
 
+    fn assert_matches_reference_f32(m: usize, k: usize, n: usize, rng: &mut Rng) {
+        let a: Vec<f32> = random_mat(rng, m * k, true).iter().map(|&v| v as f32).collect();
+        let b: Vec<f32> = random_mat(rng, k * n, false).iter().map(|&v| v as f32).collect();
+        let mut want = vec![f32::NAN; m * n];
+        let mut got = vec![f32::NAN; m * n];
+        let mut acc64 = vec![f32::NAN; m * n];
+        gemm_reference(m, k, n, &a, &b, &mut want);
+        gemm(m, k, n, &a, &b, &mut got);
+        gemm_with(m, k, n, &a, &b, &mut acc64, true);
+        // k-term f32 dot products reorder under tiling: tolerance scales
+        // with the contraction depth.
+        let tol = 1e-5f32 * (1.0 + k as f32 / 64.0);
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            let rel = (w - g).abs() / (1.0 + w.abs());
+            assert!(rel <= tol, "f32 ({m}x{k}x{n}) elem {i}: {g} vs reference {w}");
+        }
+        for (i, (w, g)) in want.iter().zip(&acc64).enumerate() {
+            let rel = (w - g).abs() / (1.0 + w.abs());
+            assert!(rel <= tol, "f32a64 ({m}x{k}x{n}) elem {i}: {g} vs reference {w}");
+        }
+    }
+
     #[test]
     fn gemm_matches_reference_on_fixed_edge_shapes() {
         let mut rng = Rng::new(41);
@@ -329,6 +340,29 @@ mod tests {
             let k = 1 + rng.below(70);
             let n = 1 + rng.below(48);
             assert_matches_reference(m, k, n, &mut rng);
+        }
+    }
+
+    #[test]
+    fn f32_gemm_matches_its_reference_on_edge_and_random_shapes() {
+        let mut rng = Rng::new(48);
+        for (m, k, n) in [
+            (0, 3, 4),
+            (1, 1, 1),
+            (1, 64, 1),
+            (4, 8, 8),
+            (7, 5, 9),
+            (33, 17, 29),
+            (130, 37, 6),
+            (64, 300, 12),
+        ] {
+            assert_matches_reference_f32(m, k, n, &mut rng);
+        }
+        for _ in 0..20 {
+            let m = rng.below(80);
+            let k = 1 + rng.below(70);
+            let n = 1 + rng.below(48);
+            assert_matches_reference_f32(m, k, n, &mut rng);
         }
     }
 

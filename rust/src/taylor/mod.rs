@@ -19,6 +19,7 @@
 //! * [`count`] — the paper's propagated-vector cost model (table F2).
 
 pub mod count;
+pub mod element;
 pub mod graph;
 pub mod hlo_emit;
 pub mod interp;
@@ -31,5 +32,6 @@ pub mod rules;
 pub mod tensor;
 pub mod trace;
 
+pub use element::{Element, Precision};
 pub use jet::{Collapse, Jet};
 pub use tensor::Tensor;

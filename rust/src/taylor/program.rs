@@ -7,7 +7,12 @@
 //!    cheap algebraic identities (x·0, x+0, 1·x, scale-by-1) and CSE, so
 //!    the shared Faà-di-Bruno powers (x₁², x₁³, …) are computed once;
 //! 2. **fusion** — runs of single-use `Scale`/`AddConst`/`Unary` nodes
-//!    become one fused elementwise instruction (one pass over the data);
+//!    become one fused elementwise instruction (one pass over the data),
+//!    and the tanh-derivative chains emitted by `trace.rs` collapse into
+//!    a single [`Instr::JetTanh`] that evaluates tanh once per element
+//!    and derives every degree-K channel via the closed-form u = 1 − t²
+//!    recurrence (each channel block written exactly once, mirroring the
+//!    Pallas `jet_tanh` kernel);
 //! 3. **buffer planning** — a liveness sweep assigns every instruction an
 //!    arena register, reusing dead buffers of the same size and writing
 //!    elementwise results in place when the producer dies at its consumer.
@@ -22,11 +27,17 @@
 //! [`Program::execute`] remains as a thin allocate-per-call wrapper for
 //! one-shot callers, and `interp::eval` remains the reference
 //! interpreter the VM is property-tested against.
+//!
+//! Graphs are traced and simplified in f64, so compilation always
+//! produces a `Program<f64>`; [`Program::cast`] re-embeds the planned
+//! program (constants, weights, arena plan) in another [`Element`] type
+//! for reduced-precision serving.
 
 use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
+use super::element::{cast_slice, Element};
 use super::graph::{Graph, Op, UnaryKind};
 use super::interp;
 use super::kernels;
@@ -42,12 +53,23 @@ pub enum EwOp {
 
 impl EwOp {
     #[inline]
-    fn apply(&self, x: f64) -> f64 {
+    fn apply<E: Element>(&self, x: E) -> E {
         match self {
-            EwOp::Scale(s) => x * s,
-            EwOp::AddConst(s) => x + s,
-            EwOp::Unary(k) => k.apply(x),
+            EwOp::Scale(s) => x * E::from_f64(*s),
+            EwOp::AddConst(s) => x + E::from_f64(*s),
+            EwOp::Unary(k) => unary_apply(*k, x),
         }
+    }
+}
+
+#[inline]
+fn unary_apply<E: Element>(k: UnaryKind, x: E) -> E {
+    match k {
+        UnaryKind::Tanh => x.tanh(),
+        UnaryKind::Sin => x.sin(),
+        UnaryKind::Cos => x.cos(),
+        UnaryKind::Exp => x.exp(),
+        UnaryKind::Neg => -x,
     }
 }
 
@@ -81,6 +103,13 @@ pub enum Instr {
     Ew { src: Operand, chain: Vec<EwOp>, dst: usize },
     MatMul { src: Operand, w: usize, dst: usize },
     AddBias { src: Operand, b: usize, dst: usize },
+    /// Fused tanh-jet: one pass over `src` computing `t = tanh(x)` once
+    /// per element and writing every materialized derivative channel via
+    /// the closed-form u = 1 − t² recurrence.  `dsts[m]` is the register
+    /// for the order-m derivative (0 = t, 1 = u, 2 = −2tu, 3 = u(6t²−2),
+    /// 4 = tu(16−24t²)); `None` marks a channel the graph never reads.
+    /// `src` never aliases a destination register.
+    JetTanh { src: Operand, dsts: Vec<Option<usize>> },
 }
 
 impl Instr {
@@ -92,20 +121,35 @@ impl Instr {
             | Instr::Ew { dst, .. }
             | Instr::MatMul { dst, .. }
             | Instr::AddBias { dst, .. } => *dst,
+            Instr::JetTanh { .. } => unreachable!("JetTanh writes multiple destinations"),
+        }
+    }
+
+    /// Degree (highest derivative channel) of a fused tanh-jet
+    /// instruction; `None` for every other instruction.  Lets callers
+    /// introspect compiled programs without matching on [`Instr`].
+    pub fn jet_tanh_degree(&self) -> Option<usize> {
+        match self {
+            Instr::JetTanh { dsts, .. } => Some(dsts.len() - 1),
+            _ => None,
         }
     }
 }
 
-/// A compiled, buffer-planned linear program.
+/// A compiled, buffer-planned linear program over element type `E`.
+///
+/// Compilation always happens in f64 ([`compile`]); a reduced-precision
+/// program is obtained with [`Program::cast`], which re-embeds the
+/// constants and weight vectors without re-planning.
 #[derive(Debug, Clone)]
-pub struct Program {
+pub struct Program<E: Element = f64> {
     pub instrs: Vec<Instr>,
     /// Output shape per instruction (parallel to `instrs`).
     pub instr_shapes: Vec<Vec<usize>>,
     /// Embedded tensors: graph constants, matmul weights, biases.
-    pub consts: Vec<Tensor>,
+    pub consts: Vec<Tensor<E>>,
     /// Deduplicated weighted-sum weight vectors.
-    pub weight_vecs: Vec<Vec<f64>>,
+    pub weight_vecs: Vec<Vec<E>>,
     /// Element count of each arena register.
     pub reg_len: Vec<usize>,
     pub outputs: Vec<Operand>,
@@ -114,6 +158,9 @@ pub struct Program {
     pub input_shapes: Vec<Vec<usize>>,
     /// Static FLOP estimate of the simplified graph.
     pub flops: u64,
+    /// Accumulate `MatMul` in f64 even when `E` is f32 (the
+    /// mixed-precision GEMM path; a no-op for `E = f64`).
+    pub accumulate_f64: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -287,6 +334,114 @@ pub fn simplify(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Graph> {
 }
 
 // ---------------------------------------------------------------------------
+// Tanh-jet cluster matching
+// ---------------------------------------------------------------------------
+
+/// A recognized tanh-derivative cluster rooted at a `Unary(Tanh)` node.
+///
+/// `derivs[m]` is the simplified-graph node holding the order-m channel
+/// (0 = t itself, 1 = u = 1 − t², 2 = −2tu, 3 = u(6t² − 2),
+/// 4 = tu(16 − 24t²)); `None` marks a channel the graph never built.
+/// `interior` lists the intermediate nodes (t², −t², 6t², …) that the
+/// fused instruction computes on the fly and which therefore must have
+/// no readers outside the cluster.
+struct TanhCluster {
+    /// The tanh argument node.
+    x: usize,
+    derivs: Vec<Option<usize>>,
+    interior: Vec<usize>,
+}
+
+/// Recognize the tanh-derivative chains `trace.rs::tanh_derivs` emits
+/// (post-simplify, so CSE has already canonicalized the shared t² and tu
+/// products).  Matching is structural and conservative: a cluster is
+/// dropped whole if any intermediate has a reader outside the cluster or
+/// is itself a program output, so fusion can never change which values
+/// exist — only how they are computed.
+fn match_jet_tanh(s: &Graph) -> Vec<TanhCluster> {
+    let n = s.nodes.len();
+    let mut users: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (j, node) in s.nodes.iter().enumerate() {
+        for &a in &node.args {
+            users[a].push(j);
+        }
+    }
+    let mut is_output = vec![false; n];
+    for &o in &s.outputs {
+        is_output[o] = true;
+    }
+    let scale_of = |id: usize, c: f64| matches!(s.nodes[id].op, Op::Scale(v) if v == c);
+    let addc_of = |id: usize, c: f64| matches!(s.nodes[id].op, Op::AddConst(v) if v == c);
+    // The unique user of `from` satisfying `pred` (bail on ambiguity —
+    // CSE makes duplicates impossible, but stay conservative).
+    let user_where = |from: usize, pred: &dyn Fn(usize) -> bool| -> Option<usize> {
+        let mut hit = None;
+        for &u in &users[from] {
+            if pred(u) {
+                if hit.is_some() {
+                    return None;
+                }
+                hit = Some(u);
+            }
+        }
+        hit
+    };
+    // The Mul node computing a·b, in either argument order.
+    let mul_of = |a: usize, b: usize| -> Option<usize> {
+        users[a].iter().copied().find(|&u| {
+            matches!(s.nodes[u].op, Op::Mul)
+                && (s.nodes[u].args == [a, b] || s.nodes[u].args == [b, a])
+        })
+    };
+
+    let mut clusters: Vec<TanhCluster> = Vec::new();
+    for (t, node) in s.nodes.iter().enumerate() {
+        if !matches!(node.op, Op::Unary(UnaryKind::Tanh)) {
+            continue;
+        }
+        let x = node.args[0];
+        // u = 1 − t², materialized by the tracer as AddConst(1)·Scale(−1)·t².
+        let Some(sq) = mul_of(t, t) else { continue };
+        let Some(negsq) = user_where(sq, &|v| scale_of(v, -1.0)) else { continue };
+        let Some(u) = user_where(negsq, &|v| addc_of(v, 1.0)) else { continue };
+        let tu = mul_of(t, u);
+        let d2 = tu.and_then(|tu| user_where(tu, &|v| scale_of(v, -2.0)));
+        let sq6 = user_where(sq, &|v| scale_of(v, 6.0));
+        let inner3 = sq6.and_then(|s6| user_where(s6, &|v| addc_of(v, -2.0)));
+        let d3 = inner3.and_then(|i3| mul_of(u, i3));
+        let sq24 = user_where(sq, &|v| scale_of(v, -24.0));
+        let inner4 = sq24.and_then(|s24| user_where(s24, &|v| addc_of(v, 16.0)));
+        let d4 = tu.and_then(|tu| inner4.and_then(|i4| mul_of(tu, i4)));
+
+        let mut derivs: Vec<Option<usize>> = vec![Some(t), Some(u), d2, d3, d4];
+        while derivs.len() > 2 && matches!(derivs.last(), Some(None)) {
+            derivs.pop();
+        }
+        let mut interior = vec![sq, negsq];
+        if d2.is_some() || d4.is_some() {
+            interior.push(tu.expect("d2/d4 imply tu"));
+        }
+        if d3.is_some() {
+            interior.push(sq6.expect("d3 implies sq6"));
+            interior.push(inner3.expect("d3 implies inner3"));
+        }
+        if d4.is_some() {
+            interior.push(sq24.expect("d4 implies sq24"));
+            interior.push(inner4.expect("d4 implies inner4"));
+        }
+        let members: Vec<usize> =
+            interior.iter().copied().chain(derivs.iter().flatten().copied()).collect();
+        let valid = interior
+            .iter()
+            .all(|&i| !is_output[i] && users[i].iter().all(|v| members.contains(v)));
+        if valid {
+            clusters.push(TanhCluster { x, derivs, interior });
+        }
+    }
+    clusters
+}
+
+// ---------------------------------------------------------------------------
 // Compile: fusion + liveness-planned register allocation
 // ---------------------------------------------------------------------------
 
@@ -323,13 +478,54 @@ fn intern_weights(pool: &mut Vec<Vec<f64>>, w: &[f64]) -> usize {
     }
 }
 
+/// Compile-time options for [`compile_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct CompileOpts {
+    /// Recognize tanh-derivative chains and emit fused
+    /// [`Instr::JetTanh`] instructions (on by default; the unfused path
+    /// exists for A/B testing — in f64 the two are bitwise identical).
+    pub fuse_jet_tanh: bool,
+}
+
+impl Default for CompileOpts {
+    fn default() -> CompileOpts {
+        CompileOpts { fuse_jet_tanh: true }
+    }
+}
+
+/// Compile a graph into a buffer-planned [`Program`] for the given input
+/// shapes, with default options (tanh-jet fusion on).
+pub fn compile(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Program> {
+    compile_with(graph, input_shapes, CompileOpts::default())
+}
+
 /// Compile a graph into a buffer-planned [`Program`] for the given input
 /// shapes.
-pub fn compile(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Program> {
+pub fn compile_with(
+    graph: &Graph,
+    input_shapes: &[Vec<usize>],
+    opts: CompileOpts,
+) -> Result<Program> {
     let s = simplify(graph, input_shapes)?;
     let shapes = interp::infer_shapes(&s, input_shapes)?;
     let flops = interp::flops(&s, input_shapes)?;
     let n = s.nodes.len();
+
+    // Tanh-jet clusters: interiors vanish into the fused instruction,
+    // secondary channels (u, d2, …) are materialized by the head.
+    let clusters = if opts.fuse_jet_tanh { match_jet_tanh(&s) } else { Vec::new() };
+    let mut covered = vec![false; n];
+    let mut secondary = vec![false; n];
+    let mut head: BTreeMap<usize, usize> = BTreeMap::new();
+    for (ci, c) in clusters.iter().enumerate() {
+        for &i in &c.interior {
+            covered[i] = true;
+        }
+        for &d in c.derivs.iter().skip(1).flatten() {
+            secondary[d] = true;
+        }
+        head.insert(c.derivs[0].expect("cluster head is always materialized"), ci);
+    }
 
     // uses + unique user, for elementwise-chain fusion
     let mut uses = vec![0usize; n];
@@ -344,12 +540,23 @@ pub fn compile(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Program> {
     for &o in &s.outputs {
         is_output[o] = true;
     }
-    // An elementwise node is absorbed into its unique elementwise consumer.
+    // An elementwise node is absorbed into its unique elementwise
+    // consumer.  Cluster members never participate: interiors are gone,
+    // heads and secondaries must stay materialized, and a chain may not
+    // cross into a fused head (its src is read directly by JetTanh).
     let mut absorbed = vec![false; n];
     for i in 0..n {
+        if covered[i] || secondary[i] || head.contains_key(&i) {
+            continue;
+        }
         if is_ew_op(&s.nodes[i].op) && !is_output[i] && uses[i] == 1 {
             let j = single_user[i];
-            if j != usize::MAX && is_ew_op(&s.nodes[j].op) {
+            if j != usize::MAX
+                && is_ew_op(&s.nodes[j].op)
+                && !covered[j]
+                && !secondary[j]
+                && !head.contains_key(&j)
+            {
                 absorbed[i] = true;
             }
         }
@@ -365,17 +572,24 @@ pub fn compile(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Program> {
         ops.reverse();
         (cur, ops)
     };
-    let is_value_node =
-        |j: usize| !absorbed[j] && !matches!(s.nodes[j].op, Op::Input { .. } | Op::Const(_));
+    let is_value_node = |j: usize| {
+        !absorbed[j]
+            && !covered[j]
+            && !secondary[j]
+            && !matches!(s.nodes[j].op, Op::Input { .. } | Op::Const(_))
+    };
 
     // Liveness over *emitted* reads: the VM frees a register after the last
-    // instruction that reads it.
+    // instruction that reads it.  A fused head reads only the tanh input;
+    // secondary channels are read by their ordinary consumers.
     let mut last_use = vec![0usize; n];
     for j in 0..n {
         if !is_value_node(j) {
             continue;
         }
-        let reads: Vec<usize> = if is_ew_op(&s.nodes[j].op) {
+        let reads: Vec<usize> = if let Some(&ci) = head.get(&j) {
+            vec![clusters[ci].x]
+        } else if is_ew_op(&s.nodes[j].op) {
             vec![chain_of(j).0]
         } else {
             s.nodes[j].args.clone()
@@ -409,7 +623,7 @@ pub fn compile(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Program> {
             }
             _ => {}
         }
-        if absorbed[j] {
+        if absorbed[j] || covered[j] || secondary[j] {
             continue;
         }
         let elems: usize = shapes[j].iter().product();
@@ -419,6 +633,35 @@ pub fn compile(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Program> {
                 None => Operand::Reg(reg_of[x]),
             }
         };
+        if let Some(&ci) = head.get(&j) {
+            // Fused tanh-jet head: allocate one register per materialized
+            // channel (all share the head's shape).  The source register,
+            // if dying here, is released only *after* the allocations so
+            // no destination can alias it.
+            let c = &clusters[ci];
+            let src = operand_of(c.x, &oper, &reg_of);
+            let mut dsts: Vec<Option<usize>> = Vec::with_capacity(c.derivs.len());
+            for d in &c.derivs {
+                dsts.push(d.map(|node| {
+                    let r = match free.get_mut(&elems).and_then(|v| v.pop()) {
+                        Some(r) => r,
+                        None => {
+                            reg_len.push(elems);
+                            reg_len.len() - 1
+                        }
+                    };
+                    reg_of[node] = r;
+                    r
+                }));
+            }
+            instrs.push(Instr::JetTanh { src, dsts });
+            instr_shapes.push(shapes[j].clone());
+            let r = reg_of[c.x];
+            if r != usize::MAX && last_use[c.x] == j {
+                free.entry(reg_len[r]).or_default().push(r);
+            }
+            continue;
+        }
         // Source node ids (for liveness) and the in-place candidate: a
         // register-backed source that dies here and has the output shape.
         let (srcs, inplace): (Vec<usize>, Option<usize>) = match &s.nodes[j].op {
@@ -532,6 +775,7 @@ pub fn compile(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Program> {
         num_inputs: s.num_inputs,
         input_shapes: input_shapes.to_vec(),
         flops,
+        accumulate_f64: false,
     })
 }
 
@@ -539,12 +783,12 @@ pub fn compile(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Program> {
 // The VM
 // ---------------------------------------------------------------------------
 
-fn resolve<'a>(
+fn resolve<'a, E: Element>(
     o: Operand,
-    regs: &'a [Tensor],
-    inputs: &'a [&'a Tensor],
-    consts: &'a [Tensor],
-) -> &'a Tensor {
+    regs: &'a [Tensor<E>],
+    inputs: &'a [&'a Tensor<E>],
+    consts: &'a [Tensor<E>],
+) -> &'a Tensor<E> {
     match o {
         Operand::Reg(r) => &regs[r],
         Operand::Input(i) => inputs[i],
@@ -558,13 +802,19 @@ fn resolve<'a>(
 /// is handed (first use per program allocates; subsequent calls with the
 /// same register plan reuse every buffer — pointer-stable, see the
 /// `perf_exec` tests).
-#[derive(Debug, Default)]
-pub struct ExecArena {
-    regs: Vec<Tensor>,
+#[derive(Debug)]
+pub struct ExecArena<E: Element = f64> {
+    regs: Vec<Tensor<E>>,
 }
 
-impl ExecArena {
-    pub fn new() -> ExecArena {
+impl<E: Element> Default for ExecArena<E> {
+    fn default() -> ExecArena<E> {
+        ExecArena { regs: Vec::new() }
+    }
+}
+
+impl<E: Element> ExecArena<E> {
+    pub fn new() -> ExecArena<E> {
         ExecArena::default()
     }
 
@@ -578,7 +828,7 @@ impl ExecArena {
         }
         self.regs.clear();
         for &e in reg_len {
-            self.regs.push(Tensor { shape: vec![e], data: vec![0.0; e] });
+            self.regs.push(Tensor { shape: vec![e], data: vec![E::ZERO; e] });
         }
     }
 
@@ -589,7 +839,7 @@ impl ExecArena {
     }
 }
 
-fn bin_fn(kind: BinKind) -> fn(f64, f64) -> f64 {
+fn bin_fn<E: Element>(kind: BinKind) -> fn(E, E) -> E {
     match kind {
         BinKind::Add => |x, y| x + y,
         BinKind::Sub => |x, y| x - y,
@@ -599,7 +849,7 @@ fn bin_fn(kind: BinKind) -> fn(f64, f64) -> f64 {
 
 /// `out = a ∘ b` with suffix broadcasting (the smaller operand repeats
 /// along the extra leading axes of the larger).
-fn bin_into(f: fn(f64, f64) -> f64, a: &Tensor, b: &Tensor, out: &mut Tensor) {
+fn bin_into<E: Element>(f: fn(E, E) -> E, a: &Tensor<E>, b: &Tensor<E>, out: &mut Tensor<E>) {
     if a.data.len() == b.data.len() {
         for ((o, &x), &y) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
             *o = f(x, y);
@@ -621,13 +871,13 @@ fn bin_into(f: fn(f64, f64) -> f64, a: &Tensor, b: &Tensor, out: &mut Tensor) {
     }
 }
 
-impl Program {
+impl<E: Element> Program<E> {
     /// Execute on the given inputs; returns freshly allocated outputs.
     /// Thin compatibility wrapper over [`Program::execute_with`] for
     /// one-shot callers (tests, benches); serving paths hold an
     /// [`ExecArena`] and output buffers instead.
-    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let refs: Vec<&Tensor> = inputs.iter().collect();
+    pub fn execute(&self, inputs: &[Tensor<E>]) -> Result<Vec<Tensor<E>>> {
+        let refs: Vec<&Tensor<E>> = inputs.iter().collect();
         let mut arena = ExecArena::new();
         let mut outs = Vec::new();
         self.execute_with(&mut arena, &refs, &mut outs)?;
@@ -643,9 +893,9 @@ impl Program {
     /// performs zero heap allocations.
     pub fn execute_with(
         &self,
-        arena: &mut ExecArena,
-        inputs: &[&Tensor],
-        outs: &mut Vec<Tensor>,
+        arena: &mut ExecArena<E>,
+        inputs: &[&Tensor<E>],
+        outs: &mut Vec<Tensor<E>>,
     ) -> Result<()> {
         ensure!(
             inputs.len() >= self.num_inputs,
@@ -670,7 +920,7 @@ impl Program {
         }
         for (&o, out) in self.outputs.iter().zip(outs.iter_mut()) {
             let src = resolve(o, &arena.regs, inputs, &self.consts);
-            out.data.resize(src.data.len(), 0.0);
+            out.data.resize(src.data.len(), E::ZERO);
             out.data.copy_from_slice(&src.data);
             out.shape.clear();
             out.shape.extend_from_slice(&src.shape);
@@ -678,7 +928,17 @@ impl Program {
         Ok(())
     }
 
-    fn step(&self, instr: &Instr, out_shape: &[usize], regs: &mut [Tensor], inputs: &[&Tensor]) {
+    fn step(
+        &self,
+        instr: &Instr,
+        out_shape: &[usize],
+        regs: &mut [Tensor<E>],
+        inputs: &[&Tensor<E>],
+    ) {
+        if let Instr::JetTanh { src, dsts } = instr {
+            self.step_jet_tanh(*src, dsts, out_shape, regs, inputs);
+            return;
+        }
         let dst = instr.dst();
         // Take the destination buffer out so sources can be read from the
         // arena without aliasing; aliased in-place operands use `out`.
@@ -695,7 +955,7 @@ impl Program {
             Instr::SumDirs { src, weights, .. } => {
                 let s = resolve(*src, regs, inputs, &self.consts);
                 let rest = out.data.len().max(1);
-                out.data.fill(0.0);
+                out.data.fill(E::ZERO);
                 match weights {
                     None => {
                         for chunk in s.data.chunks(rest) {
@@ -706,7 +966,7 @@ impl Program {
                     }
                     Some(w) => {
                         for (chunk, &wr) in s.data.chunks(rest).zip(&self.weight_vecs[*w]) {
-                            if wr == 0.0 {
+                            if wr == E::ZERO {
                                 continue;
                             }
                             for (o, &v) in out.data.iter_mut().zip(chunk) {
@@ -717,7 +977,7 @@ impl Program {
                 }
             }
             Instr::Bin { kind, a, b, dst } => {
-                let f = bin_fn(*kind);
+                let f = bin_fn::<E>(*kind);
                 let a_alias = matches!(a, Operand::Reg(r) if r == dst);
                 let b_alias = matches!(b, Operand::Reg(r) if r == dst);
                 if a_alias && b_alias {
@@ -770,7 +1030,8 @@ impl Program {
                 let wt = &self.consts[*w];
                 let (i, o_) = (wt.shape[0], wt.shape[1]);
                 let rows = x.data.len() / i.max(1);
-                kernels::gemm(rows, i, o_, &x.data, &wt.data, &mut out.data);
+                let acc = self.accumulate_f64;
+                kernels::gemm_with(rows, i, o_, &x.data, &wt.data, &mut out.data, acc);
             }
             Instr::AddBias { src, b, .. } => {
                 let x = resolve(*src, regs, inputs, &self.consts);
@@ -782,6 +1043,7 @@ impl Program {
                     }
                 }
             }
+            Instr::JetTanh { .. } => unreachable!("handled above"),
         }
         // clear+extend instead of `to_vec` so the shape vec's capacity is
         // reused across calls (the arena's zero-alloc steady state).
@@ -790,15 +1052,94 @@ impl Program {
         regs[dst] = out;
     }
 
+    /// One fused pass over the tanh input: `t = tanh(x)` is evaluated
+    /// once per element and every materialized derivative channel is
+    /// written from the closed-form u = 1 − t² recurrence.  The op order
+    /// mirrors the unfused `Mul`/`Scale`/`AddConst` chain exactly, so in
+    /// f64 the fused result is bitwise identical to the unfused one.
+    fn step_jet_tanh(
+        &self,
+        src: Operand,
+        dsts: &[Option<usize>],
+        out_shape: &[usize],
+        regs: &mut [Tensor<E>],
+        inputs: &[&Tensor<E>],
+    ) {
+        // Take every destination buffer out of the arena so the source
+        // can be read without aliasing (the planner guarantees `src`
+        // never shares a register with a destination).
+        let mut bufs: Vec<Option<Tensor<E>>> = Vec::with_capacity(dsts.len());
+        for d in dsts {
+            bufs.push(d.map(|r| {
+                std::mem::replace(&mut regs[r], Tensor { shape: Vec::new(), data: Vec::new() })
+            }));
+        }
+        let x = resolve(src, regs, inputs, &self.consts);
+        debug_assert!(bufs.iter().flatten().all(|b| b.data.len() == x.data.len()));
+        let cm2 = E::from_f64(-2.0);
+        let c6 = E::from_f64(6.0);
+        let cm24 = E::from_f64(-24.0);
+        let c16 = E::from_f64(16.0);
+        for (idx, &xv) in x.data.iter().enumerate() {
+            let t = xv.tanh();
+            let sq = t * t;
+            let u = E::ONE - sq;
+            let tu = t * u;
+            if let Some(b) = bufs[0].as_mut() {
+                b.data[idx] = t;
+            }
+            if let Some(b) = bufs[1].as_mut() {
+                b.data[idx] = u;
+            }
+            if let Some(b) = bufs.get_mut(2).and_then(|b| b.as_mut()) {
+                b.data[idx] = tu * cm2;
+            }
+            if let Some(b) = bufs.get_mut(3).and_then(|b| b.as_mut()) {
+                b.data[idx] = u * (sq * c6 + cm2);
+            }
+            if let Some(b) = bufs.get_mut(4).and_then(|b| b.as_mut()) {
+                b.data[idx] = tu * (sq * cm24 + c16);
+            }
+        }
+        for (d, buf) in dsts.iter().zip(bufs) {
+            if let (Some(r), Some(mut t)) = (d, buf) {
+                t.shape.clear();
+                t.shape.extend_from_slice(out_shape);
+                regs[*r] = t;
+            }
+        }
+    }
+
     /// Arena registers the program plans (reuse makes this far smaller
     /// than the instruction count on deep graphs).
     pub fn num_regs(&self) -> usize {
         self.reg_len.len()
     }
 
-    /// Peak arena bytes (f64) — the VM's non-differentiable memory proxy.
+    /// Peak arena bytes — the VM's non-differentiable memory proxy
+    /// (scales with the element width).
     pub fn arena_bytes(&self) -> usize {
-        self.reg_len.iter().sum::<usize>() * std::mem::size_of::<f64>()
+        self.reg_len.iter().sum::<usize>() * std::mem::size_of::<E>()
+    }
+
+    /// Re-embed the compiled program in another element type without
+    /// re-planning: the instruction stream, arena plan and liveness are
+    /// precision-independent, so only the constant tensors and weight
+    /// vectors are converted.  `accumulate_f64` selects the mixed-
+    /// precision GEMM path for the cast program's `MatMul`s.
+    pub fn cast<D: Element>(&self, accumulate_f64: bool) -> Program<D> {
+        Program {
+            instrs: self.instrs.clone(),
+            instr_shapes: self.instr_shapes.clone(),
+            consts: self.consts.iter().map(|t| t.cast()).collect(),
+            weight_vecs: self.weight_vecs.iter().map(|w| cast_slice(w)).collect(),
+            reg_len: self.reg_len.clone(),
+            outputs: self.outputs.clone(),
+            num_inputs: self.num_inputs,
+            input_shapes: self.input_shapes.clone(),
+            flops: self.flops,
+            accumulate_f64,
+        }
     }
 }
 
@@ -842,15 +1183,100 @@ mod tests {
         // The zero-seed chains fold away: strictly fewer nodes than the
         // trace, and no Replicate of the zero constant survives.
         assert!(s.nodes.len() < g.nodes.len());
-        let prog = compile(&g, &shapes).unwrap();
+        let plain = compile_with(&g, &shapes, CompileOpts { fuse_jet_tanh: false }).unwrap();
         // Buffer reuse: far fewer registers than instructions.
-        assert!(prog.num_regs() < prog.instrs.len());
+        assert!(plain.num_regs() < plain.instrs.len());
         // Fused chains exist (tanh-derivative scale/add runs).
-        let fused = prog
+        let fused = plain
             .instrs
             .iter()
             .any(|i| matches!(i, Instr::Ew { chain, .. } if chain.len() > 1));
         assert!(fused, "expected at least one fused elementwise chain");
+        // The default pipeline collapses those chains further, into fused
+        // tanh-jet instructions — strictly fewer instructions again.
+        let prog = compile(&g, &shapes).unwrap();
+        assert!(prog.instrs.iter().any(|i| i.jet_tanh_degree().is_some()));
+        assert!(prog.instrs.len() < plain.instrs.len());
+    }
+
+    #[test]
+    fn jet_tanh_is_fused_and_matches_unfused_bitwise() {
+        let mut rng = Rng::new(5);
+        let mlp = Mlp::init(&mut rng, 3, &[7, 5, 1], 2);
+        for order in 2..=4 {
+            let g = build_mlp_jet_std(&mlp, order, 3);
+            let x0 = mlp.random_input(&mut rng);
+            let dirs = basis_dirs(3, 2);
+            let shapes = vec![x0.shape.clone(), dirs.shape.clone()];
+            for graph in [g.clone(), collapse(&g, TAGGED_SLOTS, 3)] {
+                let fused = compile(&graph, &shapes).unwrap();
+                let plain =
+                    compile_with(&graph, &shapes, CompileOpts { fuse_jet_tanh: false }).unwrap();
+                let deg = fused.instrs.iter().filter_map(|i| i.jet_tanh_degree()).max();
+                assert_eq!(deg, Some(order), "fused degree at order {order}");
+                assert!(plain.instrs.iter().all(|i| i.jet_tanh_degree().is_none()));
+                assert!(fused.instrs.len() < plain.instrs.len());
+                let a = fused.execute(&[x0.clone(), dirs.clone()]).unwrap();
+                let b = plain.execute(&[x0.clone(), dirs.clone()]).unwrap();
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.shape, y.shape);
+                    assert_eq!(x.data, y.data, "fused tanh jet must be bitwise identical");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jet_tanh_fuses_degree_one_chains() {
+        // A bare u = 1 − tanh(x)² chain (degree 1) also fuses, with t and
+        // u both materialized and the intermediates gone.
+        let mut g = Graph::default();
+        let x = g.input(0);
+        let v = g.input(1);
+        let t = g.tanh(x);
+        let sq = g.mul(t, t);
+        let negsq = g.scale(sq, -1.0);
+        let u = g.add_const(negsq, 1.0);
+        let y = g.mul(u, v);
+        g.outputs = vec![t, y];
+        let shapes = vec![vec![3], vec![3]];
+        let fused = compile(&g, &shapes).unwrap();
+        let degs: Vec<usize> = fused.instrs.iter().filter_map(|i| i.jet_tanh_degree()).collect();
+        assert_eq!(degs, vec![1]);
+        let plain = compile_with(&g, &shapes, CompileOpts { fuse_jet_tanh: false }).unwrap();
+        let xs = [
+            Tensor::new(vec![3], vec![0.3, -1.2, 2.0]),
+            Tensor::new(vec![3], vec![1.0, 2.0, -0.5]),
+        ];
+        let a = fused.execute(&xs).unwrap();
+        let b = plain.execute(&xs).unwrap();
+        for (p, q) in a.iter().zip(&b) {
+            assert_eq!(p.shape, q.shape);
+            assert_eq!(p.data, q.data);
+        }
+    }
+
+    #[test]
+    fn cast_f32_program_tracks_the_f64_result() {
+        let mut rng = Rng::new(9);
+        let mlp = Mlp::init(&mut rng, 3, &[7, 5, 1], 2);
+        let g = build_mlp_jet_std(&mlp, 2, 3);
+        let x0 = mlp.random_input(&mut rng);
+        let dirs = basis_dirs(3, 2);
+        let shapes = vec![x0.shape.clone(), dirs.shape.clone()];
+        let cg = collapse(&g, TAGGED_SLOTS, 3);
+        let prog = compile(&cg, &shapes).unwrap();
+        let want = prog.execute(&[x0.clone(), dirs.clone()]).unwrap();
+        for acc in [false, true] {
+            let p32: Program<f32> = prog.cast(acc);
+            let got = p32.execute(&[x0.cast::<f32>(), dirs.cast::<f32>()]).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, b) in want.iter().zip(&got) {
+                let b64: Tensor = b.cast();
+                assert_eq!(a.shape, b64.shape);
+                assert!(a.max_abs_diff(&b64) < 1e-3, "acc={acc}");
+            }
+        }
     }
 
     #[test]

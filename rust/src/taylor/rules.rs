@@ -21,15 +21,30 @@ pub struct Tanh;
 
 impl DerivFamily for Tanh {
     fn derivatives(&self, x0: &Tensor, order: usize) -> Vec<Tensor> {
-        // Represent φ^(m) as a polynomial in t = tanh(x): start with P0 = t,
-        // then P_{m+1}(t) = P_m'(t) · (1 - t²).
+        // One tanh pass and one shared u = 1 − t² tensor feed every
+        // closed-form order ≤ 4 — the same algebra (and op order) the
+        // tracer's chains and the VM's fused `JetTanh` instruction use.
         let t = x0.map(f64::tanh);
-        let mut polys: Vec<Vec<f64>> = vec![vec![0.0, 1.0]]; // P0(t) = t
-        for _ in 0..order {
-            let p = polys.last().unwrap();
-            // derivative of p
+        if order == 0 {
+            return vec![t];
+        }
+        let u = t.map(|tv| 1.0 - tv * tv);
+        let mut out = Vec::with_capacity(order + 1);
+        for m in 0..=order.min(4) {
+            out.push(match m {
+                0 => t.clone(),
+                1 => u.clone(),
+                2 => t.zip(&u, |tv, uv| -2.0 * tv * uv),
+                3 => t.zip(&u, |tv, uv| uv * (6.0 * tv * tv - 2.0)),
+                _ => t.zip(&u, |tv, uv| tv * uv * (16.0 - 24.0 * tv * tv)),
+            });
+        }
+        // Orders ≥ 5 extend by the polynomial recurrence
+        // P_{m+1}(t) = P_m'(t)·(1 − t²) over the cached t, seeded from
+        // P4(t) = 24t⁵ − 40t³ + 16t.
+        let mut p: Vec<f64> = vec![0.0, 16.0, 0.0, -40.0, 0.0, 24.0];
+        for _ in 4..order {
             let dp: Vec<f64> = (1..p.len()).map(|i| p[i] * i as f64).collect();
-            // multiply by (1 - t²)
             let mut q = vec![0.0; dp.len() + 2];
             for (i, &c) in dp.iter().enumerate() {
                 q[i] += c;
@@ -38,12 +53,10 @@ impl DerivFamily for Tanh {
             while q.last() == Some(&0.0) && q.len() > 1 {
                 q.pop();
             }
-            polys.push(q);
+            p = q;
+            out.push(t.map(|tv| p.iter().rev().fold(0.0, |acc, &c| acc * tv + c)));
         }
-        polys
-            .iter()
-            .map(|p| t.map(|tv| p.iter().rev().fold(0.0, |acc, &c| acc * tv + c)))
-            .collect()
+        out
     }
 
     fn name(&self) -> &'static str {

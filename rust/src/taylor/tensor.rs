@@ -1,4 +1,7 @@
-//! Dense row-major f64 tensors for the native Taylor/nested-AD engines.
+//! Dense row-major tensors for the native Taylor/nested-AD engines,
+//! generic over the [`Element`] dtype (f64 by default — the tracing and
+//! oracle layers stay f64; f32 tensors appear when a compiled program is
+//! cast to serving precision).
 //!
 //! Deliberately minimal: exactly the operations jet propagation needs —
 //! elementwise arithmetic with *leading-axis broadcasting* (a `[B, H]`
@@ -8,16 +11,17 @@
 
 use std::fmt;
 
+use super::element::Element;
 use super::kernels;
 
-/// Dense row-major tensor of f64.
+/// Dense row-major tensor of `E` (f64 unless stated otherwise).
 #[derive(Clone, PartialEq)]
-pub struct Tensor {
+pub struct Tensor<E: Element = f64> {
     pub shape: Vec<usize>,
-    pub data: Vec<f64>,
+    pub data: Vec<E>,
 }
 
-impl fmt::Debug for Tensor {
+impl<E: Element> fmt::Debug for Tensor<E> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor{:?}", self.shape)?;
         if self.data.len() <= 8 {
@@ -27,8 +31,8 @@ impl fmt::Debug for Tensor {
     }
 }
 
-impl Tensor {
-    pub fn new(shape: Vec<usize>, data: Vec<f64>) -> Tensor {
+impl<E: Element> Tensor<E> {
+    pub fn new(shape: Vec<usize>, data: Vec<E>) -> Tensor<E> {
         assert_eq!(
             shape.iter().product::<usize>(),
             data.len(),
@@ -38,11 +42,11 @@ impl Tensor {
         Tensor { shape, data }
     }
 
-    pub fn zeros(shape: &[usize]) -> Tensor {
-        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    pub fn zeros(shape: &[usize]) -> Tensor<E> {
+        Tensor { shape: shape.to_vec(), data: vec![E::ZERO; shape.iter().product()] }
     }
 
-    pub fn scalar(v: f64) -> Tensor {
+    pub fn scalar(v: E) -> Tensor<E> {
         Tensor { shape: vec![], data: vec![v] }
     }
 
@@ -58,22 +62,31 @@ impl Tensor {
         self.shape.len()
     }
 
+    /// Element-converting copy: the bridge between the f64 compile world
+    /// and an f32 serving program (identity when `D == E`).
+    pub fn cast<D: Element>(&self) -> Tensor<D> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| D::from_f64(v.to_f64())).collect(),
+        }
+    }
+
     /// Apply f elementwise.
-    pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
+    pub fn map(&self, f: impl Fn(E) -> E) -> Tensor<E> {
         Tensor {
             shape: self.shape.clone(),
             data: self.data.iter().map(|&x| f(x)).collect(),
         }
     }
 
-    pub fn scale(&self, s: f64) -> Tensor {
+    pub fn scale(&self, s: E) -> Tensor<E> {
         self.map(|x| x * s)
     }
 
     /// Elementwise combine with leading-axis broadcasting: shapes must be
     /// equal, or one operand's shape must be a suffix of the other's (it is
     /// then repeated along the extra leading axes).
-    pub fn zip(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+    pub fn zip(&self, other: &Tensor<E>, f: impl Fn(E, E) -> E) -> Tensor<E> {
         if self.shape == other.shape {
             let data = self
                 .data
@@ -107,7 +120,7 @@ impl Tensor {
         panic!("incompatible shapes {:?} vs {:?}", self.shape, other.shape);
     }
 
-    pub fn add(&self, other: &Tensor) -> Tensor {
+    pub fn add(&self, other: &Tensor<E>) -> Tensor<E> {
         self.zip(other, |a, b| a + b)
     }
 
@@ -115,7 +128,7 @@ impl Tensor {
     /// suffix of it (it is repeated along the extra leading axes).  The
     /// in-place twin of [`Tensor::zip`] for the jet hot loops — no fresh
     /// allocation per combine.
-    fn zip_assign(&mut self, other: &Tensor, f: impl Fn(&mut f64, f64)) {
+    fn zip_assign(&mut self, other: &Tensor<E>, f: impl Fn(&mut E, E)) {
         assert!(
             is_suffix(&other.shape, &self.shape),
             "cannot assign-broadcast {:?} into {:?}",
@@ -140,22 +153,22 @@ impl Tensor {
     }
 
     /// `self += other` (suffix broadcast, in place).
-    pub fn add_assign(&mut self, other: &Tensor) {
+    pub fn add_assign(&mut self, other: &Tensor<E>) {
         self.zip_assign(other, |a, b| *a += b);
     }
 
     /// `self *= other` (suffix broadcast, in place).
-    pub fn mul_assign(&mut self, other: &Tensor) {
+    pub fn mul_assign(&mut self, other: &Tensor<E>) {
         self.zip_assign(other, |a, b| *a *= b);
     }
 
     /// `self += s · other` (suffix broadcast, in place).
-    pub fn add_scaled_assign(&mut self, other: &Tensor, s: f64) {
+    pub fn add_scaled_assign(&mut self, other: &Tensor<E>, s: E) {
         self.zip_assign(other, |a, b| *a += s * b);
     }
 
     /// `self *= s` in place.
-    pub fn scale_assign(&mut self, s: f64) {
+    pub fn scale_assign(&mut self, s: E) {
         for v in self.data.iter_mut() {
             *v *= s;
         }
@@ -166,7 +179,7 @@ impl Tensor {
     /// — rank, not element count: a `[1, B, D]` single-direction channel
     /// and a `[B, D]` derivative have equal lengths but broadcast to the
     /// rank-3 shape).
-    pub fn mul_into(&self, other: &Tensor, out: &mut Tensor) {
+    pub fn mul_into(&self, other: &Tensor<E>, out: &mut Tensor<E>) {
         let (big, small) = if self.rank() >= other.rank() {
             (&self.shape, &other.shape)
         } else {
@@ -202,7 +215,7 @@ impl Tensor {
     }
 
     /// Transpose a 2-D tensor: `[A, B] -> [B, A]` (cache-blocked).
-    pub fn transpose2(&self) -> Tensor {
+    pub fn transpose2(&self) -> Tensor<E> {
         assert_eq!(self.rank(), 2, "transpose2 needs a 2-D tensor");
         let (a, b) = (self.shape[0], self.shape[1]);
         let mut out = Tensor::zeros(&[b, a]);
@@ -210,18 +223,18 @@ impl Tensor {
         out
     }
 
-    pub fn sub(&self, other: &Tensor) -> Tensor {
+    pub fn sub(&self, other: &Tensor<E>) -> Tensor<E> {
         self.zip(other, |a, b| a - b)
     }
 
-    pub fn mul(&self, other: &Tensor) -> Tensor {
+    pub fn mul(&self, other: &Tensor<E>) -> Tensor<E> {
         self.zip(other, |a, b| a * b)
     }
 
     /// Matrix product on the trailing axis: self is `[..., I]`, w is
     /// `[I, O]`, result `[..., O]`.  Leading axes are treated as batch
     /// (flattened into GEMM rows for the tiled kernel).
-    pub fn matmul(&self, w: &Tensor) -> Tensor {
+    pub fn matmul(&self, w: &Tensor<E>) -> Tensor<E> {
         assert_eq!(w.rank(), 2, "weight must be 2-D");
         let (i, o) = (w.shape[0], w.shape[1]);
         assert_eq!(
@@ -232,7 +245,7 @@ impl Tensor {
             w.shape
         );
         let rows = self.data.len() / i.max(1);
-        let mut out = vec![0.0; rows * o];
+        let mut out = vec![E::ZERO; rows * o];
         kernels::gemm(rows, i, o, &self.data, &w.data, &mut out);
         let mut shape = self.shape.clone();
         *shape.last_mut().unwrap() = o;
@@ -240,17 +253,17 @@ impl Tensor {
     }
 
     /// Add a bias along the trailing axis (bias shape `[O]`).
-    pub fn add_bias(&self, b: &Tensor) -> Tensor {
+    pub fn add_bias(&self, b: &Tensor<E>) -> Tensor<E> {
         assert_eq!(b.rank(), 1);
         self.zip(b, |x, y| x + y)
     }
 
     /// Sum over the leading axis: `[R, ...] -> [...]`.
-    pub fn sum_axis0(&self) -> Tensor {
+    pub fn sum_axis0(&self) -> Tensor<E> {
         assert!(self.rank() >= 1, "sum_axis0 needs rank >= 1");
         let r = self.shape[0];
         let rest: usize = self.shape[1..].iter().product();
-        let mut out = vec![0.0; rest];
+        let mut out = vec![E::ZERO; rest];
         for chunk in self.data.chunks(rest.max(1)) {
             for (o, &v) in out.iter_mut().zip(chunk) {
                 *o += v;
@@ -263,13 +276,13 @@ impl Tensor {
     /// Weighted sum over the leading axis: `[R, ...] -> [...]`, Σ_r w[r]·self[r].
     /// Zero weights are skipped (plan bundles zero out directions that only
     /// feed lower-degree reads).
-    pub fn weighted_sum_axis0(&self, w: &[f64]) -> Tensor {
+    pub fn weighted_sum_axis0(&self, w: &[E]) -> Tensor<E> {
         assert!(self.rank() >= 1, "weighted_sum_axis0 needs rank >= 1");
         assert_eq!(self.shape[0], w.len(), "one weight per leading-axis row");
         let rest: usize = self.shape[1..].iter().product();
-        let mut out = vec![0.0; rest];
+        let mut out = vec![E::ZERO; rest];
         for (chunk, &wr) in self.data.chunks(rest.max(1)).zip(w) {
-            if wr == 0.0 {
+            if wr == E::ZERO {
                 continue;
             }
             for (o, &v) in out.iter_mut().zip(chunk) {
@@ -280,11 +293,11 @@ impl Tensor {
     }
 
     /// Sum rows `[start, start + len)` of the leading axis: `[R, ...] -> [...]`.
-    pub fn sum_axis0_range(&self, start: usize, len: usize) -> Tensor {
+    pub fn sum_axis0_range(&self, start: usize, len: usize) -> Tensor<E> {
         assert!(self.rank() >= 1, "sum_axis0_range needs rank >= 1");
         assert!(start + len <= self.shape[0], "row range out of bounds");
         let rest: usize = self.shape[1..].iter().product();
-        let mut out = vec![0.0; rest];
+        let mut out = vec![E::ZERO; rest];
         for r in start..start + len {
             for (o, &v) in out.iter_mut().zip(&self.data[r * rest..(r + 1) * rest]) {
                 *o += v;
@@ -296,7 +309,7 @@ impl Tensor {
     /// Repeat each leading-axis row `b` times along a new middle axis:
     /// `[R, D] -> [R, b, D]` — how `[R, D]` direction bundles broadcast
     /// over a batch (shared by the jet engine and the program VM inputs).
-    pub fn broadcast_rows(&self, b: usize) -> Tensor {
+    pub fn broadcast_rows(&self, b: usize) -> Tensor<E> {
         assert_eq!(self.rank(), 2, "broadcast_rows needs a [R, D] tensor");
         let (r, d) = (self.shape[0], self.shape[1]);
         let mut data = Vec::with_capacity(r * b * d);
@@ -309,7 +322,7 @@ impl Tensor {
     }
 
     /// Insert a new leading axis of size r by repetition: `[...] -> [r, ...]`.
-    pub fn replicate(&self, r: usize) -> Tensor {
+    pub fn replicate(&self, r: usize) -> Tensor<E> {
         let mut shape = Vec::with_capacity(self.rank() + 1);
         shape.push(r);
         shape.extend_from_slice(&self.shape);
@@ -321,7 +334,7 @@ impl Tensor {
     }
 
     /// Stack equal-shaped tensors along a new leading axis.
-    pub fn stack(items: &[Tensor]) -> Tensor {
+    pub fn stack(items: &[Tensor<E>]) -> Tensor<E> {
         assert!(!items.is_empty());
         let inner = items[0].shape.clone();
         let mut data = Vec::with_capacity(items.len() * items[0].len());
@@ -335,7 +348,7 @@ impl Tensor {
     }
 
     /// Index the leading axis: `[R, ...] -> [...]` (copy).
-    pub fn index_axis0(&self, idx: usize) -> Tensor {
+    pub fn index_axis0(&self, idx: usize) -> Tensor<E> {
         let rest: usize = self.shape[1..].iter().product();
         Tensor {
             shape: self.shape[1..].to_vec(),
@@ -343,13 +356,13 @@ impl Tensor {
         }
     }
 
-    /// Max |a - b| over all elements (shapes must match).
-    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+    /// Max |a - b| over all elements, in f64 (shapes must match).
+    pub fn max_abs_diff(&self, other: &Tensor<E>) -> f64 {
         assert_eq!(self.shape, other.shape);
         self.data
             .iter()
             .zip(&other.data)
-            .map(|(a, b)| (a - b).abs())
+            .map(|(&a, &b)| (a.to_f64() - b.to_f64()).abs())
             .fold(0.0, f64::max)
     }
 }
@@ -411,8 +424,8 @@ mod tests {
     #[test]
     #[should_panic]
     fn incompatible_shapes_panic() {
-        let a = Tensor::zeros(&[2, 3]);
-        let b = Tensor::zeros(&[4]);
+        let a: Tensor = Tensor::zeros(&[2, 3]);
+        let b: Tensor = Tensor::zeros(&[4]);
         a.add(&b);
     }
 
@@ -472,5 +485,18 @@ mod tests {
         let r = t.sum_axis0_range(1, 2);
         assert_eq!(r.data, vec![8., 10.]);
         assert_eq!(t.sum_axis0_range(0, 3).data, t.sum_axis0().data);
+    }
+
+    #[test]
+    fn cast_converts_between_precisions() {
+        let t = Tensor::new(vec![2], vec![0.5f64, -1.25]);
+        let t32: Tensor<f32> = t.cast();
+        assert_eq!(t32.data, vec![0.5f32, -1.25]);
+        let back: Tensor<f64> = t32.cast();
+        assert_eq!(back, t);
+        // f32 tensors run the same kernels.
+        let a: Tensor<f32> = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let w: Tensor<f32> = Tensor::new(vec![2, 2], vec![1., 0., 0., 1.]);
+        assert_eq!(a.matmul(&w).data, a.data);
     }
 }

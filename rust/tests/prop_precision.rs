@@ -1,0 +1,227 @@
+//! Cross-precision property tests: the f32 execution path (cast VM
+//! programs, SIMD microkernels, the `Precision::F32` engine) must track
+//! the f64 jet-engine oracle (`plan::apply`) on every registry route and
+//! every `OperatorSpec` preset, within degree-derived tolerances.
+//!
+//! Tolerance model (documented in docs/METHODOLOGY.md): a degree-K jet
+//! route in f32 loses roughly K compounding rounding stages on top of the
+//! ~1e-7 single-precision ulp, and the collapse weighted sum can cancel;
+//! we budget `1e-4` relative for the forward value and a per-degree
+//! operator budget relative to `1 + max|oracle|`.
+
+use ctaylor::api::{Collapse, Engine, Precision};
+use ctaylor::bench::workload;
+use ctaylor::mlp::Mlp;
+use ctaylor::operators::plan::{self, HELMHOLTZ_C0, HELMHOLTZ_C2};
+use ctaylor::operators::{self, FamilySpec, OperatorSpec};
+use ctaylor::runtime::{ArtifactMeta, HostTensor, Registry};
+use ctaylor::taylor::program;
+use ctaylor::taylor::rewrite::collapse;
+use ctaylor::taylor::tensor::Tensor;
+use ctaylor::taylor::trace::{build_plan_jet_std, TAGGED_SLOTS};
+use ctaylor::util::prng::Rng;
+
+/// Operator-output tolerance per jet degree, relative to `1 + max|op|`.
+fn tol_for(order: usize) -> f64 {
+    match order {
+        0 | 1 => 1e-4,
+        2 => 5e-3,
+        3 => 1e-2,
+        _ => 3e-2,
+    }
+}
+
+fn to_f64(t: &HostTensor) -> Tensor {
+    Tensor::new(t.shape.clone(), t.data.iter().map(|&v| f64::from(v)).collect())
+}
+
+/// The f64 oracle spec for one registry artifact, built from the exact
+/// aux tensors the workload feeds the engine (σ, premultiplied dirs).
+fn oracle_spec(meta: &ArtifactMeta, w: &workload::Workload) -> OperatorSpec {
+    let dim = meta.dim;
+    match (meta.op.as_str(), meta.mode.as_str()) {
+        ("laplacian", "exact") => OperatorSpec::laplacian(dim),
+        ("weighted_laplacian", "exact") => {
+            OperatorSpec::weighted_laplacian(&to_f64(w.sigma.as_ref().unwrap()))
+        }
+        ("helmholtz", "exact") => OperatorSpec::helmholtz_preset(dim),
+        ("biharmonic", "exact") => OperatorSpec::biharmonic(dim),
+        ("laplacian" | "weighted_laplacian", _) => {
+            OperatorSpec::stochastic_laplacian(&to_f64(w.dirs.as_ref().unwrap()))
+        }
+        ("helmholtz", _) => OperatorSpec::stochastic_helmholtz(
+            HELMHOLTZ_C0,
+            HELMHOLTZ_C2,
+            &to_f64(w.dirs.as_ref().unwrap()),
+        ),
+        _ => OperatorSpec::stochastic_biharmonic(&to_f64(w.dirs.as_ref().unwrap())),
+    }
+}
+
+/// Every (op, method, mode) Taylor route the builtin registry serves.
+/// Nested routes are excluded: nested first-order AD never runs through
+/// the VM, so precision does not apply to them.
+const ROUTES: [(&str, &str); 8] = [
+    ("laplacian", "exact"),
+    ("weighted_laplacian", "exact"),
+    ("helmholtz", "exact"),
+    ("biharmonic", "exact"),
+    ("laplacian", "stochastic"),
+    ("weighted_laplacian", "stochastic"),
+    ("helmholtz", "stochastic"),
+    ("biharmonic", "stochastic"),
+];
+
+#[test]
+fn every_registry_taylor_route_in_f32_tracks_the_f64_oracle() {
+    let registry = Registry::builtin();
+    for acc in [false, true] {
+        let engine = Engine::builder()
+            .registry(Registry::builtin())
+            .threads(1)
+            .precision(Precision::F32 { accumulate_f64: acc })
+            .build()
+            .unwrap();
+        let mut seed = 40u64;
+        for method in ["standard", "collapsed"] {
+            for (op, mode) in ROUTES {
+                seed += 1;
+                let metas = registry.select(op, method, mode);
+                let meta = *metas.first().unwrap_or_else(|| panic!("no {op}/{method}/{mode}"));
+                let w = workload::workload_for(meta, seed);
+                let h = engine.operator(&meta.name).unwrap();
+                let out = w.request(&h).run().unwrap();
+
+                // The f64 oracle on bitwise-identical weights (the Glorot
+                // stream of the workload's theta) and the same aux.
+                let mlp = Mlp::init(&mut Rng::new(seed), meta.dim, &meta.widths, meta.batch);
+                let x0 = to_f64(&w.x);
+                let oplan = oracle_spec(meta, &w).compile();
+                let collapse_mode =
+                    if method == "standard" { Collapse::Standard } else { Collapse::Collapsed };
+                let (f0, opv) = plan::apply(&mlp, &x0, &oplan, collapse_mode);
+                let tol = tol_for(oplan.order);
+                let scale = opv.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+                for b in 0..meta.batch {
+                    let got_f0 = f64::from(out.f0.data[b]);
+                    assert!(
+                        (got_f0 - f0.data[b]).abs() <= 1e-4 * (1.0 + f0.data[b].abs()),
+                        "{} acc={acc} row {b}: f0 {got_f0} vs oracle {}",
+                        meta.name,
+                        f0.data[b]
+                    );
+                    let got_op = f64::from(out.op.data[b]);
+                    assert!(
+                        (got_op - opv.data[b]).abs() <= tol * (1.0 + scale),
+                        "{} acc={acc} row {b}: op {got_op} vs oracle {} (tol {tol})",
+                        meta.name,
+                        opv.data[b]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Every `OperatorSpec` preset plus a composed mixed-order spec (an
+/// advection-diffusion operator whose degree-1 family is a lower read).
+fn presets(dim: usize, rng: &mut Rng) -> Vec<OperatorSpec> {
+    let mut sigma = Tensor::zeros(&[dim, dim]);
+    for i in 0..dim {
+        sigma.data[i * dim + i] = 0.5 + 0.2 * i as f64;
+    }
+    let mut ddata = vec![0.0; 3 * dim];
+    for v in ddata.iter_mut() {
+        *v = rng.normal();
+    }
+    let dirs = Tensor::new(vec![3, dim], ddata);
+    let mut e0 = vec![0.0; dim];
+    e0[0] = 1.0;
+    let advdiff = OperatorSpec::new(
+        "advdiff",
+        0.5,
+        vec![
+            FamilySpec { weight: -0.75, degree: 1, dirs: Tensor::new(vec![1, dim], e0) },
+            FamilySpec { weight: 1.0, degree: 2, dirs: operators::basis(dim) },
+        ],
+    )
+    .unwrap();
+    vec![
+        OperatorSpec::laplacian(dim),
+        OperatorSpec::weighted_laplacian(&sigma),
+        OperatorSpec::helmholtz_preset(dim),
+        OperatorSpec::biharmonic(dim),
+        OperatorSpec::stochastic_laplacian(&dirs),
+        OperatorSpec::stochastic_biharmonic(&dirs),
+        OperatorSpec::stochastic_helmholtz(2.25, 1.0, &dirs),
+        advdiff,
+    ]
+}
+
+#[test]
+fn f32_programs_track_the_f64_oracle_on_every_preset() {
+    let mut rng = Rng::new(0xF32_0DD);
+    let (dim, batch) = (3usize, 2usize);
+    let mlp = Mlp::init(&mut rng, dim, &[8, 6, 1], batch);
+    let x0 = mlp.random_input(&mut rng);
+    for spec in presets(dim, &mut rng) {
+        let oplan = spec.compile();
+        let num_dirs = oplan.dirs.shape[0];
+        for mode in [Collapse::Standard, Collapse::Collapsed] {
+            let g_std = build_plan_jet_std(&mlp, &oplan, batch);
+            let g = match mode {
+                Collapse::Collapsed => collapse(&g_std, TAGGED_SLOTS, num_dirs),
+                Collapse::Standard => g_std,
+            };
+            let shapes = vec![vec![batch, dim], vec![num_dirs, batch, dim]];
+            let prog = program::compile(&g, &shapes).unwrap();
+            let (f0, opv) = plan::apply(&mlp, &x0, &oplan, mode);
+            let scale = opv.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            let tol = tol_for(oplan.order);
+            let inputs32 = [x0.cast::<f32>(), oplan.dirs.broadcast_rows(batch).cast::<f32>()];
+            for acc in [false, true] {
+                let p32: program::Program<f32> = prog.cast(acc);
+                let out = p32.execute(&inputs32).unwrap();
+                let (f0_32, op_32): (Tensor, Tensor) = (out[0].cast(), out[1].cast());
+                assert!(
+                    f0_32.max_abs_diff(&f0) <= 1e-4 * (1.0 + scale),
+                    "{} {mode:?} acc={acc}: f0 drift {}",
+                    spec.name,
+                    f0_32.max_abs_diff(&f0)
+                );
+                assert!(
+                    op_32.max_abs_diff(&opv) <= tol * (1.0 + scale),
+                    "{} {mode:?} acc={acc}: operator drift {} (tol {tol})",
+                    spec.name,
+                    op_32.max_abs_diff(&opv)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_accumulate_f64_reaches_near_f64_accuracy_on_a_deep_contraction() {
+    // The accumulate-f64 knob's contract: on a long-k GEMM, f64
+    // accumulation over f32 inputs is limited by input rounding only
+    // (~k·eps32 worst case), while pure-f32 accumulation additionally
+    // carries the summation round-off — so it gets a much looser budget.
+    use ctaylor::taylor::kernels;
+    let (m, k, n) = (8usize, 512usize, 8usize);
+    let mut rng = Rng::new(0xACC);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+    let mut c = vec![0.0f64; m * n];
+    kernels::gemm(m, k, n, &a, &b, &mut c);
+    let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+    let b32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+    let mut c32 = vec![0.0f32; m * n];
+    kernels::gemm_with(m, k, n, &a32, &b32, &mut c32, false);
+    let mut c32a = vec![0.0f32; m * n];
+    kernels::gemm_with(m, k, n, &a32, &b32, &mut c32a, true);
+    let err = |got: &[f32]| -> f64 {
+        got.iter().zip(&c).map(|(g, w)| (f64::from(*g) - w).abs()).fold(0.0, f64::max)
+    };
+    assert!(err(&c32) <= 1e-2, "pure f32 GEMM drifted {}", err(&c32));
+    assert!(err(&c32a) <= 5e-4, "acc-f64 GEMM drifted {}", err(&c32a));
+}
