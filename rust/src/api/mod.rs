@@ -318,7 +318,7 @@ impl Engine {
 /// Engine-level gauges: handle / compiled-program cache occupancy, cache
 /// hit/miss counters and the worker-pool width — one struct instead of
 /// per-field getters.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EngineStats {
     /// Artifact handles resolved (route strings parsed) so far.
     pub operators_loaded: usize,
@@ -330,6 +330,32 @@ pub struct EngineStats {
     pub program_cache_misses: u64,
     /// Executor threads available for batch sharding.
     pub pool_executors: usize,
+}
+
+impl EngineStats {
+    /// Element-wise sum of two gauge snapshots: aggregate several
+    /// engines — e.g. one per serving shard — into a single figure.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use ctaylor::api::EngineStats;
+    ///
+    /// let a = EngineStats { program_cache_hits: 3, pool_executors: 2, ..Default::default() };
+    /// let b = EngineStats { program_cache_hits: 1, pool_executors: 2, ..Default::default() };
+    /// let total = a.merge(&b);
+    /// assert_eq!(total.program_cache_hits, 4);
+    /// assert_eq!(total.pool_executors, 4);
+    /// ```
+    pub fn merge(&self, other: &EngineStats) -> EngineStats {
+        EngineStats {
+            operators_loaded: self.operators_loaded + other.operators_loaded,
+            programs_cached: self.programs_cached + other.programs_cached,
+            program_cache_hits: self.program_cache_hits + other.program_cache_hits,
+            program_cache_misses: self.program_cache_misses + other.program_cache_misses,
+            pool_executors: self.pool_executors + other.pool_executors,
+        }
+    }
 }
 
 impl std::fmt::Display for EngineStats {

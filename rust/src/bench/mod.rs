@@ -8,6 +8,7 @@
 
 pub mod barometer;
 pub mod report;
+pub mod serve;
 pub mod sweep;
 pub mod workload;
 
@@ -783,8 +784,8 @@ pub fn run_coordinator_bench(registry: Registry, n_requests: usize) -> Result<St
     if let Ok(e) = std::env::var("CTAYLOR_EAGER") {
         cfg.eager_points = e.parse().unwrap_or(cfg.eager_points);
     }
-    if let Ok(f) = std::env::var("CTAYLOR_FLUSH_US") {
-        cfg.flush_interval = std::time::Duration::from_micros(f.parse().unwrap_or(2000));
+    if let Ok(f) = std::env::var("CTAYLOR_DEADLINE_US") {
+        cfg.default_deadline = std::time::Duration::from_micros(f.parse().unwrap_or(5000));
     }
     let svc = Service::start(registry, cfg)?;
     let route = RouteKey::new("laplacian", "collapsed", "exact");

@@ -1,0 +1,693 @@
+//! `bench serve`: the serving-tier scenario suite.
+//!
+//! Each scenario drives a real [`Service`] under a characteristic load
+//! shape — steady closed-loop, route fan-out, single-route fan-in, a
+//! shard-scaling A/B, and open-loop Poisson chaos with overload — and
+//! emits one versioned single-line JSON summary ([`FORMAT`]) with
+//! client-observed latency quantiles, throughput, shed count, padding
+//! ratio and oracle verdicts.  Replies are spot-checked (every reply, in
+//! chaos) against a direct [`Engine`] evaluation of the same points under
+//! the service's deterministic model ([`model_theta`] / [`model_sigma`]),
+//! so a scenario that "passes" proved correctness, not just liveness.
+//! The `--scenario all` driver spawns the release binary once per
+//! scenario (process isolation, same discipline as the barometer).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::barometer::{env_fingerprint, git_rev};
+use crate::api::Engine;
+use crate::coordinator::{
+    model_sigma, model_theta, Metrics, RouteKey, Router, Service, ServiceConfig, SubmitError,
+};
+use crate::runtime::{HostTensor, Registry};
+use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
+
+/// Version tag on every summary line; bump on any schema change.
+pub const FORMAT: &str = "ctaylor-serve/1";
+
+/// The scenario suite, in the order the `all` driver runs it.
+pub const SCENARIOS: [&str; 5] = ["baseline", "fanout", "fanin", "scale", "chaos"];
+
+/// One-line human description of a scenario.
+pub fn describe(name: &str) -> &'static str {
+    match name {
+        "baseline" => "4 closed-loop clients on one exact route, mixed request sizes",
+        "fanout" => "8 closed-loop clients round-robining every route in the manifest",
+        "fanin" => "8 closed-loop clients converging on one route with tiny requests",
+        "scale" => "same multi-route load on 1 shard then N shards; reports the speedup",
+        "chaos" => "open-loop Poisson arrivals, random deadlines, small queues, overload",
+        _ => "unknown scenario",
+    }
+}
+
+/// Knobs shared by every scenario.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Load-generation window per scenario (drain excluded).
+    pub duration: Duration,
+    /// Shard workers; 0 = available parallelism.
+    pub shards: usize,
+    /// Service seed: fixes θ/σ so the oracle can recompute them.
+    pub seed: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { duration: Duration::from_millis(2000), shards: 0, seed: 0xC0FFEE }
+    }
+}
+
+struct Route {
+    key: RouteKey,
+    dim: usize,
+}
+
+fn route_table(registry: &Registry) -> Vec<Route> {
+    let router = Router::from_registry(registry);
+    router
+        .routes()
+        .map(|key| {
+            let dim = registry
+                .artifacts
+                .iter()
+                .find(|a| a.op == key.op && a.method == key.method && a.mode == key.mode)
+                .map(|a| a.dim)
+                .unwrap_or(16);
+            Route { key: key.clone(), dim }
+        })
+        .collect()
+}
+
+fn route_one(registry: &Registry, op: &str, method: &str, mode: &str) -> Result<Vec<Route>> {
+    let key = RouteKey::new(op, method, mode);
+    let route = route_table(registry)
+        .into_iter()
+        .find(|r| r.key == key)
+        .with_context(|| format!("route {key} not in the manifest"))?;
+    Ok(vec![route])
+}
+
+// ---------------------------------------------------------------------------
+// Oracle: recompute served replies directly through the engine
+// ---------------------------------------------------------------------------
+
+/// Re-evaluates served points directly against an [`Engine`] under the
+/// service's deterministic model.  Exact routes must match f0 *and* the
+/// operator value; stochastic routes must match f0 (direction-independent)
+/// and return finite estimates.
+struct Oracle {
+    engine: Engine,
+    router: Router,
+    seed: u64,
+    models: BTreeMap<String, (HostTensor, Option<HostTensor>)>,
+    dir_rng: Rng,
+}
+
+fn close(got: f32, want: f32) -> bool {
+    let (g, w) = (f64::from(got), f64::from(want));
+    (g - w).abs() <= 1e-4 * (1.0 + w.abs())
+}
+
+impl Oracle {
+    fn new(registry: &Registry, seed: u64) -> Result<Oracle> {
+        let router = Router::from_registry(registry);
+        let engine = Engine::builder().registry(registry.clone()).threads(1).build()?;
+        Ok(Oracle {
+            engine,
+            router,
+            seed,
+            models: BTreeMap::new(),
+            dir_rng: Rng::new(seed ^ 0xD15),
+        })
+    }
+
+    /// Number of served values that disagree with a direct evaluation.
+    fn check(
+        &mut self,
+        route: &RouteKey,
+        dim: usize,
+        points: &[f32],
+        f0: &[f32],
+        op: &[f32],
+    ) -> Result<u64> {
+        let sizes = self.router.batch_sizes(route)?;
+        let b = *sizes.last().unwrap();
+        let name = self.router.artifact(route, b)?.to_string();
+        let handle = self.engine.operator(&name)?;
+        let meta = handle.meta();
+        let stochastic = meta.mode == "stochastic";
+        let (samples, gaussian) = (meta.samples, meta.op == "biharmonic");
+        if !self.models.contains_key(&name) {
+            let theta = model_theta(self.seed, meta);
+            let sigma =
+                (meta.op == "weighted_laplacian").then(|| model_sigma(self.seed, meta));
+            self.models.insert(name.clone(), (theta, sigma));
+        }
+        let (theta, sigma) = self.models.get(&name).unwrap();
+
+        let n = points.len() / dim;
+        ensure!(f0.len() == n && op.len() == n, "reply length mismatch: {n} points");
+        let mut exp_f0 = Vec::with_capacity(n);
+        let mut exp_op = Vec::with_capacity(n);
+        for start in (0..n).step_by(b) {
+            let take = (n - start).min(b);
+            let mut x = vec![0.0f32; b * dim];
+            x[..take * dim].copy_from_slice(&points[start * dim..(start + take) * dim]);
+            let xt = HostTensor::new(vec![b, dim], x);
+            let dirs = stochastic.then(|| {
+                let mut d = vec![0.0f32; samples * dim];
+                if gaussian {
+                    self.dir_rng.fill_normal_f32(&mut d);
+                } else {
+                    self.dir_rng.fill_rademacher_f32(&mut d);
+                }
+                HostTensor::new(vec![samples, dim], d)
+            });
+            let mut req = handle.eval().theta(theta).x(&xt);
+            if let Some(d) = &dirs {
+                req = req.directions(d);
+            } else if let Some(s) = sigma {
+                req = req.sigma(s);
+            }
+            let out = req.run()?;
+            exp_f0.extend_from_slice(&out.f0.data[..take]);
+            exp_op.extend_from_slice(&out.op.data[..take]);
+        }
+        let mut bad = 0u64;
+        for i in 0..n {
+            if !close(f0[i], exp_f0[i]) {
+                bad += 1;
+            }
+            if stochastic {
+                if !op[i].is_finite() {
+                    bad += 1;
+                }
+            } else if !close(op[i], exp_op[i]) {
+                bad += 1;
+            }
+        }
+        Ok(bad)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Load generation
+// ---------------------------------------------------------------------------
+
+/// A reply retained for oracle checking.
+struct Sample {
+    route: usize,
+    points: Vec<f32>,
+    f0: Vec<f32>,
+    op: Vec<f32>,
+}
+
+#[derive(Default)]
+struct ClientOut {
+    latencies_ms: Vec<f64>,
+    requests: u64,
+    points: u64,
+    shed: u64,
+    errors: u64,
+    samples: Vec<Sample>,
+}
+
+/// Closed-loop clients: each thread submits, blocks on the reply, and
+/// immediately submits again — the steady-state pattern of a VMC or PINN
+/// training loop.  Every `sample_every`-th reply is kept for the oracle.
+fn closed_loop(
+    svc: &Service,
+    routes: &[Route],
+    clients: usize,
+    max_points: usize,
+    duration: Duration,
+    seed: u64,
+    sample_every: usize,
+) -> Vec<ClientOut> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed ^ 0x5bd1_e995u64.wrapping_mul(c as u64 + 1));
+                    let mut out = ClientOut::default();
+                    let end = Instant::now() + duration;
+                    let mut sent = c; // offset so clients interleave routes
+                    while Instant::now() < end {
+                        let ri = sent % routes.len();
+                        let route = &routes[ri];
+                        sent += 1;
+                        let n = 1 + rng.below(max_points);
+                        let mut pts = vec![0.0f32; n * route.dim];
+                        rng.fill_normal_f32(&mut pts);
+                        let keep = sent % sample_every == 0;
+                        let saved = if keep { pts.clone() } else { Vec::new() };
+                        let t0 = Instant::now();
+                        match svc.eval_blocking(route.key.clone(), pts, route.dim) {
+                            Ok(resp) => {
+                                out.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                                out.requests += 1;
+                                out.points += n as u64;
+                                if keep {
+                                    out.samples.push(Sample {
+                                        route: ri,
+                                        points: saved,
+                                        f0: resp.f0,
+                                        op: resp.op,
+                                    });
+                                }
+                            }
+                            Err(e) => match e.downcast_ref::<SubmitError>() {
+                                Some(SubmitError::Overloaded { .. }) => out.shed += 1,
+                                _ => out.errors += 1,
+                            },
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[derive(Default)]
+struct Agg {
+    latencies_ms: Vec<f64>,
+    requests: u64,
+    points: u64,
+    shed: u64,
+    errors: u64,
+    oracle_checked: u64,
+    oracle_failures: u64,
+}
+
+fn aggregate(outs: Vec<ClientOut>, routes: &[Route], oracle: &mut Oracle) -> Result<Agg> {
+    let mut agg = Agg::default();
+    for mut o in outs {
+        agg.latencies_ms.append(&mut o.latencies_ms);
+        agg.requests += o.requests;
+        agg.points += o.points;
+        agg.shed += o.shed;
+        agg.errors += o.errors;
+        for s in o.samples {
+            let r = &routes[s.route];
+            agg.oracle_checked += 1;
+            if oracle.check(&r.key, r.dim, &s.points, &s.f0, &s.op)? > 0 {
+                agg.oracle_failures += 1;
+            }
+        }
+    }
+    agg.latencies_ms.sort_by(f64::total_cmp);
+    Ok(agg)
+}
+
+/// Quantile over a pre-sorted sample (nearest-rank).
+fn pct(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * q).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// Server-side gauges captured before the service shuts down.
+struct ServerSide {
+    queue_p99_ms: f64,
+    exec_p99_ms: f64,
+    padding_ratio: f64,
+}
+
+fn server_side(m: &Metrics) -> ServerSide {
+    ServerSide {
+        queue_p99_ms: m.queue_wait.quantile_s(0.99) * 1e3,
+        exec_p99_ms: m.execute.quantile_s(0.99) * 1e3,
+        padding_ratio: m.padding_ratio(),
+    }
+}
+
+fn summary(
+    scenario: &str,
+    shards: usize,
+    wall_s: f64,
+    agg: &Agg,
+    server: &ServerSide,
+    extra: Vec<(&str, Json)>,
+) -> Json {
+    // "ok" is a correctness verdict: oracle agreement and no rejections
+    // other than typed overload shedding.  Throughput is informational.
+    let ok = agg.oracle_failures == 0 && agg.errors == 0;
+    let l = &agg.latencies_ms;
+    let mut fields = vec![
+        ("format", Json::str(FORMAT)),
+        ("scenario", Json::str(scenario)),
+        ("shards", Json::num(shards as f64)),
+        ("duration_s", Json::num(wall_s)),
+        ("requests", Json::num(agg.requests as f64)),
+        ("points", Json::num(agg.points as f64)),
+        ("shed", Json::num(agg.shed as f64)),
+        ("errors", Json::num(agg.errors as f64)),
+        ("p50_ms", Json::num(pct(l, 0.50))),
+        ("p99_ms", Json::num(pct(l, 0.99))),
+        ("p999_ms", Json::num(pct(l, 0.999))),
+        ("queue_p99_ms", Json::num(server.queue_p99_ms)),
+        ("exec_p99_ms", Json::num(server.exec_p99_ms)),
+        ("throughput_pts_s", Json::num(agg.points as f64 / wall_s.max(1e-9))),
+        ("padding_ratio", Json::num(server.padding_ratio)),
+        ("oracle_checked", Json::num(agg.oracle_checked as f64)),
+        ("oracle_failures", Json::num(agg.oracle_failures as f64)),
+        ("ok", Json::Bool(ok)),
+        ("git_rev", Json::str(&git_rev())),
+        ("env", env_fingerprint()),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+/// One request per route covering every ladder size, so all compiles
+/// leave the timed region (the same discipline as the coordinator bench).
+fn warmup(svc: &Service, routes: &[Route]) -> Result<()> {
+    for r in routes {
+        let n: usize = svc.router().batch_sizes(&r.key)?.iter().sum();
+        svc.eval_blocking(r.key.clone(), vec![0.1f32; n * r.dim], r.dim)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Scenarios
+// ---------------------------------------------------------------------------
+
+/// Run one scenario in-process and return its summary JSON.
+pub fn run_scenario(name: &str, registry: &Registry, opts: &ServeOpts) -> Result<Json> {
+    match name {
+        "baseline" => {
+            let routes = route_one(registry, "laplacian", "collapsed", "exact")?;
+            run_closed(registry, opts, "baseline", routes, 4, 16, 4)
+        }
+        "fanout" => run_closed(registry, opts, "fanout", route_table(registry), 8, 16, 8),
+        "fanin" => {
+            let routes = route_one(registry, "laplacian", "collapsed", "exact")?;
+            run_closed(registry, opts, "fanin", routes, 8, 4, 8)
+        }
+        "scale" => scale(registry, opts),
+        "chaos" => chaos(registry, opts),
+        other => bail!("unknown scenario {other:?} ({})", SCENARIOS.join(" | ")),
+    }
+}
+
+fn run_closed(
+    registry: &Registry,
+    opts: &ServeOpts,
+    scenario: &str,
+    routes: Vec<Route>,
+    clients: usize,
+    max_points: usize,
+    sample_every: usize,
+) -> Result<Json> {
+    let cfg = ServiceConfig { shards: opts.shards, seed: opts.seed, ..ServiceConfig::default() };
+    let svc = Service::start(registry.clone(), cfg)?;
+    let shards = svc.shards();
+    warmup(&svc, &routes)?;
+    let t0 = Instant::now();
+    let outs =
+        closed_loop(&svc, &routes, clients, max_points, opts.duration, opts.seed, sample_every);
+    let wall = t0.elapsed().as_secs_f64();
+    let server = server_side(svc.metrics());
+    let mut oracle = Oracle::new(registry, opts.seed)?;
+    let agg = aggregate(outs, &routes, &mut oracle)?;
+    svc.shutdown();
+    Ok(summary(scenario, shards, wall, &agg, &server, Vec::new()))
+}
+
+/// The same multi-route closed-loop load on 1 shard, then on N shards
+/// (one executor thread per shard in both phases, so the comparison
+/// isolates shard parallelism from engine-internal batch sharding).
+fn scale(registry: &Registry, opts: &ServeOpts) -> Result<Json> {
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    let multi = if opts.shards > 0 { opts.shards } else { avail.clamp(2, 4) };
+    let mut phases = Vec::new();
+    for shards in [1usize, multi] {
+        let routes = route_table(registry);
+        let cfg = ServiceConfig {
+            shards,
+            threads_per_shard: 1,
+            seed: opts.seed,
+            ..ServiceConfig::default()
+        };
+        let svc = Service::start(registry.clone(), cfg)?;
+        warmup(&svc, &routes)?;
+        let t0 = Instant::now();
+        let outs = closed_loop(&svc, &routes, 8, 16, opts.duration, opts.seed, 8);
+        let wall = t0.elapsed().as_secs_f64();
+        let server = server_side(svc.metrics());
+        let mut oracle = Oracle::new(registry, opts.seed)?;
+        let agg = aggregate(outs, &routes, &mut oracle)?;
+        svc.shutdown();
+        phases.push((wall, agg, server));
+    }
+    let (wall_1, agg_1, _) = &phases[0];
+    let (wall_m, agg_m, server_m) = &phases[1];
+    let t1 = agg_1.points as f64 / wall_1.max(1e-9);
+    let tm = agg_m.points as f64 / wall_m.max(1e-9);
+    // Merge correctness across both phases; report load numbers from the
+    // multi-shard phase, with the single-shard throughput as an extra.
+    let agg = Agg {
+        latencies_ms: agg_m.latencies_ms.clone(),
+        requests: agg_m.requests,
+        points: agg_m.points,
+        shed: agg_1.shed + agg_m.shed,
+        errors: agg_1.errors + agg_m.errors,
+        oracle_checked: agg_1.oracle_checked + agg_m.oracle_checked,
+        oracle_failures: agg_1.oracle_failures + agg_m.oracle_failures,
+    };
+    let extra = vec![
+        ("throughput_1shard_pts_s", Json::num(t1)),
+        ("speedup", Json::num(if t1 > 0.0 { tm / t1 } else { 0.0 })),
+    ];
+    Ok(summary("scale", multi, *wall_m, &agg, server_m, extra))
+}
+
+/// A reply still in flight during the chaos drain.
+struct InFlight {
+    route: usize,
+    points: Vec<f32>,
+    rx: std::sync::mpsc::Receiver<crate::coordinator::EvalResponse>,
+}
+
+/// Open-loop Poisson arrivals with per-request random deadlines against
+/// deliberately small shard queues: the service must shed with typed
+/// overload errors only, and every admitted reply must pass the oracle.
+fn chaos(registry: &Registry, opts: &ServeOpts) -> Result<Json> {
+    const SUBMITTERS: usize = 2;
+    /// Mean inter-arrival gap per submitter (exponential).
+    const MEAN_GAP_S: f64 = 400e-6;
+    let routes = route_table(registry);
+    let cfg = ServiceConfig {
+        shards: opts.shards,
+        seed: opts.seed,
+        queue_capacity: 48,
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(registry.clone(), cfg)?;
+    let shards = svc.shards();
+    warmup(&svc, &routes)?;
+    let t0 = Instant::now();
+    let per_thread: Vec<(Vec<InFlight>, u64, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..SUBMITTERS)
+            .map(|c| {
+                let routes = &routes;
+                let svc = &svc;
+                s.spawn(move || {
+                    let mut rng = Rng::new(opts.seed ^ 0xA5A5u64.wrapping_mul(c as u64 + 1));
+                    let mut inflight = Vec::new();
+                    let (mut shed, mut errors) = (0u64, 0u64);
+                    let end = Instant::now() + opts.duration;
+                    while Instant::now() < end {
+                        let gap = -rng.uniform_in(1e-12, 1.0).ln() * MEAN_GAP_S;
+                        std::thread::sleep(Duration::from_secs_f64(gap));
+                        let ri = rng.below(routes.len());
+                        let route = &routes[ri];
+                        let n = 1 + rng.below(64);
+                        let mut pts = vec![0.0f32; n * route.dim];
+                        rng.fill_normal_f32(&mut pts);
+                        let deadline = Duration::from_secs_f64(rng.uniform_in(2e-3, 10e-3));
+                        let submitted = svc.submit_with_deadline(
+                            route.key.clone(),
+                            pts.clone(),
+                            route.dim,
+                            deadline,
+                        );
+                        match submitted {
+                            Ok(rx) => inflight.push(InFlight { route: ri, points: pts, rx }),
+                            Err(SubmitError::Overloaded { .. }) => shed += 1,
+                            Err(_) => errors += 1,
+                        }
+                    }
+                    (inflight, shed, errors)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Drain every in-flight reply and oracle-check ALL of them: chaos
+    // passing means zero incorrect replies under overload, not "it
+    // survived".
+    let mut oracle = Oracle::new(registry, opts.seed)?;
+    let mut agg = Agg::default();
+    for (inflight, shed, errors) in per_thread {
+        agg.shed += shed;
+        agg.errors += errors;
+        for f in inflight {
+            match f.rx.recv() {
+                Ok(resp) => {
+                    let r = &routes[f.route];
+                    agg.requests += 1;
+                    agg.points += (f.points.len() / r.dim) as u64;
+                    agg.latencies_ms.push(resp.latency_s * 1e3);
+                    agg.oracle_checked += 1;
+                    if oracle.check(&r.key, r.dim, &f.points, &resp.f0, &resp.op)? > 0 {
+                        agg.oracle_failures += 1;
+                    }
+                }
+                Err(_) => agg.errors += 1,
+            }
+        }
+    }
+    agg.latencies_ms.sort_by(f64::total_cmp);
+    let wall = t0.elapsed().as_secs_f64();
+    let server = server_side(svc.metrics());
+    svc.shutdown();
+    Ok(summary("chaos", shards, wall, &agg, &server, Vec::new()))
+}
+
+// ---------------------------------------------------------------------------
+// Process-isolated driver
+// ---------------------------------------------------------------------------
+
+/// Spawn the binary once per scenario (`bench serve --scenario <name>
+/// --json`), collect and validate each summary line.  Returns the lines
+/// joined with newlines plus the overall verdict; a scenario that fails
+/// its own checks turns the verdict false but does not stop the suite.
+pub fn run_suite(
+    scenarios: &[&str],
+    opts: &ServeOpts,
+    artifacts: &str,
+    out_path: Option<&str>,
+) -> Result<(String, bool)> {
+    let bin = std::env::current_exe().context("locating the ctaylor binary")?;
+    let mut lines = Vec::new();
+    let mut all_ok = true;
+    for (i, name) in scenarios.iter().enumerate() {
+        eprintln!("[{}/{}] serve scenario {name}: {}", i + 1, scenarios.len(), describe(name));
+        let out = std::process::Command::new(&bin)
+            .args(["bench", "serve", "--scenario", name, "--json"])
+            .arg(format!("--duration-ms={}", opts.duration.as_millis()))
+            .arg(format!("--shards={}", opts.shards))
+            .arg(format!("--seed={}", opts.seed))
+            .arg(format!("--artifacts={artifacts}"))
+            .output()
+            .with_context(|| format!("spawning scenario {name}"))?;
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let Some(line) = stdout.lines().rev().find(|l| !l.trim().is_empty()) else {
+            bail!(
+                "scenario {name} produced no summary ({}): {}",
+                out.status,
+                String::from_utf8_lossy(&out.stderr)
+            );
+        };
+        let j = json::parse(line).map_err(|e| anyhow!("scenario {name}: bad summary: {e}"))?;
+        ensure!(
+            j.get_str("format") == Some(FORMAT),
+            "scenario {name}: summary is not {FORMAT}: {line}"
+        );
+        let ok = j.get("ok").and_then(Json::as_bool) == Some(true) && out.status.success();
+        if !ok {
+            eprintln!("scenario {name} FAILED: {line}");
+        }
+        all_ok &= ok;
+        lines.push(line.to_string());
+    }
+    let joined = lines.join("\n");
+    if let Some(p) = out_path {
+        std::fs::write(p, joined.clone() + "\n").with_context(|| format!("writing {p}"))?;
+    }
+    Ok((joined, all_ok))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert_eq!(pct(&v, 0.0), 1.0);
+        assert_eq!(pct(&v, 1.0), 100.0);
+        assert!((pct(&v, 0.5) - 50.0).abs() <= 1.0);
+        assert!(pct(&v, 0.99) >= 99.0);
+        assert_eq!(pct(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn close_is_relative() {
+        assert!(close(1.00001, 1.0));
+        assert!(!close(1.01, 1.0));
+        assert!(close(1000.05, 1000.0));
+        assert!(!close(f32::NAN, 1.0));
+    }
+
+    #[test]
+    fn every_scenario_has_a_description() {
+        for s in SCENARIOS {
+            assert_ne!(describe(s), "unknown scenario", "{s}");
+        }
+        assert_eq!(describe("nope"), "unknown scenario");
+    }
+
+    #[test]
+    fn summary_carries_the_format_and_ok_verdict() {
+        let agg = Agg {
+            latencies_ms: vec![1.0, 2.0, 3.0],
+            requests: 3,
+            points: 30,
+            shed: 1,
+            errors: 0,
+            oracle_checked: 3,
+            oracle_failures: 0,
+        };
+        let server = ServerSide { queue_p99_ms: 0.5, exec_p99_ms: 1.0, padding_ratio: 0.1 };
+        let j = summary("baseline", 2, 1.0, &agg, &server, Vec::new());
+        assert_eq!(j.get_str("format"), Some(FORMAT));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get_f64("throughput_pts_s"), Some(30.0));
+        assert_eq!(j.get_f64("shed"), Some(1.0));
+        let line = json::to_string(&j);
+        assert!(!line.contains('\n'), "summary must be a single line");
+
+        let bad = Agg { oracle_failures: 1, ..Default::default() };
+        let j = summary("chaos", 2, 1.0, &bad, &server, Vec::new());
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn baseline_scenario_end_to_end_small() {
+        // In-process smoke of the full scenario path on the builtin
+        // registry: short window, still oracle-checked.
+        let reg = Registry::builtin();
+        let opts = ServeOpts {
+            duration: Duration::from_millis(120),
+            shards: 1,
+            seed: 7,
+        };
+        let j = run_scenario("baseline", &reg, &opts).unwrap();
+        assert_eq!(j.get_str("format"), Some(FORMAT));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{}", json::to_string(&j));
+        assert!(j.get_f64("requests").unwrap() >= 1.0);
+        assert_eq!(j.get_f64("oracle_failures"), Some(0.0));
+    }
+}

@@ -2,7 +2,10 @@
 //!
 //! Executables are shape-specialized (one per batch size), so the batcher
 //! solves a small packing problem per flush: cover `pending` points using
-//! the available sizes, preferring full blocks and padding only the tail.
+//! the available sizes.  The planner is exact — it picks the block
+//! multiset with minimum total padding (maximum occupancy), breaking ties
+//! by fewest blocks — because padding rows are real VM work and the
+//! fleet-wide padding ratio is a first-class serving gauge.
 
 /// A planned block: `size` = compiled batch, `used` = real points in it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -11,32 +14,59 @@ pub struct Block {
     pub used: usize,
 }
 
+/// Cap on the exact-cover DP table.  Builtin ladders are divisor chains
+/// ({1,2,4,8,16}), so whole largest-size blocks stripped above this cap
+/// never cost optimality there; the DP covers the general tail exactly.
+const DP_LIMIT: usize = 4096;
+
 /// Plan blocks to serve `pending` points given the available compiled
-/// batch sizes (sorted ascending).  Greedy largest-fit, then one padded
-/// block for the tail (smallest size that fits it).
+/// batch sizes (sorted ascending).  Minimizes total padding, then block
+/// count; blocks come out largest-first so requests split across as few
+/// seams as possible.
 pub fn plan_blocks(pending: usize, sizes: &[usize]) -> Vec<Block> {
     assert!(!sizes.is_empty(), "no compiled batch sizes");
+    let largest = *sizes.last().unwrap();
     let mut out = Vec::new();
     let mut left = pending;
-    let largest = *sizes.last().unwrap();
-    while left >= largest {
+    while left > DP_LIMIT && left >= largest {
         out.push(Block { size: largest, used: largest });
         left -= largest;
     }
-    while left > 0 {
-        // largest size fully covered, else smallest size that fits the tail
-        let full = sizes.iter().rev().find(|&&s| s <= left);
-        match full {
-            Some(&s) if s == left || s > sizes[0] => {
-                out.push(Block { size: s, used: s.min(left) });
-                left -= s.min(left);
-            }
-            _ => {
-                let pad = *sizes.iter().find(|&&s| s >= left).unwrap_or(&largest);
-                out.push(Block { size: pad, used: left });
-                left = 0;
+    if left == 0 {
+        return out;
+    }
+
+    // Unbounded min-count coin change over achievable totals; the
+    // smallest achievable total >= left has minimal padding.  Some
+    // multiple of `largest` always lands in [left, left + largest], so
+    // the search cannot fail.
+    let top = left + largest;
+    let mut min_blocks = vec![u32::MAX; top + 1];
+    let mut pick = vec![0usize; top + 1];
+    min_blocks[0] = 0;
+    for t in 1..=top {
+        for &s in sizes {
+            if s <= t && min_blocks[t - s] != u32::MAX && min_blocks[t - s] + 1 < min_blocks[t] {
+                min_blocks[t] = min_blocks[t - s] + 1;
+                pick[t] = s;
             }
         }
+    }
+    let total = (left..=top)
+        .find(|&t| min_blocks[t] != u32::MAX)
+        .expect("a multiple of the largest size covers any pending count");
+
+    let mut chosen = Vec::new();
+    let mut t = total;
+    while t > 0 {
+        chosen.push(pick[t]);
+        t -= pick[t];
+    }
+    chosen.sort_unstable_by(|a, b| b.cmp(a));
+    for s in chosen {
+        let used = s.min(left);
+        left -= used;
+        out.push(Block { size: s, used });
     }
     out
 }
@@ -89,5 +119,54 @@ mod tests {
         assert_eq!(plan[1], Block { size: 16, used: 16 });
         let used: usize = plan.iter().map(|b| b.used).sum();
         assert_eq!(used, 33);
+    }
+
+    #[test]
+    fn ladder_with_one_never_pads() {
+        for n in 1..300 {
+            assert_eq!(padding(&plan_blocks(n, SIZES)), 0, "n={n}");
+        }
+    }
+
+    #[test]
+    fn occupancy_beats_greedy_on_gap_ladders() {
+        // Greedy largest-fit would serve 6 points as one padded 16-block
+        // (padding 10); the exact planner composes three 2-blocks.
+        let plan = plan_blocks(6, &[2, 16]);
+        assert_eq!(padding(&plan), 0, "{plan:?}");
+        assert!(plan.iter().all(|b| b.size == 2), "{plan:?}");
+
+        // 5 points on {2, 16}: best achievable total is 6 (padding 1).
+        let plan = plan_blocks(5, &[2, 16]);
+        assert_eq!(padding(&plan), 1, "{plan:?}");
+
+        // {3, 5}: 7 points can't be composed exactly; 3+5 = 8 pads 1,
+        // strictly better than 5+5 or 3+3+3.
+        let plan = plan_blocks(7, &[3, 5]);
+        assert_eq!(padding(&plan), 1, "{plan:?}");
+        assert_eq!(plan.len(), 2, "{plan:?}");
+    }
+
+    #[test]
+    fn minimal_padding_ties_break_to_fewest_blocks() {
+        // 8 points on {2, 4}: both 4+4 and 2+2+2+2 are exact; the planner
+        // must choose two blocks.
+        let plan = plan_blocks(8, &[2, 4]);
+        assert_eq!(plan.len(), 2, "{plan:?}");
+        assert!(plan.iter().all(|b| b.size == 4), "{plan:?}");
+    }
+
+    #[test]
+    fn large_pending_strips_whole_blocks() {
+        let plan = plan_blocks(100_003, SIZES);
+        let used: usize = plan.iter().map(|b| b.used).sum();
+        assert_eq!(used, 100_003);
+        assert_eq!(padding(&plan), 0);
+        assert!(plan.len() < 100_003 / 16 + 8);
+    }
+
+    #[test]
+    fn empty_pending_plans_nothing() {
+        assert!(plan_blocks(0, SIZES).is_empty());
     }
 }

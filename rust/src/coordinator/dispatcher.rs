@@ -1,0 +1,222 @@
+//! Admission control and route→shard assignment.
+//!
+//! The dispatcher sits between `Service::submit` and the shard workers:
+//! every route hashes (FNV-1a) to one shard, so a route's compiled
+//! programs, θ/σ model state and pending queue live on exactly one
+//! worker — shard-local and uncontended.  Each shard owns a bounded
+//! queue; when it is full the dispatcher sheds the request *now* with a
+//! typed [`SubmitError::Overloaded`] carrying the observed depth and
+//! capacity, instead of queueing unboundedly and letting latency
+//! collapse.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+
+use super::request::{EvalRequest, RouteKey};
+
+/// Consistent route → shard assignment: FNV-1a over `op/method/mode`.
+/// Stable across processes, so clients and oracles can predict placement.
+pub fn shard_of(route: &RouteKey, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for part in [&route.op, &route.method, &route.mode] {
+        for b in part.bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h ^= u64::from(b'/');
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % shards as u64) as usize
+}
+
+/// Typed submission failure — callers can match on overload vs caller
+/// error instead of parsing a message string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No artifacts serve this (op, method, mode).
+    UnknownRoute { route: RouteKey },
+    /// Points buffer empty or not a multiple of the route's dimension.
+    BadPayload { len: usize, dim: usize },
+    /// The route's shard queue is full; the request was shed.  `depth`
+    /// is the queue occupancy observed at rejection, `capacity` its
+    /// bound — what the caller should log and back off on.
+    Overloaded { route: RouteKey, shard: usize, depth: usize, capacity: usize },
+    /// The service is shutting down (shard worker gone).
+    Stopped,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownRoute { route } => write!(f, "unknown route {route}"),
+            SubmitError::BadPayload { len, dim } => {
+                write!(f, "points length {len} not a positive multiple of dim {dim}")
+            }
+            SubmitError::Overloaded { route, shard, depth, capacity } => write!(
+                f,
+                "overloaded: shard {shard} queue for {route} at depth {depth}/{capacity}"
+            ),
+            SubmitError::Stopped => write!(f, "service stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One shard's admission-side state: the bounded sender plus a depth
+/// gauge the worker decrements as it drains.
+struct ShardGate {
+    tx: SyncSender<EvalRequest>,
+    depth: Arc<AtomicUsize>,
+    capacity: usize,
+}
+
+/// The admission front: per-shard bounded queues behind one `dispatch`.
+pub struct Dispatcher {
+    gates: Vec<ShardGate>,
+}
+
+/// The worker half of one shard queue, handed to the shard thread.
+pub struct ShardIntake {
+    pub rx: Receiver<EvalRequest>,
+    /// Decrement on every `recv` so the gauge tracks queue occupancy.
+    pub depth: Arc<AtomicUsize>,
+}
+
+impl Dispatcher {
+    /// Build `shards` bounded queues of `capacity` each; the returned
+    /// intakes go to the shard workers in index order.
+    pub fn new(shards: usize, capacity: usize) -> (Dispatcher, Vec<ShardIntake>) {
+        assert!(shards > 0 && capacity > 0);
+        let mut gates = Vec::with_capacity(shards);
+        let mut intakes = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = sync_channel::<EvalRequest>(capacity);
+            let depth = Arc::new(AtomicUsize::new(0));
+            gates.push(ShardGate { tx, depth: depth.clone(), capacity });
+            intakes.push(ShardIntake { rx, depth });
+        }
+        (Dispatcher { gates }, intakes)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.gates.len()
+    }
+
+    /// Current queue occupancy of one shard (gauge; racy by nature).
+    pub fn depth(&self, shard: usize) -> usize {
+        self.gates[shard].depth.load(Ordering::Relaxed)
+    }
+
+    /// Admit or shed: route the request to its shard, enforcing the
+    /// queue bound without blocking.
+    pub fn dispatch(&self, req: EvalRequest) -> Result<(), SubmitError> {
+        let shard = shard_of(&req.route, self.gates.len());
+        let gate = &self.gates[shard];
+        // Optimistic: count the slot first so depth never under-reports
+        // under concurrent submitters; roll back on rejection.
+        gate.depth.fetch_add(1, Ordering::Relaxed);
+        match gate.tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(req)) => {
+                let depth = gate.depth.fetch_sub(1, Ordering::Relaxed) - 1;
+                Err(SubmitError::Overloaded {
+                    route: req.route,
+                    shard,
+                    depth,
+                    capacity: gate.capacity,
+                })
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                gate.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Stopped)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::{Duration, Instant};
+
+    fn req(op: &str) -> EvalRequest {
+        let (reply, _rx) = channel();
+        EvalRequest {
+            id: 0,
+            route: RouteKey::new(op, "collapsed", "exact"),
+            points: vec![0.0; 4],
+            n_points: 1,
+            submitted: Instant::now(),
+            deadline: Duration::from_millis(10),
+            reply,
+        }
+    }
+
+    #[test]
+    fn shard_assignment_is_stable_and_in_range() {
+        for shards in 1..=8 {
+            for op in ["laplacian", "weighted_laplacian", "biharmonic", "helmholtz"] {
+                for method in ["nested", "standard", "collapsed"] {
+                    let key = RouteKey::new(op, method, "exact");
+                    let s = shard_of(&key, shards);
+                    assert!(s < shards);
+                    assert_eq!(s, shard_of(&key, shards), "stable");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn routes_spread_over_multiple_shards() {
+        let mut seen = std::collections::BTreeSet::new();
+        for op in ["laplacian", "weighted_laplacian", "biharmonic", "helmholtz", "biharl"] {
+            for method in ["nested", "standard", "collapsed"] {
+                for mode in ["exact", "stochastic"] {
+                    seen.insert(shard_of(&RouteKey::new(op, method, mode), 4));
+                }
+            }
+        }
+        assert!(seen.len() >= 2, "30 routes collapsed onto one of 4 shards: {seen:?}");
+    }
+
+    #[test]
+    fn full_queue_sheds_with_depth_and_capacity() {
+        let (d, _intakes) = Dispatcher::new(1, 2);
+        d.dispatch(req("laplacian")).unwrap();
+        d.dispatch(req("laplacian")).unwrap();
+        match d.dispatch(req("laplacian")) {
+            Err(SubmitError::Overloaded { depth, capacity, shard, .. }) => {
+                assert_eq!(capacity, 2);
+                assert_eq!(depth, 2, "depth reports queue occupancy, not a lifetime counter");
+                assert_eq!(shard, 0);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(d.depth(0), 2);
+    }
+
+    #[test]
+    fn disconnected_shard_reports_stopped() {
+        let (d, intakes) = Dispatcher::new(1, 2);
+        drop(intakes);
+        assert_eq!(d.dispatch(req("laplacian")), Err(SubmitError::Stopped));
+        assert_eq!(d.depth(0), 0);
+    }
+
+    #[test]
+    fn error_messages_name_the_numbers() {
+        let e = SubmitError::Overloaded {
+            route: RouteKey::new("laplacian", "collapsed", "exact"),
+            shard: 1,
+            depth: 64,
+            capacity: 64,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("64/64"), "{msg}");
+        assert!(msg.contains("shard 1"), "{msg}");
+    }
+}

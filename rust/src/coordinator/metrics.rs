@@ -1,30 +1,138 @@
-//! Service metrics: counters + latency histogram, all atomics (the hot
-//! path never takes a lock to record).
+//! Service metrics: counters plus fixed-bucket log-scale latency
+//! histograms, all atomics (the hot path never takes a lock to record).
+//!
+//! Three serving stages get their own [`Histogram`] — queue wait (submit
+//! → first gather), execution (VM run) and end-to-end (submit → reply) —
+//! each with [`HIST_BUCKETS`] buckets at ×√2 spacing from 1µs, so
+//! p50/p99/p999 resolve to within one bucket (~41%) anywhere from
+//! microseconds to ~an hour.  Padding is split from served points
+//! (occupancy is a first-class gauge), shed requests are counted
+//! separately from hard errors, and per-shard engine gauges are merged
+//! through [`crate::api::EngineStats::merge`].
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
-/// Log-spaced latency histogram from 1µs to ~1000s (30 buckets, ×2 each).
-const BUCKETS: usize = 30;
+use crate::api::EngineStats;
+use crate::util::json::Json;
+
+/// Buckets per histogram: ×√2 spacing covers 1µs · 2^32 ≈ 71 minutes.
+pub const HIST_BUCKETS: usize = 64;
 const BASE_US: f64 = 1.0;
+
+/// Fixed-bucket log-scale histogram; the record path is one atomic add.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Bucket index for a duration: `floor(2·log2(us))`, clamped.
+    fn bucket(us: f64) -> usize {
+        if us <= BASE_US {
+            0
+        } else {
+            (((us / BASE_US).log2() * 2.0) as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Upper edge of bucket `i` in seconds.
+    fn upper_edge_s(i: usize) -> f64 {
+        BASE_US * 2f64.powf((i + 1) as f64 / 2.0) / 1e6
+    }
+
+    pub fn record(&self, seconds: f64) {
+        let us = seconds * 1e6;
+        self.buckets[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+    }
+
+    /// Approximate quantile (upper bucket edge), `q` in [0, 1].
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::upper_edge_s(i);
+            }
+        }
+        Self::upper_edge_s(HIST_BUCKETS - 1)
+    }
+
+    /// Count + mean + the serving quantiles, in milliseconds.
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("mean_ms", Json::num(self.mean_s() * 1e3)),
+            ("p50_ms", Json::num(self.quantile_s(0.50) * 1e3)),
+            ("p99_ms", Json::num(self.quantile_s(0.99) * 1e3)),
+            ("p999_ms", Json::num(self.quantile_s(0.999) * 1e3)),
+        ])
+    }
+}
 
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests admitted past the dispatcher (shed ones are not counted).
     pub requests: AtomicU64,
+    /// Points those requests carried.
     pub points: AtomicU64,
+    /// Compiled blocks executed.
     pub batches: AtomicU64,
+    /// Real points executed inside those blocks.
+    pub served_points: AtomicU64,
+    /// Padding rows executed (block size minus real points).
     pub padded_points: AtomicU64,
+    /// Hard failures (worker errors), distinct from admission sheds.
     pub errors: AtomicU64,
-    pub rejected: AtomicU64,
-    /// Route → compiled-program cache hits/misses, mirrored from the
-    /// worker engine's [`crate::api::EngineStats`] after each flush
-    /// (gauges, not counters).
+    /// Requests rejected by admission control (`Overloaded`).
+    pub shed: AtomicU64,
+    /// Program-cache hits/misses summed over every shard engine, mirrored
+    /// from [`crate::api::EngineStats`] after each flush (gauges).
     pub program_cache_hits: AtomicU64,
     pub program_cache_misses: AtomicU64,
-    /// Executor threads of the serving worker pool (gauge, set at worker
-    /// start): 1 = strictly single-threaded VM serving.
+    /// Executor threads across all shard engines (gauge).
     pub pool_executors: AtomicU64,
-    latency_buckets: [AtomicU64; BUCKETS],
-    latency_sum_us: AtomicU64,
+    /// Engine workers serving routes (gauge, set at service start).
+    pub shards: AtomicU64,
+    /// Submit → first gather into a block.
+    pub queue_wait: Histogram,
+    /// VM execution per block.
+    pub execute: Histogram,
+    /// Submit → reply.
+    pub e2e: Histogram,
+    /// Last gauge snapshot per shard engine, merged into the atomics
+    /// above on every store (flush-rate, not per-request — the one
+    /// non-atomic seam).
+    engine_shards: Mutex<BTreeMap<usize, EngineStats>>,
 }
 
 impl Metrics {
@@ -37,86 +145,121 @@ impl Metrics {
         self.points.fetch_add(n_points as u64, Ordering::Relaxed);
     }
 
-    pub fn record_batch(&self, padded: usize) {
+    /// One executed block: `used` real points, `padded` padding rows.
+    pub fn record_batch(&self, used: usize, padded: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
+        self.served_points.fetch_add(used as u64, Ordering::Relaxed);
         self.padded_points.fetch_add(padded as u64, Ordering::Relaxed);
     }
 
+    pub fn record_queue_wait(&self, seconds: f64) {
+        self.queue_wait.record(seconds);
+    }
+
+    pub fn record_execute(&self, seconds: f64) {
+        self.execute.record(seconds);
+    }
+
     pub fn record_latency(&self, seconds: f64) {
-        let us = seconds * 1e6;
-        let bucket = if us <= BASE_US {
-            0
-        } else {
-            ((us / BASE_US).log2() as usize).min(BUCKETS - 1)
-        };
-        self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
-        self.latency_sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.e2e.record(seconds);
     }
 
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_rejected(&self) {
-        self.rejected.fetch_add(1, Ordering::Relaxed);
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Mirror one engine-gauge snapshot (program-cache hits/misses and
-    /// the batch-sharding pool width) — the single seam between serving
-    /// metrics and [`crate::api::Engine::stats`].
-    pub fn set_engine(&self, stats: &crate::api::EngineStats) {
-        self.program_cache_hits.store(stats.program_cache_hits, Ordering::Relaxed);
-        self.program_cache_misses.store(stats.program_cache_misses, Ordering::Relaxed);
-        self.pool_executors.store(stats.pool_executors as u64, Ordering::Relaxed);
+    /// Fraction of executed rows that were padding (0 when idle).
+    pub fn padding_ratio(&self) -> f64 {
+        let used = self.served_points.load(Ordering::Relaxed) as f64;
+        let padded = self.padded_points.load(Ordering::Relaxed) as f64;
+        if used + padded == 0.0 {
+            return 0.0;
+        }
+        padded / (used + padded)
+    }
+
+    /// Mirror one shard engine's gauge snapshot and refresh the merged
+    /// totals — the single seam between serving metrics and
+    /// [`crate::api::Engine::stats`].
+    pub fn set_engine_shard(&self, shard: usize, stats: &EngineStats) {
+        let mut map = self.engine_shards.lock().unwrap();
+        map.insert(shard, *stats);
+        let mut merged = EngineStats::default();
+        for s in map.values() {
+            merged = merged.merge(s);
+        }
+        self.program_cache_hits.store(merged.program_cache_hits, Ordering::Relaxed);
+        self.program_cache_misses.store(merged.program_cache_misses, Ordering::Relaxed);
+        self.pool_executors.store(merged.pool_executors as u64, Ordering::Relaxed);
     }
 
     pub fn mean_latency_s(&self) -> f64 {
-        let n = self.count_latencies();
-        if n == 0 {
-            return 0.0;
-        }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+        self.e2e.mean_s()
     }
 
-    fn count_latencies(&self) -> u64 {
-        self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
-    }
-
-    /// Approximate latency quantile from the histogram (upper bucket edge).
+    /// End-to-end latency quantile (upper bucket edge).
     pub fn latency_quantile_s(&self, q: f64) -> f64 {
-        let total = self.count_latencies();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = (q * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, b) in self.latency_buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return BASE_US * 2f64.powi(i as i32 + 1) / 1e6;
-            }
-        }
-        BASE_US * 2f64.powi(BUCKETS as i32) / 1e6
+        self.e2e.quantile_s(q)
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} points={} batches={} padded={} errors={} rejected={} \
-             prog_cache_hits={} prog_cache_misses={} pool_executors={} \
-             mean_latency={:.3}ms p99<={:.3}ms",
+            "requests={} points={} batches={} served={} padded={} padding_ratio={:.3} \
+             shed={} errors={} prog_cache_hits={} prog_cache_misses={} pool_executors={} \
+             shards={} e2e[p50={:.3}ms p99={:.3}ms p999={:.3}ms] queue[p99={:.3}ms] \
+             exec[p99={:.3}ms]",
             self.requests.load(Ordering::Relaxed),
             self.points.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
+            self.served_points.load(Ordering::Relaxed),
             self.padded_points.load(Ordering::Relaxed),
+            self.padding_ratio(),
+            self.shed.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
-            self.rejected.load(Ordering::Relaxed),
             self.program_cache_hits.load(Ordering::Relaxed),
             self.program_cache_misses.load(Ordering::Relaxed),
             self.pool_executors.load(Ordering::Relaxed),
-            self.mean_latency_s() * 1e3,
-            self.latency_quantile_s(0.99) * 1e3,
+            self.shards.load(Ordering::Relaxed),
+            self.e2e.quantile_s(0.50) * 1e3,
+            self.e2e.quantile_s(0.99) * 1e3,
+            self.e2e.quantile_s(0.999) * 1e3,
+            self.queue_wait.quantile_s(0.99) * 1e3,
+            self.execute.quantile_s(0.99) * 1e3,
         )
+    }
+
+    /// Full snapshot as JSON: every counter and gauge plus the three
+    /// histograms' quantiles — what `serve --json` and the bench summary
+    /// surface.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("points", Json::num(self.points.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("served_points", Json::num(self.served_points.load(Ordering::Relaxed) as f64)),
+            ("padded_points", Json::num(self.padded_points.load(Ordering::Relaxed) as f64)),
+            ("padding_ratio", Json::num(self.padding_ratio())),
+            ("shed", Json::num(self.shed.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64)),
+            (
+                "prog_cache_hits",
+                Json::num(self.program_cache_hits.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "prog_cache_misses",
+                Json::num(self.program_cache_misses.load(Ordering::Relaxed) as f64),
+            ),
+            ("pool_executors", Json::num(self.pool_executors.load(Ordering::Relaxed) as f64)),
+            ("shards", Json::num(self.shards.load(Ordering::Relaxed) as f64)),
+            ("queue_wait", self.queue_wait.json()),
+            ("execute", self.execute.json()),
+            ("e2e", self.e2e.json()),
+        ])
     }
 }
 
@@ -129,10 +272,12 @@ mod tests {
         let m = Metrics::new();
         m.record_request(4);
         m.record_request(2);
-        m.record_batch(1);
+        m.record_batch(7, 1);
         assert_eq!(m.requests.load(Ordering::Relaxed), 2);
         assert_eq!(m.points.load(Ordering::Relaxed), 6);
+        assert_eq!(m.served_points.load(Ordering::Relaxed), 7);
         assert_eq!(m.padded_points.load(Ordering::Relaxed), 1);
+        assert!((m.padding_ratio() - 1.0 / 8.0).abs() < 1e-12);
     }
 
     #[test]
@@ -143,7 +288,61 @@ mod tests {
         }
         let p50 = m.latency_quantile_s(0.5);
         let p99 = m.latency_quantile_s(0.99);
-        assert!(p50 <= p99);
+        let p999 = m.latency_quantile_s(0.999);
+        assert!(p50 <= p99 && p99 <= p999);
         assert!(m.mean_latency_s() > 0.0);
+        // √2 buckets: the upper edge is within ×√2 of the true quantile.
+        assert!(p50 >= 5e-3 && p50 <= 5e-3 * 1.5, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let h = Histogram::default();
+        h.record(0.0);
+        h.record(1e-9);
+        h.record(1e9); // clamps into the top bucket
+        assert_eq!(h.count(), 3);
+        assert!(h.quantile_s(1.0) > 0.0);
+    }
+
+    #[test]
+    fn stage_histograms_are_independent() {
+        let m = Metrics::new();
+        m.record_queue_wait(1e-3);
+        m.record_execute(2e-3);
+        assert_eq!(m.queue_wait.count(), 1);
+        assert_eq!(m.execute.count(), 1);
+        assert_eq!(m.e2e.count(), 0);
+    }
+
+    #[test]
+    fn engine_gauges_merge_across_shards() {
+        let m = Metrics::new();
+        let a = EngineStats {
+            operators_loaded: 1,
+            programs_cached: 2,
+            program_cache_hits: 3,
+            program_cache_misses: 1,
+            pool_executors: 2,
+        };
+        let b = EngineStats { program_cache_hits: 4, ..a };
+        m.set_engine_shard(0, &a);
+        m.set_engine_shard(1, &b);
+        assert_eq!(m.program_cache_hits.load(Ordering::Relaxed), 7);
+        assert_eq!(m.pool_executors.load(Ordering::Relaxed), 4);
+        // Re-storing a shard replaces its slice of the total.
+        m.set_engine_shard(1, &a);
+        assert_eq!(m.program_cache_hits.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn summary_keeps_the_pinned_tokens() {
+        let m = Metrics::new();
+        m.record_request(1);
+        let s = m.summary();
+        assert!(s.contains("requests=1"), "{s}");
+        assert!(s.contains("prog_cache_hits="), "{s}");
+        assert!(s.contains("padding_ratio="), "{s}");
+        assert!(s.contains("shed="), "{s}");
     }
 }

@@ -3,20 +3,25 @@
 //! VMC and PINN workloads need operator values (Δf, Δ_D f, Δ²f) at batches
 //! of points, continuously, against a fixed set of compiled model
 //! variants.  This module provides the router (manifest → batch-size
-//! ladder), the dynamic batcher (pack requests into compiled shapes), the
-//! worker (one [`crate::api::Engine`] with typed per-route handles and
-//! resident parameters) and service metrics — the vLLM-router-shaped
-//! skeleton adapted to PDE operators.
+//! ladder), the dispatcher (admission control + consistent route→shard
+//! assignment with bounded queues and typed overload shedding), the
+//! dynamic batcher (minimal-padding packing into compiled shapes), the
+//! sharded service (one [`crate::api::Engine`] per shard worker with
+//! typed per-route handles, resident parameters and deadline-aware
+//! micro-batching) and metrics with log-scale latency histograms — the
+//! vLLM-router-shaped skeleton adapted to PDE operators.
 
 pub mod batcher;
+pub mod dispatcher;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
 pub mod service;
 
+pub use dispatcher::{shard_of, SubmitError};
 pub use metrics::Metrics;
 pub use request::{EvalRequest, EvalResponse, RouteKey};
 pub use router::Router;
 pub use server::{Client, Server};
-pub use service::{Service, ServiceConfig};
+pub use service::{model_sigma, model_theta, Service, ServiceConfig};

@@ -1,7 +1,7 @@
 //! Request/response types for the PDE-operator evaluation service.
 
 use std::sync::mpsc::Sender;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Which compiled operator family a request targets.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -35,6 +35,9 @@ pub struct EvalRequest {
     pub points: Vec<f32>,
     pub n_points: usize,
     pub submitted: Instant,
+    /// Latency budget: the shard flushes this request's route no later
+    /// than when the remaining slack would be consumed by execution.
+    pub deadline: Duration,
     /// Completion channel.
     pub reply: Sender<EvalResponse>,
 }
@@ -47,8 +50,12 @@ pub struct EvalResponse {
     pub f0: Vec<f32>,
     /// Operator values (Δf, Δ_D f, Δ²f ...), one per point.
     pub op: Vec<f32>,
-    /// Queue + batch + execute time.
+    /// Queue + batch + execute time (end to end).
     pub latency_s: f64,
+    /// Submit → first gather into a compiled block.
+    pub queue_wait_s: f64,
     /// Batch the request was served in (for fill-ratio diagnostics).
     pub served_batch: usize,
+    /// Shard worker that served the request's route.
+    pub shard: usize,
 }

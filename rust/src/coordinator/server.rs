@@ -5,14 +5,16 @@
 //!
 //! ```text
 //! -> {"op":"laplacian","method":"collapsed","mode":"exact",
-//!     "dim":16,"points":[...flat row-major...]}
-//! <- {"ok":true,"f0":[...],"op":[...],"latency_ms":1.2,"served_batch":8}
-//! <- {"ok":false,"error":"..."}                  (on bad requests)
+//!     "dim":16,"points":[...flat row-major...],"deadline_ms":5}
+//! <- {"ok":true,"f0":[...],"op":[...],"latency_ms":1.2,
+//!     "queue_wait_ms":0.3,"served_batch":8,"shard":2}
+//! <- {"ok":false,"error":"..."}        (bad requests, overload shedding)
 //! ```
 //!
-//! Hand-rolled on std::net (no tokio offline, DESIGN.md §2); one thread
-//! per connection, all connections share the single batching worker — so
-//! concurrent clients *improve* batch fill.
+//! `deadline_ms` is optional (service default applies).  Hand-rolled on
+//! std::net (no tokio offline, DESIGN.md §2); one thread per connection,
+//! all connections share the shard workers — so concurrent clients on
+//! one route *improve* batch fill.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -122,13 +124,24 @@ fn handle_request(line: &str, service: &Service) -> Result<Json> {
         points.iter().all(|v| v.is_finite()),
         "points must be finite numbers"
     );
-    let resp = service.eval_blocking(RouteKey::new(op, method, mode), points, dim)?;
+    let route = RouteKey::new(op, method, mode);
+    let resp = match req.get("deadline_ms").and_then(Json::as_f64) {
+        Some(ms) => service.eval_blocking_with_deadline(
+            route,
+            points,
+            dim,
+            std::time::Duration::from_secs_f64((ms / 1e3).max(0.0)),
+        )?,
+        None => service.eval_blocking(route, points, dim)?,
+    };
     Ok(Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("f0", Json::arr(resp.f0.iter().map(|&v| Json::num(v as f64)))),
         ("op", Json::arr(resp.op.iter().map(|&v| Json::num(v as f64)))),
         ("latency_ms", Json::num(resp.latency_s * 1e3)),
+        ("queue_wait_ms", Json::num(resp.queue_wait_s * 1e3)),
         ("served_batch", Json::num(resp.served_batch as f64)),
+        ("shard", Json::num(resp.shard as f64)),
     ]))
 }
 

@@ -1,43 +1,58 @@
-//! The evaluation service: bounded submission queue → dynamic batcher →
-//! engine worker → per-request replies.
+//! The evaluation service: admission control → sharded engine workers →
+//! deadline-aware micro-batching → per-request replies.
 //!
 //! VMC / PINN clients submit batches of points against a route
-//! (operator, method, mode); the worker packs them into compiled batch
-//! shapes (batcher.rs), holds one [`Engine`] whose typed
-//! `OperatorHandle`s resolve each route's strings exactly once, keeps
-//! per-model parameters resident, samples stochastic directions from its
-//! own PRNG, and scatters results back.  Threads + channels stand in for
-//! tokio (DESIGN.md §2).
+//! (operator, method, mode).  A dispatcher (dispatcher.rs) hashes each
+//! route to one of N shard workers and enforces bounded per-shard queues
+//! — overload sheds with a typed error instead of queueing unboundedly.
+//! Each shard owns one [`Engine`] (its compiled-program cache and θ/σ
+//! model state are shard-local and uncontended), packs pending points
+//! into compiled batch shapes with the minimal-padding planner
+//! (batcher.rs), and flushes a route when the oldest request's deadline
+//! slack is about to be consumed by execution (per-route EWMA) or enough
+//! points piled up.  Threads + channels stand in for tokio (DESIGN.md
+//! §2).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use super::batcher::plan_blocks;
+use super::dispatcher::{shard_of, Dispatcher, ShardIntake, SubmitError};
 use super::metrics::Metrics;
 use super::request::{EvalRequest, EvalResponse, RouteKey};
 use super::router::Router;
 use crate::api::{Engine, Precision};
-use crate::runtime::{HostTensor, Registry};
+use crate::runtime::{ArtifactMeta, HostTensor, Registry};
 use crate::util::prng::Rng;
 
 /// Service tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// Submission queue capacity (backpressure: submit fails beyond this).
+    /// Per-shard submission queue capacity (backpressure: submit sheds
+    /// with [`SubmitError::Overloaded`] beyond this).
     pub queue_capacity: usize,
-    /// Max time a queued request waits for batchmates.
-    pub flush_interval: Duration,
+    /// Engine workers; routes hash onto them consistently.
+    /// 0 = available parallelism.
+    pub shards: usize,
+    /// Executor threads per shard engine (batch sharding inside one
+    /// flush).  0 = `max(1, available / shards)`.
+    pub threads_per_shard: usize,
+    /// Latency budget for requests submitted without an explicit
+    /// deadline: a shard flushes a route once the oldest request's
+    /// remaining slack would be consumed by the route's (EWMA-estimated)
+    /// execution time.
+    pub default_deadline: Duration,
     /// Seed for parameters, σ matrices and stochastic directions.
     pub seed: u64,
-    /// Flush as soon as a route has at least this many points pending.
+    /// Flush as soon as a single route has this many points pending.
     pub eager_points: usize,
-    /// Numeric precision for the worker's engine; `None` defers to the
+    /// Numeric precision for the shard engines; `None` defers to the
     /// engine default (`CTAYLOR_PRECISION`, else f64).
     pub precision: Option<Precision>,
 }
@@ -46,50 +61,123 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             queue_capacity: 1024,
-            flush_interval: Duration::from_millis(2),
+            shards: 0,
+            threads_per_shard: 0,
+            default_deadline: Duration::from_millis(5),
             seed: 0xC0FFEE,
-            // Tuned in the §Perf pass (EXPERIMENTS.md): 64 beats 16 by ~15%
-            // throughput on burst loads by cutting batch count ~35%.
+            // Four largest-block flushes' worth: enough to fill the top
+            // of the batch ladder without letting a burst sit on a cold
+            // route while its deadline slack drains.
             eager_points: 64,
             precision: None,
         }
     }
 }
 
+impl ServiceConfig {
+    /// Shard count after resolving 0 = available parallelism.
+    pub fn resolved_shards(&self) -> usize {
+        if self.shards > 0 {
+            return self.shards;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    fn resolved_threads_per_shard(&self, shards: usize) -> usize {
+        if self.threads_per_shard > 0 {
+            return self.threads_per_shard;
+        }
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        (avail / shards).max(1)
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The θ a service seeded with `seed` uses for every artifact of this
+/// network shape — a pure function of `(seed, dim, widths)`, so any
+/// shard derives identical parameters regardless of arrival order, and
+/// external oracles (tests, the `bench serve` suite) can reproduce the
+/// served model exactly.
+pub fn model_theta(seed: u64, meta: &ArtifactMeta) -> HostTensor {
+    let key = format!("theta/{}/{:?}", meta.dim, meta.widths);
+    meta.glorot_theta(&mut Rng::new(seed ^ fnv(&key)))
+}
+
+/// The σ a service seeded with `seed` uses for weighted-Laplacian routes
+/// of this dimension: full-rank diagonal (the paper's choice), entries
+/// in [0.5, 1.5] so the operator stays well-conditioned.  Deterministic
+/// per `(seed, dim)` for the same reason as [`model_theta`].
+pub fn model_sigma(seed: u64, meta: &ArtifactMeta) -> HostTensor {
+    let dim = meta.dim;
+    let mut rng = Rng::new(seed ^ fnv(&format!("sigma/{dim}")));
+    let mut s = vec![0.0f32; dim * dim];
+    for i in 0..dim {
+        s[i * dim + i] = rng.uniform_in(0.5, 1.5) as f32;
+    }
+    HostTensor::new(vec![dim, dim], s)
+}
+
 /// Handle to the running service.
 pub struct Service {
-    tx: Option<SyncSender<EvalRequest>>,
-    worker: Option<JoinHandle<()>>,
+    dispatcher: Option<Dispatcher>,
+    workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     router: Router,
+    shards: usize,
+    default_deadline: Duration,
 }
 
 impl Service {
-    /// Start the worker thread over the given artifact registry.
+    /// Start the shard workers over the given artifact registry.
     pub fn start(registry: Registry, config: ServiceConfig) -> Result<Service> {
         let router = Router::from_registry(&registry);
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = sync_channel::<EvalRequest>(config.queue_capacity);
-        let worker_metrics = metrics.clone();
-        let worker_router = router.clone();
-        let worker = std::thread::Builder::new()
-            .name("ctaylor-worker".into())
-            .spawn(move || {
-                if let Err(e) =
-                    worker_loop(rx, registry, worker_router, worker_metrics.clone(), config)
-                {
-                    eprintln!("worker exited with error: {e:#}");
-                    worker_metrics.record_error();
-                }
-            })
-            .context("spawning worker")?;
+        let shards = config.resolved_shards();
+        let threads = config.resolved_threads_per_shard(shards);
+        metrics.shards.store(shards as u64, Ordering::Relaxed);
+        let (dispatcher, intakes) = Dispatcher::new(shards, config.queue_capacity);
+        let mut workers = Vec::with_capacity(shards);
+        for (shard, intake) in intakes.into_iter().enumerate() {
+            let registry = registry.clone();
+            let router = router.clone();
+            let metrics = metrics.clone();
+            let config = config.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("ctaylor-shard-{shard}"))
+                .spawn(move || {
+                    if let Err(e) = shard_loop(
+                        intake,
+                        registry,
+                        router,
+                        metrics.clone(),
+                        config,
+                        shard,
+                        threads,
+                    ) {
+                        eprintln!("shard {shard} exited with error: {e:#}");
+                        metrics.record_error();
+                    }
+                })
+                .with_context(|| format!("spawning shard {shard}"))?;
+            workers.push(worker);
+        }
         Ok(Service {
-            tx: Some(tx),
-            worker: Some(worker),
+            dispatcher: Some(dispatcher),
+            workers,
             metrics,
             next_id: AtomicU64::new(1),
             router,
+            shards,
+            default_deadline: config.default_deadline,
         })
     }
 
@@ -101,19 +189,41 @@ impl Service {
         &self.router
     }
 
-    /// Submit points (row-major `[n, dim]`) for evaluation; non-blocking
-    /// with backpressure — a full queue returns an error immediately.
+    /// Shard workers serving this service.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shard a route's requests land on (consistent hashing).
+    pub fn shard_for(&self, route: &RouteKey) -> usize {
+        shard_of(route, self.shards)
+    }
+
+    /// Submit points (row-major `[n, dim]`) with the config's default
+    /// deadline budget; non-blocking with admission control — a full
+    /// shard queue sheds with [`SubmitError::Overloaded`] immediately.
     pub fn submit(
         &self,
         route: RouteKey,
         points: Vec<f32>,
         dim: usize,
-    ) -> Result<Receiver<EvalResponse>> {
+    ) -> Result<Receiver<EvalResponse>, SubmitError> {
+        self.submit_with_deadline(route, points, dim, self.default_deadline)
+    }
+
+    /// [`Service::submit`] with an explicit per-request deadline budget.
+    pub fn submit_with_deadline(
+        &self,
+        route: RouteKey,
+        points: Vec<f32>,
+        dim: usize,
+        deadline: Duration,
+    ) -> Result<Receiver<EvalResponse>, SubmitError> {
         if !self.router.has_route(&route) {
-            bail!("unknown route {route}");
+            return Err(SubmitError::UnknownRoute { route });
         }
-        if points.is_empty() || points.len() % dim != 0 {
-            bail!("points length {} not a multiple of dim {dim}", points.len());
+        if points.is_empty() || dim == 0 || points.len() % dim != 0 {
+            return Err(SubmitError::BadPayload { len: points.len(), dim });
         }
         let n_points = points.len() / dim;
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
@@ -123,16 +233,21 @@ impl Service {
             points,
             n_points,
             submitted: Instant::now(),
+            deadline,
             reply: reply_tx,
         };
-        self.metrics.record_request(n_points);
-        match self.tx.as_ref().expect("service running").try_send(req) {
-            Ok(()) => Ok(reply_rx),
-            Err(TrySendError::Full(_)) => {
-                self.metrics.record_rejected();
-                bail!("queue full ({} requests)", self.metrics.requests.load(Ordering::Relaxed))
+        let dispatcher = self.dispatcher.as_ref().expect("service running");
+        match dispatcher.dispatch(req) {
+            Ok(()) => {
+                self.metrics.record_request(n_points);
+                Ok(reply_rx)
             }
-            Err(TrySendError::Disconnected(_)) => bail!("worker is gone"),
+            Err(e) => {
+                if matches!(e, SubmitError::Overloaded { .. }) {
+                    self.metrics.record_shed();
+                }
+                Err(e)
+            }
         }
     }
 
@@ -144,13 +259,25 @@ impl Service {
         dim: usize,
     ) -> Result<EvalResponse> {
         let rx = self.submit(route, points, dim)?;
-        rx.recv().context("worker dropped reply channel")
+        rx.recv().context("shard dropped reply channel")
     }
 
-    /// Graceful shutdown: drain the queue, join the worker.
+    /// Submit with an explicit deadline budget and wait.
+    pub fn eval_blocking_with_deadline(
+        &self,
+        route: RouteKey,
+        points: Vec<f32>,
+        dim: usize,
+        deadline: Duration,
+    ) -> Result<EvalResponse> {
+        let rx = self.submit_with_deadline(route, points, dim, deadline)?;
+        rx.recv().context("shard dropped reply channel")
+    }
+
+    /// Graceful shutdown: drain every shard queue, join the workers.
     pub fn shutdown(mut self) {
-        self.tx.take(); // close the channel; worker drains and exits
-        if let Some(h) = self.worker.take() {
+        self.dispatcher.take(); // close the channels; shards drain and exit
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -158,16 +285,22 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
-        self.tx.take();
-        if let Some(h) = self.worker.take() {
+        self.dispatcher.take();
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
 }
 
 // ---------------------------------------------------------------------------
-// Worker
+// Shard worker
 // ---------------------------------------------------------------------------
+
+/// Floor on any flush-timer wait, so a hot loop still makes progress.
+const MIN_TICK: Duration = Duration::from_micros(50);
+/// Idle wait when nothing is pending (shutdown still preempts via
+/// channel disconnect).
+const IDLE_TICK: Duration = Duration::from_millis(50);
 
 struct Pending {
     req: EvalRequest,
@@ -175,6 +308,8 @@ struct Pending {
     f0: Vec<f32>,
     op: Vec<f32>,
     served_batch: usize,
+    /// First gather into a compiled block (ends the queue-wait stage).
+    started: Option<Instant>,
 }
 
 struct ModelState {
@@ -182,211 +317,281 @@ struct ModelState {
     sigma: Option<HostTensor>,
 }
 
-fn worker_loop(
-    rx: Receiver<EvalRequest>,
+/// Everything one shard mutates while serving.
+struct ShardState {
+    model_state: BTreeMap<String, ModelState>,
+    queues: BTreeMap<RouteKey, VecDeque<Pending>>,
+    /// Per-route EWMA of one flush's execution time (seconds) — the
+    /// deadline slack model.
+    ewma_exec: BTreeMap<RouteKey, f64>,
+    dir_rng: Rng,
+    seed: u64,
+    shard: usize,
+}
+
+impl ShardState {
+    fn pending_points(&self, route: &RouteKey) -> usize {
+        self.queues
+            .get(route)
+            .map(|q| q.iter().map(|p| p.req.n_points - p.consumed).sum())
+            .unwrap_or(0)
+    }
+}
+
+fn shard_loop(
+    intake: ShardIntake,
     registry: Registry,
     router: Router,
     metrics: Arc<Metrics>,
     config: ServiceConfig,
+    shard: usize,
+    threads: usize,
 ) -> Result<()> {
-    // One engine per service: typed handles per route, the shared
-    // compiled-program cache and the batch-sharding pool
-    // (CTAYLOR_THREADS), all surfaced as serving gauges.
-    let mut builder = Engine::builder().registry(registry);
+    // One engine per shard: typed handles per route, a shard-local
+    // compiled-program cache and batch-sharding pool — no cross-shard
+    // contention on any of them.
+    let mut builder = Engine::builder().registry(registry).threads(threads);
     if let Some(p) = config.precision {
         builder = builder.precision(p);
     }
     let engine = builder.build()?;
-    metrics.set_engine(&engine.stats());
-    let mut rng = Rng::new(config.seed);
-    // Shared parameter vectors per (dim, widths): every artifact of one
-    // network shape sees the same θ.
-    let mut thetas: BTreeMap<(usize, Vec<usize>), HostTensor> = BTreeMap::new();
-    let mut model_state: BTreeMap<String, ModelState> = BTreeMap::new();
-    let mut queues: BTreeMap<RouteKey, VecDeque<Pending>> = BTreeMap::new();
-    let mut last_flush = Instant::now();
+    metrics.set_engine_shard(shard, &engine.stats());
+    let mut state = ShardState {
+        model_state: BTreeMap::new(),
+        queues: BTreeMap::new(),
+        ewma_exec: BTreeMap::new(),
+        // Direction sampling is a per-shard stream; estimator values are
+        // stochastic by contract, only f0 is deterministic.
+        dir_rng: Rng::new(config.seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(shard as u64 + 1)),
+        seed: config.seed,
+        shard,
+    };
 
     loop {
-        let timeout = config.flush_interval.saturating_sub(last_flush.elapsed());
-        match rx.recv_timeout(timeout.max(Duration::from_micros(100))) {
+        let next_due = flush_due(&engine, &router, &metrics, &mut state)?;
+        let wait = match next_due {
+            Some(at) => at.saturating_duration_since(Instant::now()).max(MIN_TICK),
+            None => IDLE_TICK,
+        };
+        match intake.rx.recv_timeout(wait) {
             Ok(req) => {
-                let n = req.n_points;
-                queues.entry(req.route.clone()).or_default().push_back(Pending {
+                intake.depth.fetch_sub(1, Ordering::Relaxed);
+                let route = req.route.clone();
+                state.queues.entry(route.clone()).or_default().push_back(Pending {
                     req,
                     consumed: 0,
                     f0: Vec::new(),
                     op: Vec::new(),
                     served_batch: 0,
+                    started: None,
                 });
-                // Eager flush when enough points piled up on this route.
-                let eager: usize = queues
-                    .values()
-                    .map(|q| q.iter().map(|p| p.req.n_points - p.consumed).sum::<usize>())
-                    .max()
-                    .unwrap_or(0);
-                if eager < config.eager_points && n < config.eager_points {
-                    continue;
+                // Eager flush when enough points piled up on THIS route —
+                // a hot route must not force half-full flushes of cold
+                // ones.
+                if state.pending_points(&route) >= config.eager_points {
+                    flush_route(&engine, &router, &metrics, &mut state, &route)?;
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
                 // Drain remaining work, then exit.
-                flush_all(
-                    &engine, &router, &metrics, &mut rng, &mut thetas, &mut model_state,
-                    &mut queues,
-                )?;
+                let routes: Vec<RouteKey> = state.queues.keys().cloned().collect();
+                for route in routes {
+                    flush_route(&engine, &router, &metrics, &mut state, &route)?;
+                }
                 return Ok(());
             }
         }
-        flush_all(
-            &engine, &router, &metrics, &mut rng, &mut thetas, &mut model_state, &mut queues,
-        )?;
-        last_flush = Instant::now();
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn flush_all(
+/// Flush every route whose oldest request's remaining deadline slack
+/// would be consumed by one (EWMA-estimated) execution; return the
+/// earliest upcoming flush instant among the routes still waiting.
+fn flush_due(
     engine: &Engine,
     router: &Router,
     metrics: &Arc<Metrics>,
-    rng: &mut Rng,
-    thetas: &mut BTreeMap<(usize, Vec<usize>), HostTensor>,
-    model_state: &mut BTreeMap<String, ModelState>,
-    queues: &mut BTreeMap<RouteKey, VecDeque<Pending>>,
-) -> Result<()> {
-    for (route, queue) in queues.iter_mut() {
-        let pending: usize = queue.iter().map(|p| p.req.n_points - p.consumed).sum();
-        if pending == 0 {
+    state: &mut ShardState,
+) -> Result<Option<Instant>> {
+    let now = Instant::now();
+    let mut due = Vec::new();
+    let mut next: Option<Instant> = None;
+    for (route, queue) in state.queues.iter() {
+        let Some(oldest) = queue.iter().find(|p| p.req.n_points > p.consumed) else {
             continue;
+        };
+        let ewma = Duration::from_secs_f64(*state.ewma_exec.get(route).unwrap_or(&0.0));
+        let due_at = (oldest.req.submitted + oldest.req.deadline)
+            .checked_sub(ewma)
+            .unwrap_or(oldest.req.submitted);
+        if due_at <= now {
+            due.push(route.clone());
+        } else {
+            next = Some(next.map_or(due_at, |n| n.min(due_at)));
         }
-        let sizes = router.batch_sizes(route)?;
-        let blocks = plan_blocks(pending, &sizes);
-        for block in blocks {
-            let name = router.artifact(route, block.size)?;
-            // Typed handle: route strings were parsed when the handle was
-            // first built; the engine caches it per name thereafter.
-            let handle = engine.operator(name)?;
-            let meta = handle.meta();
-            let dim = meta.dim;
+    }
+    for route in due {
+        flush_route(engine, router, metrics, state, &route)?;
+    }
+    Ok(next)
+}
 
-            // Lazily build per-model state: shared θ plus a cached σ.
-            if !model_state.contains_key(name) {
-                let key = (meta.dim, meta.widths.clone());
-                let theta = thetas
-                    .entry(key)
-                    .or_insert_with(|| meta.glorot_theta(rng))
-                    .clone();
-                let sigma = if meta.op == "weighted_laplacian" {
-                    // Full-rank diagonal σ (the paper's choice), entries in
-                    // [0.5, 1.5] so the operator stays well-conditioned.
-                    let mut s = vec![0.0f32; dim * dim];
-                    for i in 0..dim {
-                        s[i * dim + i] = rng.uniform_in(0.5, 1.5) as f32;
-                    }
-                    Some(HostTensor::new(vec![dim, dim], s))
-                } else {
-                    None
-                };
-                model_state.insert(name.to_string(), ModelState { theta, sigma });
-            }
+fn flush_route(
+    engine: &Engine,
+    router: &Router,
+    metrics: &Arc<Metrics>,
+    state: &mut ShardState,
+    route: &RouteKey,
+) -> Result<()> {
+    let Some(mut queue) = state.queues.remove(route) else {
+        return Ok(());
+    };
+    let pending: usize = queue.iter().map(|p| p.req.n_points - p.consumed).sum();
+    if pending == 0 {
+        state.queues.insert(route.clone(), queue);
+        return Ok(());
+    }
+    let sizes = router.batch_sizes(route)?;
+    // The planner picks the block multiset with minimal padding for what
+    // is actually pending (then fewest blocks).
+    let blocks = plan_blocks(pending, &sizes);
+    for block in blocks {
+        let name = router.artifact(route, block.size)?;
+        // Typed handle: route strings were parsed when the handle was
+        // first built; the engine caches it per name thereafter.
+        let handle = engine.operator(name)?;
+        let meta = handle.meta();
+        let dim = meta.dim;
 
-            // Gather `used` points from the queue front (requests may split
-            // across blocks).
-            let mut xdata = vec![0.0f32; block.size * dim];
-            let mut gathered = 0usize;
-            {
-                let mut qi = 0;
-                while gathered < block.used && qi < queue.len() {
-                    let p = &mut queue[qi];
-                    let avail = p.req.n_points - p.consumed;
-                    if avail == 0 {
-                        qi += 1;
-                        continue;
-                    }
-                    let take = avail.min(block.used - gathered);
-                    let src = &p.req.points[p.consumed * dim..(p.consumed + take) * dim];
-                    xdata[gathered * dim..(gathered + take) * dim].copy_from_slice(src);
-                    gathered += take;
-                    p.consumed += take;
-                    p.served_batch = p.served_batch.max(block.size);
-                    qi += 1;
-                }
-            }
-            debug_assert_eq!(gathered, block.used);
-
-            // Execute through the typed request builder: θ + x, then σ
-            // (exact weighted) or sampled directions (stochastic).
-            // Weighted stochastic gets σ-premultiplied dirs (the aot.py
-            // contract, paper eq. 8a).
-            let state = model_state.get(name).unwrap();
-            let x = HostTensor::new(vec![block.size, dim], xdata);
-            let dirs_t = if meta.mode == "stochastic" {
-                let s = meta.samples;
-                let mut dirs = vec![0.0f32; s * dim];
-                // 4th-order estimators need Gaussian moments (Isserlis);
-                // Rademacher suffices — and has lower variance — for traces.
-                if meta.op == "biharmonic" {
-                    rng.fill_normal_f32(&mut dirs);
-                } else {
-                    rng.fill_rademacher_f32(&mut dirs);
-                }
-                if let Some(sigma) = &state.sigma {
-                    dirs = crate::operators::stochastic::premultiply_sigma_f32(
-                        &dirs, &sigma.data, dim, dim,
-                    );
-                }
-                Some(HostTensor::new(vec![s, dim], dirs))
+        // Lazily build per-model state: θ and σ are pure functions of
+        // (service seed, network shape), identical on every shard.
+        if !state.model_state.contains_key(name) {
+            let theta = model_theta(state.seed, meta);
+            let sigma = if meta.op == "weighted_laplacian" {
+                Some(model_sigma(state.seed, meta))
             } else {
                 None
             };
-            let mut req = handle.eval().theta(&state.theta).x(&x);
-            if let Some(d) = &dirs_t {
-                req = req.directions(d);
-            } else if let Some(sigma) = &state.sigma {
-                req = req.sigma(sigma);
-            }
-            let out = req.run()?;
-            metrics.record_batch(block.size - block.used);
+            state.model_state.insert(name.to_string(), ModelState { theta, sigma });
+        }
 
-            // Scatter outputs back to the requests that contributed points;
-            // out.f0 / out.op are each [B, 1].
-            let mut offset = 0usize;
-            for p in queue.iter_mut() {
-                if offset >= block.used {
-                    break;
-                }
-                let already = p.f0.len();
-                let want = p.consumed - already;
-                if want == 0 {
+        // Gather `used` points from the queue front (requests may split
+        // across blocks).
+        let gather_t = Instant::now();
+        let mut xdata = vec![0.0f32; block.size * dim];
+        let mut gathered = 0usize;
+        {
+            let mut qi = 0;
+            while gathered < block.used && qi < queue.len() {
+                let p = &mut queue[qi];
+                let avail = p.req.n_points - p.consumed;
+                if avail == 0 {
+                    qi += 1;
                     continue;
                 }
-                let take = want.min(block.used - offset);
-                p.f0.extend_from_slice(&out.f0.data[offset..offset + take]);
-                p.op.extend_from_slice(&out.op.data[offset..offset + take]);
-                offset += take;
+                let take = avail.min(block.used - gathered);
+                let src = &p.req.points[p.consumed * dim..(p.consumed + take) * dim];
+                xdata[gathered * dim..(gathered + take) * dim].copy_from_slice(src);
+                gathered += take;
+                p.consumed += take;
+                p.served_batch = p.served_batch.max(block.size);
+                if p.started.is_none() {
+                    p.started = Some(gather_t);
+                    metrics.record_queue_wait((gather_t - p.req.submitted).as_secs_f64());
+                }
+                qi += 1;
             }
         }
-        // Mirror the engine gauges (program-cache hits/misses, pool width)
-        // into the metrics so the serving amortization (steady state = VM
-        // execution only) is observable per batch.
-        metrics.set_engine(&engine.stats());
-        // Reply to fully-served requests.
-        while let Some(front) = queue.front() {
-            if front.f0.len() < front.req.n_points {
+        debug_assert_eq!(gathered, block.used);
+
+        // Execute through the typed request builder: θ + x, then σ
+        // (exact weighted) or sampled directions (stochastic).
+        // Weighted stochastic gets σ-premultiplied dirs (the aot.py
+        // contract, paper eq. 8a).
+        let mstate = state.model_state.get(name).unwrap();
+        let x = HostTensor::new(vec![block.size, dim], xdata);
+        let dirs_t = if meta.mode == "stochastic" {
+            let s = meta.samples;
+            let mut dirs = vec![0.0f32; s * dim];
+            // 4th-order estimators need Gaussian moments (Isserlis);
+            // Rademacher suffices — and has lower variance — for traces.
+            if meta.op == "biharmonic" {
+                state.dir_rng.fill_normal_f32(&mut dirs);
+            } else {
+                state.dir_rng.fill_rademacher_f32(&mut dirs);
+            }
+            if let Some(sigma) = &mstate.sigma {
+                dirs = crate::operators::stochastic::premultiply_sigma_f32(
+                    &dirs, &sigma.data, dim, dim,
+                );
+            }
+            Some(HostTensor::new(vec![s, dim], dirs))
+        } else {
+            None
+        };
+        let mut req = handle.eval().theta(&mstate.theta).x(&x);
+        if let Some(d) = &dirs_t {
+            req = req.directions(d);
+        } else if let Some(sigma) = &mstate.sigma {
+            req = req.sigma(sigma);
+        }
+        let exec_t = Instant::now();
+        let out = req.run()?;
+        let exec_s = exec_t.elapsed().as_secs_f64();
+        metrics.record_execute(exec_s);
+        metrics.record_batch(block.used, block.size - block.used);
+        // EWMA of per-flush execution time drives the deadline slack
+        // model for this route.
+        let ewma = state.ewma_exec.entry(route.clone()).or_insert(exec_s);
+        *ewma = 0.7 * *ewma + 0.3 * exec_s;
+
+        // Scatter outputs back to the requests that contributed points;
+        // out.f0 / out.op are each [B, 1].
+        let mut offset = 0usize;
+        for p in queue.iter_mut() {
+            if offset >= block.used {
                 break;
             }
-            let p = queue.pop_front().unwrap();
-            let latency = p.req.submitted.elapsed().as_secs_f64();
-            metrics.record_latency(latency);
-            let _ = p.req.reply.send(EvalResponse {
-                id: p.req.id,
-                f0: p.f0,
-                op: p.op,
-                latency_s: latency,
-                served_batch: p.served_batch,
-            });
+            let already = p.f0.len();
+            let want = p.consumed - already;
+            if want == 0 {
+                continue;
+            }
+            let take = want.min(block.used - offset);
+            p.f0.extend_from_slice(&out.f0.data[offset..offset + take]);
+            p.op.extend_from_slice(&out.op.data[offset..offset + take]);
+            offset += take;
         }
+    }
+    // Mirror the engine gauges (program-cache hits/misses, pool width)
+    // into the metrics so the serving amortization (steady state = VM
+    // execution only) is observable per batch.
+    metrics.set_engine_shard(state.shard, &engine.stats());
+    // Reply to fully-served requests.
+    while let Some(front) = queue.front() {
+        if front.f0.len() < front.req.n_points {
+            break;
+        }
+        let p = queue.pop_front().unwrap();
+        let latency = p.req.submitted.elapsed().as_secs_f64();
+        let queue_wait = p
+            .started
+            .map(|s| (s - p.req.submitted).as_secs_f64())
+            .unwrap_or(0.0);
+        metrics.record_latency(latency);
+        let _ = p.req.reply.send(EvalResponse {
+            id: p.req.id,
+            f0: p.f0,
+            op: p.op,
+            latency_s: latency,
+            queue_wait_s: queue_wait,
+            served_batch: p.served_batch,
+            shard: state.shard,
+        });
+    }
+    if !queue.is_empty() {
+        state.queues.insert(route.clone(), queue);
     }
     Ok(())
 }

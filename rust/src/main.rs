@@ -14,6 +14,9 @@
 //! ctaylor bench barometer [--matrix full|reduced] [--list] [--out FILE]
 //!                         [--warmup N] [--iters N]
 //! ctaylor bench cmp OLD.json NEW.json [--threshold PCT] [--fail-on-regress PCT]
+//! ctaylor bench serve [--scenario all|baseline|fanout|fanin|scale|chaos]
+//!                     [--duration-ms N] [--shards N] [--seed N] [--json] [--out FILE]
+//! ctaylor serve [--addr HOST:PORT] [--shards N] [--deadline-ms N] [--queue-capacity N]
 //! ctaylor serve-demo [--requests N]    # coordinator under load
 //! ```
 
@@ -22,6 +25,7 @@ use anyhow::{bail, Context, Result};
 use ctaylor::api::Engine;
 use ctaylor::bench;
 use ctaylor::bench::barometer;
+use ctaylor::bench::serve;
 use ctaylor::coordinator::{RouteKey, Service, ServiceConfig};
 use ctaylor::hlo;
 use ctaylor::operators::interpolation::{compositions, gamma};
@@ -49,7 +53,7 @@ fn main() -> Result<()> {
         None => {
             println!(
                 "ctaylor — Collapsing Taylor Mode AD (NeurIPS 2025) reproduction\n\
-                 subcommands: info | gamma | spec | analyze | eval | bench | serve-demo"
+                 subcommands: info | gamma | spec | analyze | eval | bench | serve | serve-demo"
             );
             Ok(())
         }
@@ -68,6 +72,14 @@ fn cmd_info(args: &Args) -> Result<()> {
     let reg = engine.registry();
     println!("preset: {}  artifacts: {}", reg.preset, reg.artifacts.len());
     println!("engine: native-cpu  {}", engine.stats());
+    let svc_defaults = ServiceConfig::default();
+    println!(
+        "serving: shards={} (default)  queue={}/shard  deadline={}ms  latency hist: 64 \
+         √2-spaced buckets from 1µs",
+        svc_defaults.resolved_shards(),
+        svc_defaults.queue_capacity,
+        svc_defaults.default_deadline.as_millis()
+    );
     let mut by_op = std::collections::BTreeMap::new();
     for a in &reg.artifacts {
         *by_op.entry(format!("{}/{}/{}", a.op, a.method, a.mode)).or_insert(0) += 1;
@@ -249,7 +261,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         Some("run") => return cmd_bench_run(args),
         Some("barometer") => return cmd_bench_barometer(args),
         Some("cmp") => return cmd_bench_cmp(args),
-        Some(other) => bail!("unknown bench subcommand {other:?} (run | barometer | cmp)"),
+        Some("serve") => return cmd_bench_serve(args),
+        Some(other) => bail!("unknown bench subcommand {other:?} (run | barometer | cmp | serve)"),
         None => {}
     }
     let which = args.get_or("which", "all").to_string();
@@ -341,6 +354,46 @@ fn cmd_bench_barometer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `bench serve`: the serving scenario suite.  `--scenario all` (the
+/// default) spawns the release binary once per scenario — process
+/// isolation, like the barometer — and prints one versioned JSON line
+/// per scenario; a single `--scenario NAME` runs in-process with the
+/// summary as the last stdout line.  Exits nonzero when any scenario
+/// fails its correctness checks (oracle mismatch or untyped rejection).
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let opts = serve::ServeOpts {
+        duration: std::time::Duration::from_millis(args.get_u64("duration-ms", 2000)),
+        shards: args.get_usize("shards", 0),
+        seed: args.get_u64("seed", 0xC0FFEE),
+    };
+    let scenario = args.get_or("scenario", "all").to_string();
+    if scenario == "all" {
+        let names: Vec<&str> = serve::SCENARIOS.to_vec();
+        let (lines, ok) = serve::run_suite(
+            &names,
+            &opts,
+            args.get_or("artifacts", "artifacts"),
+            args.get("out"),
+        )?;
+        println!("{lines}");
+        if !ok {
+            bail!("serve suite failed (see scenario summaries above)");
+        }
+        return Ok(());
+    }
+    let reg = registry(args)?;
+    if !args.flag("json") {
+        println!("# serve scenario {scenario}: {}", serve::describe(&scenario));
+    }
+    let j = serve::run_scenario(&scenario, &reg, &opts)?;
+    let ok = j.get("ok").and_then(|v| v.as_bool()) == Some(true);
+    println!("{}", json::to_string(&j));
+    if !ok {
+        bail!("scenario {scenario} failed its correctness checks");
+    }
+    Ok(())
+}
+
 /// `bench cmp OLD.json NEW.json`: join two snapshots by cell id, print
 /// the human report, then the single-line JSON summary as the last stdout
 /// line. Exits nonzero when `--fail-on-regress` trips.
@@ -368,10 +421,20 @@ fn cmd_bench_cmp(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use std::sync::Arc;
     let reg = registry(args)?;
-    let svc = Arc::new(Service::start(reg, ServiceConfig::default())?);
+    let cfg = ServiceConfig {
+        shards: args.get_usize("shards", 0),
+        queue_capacity: args.get_usize("queue-capacity", 1024),
+        default_deadline: std::time::Duration::from_millis(args.get_u64("deadline-ms", 5)),
+        ..ServiceConfig::default()
+    };
+    let svc = Arc::new(Service::start(reg, cfg)?);
     let addr = args.get_or("addr", "127.0.0.1:8042");
     let server = ctaylor::coordinator::Server::start(svc.clone(), addr)?;
-    println!("serving PDE operators on {} (JSON lines; ctrl-c to stop)", server.addr());
+    println!(
+        "serving PDE operators on {} ({} shards, JSON lines; ctrl-c to stop)",
+        server.addr(),
+        svc.shards()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
         println!("{}", svc.metrics().summary());

@@ -1,15 +1,18 @@
-//! Integration tests for the serving coordinator: submit → batch →
-//! execute → reply, over the real AOT artifacts.
+//! Integration tests for the serving coordinator: submit → dispatch →
+//! shard batch → execute → reply, over the real AOT artifacts.
 
-use ctaylor::coordinator::{RouteKey, Service, ServiceConfig};
+use ctaylor::coordinator::{shard_of, RouteKey, Service, ServiceConfig, SubmitError};
 use ctaylor::runtime::Registry;
 use ctaylor::util::prng::Rng;
 
-fn start_service() -> Service {
+fn test_registry() -> Registry {
     let dir = std::env::var("CTAYLOR_ARTIFACTS")
         .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
-    let reg = Registry::load_or_builtin(dir).expect("manifest present but malformed");
-    Service::start(reg, ServiceConfig::default()).unwrap()
+    Registry::load_or_builtin(dir).expect("manifest present but malformed")
+}
+
+fn start_service() -> Service {
+    Service::start(test_registry(), ServiceConfig::default()).unwrap()
 }
 
 fn random_points(rng: &mut Rng, n: usize, dim: usize) -> Vec<f32> {
@@ -138,11 +141,135 @@ fn second_batch_on_a_route_hits_the_program_cache() {
 fn unknown_route_is_rejected() {
     let svc = start_service();
     let err = svc.submit(RouteKey::new("nonexistent", "x", "exact"), vec![0.0; 16], 16);
-    assert!(err.is_err());
+    assert!(matches!(err, Err(SubmitError::UnknownRoute { .. })), "{err:?}");
     let err2 = svc.submit(
         RouteKey::new("laplacian", "collapsed", "exact"),
         vec![0.0; 7], // not a multiple of dim
         16,
     );
-    assert!(err2.is_err());
+    assert!(matches!(err2, Err(SubmitError::BadPayload { len: 7, dim: 16 })), "{err2:?}");
+}
+
+#[test]
+fn responses_name_their_shard_and_queue_wait() {
+    let cfg = ServiceConfig { shards: 3, ..ServiceConfig::default() };
+    let svc = Service::start(test_registry(), cfg).unwrap();
+    let mut rng = Rng::new(9);
+    let route = RouteKey::new("laplacian", "collapsed", "exact");
+    let expect = svc.shard_for(&route);
+    assert_eq!(expect, shard_of(&route, 3));
+    let resp = svc.eval_blocking(route, random_points(&mut rng, 4, 16), 16).unwrap();
+    assert_eq!(resp.shard, expect, "reply must come from the route's shard");
+    assert!(resp.queue_wait_s >= 0.0 && resp.queue_wait_s <= resp.latency_s);
+    svc.shutdown();
+}
+
+#[test]
+fn tight_deadline_flushes_without_eager_fill() {
+    // 3 points on an eager threshold of 1000: only the deadline can
+    // trigger the flush.
+    let cfg = ServiceConfig {
+        shards: 1,
+        eager_points: 1000,
+        default_deadline: std::time::Duration::from_millis(2),
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(test_registry(), cfg).unwrap();
+    let mut rng = Rng::new(11);
+    let route = RouteKey::new("laplacian", "collapsed", "exact");
+    let resp = svc.eval_blocking(route, random_points(&mut rng, 3, 16), 16).unwrap();
+    assert_eq!(resp.f0.len(), 3);
+    svc.shutdown();
+}
+
+#[test]
+fn served_model_is_identical_across_shard_layouts() {
+    // θ/σ are pure functions of (seed, network shape): a 1-shard and a
+    // 3-shard service must serve identical exact-route values.
+    let mut rng = Rng::new(13);
+    let pts = random_points(&mut rng, 16, 16);
+    let route = RouteKey::new("weighted_laplacian", "collapsed", "exact");
+    let one = Service::start(
+        test_registry(),
+        ServiceConfig { shards: 1, ..ServiceConfig::default() },
+    )
+    .unwrap();
+    let three = Service::start(
+        test_registry(),
+        ServiceConfig { shards: 3, ..ServiceConfig::default() },
+    )
+    .unwrap();
+    let a = one.eval_blocking(route.clone(), pts.clone(), 16).unwrap();
+    let b = three.eval_blocking(route, pts, 16).unwrap();
+    assert_eq!(a.f0, b.f0);
+    assert_eq!(a.op, b.op);
+    one.shutdown();
+    three.shutdown();
+}
+
+#[test]
+fn overload_sheds_with_typed_errors_only() {
+    // A 4-deep shard queue under a flood of largest-block requests: some
+    // may shed, but every rejection must be a typed Overloaded carrying
+    // the queue bound, every admitted request must complete, and the
+    // shed gauge must match what callers observed.
+    let cfg = ServiceConfig {
+        shards: 1,
+        queue_capacity: 4,
+        eager_points: 1_000_000,
+        default_deadline: std::time::Duration::from_millis(1),
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(test_registry(), cfg).unwrap();
+    let mut rng = Rng::new(17);
+    let route = RouteKey::new("laplacian", "collapsed", "exact");
+    // Warm the compile caches so flushes in the flood are short.
+    svc.eval_blocking(route.clone(), random_points(&mut rng, 31, 16), 16).unwrap();
+    let mut receivers = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..500 {
+        match svc.submit(route.clone(), random_points(&mut rng, 16, 16), 16) {
+            Ok(rx) => receivers.push(rx),
+            Err(SubmitError::Overloaded { depth, capacity, shard, .. }) => {
+                assert_eq!(capacity, 4);
+                assert!(depth <= capacity, "depth {depth} is an occupancy, not a counter");
+                assert_eq!(shard, 0);
+                shed += 1;
+            }
+            Err(other) => panic!("only Overloaded rejections expected, got {other}"),
+        }
+    }
+    for rx in receivers {
+        let resp = rx.recv().expect("admitted requests must be served");
+        assert_eq!(resp.f0.len(), 16);
+    }
+    let metrics = svc.metrics();
+    assert_eq!(metrics.shed.load(std::sync::atomic::Ordering::Relaxed), shed);
+    // Only admitted requests count as requests (the warmup plus the
+    // flood survivors).
+    assert_eq!(
+        metrics.requests.load(std::sync::atomic::Ordering::Relaxed),
+        501 - shed,
+        "shed submissions must not inflate the request counter"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn latency_histograms_populate_through_the_summary() {
+    let svc = start_service();
+    let mut rng = Rng::new(19);
+    let route = RouteKey::new("laplacian", "collapsed", "exact");
+    for _ in 0..3 {
+        svc.eval_blocking(route.clone(), random_points(&mut rng, 8, 16), 16).unwrap();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.e2e.count(), 3);
+    assert!(m.latency_quantile_s(0.99) >= m.latency_quantile_s(0.50));
+    assert!(m.execute.count() >= 3);
+    let summary = m.summary();
+    for token in ["e2e[p50=", "p999=", "queue[p99=", "exec[p99=", "padding_ratio=", "shed=0"] {
+        assert!(summary.contains(token), "missing {token} in {summary}");
+    }
+    svc.shutdown();
 }

@@ -1,0 +1,170 @@
+//! Property tests for the serving tier: whatever way the batcher splits
+//! and packs concurrent requests into compiled blocks, every reply must
+//! equal a direct [`ctaylor::api::OperatorHandle`] evaluation of that
+//! request's own points under the service's deterministic model
+//! ([`model_theta`] / [`model_sigma`]).  This pins the gather/scatter
+//! ordering across block seams, which no single-request test exercises.
+
+use std::time::Duration;
+
+use ctaylor::api::Engine;
+use ctaylor::coordinator::{model_sigma, model_theta, RouteKey, Router, Service, ServiceConfig};
+use ctaylor::runtime::{HostTensor, Registry};
+use ctaylor::util::prng::Rng;
+
+const SEED: u64 = 0xC0FFEE;
+
+fn test_registry() -> Registry {
+    let dir = std::env::var("CTAYLOR_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    Registry::load_or_builtin(dir).expect("manifest present but malformed")
+}
+
+fn close(got: f32, want: f32) -> bool {
+    let (g, w) = (f64::from(got), f64::from(want));
+    (g - w).abs() <= 1e-4 * (1.0 + w.abs())
+}
+
+/// Direct evaluation of `points` through the largest-batch artifact,
+/// chunked and zero-padded — the oracle the service must agree with.
+fn oracle_eval(
+    engine: &Engine,
+    router: &Router,
+    route: &RouteKey,
+    points: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let sizes = router.batch_sizes(route).unwrap();
+    let b = *sizes.last().unwrap();
+    let name = router.artifact(route, b).unwrap();
+    let handle = engine.operator(name).unwrap();
+    let meta = handle.meta();
+    let dim = meta.dim;
+    let theta = model_theta(SEED, meta);
+    let sigma = (meta.op == "weighted_laplacian").then(|| model_sigma(SEED, meta));
+    let stochastic = meta.mode == "stochastic";
+    let samples = meta.samples;
+    let mut dir_rng = Rng::new(4242);
+    let n = points.len() / dim;
+    let (mut f0, mut op) = (Vec::new(), Vec::new());
+    for start in (0..n).step_by(b) {
+        let take = (n - start).min(b);
+        let mut x = vec![0.0f32; b * dim];
+        x[..take * dim].copy_from_slice(&points[start * dim..(start + take) * dim]);
+        let xt = HostTensor::new(vec![b, dim], x);
+        let dirs = stochastic.then(|| {
+            let mut d = vec![0.0f32; samples * dim];
+            dir_rng.fill_rademacher_f32(&mut d);
+            HostTensor::new(vec![samples, dim], d)
+        });
+        let mut req = handle.eval().theta(&theta).x(&xt);
+        if let Some(d) = &dirs {
+            req = req.directions(d);
+        } else if let Some(s) = &sigma {
+            req = req.sigma(s);
+        }
+        let out = req.run().unwrap();
+        f0.extend_from_slice(&out.f0.data[..take]);
+        op.extend_from_slice(&out.op.data[..take]);
+    }
+    (f0, op)
+}
+
+fn check_reply(
+    route: &RouteKey,
+    points: &[f32],
+    got_f0: &[f32],
+    got_op: &[f32],
+    engine: &Engine,
+    router: &Router,
+) {
+    let (want_f0, want_op) = oracle_eval(engine, router, route, points);
+    assert_eq!(got_f0.len(), want_f0.len(), "{route}");
+    for i in 0..want_f0.len() {
+        assert!(
+            close(got_f0[i], want_f0[i]),
+            "{route}: f0[{i}] served {} vs direct {}",
+            got_f0[i],
+            want_f0[i]
+        );
+        if route.mode == "stochastic" {
+            // Estimator values depend on the shard's direction stream;
+            // only finiteness is a property here.
+            assert!(got_op[i].is_finite(), "{route}: op[{i}] not finite");
+        } else {
+            assert!(
+                close(got_op[i], want_op[i]),
+                "{route}: op[{i}] served {} vs direct {}",
+                got_op[i],
+                want_op[i]
+            );
+        }
+    }
+}
+
+/// Pile many odd-sized requests onto one route before any flush can
+/// happen, so the deadline flush plans blocks spanning several requests
+/// (splitting some across seams); every reply must still be exactly that
+/// request's points, in order.
+#[test]
+fn split_requests_scatter_back_in_order() {
+    let registry = test_registry();
+    let router = Router::from_registry(&registry);
+    let engine = Engine::builder().registry(registry.clone()).threads(1).build().unwrap();
+    let route = RouteKey::new("laplacian", "collapsed", "exact");
+    for trial in 0..4u64 {
+        let cfg = ServiceConfig {
+            shards: 1,
+            eager_points: 1_000_000, // only the deadline flushes
+            default_deadline: Duration::from_millis(3),
+            seed: SEED,
+            ..ServiceConfig::default()
+        };
+        let svc = Service::start(registry.clone(), cfg).unwrap();
+        let mut rng = Rng::new(1000 + trial);
+        let mut sent = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in 0..10 {
+            let n = 1 + rng.below(40);
+            let mut pts = vec![0.0f32; n * 16];
+            rng.fill_normal_f32(&mut pts);
+            receivers.push(svc.submit(route.clone(), pts.clone(), 16).unwrap());
+            sent.push(pts);
+        }
+        for (pts, rx) in sent.iter().zip(receivers) {
+            let resp = rx.recv().unwrap();
+            check_reply(&route, pts, &resp.f0, &resp.op, &engine, &router);
+        }
+        svc.shutdown();
+    }
+}
+
+/// The same property across shards and heterogeneous routes, including a
+/// σ-weighted exact operator and a stochastic estimator (f0 oracle).
+#[test]
+fn multi_shard_replies_match_direct_evaluation() {
+    let registry = test_registry();
+    let router = Router::from_registry(&registry);
+    let engine = Engine::builder().registry(registry.clone()).threads(1).build().unwrap();
+    let routes = [
+        RouteKey::new("laplacian", "collapsed", "exact"),
+        RouteKey::new("weighted_laplacian", "collapsed", "exact"),
+        RouteKey::new("laplacian", "collapsed", "stochastic"),
+    ];
+    let cfg = ServiceConfig { shards: 3, seed: SEED, ..ServiceConfig::default() };
+    let svc = Service::start(registry.clone(), cfg).unwrap();
+    let mut rng = Rng::new(77);
+    let mut pendings = Vec::new();
+    for i in 0..18 {
+        let route = &routes[i % routes.len()];
+        let n = 1 + rng.below(20);
+        let mut pts = vec![0.0f32; n * 16];
+        rng.fill_normal_f32(&mut pts);
+        let rx = svc.submit(route.clone(), pts.clone(), 16).unwrap();
+        pendings.push((route.clone(), pts, rx));
+    }
+    for (route, pts, rx) in pendings {
+        let resp = rx.recv().unwrap();
+        check_reply(&route, &pts, &resp.f0, &resp.op, &engine, &router);
+    }
+    svc.shutdown();
+}
