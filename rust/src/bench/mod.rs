@@ -806,7 +806,7 @@ pub fn run_coordinator_bench(registry: Registry, n_requests: usize) -> Result<St
         receivers.push(svc.submit(route.clone(), pts, dim)?);
     }
     for rx in receivers {
-        rx.recv()?;
+        rx.recv()??;
     }
     let wall = t0.elapsed().as_secs_f64();
     let summary = svc.metrics().summary();

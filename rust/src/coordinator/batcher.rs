@@ -14,6 +14,20 @@ pub struct Block {
     pub used: usize,
 }
 
+/// A route offered no compiled batch sizes to plan with.  Typed (not an
+/// assert) because the planner runs inside a shard worker: a route with
+/// an empty ladder must fail that route's requests, not panic the shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NoBatchSizes;
+
+impl std::fmt::Display for NoBatchSizes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "no compiled batch sizes to plan with")
+    }
+}
+
+impl std::error::Error for NoBatchSizes {}
+
 /// Cap on the exact-cover DP table.  Builtin ladders are divisor chains
 /// ({1,2,4,8,16}), so whole largest-size blocks stripped above this cap
 /// never cost optimality there; the DP covers the general tail exactly.
@@ -23,9 +37,8 @@ const DP_LIMIT: usize = 4096;
 /// batch sizes (sorted ascending).  Minimizes total padding, then block
 /// count; blocks come out largest-first so requests split across as few
 /// seams as possible.
-pub fn plan_blocks(pending: usize, sizes: &[usize]) -> Vec<Block> {
-    assert!(!sizes.is_empty(), "no compiled batch sizes");
-    let largest = *sizes.last().unwrap();
+pub fn plan_blocks(pending: usize, sizes: &[usize]) -> Result<Vec<Block>, NoBatchSizes> {
+    let largest = *sizes.last().ok_or(NoBatchSizes)?;
     let mut out = Vec::new();
     let mut left = pending;
     while left > DP_LIMIT && left >= largest {
@@ -33,7 +46,7 @@ pub fn plan_blocks(pending: usize, sizes: &[usize]) -> Vec<Block> {
         left -= largest;
     }
     if left == 0 {
-        return out;
+        return Ok(out);
     }
 
     // Unbounded min-count coin change over achievable totals; the
@@ -68,7 +81,7 @@ pub fn plan_blocks(pending: usize, sizes: &[usize]) -> Vec<Block> {
         left -= used;
         out.push(Block { size: s, used });
     }
-    out
+    Ok(out)
 }
 
 /// Total padding a plan introduces.
@@ -85,7 +98,7 @@ mod tests {
     #[test]
     fn exact_fit_has_no_padding() {
         for n in [1, 2, 4, 8, 16, 24, 31, 32] {
-            let plan = plan_blocks(n, SIZES);
+            let plan = plan_blocks(n, SIZES).unwrap();
             let used: usize = plan.iter().map(|b| b.used).sum();
             assert_eq!(used, n);
             if n.count_ones() <= 2 || n % 16 == 0 {
@@ -98,7 +111,7 @@ mod tests {
     #[test]
     fn covers_all_points() {
         for n in 1..200 {
-            let plan = plan_blocks(n, SIZES);
+            let plan = plan_blocks(n, SIZES).unwrap();
             let used: usize = plan.iter().map(|b| b.used).sum();
             assert_eq!(used, n, "n={n}");
             assert!(padding(&plan) < 16, "padding bounded by largest block");
@@ -107,14 +120,14 @@ mod tests {
 
     #[test]
     fn single_size_always_pads_tail() {
-        let plan = plan_blocks(5, &[4]);
+        let plan = plan_blocks(5, &[4]).unwrap();
         assert_eq!(plan.len(), 2);
         assert_eq!(padding(&plan), 3);
     }
 
     #[test]
     fn prefers_large_blocks() {
-        let plan = plan_blocks(33, SIZES);
+        let plan = plan_blocks(33, SIZES).unwrap();
         assert_eq!(plan[0], Block { size: 16, used: 16 });
         assert_eq!(plan[1], Block { size: 16, used: 16 });
         let used: usize = plan.iter().map(|b| b.used).sum();
@@ -124,7 +137,7 @@ mod tests {
     #[test]
     fn ladder_with_one_never_pads() {
         for n in 1..300 {
-            assert_eq!(padding(&plan_blocks(n, SIZES)), 0, "n={n}");
+            assert_eq!(padding(&plan_blocks(n, SIZES).unwrap()), 0, "n={n}");
         }
     }
 
@@ -132,17 +145,17 @@ mod tests {
     fn occupancy_beats_greedy_on_gap_ladders() {
         // Greedy largest-fit would serve 6 points as one padded 16-block
         // (padding 10); the exact planner composes three 2-blocks.
-        let plan = plan_blocks(6, &[2, 16]);
+        let plan = plan_blocks(6, &[2, 16]).unwrap();
         assert_eq!(padding(&plan), 0, "{plan:?}");
         assert!(plan.iter().all(|b| b.size == 2), "{plan:?}");
 
         // 5 points on {2, 16}: best achievable total is 6 (padding 1).
-        let plan = plan_blocks(5, &[2, 16]);
+        let plan = plan_blocks(5, &[2, 16]).unwrap();
         assert_eq!(padding(&plan), 1, "{plan:?}");
 
         // {3, 5}: 7 points can't be composed exactly; 3+5 = 8 pads 1,
         // strictly better than 5+5 or 3+3+3.
-        let plan = plan_blocks(7, &[3, 5]);
+        let plan = plan_blocks(7, &[3, 5]).unwrap();
         assert_eq!(padding(&plan), 1, "{plan:?}");
         assert_eq!(plan.len(), 2, "{plan:?}");
     }
@@ -151,14 +164,14 @@ mod tests {
     fn minimal_padding_ties_break_to_fewest_blocks() {
         // 8 points on {2, 4}: both 4+4 and 2+2+2+2 are exact; the planner
         // must choose two blocks.
-        let plan = plan_blocks(8, &[2, 4]);
+        let plan = plan_blocks(8, &[2, 4]).unwrap();
         assert_eq!(plan.len(), 2, "{plan:?}");
         assert!(plan.iter().all(|b| b.size == 4), "{plan:?}");
     }
 
     #[test]
     fn large_pending_strips_whole_blocks() {
-        let plan = plan_blocks(100_003, SIZES);
+        let plan = plan_blocks(100_003, SIZES).unwrap();
         let used: usize = plan.iter().map(|b| b.used).sum();
         assert_eq!(used, 100_003);
         assert_eq!(padding(&plan), 0);
@@ -167,6 +180,14 @@ mod tests {
 
     #[test]
     fn empty_pending_plans_nothing() {
-        assert!(plan_blocks(0, SIZES).is_empty());
+        assert!(plan_blocks(0, SIZES).unwrap().is_empty());
+    }
+
+    #[test]
+    fn empty_ladder_is_a_typed_error() {
+        for pending in [0, 1, 7, DP_LIMIT + 1] {
+            assert_eq!(plan_blocks(pending, &[]), Err(NoBatchSizes), "pending={pending}");
+        }
+        assert!(!NoBatchSizes.to_string().is_empty());
     }
 }

@@ -7,13 +7,16 @@
 //! queue; when it is full the dispatcher sheds the request *now* with a
 //! typed [`SubmitError::Overloaded`] carrying the observed depth and
 //! capacity, instead of queueing unboundedly and letting latency
-//! collapse.
+//! collapse.  A shard that is restarting after a panic (or dead past its
+//! restart budget) sheds the same way with [`SubmitError::ShardFailed`]
+//! — requests never queue behind a worker that cannot serve them.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 
 use super::request::{EvalRequest, RouteKey};
+use super::supervisor::{HealthBoard, ShardHealth};
 
 /// Consistent route → shard assignment: FNV-1a over `op/method/mode`.
 /// Stable across processes, so clients and oracles can predict placement.
@@ -43,6 +46,13 @@ pub enum SubmitError {
     /// is the queue occupancy observed at rejection, `capacity` its
     /// bound — what the caller should log and back off on.
     Overloaded { route: RouteKey, shard: usize, depth: usize, capacity: usize },
+    /// The route's shard crashed (or is restarting / dead): the request
+    /// was shed, or was pending on the shard when it went down.
+    /// `restarts` is the shard's supervised-restart count at failure.
+    ShardFailed { shard: usize, restarts: u64 },
+    /// The whole route failed to serve on an otherwise healthy shard
+    /// (e.g. its artifact names an operator the engine cannot load).
+    RouteFailed { route: RouteKey, reason: String },
     /// The service is shutting down (shard worker gone).
     Stopped,
 }
@@ -58,6 +68,12 @@ impl std::fmt::Display for SubmitError {
                 f,
                 "overloaded: shard {shard} queue for {route} at depth {depth}/{capacity}"
             ),
+            SubmitError::ShardFailed { shard, restarts } => {
+                write!(f, "shard {shard} failed (restarts={restarts}); request shed while down")
+            }
+            SubmitError::RouteFailed { route, reason } => {
+                write!(f, "route {route} failed on its shard: {reason}")
+            }
             SubmitError::Stopped => write!(f, "service stopped"),
         }
     }
@@ -73,9 +89,11 @@ struct ShardGate {
     capacity: usize,
 }
 
-/// The admission front: per-shard bounded queues behind one `dispatch`.
+/// The admission front: per-shard bounded queues behind one `dispatch`,
+/// consulting the health board so unhealthy shards shed immediately.
 pub struct Dispatcher {
     gates: Vec<ShardGate>,
+    board: Arc<HealthBoard>,
 }
 
 /// The worker half of one shard queue, handed to the shard thread.
@@ -87,9 +105,15 @@ pub struct ShardIntake {
 
 impl Dispatcher {
     /// Build `shards` bounded queues of `capacity` each; the returned
-    /// intakes go to the shard workers in index order.
-    pub fn new(shards: usize, capacity: usize) -> (Dispatcher, Vec<ShardIntake>) {
+    /// intakes go to the shard workers in index order.  The health board
+    /// must cover the same shard count.
+    pub fn new(
+        shards: usize,
+        capacity: usize,
+        board: Arc<HealthBoard>,
+    ) -> (Dispatcher, Vec<ShardIntake>) {
         assert!(shards > 0 && capacity > 0);
+        assert_eq!(board.shards(), shards);
         let mut gates = Vec::with_capacity(shards);
         let mut intakes = Vec::with_capacity(shards);
         for _ in 0..shards {
@@ -98,7 +122,7 @@ impl Dispatcher {
             gates.push(ShardGate { tx, depth: depth.clone(), capacity });
             intakes.push(ShardIntake { rx, depth });
         }
-        (Dispatcher { gates }, intakes)
+        (Dispatcher { gates, board }, intakes)
     }
 
     pub fn shards(&self) -> usize {
@@ -111,9 +135,15 @@ impl Dispatcher {
     }
 
     /// Admit or shed: route the request to its shard, enforcing the
-    /// queue bound without blocking.
+    /// queue bound without blocking.  A shard that is restarting or dead
+    /// sheds immediately — queueing behind it would turn a contained
+    /// crash into caller-visible latency (or a hang, if it never comes
+    /// back).
     pub fn dispatch(&self, req: EvalRequest) -> Result<(), SubmitError> {
         let shard = shard_of(&req.route, self.gates.len());
+        if self.board.health(shard) != ShardHealth::Healthy {
+            return Err(SubmitError::ShardFailed { shard, restarts: self.board.restarts(shard) });
+        }
         let gate = &self.gates[shard];
         // Optimistic: count the slot first so depth never under-reports
         // under concurrent submitters; roll back on rejection.
@@ -185,7 +215,7 @@ mod tests {
 
     #[test]
     fn full_queue_sheds_with_depth_and_capacity() {
-        let (d, _intakes) = Dispatcher::new(1, 2);
+        let (d, _intakes) = Dispatcher::new(1, 2, HealthBoard::new(1));
         d.dispatch(req("laplacian")).unwrap();
         d.dispatch(req("laplacian")).unwrap();
         match d.dispatch(req("laplacian")) {
@@ -201,10 +231,32 @@ mod tests {
 
     #[test]
     fn disconnected_shard_reports_stopped() {
-        let (d, intakes) = Dispatcher::new(1, 2);
+        let (d, intakes) = Dispatcher::new(1, 2, HealthBoard::new(1));
         drop(intakes);
         assert_eq!(d.dispatch(req("laplacian")), Err(SubmitError::Stopped));
         assert_eq!(d.depth(0), 0);
+    }
+
+    #[test]
+    fn unhealthy_shard_sheds_shard_failed_without_queueing() {
+        let board = HealthBoard::new(1);
+        let (d, _intakes) = Dispatcher::new(1, 4, board.clone());
+        board.set_health(0, ShardHealth::Restarting);
+        board.record_restart(0);
+        match d.dispatch(req("laplacian")) {
+            Err(SubmitError::ShardFailed { shard, restarts }) => {
+                assert_eq!(shard, 0);
+                assert_eq!(restarts, 1);
+            }
+            other => panic!("expected ShardFailed, got {other:?}"),
+        }
+        assert_eq!(d.depth(0), 0, "shed requests must not occupy queue slots");
+        // Dead sheds the same way; recovery re-admits.
+        board.set_health(0, ShardHealth::Dead);
+        assert!(matches!(d.dispatch(req("laplacian")), Err(SubmitError::ShardFailed { .. })));
+        board.set_health(0, ShardHealth::Healthy);
+        d.dispatch(req("laplacian")).unwrap();
+        assert_eq!(d.depth(0), 1);
     }
 
     #[test]

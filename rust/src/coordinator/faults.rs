@@ -1,0 +1,256 @@
+//! Deterministic fault injection for the serving tier.
+//!
+//! A [`FaultPlan`] is a fixed schedule of faults keyed by a shard's
+//! *lifetime arrival index* (request 1, 2, 3 … as received, surviving
+//! restarts — so an injected panic fires once, not once per rebuild).
+//! Three fault kinds cover the failure modes the supervisor must absorb:
+//! a worker panic (crash mid-flush), an execution stall (wedged shard)
+//! and a pre-reply drop (lost reply; the caller's receiver disconnects).
+//!
+//! Plans are off by default and carry zero hot-path cost when disabled:
+//! the shard loop holds an `Option<&FaultPlan>` and a `None` costs one
+//! branch per request, with no schedule lookup.  Enable a plan either
+//! through [`super::ServiceConfig::faults`] (the builder hook the bench
+//! suite uses) or the `CTAYLOR_FAULTS` environment variable.
+//!
+//! Schedules are deterministic: [`FaultPlan::seeded`] derives every
+//! index and stall duration from FNV-mixed sub-seeds, so the same
+//! `(seed, horizon)` yields the same chaos in every process — the bench
+//! suite's recovery assertions depend on that reproducibility.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::prng::Rng;
+
+/// Environment variable holding a fault-plan spec ([`FaultPlan::parse`]).
+pub const FAULTS_ENV: &str = "CTAYLOR_FAULTS";
+
+/// What to inject when a planned arrival index comes up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic the shard worker: the supervisor must fail pending requests
+    /// typed, rebuild the engine and restart.
+    Panic,
+    /// Stall the worker loop for the given duration before queueing the
+    /// request (a wedged shard; deadlines blow but replies still come).
+    Stall(Duration),
+    /// Drop the request without ever replying: the caller's receiver
+    /// disconnects and must surface a typed `ShardFailed`, not a hang.
+    Drop,
+}
+
+/// A deterministic schedule of faults, sorted by arrival index.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// `(arrival index, fault)` pairs, strictly increasing indices.
+    events: Vec<(u64, FaultKind)>,
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn parse_duration(text: &str) -> Result<Duration> {
+    let text = text.trim();
+    let (digits, unit) = text
+        .find(|c: char| !c.is_ascii_digit())
+        .map(|i| text.split_at(i))
+        .with_context(|| format!("duration {text:?} needs a unit (us | ms | s)"))?;
+    let n: u64 = digits.parse().with_context(|| format!("bad duration {text:?}"))?;
+    match unit.trim() {
+        "us" => Ok(Duration::from_micros(n)),
+        "ms" => Ok(Duration::from_millis(n)),
+        "s" => Ok(Duration::from_secs(n)),
+        other => bail!("unknown duration unit {other:?} in {text:?} (us | ms | s)"),
+    }
+}
+
+impl FaultPlan {
+    /// The scheduled events, sorted by arrival index.
+    pub fn events(&self) -> &[(u64, FaultKind)] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The fault planned at this lifetime arrival index, if any.
+    pub fn at(&self, index: u64) -> Option<FaultKind> {
+        self.events.binary_search_by_key(&index, |e| e.0).ok().map(|i| self.events[i].1)
+    }
+
+    /// `(panics, stalls, drops)` in the schedule.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for (_, kind) in &self.events {
+            match kind {
+                FaultKind::Panic => c.0 += 1,
+                FaultKind::Stall(_) => c.1 += 1,
+                FaultKind::Drop => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// A reproducible chaos schedule: two panics, two short stalls
+    /// (1–5 ms) and two drops at FNV-seeded indices in
+    /// `[horizon/4, horizon)`.  The low quarter stays fault-free so
+    /// warmup traffic completes before the first injection.  The same
+    /// `(seed, horizon)` always yields the same schedule.
+    pub fn seeded(seed: u64, horizon: u64) -> FaultPlan {
+        let horizon = horizon.max(16);
+        let lo = horizon / 4;
+        let span = (horizon - lo) as usize;
+        let mut events = std::collections::BTreeMap::new();
+        let mut place = |label: &str, count: usize, mk: &mut dyn FnMut(&mut Rng) -> FaultKind| {
+            let mut rng = Rng::new(seed ^ fnv(label));
+            for _ in 0..count {
+                let mut idx = lo + rng.below(span) as u64;
+                // Linear probe on collision keeps indices unique without
+                // disturbing the deterministic draw sequence.
+                while events.contains_key(&idx) {
+                    idx = lo + (idx - lo + 1) % span as u64;
+                }
+                events.insert(idx, mk(&mut rng));
+            }
+        };
+        place("faults/panic", 2, &mut |_| FaultKind::Panic);
+        place("faults/stall", 2, &mut |r| {
+            FaultKind::Stall(Duration::from_micros(1000 + r.below(4000) as u64))
+        });
+        place("faults/drop", 2, &mut |_| FaultKind::Drop);
+        FaultPlan { events: events.into_iter().collect() }
+    }
+
+    /// Parse a plan spec.  Two forms:
+    ///
+    /// - Event list: `panic@40;drop@90;stall@120:2ms` — kind `@` arrival
+    ///   index, stalls with a `:DURATION` suffix (`us` | `ms` | `s`).
+    ///   `,` also separates events; a duplicate index keeps the last.
+    /// - Seeded: `seed=7` or `seed=7;horizon=240` — expands through
+    ///   [`FaultPlan::seeded`].
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(FaultPlan::default());
+        }
+        if spec.starts_with("seed=") {
+            let (mut seed, mut horizon) = (None, 160u64);
+            for part in spec.split([';', ',']) {
+                let (k, v) = part
+                    .split_once('=')
+                    .with_context(|| format!("expected key=value, got {part:?}"))?;
+                let v = v.trim();
+                match k.trim() {
+                    "seed" => seed = Some(v.parse().with_context(|| format!("bad seed {v:?}"))?),
+                    "horizon" => {
+                        horizon = v.parse().with_context(|| format!("bad horizon {v:?}"))?
+                    }
+                    other => bail!("unknown key {other:?} in seeded fault spec (seed | horizon)"),
+                }
+            }
+            return Ok(FaultPlan::seeded(seed.context("seeded fault spec needs seed=N")?, horizon));
+        }
+        let mut events = std::collections::BTreeMap::new();
+        for part in spec.split([';', ',']).filter(|p| !p.trim().is_empty()) {
+            let part = part.trim();
+            let (kind, rest) = part
+                .split_once('@')
+                .with_context(|| format!("fault event {part:?}: expected kind@index"))?;
+            match kind.trim() {
+                "panic" => {
+                    let idx = rest.trim().parse().with_context(|| format!("bad index {rest:?}"))?;
+                    events.insert(idx, FaultKind::Panic);
+                }
+                "drop" => {
+                    let idx = rest.trim().parse().with_context(|| format!("bad index {rest:?}"))?;
+                    events.insert(idx, FaultKind::Drop);
+                }
+                "stall" => {
+                    let (idx, dur) = rest
+                        .split_once(':')
+                        .with_context(|| format!("stall event {part:?}: expected stall@N:DUR"))?;
+                    let idx = idx.trim().parse().with_context(|| format!("bad index {idx:?}"))?;
+                    events.insert(idx, FaultKind::Stall(parse_duration(dur)?));
+                }
+                other => bail!("unknown fault kind {other:?} (panic | stall | drop)"),
+            }
+        }
+        ensure!(!events.is_empty(), "fault spec {spec:?} has no events");
+        Ok(FaultPlan { events: events.into_iter().collect() })
+    }
+
+    /// The plan `CTAYLOR_FAULTS` requests, if set and non-empty.  A
+    /// malformed spec is an error (a typo must not silently disable the
+    /// chaos a test asked for), an unset variable is `Ok(None)`.
+    pub fn from_env() -> Result<Option<Arc<FaultPlan>>> {
+        match std::env::var(FAULTS_ENV) {
+            Ok(v) if !v.trim().is_empty() => {
+                let plan = FaultPlan::parse(&v).with_context(|| format!("parsing {FAULTS_ENV}"))?;
+                Ok((!plan.is_empty()).then(|| Arc::new(plan)))
+            }
+            _ => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_distinct() {
+        let a = FaultPlan::seeded(7, 160);
+        let b = FaultPlan::seeded(7, 160);
+        assert_eq!(a, b, "same seed must yield the same schedule");
+        assert_ne!(a, FaultPlan::seeded(8, 160), "different seeds should differ");
+        assert_eq!(a.counts(), (2, 2, 2));
+        // Indices unique, sorted, inside [horizon/4, horizon).
+        let idx: Vec<u64> = a.events().iter().map(|e| e.0).collect();
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(idx, sorted);
+        assert!(idx.iter().all(|&i| (40..160).contains(&i)), "{idx:?}");
+    }
+
+    #[test]
+    fn at_finds_only_planned_indices() {
+        let plan = FaultPlan::parse("panic@3;stall@10:2ms;drop@20").unwrap();
+        assert_eq!(plan.at(3), Some(FaultKind::Panic));
+        assert_eq!(plan.at(10), Some(FaultKind::Stall(Duration::from_millis(2))));
+        assert_eq!(plan.at(20), Some(FaultKind::Drop));
+        for i in [0, 1, 2, 4, 9, 11, 19, 21, 1000] {
+            assert_eq!(plan.at(i), None, "index {i}");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_both_forms_and_rejects_garbage() {
+        assert_eq!(FaultPlan::parse("seed=7;horizon=240").unwrap(), FaultPlan::seeded(7, 240));
+        assert_eq!(FaultPlan::parse("  ").unwrap(), FaultPlan::default());
+        let p = FaultPlan::parse("drop@5, panic@9, stall@2:500us").unwrap();
+        assert_eq!(p.counts(), (1, 1, 1));
+        assert_eq!(p.at(2), Some(FaultKind::Stall(Duration::from_micros(500))));
+        for bad in ["panic", "panic@x", "stall@3", "stall@3:4", "wedge@3", "seed=x"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn default_plan_is_empty_and_injects_nothing() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        assert_eq!(plan.at(1), None);
+        assert_eq!(plan.counts(), (0, 0, 0));
+    }
+}

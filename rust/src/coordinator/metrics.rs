@@ -12,8 +12,9 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
+use super::supervisor::HealthBoard;
 use crate::api::EngineStats;
 use crate::util::json::Json;
 
@@ -113,7 +114,8 @@ pub struct Metrics {
     pub padded_points: AtomicU64,
     /// Hard failures (worker errors), distinct from admission sheds.
     pub errors: AtomicU64,
-    /// Requests rejected by admission control (`Overloaded`).
+    /// Requests rejected by admission control: `Overloaded` (queue
+    /// full) or `ShardFailed` (shard restarting / dead).
     pub shed: AtomicU64,
     /// Program-cache hits/misses summed over every shard engine, mirrored
     /// from [`crate::api::EngineStats`] after each flush (gauges).
@@ -133,6 +135,9 @@ pub struct Metrics {
     /// above on every store (flush-rate, not per-request — the one
     /// non-atomic seam).
     engine_shards: Mutex<BTreeMap<usize, EngineStats>>,
+    /// Per-shard health + restart/panic counters, installed once at
+    /// service start (absent for bare `Metrics` in unit tests).
+    health: OnceLock<Arc<HealthBoard>>,
 }
 
 impl Metrics {
@@ -197,6 +202,25 @@ impl Metrics {
         self.pool_executors.store(merged.pool_executors as u64, Ordering::Relaxed);
     }
 
+    /// Install the service's health board (once, at start).
+    pub fn set_health_board(&self, board: Arc<HealthBoard>) {
+        let _ = self.health.set(board);
+    }
+
+    pub fn health_board(&self) -> Option<&Arc<HealthBoard>> {
+        self.health.get()
+    }
+
+    /// Supervised shard restarts, summed over shards (0 when no board).
+    pub fn shard_restarts(&self) -> u64 {
+        self.health.get().map_or(0, |b| b.total_restarts())
+    }
+
+    /// Shard panics caught by the supervisor (0 when no board).
+    pub fn shard_panics(&self) -> u64 {
+        self.health.get().map_or(0, |b| b.total_panics())
+    }
+
     pub fn mean_latency_s(&self) -> f64 {
         self.e2e.mean_s()
     }
@@ -211,7 +235,8 @@ impl Metrics {
         format!(
             "requests={} points={} batches={} served={} padded={} padding_ratio={:.3} \
              shed={} errors={} prog_cache_hits={} prog_cache_misses={} pool_executors={} \
-             shards={} e2e[p50={:.3}ms p99={:.3}ms p999={:.3}ms] queue[p99={:.3}ms] \
+             shards={} restarts={} panics={} health={} \
+             e2e[p50={:.3}ms p99={:.3}ms p999={:.3}ms] queue[p99={:.3}ms] \
              exec[p99={:.3}ms]",
             self.requests.load(Ordering::Relaxed),
             self.points.load(Ordering::Relaxed),
@@ -225,6 +250,9 @@ impl Metrics {
             self.program_cache_misses.load(Ordering::Relaxed),
             self.pool_executors.load(Ordering::Relaxed),
             self.shards.load(Ordering::Relaxed),
+            self.shard_restarts(),
+            self.shard_panics(),
+            self.health.get().map_or_else(|| "-".to_string(), |b| b.codes()),
             self.e2e.quantile_s(0.50) * 1e3,
             self.e2e.quantile_s(0.99) * 1e3,
             self.e2e.quantile_s(0.999) * 1e3,
@@ -256,6 +284,9 @@ impl Metrics {
             ),
             ("pool_executors", Json::num(self.pool_executors.load(Ordering::Relaxed) as f64)),
             ("shards", Json::num(self.shards.load(Ordering::Relaxed) as f64)),
+            ("restarts", Json::num(self.shard_restarts() as f64)),
+            ("panics", Json::num(self.shard_panics() as f64)),
+            ("health", self.health.get().map_or(Json::Arr(Vec::new()), |b| b.json())),
             ("queue_wait", self.queue_wait.json()),
             ("execute", self.execute.json()),
             ("e2e", self.e2e.json()),
@@ -344,5 +375,26 @@ mod tests {
         assert!(s.contains("prog_cache_hits="), "{s}");
         assert!(s.contains("padding_ratio="), "{s}");
         assert!(s.contains("shed="), "{s}");
+        assert!(s.contains("health=-"), "no board installed: {s}");
+    }
+
+    #[test]
+    fn health_board_surfaces_through_metrics() {
+        let m = Metrics::new();
+        assert_eq!(m.shard_restarts(), 0);
+        assert!(m.health_board().is_none());
+        let board = HealthBoard::new(2);
+        m.set_health_board(board.clone());
+        board.record_panic(1);
+        board.record_restart(1);
+        assert_eq!(m.shard_panics(), 1);
+        assert_eq!(m.shard_restarts(), 1);
+        let s = m.summary();
+        assert!(s.contains("restarts=1"), "{s}");
+        assert!(s.contains("panics=1"), "{s}");
+        assert!(s.contains("health=HH"), "{s}");
+        let snap = m.snapshot();
+        assert_eq!(snap.get_f64("restarts"), Some(1.0));
+        assert_eq!(snap.get("health").and_then(|h| h.as_arr()).map(|a| a.len()), Some(2));
     }
 }

@@ -10,18 +10,29 @@
 //! typed per-route handles, resident parameters and deadline-aware
 //! micro-batching) and metrics with log-scale latency histograms — the
 //! vLLM-router-shaped skeleton adapted to PDE operators.
+//!
+//! The tier is fault-tolerant: shard workers run supervised
+//! (supervisor.rs) so a panic fails its pending requests with typed
+//! errors and the shard restarts bitwise-identical; deterministic fault
+//! injection (faults.rs) exercises exactly that machinery in the chaos
+//! suite; and the TCP front door (server.rs) bounds connections, frame
+//! sizes and per-connection time so no client can wedge the service.
 
 pub mod batcher;
 pub mod dispatcher;
+pub mod faults;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
 pub mod service;
+pub mod supervisor;
 
 pub use dispatcher::{shard_of, SubmitError};
+pub use faults::{FaultKind, FaultPlan, FAULTS_ENV};
 pub use metrics::Metrics;
-pub use request::{EvalRequest, EvalResponse, RouteKey};
+pub use request::{EvalReply, EvalRequest, EvalResponse, RouteKey};
 pub use router::Router;
-pub use server::{Client, Server};
+pub use server::{Client, ClientConfig, Server, ServerConfig, ServerError};
 pub use service::{model_sigma, model_theta, Service, ServiceConfig};
+pub use supervisor::{HealthBoard, ShardHealth};

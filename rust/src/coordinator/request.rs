@@ -3,6 +3,15 @@
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
+use super::dispatcher::SubmitError;
+
+/// What comes back on a request's reply channel: the response, or a
+/// typed failure (shard crashed mid-flush, route-level serving error).
+/// The sender being dropped without any reply also maps to a typed
+/// [`SubmitError::ShardFailed`] in [`super::Service::eval_blocking`] —
+/// a caller can never hang on a dead shard.
+pub type EvalReply = Result<EvalResponse, SubmitError>;
+
 /// Which compiled operator family a request targets.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct RouteKey {
@@ -39,7 +48,7 @@ pub struct EvalRequest {
     /// than when the remaining slack would be consumed by execution.
     pub deadline: Duration,
     /// Completion channel.
-    pub reply: Sender<EvalResponse>,
+    pub reply: Sender<EvalReply>,
 }
 
 /// The result for one request.

@@ -8,129 +8,407 @@
 //!     "dim":16,"points":[...flat row-major...],"deadline_ms":5}
 //! <- {"ok":true,"f0":[...],"op":[...],"latency_ms":1.2,
 //!     "queue_wait_ms":0.3,"served_batch":8,"shard":2}
-//! <- {"ok":false,"error":"..."}        (bad requests, overload shedding)
+//! <- {"ok":false,"kind":"overloaded","error":"..."}
+//! -> {"op":"health"}
+//! <- {"ok":true,"shards":2,"all_healthy":true,"health":[...],"metrics":{...}}
 //! ```
 //!
-//! `deadline_ms` is optional (service default applies).  Hand-rolled on
-//! std::net (no tokio offline, DESIGN.md §2); one thread per connection,
-//! all connections share the shard workers — so concurrent clients on
-//! one route *improve* batch fill.
+//! `deadline_ms` is optional (service default applies).  Error replies
+//! carry a machine-matchable `kind` (`bad_request`, `unknown_route`,
+//! `bad_payload`, `overloaded`, `shard_failed`, `route_failed`, `busy`,
+//! `oversized`, `internal`) alongside the human `error` string.
+//!
+//! The front door is hardened against misbehaving clients: a bounded
+//! connection count (excess connections get one typed `busy` line, then
+//! close), per-connection read/write timeouts, and a max-line-length
+//! guard with a hand-rolled bounded reader — an attacker streaming an
+//! endless line (or trickling bytes slowloris-style) costs one buffer
+//! chunk and one timeout, not unbounded memory or a pinned thread.
+//! `Server::stop` drains in-flight requests before force-closing.
+//!
+//! Hand-rolled on std::net (no tokio offline, DESIGN.md §2); one thread
+//! per connection, all connections share the shard workers — so
+//! concurrent clients on one route *improve* batch fill.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
+use super::dispatcher::SubmitError;
 use super::request::RouteKey;
 use super::service::Service;
 use crate::util::json::{self, Json};
+
+/// Front-door hardening knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Concurrent connections served; the next one gets a typed `busy`
+    /// reply and a close instead of an unbounded handler thread.
+    pub max_connections: usize,
+    /// Per-connection read budget: an idle or byte-trickling connection
+    /// is closed once a frame takes longer than this to arrive.
+    pub read_timeout: Duration,
+    /// Per-connection write timeout (a client that stops reading cannot
+    /// pin a handler in `write_all`).
+    pub write_timeout: Duration,
+    /// Longest accepted request line; longer frames get a typed
+    /// `oversized` error and a close, never an unbounded buffer.
+    pub max_line_bytes: usize,
+    /// How long [`Server::stop`] waits for in-flight requests (and then
+    /// handler threads) before force-closing sockets.
+    pub drain_grace: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_connections: 256,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+            max_line_bytes: 1 << 20,
+            drain_grace: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Live-connection bookkeeping shared by the acceptor, the handlers and
+/// `stop` — the counters bound admission, the stream map lets shutdown
+/// force-close whatever drain could not wait out.
+#[derive(Debug, Default)]
+struct ConnTracker {
+    active: AtomicUsize,
+    in_flight: AtomicUsize,
+    next_id: AtomicU64,
+    streams: Mutex<BTreeMap<u64, TcpStream>>,
+}
+
+impl ConnTracker {
+    fn register(&self, stream: &TcpStream) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Ok(dup) = stream.try_clone() {
+            self.streams.lock().unwrap().insert(id, dup);
+        }
+        id
+    }
+
+    fn deregister(&self, id: u64) {
+        self.streams.lock().unwrap().remove(&id);
+    }
+
+    fn close_all(&self) {
+        for stream in self.streams.lock().unwrap().values() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
 
 /// A running TCP front-end.
 pub struct Server {
     local_addr: std::net::SocketAddr,
     accept_thread: Option<std::thread::JoinHandle<()>>,
-    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<ConnTracker>,
+    drain_grace: Duration,
 }
 
 impl Server {
-    /// Bind and start accepting.  `addr` like "127.0.0.1:0" (0 = ephemeral).
+    /// Bind and start accepting with default hardening limits.  `addr`
+    /// like "127.0.0.1:0" (0 = ephemeral).
     pub fn start(service: Arc<Service>, addr: &str) -> Result<Server> {
+        Server::start_with(service, addr, ServerConfig::default())
+    }
+
+    /// [`Server::start`] with explicit limits.
+    pub fn start_with(service: Arc<Service>, addr: &str, config: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(ConnTracker::default());
+        let drain_grace = config.drain_grace;
         let flag = shutdown.clone();
+        let tracker = conns.clone();
         let accept_thread = std::thread::Builder::new()
             .name("ctaylor-accept".into())
             .spawn(move || {
-                while !flag.load(std::sync::atomic::Ordering::Relaxed) {
+                while !flag.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            // Cap check is safe without CAS: this single
+                            // acceptor thread is the only incrementer.
+                            if tracker.active.load(Ordering::Relaxed) >= config.max_connections {
+                                reject_busy(stream, config.max_connections);
+                                continue;
+                            }
+                            tracker.active.fetch_add(1, Ordering::Relaxed);
+                            let id = tracker.register(&stream);
                             let svc = service.clone();
+                            let conns = tracker.clone();
+                            let cfg = config.clone();
+                            let sd = flag.clone();
                             std::thread::spawn(move || {
-                                let _ = handle_connection(stream, svc);
+                                handle_connection(stream, svc, &conns, &cfg, &sd);
+                                conns.deregister(id);
+                                conns.active.fetch_sub(1, Ordering::Relaxed);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            std::thread::sleep(Duration::from_millis(5));
                         }
                         Err(_) => break,
                     }
                 }
             })?;
-        Ok(Server { local_addr, accept_thread: Some(accept_thread), shutdown })
+        Ok(Server {
+            local_addr,
+            accept_thread: Some(accept_thread),
+            shutdown,
+            conns,
+            drain_grace,
+        })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.local_addr
     }
 
+    /// Connections currently being served (gauge).
+    pub fn active_connections(&self) -> usize {
+        self.conns.active.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, wait (bounded by the config's drain grace) for
+    /// in-flight requests to finish and handlers to exit, then
+    /// force-close whatever is left.
     pub fn stop(mut self) {
-        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
+        self.shutdown_now();
+    }
+
+    fn shutdown_now(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
+        }
+        let deadline = Instant::now() + self.drain_grace;
+        // First let requests already inside the service reply…
+        while self.conns.in_flight.load(Ordering::Relaxed) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // …then unblock handlers parked in socket reads and collect them.
+        self.conns.close_all();
+        while self.conns.active.load(Ordering::Relaxed) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
+        if self.accept_thread.is_some() {
+            self.shutdown_now();
         }
     }
 }
 
-fn handle_connection(stream: TcpStream, service: Arc<Service>) -> Result<()> {
-    let peer = stream.peer_addr().ok();
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) if !l.trim().is_empty() => l,
-            Ok(_) => continue,
-            Err(_) => break, // client went away
+fn write_line(writer: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
+    writer.write_all(json::to_string(reply).as_bytes())?;
+    writer.write_all(b"\n")
+}
+
+/// The typed error frame every failure path speaks.
+fn error_json(kind: &str, msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("kind", Json::str(kind)),
+        ("error", Json::str(msg)),
+    ])
+}
+
+/// Over-cap connections get exactly one line and a close — a client can
+/// tell "busy, retry later" apart from a crash without parsing prose.
+fn reject_busy(mut stream: TcpStream, cap: usize) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let _ = write_line(&mut stream, &error_json("busy", &format!("connection limit {cap}")));
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// One request frame, or why there isn't one.
+enum Frame {
+    Line(String),
+    /// Clean close (or hard transport error) from the peer.
+    Eof,
+    /// The frame did not complete within the read budget — idle
+    /// keep-alive or a slowloris trickle; either way the connection goes.
+    TimedOut,
+    /// The line outgrew `max_line_bytes` before its newline arrived.
+    Oversized,
+}
+
+/// Bounded line read: unlike `BufReader::lines`, memory is capped at
+/// `max_bytes` and wall-clock at `budget`, whatever the peer sends.
+fn read_frame(reader: &mut BufReader<TcpStream>, max_bytes: usize, budget: Duration) -> Frame {
+    let start = Instant::now();
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if start.elapsed() > budget {
+            return Frame::TimedOut;
+        }
+        let chunk = match reader.fill_buf() {
+            Ok(c) => c,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Frame::TimedOut;
+            }
+            Err(_) => return Frame::Eof,
         };
-        let reply = match handle_request(&line, &service) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(&format!("{e:#}"))),
-            ]),
-        };
-        writer.write_all(json::to_string(&reply).as_bytes())?;
-        writer.write_all(b"\n")?;
+        if chunk.is_empty() {
+            return Frame::Eof;
+        }
+        if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+            buf.extend_from_slice(&chunk[..pos]);
+            reader.consume(pos + 1);
+            if buf.len() > max_bytes {
+                return Frame::Oversized;
+            }
+            // Invalid UTF-8 flows through as a (failing) parse, i.e. a
+            // typed bad_request — not a transport error.
+            return Frame::Line(String::from_utf8_lossy(&buf).into_owned());
+        }
+        let n = chunk.len();
+        buf.extend_from_slice(chunk);
+        reader.consume(n);
+        if buf.len() > max_bytes {
+            return Frame::Oversized;
+        }
     }
-    let _ = peer;
-    Ok(())
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    service: Arc<Service>,
+    conns: &ConnTracker,
+    config: &ServerConfig,
+    shutdown: &AtomicBool,
+) {
+    let _ = stream.set_read_timeout(Some(config.read_timeout));
+    let _ = stream.set_write_timeout(Some(config.write_timeout));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    while !shutdown.load(Ordering::Relaxed) {
+        match read_frame(&mut reader, config.max_line_bytes, config.read_timeout) {
+            Frame::Line(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                // The in-flight gauge covers request processing + reply
+                // write, so `stop` can drain work without cutting replies
+                // off mid-line.
+                conns.in_flight.fetch_add(1, Ordering::Relaxed);
+                let reply = match handle_request(&line, &service) {
+                    Ok(j) => j,
+                    Err(e) => error_json(error_kind(&e), &format!("{e:#}")),
+                };
+                let sent = write_line(&mut writer, &reply).is_ok();
+                conns.in_flight.fetch_sub(1, Ordering::Relaxed);
+                if !sent {
+                    break;
+                }
+            }
+            Frame::Eof | Frame::TimedOut => break,
+            Frame::Oversized => {
+                let msg = format!("request line exceeds {} bytes", config.max_line_bytes);
+                let _ = write_line(&mut writer, &error_json("oversized", &msg));
+                break;
+            }
+        }
+    }
+}
+
+/// Marker for caller mistakes (bad JSON, missing fields) so
+/// [`error_kind`] can separate them from serving failures.
+#[derive(Debug)]
+struct BadRequest(String);
+
+impl std::fmt::Display for BadRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for BadRequest {}
+
+fn bad(msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(BadRequest(msg.into()))
+}
+
+/// The `kind` field an error reply carries — typed at the socket
+/// boundary by downcasting the service's own error types.
+fn error_kind(e: &anyhow::Error) -> &'static str {
+    if let Some(se) = e.downcast_ref::<SubmitError>() {
+        return match se {
+            SubmitError::UnknownRoute { .. } => "unknown_route",
+            SubmitError::BadPayload { .. } => "bad_payload",
+            SubmitError::Overloaded { .. } => "overloaded",
+            SubmitError::ShardFailed { .. } => "shard_failed",
+            SubmitError::RouteFailed { .. } => "route_failed",
+            SubmitError::Stopped => "stopped",
+        };
+    }
+    if e.downcast_ref::<BadRequest>().is_some() {
+        return "bad_request";
+    }
+    "internal"
+}
+
+fn health_reply(service: &Service) -> Json {
+    let board = service.health();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("shards", Json::num(service.shards() as f64)),
+        ("all_healthy", Json::Bool(board.all_healthy())),
+        ("health", board.json()),
+        ("metrics", service.metrics().snapshot()),
+    ])
 }
 
 fn handle_request(line: &str, service: &Service) -> Result<Json> {
-    let req = json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
-    let op = req.get_str("op").context("missing op")?;
+    let req = json::parse(line).map_err(|e| bad(format!("bad json: {e}")))?;
+    let op = req.get_str("op").ok_or_else(|| bad("missing op"))?;
+    if op == "health" {
+        return Ok(health_reply(service));
+    }
     let method = req.get_str("method").unwrap_or("collapsed");
     let mode = req.get_str("mode").unwrap_or("exact");
-    let dim = req.get_usize("dim").context("missing dim")?;
+    let dim = req.get_usize("dim").ok_or_else(|| bad("missing dim"))?;
     let points: Vec<f32> = req
         .get("points")
         .and_then(Json::as_arr)
-        .context("missing points")?
+        .ok_or_else(|| bad("missing points"))?
         .iter()
         .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
         .collect();
-    anyhow::ensure!(
-        points.iter().all(|v| v.is_finite()),
-        "points must be finite numbers"
-    );
+    if !points.iter().all(|v| v.is_finite()) {
+        return Err(bad("points must be finite numbers"));
+    }
     let route = RouteKey::new(op, method, mode);
     let resp = match req.get("deadline_ms").and_then(Json::as_f64) {
         Some(ms) => service.eval_blocking_with_deadline(
             route,
             points,
             dim,
-            std::time::Duration::from_secs_f64((ms / 1e3).max(0.0)),
+            Duration::from_secs_f64((ms / 1e3).max(0.0)),
         )?,
         None => service.eval_blocking(route, points, dim)?,
     };
@@ -145,17 +423,88 @@ fn handle_request(line: &str, service: &Service) -> Result<Json> {
     ]))
 }
 
-/// Minimal blocking client for tests / examples.
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Client-side timeouts and retry policy.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    pub read_timeout: Duration,
+    pub write_timeout: Duration,
+    /// Pause before the single reconnect attempt after a transport-level
+    /// connection loss.
+    pub retry_backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            retry_backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+/// A typed `ok:false` reply from the server (`kind` as in the protocol
+/// doc).  Distinct from transport errors: the server answered, the
+/// answer was a refusal — never retried by the client.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerError {
+    pub kind: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server error ({}): {}", self.kind, self.message)
+    }
+}
+
+impl std::error::Error for ServerError {}
+
+/// Transport faults worth one reconnect: the connection died under us
+/// (server restart, idle-timeout close).  Read timeouts are NOT retried
+/// — the request may still be executing server-side.
+fn retryable(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::BrokenPipe
+            | std::io::ErrorKind::UnexpectedEof
+    )
+}
+
+/// Minimal blocking client with timeouts and a single bounded
+/// reconnect-retry on connection loss.
 pub struct Client {
+    addr: std::net::SocketAddr,
+    config: ClientConfig,
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
 
 impl Client {
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        Client::connect_with(addr, ClientConfig::default())
+    }
+
+    pub fn connect_with(addr: std::net::SocketAddr, config: ClientConfig) -> Result<Client> {
+        let (reader, writer) = Client::open(addr, &config)?;
+        Ok(Client { addr, config, reader, writer })
+    }
+
+    fn open(
+        addr: std::net::SocketAddr,
+        config: &ClientConfig,
+    ) -> std::io::Result<(BufReader<TcpStream>, TcpStream)> {
         let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(config.read_timeout))?;
+        stream.set_write_timeout(Some(config.write_timeout))?;
         let writer = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(stream), writer })
+        Ok((BufReader::new(stream), writer))
     }
 
     /// Evaluate points (row-major `[n, dim]`) against a route.
@@ -167,23 +516,38 @@ impl Client {
         dim: usize,
         points: &[f32],
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let req = Json::obj(vec![
+        self.eval_with_deadline(op, method, mode, dim, points, None)
+    }
+
+    /// [`Client::eval`] with an explicit per-request deadline budget.
+    /// `ok:false` replies surface as a typed [`ServerError`].
+    pub fn eval_with_deadline(
+        &mut self,
+        op: &str,
+        method: &str,
+        mode: &str,
+        dim: usize,
+        points: &[f32],
+        deadline_ms: Option<f64>,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut fields = vec![
             ("op", Json::str(op)),
             ("method", Json::str(method)),
             ("mode", Json::str(mode)),
             ("dim", Json::num(dim as f64)),
             ("points", Json::arr(points.iter().map(|&v| Json::num(v as f64)))),
-        ]);
-        self.writer.write_all(json::to_string(&req).as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let resp = json::parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))?;
-        anyhow::ensure!(
-            resp.get("ok").and_then(Json::as_bool) == Some(true),
-            "server error: {}",
-            resp.get_str("error").unwrap_or("unknown")
-        );
+        ];
+        if let Some(ms) = deadline_ms {
+            fields.push(("deadline_ms", Json::num(ms)));
+        }
+        let resp = self.request(&json::to_string(&Json::obj(fields)))?;
+        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(ServerError {
+                kind: resp.get_str("kind").unwrap_or("unknown").to_string(),
+                message: resp.get_str("error").unwrap_or("unknown").to_string(),
+            }
+            .into());
+        }
         let take = |key: &str| -> Vec<f32> {
             resp.get(key)
                 .and_then(Json::as_arr)
@@ -191,5 +555,43 @@ impl Client {
                 .unwrap_or_default()
         };
         Ok((take("f0"), take("op")))
+    }
+
+    /// The server's `{"op":"health"}` reply (shard health + metrics).
+    pub fn health(&mut self) -> Result<Json> {
+        self.request(&json::to_string(&Json::obj(vec![("op", Json::str("health"))])))
+    }
+
+    /// One round trip with the retry policy.  The reply is parsed only
+    /// after transport succeeds, so an `ok:false` refusal is never
+    /// replayed — retry covers lost connections, not answered requests.
+    fn request(&mut self, line: &str) -> Result<Json> {
+        let raw = match self.send_recv(line) {
+            Ok(raw) => raw,
+            Err(e) if retryable(&e) => {
+                std::thread::sleep(self.config.retry_backoff);
+                let (reader, writer) = Client::open(self.addr, &self.config)
+                    .map_err(|re| anyhow!("reconnect after \"{e}\" failed: {re}"))?;
+                self.reader = reader;
+                self.writer = writer;
+                self.send_recv(line).context("retry after reconnect")?
+            }
+            Err(e) => return Err(e.into()),
+        };
+        json::parse(&raw).map_err(|e| anyhow!("bad reply: {e}"))
+    }
+
+    fn send_recv(&mut self, line: &str) -> std::io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut out = String::new();
+        let n = self.reader.read_line(&mut out)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ));
+        }
+        Ok(out)
     }
 }

@@ -12,8 +12,15 @@
 //! slack is about to be consumed by execution (per-route EWMA) or enough
 //! points piled up.  Threads + channels stand in for tokio (DESIGN.md
 //! §2).
+//!
+//! Shard workers are supervised (supervisor.rs): the serve loop runs
+//! under `catch_unwind`, a panic fails that shard's pending requests
+//! with a typed [`SubmitError::ShardFailed`] and the shard restarts with
+//! backoff, rebuilt bitwise-identically from [`model_theta`] /
+//! [`model_sigma`].  Deterministic fault injection (faults.rs) drives
+//! that machinery in the chaos suite and is free when disabled.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{btree_map, BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
@@ -24,9 +31,11 @@ use anyhow::{Context, Result};
 
 use super::batcher::plan_blocks;
 use super::dispatcher::{shard_of, Dispatcher, ShardIntake, SubmitError};
+use super::faults::{FaultKind, FaultPlan};
 use super::metrics::Metrics;
-use super::request::{EvalRequest, EvalResponse, RouteKey};
+use super::request::{EvalReply, EvalRequest, EvalResponse, RouteKey};
 use super::router::Router;
+use super::supervisor::{self, HealthBoard};
 use crate::api::{Engine, Precision};
 use crate::runtime::{ArtifactMeta, HostTensor, Registry};
 use crate::util::prng::Rng;
@@ -55,6 +64,16 @@ pub struct ServiceConfig {
     /// Numeric precision for the shard engines; `None` defers to the
     /// engine default (`CTAYLOR_PRECISION`, else f64).
     pub precision: Option<Precision>,
+    /// Fault-injection plan for the shard workers (chaos testing).
+    /// `None` consults the `CTAYLOR_FAULTS` environment variable at
+    /// start; unset anywhere means no injection and no hot-path cost.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Supervised restarts a shard may consume before it is marked dead
+    /// and sheds every request with a typed error.
+    pub max_restarts: u64,
+    /// Base delay before a shard restart; doubles per consecutive
+    /// restart, capped at one second.
+    pub restart_backoff: Duration,
 }
 
 impl Default for ServiceConfig {
@@ -70,6 +89,9 @@ impl Default for ServiceConfig {
             // route while its deadline slack drains.
             eager_points: 64,
             precision: None,
+            faults: None,
+            max_restarts: 8,
+            restart_backoff: Duration::from_millis(10),
         }
     }
 }
@@ -103,7 +125,8 @@ fn fnv(s: &str) -> u64 {
 
 /// The θ a service seeded with `seed` uses for every artifact of this
 /// network shape — a pure function of `(seed, dim, widths)`, so any
-/// shard derives identical parameters regardless of arrival order, and
+/// shard derives identical parameters regardless of arrival order, a
+/// restarted shard is bitwise-identical to the session it replaces, and
 /// external oracles (tests, the `bench serve` suite) can reproduce the
 /// served model exactly.
 pub fn model_theta(seed: u64, meta: &ArtifactMeta) -> HostTensor {
@@ -125,6 +148,21 @@ pub fn model_sigma(seed: u64, meta: &ArtifactMeta) -> HostTensor {
     HostTensor::new(vec![dim, dim], s)
 }
 
+/// Build one shard's engine (shard-local program cache and pool).  Also
+/// used on every supervised restart, so a rebuilt shard gets the same
+/// construction path as a fresh one.
+pub(crate) fn build_shard_engine(
+    registry: &Registry,
+    config: &ServiceConfig,
+    threads: usize,
+) -> Result<Engine> {
+    let mut builder = Engine::builder().registry(registry.clone()).threads(threads);
+    if let Some(p) = config.precision {
+        builder = builder.precision(p);
+    }
+    builder.build()
+}
+
 /// Handle to the running service.
 pub struct Service {
     dispatcher: Option<Dispatcher>,
@@ -133,6 +171,7 @@ pub struct Service {
     next_id: AtomicU64,
     router: Router,
     shards: usize,
+    board: Arc<HealthBoard>,
     default_deadline: Duration,
 }
 
@@ -144,29 +183,33 @@ impl Service {
         let shards = config.resolved_shards();
         let threads = config.resolved_threads_per_shard(shards);
         metrics.shards.store(shards as u64, Ordering::Relaxed);
-        let (dispatcher, intakes) = Dispatcher::new(shards, config.queue_capacity);
+        let board = HealthBoard::new(shards);
+        metrics.set_health_board(board.clone());
+        let faults = match &config.faults {
+            Some(plan) => Some(plan.clone()),
+            None => FaultPlan::from_env()?,
+        };
+        if let Some(plan) = &faults {
+            let (p, s, d) = plan.counts();
+            eprintln!("fault injection active: {p} panic(s), {s} stall(s), {d} drop(s) planned");
+        }
+        let (dispatcher, intakes) = Dispatcher::new(shards, config.queue_capacity, board.clone());
         let mut workers = Vec::with_capacity(shards);
         for (shard, intake) in intakes.into_iter().enumerate() {
-            let registry = registry.clone();
-            let router = router.clone();
-            let metrics = metrics.clone();
-            let config = config.clone();
+            let ctx = supervisor::ShardContext {
+                intake,
+                registry: registry.clone(),
+                router: router.clone(),
+                metrics: metrics.clone(),
+                config: config.clone(),
+                shard,
+                threads,
+                board: board.clone(),
+                faults: faults.clone(),
+            };
             let worker = std::thread::Builder::new()
                 .name(format!("ctaylor-shard-{shard}"))
-                .spawn(move || {
-                    if let Err(e) = shard_loop(
-                        intake,
-                        registry,
-                        router,
-                        metrics.clone(),
-                        config,
-                        shard,
-                        threads,
-                    ) {
-                        eprintln!("shard {shard} exited with error: {e:#}");
-                        metrics.record_error();
-                    }
-                })
+                .spawn(move || supervisor::run_shard(ctx))
                 .with_context(|| format!("spawning shard {shard}"))?;
             workers.push(worker);
         }
@@ -177,6 +220,7 @@ impl Service {
             next_id: AtomicU64::new(1),
             router,
             shards,
+            board,
             default_deadline: config.default_deadline,
         })
     }
@@ -187,6 +231,11 @@ impl Service {
 
     pub fn router(&self) -> &Router {
         &self.router
+    }
+
+    /// Per-shard health and restart/panic counters.
+    pub fn health(&self) -> &Arc<HealthBoard> {
+        &self.board
     }
 
     /// Shard workers serving this service.
@@ -201,13 +250,16 @@ impl Service {
 
     /// Submit points (row-major `[n, dim]`) with the config's default
     /// deadline budget; non-blocking with admission control — a full
-    /// shard queue sheds with [`SubmitError::Overloaded`] immediately.
+    /// shard queue sheds with [`SubmitError::Overloaded`] immediately,
+    /// and a restarting/dead shard with [`SubmitError::ShardFailed`].
+    /// The receiver itself yields a [`EvalReply`]: response or typed
+    /// failure, never a hang.
     pub fn submit(
         &self,
         route: RouteKey,
         points: Vec<f32>,
         dim: usize,
-    ) -> Result<Receiver<EvalResponse>, SubmitError> {
+    ) -> Result<Receiver<EvalReply>, SubmitError> {
         self.submit_with_deadline(route, points, dim, self.default_deadline)
     }
 
@@ -218,7 +270,7 @@ impl Service {
         points: Vec<f32>,
         dim: usize,
         deadline: Duration,
-    ) -> Result<Receiver<EvalResponse>, SubmitError> {
+    ) -> Result<Receiver<EvalReply>, SubmitError> {
         if !self.router.has_route(&route) {
             return Err(SubmitError::UnknownRoute { route });
         }
@@ -243,7 +295,9 @@ impl Service {
                 Ok(reply_rx)
             }
             Err(e) => {
-                if matches!(e, SubmitError::Overloaded { .. }) {
+                // Both are load-shedding outcomes: queue full, or the
+                // shard is down and queueing would hide that.
+                if matches!(e, SubmitError::Overloaded { .. } | SubmitError::ShardFailed { .. }) {
                     self.metrics.record_shed();
                 }
                 Err(e)
@@ -258,8 +312,9 @@ impl Service {
         points: Vec<f32>,
         dim: usize,
     ) -> Result<EvalResponse> {
+        let shard = shard_of(&route, self.shards);
         let rx = self.submit(route, points, dim)?;
-        rx.recv().context("shard dropped reply channel")
+        self.recv_reply(shard, &rx)
     }
 
     /// Submit with an explicit deadline budget and wait.
@@ -270,8 +325,24 @@ impl Service {
         dim: usize,
         deadline: Duration,
     ) -> Result<EvalResponse> {
+        let shard = shard_of(&route, self.shards);
         let rx = self.submit_with_deadline(route, points, dim, deadline)?;
-        rx.recv().context("shard dropped reply channel")
+        self.recv_reply(shard, &rx)
+    }
+
+    fn recv_reply(&self, shard: usize, rx: &Receiver<EvalReply>) -> Result<EvalResponse> {
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(e.into()),
+            // The worker dropped the reply sender without answering
+            // (shard died holding the request, or a drop fault):
+            // surface it typed — a caller can never hang here.
+            Err(_) => Err(SubmitError::ShardFailed {
+                shard,
+                restarts: self.board.restarts(shard),
+            }
+            .into()),
+        }
     }
 
     /// Graceful shutdown: drain every shard queue, join the workers.
@@ -317,8 +388,23 @@ struct ModelState {
     sigma: Option<HostTensor>,
 }
 
-/// Everything one shard mutates while serving.
-struct ShardState {
+/// The shared, immutable context one shard session serves against.
+/// Borrowed (not owned) so the supervisor can keep the engine and
+/// intake outside the unwind boundary and rebuild only what a panic
+/// poisoned.
+pub(crate) struct ShardEnv<'a> {
+    pub intake: &'a ShardIntake,
+    pub engine: &'a Engine,
+    pub router: &'a Router,
+    pub metrics: &'a Metrics,
+    pub config: &'a ServiceConfig,
+    pub faults: Option<&'a FaultPlan>,
+}
+
+/// Everything one shard mutates while serving.  Owned by the supervisor
+/// frame outside `catch_unwind`, so a panic mid-flush leaves the pending
+/// queues reachable and every owed request fails typed.
+pub(crate) struct ShardState {
     model_state: BTreeMap<String, ModelState>,
     queues: BTreeMap<RouteKey, VecDeque<Pending>>,
     /// Per-route EWMA of one flush's execution time (seconds) — the
@@ -330,52 +416,86 @@ struct ShardState {
 }
 
 impl ShardState {
+    pub(crate) fn new(config: &ServiceConfig, shard: usize, session: u64) -> ShardState {
+        ShardState {
+            model_state: BTreeMap::new(),
+            queues: BTreeMap::new(),
+            ewma_exec: BTreeMap::new(),
+            // Direction sampling is a per-shard, per-session stream;
+            // estimator values are stochastic by contract, only f0 and
+            // exact-mode operator values are deterministic. `session`
+            // salts restarts so a rebuilt shard draws fresh directions
+            // (session 0 reproduces the pre-supervision stream).
+            dir_rng: Rng::new(
+                config.seed
+                    ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(shard as u64 + 1)
+                    ^ 0x517c_c1b7_2722_0a95u64.wrapping_mul(session),
+            ),
+            seed: config.seed,
+            shard,
+        }
+    }
+
     fn pending_points(&self, route: &RouteKey) -> usize {
         self.queues
             .get(route)
             .map(|q| q.iter().map(|p| p.req.n_points - p.consumed).sum())
             .unwrap_or(0)
     }
+
+    /// Requests still owed a reply (across all routes).
+    pub(crate) fn pending_requests(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Fail every pending request with a clone of `err`.  The supervisor
+    /// calls this after a panic so nothing queued on the dead session
+    /// ever hangs its caller.
+    pub(crate) fn fail_all_pending(&mut self, err: &SubmitError) {
+        for (_, queue) in std::mem::take(&mut self.queues) {
+            for p in queue {
+                let _ = p.req.reply.send(Err(err.clone()));
+            }
+        }
+    }
 }
 
-fn shard_loop(
-    intake: ShardIntake,
-    registry: Registry,
-    router: Router,
-    metrics: Arc<Metrics>,
-    config: ServiceConfig,
-    shard: usize,
-    threads: usize,
-) -> Result<()> {
-    // One engine per shard: typed handles per route, a shard-local
-    // compiled-program cache and batch-sharding pool — no cross-shard
-    // contention on any of them.
-    let mut builder = Engine::builder().registry(registry).threads(threads);
-    if let Some(p) = config.precision {
-        builder = builder.precision(p);
-    }
-    let engine = builder.build()?;
-    metrics.set_engine_shard(shard, &engine.stats());
-    let mut state = ShardState {
-        model_state: BTreeMap::new(),
-        queues: BTreeMap::new(),
-        ewma_exec: BTreeMap::new(),
-        // Direction sampling is a per-shard stream; estimator values are
-        // stochastic by contract, only f0 is deterministic.
-        dir_rng: Rng::new(config.seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(shard as u64 + 1)),
-        seed: config.seed,
-        shard,
-    };
-
+/// One shard session's serve loop.  Runs until the dispatcher closes the
+/// intake (clean shutdown: drain, then return).  Infallible by design —
+/// route-level failures reply typed per request and the loop keeps
+/// serving; only a panic (real or injected) ends a session early, and
+/// the supervisor absorbs that.
+///
+/// `arrivals` counts requests over the shard's lifetime (it belongs to
+/// the supervisor, surviving restarts) and keys the fault plan.
+pub(crate) fn shard_serve_loop(env: &ShardEnv, arrivals: &mut u64, state: &mut ShardState) {
     loop {
-        let next_due = flush_due(&engine, &router, &metrics, &mut state)?;
+        let next_due = flush_due(env, state);
         let wait = match next_due {
             Some(at) => at.saturating_duration_since(Instant::now()).max(MIN_TICK),
             None => IDLE_TICK,
         };
-        match intake.rx.recv_timeout(wait) {
+        match env.intake.rx.recv_timeout(wait) {
             Ok(req) => {
-                intake.depth.fetch_sub(1, Ordering::Relaxed);
+                env.intake.depth.fetch_sub(1, Ordering::Relaxed);
+                *arrivals += 1;
+                if let Some(plan) = env.faults {
+                    match plan.at(*arrivals) {
+                        Some(FaultKind::Panic) => panic!(
+                            "injected fault: panic at arrival {} on shard {}",
+                            *arrivals, state.shard
+                        ),
+                        Some(FaultKind::Stall(d)) => std::thread::sleep(d),
+                        Some(FaultKind::Drop) => {
+                            // Lose the request pre-reply: the caller's
+                            // receiver disconnects and must observe a
+                            // typed ShardFailed, not a hang.
+                            env.metrics.record_error();
+                            continue;
+                        }
+                        None => {}
+                    }
+                }
                 let route = req.route.clone();
                 state.queues.entry(route.clone()).or_default().push_back(Pending {
                     req,
@@ -388,8 +508,8 @@ fn shard_loop(
                 // Eager flush when enough points piled up on THIS route —
                 // a hot route must not force half-full flushes of cold
                 // ones.
-                if state.pending_points(&route) >= config.eager_points {
-                    flush_route(&engine, &router, &metrics, &mut state, &route)?;
+                if state.pending_points(&route) >= env.config.eager_points {
+                    flush_route(env, state, &route);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -397,9 +517,9 @@ fn shard_loop(
                 // Drain remaining work, then exit.
                 let routes: Vec<RouteKey> = state.queues.keys().cloned().collect();
                 for route in routes {
-                    flush_route(&engine, &router, &metrics, &mut state, &route)?;
+                    flush_route(env, state, &route);
                 }
-                return Ok(());
+                return;
             }
         }
     }
@@ -408,12 +528,7 @@ fn shard_loop(
 /// Flush every route whose oldest request's remaining deadline slack
 /// would be consumed by one (EWMA-estimated) execution; return the
 /// earliest upcoming flush instant among the routes still waiting.
-fn flush_due(
-    engine: &Engine,
-    router: &Router,
-    metrics: &Arc<Metrics>,
-    state: &mut ShardState,
-) -> Result<Option<Instant>> {
+fn flush_due(env: &ShardEnv, state: &mut ShardState) -> Option<Instant> {
     let now = Instant::now();
     let mut due = Vec::new();
     let mut next: Option<Instant> = None;
@@ -432,49 +547,98 @@ fn flush_due(
         }
     }
     for route in due {
-        flush_route(engine, router, metrics, state, &route)?;
+        flush_route(env, state, &route);
     }
-    Ok(next)
+    next
 }
 
-fn flush_route(
-    engine: &Engine,
-    router: &Router,
-    metrics: &Arc<Metrics>,
-    state: &mut ShardState,
-    route: &RouteKey,
-) -> Result<()> {
+/// Flush one route's queue.  A serving failure (unloadable artifact,
+/// empty batch ladder …) fails the whole flush typed — every pending
+/// request on the route gets [`SubmitError::RouteFailed`] — and the
+/// shard keeps serving its other routes; nothing here panics the worker.
+fn flush_route(env: &ShardEnv, state: &mut ShardState, route: &RouteKey) {
     let Some(mut queue) = state.queues.remove(route) else {
-        return Ok(());
+        return;
     };
     let pending: usize = queue.iter().map(|p| p.req.n_points - p.consumed).sum();
     if pending == 0 {
         state.queues.insert(route.clone(), queue);
-        return Ok(());
+        return;
     }
-    let sizes = router.batch_sizes(route)?;
+    if let Err(e) = serve_queue(env, state, route, &mut queue, pending) {
+        env.metrics.record_error();
+        let err = SubmitError::RouteFailed { route: route.clone(), reason: format!("{e:#}") };
+        eprintln!("shard {}: {err}", state.shard);
+        for p in queue {
+            let _ = p.req.reply.send(Err(err.clone()));
+        }
+        return;
+    }
+    // Mirror the engine gauges (program-cache hits/misses, pool width)
+    // into the metrics so the serving amortization (steady state = VM
+    // execution only) is observable per batch.
+    env.metrics.set_engine_shard(state.shard, &env.engine.stats());
+    // Reply to fully-served requests.
+    while let Some(front) = queue.front() {
+        if front.f0.len() < front.req.n_points {
+            break;
+        }
+        let p = queue.pop_front().unwrap();
+        let latency = p.req.submitted.elapsed().as_secs_f64();
+        let queue_wait = p.started.map(|s| (s - p.req.submitted).as_secs_f64()).unwrap_or(0.0);
+        env.metrics.record_latency(latency);
+        let _ = p.req.reply.send(Ok(EvalResponse {
+            id: p.req.id,
+            f0: p.f0,
+            op: p.op,
+            latency_s: latency,
+            queue_wait_s: queue_wait,
+            served_batch: p.served_batch,
+            shard: state.shard,
+        }));
+    }
+    if !queue.is_empty() {
+        state.queues.insert(route.clone(), queue);
+    }
+}
+
+/// Plan, gather, execute and scatter one route's pending points.  Errors
+/// bubble to [`flush_route`], which converts them into per-request typed
+/// failures.
+fn serve_queue(
+    env: &ShardEnv,
+    state: &mut ShardState,
+    route: &RouteKey,
+    queue: &mut VecDeque<Pending>,
+    pending: usize,
+) -> Result<()> {
+    let sizes = env.router.batch_sizes(route)?;
     // The planner picks the block multiset with minimal padding for what
     // is actually pending (then fewest blocks).
-    let blocks = plan_blocks(pending, &sizes);
+    let blocks = plan_blocks(pending, &sizes)?;
     for block in blocks {
-        let name = router.artifact(route, block.size)?;
+        let name = env.router.artifact(route, block.size)?;
         // Typed handle: route strings were parsed when the handle was
         // first built; the engine caches it per name thereafter.
-        let handle = engine.operator(name)?;
+        let handle = env.engine.operator(name)?;
         let meta = handle.meta();
         let dim = meta.dim;
 
         // Lazily build per-model state: θ and σ are pure functions of
-        // (service seed, network shape), identical on every shard.
-        if !state.model_state.contains_key(name) {
-            let theta = model_theta(state.seed, meta);
-            let sigma = if meta.op == "weighted_laplacian" {
-                Some(model_sigma(state.seed, meta))
-            } else {
-                None
-            };
-            state.model_state.insert(name.to_string(), ModelState { theta, sigma });
-        }
+        // (service seed, network shape), identical on every shard and
+        // across supervised restarts.
+        let mstate = match state.model_state.entry(name.to_string()) {
+            btree_map::Entry::Occupied(e) => e.into_mut(),
+            btree_map::Entry::Vacant(v) => {
+                let theta = model_theta(state.seed, meta);
+                let sigma = if meta.op == "weighted_laplacian" {
+                    Some(model_sigma(state.seed, meta))
+                } else {
+                    None
+                };
+                v.insert(ModelState { theta, sigma })
+            }
+        };
 
         // Gather `used` points from the queue front (requests may split
         // across blocks).
@@ -498,7 +662,7 @@ fn flush_route(
                 p.served_batch = p.served_batch.max(block.size);
                 if p.started.is_none() {
                     p.started = Some(gather_t);
-                    metrics.record_queue_wait((gather_t - p.req.submitted).as_secs_f64());
+                    env.metrics.record_queue_wait((gather_t - p.req.submitted).as_secs_f64());
                 }
                 qi += 1;
             }
@@ -509,7 +673,6 @@ fn flush_route(
         // (exact weighted) or sampled directions (stochastic).
         // Weighted stochastic gets σ-premultiplied dirs (the aot.py
         // contract, paper eq. 8a).
-        let mstate = state.model_state.get(name).unwrap();
         let x = HostTensor::new(vec![block.size, dim], xdata);
         let dirs_t = if meta.mode == "stochastic" {
             let s = meta.samples;
@@ -539,8 +702,8 @@ fn flush_route(
         let exec_t = Instant::now();
         let out = req.run()?;
         let exec_s = exec_t.elapsed().as_secs_f64();
-        metrics.record_execute(exec_s);
-        metrics.record_batch(block.used, block.size - block.used);
+        env.metrics.record_execute(exec_s);
+        env.metrics.record_batch(block.used, block.size - block.used);
         // EWMA of per-flush execution time drives the deadline slack
         // model for this route.
         let ewma = state.ewma_exec.entry(route.clone()).or_insert(exec_s);
@@ -563,35 +726,6 @@ fn flush_route(
             p.op.extend_from_slice(&out.op.data[offset..offset + take]);
             offset += take;
         }
-    }
-    // Mirror the engine gauges (program-cache hits/misses, pool width)
-    // into the metrics so the serving amortization (steady state = VM
-    // execution only) is observable per batch.
-    metrics.set_engine_shard(state.shard, &engine.stats());
-    // Reply to fully-served requests.
-    while let Some(front) = queue.front() {
-        if front.f0.len() < front.req.n_points {
-            break;
-        }
-        let p = queue.pop_front().unwrap();
-        let latency = p.req.submitted.elapsed().as_secs_f64();
-        let queue_wait = p
-            .started
-            .map(|s| (s - p.req.submitted).as_secs_f64())
-            .unwrap_or(0.0);
-        metrics.record_latency(latency);
-        let _ = p.req.reply.send(EvalResponse {
-            id: p.req.id,
-            f0: p.f0,
-            op: p.op,
-            latency_s: latency,
-            queue_wait_s: queue_wait,
-            served_batch: p.served_batch,
-            shard: state.shard,
-        });
-    }
-    if !queue.is_empty() {
-        state.queues.insert(route.clone(), queue);
     }
     Ok(())
 }

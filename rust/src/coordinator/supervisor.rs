@@ -1,0 +1,342 @@
+//! Shard supervision: contain worker panics, fail the crashed session's
+//! pending requests with typed errors, rebuild deterministically, and
+//! restart with capped exponential backoff.
+//!
+//! Each shard thread runs [`run_shard`]: the serve loop executes under
+//! `catch_unwind`, while the shard's mutable state ([`ShardState`]) is
+//! owned by the supervisor frame *outside* the unwind boundary.  A panic
+//! mid-flush therefore cannot strand pending requests — every request
+//! the dead session still owed a reply fails immediately with
+//! [`SubmitError::ShardFailed`], and nothing a caller holds can hang.
+//!
+//! A rebuilt shard is bitwise-identical to the session it replaces:
+//! θ/σ are pure functions of `(service seed, network shape)`
+//! ([`super::service::model_theta`] / [`super::service::model_sigma`]),
+//! and exact-route replies depend on nothing else.  The restart budget
+//! is capped ([`super::ServiceConfig::max_restarts`]); past it the shard
+//! is marked [`ShardHealth::Dead`] and answers everything with typed
+//! failures, so a crash loop degrades capacity instead of correctness.
+//!
+//! Health and counters live on a lock-free [`HealthBoard`] shared by the
+//! supervisors (writers), the dispatcher (sheds to `ShardFailed` while a
+//! shard is down instead of queueing behind it) and [`Metrics`].
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::dispatcher::{ShardIntake, SubmitError};
+use super::faults::FaultPlan;
+use super::metrics::Metrics;
+use super::router::Router;
+use super::service::{build_shard_engine, shard_serve_loop, ServiceConfig, ShardEnv, ShardState};
+use crate::runtime::Registry;
+use crate::util::json::Json;
+
+/// One shard's supervision state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Serving; the dispatcher admits requests.
+    Healthy,
+    /// Between a panic and the rebuilt engine coming up; admission sheds
+    /// with a typed [`SubmitError::ShardFailed`] instead of queueing.
+    Restarting,
+    /// Restart budget exhausted, or the engine cannot build: every
+    /// request is answered with a typed failure, never queued or hung.
+    Dead,
+}
+
+impl ShardHealth {
+    fn from_u8(v: u8) -> ShardHealth {
+        match v {
+            0 => ShardHealth::Healthy,
+            1 => ShardHealth::Restarting,
+            _ => ShardHealth::Dead,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShardHealth::Healthy => "healthy",
+            ShardHealth::Restarting => "restarting",
+            ShardHealth::Dead => "dead",
+        }
+    }
+
+    /// One-letter code for compact summaries (`H` / `R` / `D`).
+    pub fn code(self) -> char {
+        match self {
+            ShardHealth::Healthy => 'H',
+            ShardHealth::Restarting => 'R',
+            ShardHealth::Dead => 'D',
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Slot {
+    health: AtomicU8,
+    restarts: AtomicU64,
+    panics: AtomicU64,
+}
+
+/// Lock-free per-shard health and restart/panic counters.
+#[derive(Debug)]
+pub struct HealthBoard {
+    slots: Vec<Slot>,
+}
+
+impl HealthBoard {
+    pub fn new(shards: usize) -> Arc<HealthBoard> {
+        assert!(shards > 0);
+        let slots = (0..shards)
+            .map(|_| Slot {
+                health: AtomicU8::new(0),
+                restarts: AtomicU64::new(0),
+                panics: AtomicU64::new(0),
+            })
+            .collect();
+        Arc::new(HealthBoard { slots })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn health(&self, shard: usize) -> ShardHealth {
+        ShardHealth::from_u8(self.slots[shard].health.load(Ordering::Relaxed))
+    }
+
+    /// Supervised restarts this shard has consumed.
+    pub fn restarts(&self, shard: usize) -> u64 {
+        self.slots[shard].restarts.load(Ordering::Relaxed)
+    }
+
+    /// Panics caught on this shard (a dead shard's last panic counts).
+    pub fn panics(&self, shard: usize) -> u64 {
+        self.slots[shard].panics.load(Ordering::Relaxed)
+    }
+
+    pub fn total_restarts(&self) -> u64 {
+        (0..self.shards()).map(|s| self.restarts(s)).sum()
+    }
+
+    pub fn total_panics(&self) -> u64 {
+        (0..self.shards()).map(|s| self.panics(s)).sum()
+    }
+
+    pub fn all_healthy(&self) -> bool {
+        (0..self.shards()).all(|s| self.health(s) == ShardHealth::Healthy)
+    }
+
+    /// Compact per-shard code string, e.g. `HH` or `HR`.
+    pub fn codes(&self) -> String {
+        (0..self.shards()).map(|s| self.health(s).code()).collect()
+    }
+
+    /// Per-shard state as JSON (what the `health` endpoint returns).
+    pub fn json(&self) -> Json {
+        Json::arr((0..self.shards()).map(|s| {
+            Json::obj(vec![
+                ("shard", Json::num(s as f64)),
+                ("health", Json::str(self.health(s).as_str())),
+                ("restarts", Json::num(self.restarts(s) as f64)),
+                ("panics", Json::num(self.panics(s) as f64)),
+            ])
+        }))
+    }
+
+    pub(crate) fn set_health(&self, shard: usize, health: ShardHealth) {
+        let v = match health {
+            ShardHealth::Healthy => 0,
+            ShardHealth::Restarting => 1,
+            ShardHealth::Dead => 2,
+        };
+        self.slots[shard].health.store(v, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_panic(&self, shard: usize) {
+        self.slots[shard].panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_restart(&self, shard: usize) {
+        self.slots[shard].restarts.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Everything one supervised shard thread owns.
+pub(crate) struct ShardContext {
+    pub intake: ShardIntake,
+    pub registry: Registry,
+    pub router: Router,
+    pub metrics: Arc<Metrics>,
+    pub config: ServiceConfig,
+    pub shard: usize,
+    pub threads: usize,
+    pub board: Arc<HealthBoard>,
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+/// Capped exponential backoff before the `nth` restart (1-based):
+/// `base · 2^(n−1)`, clamped to one second.
+fn restart_backoff(base: Duration, nth: u64) -> Duration {
+    let shift = nth.saturating_sub(1).min(6) as u32;
+    base.saturating_mul(1u32 << shift).min(Duration::from_secs(1))
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The supervised shard worker: build the engine, serve under
+/// `catch_unwind`, and on panic fail pending requests typed, rebuild,
+/// and restart — until the restart budget runs out.
+pub(crate) fn run_shard(ctx: ShardContext) {
+    let ShardContext { intake, registry, router, metrics, config, shard, threads, board, faults } =
+        ctx;
+    // Both counters deliberately outlive restarts: the fault plan indexes
+    // lifetime arrivals (so an injected panic fires once, not once per
+    // rebuild), and `session` salts the stochastic direction stream.
+    let mut arrivals: u64 = 0;
+    let mut session: u64 = 0;
+    loop {
+        let engine = match build_shard_engine(&registry, &config, threads) {
+            Ok(engine) => engine,
+            Err(e) => {
+                // A shard whose engine cannot build must still answer:
+                // mark it dead and fail everything typed (the pre-
+                // supervision behavior was a silent exit and hung callers).
+                eprintln!("shard {shard}: engine build failed, marking dead: {e:#}");
+                metrics.record_error();
+                board.set_health(shard, ShardHealth::Dead);
+                drain_dead(&intake, shard, &board);
+                return;
+            }
+        };
+        metrics.set_engine_shard(shard, &engine.stats());
+        let mut state = ShardState::new(&config, shard, session);
+        board.set_health(shard, ShardHealth::Healthy);
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            let env = ShardEnv {
+                intake: &intake,
+                engine: &engine,
+                router: &router,
+                metrics: &metrics,
+                config: &config,
+                faults: faults.as_deref(),
+            };
+            shard_serve_loop(&env, &mut arrivals, &mut state);
+        }));
+        match run {
+            // Clean shutdown: the dispatcher closed the channel and the
+            // loop drained its queues before returning.
+            Ok(()) => return,
+            Err(payload) => {
+                board.record_panic(shard);
+                metrics.record_error();
+                let owed = state.pending_requests();
+                eprintln!(
+                    "shard {shard} panicked ({}); failing {owed} pending request(s)",
+                    panic_message(payload.as_ref())
+                );
+                // The crashed session's queues live in this frame, not
+                // inside the unwind — fail every owed reply NOW so no
+                // caller waits on a dead shard.
+                state.fail_all_pending(&SubmitError::ShardFailed {
+                    shard,
+                    restarts: board.restarts(shard),
+                });
+            }
+        }
+        if board.restarts(shard) >= config.max_restarts {
+            eprintln!(
+                "shard {shard}: restart budget ({}) exhausted, marking dead",
+                config.max_restarts
+            );
+            board.set_health(shard, ShardHealth::Dead);
+            drain_dead(&intake, shard, &board);
+            return;
+        }
+        board.set_health(shard, ShardHealth::Restarting);
+        board.record_restart(shard);
+        std::thread::sleep(restart_backoff(config.restart_backoff, board.restarts(shard)));
+        session += 1;
+    }
+}
+
+/// A dead shard keeps answering — with typed failures — so anything that
+/// raced past admission never hangs; exits when the dispatcher closes.
+fn drain_dead(intake: &ShardIntake, shard: usize, board: &HealthBoard) {
+    while let Ok(req) = intake.rx.recv() {
+        intake.depth.fetch_sub(1, Ordering::Relaxed);
+        let _ = req
+            .reply
+            .send(Err(SubmitError::ShardFailed { shard, restarts: board.restarts(shard) }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_board_tracks_state_and_counters() {
+        let board = HealthBoard::new(3);
+        assert!(board.all_healthy());
+        assert_eq!(board.codes(), "HHH");
+        board.set_health(1, ShardHealth::Restarting);
+        board.record_panic(1);
+        board.record_restart(1);
+        assert!(!board.all_healthy());
+        assert_eq!(board.health(1), ShardHealth::Restarting);
+        assert_eq!(board.codes(), "HRH");
+        board.set_health(2, ShardHealth::Dead);
+        assert_eq!(board.codes(), "HRD");
+        assert_eq!(board.total_panics(), 1);
+        assert_eq!(board.total_restarts(), 1);
+        assert_eq!(board.restarts(0), 0);
+        board.set_health(1, ShardHealth::Healthy);
+        assert_eq!(board.health(1), ShardHealth::Healthy);
+    }
+
+    #[test]
+    fn health_json_names_every_shard() {
+        let board = HealthBoard::new(2);
+        board.record_panic(0);
+        let j = board.json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get_str("health"), Some("healthy"));
+        assert_eq!(arr[0].get_f64("panics"), Some(1.0));
+        assert_eq!(arr[1].get_f64("shard"), Some(1.0));
+    }
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let base = Duration::from_millis(10);
+        assert_eq!(restart_backoff(base, 1), Duration::from_millis(10));
+        assert_eq!(restart_backoff(base, 2), Duration::from_millis(20));
+        assert_eq!(restart_backoff(base, 4), Duration::from_millis(80));
+        assert_eq!(restart_backoff(base, 7), Duration::from_millis(640));
+        // Clamped: the shift stops at 64× and the wall stops at 1s.
+        assert_eq!(restart_backoff(base, 100), Duration::from_millis(640));
+        assert_eq!(restart_backoff(Duration::from_millis(100), 100), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn shard_health_round_trips_codes() {
+        for h in [ShardHealth::Healthy, ShardHealth::Restarting, ShardHealth::Dead] {
+            let board = HealthBoard::new(1);
+            board.set_health(0, h);
+            assert_eq!(board.health(0), h);
+            assert_eq!(h.code(), h.as_str().chars().next().unwrap().to_ascii_uppercase());
+        }
+    }
+}

@@ -14,9 +14,10 @@
 //! ctaylor bench barometer [--matrix full|reduced] [--list] [--out FILE]
 //!                         [--warmup N] [--iters N]
 //! ctaylor bench cmp OLD.json NEW.json [--threshold PCT] [--fail-on-regress PCT]
-//! ctaylor bench serve [--scenario all|baseline|fanout|fanin|scale|chaos]
+//! ctaylor bench serve [--scenario all|baseline|fanout|fanin|scale|chaos|faults]
 //!                     [--duration-ms N] [--shards N] [--seed N] [--json] [--out FILE]
 //! ctaylor serve [--addr HOST:PORT] [--shards N] [--deadline-ms N] [--queue-capacity N]
+//!               [--max-conns N] [--faults SPEC]    # SPEC: seed=N | panic@N;stall@N:2ms;drop@N
 //! ctaylor serve-demo [--requests N]    # coordinator under load
 //! ```
 
@@ -421,15 +422,23 @@ fn cmd_bench_cmp(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use std::sync::Arc;
     let reg = registry(args)?;
-    let cfg = ServiceConfig {
+    let mut cfg = ServiceConfig {
         shards: args.get_usize("shards", 0),
         queue_capacity: args.get_usize("queue-capacity", 1024),
         default_deadline: std::time::Duration::from_millis(args.get_u64("deadline-ms", 5)),
         ..ServiceConfig::default()
     };
+    if let Some(spec) = args.get("faults") {
+        // Explicit flag beats the CTAYLOR_FAULTS env var (chaos drills).
+        cfg.faults = Some(Arc::new(ctaylor::coordinator::FaultPlan::parse(spec)?));
+    }
     let svc = Arc::new(Service::start(reg, cfg)?);
     let addr = args.get_or("addr", "127.0.0.1:8042");
-    let server = ctaylor::coordinator::Server::start(svc.clone(), addr)?;
+    let server_cfg = ctaylor::coordinator::ServerConfig {
+        max_connections: args.get_usize("max-conns", 256),
+        ..Default::default()
+    };
+    let server = ctaylor::coordinator::Server::start_with(svc.clone(), addr, server_cfg)?;
     println!(
         "serving PDE operators on {} ({} shards, JSON lines; ctrl-c to stop)",
         server.addr(),

@@ -1,0 +1,251 @@
+//! Fault-tolerance integration: deterministic fault injection into the
+//! shard workers, supervised restart semantics, typed failure paths and
+//! bitwise-identical recovery.  Every plan here is explicit (never read
+//! from the environment), so the tests stay parallel-safe.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ctaylor::coordinator::{
+    FaultPlan, RouteKey, Service, ServiceConfig, ShardHealth, SubmitError,
+};
+use ctaylor::runtime::Registry;
+use ctaylor::util::prng::Rng;
+
+fn registry() -> Registry {
+    let dir = std::env::var("CTAYLOR_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    Registry::load_or_builtin(dir).expect("manifest present but malformed")
+}
+
+fn config_with(plan: &str, backoff_ms: u64) -> ServiceConfig {
+    ServiceConfig {
+        shards: 1,
+        seed: 7,
+        restart_backoff: Duration::from_millis(backoff_ms),
+        faults: Some(Arc::new(FaultPlan::parse(plan).unwrap())),
+        ..ServiceConfig::default()
+    }
+}
+
+/// The exact route every test drives, sized to its largest ladder block
+/// so two services (or a service and its restarted self) execute the
+/// same GEMM shapes and can be compared bit for bit.
+fn route_and_block(svc: &Service) -> (RouteKey, usize) {
+    let route = RouteKey::new("laplacian", "collapsed", "exact");
+    let sizes = svc.router().batch_sizes(&route).unwrap();
+    (route, *sizes.last().unwrap())
+}
+
+fn points_for(i: u64, n: usize, dim: usize) -> Vec<f32> {
+    let mut pts = vec![0.0f32; n * dim];
+    Rng::new(100 + i).fill_normal_f32(&mut pts);
+    pts
+}
+
+#[test]
+fn panic_restart_is_typed_and_bitwise_identical() {
+    let reg = registry();
+    let svc = Service::start(reg.clone(), config_with("panic@3", 1)).unwrap();
+    let clean = Service::start(
+        reg,
+        ServiceConfig { shards: 1, seed: 7, ..ServiceConfig::default() },
+    )
+    .unwrap();
+    let (route, n) = route_and_block(&svc);
+    let dim = 16;
+
+    let mut shard_failures = 0u64;
+    for i in 1..=8u64 {
+        let pts = points_for(i, n, dim);
+        let want = clean.eval_blocking(route.clone(), pts.clone(), dim).unwrap();
+        // Retry through the fault window: every failure must be a typed
+        // ShardFailed, and every eventual success bitwise-identical.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let got = loop {
+            match svc.eval_blocking(route.clone(), pts.clone(), dim) {
+                Ok(resp) => break resp,
+                Err(e) => {
+                    match e.downcast_ref::<SubmitError>() {
+                        Some(SubmitError::ShardFailed { .. }) => shard_failures += 1,
+                        other => panic!("expected ShardFailed, got {other:?}"),
+                    }
+                    assert!(Instant::now() < deadline, "shard did not recover in time");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        };
+        let same = got.f0.iter().zip(&want.f0).all(|(a, b)| a.to_bits() == b.to_bits())
+            && got.op.iter().zip(&want.op).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "request {i}: restarted shard diverged from the clean service");
+    }
+    assert!(shard_failures >= 1, "the injected panic never surfaced");
+    assert_eq!(svc.metrics().shard_panics(), 1);
+    assert_eq!(svc.metrics().shard_restarts(), 1);
+    assert!(svc.health().all_healthy());
+    svc.shutdown();
+    clean.shutdown();
+}
+
+#[test]
+fn restarting_shard_sheds_shard_failed_at_admission() {
+    let reg = registry();
+    // A long backoff holds the shard in Restarting so admission-time
+    // shedding is observable.
+    let svc = Service::start(reg, config_with("panic@1", 400)).unwrap();
+    let (route, n) = route_and_block(&svc);
+    let dim = 16;
+
+    // Arrival 1 panics; the reply is a typed failure, never a hang.
+    let first = svc.eval_blocking(route.clone(), points_for(1, n, dim), dim);
+    assert!(matches!(
+        first.unwrap_err().downcast_ref::<SubmitError>(),
+        Some(SubmitError::ShardFailed { .. })
+    ));
+
+    // During the backoff window the dispatcher sheds synchronously.
+    let mut admission_sheds = 0u64;
+    let mut admitted = Vec::new();
+    let deadline = Instant::now() + Duration::from_millis(300);
+    while Instant::now() < deadline {
+        match svc.submit(route.clone(), points_for(2, n, dim), dim) {
+            Err(SubmitError::ShardFailed { shard: 0, .. }) => admission_sheds += 1,
+            Err(other) => panic!("unexpected admission error: {other}"),
+            Ok(rx) => admitted.push(rx),
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(admission_sheds >= 1, "no admission-time shed during a 400ms backoff");
+    // Anything admitted around the edges still gets exactly one reply
+    // (a real response or a typed failure — either way, not a hang).
+    for rx in admitted {
+        let _reply = rx.recv_timeout(Duration::from_secs(10)).expect("admitted must be answered");
+    }
+
+    let rec_deadline = Instant::now() + Duration::from_secs(10);
+    while !svc.health().all_healthy() && Instant::now() < rec_deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(svc.health().all_healthy(), "shard never came back");
+    svc.eval_blocking(route, points_for(3, n, dim), dim).unwrap();
+    svc.shutdown();
+}
+
+#[test]
+fn restart_budget_exhausts_to_dead() {
+    let reg = registry();
+    let mut cfg = config_with("panic@1;panic@2;panic@3", 1);
+    cfg.max_restarts = 2;
+    let svc = Service::start(reg, cfg).unwrap();
+    let (route, n) = route_and_block(&svc);
+    let dim = 16;
+
+    // Push arrivals through panic/restart cycles until the budget burns
+    // out; every outcome must be typed or a real reply.
+    for i in 0..50u64 {
+        match svc.submit(route.clone(), points_for(i, n, dim), dim) {
+            Ok(rx) => {
+                let _reply = rx.recv_timeout(Duration::from_secs(10)).expect("no reply in 10s");
+            }
+            Err(SubmitError::ShardFailed { .. }) => {}
+            Err(other) => panic!("unexpected admission error: {other}"),
+        }
+        if svc.health().health(0) == ShardHealth::Dead {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.health().health(0) != ShardHealth::Dead && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(svc.health().health(0), ShardHealth::Dead);
+    assert_eq!(svc.metrics().shard_panics(), 3);
+    assert_eq!(svc.metrics().shard_restarts(), 2);
+    // A dead shard sheds at admission, immediately and typed.
+    assert!(matches!(
+        svc.submit(route, points_for(99, n, dim), dim),
+        Err(SubmitError::ShardFailed { shard: 0, restarts: 2 })
+    ));
+    svc.shutdown();
+}
+
+#[test]
+fn drop_fault_replies_typed_error_not_hang() {
+    let reg = registry();
+    let svc = Service::start(reg, config_with("drop@2", 1)).unwrap();
+    let (route, n) = route_and_block(&svc);
+    let dim = 16;
+
+    svc.eval_blocking(route.clone(), points_for(1, n, dim), dim).unwrap();
+    let dropped = svc.eval_blocking(route.clone(), points_for(2, n, dim), dim);
+    assert!(matches!(
+        dropped.unwrap_err().downcast_ref::<SubmitError>(),
+        Some(SubmitError::ShardFailed { shard: 0, .. })
+    ));
+    // A dropped request is not a crash: no panic, no restart, still up.
+    assert_eq!(svc.metrics().shard_panics(), 0);
+    assert_eq!(svc.metrics().shard_restarts(), 0);
+    assert!(svc.health().all_healthy());
+    svc.eval_blocking(route, points_for(3, n, dim), dim).unwrap();
+    svc.shutdown();
+}
+
+#[test]
+fn stall_fault_delays_but_serves_correctly() {
+    let reg = registry();
+    let svc = Service::start(reg.clone(), config_with("stall@2:80ms", 1)).unwrap();
+    let clean = Service::start(
+        reg,
+        ServiceConfig { shards: 1, seed: 7, ..ServiceConfig::default() },
+    )
+    .unwrap();
+    let (route, n) = route_and_block(&svc);
+    let dim = 16;
+
+    svc.eval_blocking(route.clone(), points_for(1, n, dim), dim).unwrap();
+    let pts = points_for(2, n, dim);
+    let want = clean.eval_blocking(route.clone(), pts.clone(), dim).unwrap();
+    let t0 = Instant::now();
+    let got = svc.eval_blocking(route, pts, dim).unwrap();
+    assert!(t0.elapsed() >= Duration::from_millis(60), "stall did not delay the reply");
+    assert!(
+        got.f0.iter().zip(&want.f0).all(|(a, b)| a.to_bits() == b.to_bits())
+            && got.op.iter().zip(&want.op).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "stalled shard served a different value"
+    );
+    assert_eq!(svc.metrics().shard_panics(), 0);
+    svc.shutdown();
+    clean.shutdown();
+}
+
+#[test]
+fn route_failure_cannot_kill_shard() {
+    // Corrupt one route's artifacts so its flush fails at operator
+    // construction: the failure must come back typed on that route only,
+    // with the shard alive and every other route still serving.
+    let mut reg = Registry::builtin();
+    for a in reg.artifacts.iter_mut() {
+        if a.op == "laplacian" && a.method == "standard" && a.mode == "exact" {
+            a.op = "bogus".to_string();
+        }
+    }
+    let svc = Service::start(
+        reg,
+        ServiceConfig { shards: 1, seed: 7, ..ServiceConfig::default() },
+    )
+    .unwrap();
+    let dim = 16;
+    let bad_route = RouteKey::new("bogus", "standard", "exact");
+    let n = *svc.router().batch_sizes(&bad_route).unwrap().last().unwrap();
+    let err = svc.eval_blocking(bad_route, points_for(1, n, dim), dim).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<SubmitError>(),
+        Some(SubmitError::RouteFailed { .. })
+    ));
+    let (good, gn) = route_and_block(&svc);
+    svc.eval_blocking(good, points_for(2, gn, dim), dim).unwrap();
+    assert_eq!(svc.metrics().shard_panics(), 0);
+    assert!(svc.health().all_healthy());
+    svc.shutdown();
+}

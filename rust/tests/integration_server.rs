@@ -1,18 +1,41 @@
-//! TCP front-end integration: JSON-lines protocol end to end.
+//! TCP front-end integration: JSON-lines protocol end to end, plus the
+//! hardening behaviours — frame caps, timeouts, the connection limit,
+//! graceful drain, client retry and the health endpoint.
 
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use ctaylor::coordinator::{Client, Server, Service, ServiceConfig};
+use ctaylor::coordinator::{Client, ClientConfig, Server, ServerConfig, Service, ServiceConfig};
 use ctaylor::runtime::Registry;
 use ctaylor::util::prng::Rng;
 
-fn start() -> (Arc<Service>, Server) {
+fn service() -> Arc<Service> {
     let dir = std::env::var("CTAYLOR_ARTIFACTS")
         .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
     let reg = Registry::load_or_builtin(dir).expect("manifest present but malformed");
-    let svc = Arc::new(Service::start(reg, ServiceConfig::default()).unwrap());
+    Arc::new(Service::start(reg, ServiceConfig::default()).unwrap())
+}
+
+fn start() -> (Arc<Service>, Server) {
+    let svc = service();
     let server = Server::start(svc.clone(), "127.0.0.1:0").unwrap();
     (svc, server)
+}
+
+fn start_with(config: ServerConfig) -> (Arc<Service>, Server) {
+    let svc = service();
+    let server = Server::start_with(svc.clone(), "127.0.0.1:0", config).unwrap();
+    (svc, server)
+}
+
+/// One reply line off a raw socket (tests drive frames the [`Client`]
+/// would never send).
+fn read_reply(reader: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line
 }
 
 #[test]
@@ -73,5 +96,132 @@ fn tcp_concurrent_clients() {
     for h in handles {
         h.join().unwrap();
     }
+    server.stop();
+}
+
+#[test]
+fn oversized_frame_gets_typed_reply_then_close() {
+    let (_svc, server) =
+        start_with(ServerConfig { max_line_bytes: 4096, ..ServerConfig::default() });
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(&vec![b'a'; 8192]).unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let line = read_reply(&mut reader);
+    assert!(line.contains("\"kind\":\"oversized\""), "got: {line}");
+    assert!(line.contains("\"ok\":false"), "got: {line}");
+    // The server hangs up after the typed reply; the next read sees EOF.
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    server.stop();
+}
+
+#[test]
+fn malformed_json_is_typed_bad_request_and_connection_survives() {
+    let (_svc, server) = start();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(b"this is not json\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let line = read_reply(&mut reader);
+    assert!(line.contains("\"kind\":\"bad_request\""), "got: {line}");
+    // A parse failure is the caller's problem, not the connection's.
+    stream.write_all(b"{\"op\":\"health\"}\n").unwrap();
+    let line = read_reply(&mut reader);
+    assert!(line.contains("\"ok\":true"), "got: {line}");
+    server.stop();
+}
+
+#[test]
+fn slowloris_partial_frame_is_cut_off_at_the_read_timeout() {
+    let (_svc, server) = start_with(ServerConfig {
+        read_timeout: Duration::from_millis(200),
+        ..ServerConfig::default()
+    });
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    // A frame that never finishes: a few bytes, then silence.
+    stream.write_all(b"{\"op\"").unwrap();
+    stream.flush().unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut rest = Vec::new();
+    // The server must close the connection (EOF here) rather than hold
+    // the slot forever; our generous local timeout would error instead.
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    server.stop();
+}
+
+#[test]
+fn connection_cap_rejects_excess_with_busy() {
+    let (_svc, server) =
+        start_with(ServerConfig { max_connections: 2, ..ServerConfig::default() });
+    let hold1 = TcpStream::connect(server.addr()).unwrap();
+    let hold2 = TcpStream::connect(server.addr()).unwrap();
+    // Both held connections are accepted before the third arrives (one
+    // acceptor, FIFO backlog), so the cap is reached.
+    std::thread::sleep(Duration::from_millis(50));
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let line = read_reply(&mut reader);
+    assert!(line.contains("\"kind\":\"busy\""), "got: {line}");
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    drop(hold1);
+    drop(hold2);
+    server.stop();
+}
+
+#[test]
+fn stop_drains_and_then_refuses_connections() {
+    let (_svc, server) = start();
+    let addr = server.addr();
+    let mut client = Client::connect(addr).unwrap();
+    let mut pts = vec![0.0f32; 3 * 16];
+    Rng::new(9).fill_normal_f32(&mut pts);
+    client.eval("laplacian", "collapsed", "exact", 16, &pts).unwrap();
+    let t0 = Instant::now();
+    server.stop();
+    // An idle connection must not pin the drain for its full read
+    // timeout: stop force-closes leftovers after the drain grace.
+    assert!(t0.elapsed() < Duration::from_secs(6), "stop took {:?}", t0.elapsed());
+    assert!(TcpStream::connect(addr).is_err(), "listener still accepting after stop");
+}
+
+#[test]
+fn client_retries_once_after_idle_disconnect() {
+    let (_svc, server) = start_with(ServerConfig {
+        read_timeout: Duration::from_millis(150),
+        ..ServerConfig::default()
+    });
+    let mut client = Client::connect_with(
+        server.addr(),
+        ClientConfig { retry_backoff: Duration::from_millis(10), ..ClientConfig::default() },
+    )
+    .unwrap();
+    let mut pts = vec![0.0f32; 2 * 16];
+    Rng::new(11).fill_normal_f32(&mut pts);
+    client.eval("laplacian", "collapsed", "exact", 16, &pts).unwrap();
+    // Idle past the server's read timeout: the server hangs up, and the
+    // next eval must transparently reconnect and succeed.
+    std::thread::sleep(Duration::from_millis(400));
+    let (f0, _) = client.eval("laplacian", "collapsed", "exact", 16, &pts).unwrap();
+    assert_eq!(f0.len(), 2);
+    server.stop();
+}
+
+#[test]
+fn health_endpoint_reports_every_shard() {
+    let (svc, server) = start();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let h = client.health().unwrap();
+    assert_eq!(h.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(h.get("all_healthy").and_then(|v| v.as_bool()), Some(true));
+    let slots = h.get("health").and_then(|v| v.as_arr()).expect("health array");
+    assert_eq!(slots.len(), svc.shards());
+    for s in slots {
+        assert_eq!(s.get("health").and_then(|v| v.as_str()), Some("healthy"));
+    }
+    assert!(h.get("metrics").and_then(|v| v.as_obj()).is_some(), "metrics object missing");
     server.stop();
 }

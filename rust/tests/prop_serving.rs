@@ -131,7 +131,7 @@ fn split_requests_scatter_back_in_order() {
             sent.push(pts);
         }
         for (pts, rx) in sent.iter().zip(receivers) {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             check_reply(&route, pts, &resp.f0, &resp.op, &engine, &router);
         }
         svc.shutdown();
@@ -163,7 +163,7 @@ fn multi_shard_replies_match_direct_evaluation() {
         pendings.push((route.clone(), pts, rx));
     }
     for (route, pts, rx) in pendings {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         check_reply(&route, &pts, &resp.f0, &resp.op, &engine, &router);
     }
     svc.shutdown();
