@@ -1,40 +1,36 @@
-//! Poisson-PINN residual pipeline through the typed front door.
+//! Poisson-PINN training through the typed front door.
 //!
-//! For -Δu = f on the unit cube, a PINN's interior loss term is the
-//! squared residual r(x) = Δu_θ(x) + f(x); this driver evaluates that
-//! residual batch-by-batch through an [`Engine`] handle — the
-//! collapsed-Taylor forward Laplacian that dominates the training step's
-//! cost — at whatever dimension the served laplacian route compiles
-//! (D = 16 in the builtin preset), with f frozen at the 2D problem's
-//! forcing scale 2π².
+//! For -Δu = f on the unit cube with the manufactured forcing
+//! f = D·π²·∏ᵢ sin(π xᵢ) (the python/compile/pinn.py problem, at whatever
+//! dimension the served laplacian route compiles), this driver runs a
+//! *real* seeded training loop: the collapsed-Taylor forward Laplacian,
+//! the interior residual loss and ∂loss/∂θ execute as one cached
+//! forward+backward program (reverse-over-collapsed-forward, see
+//! docs/training.md), and an [`Optimizer`] updates the flat θ in place.
 //!
-//! The full AOT training step (`pinn_step`: residual → loss → ∇θ → update
-//! as one HLO module) differentiates through θ, which the native backend
-//! does not serve — it rides on the PJRT backend (ROADMAP).  When a
-//! manifest ships `pinn_step`, loading it reports exactly that, at load
-//! time, instead of failing mid-training.
+//! Because θ is a runtime input of the compiled gradient program, the
+//! optimizer moving it never recompiles anything: the loop asserts
+//! exactly one program-cache miss across all steps, plus a pinned
+//! loss-decrease threshold — the CI `train-smoke` job gates on this
+//! binary exiting cleanly.
 //!
 //! ```bash
-//! cargo run --release --example pinn_poisson [-- batches]
+//! cargo run --release --example pinn_poisson [-- steps [sgd|adam]]
 //! ```
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use ctaylor::api::Engine;
 use ctaylor::runtime::{HostTensor, Registry};
+use ctaylor::train::Optimizer;
 use ctaylor::util::prng::Rng;
 
 fn main() -> Result<()> {
-    let batches: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(500);
+    let opt_name = std::env::args().nth(2).unwrap_or_else(|| "adam".to_string());
+    ensure!(steps >= 2, "need at least two steps to observe a decrease");
     let engine = Engine::builder().registry(Registry::load_default()?).build()?;
 
-    // The θ-gradient training step needs the PJRT backend; a typed load
-    // either works there or says why it cannot here.
-    match engine.operator("pinn_step") {
-        Ok(h) => println!("pinn_step available: {} (AOT artifact set)", h.name()),
-        Err(e) => println!("pinn_step unavailable ({e}); evaluating the residual term instead"),
-    }
-
-    // The forward-Laplacian handle: the PINN residual's expensive piece.
+    // The training route: the largest-batch collapsed exact Laplacian.
     let meta = engine
         .registry()
         .select("laplacian", "collapsed", "exact")
@@ -44,37 +40,57 @@ fn main() -> Result<()> {
         .clone();
     let handle = engine.operator(&meta.name)?;
     let (b, d) = (meta.batch, meta.dim);
-    println!("residual route: {} (B={b}, D={d})", handle.name());
+    println!("training route: {} (B={b}, D={d}, |θ|={})", handle.name(), meta.theta_len);
 
+    // Seeded init + fixed collocation points: the whole run is
+    // deterministic, so the asserted thresholds are exact, not statistical.
     let mut rng = Rng::new(7);
-    let theta = meta.glorot_theta(&mut rng);
+    let mut theta = meta.glorot_theta(&mut rng);
+    let mut pts = vec![0.0f32; b * d];
+    for p in pts.iter_mut() {
+        *p = rng.uniform() as f32;
+    }
+    let x = HostTensor::new(vec![b, d], pts);
 
-    // Evaluate mean squared residuals over collocation batches.  With an
-    // untrained network this measures the forcing term's scale — the
-    // starting point a trainer descends from.
-    let forcing = 2.0 * std::f32::consts::PI * std::f32::consts::PI;
-    let mut mean_sq = 0.0f64;
+    // f = D·π²·∏ᵢ sin(π xᵢ), the source of the manufactured solution
+    // u*(x) = ∏ᵢ sin(π xᵢ) in D dimensions (pinn.py's 2π² at D = 2).
+    let pi = std::f32::consts::PI;
+    let mut fdata = vec![0.0f32; b];
+    for (row, fv) in fdata.iter_mut().enumerate() {
+        let prod: f32 = x.data[row * d..(row + 1) * d].iter().map(|&v| (pi * v).sin()).product();
+        *fv = d as f32 * pi * pi * prod;
+    }
+    let forcing = HostTensor::new(vec![b, 1], fdata);
+
+    let mut opt = Optimizer::parse(&opt_name, 1e-3)
+        .ok_or_else(|| anyhow::anyhow!("unknown optimizer {opt_name:?} (sgd | adam)"))?;
+
     let t0 = std::time::Instant::now();
-    for _ in 0..batches {
-        let mut pts = vec![0.0f32; b * d];
-        for p in pts.iter_mut() {
-            *p = rng.uniform() as f32;
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let loss = engine.pinn_step(&handle, &mut theta, &x, &forcing, &mut opt)?;
+        ensure!(loss.is_finite(), "step {step}: non-finite loss");
+        if step % (steps / 10).max(1) == 0 || step + 1 == steps {
+            println!("step {step:>5}  interior loss {loss:.6e}");
         }
-        let x = HostTensor::new(vec![b, d], pts);
-        let out = handle.eval().theta(&theta).x(&x).run()?;
-        for i in 0..b {
-            // r = Δu_θ + f, with f frozen at its sup for a scale probe.
-            let r = out.op.data[i] + forcing;
-            mean_sq += (r * r) as f64 / (batches * b) as f64;
-        }
+        losses.push(loss);
     }
     let wall = t0.elapsed().as_secs_f64();
+    let (first, last) = (losses[0], losses[steps - 1]);
     println!(
-        "{} residual evaluations in {wall:.3}s -> {:.0} points/s; mean r^2 = {mean_sq:.3}",
-        batches * b,
-        (batches * b) as f64 / wall
+        "{steps} training steps in {wall:.3}s -> {:.0} steps/s; loss {first:.6e} -> {last:.6e}",
+        steps as f64 / wall
     );
     println!("engine stats: {}", engine.stats());
-    anyhow::ensure!(mean_sq.is_finite() && mean_sq > 0.0, "residuals must be finite");
+
+    // The training contract, asserted so CI's train-smoke job gates on it:
+    // (1) the loss trend is down, past a pinned threshold;
+    ensure!(last < 0.9 * first, "loss must drop at least 10%: {first:.6e} -> {last:.6e}");
+    // (2) θ moving never recompiles — one miss at step 1, hits after.
+    let stats = engine.stats();
+    ensure!(stats.program_cache_misses == 1, "expected exactly one compile, got {stats}");
+    ensure!(stats.program_cache_hits == (steps - 1) as u64, "steps 2.. must be VM-only: {stats}");
+    ensure!(stats.programs_cached == 1, "one forward+backward pair serves the loop: {stats}");
+    println!("ok: trained with zero recompiles after step 1");
     Ok(())
 }

@@ -10,12 +10,21 @@ loss, boundary penalty, gradient w.r.t. the flat parameter vector, update —
 is lowered to a single HLO module.  The Rust driver owns the training loop,
 samples collocation points with its own PRNG, and feeds/receives the flat
 parameter vector, so Python never appears on the training path.
+
+This module is the *reference* for the crate's native training subsystem
+(rust: ``taylor::adjoint`` + ``Engine::pinn_step``, docs/training.md, the
+``pinn_poisson`` example): reverse-mode over the collapsed forward is
+exactly ``jax.value_and_grad`` over the collapsed-Taylor operator below.
+The operator is resolved through the unified ``(op, method, mode)`` route
+naming (``operators.make_operator``) — the same spec surface the Rust
+``OperatorSpec``/registry uses — rather than per-function ``collapsed=``
+flags, so a route string identifies the same computation on both sides.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +33,10 @@ from . import operators
 from .model import mlp_apply, unflatten_params
 
 PI = math.pi
+
+# The training route in the unified naming: one jet push of the exact
+# collapsed-Taylor Laplacian per loss evaluation.
+OP, METHOD, MODE = "laplacian", "collapsed", "exact"
 
 
 def source_term(x: jnp.ndarray) -> jnp.ndarray:
@@ -37,22 +50,30 @@ def exact_solution(x: jnp.ndarray) -> jnp.ndarray:
 
 def pinn_loss(theta: jnp.ndarray, x_int: jnp.ndarray, x_bnd: jnp.ndarray,
               in_dim: int, widths: Sequence[int],
-              bnd_weight: float = 100.0) -> jnp.ndarray:
-    """Residual + boundary loss with the collapsed-Taylor Laplacian."""
+              bnd_weight: float = 100.0, method: str = METHOD) -> jnp.ndarray:
+    """Residual + boundary loss with the (op, method, mode)-routed Laplacian."""
     params = unflatten_params(theta, in_dim, widths)
-    _, lap = operators.laplacian_taylor(params, x_int, collapsed=True)
+    laplacian = operators.make_operator(OP, method, MODE)
+    _, lap = laplacian(params, x_int)
     residual = -lap - source_term(x_int)
     u_bnd = mlp_apply(params, x_bnd)
     return jnp.mean(residual ** 2) + bnd_weight * jnp.mean(u_bnd ** 2)
 
 
 def make_train_step(in_dim: int, widths: Sequence[int], lr: float = 1e-3,
-                    bnd_weight: float = 100.0):
-    """(theta, x_int, x_bnd) -> (theta', loss): one SGD step, jit-lowerable."""
+                    bnd_weight: float = 100.0, method: str = METHOD):
+    """(theta, x_int, x_bnd) -> (theta', loss): one SGD step, jit-lowerable.
+
+    ``method`` selects the forward engine by route naming ("standard" /
+    "collapsed"); the gradient is reverse mode over that forward — with
+    "collapsed" this is the reverse-over-collapsed-forward step the Rust
+    adjoint subsystem caches as one forward+backward program.
+    """
 
     def step(theta, x_int, x_bnd):
         loss, g = jax.value_and_grad(pinn_loss)(theta, x_int, x_bnd,
-                                                in_dim, widths, bnd_weight)
+                                                in_dim, widths, bnd_weight,
+                                                method)
         return theta - lr * g, loss
 
     return step

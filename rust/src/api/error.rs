@@ -45,6 +45,9 @@ pub enum ApiError {
     UnexpectedInput { artifact: String, input: &'static str, reason: String },
     /// A supplied input has the wrong shape.
     ShapeMismatch { artifact: String, input: &'static str, expected: Vec<usize>, got: Vec<usize> },
+    /// `residual_grad` was requested on a handle whose method has no
+    /// adjoint path (nested AD is a baseline, not a trainable route).
+    NoGradient { artifact: String, method: String },
     /// An execution-backend failure below the API layer.
     Internal(anyhow::Error),
 }
@@ -81,6 +84,13 @@ impl fmt::Display for ApiError {
                 write!(
                     f,
                     "{artifact}: input `{input}` has shape {got:?}, expected {expected:?}"
+                )
+            }
+            ApiError::NoGradient { artifact, method } => {
+                write!(
+                    f,
+                    "{artifact}: θ-gradients need a Taylor method \
+                     (standard | collapsed); {method} has no adjoint path"
                 )
             }
             ApiError::Internal(e) => write!(f, "execution backend: {e:#}"),

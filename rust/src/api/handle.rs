@@ -254,6 +254,34 @@ impl OperatorHandle {
         EvalRequest { handle: self, theta: None, x: None, sigma: None, dirs: None }
     }
 
+    /// Start a θ-gradient request: the interior residual loss
+    /// `mean_B((L u + f)²)` and `∂loss/∂θ` through one cached
+    /// forward+backward program (reverse-over-collapsed-forward; see
+    /// docs/training.md).  Taylor methods only — nested handles return
+    /// [`ApiError::NoGradient`] at [`GradRequest::run`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use ctaylor::api::Engine;
+    /// use ctaylor::runtime::{HostTensor, Registry};
+    ///
+    /// # fn main() -> Result<(), Box<dyn std::error::Error>> {
+    /// let engine = Engine::builder().registry(Registry::builtin()).build()?;
+    /// let handle = engine.operator("laplacian_collapsed_exact_b2")?;
+    /// let theta = HostTensor::zeros(vec![handle.meta().theta_len]);
+    /// let x = HostTensor::zeros(vec![2, handle.meta().dim]);
+    /// let f = HostTensor::new(vec![2, 1], vec![1.0, 1.0]);
+    /// let out = handle.residual_grad().theta(&theta).x(&x).forcing(&f).run()?;
+    /// // Zero network: L u = 0, so loss = mean(f²) = 1.
+    /// assert!((out.loss - 1.0).abs() < 1e-12);
+    /// assert_eq!(out.grad.shape, vec![handle.meta().theta_len]);
+    /// # Ok(()) }
+    /// ```
+    pub fn residual_grad(&self) -> GradRequest<'_> {
+        GradRequest { handle: self, theta: None, x: None, forcing: None, sigma: None, dirs: None }
+    }
+
     /// The handle's manifest metadata (synthetic for `Engine::compile`
     /// handles: `batch` is 0 there, meaning "any batch").
     pub fn meta(&self) -> &ArtifactMeta {
@@ -279,9 +307,43 @@ impl OperatorHandle {
         }
     }
 
-    fn run_request(&self, req: &EvalRequest<'_>) -> Result<EvalOutput, ApiError> {
-        let core = &self.core;
-        let meta = &core.meta;
+    /// Validate the `x` input: `[B, D]`, with `B` pinned to the artifact's
+    /// compiled batch (flexible for `Engine::compile` handles).
+    fn validated_x<'a>(&self, x: Option<&'a HostTensor>) -> Result<&'a HostTensor, ApiError> {
+        let meta = &self.core.meta;
+        let d = meta.dim;
+        let flexible = matches!(self.core.route, RouteKind::Custom { .. });
+        let x = x.ok_or_else(|| ApiError::MissingInput {
+            artifact: meta.name.clone(),
+            input: "x",
+            expected: vec![meta.batch.max(1), d],
+        })?;
+        let x_ok = if flexible {
+            x.shape.len() == 2 && x.shape[1] == d && x.shape[0] >= 1
+        } else {
+            x.shape == [meta.batch, d]
+        };
+        if !x_ok {
+            let expected_batch =
+                if flexible { x.shape.first().copied().unwrap_or(1).max(1) } else { meta.batch };
+            return Err(ApiError::ShapeMismatch {
+                artifact: meta.name.clone(),
+                input: "x",
+                expected: vec![expected_batch, d],
+                got: x.shape.clone(),
+            });
+        }
+        Ok(x)
+    }
+
+    /// Resolve the σ / sampled-directions auxiliary input — shared by the
+    /// eval and residual-grad request paths, which take identical aux.
+    fn resolve_aux(
+        &self,
+        sigma: Option<&HostTensor>,
+        dirs: Option<&HostTensor>,
+    ) -> Result<Aux, ApiError> {
+        let meta = &self.core.meta;
         let name = &meta.name;
         let d = meta.dim;
         let missing = |input: &'static str, expected: Vec<usize>| ApiError::MissingInput {
@@ -302,34 +364,15 @@ impl OperatorHandle {
             input,
             reason,
         };
-
-        let theta = req.theta.ok_or_else(|| missing("theta", vec![meta.theta_len]))?;
-        if theta.shape != [meta.theta_len] {
-            return Err(mismatch("theta", vec![meta.theta_len], &theta.shape));
-        }
-
-        let flexible = matches!(core.route, RouteKind::Custom { .. });
-        let x = req.x.ok_or_else(|| missing("x", vec![meta.batch.max(1), d]))?;
-        let x_ok = if flexible {
-            x.shape.len() == 2 && x.shape[1] == d && x.shape[0] >= 1
-        } else {
-            x.shape == [meta.batch, d]
-        };
-        if !x_ok {
-            let expected_batch =
-                if flexible { x.shape.first().copied().unwrap_or(1).max(1) } else { meta.batch };
-            return Err(mismatch("x", vec![expected_batch, d], &x.shape));
-        }
-
         let aux = match self.aux_input() {
             AuxInput::None => {
-                if req.sigma.is_some() {
+                if sigma.is_some() {
                     return Err(unexpected(
                         "sigma",
                         format!("route {}/{} takes no sigma", meta.op, meta.mode),
                     ));
                 }
-                if req.dirs.is_some() {
+                if dirs.is_some() {
                     return Err(unexpected(
                         "dirs",
                         format!("route {}/{} takes no sampled directions", meta.op, meta.mode),
@@ -338,32 +381,60 @@ impl OperatorHandle {
                 Aux::None
             }
             AuxInput::Sigma => {
-                if req.dirs.is_some() {
+                if dirs.is_some() {
                     return Err(unexpected(
                         "dirs",
                         "the exact weighted route takes sigma, not directions".into(),
                     ));
                 }
-                let s = req.sigma.ok_or_else(|| missing("sigma", vec![d, d]))?;
+                let s = sigma.ok_or_else(|| missing("sigma", vec![d, d]))?;
                 if s.shape != [d, d] {
                     return Err(mismatch("sigma", vec![d, d], &s.shape));
                 }
                 Aux::Sigma(native::to_f64(s))
             }
             AuxInput::Directions => {
-                if req.sigma.is_some() {
+                if sigma.is_some() {
                     return Err(unexpected(
                         "sigma",
                         "stochastic routes take sigma-premultiplied directions, not sigma".into(),
                     ));
                 }
-                let dd = req.dirs.ok_or_else(|| missing("dirs", vec![meta.samples, d]))?;
+                let dd = dirs.ok_or_else(|| missing("dirs", vec![meta.samples, d]))?;
                 if dd.shape != [meta.samples, d] {
                     return Err(mismatch("dirs", vec![meta.samples, d], &dd.shape));
                 }
                 Aux::Dirs(native::to_f64(dd))
             }
         };
+        Ok(aux)
+    }
+
+    fn run_request(&self, req: &EvalRequest<'_>) -> Result<EvalOutput, ApiError> {
+        let core = &self.core;
+        let meta = &core.meta;
+        let name = &meta.name;
+        let d = meta.dim;
+        let missing = |input: &'static str, expected: Vec<usize>| ApiError::MissingInput {
+            artifact: name.clone(),
+            input,
+            expected,
+        };
+        let mismatch = |input: &'static str, expected: Vec<usize>, got: &[usize]| {
+            ApiError::ShapeMismatch {
+                artifact: name.clone(),
+                input,
+                expected,
+                got: got.to_vec(),
+            }
+        };
+        let theta = req.theta.ok_or_else(|| missing("theta", vec![meta.theta_len]))?;
+        if theta.shape != [meta.theta_len] {
+            return Err(mismatch("theta", vec![meta.theta_len], &theta.shape));
+        }
+
+        let x = self.validated_x(req.x)?;
+        let aux = self.resolve_aux(req.sigma, req.dirs)?;
 
         let mlp = native::mlp_from_theta(meta, &theta.data).map_err(ApiError::Internal)?;
         let x0 = native::to_f64(x);
@@ -415,6 +486,72 @@ impl OperatorHandle {
             }
         };
         Ok(EvalOutput { f0: native::to_f32(&f0), op: native::to_f32(&opv) })
+    }
+
+    fn run_grad_request(&self, req: &GradRequest<'_>) -> Result<GradOutput, ApiError> {
+        let core = &self.core;
+        let meta = &core.meta;
+        let name = &meta.name;
+        let d = meta.dim;
+        let mode = core.method.collapse().ok_or_else(|| ApiError::NoGradient {
+            artifact: name.clone(),
+            method: core.method.as_str().to_string(),
+        })?;
+        let missing = |input: &'static str, expected: Vec<usize>| ApiError::MissingInput {
+            artifact: name.clone(),
+            input,
+            expected,
+        };
+        let mismatch = |input: &'static str, expected: Vec<usize>, got: &[usize]| {
+            ApiError::ShapeMismatch {
+                artifact: name.clone(),
+                input,
+                expected,
+                got: got.to_vec(),
+            }
+        };
+
+        let theta = req.theta.ok_or_else(|| missing("theta", vec![meta.theta_len]))?;
+        if theta.shape != [meta.theta_len] {
+            return Err(mismatch("theta", vec![meta.theta_len], &theta.shape));
+        }
+        let x = self.validated_x(req.x)?;
+        let batch = x.shape[0];
+        let forcing = req.forcing.ok_or_else(|| missing("forcing", vec![batch, 1]))?;
+        if forcing.shape != [batch, 1] {
+            return Err(mismatch("forcing", vec![batch, 1], &forcing.shape));
+        }
+        let aux = self.resolve_aux(req.sigma, req.dirs)?;
+
+        // Aux-derived direction bundles (σ columns / sampled dirs) arrive
+        // with the request, exactly as on the eval path: the compiled
+        // grad program keeps directions a runtime input, so its cache key
+        // needs no σ/dirs fingerprint either.
+        let spec_owned;
+        let spec = match &core.route {
+            RouteKind::Artifact { op, .. } => {
+                spec_owned = native::resolve_spec(*op, d, &aux).map_err(ApiError::Internal)?;
+                &spec_owned
+            }
+            RouteKind::Custom { spec } => spec,
+        };
+        let fresh = !matches!(aux, Aux::None);
+        let x0 = native::to_f64(x);
+        let f0 = native::to_f64(forcing);
+        let (loss, grad) = native::execute_residual_grad(
+            name,
+            &meta.layer_dims,
+            &x0,
+            &f0,
+            spec,
+            mode,
+            self.shared.precision,
+            fresh,
+            &self.shared.programs,
+            &theta.data,
+        )
+        .map_err(ApiError::Internal)?;
+        Ok(GradOutput { loss, grad: HostTensor::new(vec![grad.len()], grad) })
     }
 }
 
@@ -512,4 +649,71 @@ pub struct EvalOutput {
     pub f0: HostTensor,
     /// Operator values `L f(x)` (Δf, Tr(σσᵀ∇²f), Δ²f, ...), shape `[B, 1]`.
     pub op: HostTensor,
+}
+
+/// A named-input θ-gradient request: `.theta(..)`, `.x(..)`,
+/// `.forcing(..)`, plus `.sigma(..)` or `.directions(..)` where the route
+/// requires them — the training-loop counterpart of [`EvalRequest`].
+///
+/// Like evaluation requests, inputs are borrowed and building one
+/// allocates nothing.  The compiled forward+backward program keeps θ a
+/// *runtime* input, so optimizer steps between requests never recompile
+/// (docs/training.md pins this contract).
+#[derive(Debug)]
+pub struct GradRequest<'a> {
+    handle: &'a OperatorHandle,
+    theta: Option<&'a HostTensor>,
+    x: Option<&'a HostTensor>,
+    forcing: Option<&'a HostTensor>,
+    sigma: Option<&'a HostTensor>,
+    dirs: Option<&'a HostTensor>,
+}
+
+impl<'a> GradRequest<'a> {
+    /// The flat parameter vector `[theta_len]` (per-layer W then b).
+    pub fn theta(mut self, t: &'a HostTensor) -> Self {
+        self.theta = Some(t);
+        self
+    }
+
+    /// The interior collocation points `[B, D]`.
+    pub fn x(mut self, t: &'a HostTensor) -> Self {
+        self.x = Some(t);
+        self
+    }
+
+    /// The forcing term `f` of the residual `L u + f`, shape `[B, 1]`.
+    /// For Poisson `−Δu = f` pass the source term itself: the squared
+    /// residual `(Δu + f)²` equals `(−Δu − f)²`.
+    pub fn forcing(mut self, t: &'a HostTensor) -> Self {
+        self.forcing = Some(t);
+        self
+    }
+
+    /// The `[D, D]` σ matrix (exact weighted Laplacian only).
+    pub fn sigma(mut self, t: &'a HostTensor) -> Self {
+        self.sigma = Some(t);
+        self
+    }
+
+    /// Sampled directions `[S, D]` (stochastic routes only).
+    pub fn directions(mut self, t: &'a HostTensor) -> Self {
+        self.dirs = Some(t);
+        self
+    }
+
+    /// Validate the named inputs and execute the forward+backward pair.
+    pub fn run(self) -> Result<GradOutput, ApiError> {
+        self.handle.run_grad_request(&self)
+    }
+}
+
+/// The result of one θ-gradient request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GradOutput {
+    /// The scalar interior residual loss `mean_B((L u + f)²)`.
+    pub loss: f64,
+    /// `∂loss/∂θ`, flat `[theta_len]` in the θ layout (per-layer W then
+    /// b) — ready for [`crate::train::Optimizer::step`].
+    pub grad: HostTensor,
 }

@@ -45,7 +45,9 @@ mod error;
 mod handle;
 
 pub use error::ApiError;
-pub use handle::{AuxInput, EvalOutput, EvalRequest, Method, OperatorHandle};
+pub use handle::{
+    AuxInput, EvalOutput, EvalRequest, GradOutput, GradRequest, Method, OperatorHandle,
+};
 
 pub use crate::runtime::native::shard_count;
 pub use crate::taylor::element::Precision;
@@ -286,6 +288,51 @@ impl Engine {
     /// The numeric precision this engine compiles and executes at.
     pub fn precision(&self) -> Precision {
         self.shared.precision
+    }
+
+    /// One full PINN training step on a handle's route: evaluate the
+    /// interior residual loss and `∂loss/∂θ` through the cached
+    /// forward+backward program pair, then apply the optimizer update to
+    /// `theta` in place.  Returns the loss *before* the update.
+    ///
+    /// θ is a runtime input of the compiled grad program, so every step
+    /// after the first is a pure program-cache hit (see docs/training.md);
+    /// routes needing σ / sampled directions go through
+    /// [`OperatorHandle::residual_grad`] directly.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use ctaylor::api::Engine;
+    /// use ctaylor::runtime::{HostTensor, Registry};
+    /// use ctaylor::train::Optimizer;
+    ///
+    /// # fn main() -> Result<(), Box<dyn std::error::Error>> {
+    /// let engine = Engine::builder().registry(Registry::builtin()).build()?;
+    /// let handle = engine.operator("laplacian_collapsed_exact_b2")?;
+    /// let mut theta = HostTensor::zeros(vec![handle.meta().theta_len]);
+    /// let x = HostTensor::zeros(vec![2, handle.meta().dim]);
+    /// let f = HostTensor::new(vec![2, 1], vec![1.0, 1.0]);
+    /// let mut opt = Optimizer::parse("sgd", 1e-3).expect("sgd is a valid optimizer");
+    /// let l0 = engine.pinn_step(&handle, &mut theta, &x, &f, &mut opt)?;
+    /// let _l1 = engine.pinn_step(&handle, &mut theta, &x, &f, &mut opt)?;
+    /// assert!(l0 > 0.0);
+    /// // θ moved between the steps, yet only the first one compiled.
+    /// assert_eq!(engine.stats().program_cache_misses, 1);
+    /// assert_eq!(engine.stats().program_cache_hits, 1);
+    /// # Ok(()) }
+    /// ```
+    pub fn pinn_step(
+        &self,
+        handle: &OperatorHandle,
+        theta: &mut crate::runtime::HostTensor,
+        x: &crate::runtime::HostTensor,
+        forcing: &crate::runtime::HostTensor,
+        opt: &mut crate::train::Optimizer,
+    ) -> Result<f64, ApiError> {
+        let out = handle.residual_grad().theta(theta).x(x).forcing(forcing).run()?;
+        opt.step(&mut theta.data, &out.grad.data);
+        Ok(out.loss)
     }
 
     /// One snapshot of every engine-level gauge.
@@ -588,6 +635,88 @@ mod tests {
             let (got, want) = (out.op.data[b], out64.op.data[b]);
             assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()), "row {b}: {got} vs {want}");
         }
+    }
+
+    #[test]
+    fn pinn_steps_descend_and_reuse_one_compiled_pair() {
+        // The training contract end to end: seeded θ, fixed collocation
+        // points, SGD on the adjoint gradient — loss decreases and every
+        // step after the first is a pure program-cache hit.
+        let eng = Engine::builder()
+            .registry(Registry::builtin())
+            .threads(1)
+            .precision(Precision::F64)
+            .build()
+            .unwrap();
+        let h = eng.operator("laplacian_collapsed_exact_b8").unwrap();
+        let meta = h.meta().clone();
+        let mut theta = workload::theta_for(&meta, 21);
+        let mut rng = Rng::new(22);
+        let mut xdata = vec![0.0f32; meta.batch * meta.dim];
+        rng.fill_normal_f32(&mut xdata);
+        let x = HostTensor::new(vec![meta.batch, meta.dim], xdata);
+        let mut fdata = vec![0.0f32; meta.batch];
+        rng.fill_normal_f32(&mut fdata);
+        let forcing = HostTensor::new(vec![meta.batch, 1], fdata);
+        let mut opt = crate::train::Optimizer::parse("sgd", 1e-3).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..5 {
+            losses.push(eng.pinn_step(&h, &mut theta, &x, &forcing, &mut opt).unwrap());
+        }
+        assert!(
+            losses[4] < losses[0],
+            "five SGD steps must reduce the loss: {losses:?}"
+        );
+        let stats = eng.stats();
+        assert_eq!(stats.program_cache_misses, 1, "only step 1 compiles");
+        assert_eq!(stats.program_cache_hits, 4, "steps 2..5 are pure VM hits");
+        assert_eq!(stats.programs_cached, 1, "one forward+backward pair serves the loop");
+    }
+
+    #[test]
+    fn grad_and_eval_programs_never_collide_in_the_cache() {
+        // Same route, same batch, same θ: the eval program embeds θ as
+        // constants, the grad program takes it as an input — the typed
+        // key's `kind` keeps them distinct entries.
+        let eng = Engine::builder()
+            .registry(Registry::builtin())
+            .threads(1)
+            .precision(Precision::F64)
+            .build()
+            .unwrap();
+        let h = eng.operator("laplacian_collapsed_exact_b2").unwrap();
+        let w = workload::workload_for(h.meta(), 13);
+        w.request(&h).run().unwrap();
+        let forcing = HostTensor::zeros(vec![2, 1]);
+        h.residual_grad().theta(&w.theta).x(&w.x).forcing(&forcing).run().unwrap();
+        let stats = eng.stats();
+        assert_eq!(stats.program_cache_misses, 2, "eval and grad compile separately");
+        assert_eq!(stats.programs_cached, 2);
+    }
+
+    #[test]
+    fn nested_handles_surface_a_typed_no_gradient_error() {
+        let eng = engine();
+        let h = eng.operator("laplacian_nested_exact_b2").unwrap();
+        let theta = HostTensor::zeros(vec![h.meta().theta_len]);
+        let x = HostTensor::zeros(vec![2, h.meta().dim]);
+        let f = HostTensor::zeros(vec![2, 1]);
+        let err = h.residual_grad().theta(&theta).x(&x).forcing(&f).run().unwrap_err();
+        assert!(matches!(err, ApiError::NoGradient { .. }), "{err}");
+        assert!(err.to_string().contains("nested"), "{err}");
+    }
+
+    #[test]
+    fn grad_requests_validate_the_forcing_shape() {
+        let eng = engine();
+        let h = eng.operator("laplacian_collapsed_exact_b2").unwrap();
+        let theta = HostTensor::zeros(vec![h.meta().theta_len]);
+        let x = HostTensor::zeros(vec![2, h.meta().dim]);
+        let err = h.residual_grad().theta(&theta).x(&x).run().unwrap_err();
+        assert!(matches!(err, ApiError::MissingInput { input: "forcing", .. }), "{err}");
+        let bad = HostTensor::zeros(vec![3, 1]);
+        let err = h.residual_grad().theta(&theta).x(&x).forcing(&bad).run().unwrap_err();
+        assert!(matches!(err, ApiError::ShapeMismatch { input: "forcing", .. }), "{err}");
     }
 
     #[test]

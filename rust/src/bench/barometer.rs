@@ -26,7 +26,10 @@
 //! (the Taylor jet engine, standard vs collapsed propagation),
 //! `interp-col` (graph interpreter on the §C-collapsed trace), `vm-std` /
 //! `vm-col` (the buffer-planned VM on the standard vs collapsed trace),
-//! `vm-col-f32` (the same collapsed program cast to f32 storage) and
+//! `vm-col-f32` (the same collapsed program cast to f32 storage),
+//! `grad` / `grad-f32` (one training step: the reverse-over-collapsed-
+//! forward θ-gradient through the cached forward+backward pair, in f64
+//! and f32 — see docs/training.md) and
 //! `ref` / `tiled` / `tiled-f32` for the raw GEMM kernels.  f32 cells
 //! carry distinct ids from their f64 counterparts, so a `cmp` join never
 //! compares across precisions.
@@ -75,10 +78,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use crate::api::{Engine, Method, Precision};
 use crate::mlp::Mlp;
 use crate::nested;
 use crate::operators::{self, plan, OperatorSpec};
 use crate::operators::plan::OperatorPlan;
+use crate::runtime::{HostTensor, Registry};
 use crate::taylor::jet::Collapse;
 use crate::taylor::kernels;
 use crate::taylor::rewrite;
@@ -114,6 +119,14 @@ pub enum EngineKind {
     VmCol,
     /// The collapsed VM program cast to f32 storage (`Precision::F32`).
     VmColF32,
+    /// One training step: reverse-over-collapsed-forward θ-gradient
+    /// through the cached forward+backward pair (`residual_grad`); the
+    /// steady state measured here is VM execution only, compile excluded.
+    /// Proxies report the forward collapsed pass — the adjoint roughly
+    /// doubles the work, which is exactly what the cell measures.
+    Grad,
+    /// The same training step on the f32 engine (`Precision::F32`).
+    GradF32,
     /// Naive triple-loop GEMM kernel (kernel cells only).
     GemmRef,
     /// Tiled packed GEMM kernel (kernel cells only).
@@ -133,6 +146,8 @@ impl EngineKind {
             EngineKind::VmStd => "vm-std",
             EngineKind::VmCol => "vm-col",
             EngineKind::VmColF32 => "vm-col-f32",
+            EngineKind::Grad => "grad",
+            EngineKind::GradF32 => "grad-f32",
             EngineKind::GemmRef => "ref",
             EngineKind::Gemm => "tiled",
             EngineKind::GemmF32 => "tiled-f32",
@@ -146,6 +161,7 @@ impl EngineKind {
             EngineKind::JetStd | EngineKind::VmStd => "standard",
             EngineKind::JetCol | EngineKind::InterpCol => "collapsed",
             EngineKind::VmCol | EngineKind::VmColF32 => "collapsed",
+            EngineKind::Grad | EngineKind::GradF32 => "collapsed",
             EngineKind::GemmRef | EngineKind::Gemm | EngineKind::GemmF32 => "kernel",
         }
     }
@@ -290,6 +306,11 @@ pub fn full_matrix() -> Vec<Cell> {
     m.push(Cell::exact("laplacian", VmColF32, 16, W_MLP, 8).reduced());
     m.push(Cell::exact("laplacian", VmColF32, 16, W_MLP, 32));
     m.push(Cell::exact("helmholtz", VmColF32, 16, W_MLP, 8));
+    // Training steps: reverse-over-collapsed-forward θ-gradients through
+    // the cached forward+backward pair (docs/training.md) — the steady-
+    // state cost of one `pinn_step`, compile excluded.
+    m.push(Cell::exact("laplacian", Grad, 16, W_MLP, 8).reduced());
+    m.push(Cell::exact("laplacian", GradF32, 16, W_MLP, 8));
     // Raw GEMM kernels: the 256³ headline and an MLP-layer-like shape.
     m.push(Cell::gemm(GemmRef, 256, 256, 256).heavy());
     m.push(Cell::gemm(Gemm, 256, 256, 256).heavy().reduced());
@@ -619,6 +640,78 @@ fn run_measured(cell: &Cell, seed: u64) -> Result<Vec<u64>> {
                 )
             }
         }
+        Grad | GradF32 => {
+            // One full training step through the typed API: the cached
+            // forward+backward pair (`residual_grad`), θ a runtime input
+            // so the steady state is pure VM execution — compile paid
+            // once in warmup, cache hits thereafter.
+            ensure!(cell.samples == 0, "cell {}: grad cells run the exact route", cell.id());
+            let precision = if cell.engine == Grad {
+                Precision::F64
+            } else {
+                Precision::F32 { accumulate_f64: false }
+            };
+            let engine = Engine::builder()
+                .registry(Registry::builtin())
+                .threads(1)
+                .precision(precision)
+                .build()
+                .with_context(|| format!("cell {}: engine", cell.id()))?;
+            let handle = engine
+                .compile(spec_for(cell, None)?, Method::Collapsed, &cell.widths)
+                .with_context(|| format!("cell {}: compile", cell.id()))?;
+            let theta = handle.meta().glorot_theta(&mut rng);
+            let mut xs = vec![0.0f32; cell.batch * cell.dim];
+            rng.fill_normal_f32(&mut xs);
+            let xh = HostTensor::new(vec![cell.batch, cell.dim], xs);
+            let mut fs = vec![0.0f32; cell.batch];
+            rng.fill_normal_f32(&mut fs);
+            let forcing = HostTensor::new(vec![cell.batch, 1], fs);
+            let grad_of = |t: &HostTensor| {
+                handle
+                    .residual_grad()
+                    .theta(t)
+                    .x(&xh)
+                    .forcing(&forcing)
+                    .run()
+                    .with_context(|| format!("cell {}: residual_grad", cell.id()))
+            };
+            // The adjoint must agree with central finite differences at a
+            // probe index before anything is timed: a fast wrong gradient
+            // is not a benchmark.
+            let out = grad_of(&theta)?;
+            ensure!(out.loss.is_finite(), "cell {}: non-finite loss", cell.id());
+            let k = theta.data.len() / 2;
+            let eps = 1e-2f32;
+            let mut plus = theta.clone();
+            plus.data[k] += eps;
+            let mut minus = theta.clone();
+            minus.data[k] -= eps;
+            let fd = (grad_of(&plus)?.loss - grad_of(&minus)?.loss)
+                / f64::from(plus.data[k] - minus.data[k]);
+            let got = f64::from(out.grad.data[k]);
+            let scale = out.grad.data.iter().fold(1.0f64, |m, &g| m.max(f64::from(g).abs()));
+            ensure!(
+                (got - fd).abs() <= 2e-2 * (1.0 + scale),
+                "cell {}: adjoint θ[{k}] = {got} deviates from central FD {fd}",
+                cell.id()
+            );
+            measure(
+                || {
+                    std::hint::black_box(
+                        handle
+                            .residual_grad()
+                            .theta(&theta)
+                            .x(&xh)
+                            .forcing(&forcing)
+                            .run()
+                            .unwrap(),
+                    );
+                },
+                cell.warmup,
+                cell.iters,
+            )
+        }
         GemmRef | Gemm | GemmF32 => {
             bail!("cell {}: kernel engines require the gemm op", cell.id())
         }
@@ -925,6 +1018,10 @@ mod tests {
         assert_eq!(c.id(), "laplacian-d16-w32x32x1-b8-vm-col");
         let c32 = Cell::exact("laplacian", EngineKind::VmColF32, 16, W_MLP, 8);
         assert_eq!(c32.id(), "laplacian-d16-w32x32x1-b8-vm-col-f32");
+        let gr = Cell::exact("laplacian", EngineKind::Grad, 16, W_MLP, 8);
+        assert_eq!(gr.id(), "laplacian-d16-w32x32x1-b8-grad");
+        let gr32 = Cell::exact("laplacian", EngineKind::GradF32, 16, W_MLP, 8);
+        assert_eq!(gr32.id(), "laplacian-d16-w32x32x1-b8-grad-f32");
         let s = Cell::stochastic("stochastic_laplacian", EngineKind::JetCol, 16, W_MLP, 4, 16);
         assert_eq!(s.id(), "stochastic_laplacian-d16-w32x32x1-b4-s16-jet-col");
         let g = Cell::gemm(EngineKind::Gemm, 256, 256, 256);
@@ -1012,6 +1109,8 @@ mod tests {
             EngineKind::VmCol,
             EngineKind::VmColF32,
             EngineKind::InterpCol,
+            EngineKind::Grad,
+            EngineKind::GradF32,
         ];
         for engine in engines {
             let r = run_cell(&tiny("laplacian", engine, 4)).unwrap();

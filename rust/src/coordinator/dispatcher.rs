@@ -53,6 +53,10 @@ pub enum SubmitError {
     /// The whole route failed to serve on an otherwise healthy shard
     /// (e.g. its artifact names an operator the engine cannot load).
     RouteFailed { route: RouteKey, reason: String },
+    /// A training request was malformed at admission (forcing length,
+    /// step count, optimizer name, or a batch outside the compiled
+    /// ladder) — caught before it reaches a shard.
+    BadTrain { reason: String },
     /// The service is shutting down (shard worker gone).
     Stopped,
 }
@@ -74,6 +78,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::RouteFailed { route, reason } => {
                 write!(f, "route {route} failed on its shard: {reason}")
             }
+            SubmitError::BadTrain { reason } => write!(f, "bad training request: {reason}"),
             SubmitError::Stopped => write!(f, "service stopped"),
         }
     }
@@ -182,6 +187,7 @@ mod tests {
             n_points: 1,
             submitted: Instant::now(),
             deadline: Duration::from_millis(10),
+            train: None,
             reply,
         }
     }

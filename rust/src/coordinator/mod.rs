@@ -9,7 +9,10 @@
 //! sharded service (one [`crate::api::Engine`] per shard worker with
 //! typed per-route handles, resident parameters and deadline-aware
 //! micro-batching) and metrics with log-scale latency histograms — the
-//! vLLM-router-shaped skeleton adapted to PDE operators.
+//! vLLM-router-shaped skeleton adapted to PDE operators.  The same tier
+//! serves training: [`Service::train_blocking`] runs seeded `pinn_step`s
+//! against a shard's resident θ (reverse-over-collapsed-forward, see
+//! docs/training.md), so trained parameters serve subsequent requests.
 //!
 //! The tier is fault-tolerant: shard workers run supervised
 //! (supervisor.rs) so a panic fails its pending requests with typed
@@ -31,7 +34,7 @@ pub mod supervisor;
 pub use dispatcher::{shard_of, SubmitError};
 pub use faults::{FaultKind, FaultPlan, FAULTS_ENV};
 pub use metrics::Metrics;
-pub use request::{EvalReply, EvalRequest, EvalResponse, RouteKey};
+pub use request::{EvalReply, EvalRequest, EvalResponse, RouteKey, TrainOutcome, TrainSpec};
 pub use router::Router;
 pub use server::{Client, ClientConfig, Server, ServerConfig, ServerError};
 pub use service::{model_sigma, model_theta, Service, ServiceConfig};

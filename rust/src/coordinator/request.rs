@@ -47,8 +47,43 @@ pub struct EvalRequest {
     /// Latency budget: the shard flushes this request's route no later
     /// than when the remaining slack would be consumed by execution.
     pub deadline: Duration,
+    /// `Some` turns this request into a training request: the shard runs
+    /// `pinn_step` against its resident θ for the route's network instead
+    /// of evaluating, and replies with per-step losses in
+    /// [`EvalResponse::op`] (`f0` stays empty).  Training requests bypass
+    /// the micro-batcher — they execute on arrival, and the points must
+    /// match a compiled batch size exactly.
+    pub train: Option<TrainSpec>,
     /// Completion channel.
     pub reply: Sender<EvalReply>,
+}
+
+/// What a training request asks the shard to do with its points: run
+/// `steps` seeded `pinn_step`s of `-Δu = f` against the shard's resident
+/// θ (the same θ that serves subsequent evaluations of the route).
+#[derive(Debug, Clone)]
+pub struct TrainSpec {
+    /// Interior forcing values `f(x)`, one per point (shape `[n_points]`).
+    pub forcing: Vec<f32>,
+    /// Optimizer steps to run on this collocation batch.
+    pub steps: usize,
+    /// Learning rate handed to the optimizer.
+    pub lr: f64,
+    /// `"sgd"` or `"adam"` (parsed by [`crate::train::Optimizer::parse`]).
+    pub optimizer: String,
+}
+
+/// The result of [`super::Service::train_blocking`]: the per-step
+/// interior losses (already unpacked from the wire reply) plus the
+/// serving metadata of the underlying request.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    /// Pre-update interior loss at every optimizer step, in step order.
+    pub losses: Vec<f32>,
+    /// Submit → reply, end to end.
+    pub latency_s: f64,
+    /// Shard whose resident θ was trained (the one that serves the route).
+    pub shard: usize,
 }
 
 /// The result for one request.

@@ -19,6 +19,12 @@
 //! backoff, rebuilt bitwise-identically from [`model_theta`] /
 //! [`model_sigma`].  Deterministic fault injection (faults.rs) drives
 //! that machinery in the chaos suite and is free when disabled.
+//!
+//! Besides evaluation, the service serves *training*:
+//! [`Service::train_blocking`] routes a collocation batch + forcing to
+//! the route's shard, which runs seeded `pinn_step`s (reverse-over-
+//! collapsed-forward, see docs/training.md) against its resident θ — the
+//! same θ later evaluations of the route serve, at every batch size.
 
 use std::collections::{btree_map, BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -33,11 +39,12 @@ use super::batcher::plan_blocks;
 use super::dispatcher::{shard_of, Dispatcher, ShardIntake, SubmitError};
 use super::faults::{FaultKind, FaultPlan};
 use super::metrics::Metrics;
-use super::request::{EvalReply, EvalRequest, EvalResponse, RouteKey};
+use super::request::{EvalReply, EvalRequest, EvalResponse, RouteKey, TrainOutcome, TrainSpec};
 use super::router::Router;
 use super::supervisor::{self, HealthBoard};
 use crate::api::{Engine, Precision};
 use crate::runtime::{ArtifactMeta, HostTensor, Registry};
+use crate::train::Optimizer;
 use crate::util::prng::Rng;
 
 /// Service tuning knobs.
@@ -286,6 +293,7 @@ impl Service {
             n_points,
             submitted: Instant::now(),
             deadline,
+            train: None,
             reply: reply_tx,
         };
         let dispatcher = self.dispatcher.as_ref().expect("service running");
@@ -328,6 +336,72 @@ impl Service {
         let shard = shard_of(&route, self.shards);
         let rx = self.submit_with_deadline(route, points, dim, deadline)?;
         self.recv_reply(shard, &rx)
+    }
+
+    /// Run `spec.steps` seeded `pinn_step`s of `-Δu = f` on the shard
+    /// that serves `route`, against its **resident** θ — every later
+    /// evaluation of the route (at any compiled batch size) serves the
+    /// trained parameters.  Training bypasses the micro-batcher: the
+    /// points execute on arrival and must match a compiled batch size
+    /// exactly.  Malformed requests fail typed at admission with
+    /// [`SubmitError::BadTrain`]; a route whose method has no adjoint
+    /// path (nested) fails on the shard with [`SubmitError::RouteFailed`].
+    pub fn train_blocking(
+        &self,
+        route: RouteKey,
+        points: Vec<f32>,
+        dim: usize,
+        spec: TrainSpec,
+    ) -> Result<TrainOutcome> {
+        if !self.router.has_route(&route) {
+            return Err(SubmitError::UnknownRoute { route }.into());
+        }
+        if points.is_empty() || dim == 0 || points.len() % dim != 0 {
+            return Err(SubmitError::BadPayload { len: points.len(), dim }.into());
+        }
+        let n_points = points.len() / dim;
+        let bad = |reason: String| SubmitError::BadTrain { reason };
+        if spec.forcing.len() != n_points {
+            let got = spec.forcing.len();
+            return Err(bad(format!("forcing has {got} values for {n_points} points")).into());
+        }
+        if spec.steps == 0 {
+            return Err(bad("steps must be >= 1".into()).into());
+        }
+        if Optimizer::parse(&spec.optimizer, spec.lr).is_none() {
+            return Err(bad(format!("unknown optimizer {:?} (sgd | adam)", spec.optimizer)).into());
+        }
+        let sizes = self.router.batch_sizes(&route)?;
+        if !sizes.contains(&n_points) {
+            return Err(bad(format!(
+                "training batch {n_points} must equal a compiled batch size (have {sizes:?})"
+            ))
+            .into());
+        }
+        let shard = shard_of(&route, self.shards);
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let req = EvalRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            route,
+            points,
+            n_points,
+            submitted: Instant::now(),
+            // No batcher involvement, so the deadline only labels the
+            // request; admission control still applies as usual.
+            deadline: self.default_deadline,
+            train: Some(spec),
+            reply: reply_tx,
+        };
+        let dispatcher = self.dispatcher.as_ref().expect("service running");
+        if let Err(e) = dispatcher.dispatch(req) {
+            if matches!(e, SubmitError::Overloaded { .. } | SubmitError::ShardFailed { .. }) {
+                self.metrics.record_shed();
+            }
+            return Err(e.into());
+        }
+        self.metrics.record_request(n_points);
+        let resp = self.recv_reply(shard, &reply_rx)?;
+        Ok(TrainOutcome { losses: resp.op, latency_s: resp.latency_s, shard: resp.shard })
     }
 
     fn recv_reply(&self, shard: usize, rx: &Receiver<EvalReply>) -> Result<EvalResponse> {
@@ -386,6 +460,33 @@ struct Pending {
 struct ModelState {
     theta: HostTensor,
     sigma: Option<HostTensor>,
+}
+
+/// Fetch (or lazily build) the resident model for an artifact's network.
+/// Keyed by `(op, dim, widths)` — *not* artifact name — so every batch
+/// variant of a route serves the same θ, and a training request through
+/// one batch size moves the θ that all the others serve.  Initial θ/σ
+/// are pure functions of `(service seed, network shape)` ([`model_theta`]
+/// / [`model_sigma`]), identical on every shard and across supervised
+/// restarts.
+fn resident_model<'a>(
+    models: &'a mut BTreeMap<String, ModelState>,
+    seed: u64,
+    meta: &ArtifactMeta,
+) -> &'a mut ModelState {
+    let key = format!("{}/{}/{:?}", meta.op, meta.dim, meta.widths);
+    match models.entry(key) {
+        btree_map::Entry::Occupied(e) => e.into_mut(),
+        btree_map::Entry::Vacant(v) => {
+            let theta = model_theta(seed, meta);
+            let sigma = if meta.op == "weighted_laplacian" {
+                Some(model_sigma(seed, meta))
+            } else {
+                None
+            };
+            v.insert(ModelState { theta, sigma })
+        }
+    }
 }
 
 /// The shared, immutable context one shard session serves against.
@@ -496,6 +597,14 @@ pub(crate) fn shard_serve_loop(env: &ShardEnv, arrivals: &mut u64, state: &mut S
                         None => {}
                     }
                 }
+                if req.train.is_some() {
+                    // Training executes on arrival — it mutates the
+                    // resident θ, so batching it with (or behind)
+                    // evaluations would make reply values order-
+                    // dependent in ways callers cannot see.
+                    serve_train(env, state, req);
+                    continue;
+                }
                 let route = req.route.clone();
                 state.queues.entry(route.clone()).or_default().push_back(Pending {
                     req,
@@ -602,6 +711,65 @@ fn flush_route(env: &ShardEnv, state: &mut ShardState, route: &RouteKey) {
     }
 }
 
+/// Serve one training request on arrival (no batching): run the
+/// requested `pinn_step`s against this shard's resident θ for the
+/// route's network, so every later evaluation of the route — at any
+/// compiled batch size — serves the trained parameters.  Failures reply
+/// typed per request ([`SubmitError::RouteFailed`], e.g. for a nested
+/// route with no adjoint path); nothing here panics the worker.
+fn serve_train(env: &ShardEnv, state: &mut ShardState, req: EvalRequest) {
+    match run_train_steps(env, state, &req) {
+        Ok(losses) => {
+            let latency = req.submitted.elapsed().as_secs_f64();
+            env.metrics.record_latency(latency);
+            // Mirror the engine gauges: step 1 compiles the forward+
+            // backward pair, steps 2.. must be cache hits.
+            env.metrics.set_engine_shard(state.shard, &env.engine.stats());
+            let _ = req.reply.send(Ok(EvalResponse {
+                id: req.id,
+                f0: Vec::new(),
+                op: losses,
+                latency_s: latency,
+                queue_wait_s: 0.0,
+                served_batch: req.n_points,
+                shard: state.shard,
+            }));
+        }
+        Err(e) => {
+            env.metrics.record_error();
+            let err =
+                SubmitError::RouteFailed { route: req.route.clone(), reason: format!("{e:#}") };
+            eprintln!("shard {}: {err}", state.shard);
+            let _ = req.reply.send(Err(err));
+        }
+    }
+}
+
+/// The fallible half of [`serve_train`]: resolve the artifact at the
+/// request's exact batch size, fetch the resident model, and step it.
+fn run_train_steps(env: &ShardEnv, state: &mut ShardState, req: &EvalRequest) -> Result<Vec<f32>> {
+    let spec = req.train.as_ref().expect("serve_train takes training requests only");
+    let name = env
+        .router
+        .artifact(&req.route, req.n_points)
+        .context("training bypasses the micro-batcher; points must match a compiled batch size")?;
+    let handle = env.engine.operator(name)?;
+    let meta = handle.meta().clone();
+    let mut opt = Optimizer::parse(&spec.optimizer, spec.lr)
+        .with_context(|| format!("unknown optimizer {:?} (sgd | adam)", spec.optimizer))?;
+    let x = HostTensor::new(vec![req.n_points, meta.dim], req.points.clone());
+    let forcing = HostTensor::new(vec![req.n_points, 1], spec.forcing.clone());
+    let mstate = resident_model(&mut state.model_state, state.seed, &meta);
+    let exec_t = Instant::now();
+    let mut losses = Vec::with_capacity(spec.steps);
+    for _ in 0..spec.steps {
+        let loss = env.engine.pinn_step(&handle, &mut mstate.theta, &x, &forcing, &mut opt)?;
+        losses.push(loss as f32);
+    }
+    env.metrics.record_execute(exec_t.elapsed().as_secs_f64());
+    Ok(losses)
+}
+
 /// Plan, gather, execute and scatter one route's pending points.  Errors
 /// bubble to [`flush_route`], which converts them into per-request typed
 /// failures.
@@ -624,21 +792,7 @@ fn serve_queue(
         let meta = handle.meta();
         let dim = meta.dim;
 
-        // Lazily build per-model state: θ and σ are pure functions of
-        // (service seed, network shape), identical on every shard and
-        // across supervised restarts.
-        let mstate = match state.model_state.entry(name.to_string()) {
-            btree_map::Entry::Occupied(e) => e.into_mut(),
-            btree_map::Entry::Vacant(v) => {
-                let theta = model_theta(state.seed, meta);
-                let sigma = if meta.op == "weighted_laplacian" {
-                    Some(model_sigma(state.seed, meta))
-                } else {
-                    None
-                };
-                v.insert(ModelState { theta, sigma })
-            }
-        };
+        let mstate = resident_model(&mut state.model_state, state.seed, meta);
 
         // Gather `used` points from the queue front (requests may split
         // across blocks).
@@ -728,4 +882,79 @@ fn serve_queue(
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_cube_points(rng: &mut Rng, n: usize, dim: usize) -> Vec<f32> {
+        let mut pts = vec![0.0f32; n * dim];
+        for p in pts.iter_mut() {
+            *p = rng.uniform() as f32;
+        }
+        pts
+    }
+
+    #[test]
+    fn training_moves_the_served_model_and_replies_per_step_losses() {
+        let cfg = ServiceConfig { shards: 1, threads_per_shard: 1, ..Default::default() };
+        let svc = Service::start(Registry::builtin(), cfg).unwrap();
+        let route = RouteKey::new("laplacian", "collapsed", "exact");
+        let (n, dim) = (8usize, 16usize);
+        let pts = unit_cube_points(&mut Rng::new(11), n, dim);
+        let before = svc.eval_blocking(route.clone(), pts.clone(), dim).unwrap();
+        let spec =
+            TrainSpec { forcing: vec![1.0; n], steps: 6, lr: 1e-2, optimizer: "sgd".into() };
+        let out = svc.train_blocking(route.clone(), pts.clone(), dim, spec).unwrap();
+        assert_eq!(out.losses.len(), 6, "one pre-update loss per step");
+        assert!(out.losses.iter().all(|l| l.is_finite()), "{:?}", out.losses);
+        assert_eq!(out.shard, 0);
+        // The route's resident θ moved, so the served operator values
+        // move too — training and serving share one model.
+        let after = svc.eval_blocking(route, pts, dim).unwrap();
+        assert_eq!(before.op.len(), after.op.len());
+        assert_ne!(before.op, after.op, "training must move the θ the route serves");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn malformed_training_requests_fail_typed_at_admission() {
+        let cfg = ServiceConfig { shards: 1, threads_per_shard: 1, ..Default::default() };
+        let svc = Service::start(Registry::builtin(), cfg).unwrap();
+        let route = RouteKey::new("laplacian", "collapsed", "exact");
+        let (n, dim) = (8usize, 16usize);
+        let pts = unit_cube_points(&mut Rng::new(3), n, dim);
+        let good =
+            || TrainSpec { forcing: vec![1.0; n], steps: 2, lr: 1e-3, optimizer: "sgd".into() };
+        let bad_train = |res: Result<TrainOutcome>, what: &str| {
+            let e = res.expect_err(what).downcast::<SubmitError>().unwrap();
+            assert!(matches!(e, SubmitError::BadTrain { .. }), "{what}: {e}");
+        };
+        let mut spec = good();
+        spec.forcing.pop();
+        bad_train(svc.train_blocking(route.clone(), pts.clone(), dim, spec), "forcing length");
+        let mut spec = good();
+        spec.steps = 0;
+        bad_train(svc.train_blocking(route.clone(), pts.clone(), dim, spec), "zero steps");
+        let mut spec = good();
+        spec.optimizer = "newton".into();
+        bad_train(svc.train_blocking(route.clone(), pts.clone(), dim, spec), "optimizer name");
+        // Batch 3 is not on the compiled ladder (1/2/4/8/16).
+        let mut spec = good();
+        spec.forcing.truncate(3);
+        let odd = unit_cube_points(&mut Rng::new(4), 3, dim);
+        bad_train(svc.train_blocking(route.clone(), odd, dim, spec), "off-ladder batch");
+        // A nested route has no adjoint path: admission passes, the
+        // shard replies RouteFailed.
+        let nested = RouteKey::new("laplacian", "nested", "exact");
+        let e = svc
+            .train_blocking(nested, pts, dim, good())
+            .expect_err("nested routes cannot train")
+            .downcast::<SubmitError>()
+            .unwrap();
+        assert!(matches!(e, SubmitError::RouteFailed { .. }), "{e}");
+        assert!(e.to_string().contains("adjoint"), "{e}");
+        svc.shutdown();
+    }
 }

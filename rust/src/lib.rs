@@ -33,6 +33,8 @@
 //!   `python/compile/aot.py`.
 //! * [`coordinator`] — the serving layer: router, dynamic batcher, workers
 //!   (consumes [`api::Engine`] internally).
+//! * [`train`] — seeded first-order optimizers (SGD / Adam) over the
+//!   adjoint θ-gradients (see docs/training.md).
 //! * [`bench`] — sweeps, slope fits and table/figure regeneration.
 //! * [`util`] — JSON / CLI / PRNG / stats substrates.
 
@@ -54,4 +56,5 @@ pub mod nested;
 pub mod operators;
 pub mod runtime;
 pub mod taylor;
+pub mod train;
 pub mod util;

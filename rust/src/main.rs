@@ -8,6 +8,7 @@
 //! ctaylor spec [--op helmholtz] [--dim 16] [--c0 2.25] [--c2 1.0]
 //! ctaylor analyze <name|path>...       # HLO memory/FLOP analysis
 //! ctaylor eval --op laplacian --method collapsed [--n 8]
+//!              [--train N [--opt sgd|adam] [--lr 1e-3]]   # pinn_steps, then eval trained θ
 //! ctaylor bench [--which fig1|table1|f2|g3|native|graph|kernels|threads|smoke|coordinator|all]
 //!               [--reps N]
 //! ctaylor bench run --cell <id> [--json] [--warmup N] [--iters N]
@@ -27,7 +28,7 @@ use ctaylor::api::Engine;
 use ctaylor::bench;
 use ctaylor::bench::barometer;
 use ctaylor::bench::serve;
-use ctaylor::coordinator::{RouteKey, Service, ServiceConfig};
+use ctaylor::coordinator::{RouteKey, Service, ServiceConfig, TrainSpec};
 use ctaylor::hlo;
 use ctaylor::operators::interpolation::{compositions, gamma};
 use ctaylor::operators::plan::{HELMHOLTZ_C0, HELMHOLTZ_C2};
@@ -241,11 +242,45 @@ fn cmd_eval(args: &Args) -> Result<()> {
         .context("no artifacts for that route")?;
     let n = args.get_usize("n", 8);
     let seed = args.get_u64("seed", 42);
+    let train_steps = args.get_usize("train", 0);
 
     let svc = Service::start(reg, ServiceConfig::default())?;
     let mut rng = Rng::new(seed);
     let mut pts = vec![0.0f32; n * dim];
-    rng.fill_normal_f32(&mut pts);
+    if train_steps > 0 {
+        // Training collocation points live in the PINN domain [0,1]^D;
+        // the forcing is the manufactured f = D·π²·∏ sin(πxᵢ) of
+        // examples/pinn_poisson.rs, so --train N runs N pinn_steps
+        // against the shard's resident θ before the eval below serves it.
+        for p in pts.iter_mut() {
+            *p = rng.uniform() as f32;
+        }
+        let pi = std::f32::consts::PI;
+        let forcing: Vec<f32> = (0..n)
+            .map(|row| {
+                let prod: f32 =
+                    pts[row * dim..(row + 1) * dim].iter().map(|&v| (pi * v).sin()).product();
+                dim as f32 * pi * pi * prod
+            })
+            .collect();
+        let spec = TrainSpec {
+            forcing,
+            steps: train_steps,
+            lr: args.get_f64("lr", 1e-3),
+            optimizer: args.get_or("opt", "adam").to_string(),
+        };
+        let out = svc.train_blocking(RouteKey::new(&op, &method, &mode), pts.clone(), dim, spec)?;
+        println!(
+            "trained {train_steps} pinn_step(s) on shard {}: interior loss {:.6e} -> {:.6e} \
+             ({:.3}ms)",
+            out.shard,
+            out.losses.first().copied().unwrap_or(f32::NAN),
+            out.losses.last().copied().unwrap_or(f32::NAN),
+            out.latency_s * 1e3
+        );
+    } else {
+        rng.fill_normal_f32(&mut pts);
+    }
     let resp = svc.eval_blocking(RouteKey::new(&op, &method, &mode), pts, dim)?;
     println!("{op}/{method}/{mode}  D={dim}  n={n}  latency={:.3}ms", resp.latency_s * 1e3);
     for i in 0..n.min(8) {

@@ -39,7 +39,9 @@ use crate::mlp::Mlp;
 use crate::nested;
 use crate::operators::plan::{OperatorPlan, HELMHOLTZ_C0, HELMHOLTZ_C2};
 use crate::operators::OperatorSpec;
+use crate::taylor::adjoint;
 use crate::taylor::element::{Element, Precision};
+use crate::taylor::graph::Op as GraphOp;
 use crate::taylor::jet::Collapse;
 use crate::taylor::program::{self, ExecArena, Program};
 use crate::taylor::rewrite;
@@ -160,6 +162,15 @@ impl PrecisionExec for f32 {
     }
 }
 
+/// What a cached executable computes: a forward evaluation (θ embedded
+/// as constants) or a forward+backward training step (θ a runtime input,
+/// outputs `[loss, ∂loss/∂W₀, ∂loss/∂b₀, …]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ProgramKind {
+    Eval,
+    Grad,
+}
+
 /// Typed program-cache key: every dimension that selects a distinct
 /// compiled executable, spelled out instead of packed into a string.
 /// `precision` is part of the identity, so f32 and f64 handles on the
@@ -172,10 +183,14 @@ pub struct ProgramKey {
     pub batch: usize,
     /// Direction count R (shapes the seeds and weight masks).
     pub num_dirs: usize,
-    /// FNV-1a fingerprint of the exact θ bytes.
+    /// FNV-1a fingerprint of the exact θ bytes (0 for [`ProgramKind::Grad`]
+    /// programs, which take θ as a runtime input and never recompile when
+    /// the optimizer moves it).
     pub theta_fp: u64,
     /// Serving element type (and GEMM accumulation width).
     pub precision: Precision,
+    /// Forward evaluation vs forward+backward training pair.
+    pub kind: ProgramKind,
 }
 
 /// One cached program plus the exact θ it was compiled against: keys
@@ -469,6 +484,74 @@ fn compile_route(
     program::compile(&graph, &input_shapes)
 }
 
+/// Trace the θ-parameterized forward (θ as runtime inputs, loss assembled
+/// in-graph), run the §C collapse for the collapsed method, append the
+/// adjoint ([`adjoint::grad`]) to the *same* graph and lower the joint
+/// forward+backward computation to one buffer-planned [`Program`] with
+/// outputs `[loss, ∂loss/∂W₀, ∂loss/∂b₀, …]`.  CSE + liveness inside
+/// `program::compile` plan the saved-activations tape: backward reuses of
+/// forward intermediates become registers held live across the boundary.
+fn compile_grad_route(
+    layer_dims: &[(usize, usize)],
+    plan: &OperatorPlan,
+    batch: usize,
+    dim: usize,
+    mode: Collapse,
+) -> Result<Program> {
+    ensure!(plan.order >= 1, "θ-gradients need a differential operator (order >= 1)");
+    let pt = trace::build_plan_jet_param(layer_dims, plan, batch);
+    let num_dirs = plan.dirs.shape[0];
+    let mut graph = match mode {
+        Collapse::Collapsed => rewrite::collapse(&pt.graph, trace::TAGGED_SLOTS, num_dirs),
+        Collapse::Standard => pt.graph,
+    };
+    // Collapse/dce compact node ids: re-find the θ inputs by slot.
+    let mut wrt = vec![usize::MAX; layer_dims.len() * 2];
+    for (nid, node) in graph.nodes.iter().enumerate() {
+        if let GraphOp::Input { slot } = node.op {
+            for (li, &(ws, bs)) in pt.layer_slots.iter().enumerate() {
+                if slot == ws {
+                    wrt[2 * li] = nid;
+                } else if slot == bs {
+                    wrt[2 * li + 1] = nid;
+                }
+            }
+        }
+    }
+    ensure!(wrt.iter().all(|&w| w != usize::MAX), "θ input pruned from the traced graph");
+    let out_dim = layer_dims.last().expect("at least one layer").1;
+    let mut input_shapes = vec![vec![batch, dim], vec![num_dirs, batch, dim]];
+    for &(i, o) in layer_dims {
+        input_shapes.push(vec![i, o]);
+        input_shapes.push(vec![o]);
+    }
+    input_shapes.push(vec![batch, out_dim]);
+    let loss = graph.outputs[0];
+    let grads = adjoint::grad(&mut graph, &input_shapes, loss, &wrt)?;
+    let mut outs = vec![loss];
+    outs.extend(grads);
+    graph.outputs = outs;
+    program::compile(&graph, &input_shapes)
+}
+
+/// Split a flat θ into per-layer W `[I, O]` / b `[O]` runtime-input
+/// tensors (the same `model.py` layout [`mlp_from_theta`] unpacks).
+fn theta_layer_tensors(layer_dims: &[(usize, usize)], theta: &[f32]) -> Result<Vec<Tensor>> {
+    let want: usize = layer_dims.iter().map(|&(i, o)| i * o + o).sum();
+    ensure!(theta.len() == want, "theta length {} != layer dims total {want}", theta.len());
+    let mut out = Vec::with_capacity(layer_dims.len() * 2);
+    let mut off = 0usize;
+    for &(i, o) in layer_dims {
+        let w = theta[off..off + i * o].iter().map(|&v| v as f64).collect();
+        out.push(Tensor::new(vec![i, o], w));
+        off += i * o;
+        let b = theta[off..off + o].iter().map(|&v| v as f64).collect();
+        out.push(Tensor::new(vec![o], b));
+        off += o;
+    }
+    Ok(out)
+}
+
 /// Minimum rows a shard must keep: below this the pool dispatch overhead
 /// beats the row-parallel win.
 const MIN_SHARD_ROWS: usize = 4;
@@ -612,6 +695,7 @@ fn execute_taylor_typed<E: PrecisionExec>(
         num_dirs,
         theta_fp,
         precision,
+        kind: ProgramKind::Eval,
     };
     let has_dirs = plan.order >= 1;
     let prog = cache.get_or_compile::<E>(key, theta, || {
@@ -651,6 +735,114 @@ fn execute_taylor_typed<E: PrecisionExec>(
     Ok((E::into_f64_tensor(f0), E::into_f64_tensor(opv)))
 }
 
+/// One training-step evaluation: the interior residual loss
+/// `mean_B((L u + f)²)` plus `∂loss/∂θ`, through the cached joint
+/// forward+backward program.  θ is a *runtime input* of the grad program
+/// — the cache entry is keyed with [`ProgramKind::Grad`], a zero θ
+/// fingerprint and empty θ bytes, so optimizer steps after the first are
+/// pure cache hits (the zero-recompile contract docs/training.md pins).
+/// Runs unsharded: the loss reduces over the whole batch, so per-shard
+/// gradients cannot be stitched row-wise.  Returns `(loss, grad)` with
+/// `grad` flat in the `model.py` θ layout.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_residual_grad(
+    route_key: &str,
+    layer_dims: &[(usize, usize)],
+    x0: &Tensor,
+    forcing: &Tensor,
+    spec: &OperatorSpec,
+    mode: Collapse,
+    precision: Precision,
+    fresh_dirs: bool,
+    cache: &ProgramCache,
+    theta: &[f32],
+) -> Result<(f64, Vec<f32>)> {
+    match precision {
+        Precision::F64 => execute_residual_grad_typed::<f64>(
+            route_key, layer_dims, x0, forcing, spec, mode, precision, fresh_dirs, cache, theta,
+        ),
+        Precision::F32 { .. } => execute_residual_grad_typed::<f32>(
+            route_key, layer_dims, x0, forcing, spec, mode, precision, fresh_dirs, cache, theta,
+        ),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_residual_grad_typed<E: PrecisionExec>(
+    route_key: &str,
+    layer_dims: &[(usize, usize)],
+    x0: &Tensor,
+    forcing: &Tensor,
+    spec: &OperatorSpec,
+    mode: Collapse,
+    precision: Precision,
+    fresh_dirs: bool,
+    cache: &ProgramCache,
+    theta: &[f32],
+) -> Result<(f64, Vec<f32>)> {
+    ensure!(x0.rank() == 2, "{route_key}: x must be [B, D]");
+    ensure!(!layer_dims.is_empty(), "{route_key}: empty layer_dims");
+    let (batch, dim) = (x0.shape[0], x0.shape[1]);
+    ensure!(
+        layer_dims[0].0 == dim,
+        "{route_key}: layer 0 expects D={}, x has D={dim}",
+        layer_dims[0].0
+    );
+    let out_dim = layer_dims.last().expect("non-empty").1;
+    ensure!(
+        out_dim == 1,
+        "{route_key}: residual grad needs a scalar-output network, got O={out_dim}"
+    );
+    ensure!(
+        forcing.shape == [batch, out_dim],
+        "{route_key}: forcing must be [B={batch}, O={out_dim}], got {:?}",
+        forcing.shape
+    );
+    let plan = spec.compile();
+    let num_dirs = plan.dirs.shape[0];
+    let key = ProgramKey {
+        route: route_key.to_string(),
+        batch,
+        num_dirs,
+        theta_fp: 0,
+        precision,
+        kind: ProgramKind::Grad,
+    };
+    let prog = cache.get_or_compile::<E>(key, &[], || {
+        let program =
+            E::adapt_program(compile_grad_route(layer_dims, &plan, batch, dim, mode)?, precision);
+        let bdirs = if !fresh_dirs {
+            Some(E::from_f64_tensor(plan.dirs.broadcast_rows(batch)))
+        } else {
+            None
+        };
+        Ok(CachedProgram::new(program, bdirs))
+    })?;
+    let fresh =
+        if fresh_dirs { Some(E::from_f64_tensor(plan.dirs.broadcast_rows(batch))) } else { None };
+
+    let thetas: Vec<Tensor<E>> =
+        theta_layer_tensors(layer_dims, theta)?.into_iter().map(E::from_f64_tensor).collect();
+    let x0e = E::as_elem(x0);
+    let fe = E::as_elem(forcing);
+    let mut inputs: Vec<&Tensor<E>> = vec![x0e.as_ref()];
+    inputs.push(fresh.as_ref().or(prog.bdirs.as_ref()).expect("direction input"));
+    inputs.extend(thetas.iter());
+    inputs.push(fe.as_ref());
+    let mut outs = Vec::new();
+    prog.run(&inputs, &mut outs)?;
+    ensure!(
+        outs.len() == 1 + 2 * layer_dims.len(),
+        "{route_key}: grad program must emit [loss, per-layer ∂W/∂b]"
+    );
+    let loss = outs[0].data.iter().map(|v| v.to_f64()).sum::<f64>();
+    let mut grad = Vec::with_capacity(theta.len());
+    for t in &outs[1..] {
+        grad.extend(t.data.iter().map(|&v| v.to_f64() as f32));
+    }
+    Ok((loss, grad))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -682,7 +874,14 @@ mod tests {
     }
 
     fn test_key(route: &str, precision: Precision) -> ProgramKey {
-        ProgramKey { route: route.to_string(), batch: 1, num_dirs: 2, theta_fp: 0, precision }
+        ProgramKey {
+            route: route.to_string(),
+            batch: 1,
+            num_dirs: 2,
+            theta_fp: 0,
+            precision,
+            kind: ProgramKind::Eval,
+        }
     }
 
     #[test]
@@ -779,6 +978,91 @@ mod tests {
             );
         }
         assert_eq!(seen.len(), 16, "expected every (op, method, mode) taylor route");
+    }
+
+    fn grad_fixture() -> (Vec<(usize, usize)>, Vec<f32>, Tensor, Tensor) {
+        let layer_dims = vec![(3usize, 6usize), (6, 1)];
+        let theta_len: usize = layer_dims.iter().map(|&(i, o)| i * o + o).sum();
+        let mut rng = crate::util::prng::Rng::new(17);
+        let theta: Vec<f32> =
+            (0..theta_len).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect();
+        let batch = 4;
+        let x0 = Tensor::new(
+            vec![batch, 3],
+            (0..batch * 3).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+        );
+        let forcing = Tensor::new(
+            vec![batch, 1],
+            (0..batch).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+        );
+        (layer_dims, theta, x0, forcing)
+    }
+
+    #[test]
+    fn grad_steps_after_the_first_never_recompile() {
+        // The zero-recompile contract: θ is a runtime input of the grad
+        // program, so moving it with an optimizer step must hit the same
+        // cached forward+backward pair (1 miss total, then only hits).
+        let cache = ProgramCache::new();
+        let spec = OperatorSpec::laplacian(3);
+        let (layer_dims, mut theta, x0, forcing) = grad_fixture();
+        let (l0, g0) = execute_residual_grad(
+            "pinn", &layer_dims, &x0, &forcing, &spec, Collapse::Collapsed, Precision::F64,
+            false, &cache, &theta,
+        )
+        .unwrap();
+        assert!(l0.is_finite() && l0 > 0.0, "interior loss must be a positive scalar");
+        assert_eq!(g0.len(), theta.len(), "grad is flat in the θ layout");
+        for (t, g) in theta.iter_mut().zip(&g0) {
+            *t -= 1e-3 * g;
+        }
+        let (l1, _) = execute_residual_grad(
+            "pinn", &layer_dims, &x0, &forcing, &spec, Collapse::Collapsed, Precision::F64,
+            false, &cache, &theta,
+        )
+        .unwrap();
+        assert_eq!(cache.stats(), (1, 1), "step 2 must reuse the compiled pair");
+        assert_eq!(cache.len(), 1, "one grad program serves every step");
+        assert!(l1 < l0, "a small SGD step along -∇ must reduce the loss: {l1} !< {l0}");
+    }
+
+    #[test]
+    fn compiled_grad_matches_finite_differences_spot_checks() {
+        // The VM path (MatMulDyn/MatMulTN/Transpose2 instructions + arena
+        // planning) against central finite differences of its own loss.
+        // The graph-level adjoint is FD-validated exhaustively in
+        // taylor::adjoint; this pins the compiled execution of it.
+        let cache = ProgramCache::new();
+        let spec = OperatorSpec::laplacian(3);
+        let (layer_dims, theta, x0, forcing) = grad_fixture();
+        for mode in [Collapse::Standard, Collapse::Collapsed] {
+            let loss_of = |th: &[f32]| -> f64 {
+                execute_residual_grad(
+                    "pinn-fd", &layer_dims, &x0, &forcing, &spec, mode, Precision::F64, false,
+                    &cache, th,
+                )
+                .unwrap()
+                .0
+            };
+            let (_, g) = execute_residual_grad(
+                "pinn-fd", &layer_dims, &x0, &forcing, &spec, mode, Precision::F64, false,
+                &cache, &theta,
+            )
+            .unwrap();
+            let eps = 1e-3f32;
+            for k in [0usize, 7, theta.len() / 2, theta.len() - 1] {
+                let mut plus = theta.clone();
+                plus[k] += eps;
+                let mut minus = theta.clone();
+                minus[k] -= eps;
+                let fd = (loss_of(&plus) - loss_of(&minus)) / ((plus[k] - minus[k]) as f64);
+                assert!(
+                    (g[k] as f64 - fd).abs() < 1e-3 * (1.0 + fd.abs()),
+                    "{mode:?} θ[{k}]: adjoint {} vs fd {fd}",
+                    g[k]
+                );
+            }
+        }
     }
 
     #[test]

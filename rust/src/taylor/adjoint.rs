@@ -1,0 +1,359 @@
+//! The transpose pass: reverse-mode θ-gradients over a collapsed forward
+//! graph (reverse-over-collapsed-forward, the ROADMAP's native-training
+//! item).
+//!
+//! [`grad`] appends the adjoint of a scalar loss output to the *same*
+//! graph the forward trace and the §C collapse rewrites produced, walking
+//! the nodes in reverse topological order and emitting the transpose of
+//! each op as ordinary graph nodes.  Because forward and backward live in
+//! one graph, the existing compiler does the tape planning for free:
+//!
+//! * CSE identifies the backward pass's reuses of forward intermediates
+//!   (tanh activations, the u = 1 − t² chains) with the forward nodes —
+//!   the "saved-activations tape" is exactly the set of forward registers
+//!   the liveness pass keeps alive into the backward section;
+//! * const-fold and the algebraic identities clean up the seed and the
+//!   zero/one adjoint chains;
+//! * the liveness-planned arena then executes forward+backward as one
+//!   flat [`super::program::Program`] with zero steady-state allocations.
+//!
+//! Transpose rules (v̄ denotes the adjoint arriving at a node's output):
+//!
+//! | forward             | adjoint of args                                  |
+//! |---------------------|--------------------------------------------------|
+//! | `Replicate{r}`      | `SumDirs(v̄)`                                     |
+//! | `SumDirs`           | `Replicate(v̄, r)`                                |
+//! | `SumDirsW(w)`       | `Replicate(v̄, r) ⊙ w` (w as a leading-axis const)|
+//! | `Add`/`Sub`         | `±v̄`, suffix-reduced to each operand's shape     |
+//! | `Mul(a, b)`         | `v̄⊙b → ā`, `v̄⊙a → b̄` (suffix-reduced)           |
+//! | `Scale`/`AddConst`  | `s·v̄` / `v̄`                                      |
+//! | `Unary(g)`          | `v̄ ⊙ g′(x)` (g′ built from graph nodes)          |
+//! | `MatMul{W}`         | `v̄ @ Wᵀ`                                         |
+//! | `AddBias`           | `v̄` (constant bias: no parameter target)         |
+//! | `MatMulDyn(x, W)`   | `v̄ @ Wᵀ → x̄` (`Transpose2`), `xᵀ·v̄ → W̄` (TN)     |
+//!
+//! Multi-use forward nodes accumulate their users' contributions with
+//! `Add` nodes; `Input` adjoints are collected per requested `wrt` node.
+
+use anyhow::{bail, ensure, Result};
+
+use super::graph::{Graph, NodeId, Op, UnaryKind};
+use super::interp;
+use super::tensor::Tensor;
+
+/// Append the adjoint of `loss` (a single-element output of `graph`) with
+/// respect to each node in `wrt` (which must be `Input` nodes — the θ
+/// slots of a [`super::trace::build_plan_jet_param`] trace).  Returns the
+/// node id of `∂loss/∂wrt[i]` for each target, shaped like the target.
+///
+/// Call this *after* `rewrite::collapse`: the collapse passes only know
+/// how to push sums through the forward ops, and the adjoint reuses the
+/// collapsed forward's intermediates directly.
+pub fn grad(
+    graph: &mut Graph,
+    input_shapes: &[Vec<usize>],
+    loss: NodeId,
+    wrt: &[NodeId],
+) -> Result<Vec<NodeId>> {
+    let shapes = interp::infer_shapes(graph, input_shapes)?;
+    ensure!(
+        shapes[loss].iter().product::<usize>() == 1,
+        "adjoint seed must be a single-element loss, got shape {:?}",
+        shapes[loss]
+    );
+    for &t in wrt {
+        ensure!(
+            matches!(graph.nodes[t].op, Op::Input { .. }),
+            "wrt targets must be Input nodes"
+        );
+    }
+    let n = graph.nodes.len();
+    let mut adj: Vec<Option<NodeId>> = vec![None; n];
+    adj[loss] = Some(graph.constant(Tensor::new(shapes[loss].clone(), vec![1.0])));
+
+    // Accumulate a contribution into a forward node's adjoint slot.
+    fn accum(g: &mut Graph, adj: &mut [Option<NodeId>], target: usize, contrib: NodeId) {
+        adj[target] = Some(match adj[target] {
+            Some(prev) => g.add(prev, contrib),
+            None => contrib,
+        });
+    }
+
+    for id in (0..n).rev() {
+        let Some(v) = adj[id] else { continue };
+        let node = graph.nodes[id].clone();
+        // Reduce an adjoint shaped like node `id` down to `arg`'s shape:
+        // suffix broadcasting in the forward direction transposes to a
+        // sum over the extra leading axes.
+        let reduce = |g: &mut Graph, mut a: NodeId, arg: usize| -> NodeId {
+            for _ in shapes[arg].len()..shapes[id].len() {
+                a = g.sum_dirs(a);
+            }
+            a
+        };
+        match node.op {
+            Op::Input { .. } | Op::Const(_) => {}
+            Op::Replicate { .. } => {
+                let s = graph.sum_dirs(v);
+                accum(graph, &mut adj, node.args[0], s);
+            }
+            Op::SumDirs => {
+                let r = shapes[node.args[0]][0];
+                let rep = graph.replicate(v, r);
+                accum(graph, &mut adj, node.args[0], rep);
+            }
+            Op::SumDirsW(ref w) => {
+                // Σ_r w_r·x_r transposes to x̄_r = w_r·v̄: replicate the
+                // adjoint across directions, then scale per leading row
+                // with a constant shaped like the input (suffix
+                // broadcasting cannot express a leading-axis weight).
+                let in_shape = &shapes[node.args[0]];
+                let rest: usize = in_shape[1..].iter().product();
+                let mut data = Vec::with_capacity(in_shape.iter().product());
+                for &wr in w {
+                    data.extend(std::iter::repeat(wr).take(rest));
+                }
+                let wc = graph.constant(Tensor::new(in_shape.clone(), data));
+                let rep = graph.replicate(v, in_shape[0]);
+                let m = graph.mul(rep, wc);
+                accum(graph, &mut adj, node.args[0], m);
+            }
+            Op::Add => {
+                for &a in &node.args {
+                    let r = reduce(graph, v, a);
+                    accum(graph, &mut adj, a, r);
+                }
+            }
+            Op::Sub => {
+                let ra = reduce(graph, v, node.args[0]);
+                accum(graph, &mut adj, node.args[0], ra);
+                let neg = graph.scale(v, -1.0);
+                let rb = reduce(graph, neg, node.args[1]);
+                accum(graph, &mut adj, node.args[1], rb);
+            }
+            Op::Mul => {
+                let (a, b) = (node.args[0], node.args[1]);
+                let ma = graph.mul(v, b);
+                let ra = reduce(graph, ma, a);
+                accum(graph, &mut adj, a, ra);
+                let mb = graph.mul(v, a);
+                let rb = reduce(graph, mb, b);
+                accum(graph, &mut adj, b, rb);
+            }
+            Op::Scale(s) => {
+                let c = graph.scale(v, s);
+                accum(graph, &mut adj, node.args[0], c);
+            }
+            Op::AddConst(_) => accum(graph, &mut adj, node.args[0], v),
+            Op::Unary(k) => {
+                let x = node.args[0];
+                let d = match k {
+                    UnaryKind::Tanh => {
+                        // tanh′ = 1 − t², with t the forward output node:
+                        // CSE merges this chain with the forward trace's
+                        // u-channel when one exists.
+                        let sq = graph.mul(id, id);
+                        let negsq = graph.scale(sq, -1.0);
+                        graph.add_const(negsq, 1.0)
+                    }
+                    UnaryKind::Sin => graph.unary(UnaryKind::Cos, x),
+                    UnaryKind::Cos => {
+                        let s = graph.unary(UnaryKind::Sin, x);
+                        graph.scale(s, -1.0)
+                    }
+                    UnaryKind::Exp => id, // exp′ = exp, already computed
+                    UnaryKind::Neg => {
+                        let c = graph.scale(v, -1.0);
+                        accum(graph, &mut adj, x, c);
+                        continue;
+                    }
+                };
+                let m = graph.mul(v, d);
+                accum(graph, &mut adj, x, m);
+            }
+            Op::MatMul { ref w } => {
+                let wt = w.transpose2();
+                let m = graph.matmul(v, wt);
+                accum(graph, &mut adj, node.args[0], m);
+            }
+            Op::AddBias { .. } => accum(graph, &mut adj, node.args[0], v),
+            Op::MatMulDyn => {
+                let (x, w) = (node.args[0], node.args[1]);
+                let wt = graph.transpose2(w);
+                let mx = graph.matmul_dyn(v, wt);
+                accum(graph, &mut adj, x, mx);
+                let mw = graph.matmul_tn(x, v);
+                accum(graph, &mut adj, w, mw);
+            }
+            Op::MatMulTN | Op::Transpose2 => {
+                bail!("adjoint-of-adjoint ops are not differentiable targets")
+            }
+        }
+    }
+
+    let mut grads = Vec::with_capacity(wrt.len());
+    for &t in wrt {
+        grads.push(match adj[t] {
+            Some(a) => a,
+            // An unreachable parameter gets a structural zero gradient.
+            None => graph.constant(Tensor::zeros(&shapes[t])),
+        });
+    }
+    Ok(grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlp::Mlp;
+    use crate::operators::plan::OperatorSpec;
+    use crate::taylor::interp::eval;
+    use crate::taylor::rewrite::collapse;
+    use crate::taylor::trace::{build_plan_jet_param, TAGGED_SLOTS};
+    use crate::util::prng::Rng;
+
+    /// Flatten an MLP's (W, b) pairs into per-slot input tensors.
+    fn theta_inputs(mlp: &Mlp) -> Vec<Tensor> {
+        let mut out = Vec::new();
+        for (w, b) in &mlp.layers {
+            out.push(w.clone());
+            out.push(b.clone());
+        }
+        out
+    }
+
+    /// The adjoint θ-gradient of the interior residual loss matches
+    /// central finite differences, for both the standard and collapsed
+    /// forward graphs (the adjoint is built on whatever graph it is
+    /// handed).
+    #[test]
+    fn param_laplacian_grad_matches_finite_differences() {
+        let (dim, batch) = (3, 4);
+        let mut rng = Rng::new(11);
+        let mlp = Mlp::init(&mut rng, dim, &[6, 5, 1], batch);
+        let plan = OperatorSpec::laplacian(dim).compile();
+        let layer_dims: Vec<(usize, usize)> =
+            mlp.layers.iter().map(|(w, _)| (w.shape[0], w.shape[1])).collect();
+
+        let x0 = mlp.random_input(&mut rng);
+        let dirs = plan.dirs.broadcast_rows(batch);
+        let mut forcing = Tensor::zeros(&[batch, 1]);
+        for v in forcing.data.iter_mut() {
+            *v = rng.uniform_in(-1.0, 1.0);
+        }
+
+        for collapsed in [false, true] {
+            let pt = build_plan_jet_param(&layer_dims, &plan, batch);
+            let mut g = if collapsed {
+                collapse(&pt.graph, TAGGED_SLOTS, plan.dirs.shape[0])
+            } else {
+                pt.graph.clone()
+            };
+            // Collapse/dce compact node ids; θ inputs are re-found by slot.
+            let mut wrt = vec![usize::MAX; pt.layer_slots.len() * 2];
+            for (nid, node) in g.nodes.iter().enumerate() {
+                if let Op::Input { slot } = node.op {
+                    for (li, &(ws, bs)) in pt.layer_slots.iter().enumerate() {
+                        if slot == ws {
+                            wrt[2 * li] = nid;
+                        } else if slot == bs {
+                            wrt[2 * li + 1] = nid;
+                        }
+                    }
+                }
+            }
+            assert!(wrt.iter().all(|&w| w != usize::MAX));
+
+            let theta = theta_inputs(&mlp);
+            let mut inputs = vec![x0.clone(), dirs.clone()];
+            inputs.extend(theta.iter().cloned());
+            inputs.push(forcing.clone());
+            let input_shapes: Vec<Vec<usize>> =
+                inputs.iter().map(|t| t.shape.clone()).collect();
+
+            let loss = g.outputs[0];
+            let grads = grad(&mut g, &input_shapes, loss, &wrt).unwrap();
+            let mut outs = vec![loss];
+            outs.extend(&grads);
+            g.outputs = outs;
+            let got = eval(&g, &inputs).unwrap();
+
+            // Central finite differences on the forward loss.
+            let fwd = build_plan_jet_param(&layer_dims, &plan, batch);
+            let loss_at = |inputs: &[Tensor]| -> f64 {
+                eval(&fwd.graph, inputs).unwrap()[0].data[0]
+            };
+            let eps = 1e-5;
+            for (gi, &t) in wrt.iter().enumerate() {
+                let slot = match g.nodes[t].op {
+                    Op::Input { slot } => slot,
+                    _ => unreachable!(),
+                };
+                let gt = &got[1 + gi];
+                assert_eq!(gt.shape, inputs[slot].shape, "grad {gi} shape");
+                for k in 0..gt.data.len() {
+                    let mut plus = inputs.to_vec();
+                    plus[slot].data[k] += eps;
+                    let mut minus = inputs.to_vec();
+                    minus[slot].data[k] -= eps;
+                    let fd = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps);
+                    assert!(
+                        (gt.data[k] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+                        "collapsed={collapsed} grad {gi}[{k}]: adjoint {} vs fd {fd}",
+                        gt.data[k]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Transpose rules on a hand-built graph covering Sub, Scale, Unary
+    /// and broadcasting Add against finite differences.
+    #[test]
+    fn elementwise_rules_match_finite_differences() {
+        let mut g = Graph::default();
+        let x = g.input(0); // [2, 3]
+        let b = g.input(1); // [3]
+        let s = g.add(x, b);
+        let t = g.unary(UnaryKind::Sin, s);
+        let e = g.unary(UnaryKind::Exp, x);
+        let d = g.sub(t, e);
+        let sc = g.scale(d, 0.5);
+        let sq = g.mul(sc, sc);
+        let row = g.sum_dirs(sq); // [3]
+        let one = g.sum_dirs(row); // [] — scalar-ish via leading sums
+        g.outputs = vec![one];
+        let shapes = vec![vec![2, 3], vec![3]];
+        let wrt = vec![x, b];
+        let loss = g.outputs[0];
+        let mut ag = g.clone();
+        let grads = grad(&mut ag, &shapes, loss, &wrt).unwrap();
+        let mut outs = vec![loss];
+        outs.extend(&grads);
+        ag.outputs = outs;
+
+        let xs = Tensor::new(vec![2, 3], vec![0.3, -0.7, 1.1, 0.2, -0.1, 0.9]);
+        let bs = Tensor::new(vec![3], vec![0.5, -0.25, 0.75]);
+        let inputs = vec![xs, bs];
+        let got = eval(&ag, &inputs).unwrap();
+        let loss_at =
+            |inputs: &[Tensor]| -> f64 { eval(&g, inputs).unwrap()[0].data[0] };
+        let eps = 1e-6;
+        for (gi, slot) in [0usize, 1].iter().enumerate() {
+            let gt = &got[1 + gi];
+            assert_eq!(gt.shape, inputs[*slot].shape);
+            for k in 0..gt.data.len() {
+                let mut plus = inputs.clone();
+                plus[*slot].data[k] += eps;
+                let mut minus = inputs.clone();
+                minus[*slot].data[k] -= eps;
+                let fd = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps);
+                assert!(
+                    (gt.data[k] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "grad {gi}[{k}]: {} vs fd {fd}",
+                    gt.data[k]
+                );
+            }
+        }
+    }
+}

@@ -66,6 +66,17 @@ pub enum Op {
     MatMul { w: Tensor },
     /// x + b broadcast over the trailing axis.
     AddBias { b: Tensor },
+    /// args [x, w]: x @ w on the trailing axis with the weight coming
+    /// from a graph node (a runtime input in θ-parameterized traces, so
+    /// optimizer steps never recompile).
+    MatMulDyn,
+    /// args [a, b]: Aᵀ·B over flattened leading axes — a `[.., M]` and
+    /// b `[.., N]` (same leading extents L) contract to `[M, N]`.  The
+    /// weight-gradient contraction of the adjoint pass.
+    MatMulTN,
+    /// `[r, c] -> [c, r]`: 2-D transpose (Wᵀ for the adjoint of a
+    /// dynamic matmul).
+    Transpose2,
 }
 
 #[derive(Debug, Clone)]
@@ -153,6 +164,18 @@ impl Graph {
 
     pub fn add_bias(&mut self, x: NodeId, b: Tensor) -> NodeId {
         self.push(Op::AddBias { b }, vec![x])
+    }
+
+    pub fn matmul_dyn(&mut self, x: NodeId, w: NodeId) -> NodeId {
+        self.push(Op::MatMulDyn, vec![x, w])
+    }
+
+    pub fn matmul_tn(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Op::MatMulTN, vec![a, b])
+    }
+
+    pub fn transpose2(&mut self, x: NodeId) -> NodeId {
+        self.push(Op::Transpose2, vec![x])
     }
 
     // -- analysis -------------------------------------------------------------

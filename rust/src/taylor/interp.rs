@@ -60,6 +60,9 @@ pub fn eval(graph: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
             }
             Op::MatMul { w } => Val::Owned(arg(0).matmul(w)),
             Op::AddBias { b } => Val::Owned(arg(0).add_bias(b)),
+            Op::MatMulDyn => Val::Owned(arg(0).matmul(arg(1))),
+            Op::MatMulTN => Val::Owned(arg(0).matmul_tn(arg(1))),
+            Op::Transpose2 => Val::Owned(arg(0).transpose2()),
         };
         vals[id] = Some(v);
     }
@@ -88,6 +91,19 @@ pub fn flops(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<u64> {
                 let rows: u64 =
                     shapes[node.args[0]].iter().product::<usize>() as u64 / w.shape[0] as u64;
                 2 * rows * (w.shape[0] * w.shape[1]) as u64
+            }
+            Op::MatMulDyn => {
+                let w = &shapes[node.args[1]];
+                let rows: u64 =
+                    shapes[node.args[0]].iter().product::<usize>() as u64 / w[0] as u64;
+                2 * rows * (w[0] * w[1]) as u64
+            }
+            Op::MatMulTN => {
+                let (a, b) = (&shapes[node.args[0]], &shapes[node.args[1]]);
+                let m = *a.last().expect("matmul_tn rank >= 1") as u64;
+                let n = *b.last().expect("matmul_tn rank >= 1") as u64;
+                let l = a.iter().product::<usize>() as u64 / m.max(1);
+                2 * l * m * n
             }
             Op::SumDirs => shapes[node.args[0]].iter().product::<usize>() as u64,
             // multiply-accumulate per input element
@@ -128,6 +144,20 @@ pub fn infer_shapes(graph: &Graph, input_shapes: &[Vec<usize>]) -> Result<Vec<Ve
                 s
             }
             Op::AddBias { .. } => arg(0).clone(),
+            Op::MatMulDyn => {
+                let mut s = arg(0).clone();
+                *s.last_mut().expect("matmul rank >= 1") = arg(1)[1];
+                s
+            }
+            Op::MatMulTN => {
+                let m = *arg(0).last().expect("matmul_tn rank >= 1");
+                let n = *arg(1).last().expect("matmul_tn rank >= 1");
+                vec![m, n]
+            }
+            Op::Transpose2 => {
+                let s = arg(0);
+                vec![s[1], s[0]]
+            }
         };
     }
     Ok(shapes)

@@ -11,6 +11,9 @@
 //!   plan-driven vanilla-Taylor tracer and the reference interpreter.
 //! * [`rewrite`] — the §C collapse passes (replicate-push-down, weighted
 //!   sum-push-up).
+//! * [`adjoint`] — the transpose pass: reverse-over-collapsed-forward
+//!   θ-gradients appended to a traced graph (the training subsystem's
+//!   core; see docs/training.md).
 //! * [`program`] — the graph compiler: CSE + constant folding + fused
 //!   elementwise chains + liveness-planned buffer arena, executed by an
 //!   in-place VM (the production path behind `runtime::native`).
@@ -18,6 +21,7 @@
 //!   `hlo::analyzer` memory proxies for builtin artifacts.
 //! * [`count`] — the paper's propagated-vector cost model (table F2).
 
+pub mod adjoint;
 pub mod count;
 pub mod element;
 pub mod graph;

@@ -103,6 +103,14 @@ pub enum Instr {
     Ew { src: Operand, chain: Vec<EwOp>, dst: usize },
     MatMul { src: Operand, w: usize, dst: usize },
     AddBias { src: Operand, b: usize, dst: usize },
+    /// `a @ w` with the weight read from an operand (a runtime input in
+    /// θ-parameterized programs) instead of the constant table.
+    MatMulDyn { a: Operand, w: Operand, dst: usize },
+    /// `aᵀ · b` over flattened leading axes (the adjoint's weight-
+    /// gradient contraction); `dst` never aliases a source.
+    MatMulTN { a: Operand, b: Operand, dst: usize },
+    /// 2-D transpose `[r, c] -> [c, r]`; `dst` never aliases `src`.
+    Transpose2 { src: Operand, dst: usize },
     /// Fused tanh-jet: one pass over `src` computing `t = tanh(x)` once
     /// per element and writing every materialized derivative channel via
     /// the closed-form u = 1 − t² recurrence.  `dsts[m]` is the register
@@ -120,7 +128,10 @@ impl Instr {
             | Instr::Bin { dst, .. }
             | Instr::Ew { dst, .. }
             | Instr::MatMul { dst, .. }
-            | Instr::AddBias { dst, .. } => *dst,
+            | Instr::AddBias { dst, .. }
+            | Instr::MatMulDyn { dst, .. }
+            | Instr::MatMulTN { dst, .. }
+            | Instr::Transpose2 { dst, .. } => *dst,
             Instr::JetTanh { .. } => unreachable!("JetTanh writes multiple destinations"),
         }
     }
@@ -184,6 +195,9 @@ fn fold(op: &Op, args: &[&Tensor]) -> Option<Tensor> {
         }
         Op::MatMul { w } => args[0].matmul(w),
         Op::AddBias { b } => args[0].add_bias(b),
+        Op::MatMulDyn => args[0].matmul(args[1]),
+        Op::MatMulTN => args[0].matmul_tn(args[1]),
+        Op::Transpose2 => args[0].transpose2(),
         Op::Input { .. } | Op::Const(_) => return None,
     })
 }
@@ -230,6 +244,9 @@ fn cse_key(op: &Op, args: &[usize]) -> Option<String> {
         Op::Scale(s) => format!("x{:x}:{}", s.to_bits(), args[0]),
         Op::AddConst(s) => format!("a{:x}:{}", s.to_bits(), args[0]),
         Op::Unary(k) => format!("u{k:?}:{}", args[0]),
+        Op::MatMulDyn => format!("md{},{}", args[0], args[1]),
+        Op::MatMulTN => format!("mt{},{}", args[0], args[1]),
+        Op::Transpose2 => format!("t2:{}", args[0]),
         Op::MatMul { .. } | Op::AddBias { .. } | Op::Const(_) => return None,
     })
 }
@@ -736,6 +753,19 @@ pub fn compile_with(
                 b: intern_tensor(&mut consts, b),
                 dst,
             },
+            Op::MatMulDyn => Instr::MatMulDyn {
+                a: operand_of(srcs[0], &oper, &reg_of),
+                w: operand_of(srcs[1], &oper, &reg_of),
+                dst,
+            },
+            Op::MatMulTN => Instr::MatMulTN {
+                a: operand_of(srcs[0], &oper, &reg_of),
+                b: operand_of(srcs[1], &oper, &reg_of),
+                dst,
+            },
+            Op::Transpose2 => {
+                Instr::Transpose2 { src: operand_of(srcs[0], &oper, &reg_of), dst }
+            }
             Op::Input { .. } | Op::Const(_) => unreachable!("handled above"),
         };
         instrs.push(instr);
@@ -1042,6 +1072,39 @@ impl<E: Element> Program<E> {
                         *o = xv + bv;
                     }
                 }
+            }
+            Instr::MatMulDyn { a, w, .. } => {
+                let x = resolve(*a, regs, inputs, &self.consts);
+                let wt = resolve(*w, regs, inputs, &self.consts);
+                let (i, o_) = (wt.shape[0], wt.shape[1]);
+                let rows = x.data.len() / i.max(1);
+                let acc = self.accumulate_f64;
+                kernels::gemm_with(rows, i, o_, &x.data, &wt.data, &mut out.data, acc);
+            }
+            Instr::MatMulTN { a, b, .. } => {
+                // out[m, n] = Σ_l a[l, m] · b[l, n] as a sequence of
+                // rank-1 updates: allocation-free (no explicit transpose
+                // scratch) and cache-friendly for the small [M, N]
+                // weight-gradient outputs of the adjoint pass.
+                let at = resolve(*a, regs, inputs, &self.consts);
+                let bt = resolve(*b, regs, inputs, &self.consts);
+                let (m, n_) = (out_shape[0], out_shape[1]);
+                out.data.fill(E::ZERO);
+                for (arow, brow) in at.data.chunks(m.max(1)).zip(bt.data.chunks(n_.max(1))) {
+                    for (oi, &av) in arow.iter().enumerate() {
+                        if av == E::ZERO {
+                            continue;
+                        }
+                        let orow = &mut out.data[oi * n_..(oi + 1) * n_];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+            Instr::Transpose2 { src, .. } => {
+                let s = resolve(*src, regs, inputs, &self.consts);
+                kernels::transpose2_into(&s.data, s.shape[0], s.shape[1], &mut out.data);
             }
             Instr::JetTanh { .. } => unreachable!("handled above"),
         }

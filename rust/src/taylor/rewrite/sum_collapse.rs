@@ -107,6 +107,14 @@ pub fn sum_collapse(graph: &Graph, tagged_slots: &[usize], _num_dirs: usize) -> 
                 let sa = sum_of(node.args[0], kind, graph, tags, remap, ng, memo, pool);
                 ng.push(Op::MatMul { w: w.clone() }, vec![sa])
             }
+            // A dynamic matmul is linear in x when the weight operand is
+            // direction-free (θ-parameterized traces: W is a runtime
+            // input, never tagged), so the sum pushes through x exactly
+            // like the constant-weight case.
+            Op::MatMulDyn if tags[node.args[0]] && !tags[node.args[1]] => {
+                let sa = sum_of(node.args[0], kind, graph, tags, remap, ng, memo, pool);
+                ng.push(Op::MatMulDyn, vec![sa, remap[node.args[1]]])
+            }
             // Nonlinearities, direction-tagged inputs, and anything else:
             // materialize the (weighted) sum right here.
             _ => materialize(ng, pool, kind, remap[id]),

@@ -252,6 +252,29 @@ impl<E: Element> Tensor<E> {
         Tensor { shape, data: out }
     }
 
+    /// Transposed contraction over flattened leading axes: self is
+    /// `[..., M]`, other `[..., N]` with equal leading extents `L`,
+    /// result `[M, N] = Σ_l self[l, :]ᵀ · other[l, :]`.  This is the
+    /// weight-gradient GEMM of the adjoint pass (`xᵀ · ∂loss/∂h`),
+    /// reusing the cache-blocked transpose + tiled GEMM kernels.
+    pub fn matmul_tn(&self, other: &Tensor<E>) -> Tensor<E> {
+        let m = *self.shape.last().expect("matmul_tn input must have rank >= 1");
+        let n = *other.shape.last().expect("matmul_tn input must have rank >= 1");
+        let l = self.data.len() / m.max(1);
+        assert_eq!(
+            l,
+            other.data.len() / n.max(1),
+            "leading extents mismatch {:?} vs {:?}",
+            self.shape,
+            other.shape
+        );
+        let mut at = vec![E::ZERO; self.data.len()];
+        kernels::transpose2_into(&self.data, l, m, &mut at);
+        let mut out = vec![E::ZERO; m * n];
+        kernels::gemm(m, l, n, &at, &other.data, &mut out);
+        Tensor { shape: vec![m, n], data: out }
+    }
+
     /// Add a bias along the trailing axis (bias shape `[O]`).
     pub fn add_bias(&self, b: &Tensor<E>) -> Tensor<E> {
         assert_eq!(b.rank(), 1);
@@ -465,6 +488,19 @@ mod tests {
         let mut out1 = Tensor::zeros(&[1, 2]);
         deriv.mul_into(&chan, &mut out1);
         assert_eq!(out1.data, vec![6., 20.]);
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let x = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let y = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let g = x.matmul_tn(&y);
+        assert_eq!(g.shape, vec![3, 2]);
+        assert_eq!(g, x.transpose2().matmul(&y));
+        // Leading axes flatten: [2, 2, 3] contracts like [4, 3].
+        let xb = Tensor::new(vec![2, 1, 3], x.data.clone());
+        let yb = Tensor::new(vec![2, 1, 2], y.data.clone());
+        assert_eq!(xb.matmul_tn(&yb), g);
     }
 
     #[test]

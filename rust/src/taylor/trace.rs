@@ -170,9 +170,16 @@ pub fn build_plan_jet_std(mlp: &Mlp, plan: &OperatorPlan, batch: usize) -> Graph
         }
     }
     let jet = push_mlp(&mut g, mlp, GraphJet { x0, xs });
+    let op = assemble_plan_op(&mut g, plan, &jet, num_dirs);
+    g.outputs = vec![jet.x0, op];
+    g
+}
 
-    // Assemble L f: weighted degree-K direction sum, then each lower-degree
-    // family as a signed partial direction sum, then the c₀·f term.
+/// Assemble `L f` from a pushed jet: the weighted degree-K direction sum,
+/// each lower-degree family as a signed partial direction sum, and the
+/// c₀·f term.  Shared by the constant-weight and θ-parameterized traces.
+fn assemble_plan_op(g: &mut Graph, plan: &OperatorPlan, jet: &GraphJet, num_dirs: usize) -> NodeId {
+    let order = jet.xs.len();
     let mut op = if order >= 1 {
         let top = *jet.xs.last().expect("order >= 1 keeps channels");
         let topsum = if plan.top_weights.iter().all(|&w| w == 1.0) {
@@ -201,10 +208,111 @@ pub fn build_plan_jet_std(mlp: &Mlp, plan: &OperatorPlan, batch: usize) -> Graph
         });
     }
     // A zero operator (c0 = 0, no directions) cannot come from a validated
-    // spec; emit 0·f so the graph still has two outputs.
-    let op = op.unwrap_or_else(|| g.scale(jet.x0, 0.0));
-    g.outputs = vec![jet.x0, op];
-    g
+    // spec; emit 0·f so the graph still has an operator output.
+    op.unwrap_or_else(|| g.scale(jet.x0, 0.0))
+}
+
+/// A θ-parameterized plan trace: the MLP's weights and biases are runtime
+/// *inputs* rather than embedded constants — one compiled program serves
+/// every optimizer step (θ moving never changes the program) — and the
+/// scalar interior-residual loss `mean_B((L u + f)²)` is assembled
+/// in-graph so the adjoint pass has a scalar seed.
+pub struct ParamTrace {
+    pub graph: Graph,
+    /// Per-layer (W `[I, O]`, b `[O]`) input slots, in layer order.
+    /// Slot 0 is x0 `[B, D]`, slot 1 the direction bundle `[R, B, D]`
+    /// (tagged); θ slots follow; the forcing term `[B, O]` is last.
+    pub layer_slots: Vec<(usize, usize)>,
+    /// Input slot of the forcing term `f` in the residual `L u + f`.
+    pub forcing_slot: usize,
+    /// Node ids of the W/b `Input` nodes — the adjoint's θ targets.
+    pub layer_nodes: Vec<(NodeId, NodeId)>,
+}
+
+/// Push a jet through an MLP whose weights/biases are graph inputs
+/// (`MatMulDyn` + broadcast `Add`) instead of embedded constants.
+fn push_mlp_param(
+    g: &mut Graph,
+    wnodes: &[NodeId],
+    bnodes: &[NodeId],
+    mut jet: GraphJet,
+) -> GraphJet {
+    let order = jet.xs.len();
+    let n_layers = wnodes.len();
+    for li in 0..n_layers {
+        let h0m = g.matmul_dyn(jet.x0, wnodes[li]);
+        let h0 = g.add(h0m, bnodes[li]);
+        let hs: Vec<NodeId> = jet.xs.iter().map(|&x| g.matmul_dyn(x, wnodes[li])).collect();
+        jet = GraphJet { x0: h0, xs: hs };
+        if li + 1 < n_layers {
+            if order == 0 {
+                let t = g.tanh(jet.x0);
+                jet = GraphJet { x0: t, xs: Vec::new() };
+            } else {
+                let d = tanh_derivs(g, jet.x0, order);
+                let ys: Vec<NodeId> =
+                    (1..=order).map(|k| fdb_coeff(g, &d, &jet.xs, k)).collect();
+                jet = GraphJet { x0: d[0], xs: ys };
+            }
+        }
+    }
+    jet
+}
+
+/// Build the θ-parameterized plan trace with its in-graph residual loss.
+///
+/// `layer_dims` gives each layer's (in, out) width.  The single graph
+/// output is the `[O]`-shaped loss `mean_B((L u + f)²)`; the adjoint pass
+/// ([`crate::taylor::adjoint::grad`]) appends `∂loss/∂θ` outputs after the
+/// collapse rewrite has run.
+pub fn build_plan_jet_param(
+    layer_dims: &[(usize, usize)],
+    plan: &OperatorPlan,
+    batch: usize,
+) -> ParamTrace {
+    let order = plan.order;
+    assert!((1..=4).contains(&order), "param tracing implemented for 1 <= K <= 4, got {order}");
+    let num_dirs = plan.dirs.shape[0];
+    let in_dim = layer_dims[0].0;
+    let mut g = Graph::default();
+    let x0 = g.input(0);
+    let mut xs = vec![g.input(1)];
+    if order >= 2 {
+        let zero_seed = g.constant(Tensor::zeros(&[batch, in_dim]));
+        for _ in 1..order {
+            let z = g.replicate(zero_seed, num_dirs);
+            xs.push(z);
+        }
+    }
+    let mut layer_slots = Vec::with_capacity(layer_dims.len());
+    let mut layer_nodes = Vec::with_capacity(layer_dims.len());
+    let mut wnodes = Vec::with_capacity(layer_dims.len());
+    let mut bnodes = Vec::with_capacity(layer_dims.len());
+    let mut slot = 2;
+    for _ in layer_dims {
+        let wn = g.input(slot);
+        let bn = g.input(slot + 1);
+        layer_slots.push((slot, slot + 1));
+        layer_nodes.push((wn, bn));
+        wnodes.push(wn);
+        bnodes.push(bn);
+        slot += 2;
+    }
+    let forcing_slot = slot;
+    let f_in = g.input(forcing_slot);
+
+    let jet = push_mlp_param(&mut g, &wnodes, &bnodes, GraphJet { x0, xs });
+    let op = assemble_plan_op(&mut g, plan, &jet, num_dirs);
+    // Interior residual loss: r = L u + f, loss = mean over the batch of
+    // r² (summed over the trailing output axis).  For Poisson −Δu = f
+    // this is exactly the reference pinn.py interior loss, since
+    // (−Δu − f)² = (Δu + f)².
+    let r = g.add(op, f_in);
+    let sq = g.mul(r, r);
+    let s = g.sum_dirs(sq);
+    let loss = g.scale(s, 1.0 / batch as f64);
+    g.outputs = vec![loss];
+    ParamTrace { graph: g, layer_slots, forcing_slot, layer_nodes }
 }
 
 /// Which input slots carry the direction axis for graphs built above.

@@ -1,0 +1,178 @@
+//! First-order optimizers for the θ-gradient training loop.
+//!
+//! The adjoint subsystem ([`crate::taylor::adjoint`], served through
+//! [`crate::api::OperatorHandle::residual_grad`]) turns a collapsed
+//! forward route into `(loss, ∂loss/∂θ)`; this module closes the loop
+//! with the update rules a PINN training step needs.  Both optimizers
+//! are deterministic given the same gradient stream (no internal RNG),
+//! generic over the serving [`Element`], and route every *scalar* piece
+//! of arithmetic through f64 — the sealed `Element` trait deliberately
+//! exposes no division or square root, and Adam's moment normalization
+//! is exactly the kind of math that should not run in f32 anyway.
+//!
+//! See docs/training.md for how a step composes with the cached
+//! forward+backward program pair (zero recompiles after step 1).
+
+use crate::taylor::element::Element;
+
+/// Plain stochastic gradient descent: `θ ← θ − lr·g`.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f64,
+}
+
+impl Sgd {
+    pub fn new(lr: f64) -> Sgd {
+        Sgd { lr }
+    }
+
+    /// Apply one in-place update.  `theta` and `grad` must be the same
+    /// flat θ layout (per-layer W then b, the `model.py` convention).
+    pub fn step<E: Element>(&self, theta: &mut [E], grad: &[E]) {
+        assert_eq!(theta.len(), grad.len(), "sgd: theta/grad length mismatch");
+        for (t, g) in theta.iter_mut().zip(grad) {
+            *t = E::from_f64(t.to_f64() - self.lr * g.to_f64());
+        }
+    }
+}
+
+/// Adam (Kingma & Ba), the reference `pinn.py` loop's alternative
+/// optimizer.  Moments are kept in f64 regardless of the serving
+/// element type: the `v̂`-normalized update divides two tiny quantities,
+/// where f32 moment storage visibly degrades late-training progress.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    /// Standard defaults (β₁ = 0.9, β₂ = 0.999, ε = 1e-8).
+    pub fn new(lr: f64) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: Vec::new(), v: Vec::new(), t: 0 }
+    }
+
+    /// Apply one in-place update; moment buffers are lazily sized to the
+    /// first gradient and pinned to that length afterwards.
+    pub fn step<E: Element>(&mut self, theta: &mut [E], grad: &[E]) {
+        assert_eq!(theta.len(), grad.len(), "adam: theta/grad length mismatch");
+        if self.m.is_empty() {
+            self.m = vec![0.0; theta.len()];
+            self.v = vec![0.0; theta.len()];
+        }
+        assert_eq!(self.m.len(), theta.len(), "adam: parameter count changed mid-run");
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for (k, (t, g)) in theta.iter_mut().zip(grad).enumerate() {
+            let gf = g.to_f64();
+            self.m[k] = self.beta1 * self.m[k] + (1.0 - self.beta1) * gf;
+            self.v[k] = self.beta2 * self.v[k] + (1.0 - self.beta2) * gf * gf;
+            let mhat = self.m[k] / bc1;
+            let vhat = self.v[k] / bc2;
+            *t = E::from_f64(t.to_f64() - self.lr * mhat / (vhat.sqrt() + self.eps));
+        }
+    }
+}
+
+/// Either update rule behind one call site (the CLI / coordinator
+/// `pinn_step` route picks by name).
+#[derive(Debug, Clone)]
+pub enum Optimizer {
+    Sgd(Sgd),
+    Adam(Adam),
+}
+
+impl Optimizer {
+    /// Parse an optimizer spec: `"sgd"` or `"adam"` (reference-loop
+    /// defaults at the given learning rate).
+    pub fn parse(name: &str, lr: f64) -> Option<Optimizer> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "sgd" => Some(Optimizer::Sgd(Sgd::new(lr))),
+            "adam" => Some(Optimizer::Adam(Adam::new(lr))),
+            _ => None,
+        }
+    }
+
+    pub fn step<E: Element>(&mut self, theta: &mut [E], grad: &[E]) {
+        match self {
+            Optimizer::Sgd(s) => s.step(theta, grad),
+            Optimizer::Adam(a) => a.step(theta, grad),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_moves_against_the_gradient() {
+        let sgd = Sgd::new(0.1);
+        let mut theta = [1.0f64, -2.0, 0.5];
+        sgd.step(&mut theta, &[1.0, -1.0, 0.0]);
+        assert_eq!(theta, [0.9, -1.9, 0.5]);
+    }
+
+    /// Adam on a separable quadratic ½‖θ‖² must decrease it and, with
+    /// bias correction, take near-lr-sized first steps per coordinate.
+    #[test]
+    fn adam_descends_a_quadratic() {
+        let mut adam = Adam::new(0.05);
+        let mut theta = vec![3.0f64, -2.0, 1.5, -0.25];
+        let norm = |t: &[f64]| t.iter().map(|v| v * v).sum::<f64>();
+        let start = norm(&theta);
+        let first = theta.clone();
+        for step in 0..200 {
+            let grad = theta.clone(); // ∇(½‖θ‖²) = θ
+            adam.step(&mut theta, &grad);
+            if step == 0 {
+                for (a, b) in first.iter().zip(&theta) {
+                    let moved = (a - b).abs();
+                    assert!(
+                        (moved - 0.05).abs() < 1e-6,
+                        "bias-corrected first step should be ≈ lr, moved {moved}"
+                    );
+                }
+            }
+        }
+        assert!(norm(&theta) < 1e-2 * start, "adam failed to descend: {}", norm(&theta));
+    }
+
+    /// The same gradient stream produces bit-identical trajectories in
+    /// f64 and closely tracking ones in f32 (scalar math runs in f64).
+    #[test]
+    fn optimizers_are_deterministic_and_precision_generic() {
+        let grads = [[0.3f64, -0.7], [0.1, 0.2], [-0.4, 0.05]];
+        let mut a64 = Adam::new(0.01);
+        let mut a32 = Adam::new(0.01);
+        let mut t64 = [0.5f64, -0.5];
+        let mut t32 = [0.5f32, -0.5];
+        for g in &grads {
+            let g32: Vec<f32> = g.iter().map(|&v| v as f32).collect();
+            a64.step(&mut t64, g);
+            a32.step(&mut t32, &g32);
+        }
+        for (a, b) in t64.iter().zip(&t32) {
+            assert!((a - *b as f64).abs() < 1e-6, "f32 trajectory diverged: {a} vs {b}");
+        }
+        let mut again = Adam::new(0.01);
+        let mut t2 = [0.5f64, -0.5];
+        for g in &grads {
+            again.step(&mut t2, g);
+        }
+        assert_eq!(t64, t2, "identical streams must give identical θ");
+    }
+
+    #[test]
+    fn optimizer_parse_is_typed() {
+        assert!(matches!(Optimizer::parse("sgd", 0.1), Some(Optimizer::Sgd(_))));
+        assert!(matches!(Optimizer::parse("Adam", 0.1), Some(Optimizer::Adam(_))));
+        assert!(Optimizer::parse("lbfgs", 0.1).is_none());
+    }
+}

@@ -1,0 +1,264 @@
+//! Gradient property tests: the adjoint θ-gradient behind
+//! `OperatorHandle::residual_grad` must match central finite differences
+//! of the scalar residual loss on **every** registry Taylor route, at
+//! both precisions, and the nested routes must fail typed — there is no
+//! adjoint path through first-order AD recursion.
+//!
+//! Tolerance model (documented in docs/training.md, matching
+//! tests/prop_precision.rs): a degree-K route's loss compounds K jet
+//! stages plus one squaring, so gradients get the same per-degree budget
+//! as operator values, relative to `1 + max|∂loss/∂θ|`.  Finite
+//! differences use the f32-quantized *actual* perturbation as the
+//! denominator, so θ living in f32 does not bias the check.
+
+use ctaylor::api::{ApiError, Engine, OperatorHandle, Precision};
+use ctaylor::bench::workload::{self, Workload};
+use ctaylor::runtime::{ArtifactMeta, HostTensor, Registry};
+use ctaylor::util::prng::Rng;
+
+/// Gradient tolerance per jet degree, relative to `1 + max|grad|`.
+fn tol_for(order: usize) -> f64 {
+    match order {
+        0 | 1 => 1e-4,
+        2 => 5e-3,
+        3 => 1e-2,
+        _ => 3e-2,
+    }
+}
+
+/// Jet degree of a registry op (what `OperatorSpec::compile` would report).
+fn order_of(meta: &ArtifactMeta) -> usize {
+    if meta.op == "biharmonic" {
+        4
+    } else {
+        2
+    }
+}
+
+/// Every (op, mode) × standard/collapsed the builtin registry serves —
+/// 16 Taylor routes; the 8 nested ones are covered by the typed-error test.
+const ROUTES: [(&str, &str); 8] = [
+    ("laplacian", "exact"),
+    ("weighted_laplacian", "exact"),
+    ("helmholtz", "exact"),
+    ("biharmonic", "exact"),
+    ("laplacian", "stochastic"),
+    ("weighted_laplacian", "stochastic"),
+    ("helmholtz", "stochastic"),
+    ("biharmonic", "stochastic"),
+];
+
+/// Deterministic interior forcing `[B, 1]` for one artifact.
+fn forcing_for(meta: &ArtifactMeta, seed: u64) -> HostTensor {
+    let mut rng = Rng::new(seed ^ 0xf0);
+    let mut f = vec![0.0f32; meta.batch];
+    rng.fill_normal_f32(&mut f);
+    HostTensor::new(vec![meta.batch, 1], f)
+}
+
+/// Run one residual-gradient request with explicit θ (σ/dirs from the
+/// workload, held fixed so the loss is a pure function of θ).
+fn grad_at(
+    h: &OperatorHandle,
+    w: &Workload,
+    forcing: &HostTensor,
+    theta: &HostTensor,
+) -> (f64, Vec<f32>) {
+    let mut req = h.residual_grad().theta(theta).x(&w.x).forcing(forcing);
+    if let Some(s) = &w.sigma {
+        req = req.sigma(s);
+    }
+    if let Some(d) = &w.dirs {
+        req = req.directions(d);
+    }
+    let out = req.run().unwrap_or_else(|e| panic!("{}: {e}", h.name()));
+    (out.loss, out.grad.data)
+}
+
+/// Central FD of the loss at θ-index `k` through the *same* cached
+/// program, using the actual f32-quantized perturbation as denominator.
+fn fd_at(h: &OperatorHandle, w: &Workload, forcing: &HostTensor, eps: f32, k: usize) -> f64 {
+    let mut plus = w.theta.clone();
+    plus.data[k] += eps;
+    let mut minus = w.theta.clone();
+    minus.data[k] -= eps;
+    let (lp, _) = grad_at(h, w, forcing, &plus);
+    let (lm, _) = grad_at(h, w, forcing, &minus);
+    (lp - lm) / f64::from(plus.data[k] - minus.data[k])
+}
+
+/// Indices spread across the layers of a flat θ (first weight, interior
+/// weights, last bias).
+fn probe_indices(len: usize, n: usize) -> Vec<usize> {
+    (0..n).map(|i| i * (len - 1) / (n - 1)).collect()
+}
+
+fn check_route(engine: &Engine, meta: &ArtifactMeta, seed: u64, eps: f32, probes: usize) {
+    let w = workload::workload_for(meta, seed);
+    let forcing = forcing_for(meta, seed);
+    let h = engine.operator(&meta.name).unwrap();
+    let (loss, grad) = grad_at(&h, &w, &forcing, &w.theta);
+    assert!(loss.is_finite() && loss >= 0.0, "{}: loss {loss}", meta.name);
+    assert_eq!(grad.len(), meta.theta_len, "{}: grad is flat θ-shaped", meta.name);
+    let tol = tol_for(order_of(meta));
+    let scale = grad.iter().fold(1.0f64, |m, &g| m.max(f64::from(g).abs()));
+    for k in probe_indices(grad.len(), probes) {
+        let fd = fd_at(&h, &w, &forcing, eps, k);
+        let got = f64::from(grad[k]);
+        assert!(
+            (got - fd).abs() <= tol * (1.0 + scale),
+            "{} θ[{k}]: adjoint {got} vs central FD {fd} (tol {tol}, scale {scale})",
+            meta.name
+        );
+    }
+}
+
+#[test]
+fn every_taylor_route_gradient_matches_finite_differences_in_f64() {
+    let registry = Registry::builtin();
+    let engine = Engine::builder()
+        .registry(Registry::builtin())
+        .threads(1)
+        .precision(Precision::F64)
+        .build()
+        .unwrap();
+    let mut seed = 90u64;
+    for method in ["standard", "collapsed"] {
+        for (op, mode) in ROUTES {
+            seed += 1;
+            let metas = registry.select(op, method, mode);
+            let meta = *metas.first().unwrap_or_else(|| panic!("no {op}/{method}/{mode}"));
+            check_route(&engine, meta, seed, 1e-3, 5);
+        }
+    }
+}
+
+#[test]
+fn every_taylor_route_gradient_matches_finite_differences_in_f32() {
+    // f32 FD is noisier (the loss itself rounds at ~1e-7 relative), so
+    // the step is larger and fewer indices are probed; the degree budget
+    // is unchanged — that is the documented tolerance contract.
+    let registry = Registry::builtin();
+    for acc in [false, true] {
+        let engine = Engine::builder()
+            .registry(Registry::builtin())
+            .threads(1)
+            .precision(Precision::F32 { accumulate_f64: acc })
+            .build()
+            .unwrap();
+        let mut seed = 190u64;
+        for method in ["standard", "collapsed"] {
+            for (op, mode) in ROUTES {
+                seed += 1;
+                let metas = registry.select(op, method, mode);
+                let meta = *metas.first().unwrap_or_else(|| panic!("no {op}/{method}/{mode}"));
+                check_route(&engine, meta, seed, 1e-2, 3);
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_gradients_track_the_f64_gradients_componentwise() {
+    // Cross-precision: the whole f32 gradient vector (not just FD
+    // probes) must track the f64 adjoint within the degree budget.
+    let registry = Registry::builtin();
+    let f64_engine = Engine::builder()
+        .registry(Registry::builtin())
+        .threads(1)
+        .precision(Precision::F64)
+        .build()
+        .unwrap();
+    let f32_engine = Engine::builder()
+        .registry(Registry::builtin())
+        .threads(1)
+        .precision(Precision::F32 { accumulate_f64: true })
+        .build()
+        .unwrap();
+    let mut seed = 290u64;
+    for method in ["standard", "collapsed"] {
+        for (op, mode) in ROUTES {
+            seed += 1;
+            let metas = registry.select(op, method, mode);
+            let meta = *metas.first().unwrap_or_else(|| panic!("no {op}/{method}/{mode}"));
+            let w = workload::workload_for(meta, seed);
+            let forcing = forcing_for(meta, seed);
+            let h64 = f64_engine.operator(&meta.name).unwrap();
+            let h32 = f32_engine.operator(&meta.name).unwrap();
+            let (l64, g64) = grad_at(&h64, &w, &forcing, &w.theta);
+            let (l32, g32) = grad_at(&h32, &w, &forcing, &w.theta);
+            let tol = tol_for(order_of(meta));
+            let scale = g64.iter().fold(1.0f64, |m, &g| m.max(f64::from(g).abs()));
+            assert!(
+                (l32 - l64).abs() <= tol * (1.0 + l64.abs()),
+                "{}: f32 loss {l32} vs f64 {l64}",
+                meta.name
+            );
+            for (k, (a, b)) in g32.iter().zip(&g64).enumerate() {
+                assert!(
+                    f64::from(a - b).abs() <= tol * (1.0 + scale),
+                    "{} θ[{k}]: f32 grad {a} vs f64 {b} (tol {tol}, scale {scale})",
+                    meta.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn nested_routes_have_no_adjoint_path_and_fail_typed() {
+    let registry = Registry::builtin();
+    let engine = Engine::builder().registry(Registry::builtin()).threads(1).build().unwrap();
+    let mut seed = 390u64;
+    for (op, mode) in ROUTES {
+        seed += 1;
+        let metas = registry.select(op, "nested", mode);
+        let meta = *metas.first().unwrap_or_else(|| panic!("no {op}/nested/{mode}"));
+        let w = workload::workload_for(meta, seed);
+        let forcing = forcing_for(meta, seed);
+        let mut req = engine
+            .operator(&meta.name)
+            .unwrap()
+            .residual_grad()
+            .theta(&w.theta)
+            .x(&w.x)
+            .forcing(&forcing);
+        if let Some(s) = &w.sigma {
+            req = req.sigma(s);
+        }
+        if let Some(d) = &w.dirs {
+            req = req.directions(d);
+        }
+        match req.run() {
+            Err(ApiError::NoGradient { artifact, method }) => {
+                assert_eq!(artifact, meta.name);
+                assert_eq!(method, "nested");
+            }
+            other => panic!("{}: expected NoGradient, got {other:?}", meta.name),
+        }
+    }
+}
+
+#[test]
+fn the_second_training_step_reuses_the_compiled_pair() {
+    // The caching contract: θ is a runtime input of the gradient
+    // program, so an optimizer moving it must never recompile — one
+    // miss on the first step, hits thereafter, one cached program.
+    let registry = Registry::builtin();
+    let engine = Engine::builder().registry(Registry::builtin()).threads(1).build().unwrap();
+    let meta = *registry.select("laplacian", "collapsed", "exact").first().unwrap();
+    let w = workload::workload_for(meta, 77);
+    let forcing = forcing_for(meta, 77);
+    let h = engine.operator(&meta.name).unwrap();
+    let (_, grad) = grad_at(&h, &w, &forcing, &w.theta);
+    let mut moved = w.theta.clone();
+    for (t, g) in moved.data.iter_mut().zip(&grad) {
+        *t -= 1e-3 * g;
+    }
+    let (l2, _) = grad_at(&h, &w, &forcing, &moved);
+    assert!(l2.is_finite());
+    let stats = engine.stats();
+    assert_eq!(stats.program_cache_misses, 1, "{stats}");
+    assert_eq!(stats.program_cache_hits, 1, "{stats}");
+    assert_eq!(stats.programs_cached, 1, "{stats}");
+}
